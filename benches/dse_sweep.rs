@@ -1,0 +1,50 @@
+//! §IV-J factor-selection sweep (the paper's future-work DSE): evaluate
+//! tile candidates under the three legality rules and time the explorer.
+//!
+//! ```sh
+//! cargo bench --bench dse_sweep
+//! ```
+
+use tvm_fpga_flow::dse;
+use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::util::bench::{bench, Table};
+
+fn main() {
+    let flow = Flow::new();
+
+    let mut t = Table::new(
+        "DSE outcomes per network",
+        &["network", "points", "rejected", "default FPS", "best FPS", "gain"],
+    );
+    for name in ["lenet5", "mobilenet_v1", "resnet34"] {
+        let g = models::by_name(name).unwrap();
+        let mode = Flow::paper_mode(name);
+        let default_fps = flow.compile(&g, mode, OptLevel::Optimized).unwrap().performance.fps;
+        let r = match mode {
+            tvm_fpga_flow::flow::Mode::Folded => dse::explore_folded(&flow, &g, 16),
+            tvm_fpga_flow::flow::Mode::Pipelined => dse::explore_pipelined(&flow, &g),
+        };
+        let best = r.best.as_ref().map(|b| b.fps).unwrap_or(0.0);
+        t.row(&[
+            name.into(),
+            r.evaluated.to_string(),
+            r.log.iter().filter(|p| p.rejected.is_some()).count().to_string(),
+            format!("{default_fps:.2}"),
+            format!("{best:.2}"),
+            format!("{:.2}x", best / default_fps),
+        ]);
+    }
+    t.print();
+
+    let g = models::mobilenet_v1();
+    let stats = bench(
+        "dse/explore_folded/mobilenet(budget=8)",
+        std::time::Duration::from_millis(100),
+        std::time::Duration::from_secs(2),
+        1_000,
+        || dse::explore_folded(&flow, &g, 8),
+    );
+    println!("{}", stats.report());
+    println!("(each point replaces a 3–12 h Quartus run in the paper's manual sweep)");
+}

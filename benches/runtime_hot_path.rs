@@ -1,0 +1,94 @@
+//! L3 hot-path micro-benchmarks: PJRT execute latency for the matmul
+//! micro-kernels and the LeNet-5 executables, plus coordinator dispatch
+//! overhead. This is the §Perf profiling entry point for the rust layer.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo bench --bench runtime_hot_path
+//! ```
+
+use std::time::Duration;
+
+use tvm_fpga_flow::coordinator::{InferenceServer, ServerConfig};
+use tvm_fpga_flow::data;
+use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
+use tvm_fpga_flow::util::bench::{bench, quick};
+
+fn main() {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::new(Manifest::default_dir()).expect("runtime");
+
+    // --- matmul micro-kernels (the L1 hot-spot, via the full AOT path) ---
+    for (m, k, n) in [(256, 256, 256), (512, 512, 512), (1024, 1024, 128)] {
+        let exe = rt.load_matmul(m, k, n).expect("matmul exe");
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32 * 0.1).collect();
+        let abuf = rt.client.buffer_from_host_buffer(&a, &[m, k], None).unwrap();
+        let bbuf = rt.client.buffer_from_host_buffer(&b, &[k, n], None).unwrap();
+        let stats = quick(&format!("pjrt/matmul_{m}x{k}x{n}"), || {
+            exe.execute_b(&[&abuf, &bbuf]).expect("exec")
+        });
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        println!(
+            "{}  ({:.2} GFLOP/s at median)",
+            stats.report(),
+            flops / stats.median.as_secs_f64() / 1e9
+        );
+    }
+
+    // --- LeNet end-to-end executables ------------------------------------
+    let b1 = rt.load("lenet5", Impl::Ref, 1).unwrap();
+    let b16 = rt.load("lenet5", Impl::Ref, 16).unwrap();
+    let pallas1 = rt.load("lenet5", Impl::Pallas, 1).unwrap();
+    let frames = data::mnist_like(16, 32, 1);
+
+    let f1 = frames.frame(0).to_vec();
+    // §Perf before/after: naive literal path (weights re-marshalled every
+    // call) vs pre-transferred device buffers.
+    let before = quick("pjrt/lenet5_ref_b1 (literals, before)", || {
+        b1.infer_via_literals(&f1).unwrap()
+    });
+    println!("{}", before.report());
+    let stats = quick("pjrt/lenet5_ref_b1 (buffers, after)", || b1.infer(&rt.client, &f1).unwrap());
+    println!(
+        "{}  (speedup over literal path: {:.2}x)",
+        stats.report(),
+        before.median.as_secs_f64() / stats.median.as_secs_f64()
+    );
+    let stats = quick("pjrt/lenet5_pallas_b1", || pallas1.infer(&rt.client, &f1).unwrap());
+    println!("{}", stats.report());
+    let all = frames.data.clone();
+    let stats = quick("pjrt/lenet5_ref_b16", || b16.infer(&rt.client, &all).unwrap());
+    println!(
+        "{}  ({:.0} frames/s at median)",
+        stats.report(),
+        16.0 / stats.median.as_secs_f64()
+    );
+
+    // --- coordinator dispatch overhead ------------------------------------
+    let server = InferenceServer::start(ServerConfig {
+        workers: 2,
+        max_wait: Duration::from_micros(200),
+        ..Default::default()
+    })
+    .unwrap();
+    let stats = bench(
+        "coordinator/infer_roundtrip",
+        Duration::from_millis(100),
+        Duration::from_secs(1),
+        100_000,
+        || server.infer(f1.clone()).unwrap(),
+    );
+    println!("{}", stats.report());
+    let snap = server.shutdown();
+    println!(
+        "coordinator: {} completed, p50 {}µs p99 {}µs",
+        snap.completed,
+        snap.p50_us.unwrap_or(0),
+        snap.p99_us.unwrap_or(0)
+    );
+}

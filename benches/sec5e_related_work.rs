@@ -1,0 +1,68 @@
+//! Regenerates **§V-E**: the comparisons with Caffeinated FPGAs
+//! (DiCecco et al.), TensorFlow-to-Cloud-FPGAs (Hadjis et al.) and
+//! DNNWeaver (via Venieris et al.) in the paper's GFLOPS terms.
+//!
+//! ```sh
+//! cargo bench --bench sec5e_related_work
+//! ```
+
+use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::metrics::paper;
+use tvm_fpga_flow::util::bench::Table;
+
+fn main() {
+    let flow = Flow::new();
+
+    // --- DiCecco: 3×3-conv GFLOPS of ResNet-34 ---------------------------
+    let resnet = models::resnet34();
+    let acc = flow.compile(&resnet, Flow::paper_mode("resnet34"), OptLevel::Optimized).unwrap();
+    let ours_3x3 = acc.performance.fps * resnet.flops_3x3_conv() as f64 / 1e9;
+
+    // --- Hadjis: LeNet-5 GFLOPS (normalized to FP-op count) --------------
+    let lenet = models::lenet5();
+    let lacc = flow.compile(&lenet, Flow::paper_mode("lenet5"), OptLevel::Optimized).unwrap();
+    // The paper normalizes with its 389K FP-op count (§V-E).
+    let ours_lenet = lacc.performance.fps * paper::SEC5E_LENET_FLOPS / 1e9;
+
+    // --- DNNWeaver: their AlexNet vs our MobileNetV1 ----------------------
+    let mobilenet = models::mobilenet_v1();
+    let macc = flow.compile(&mobilenet, Flow::paper_mode("mobilenet_v1"), OptLevel::Optimized).unwrap();
+    let ours_mobile_gflops = macc.performance.fps * paper::SEC5E_MOBILENET_FLOPS / 1e9;
+    // Venieris et al. report DNNWeaver AlexNet at 9.22× the paper's
+    // MobileNet GFLOPS: reconstruct their absolute number from the paper.
+    let paper_mobile_gflops = paper::TABLE5[1].1 * paper::SEC5E_MOBILENET_FLOPS / 1e9;
+    let dnnweaver_gflops = paper_mobile_gflops * paper::SEC5E_DNNWEAVER_SPEEDUP;
+
+    let mut t = Table::new(
+        "§V-E — comparison to existing work (GFLOPS)",
+        &["comparison", "ours", "theirs", "ratio", "paper's ratio"],
+    );
+    t.row(&[
+        "DiCecco 3x3 Winograd vs our ResNet-34 3x3".into(),
+        format!("{ours_3x3:.1}"),
+        format!("{:.1}", paper::SEC5E_DICECCO_GFLOPS),
+        format!("{:.2}x", ours_3x3 / paper::SEC5E_DICECCO_GFLOPS),
+        "1.40x (70.4 vs 50)".into(),
+    ]);
+    t.row(&[
+        "Hadjis LeNet-5 (normalized) vs ours".into(),
+        format!("{ours_lenet:.2}"),
+        format!("{:.2}", paper::SEC5E_HADJIS_GFLOPS_NORM),
+        format!("{:.2}x", ours_lenet / paper::SEC5E_HADJIS_GFLOPS_NORM),
+        "3.23x (1.91 vs 0.59)".into(),
+    ]);
+    t.row(&[
+        "DNNWeaver AlexNet vs our MobileNetV1".into(),
+        format!("{ours_mobile_gflops:.2}"),
+        format!("{dnnweaver_gflops:.2}"),
+        format!("{:.2}x slower", dnnweaver_gflops / ours_mobile_gflops),
+        "9.22x slower".into(),
+    ]);
+    t.print();
+
+    // Shape: we beat the HLS approaches, lose to hand-optimized RTL.
+    assert!(ours_lenet / paper::SEC5E_HADJIS_GFLOPS_NORM > 1.0, "must beat Hadjis per §V-E");
+    assert!(dnnweaver_gflops / ours_mobile_gflops > 1.0, "DNNWeaver must win per §V-E");
+    println!("shape check: beats HLS flows, loses to hand-optimized RTL templates ✓");
+}

@@ -1,0 +1,53 @@
+//! Regenerates **Table II**: resource utilization and f_max of the
+//! optimized accelerators for the three evaluation networks, vs the paper.
+//! Also times the synthesis path (graph → kernels → AOC model).
+//!
+//! ```sh
+//! cargo bench --bench table2_resources
+//! ```
+
+use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::metrics::{deviation_pct, paper};
+use tvm_fpga_flow::util::bench::{quick, Table};
+
+fn main() {
+    let flow = Flow::new();
+    let mut table = Table::new(
+        "Table II — resource utilization and f_max (ours | paper)",
+        &["network", "logic %", "BRAM %", "DSP %", "f_max MHz", "max dev"],
+    );
+
+    for (name, pl, pb, pd, pf) in paper::TABLE2 {
+        let g = models::by_name(name).unwrap();
+        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).expect("compiles");
+        let (l, b, d, f) = acc.synthesis.table2_row();
+        let dev = [
+            deviation_pct(l, pl),
+            deviation_pct(b, pb),
+            deviation_pct(d, pd),
+            deviation_pct(f, pf),
+        ]
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        table.row(&[
+            name.into(),
+            format!("{l:.0} | {pl:.0}"),
+            format!("{b:.0} | {pb:.0}"),
+            format!("{d:.0} | {pd:.0}"),
+            format!("{f:.0} | {pf:.0}"),
+            format!("{dev:.0}%"),
+        ]);
+    }
+    table.print();
+
+    // Criterion-style timing of the synthesis path itself (the paper's
+    // equivalent step is 3–12 h of Quartus, §IV-J).
+    for name in ["lenet5", "mobilenet_v1", "resnet34"] {
+        let g = models::by_name(name).unwrap();
+        let stats = quick(&format!("synthesize/{name}"), || {
+            flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).unwrap()
+        });
+        println!("{}", stats.report());
+    }
+}

@@ -1,0 +1,54 @@
+//! Regenerates **Table III**: which optimizations the flow applies per
+//! network (pattern-based application, Table I), checked against the paper.
+//!
+//! ```sh
+//! cargo bench --bench table3_optimizations
+//! ```
+
+use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::metrics::paper;
+use tvm_fpga_flow::schedule::OptKind;
+use tvm_fpga_flow::util::bench::{quick, Table};
+
+fn main() {
+    let flow = Flow::new();
+    let mut table = Table::new(
+        "Table III — applied optimizations (✓ = ours, ● = paper)",
+        &["network", "PK", "LU", "LT", "LF", "CW", "OF", "CH", "AR", "CE"],
+    );
+
+    let mut mismatches = 0;
+    for (name, expected) in paper::TABLE3 {
+        let g = models::by_name(name).unwrap();
+        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).expect("compiles");
+        let mut row = vec![name.to_string()];
+        for opt in OptKind::table_order() {
+            let ours = acc.applied.contains(&opt);
+            let theirs = expected.contains(&opt.abbrev());
+            if ours != theirs {
+                mismatches += 1;
+            }
+            row.push(match (ours, theirs) {
+                (true, true) => "✓●".into(),
+                (true, false) => "✓ ".into(),
+                (false, true) => " ●".into(),
+                (false, false) => "  ".into(),
+            });
+        }
+        table.row(&row);
+    }
+    table.print();
+    println!("cells disagreeing with the paper: {mismatches} / 27");
+    assert_eq!(mismatches, 0, "Table III must match the paper exactly");
+
+    let g = models::mobilenet_v1();
+    let stats = quick("pattern_application/mobilenet_v1", || {
+        tvm_fpga_flow::flow::patterns::build_folded(
+            &g,
+            &tvm_fpga_flow::flow::OptConfig::optimized(),
+            &tvm_fpga_flow::flow::default_factors(&g),
+        )
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,57 @@
+//! Regenerates **Table IV**: FPS of base (TVM-default) versus optimized
+//! circuits and the speedup, vs the paper. The headline claim ("up to
+//! 846× for ResNet-34") is asserted in order-of-magnitude form.
+//!
+//! ```sh
+//! cargo bench --bench table4_base_vs_opt
+//! ```
+
+use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::metrics::paper;
+use tvm_fpga_flow::util::bench::{quick, Table};
+
+fn main() {
+    let flow = Flow::new();
+    let mut table = Table::new(
+        "Table IV — FPS of base versus optimized circuits (ours | paper)",
+        &["network", "base", "optimized", "speedup"],
+    );
+
+    let mut speedups = Vec::new();
+    for (name, pb, po, ps) in paper::TABLE4 {
+        let g = models::by_name(name).unwrap();
+        let mode = Flow::paper_mode(name);
+        let base = flow.compile(&g, mode, OptLevel::Base).expect("base compiles");
+        let opt = flow.compile(&g, mode, OptLevel::Optimized).expect("opt compiles");
+        let s = opt.performance.fps / base.performance.fps;
+        speedups.push((name, s, ps));
+        table.row(&[
+            name.into(),
+            format!("{:.4} | {pb:.4}", base.performance.fps),
+            format!("{:.2} | {po:.2}", opt.performance.fps),
+            format!("{s:.1}x | {ps:.1}x"),
+        ]);
+    }
+    table.print();
+
+    // Shape assertions: same ordering and order of magnitude as the paper.
+    for (name, ours, theirs) in &speedups {
+        let ratio = ours / theirs;
+        assert!(
+            (0.2..5.0).contains(&ratio),
+            "{name}: speedup {ours:.1}x vs paper {theirs:.1}x out of shape"
+        );
+    }
+    assert!(speedups[0].1 < speedups[1].1 && speedups[1].1 < speedups[2].1,
+        "speedup must grow with network size as in the paper");
+    println!("shape check: speedups ordered lenet < mobilenet < resnet, each within 5x of paper ✓");
+
+    let g = models::resnet34();
+    let stats = quick("compile_base+opt/resnet34", || {
+        let b = flow.compile(&g, Flow::paper_mode("resnet34"), OptLevel::Base).unwrap();
+        let o = flow.compile(&g, Flow::paper_mode("resnet34"), OptLevel::Optimized).unwrap();
+        (b.performance.fps, o.performance.fps)
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,102 @@
+//! Regenerates **Table V**: FPS of the simulated S10SX accelerators
+//! against CPU baselines — measured on this host through the PJRT runtime
+//! (the XLA-CPU executables are the analog of the paper's optimized
+//! TVM-LLVM/TensorFlow CPU builds) — plus the paper's published columns.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo bench --bench table5_cpu_gpu
+//! ```
+
+use std::time::Instant;
+
+use tvm_fpga_flow::data;
+use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::metrics::paper;
+use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
+use tvm_fpga_flow::util::bench::Table;
+
+fn measure_cpu_fps(rt: &Runtime, net: &str, frames: usize) -> f64 {
+    // Batch 1 everywhere: the paper's Table V is unbatched inference.
+    let batch = 1;
+    let model = rt.load(net, Impl::Ref, batch).expect("load ref model");
+    let fe = model.frame_elems();
+    let data = data::for_network(net, batch.max(frames.min(16)), 0).unwrap();
+    // Warmup.
+    let chunk: Vec<f32> = data.data[..batch * fe].to_vec();
+    model.infer(&rt.client, &chunk).expect("warmup");
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < frames {
+        model.infer(&rt.client, &chunk).expect("infer");
+        done += batch;
+    }
+    done as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::new(Manifest::default_dir()).expect("runtime");
+    let flow = Flow::new();
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut table = Table::new(
+        &format!("Table V — FPS vs CPU/GPU (sim S10SX | measured XLA-CPU @{cores} core(s) | paper row)"),
+        &["network", "S10SX (sim)", "XLA-CPU (meas)", "paper S10SX", "TVM-1t", "TVM-56t", "TF", "TF-cuDNN"],
+    );
+
+    let mut rows = Vec::new();
+    for (name, p_fpga, p_1t, p_56t, p_tf, p_gpu) in paper::TABLE5 {
+        let g = models::by_name(name).unwrap();
+        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).unwrap();
+        let fpga = acc.performance.fps;
+        let frames = if name == "lenet5" { 512 } else { 4 };
+        let cpu = measure_cpu_fps(&rt, name, frames);
+        rows.push((name, fpga, cpu));
+        table.row(&[
+            name.into(),
+            format!("{fpga:.2}"),
+            format!("{cpu:.2}"),
+            format!("{p_fpga:.2}"),
+            format!("{p_1t:.1}"),
+            format!("{p_56t:.1}"),
+            format!("{p_tf:.1}"),
+            format!("{p_gpu:.1}"),
+        ]);
+    }
+    table.print();
+
+    // Shape checks mirroring the paper's §V-D conclusions. On this host the
+    // measured XLA-CPU column is the few-thread analog of TVM-1t (the
+    // sandbox exposes a single core); the many-thread comparison uses the
+    // paper's own TVM-56t column.
+    // The paper's FPGA beats TVM-1t by 1.94–3.83×. A 2026 core is several
+    // times faster than a 2019 Xeon core, so against *this* host's single
+    // thread we require "competitive or better" (≥ 0.5×) everywhere and a
+    // strict win where the paper's margin was largest relative to the CPU
+    // work (MobileNet: depthwise layers parallelize poorly on CPU).
+    for (name, fpga, cpu) in &rows {
+        let r = fpga / cpu;
+        println!("  {name}: sim-FPGA/1t-CPU = {r:.2}x");
+        assert!(r > 0.5, "{name}: sim FPGA {fpga} not competitive with 1-thread CPU {cpu}");
+    }
+    let mobile = &rows[1];
+    assert!(mobile.1 > mobile.2, "mobilenet: FPGA must beat the 1-thread CPU");
+    let mobilenet = &rows[1];
+    let resnet = &rows[2];
+    assert!(mobilenet.1 < paper::TABLE5[1].3, "MobileNet: FPGA must lose to the 56-thread CPU");
+    assert!(resnet.1 < paper::TABLE5[2].3, "ResNet: FPGA must lose to the 56-thread CPU");
+    println!(
+        "shape check: FPGA competitive-or-better vs this host's 1-thread CPU,\n\
+         loses to the 56-thread column on MobileNet/ResNet (as in §V-D) ✓"
+    );
+    println!(
+        "note: measured on {cores} host core(s) through XLA:CPU — the optimized-\n\
+         CPU-framework analog; the paper's absolute numbers are a dual Xeon 8280."
+    );
+}

@@ -1,0 +1,113 @@
+//! End-to-end driver: proves all three layers compose on a real small
+//! workload, and regenerates the paper's headline rows.
+//!
+//! 1. **Functional path** — the rust runtime loads the HLO executables
+//!    AOT-lowered from the JAX models (L2) that route every MAC through the
+//!    Pallas kernels (L1); classifies N = 1000 synthetic MNIST-like frames
+//!    through LeNet-5 (the paper's §V-C workload size), cross-checking the
+//!    Pallas path against the XLA-ref path frame by frame; runs a frame
+//!    through MobileNetV1 and ResNet-34 too.
+//! 2. **Compilation flow** — compiles all three networks base + optimized
+//!    and prints the Table IV rows.
+//! 3. Records everything EXPERIMENTS.md quotes.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::time::Instant;
+
+use tvm_fpga_flow::data;
+use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::metrics::{self, paper};
+use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
+use tvm_fpga_flow::util::bench::Table;
+
+fn main() -> tvm_fpga_flow::Result<()> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        anyhow::bail!("run `make artifacts` first");
+    }
+    let rt = Runtime::new(Manifest::default_dir())?;
+
+    // ---- 1a. LeNet-5, N=1000 frames, pallas vs ref cross-check ----------
+    println!("[1/3] functional path: LeNet-5, N=1000 frames (batch 16)");
+    let pallas = rt.load("lenet5", Impl::Pallas, 16)?;
+    let refm = rt.load("lenet5", Impl::Ref, 16)?;
+    let frames = data::mnist_like(1008, 32, 42); // 63 batches of 16
+    let fe = pallas.frame_elems();
+
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    let t0 = Instant::now();
+    let mut pallas_time = 0.0;
+    for b in 0..63 {
+        let chunk = &frames.data[b * 16 * fe..(b + 1) * 16 * fe];
+        let tp = Instant::now();
+        let p = pallas.classify(&rt.client, chunk)?;
+        pallas_time += tp.elapsed().as_secs_f64();
+        let r = refm.classify(&rt.client, chunk)?;
+        for (x, y) in p.iter().zip(&r) {
+            total += 1;
+            if x == y {
+                agree += 1;
+            }
+        }
+        if total >= 1000 {
+            break;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let lenet = models::by_name("lenet5").unwrap();
+    let fps_pallas = metrics::fps(total as u64, pallas_time);
+    println!(
+        "  {total} frames: pallas==ref on {agree}/{total} predictions; \
+         pallas path {fps_pallas:.0} FPS ({:.2} GFLOPS) on CPU/PJRT; wall {dt:.2}s",
+        metrics::gflops(fps_pallas, lenet.total_flops())
+    );
+    assert_eq!(agree, total, "pallas and ref paths must agree");
+
+    // ---- 1b. one frame through the big networks --------------------------
+    for net in ["mobilenet_v1", "resnet34"] {
+        let g = models::by_name(net).unwrap();
+        let ref1 = rt.load(net, Impl::Ref, 1)?;
+        let imgs = data::for_network(net, 1, 7).unwrap();
+        let t0 = Instant::now();
+        let pred_ref = ref1.classify(&rt.client, imgs.frame(0))?[0];
+        let ref_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let pal1 = rt.load(net, Impl::Pallas, 1)?;
+        let t0 = Instant::now();
+        let pred_pal = pal1.classify(&rt.client, imgs.frame(0))?[0];
+        let pal_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(pred_ref, pred_pal, "{net}: pallas vs ref prediction");
+        println!(
+            "  {net}: pallas==ref (class {pred_ref}); ref {ref_ms:.0} ms/frame, \
+             pallas(interpret) {pal_ms:.0} ms/frame, {:.2} GFLOPs/frame",
+            g.total_flops() as f64 / 1e9
+        );
+    }
+
+    // ---- 2. the compilation flow: Table IV ------------------------------
+    println!("\n[2/3] compilation flow: Table IV (base vs optimized, simulated S10SX)");
+    let flow = Flow::new();
+    let mut t4 = Table::new("Table IV — FPS of base versus optimized circuits", &["network", "base", "optimized", "speedup", "paper"]);
+    for (name, pb, po, ps) in paper::TABLE4 {
+        let g = models::by_name(name).unwrap();
+        let mode = Flow::paper_mode(name);
+        let base = flow.compile(&g, mode, OptLevel::Base)?;
+        let opt = flow.compile(&g, mode, OptLevel::Optimized)?;
+        t4.row(&[
+            name.into(),
+            format!("{:.4}", base.performance.fps),
+            format!("{:.2}", opt.performance.fps),
+            format!("{:.1}x", opt.performance.fps / base.performance.fps),
+            format!("{pb:.4} → {po:.2} ({ps:.1}x)"),
+        ]);
+    }
+    t4.print();
+
+    // ---- 3. summary -------------------------------------------------------
+    println!("[3/3] all layers composed: Pallas (L1) → JAX/HLO (L2) → rust PJRT + flow (L3). OK");
+    Ok(())
+}

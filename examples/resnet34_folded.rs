@@ -1,0 +1,60 @@
+//! ResNet-34 in folded mode: the largest evaluation network — residual
+//! topology, the §V-F bottleneck discussion (DSP underutilization, f_max
+//! loss with bigger tiles), and the §V-E 3×3-conv GFLOPS figure.
+//!
+//! ```sh
+//! cargo run --release --example resnet34_folded
+//! ```
+
+use tvm_fpga_flow::flow::{default_factors, Flow, Mode, OptConfig, OptLevel};
+use tvm_fpga_flow::graph::{models, GroupKind, ParamGroup};
+use tvm_fpga_flow::util::bench::Table;
+
+fn main() -> tvm_fpga_flow::Result<()> {
+    let flow = Flow::new();
+    let net = models::resnet34();
+    let acc = flow.compile(&net, Mode::Folded, OptLevel::Optimized)?;
+
+    let (logic, bram, dsp, fmax) = acc.synthesis.table2_row();
+    println!("ResNet-34 folded: {} kernels, {} layer invocations/frame", acc.program.kernels.len(), acc.work.len());
+    println!("resources: logic {logic:.0}% bram {bram:.0}% dsp {dsp:.0}% fmax {fmax:.0} MHz (paper: 59/61/16/125)");
+    println!("performance: {:.2} FPS (paper Table IV: 7.04, Table V: 4.6)", acc.performance.fps);
+
+    // §V-E: GFLOPS of the 3×3 convolutions.
+    let f3x3 = net.flops_3x3_conv();
+    let gflops_3x3 = acc.performance.fps * f3x3 as f64 / 1e9;
+    println!(
+        "3x3-conv GFLOPS: {gflops_3x3:.1} at our simulated FPS ({:.0}% of per-frame FLOPs are 3x3 convs; paper reports 70.4)",
+        100.0 * f3x3 as f64 / net.total_flops() as f64
+    );
+
+    // §V-F: pushing the 3×3 tile bigger — DSP% rises, f_max falls, and
+    // eventually routing fails before all DSPs are used.
+    let mut t = Table::new("§V-F sweep: 3x3s1 tile vs fmax / FPS", &["tile", "lanes", "dsp%", "fmax", "FPS", "outcome"]);
+    let g3 = ParamGroup { kind: GroupKind::Conv, kernel: 3, stride: 1 };
+    for (t_ic, t_oc) in [(4, 4), (8, 8), (8, 16), (16, 16), (16, 32), (32, 32)] {
+        let mut plan = default_factors(&net);
+        plan.group_tiles.insert(g3, (t_ic, t_oc));
+        match flow.compile_with(&net, Mode::Folded, &OptConfig::optimized(), &plan) {
+            Ok(a) => t.row(&[
+                format!("({t_ic},{t_oc})"),
+                format!("{}", 9 * t_ic * t_oc),
+                format!("{:.1}", a.synthesis.resources.utilization.dsp_frac * 100.0),
+                format!("{:.0}", a.synthesis.fmax_mhz),
+                format!("{:.2}", a.performance.fps),
+                "routed".into(),
+            ]),
+            Err(_) => t.row(&[
+                format!("({t_ic},{t_oc})"),
+                format!("{}", 9 * t_ic * t_oc),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "ROUTING FAILURE".into(),
+            ]),
+        }
+    }
+    t.print();
+    println!("(paper §V-F: \"larger tile sizes lead to … routing failure before utilizing all DSPs\")");
+    Ok(())
+}

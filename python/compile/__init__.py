@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX models + AOT lowering.
+
+Nothing in this package is imported at request time; `make artifacts` runs
+aot.py once and the rust coordinator loads the emitted HLO text.
+"""

@@ -1,0 +1,140 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas) → HLO text artifacts for rust.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per network this emits into artifacts/:
+  <net>.b<B>.hlo.txt       pallas-kernel path (functional verification)
+  <net>_ref.b<B>.hlo.txt   pure-XLA path (optimized CPU baseline, Table V)
+  <net>.weights.bin        all parameters, f32 LE, concatenated
+  <net>.manifest.json      parameter order/shapes/offsets + input spec
+plus kernels/matmul_<M>x<K>x<N>.hlo.txt micro-executables for the runtime
+hot-path bench, and manifest.json indexing everything.
+
+Python runs ONCE here (`make artifacts`); never on the request path.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul as mm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_network(net: str, impl: str, batch: int) -> str:
+    spec = model.NETWORKS[net]
+    apply_fn = spec["apply"]
+    x, params, _ = model.make_inputs(net, batch=batch)
+
+    def fn(x, *params):
+        return (apply_fn(list(params), x, impl=impl),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct(x.shape, x.dtype),
+        *[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params])
+    return to_hlo_text(lowered)
+
+
+def write_weights(net: str, out_dir: pathlib.Path) -> dict:
+    pset = model.NETWORKS[net]["params"]()
+    blob = bytearray()
+    entries = []
+    for name, value in zip(pset.names, pset.values):
+        arr = np.ascontiguousarray(value, dtype=np.float32)
+        entries.append(dict(name=name, shape=list(arr.shape),
+                            offset=len(blob), nbytes=arr.nbytes))
+        blob.extend(arr.tobytes())
+    (out_dir / f"{net}.weights.bin").write_bytes(bytes(blob))
+    return dict(params=entries, total_bytes=len(blob))
+
+
+def lower_matmul(m: int, k: int, n: int) -> str:
+    fn = functools.partial(mm.matmul, bm=min(512, m), bn=min(128, n),
+                           bk=min(512, k))
+
+    def wrapped(a, b):
+        return (fn(a, b),)
+
+    lowered = jax.jit(wrapped).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32))
+    return to_hlo_text(lowered)
+
+
+# (network, batch sizes) — lenet5 also gets a batched executable for the
+# coordinator's dynamic batcher demo.
+PLAN = {
+    "lenet5": [1, 16],
+    "mobilenet_v1": [1],
+    "resnet34": [1],
+}
+MATMUL_SHAPES = [(256, 256, 256), (512, 512, 512), (1024, 1024, 128)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output directory")
+    ap.add_argument("--nets", default=",".join(PLAN),
+                    help="comma-separated subset of networks")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "kernels").mkdir(exist_ok=True)
+    index = dict(networks={}, kernels=[], generated_unix=int(time.time()))
+
+    for net in args.nets.split(","):
+        spec = model.NETWORKS[net]
+        t0 = time.time()
+        meta = write_weights(net, out)
+        executables = []
+        for batch in PLAN[net]:
+            for impl, suffix in [("pallas", ""), ("ref", "_ref")]:
+                text = lower_network(net, impl, batch)
+                name = f"{net}{suffix}.b{batch}.hlo.txt"
+                (out / name).write_text(text)
+                executables.append(dict(file=name, impl=impl, batch=batch,
+                                        hlo_chars=len(text)))
+        index["networks"][net] = dict(
+            input_shape=list(spec["input_shape"]),
+            num_classes=spec["num_classes"],
+            weights_file=f"{net}.weights.bin",
+            executables=executables,
+            **meta,
+        )
+        print(f"[aot] {net}: {len(executables)} executables, "
+              f"{meta['total_bytes'] / 1e6:.1f} MB weights, "
+              f"{time.time() - t0:.1f}s")
+
+    for m, k, n in MATMUL_SHAPES:
+        text = lower_matmul(m, k, n)
+        name = f"kernels/matmul_{m}x{k}x{n}.hlo.txt"
+        (out / name).write_text(text)
+        index["kernels"].append(dict(file=name, m=m, k=k, n=n))
+        print(f"[aot] matmul {m}x{k}x{n}")
+
+    (out / "manifest.json").write_text(json.dumps(index, indent=2))
+    print(f"[aot] wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- matmul: tiled MXU matmul with fused bias+activation (the conv workhorse)
+- conv:   im2col conv2d + depthwise conv + dense
+- pool:   max/avg/global pooling
+- ref:    pure-jnp oracles for all of the above
+
+All kernels run with interpret=True (CPU image; see DESIGN.md).
+"""
+from . import conv, matmul, pool, quant, ref, winograd  # noqa: F401

@@ -1,0 +1,121 @@
+"""L1 Pallas kernels: conv2d (im2col × MXU matmul) and depthwise conv.
+
+The paper's convolution kernels are loop nests whose reduction loops are
+strip-mined and fully unrolled so AOC replicates DSPs (§IV-A/B). The TPU
+re-think (DESIGN.md §Hardware-adaptation): gather the conv into an
+(N·OH·OW) × (C·KH·KW) patch matrix and feed MXU-shaped matmul tiles. The
+patch gather is pure layout (XLA fuses it); every MAC flows through the
+Pallas matmul kernel, so the schedule parameters (bm, bn, bk) govern the
+conv exactly as the unroll/tile factors govern the paper's DSP array.
+
+Depthwise convolutions (MobileNetV1's companion op) have no shared
+reduction across channels — im2col×matmul would waste the MXU on a
+block-diagonal operand. They get their own VPU-style kernel that blocks
+over channels, the same specialization the paper applies by grouping
+kernels by filter size and stride (§IV-H).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+from . import ref
+
+
+def conv2d(x, w, bias=None, *, stride: int = 1, padding: int = 0,
+           act: str = "none", bm: int = mm.DEFAULT_BM, bn: int = mm.DEFAULT_BN,
+           bk: int = mm.DEFAULT_BK, interpret: bool = True):
+    """NCHW conv2d: im2col patch gather + Pallas tiled matmul.
+
+    x: (N, C, H, W), w: (O, C, KH, KW), bias: (O,) | None → (N, O, OH, OW).
+    """
+    n = x.shape[0]
+    o, i, kh, kw = w.shape
+    cols, oh, ow = ref.im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(o, i * kh * kw).T  # (C·KH·KW, O)
+    out = mm.matmul(cols, wmat, bias, bm=bm, bn=bn, bk=bk, act=act,
+                    interpret=interpret)  # (N·OH·OW, O)
+    return jnp.transpose(out.reshape(n, oh, ow, o), (0, 3, 1, 2))
+
+
+def _dw_kernel(x_ref, w_ref, bias_ref, o_ref, *, kh: int, kw: int,
+               stride: int, act: str):
+    """Depthwise conv over one (batch, channel-block) grid step.
+
+    x_ref: (1, bc, IH, IW) pre-padded input block
+    w_ref: (bc, KH, KW), bias_ref: (1, bc), o_ref: (1, bc, OH, OW)
+    The KH×KW taps are unrolled (python loop == full unroll — the paper's
+    LU on the filter loops); the spatial dims vectorize on the VPU.
+    """
+    oh, ow = o_ref.shape[2], o_ref.shape[3]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for r in range(kh):
+        for s in range(kw):
+            # strided window starting at tap (r, s)
+            win = lax.slice(
+                x_ref[...].astype(jnp.float32),
+                (0, 0, r, s),
+                (1, x_ref.shape[1], r + (oh - 1) * stride + 1,
+                 s + (ow - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )
+            acc += win * w_ref[:, r, s][None, :, None, None].astype(jnp.float32)
+    if bias_ref is not None:
+        acc += bias_ref[...][:, :, None, None].astype(jnp.float32)
+    o_ref[...] = ref.apply_act(acc, act).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "padding", "act", "bc", "interpret"))
+def depthwise_conv2d(x, w, bias=None, *, stride: int = 1, padding: int = 0,
+                     act: str = "none", bc: int = 32, interpret: bool = True):
+    """Depthwise NCHW conv. x: (N, C, H, W), w: (C, 1, KH, KW), bias: (C,)|None."""
+    n, c, h, w_ = x.shape
+    kh, kw = w.shape[2], w.shape[3]
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    ih, iw = xp.shape[2], xp.shape[3]
+    oh = (ih - kh) // stride + 1
+    ow = (iw - kw) // stride + 1
+
+    bc = min(bc, c)
+    if c % bc != 0:  # channel blocks must tile evenly; fall back to whole C
+        bc = c
+    wk = w.reshape(c, kh, kw)
+
+    kern = functools.partial(_dw_kernel, kh=kh, kw=kw, stride=stride, act=act)
+    if bias is None:
+        def kern_nb(x_ref, w_ref, o_ref):
+            return kern(x_ref, w_ref, None, o_ref)
+        fn = kern_nb
+        extra_specs, extra_args = [], []
+    else:
+        fn = kern
+        extra_specs = [pl.BlockSpec((1, bc), lambda b, cc: (0, cc))]
+        extra_args = [bias.reshape(1, c)]
+
+    out = pl.pallas_call(
+        fn,
+        grid=(n, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, bc, ih, iw), lambda b, cc: (b, cc, 0, 0)),
+            pl.BlockSpec((bc, kh, kw), lambda b, cc: (cc, 0, 0)),
+            *extra_specs,
+        ],
+        out_specs=pl.BlockSpec((1, bc, oh, ow), lambda b, cc: (b, cc, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, oh, ow), x.dtype),
+        interpret=interpret,
+    )(xp, wk, *extra_args)
+    return out
+
+
+def dense(x, w, bias=None, *, act: str = "none", interpret: bool = True,
+          bm: int = mm.DEFAULT_BM, bn: int = mm.DEFAULT_BN,
+          bk: int = mm.DEFAULT_BK):
+    """Fully-connected layer on the Pallas matmul. x: (N, K), w: (K, O)."""
+    return mm.matmul(x, w, bias, act=act, bm=bm, bn=bn, bk=bk,
+                     interpret=interpret)

@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation.
+
+This is the compute hot-spot of the whole flow. The paper unrolls/tiles the
+convolution reduction loops so AOC replicates DSPs and widens LSUs
+(§IV-A/B); on the TPU target the same schedule decision becomes the
+(bm, bn, bk) BlockSpec tile feeding the MXU:
+
+  * the bm×bk and bk×bn input blocks are the "burst-coalesced LSU" loads
+    HBM→VMEM (contiguous last-dim blocks ≙ coalesced bursts),
+  * the f32 VMEM scratch accumulator is the paper's cached-write (§IV-D):
+    accumulation lives on-chip, never read-modify-written in global memory,
+  * the fused bias+activation epilogue is the paper's loop fusion (§IV-C),
+    removing the temporary global array between conv and activation.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical, and TPU efficiency is estimated
+analytically (DESIGN.md §Perf, EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+# Default MXU-shaped tile. 128 matches the MXU systolic-array edge; it is
+# also the analog of the paper's §IV-J rule-1 bandwidth roof (the unroll
+# factor must not exceed what the memory system can feed per cycle).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_bias_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *,
+                        act: str, nsteps: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K reduction."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped partial product, accumulated in f32 VMEM scratch.
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nsteps - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if bias_ref is not None:
+            out = out + bias_ref[...].astype(jnp.float32)
+        out = ref.apply_act(out, act)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, act: str, nsteps: int):
+    _matmul_bias_kernel(a_ref, b_ref, None, o_ref, acc_ref,
+                        act=act, nsteps=nsteps)
+
+
+def _pad_to(x, mult: int, axis: int):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _shrink(block: int, dim: int) -> int:
+    """Shrink a block edge for small matrices: smallest power of two ≥ 8
+    that covers `dim`, capped at `block` — avoids padding a 10-wide logits
+    matrix out to a full 128 MXU tile."""
+    p = 8
+    while p < dim and p < block:
+        p *= 2
+    return min(block, p)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "act", "interpret"))
+def matmul(a, b, bias=None, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+           bk: int = DEFAULT_BK, act: str = "none", interpret: bool = True):
+    """C = act(A @ B + bias) as a tiled Pallas kernel.
+
+    a: (M, K), b: (K, N), bias: (N,) or None; returns (M, N) in a.dtype.
+    Arbitrary M/N/K — inputs are zero-padded up to the tile grid and the
+    result is sliced back. (The paper instead *requires* divisibility —
+    §IV-J rule 2; the rust legality checker enforces that rule on the FPGA
+    path, while the TPU kernel tolerates ragged edges via padding.)
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul shape mismatch: {a.shape} @ {b.shape}"
+    out_dtype = a.dtype
+
+    bm_, bn_, bk_ = _shrink(bm, m), _shrink(bn, n), _shrink(bk, k)
+
+    ap = _pad_to(_pad_to(a, bm_, 0), bk_, 1)
+    bp = _pad_to(_pad_to(b, bk_, 0), bn_, 1)
+    mp, kp = ap.shape
+    np_ = bp.shape[1]
+    nsteps = kp // bk_
+    grid = (mp // bm_, np_ // bn_, nsteps)
+
+    common = dict(
+        grid=grid,
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )
+    a_spec = pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j))
+
+    if bias is not None:
+        biasp = _pad_to(bias.astype(jnp.float32).reshape(1, -1), bn_, 1)
+        out = pl.pallas_call(
+            functools.partial(_matmul_bias_kernel, act=act, nsteps=nsteps),
+            in_specs=[a_spec, b_spec,
+                      pl.BlockSpec((1, bn_), lambda i, j, kk: (0, j))],
+            **common,
+        )(ap, bp, biasp)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_matmul_kernel, act=act, nsteps=nsteps),
+            in_specs=[a_spec, b_spec],
+            **common,
+        )(ap, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step: A block + B block + bias row +
+    f32 accumulator + output block. Used by the §Perf analytical model."""
+    return (bm * bk + bk * bn + bn) * dtype_bytes + bm * bn * 4 + bm * bn * dtype_bytes
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work —
+    the TPU analog of the paper's DSP-utilization discussion (§V-F)."""
+    import math
+    gm, gn, gk = math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk)
+    issued = gm * gn * gk * bm * bn * bk
+    useful = m * n * k
+    return useful / issued if issued else 0.0

@@ -1,0 +1,75 @@
+"""L1 Pallas kernels: max/avg pooling.
+
+In the paper, pooling layers are weightless kernels declared *autorun*
+(§IV-F) and fed through channels. Here they are small VPU-style Pallas
+kernels blocked over (batch, channel) grid steps; the KxK window taps are
+fully unrolled — the paper's LU applied to the window loops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, k: int, stride: int, mode: str):
+    """x_ref: (1, bc, IH, IW) pre-padded; o_ref: (1, bc, OH, OW)."""
+    oh, ow = o_ref.shape[2], o_ref.shape[3]
+    xv = x_ref[...].astype(jnp.float32)
+    acc = None
+    for r in range(k):
+        for s in range(k):
+            win = lax.slice(
+                xv, (0, 0, r, s),
+                (1, xv.shape[1], r + (oh - 1) * stride + 1,
+                 s + (ow - 1) * stride + 1),
+                (1, 1, stride, stride))
+            if acc is None:
+                acc = win
+            elif mode == "max":
+                acc = jnp.maximum(acc, win)
+            else:
+                acc = acc + win
+    if mode == "avg":
+        acc = acc / float(k * k)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "stride", "padding", "mode", "bc", "interpret"))
+def pool2d(x, *, k: int = 2, stride: int | None = None, padding: int = 0,
+           mode: str = "max", bc: int = 32, interpret: bool = True):
+    """NCHW max/avg pool. Padding uses -inf for max, 0 for avg (matching
+    the lax.reduce_window oracle in ref.py)."""
+    stride = stride if stride is not None else k
+    n, c, h, w = x.shape
+    pad_val = -jnp.inf if mode == "max" else 0.0
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)),
+                 constant_values=pad_val)
+    ih, iw = xp.shape[2], xp.shape[3]
+    oh = (ih - k) // stride + 1
+    ow = (iw - k) // stride + 1
+
+    bc = min(bc, c)
+    if c % bc != 0:
+        bc = c
+
+    out = pl.pallas_call(
+        functools.partial(_pool_kernel, k=k, stride=stride, mode=mode),
+        grid=(n, c // bc),
+        in_specs=[pl.BlockSpec((1, bc, ih, iw), lambda b, cc: (b, cc, 0, 0))],
+        out_specs=pl.BlockSpec((1, bc, oh, ow), lambda b, cc: (b, cc, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, oh, ow), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out
+
+
+def global_avgpool(x, *, interpret: bool = True):
+    """NCHW → NC global average pool (MobileNet/ResNet heads)."""
+    n, c, h, w = x.shape
+    out = pool2d(x, k=h, stride=h, mode="avg", interpret=interpret)
+    return out.reshape(n, c)

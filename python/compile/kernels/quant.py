@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: int8 matmul with int32 accumulation + dequantize.
+
+The L1 counterpart of the flow's §VII reduced-precision extension: on the
+FPGA side int8 packs two MACs per DSP; on the TPU side int8 operands feed
+the MXU at double rate with an int32 accumulator. This kernel mirrors the
+fp32 tiled matmul's structure (K-grid accumulation in scratch) with
+symmetric per-tensor quantization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import matmul as mm
+
+
+def quantize_symmetric(x, bits: int = 8):
+    """Symmetric per-tensor quantization → (int8 values, scale)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_kernel(a_ref, b_ref, o_ref, acc_ref, *, nsteps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 × int8 → int32 accumulation (MXU int path / packed DSPs).
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.int32),
+        b_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nsteps - 1)
+    def _out():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_int8(a_q, b_q, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: bool = True):
+    """C_int32 = A_int8 @ B_int8 via a tiled Pallas kernel."""
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2
+    bm_, bn_, bk_ = mm._shrink(bm, m), mm._shrink(bn, n), mm._shrink(bk, k)
+    ap = mm._pad_to(mm._pad_to(a_q, bm_, 0), bk_, 1)
+    bp = mm._pad_to(mm._pad_to(b_q, bk_, 0), bn_, 1)
+    mp, kp = ap.shape
+    np_ = bp.shape[1]
+    nsteps = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_int8_kernel, nsteps=nsteps),
+        grid=(mp // bm_, np_ // bn_, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def matmul_quantized(a, b, *, interpret: bool = True):
+    """fp32 in → quantize → int8 matmul → dequantize → fp32 out."""
+    a_q, sa = quantize_symmetric(a)
+    b_q, sb = quantize_symmetric(b)
+    c = matmul_int8(a_q, b_q, interpret=interpret)
+    return c.astype(jnp.float32) * (sa * sb)

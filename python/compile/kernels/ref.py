@@ -1,0 +1,139 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy / lax ops. pytest asserts allclose between the
+kernel (interpret=True) and these oracles across shape/dtype sweeps — this is
+the core L1 correctness signal of the build.
+
+Layout conventions (matching the paper's TVM NCHW kernels):
+  feature maps: (N, C, H, W)    weights: (O, I, KH, KW)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def matmul_bias_act(a, b, bias=None, act: str | None = None):
+    """Fused matmul + bias + activation — the paper's loop-fusion (LF) target."""
+    out = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    out = apply_act(out, act)
+    return out.astype(a.dtype)
+
+
+def apply_act(x, act: str | None):
+    if act is None or act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def conv2d(x, w, stride: int = 1, padding: int = 0, bias=None, act: str | None = None):
+    """Direct NCHW conv2d oracle via lax.conv_general_dilated."""
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :, None, None]
+    out = apply_act(out, act)
+    return out.astype(x.dtype)
+
+
+def depthwise_conv2d(x, w, stride: int = 1, padding: int = 0, bias=None,
+                     act: str | None = None):
+    """Depthwise NCHW conv oracle. w: (C, 1, KH, KW)."""
+    c = x.shape[1]
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    )
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :, None, None]
+    out = apply_act(out, act)
+    return out.astype(x.dtype)
+
+
+def batchnorm(x, gamma, beta, mean, var, eps: float = 1e-3):
+    """Inference-mode batchnorm over channel dim of NCHW."""
+    inv = gamma.astype(jnp.float32) * lax.rsqrt(var.astype(jnp.float32) + eps)
+    out = (x.astype(jnp.float32) - mean.astype(jnp.float32)[None, :, None, None]) \
+        * inv[None, :, None, None] + beta.astype(jnp.float32)[None, :, None, None]
+    return out.astype(x.dtype)
+
+
+def maxpool2d(x, k: int = 2, stride: int | None = None, padding: int = 0):
+    stride = stride or k
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max,
+        window_dimensions=(1, 1, k, k),
+        window_strides=(1, 1, stride, stride),
+        padding=[(0, 0), (0, 0), (padding, padding), (padding, padding)],
+    )
+
+
+def avgpool2d(x, k: int = 2, stride: int | None = None, padding: int = 0):
+    stride = stride or k
+    summed = lax.reduce_window(
+        x.astype(jnp.float32), 0.0, lax.add,
+        window_dimensions=(1, 1, k, k),
+        window_strides=(1, 1, stride, stride),
+        padding=[(0, 0), (0, 0), (padding, padding), (padding, padding)],
+    )
+    return (summed / float(k * k)).astype(x.dtype)
+
+
+def global_avgpool(x):
+    """NCHW → NC."""
+    return jnp.mean(x.astype(jnp.float32), axis=(2, 3)).astype(x.dtype)
+
+
+def im2col(x, kh: int, kw: int, stride: int, padding: int):
+    """Unfold NCHW into (N * OH * OW, C * KH * KW) patch matrix.
+
+    This is the oracle for the layout transform the Pallas conv kernel uses to
+    map the paper's unrolled DSP loops onto MXU-shaped matmul tiles.
+    """
+    n, c, h, w = x.shape
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    patches = lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*KH*KW, OH, OW)
+    patches = jnp.transpose(patches, (0, 2, 3, 1)).reshape(n * oh * ow, c * kh * kw)
+    return patches.astype(x.dtype), oh, ow
+
+
+def conv2d_im2col(x, w, stride: int = 1, padding: int = 0, bias=None,
+                  act: str | None = None):
+    """Conv via explicit im2col + matmul — bit-matched path for the Pallas kernel."""
+    o, i, kh, kw = w.shape
+    cols, oh, ow = im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(o, i * kh * kw).T  # (C*KH*KW, O)
+    out = matmul_bias_act(cols, wmat, bias=bias, act=act)  # (N*OH*OW, O)
+    n = x.shape[0]
+    return jnp.transpose(out.reshape(n, oh, ow, o), (0, 3, 1, 2))

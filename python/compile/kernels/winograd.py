@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: Winograd F(2×2, 3×3) convolution.
+
+The §V-E comparator (DiCecco et al., "Caffeinated FPGAs") is a hand-
+optimized Winograd 3×3 engine; this kernel implements the same F(2,3)
+transform family so the comparison in `benches/sec5e_related_work.rs` is
+apples-to-apples at the algorithm level. Winograd computes each 2×2 output
+tile from a 4×4 input tile with 16 multiplies instead of 36 — a 2.25×
+multiply reduction for 3×3/s1 convolutions.
+
+Structure: input/filter transforms are small dense matmuls applied as
+layout ops; the element-wise product over the 16 transform points is a
+batched (16, C) × (C, K) contraction that flows through the Pallas matmul
+kernel — so the MXU does all heavy lifting, as in conv.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+from . import ref
+
+# F(2x2, 3x3) transform matrices (Lavin & Gray, 2016).
+_B_T = jnp.array(
+    [[1, 0, -1, 0],
+     [0, 1, 1, 0],
+     [0, -1, 1, 0],
+     [0, 1, 0, -1]], jnp.float32)
+_G = jnp.array(
+    [[1, 0, 0],
+     [0.5, 0.5, 0.5],
+     [0.5, -0.5, 0.5],
+     [0, 0, 1]], jnp.float32)
+_A_T = jnp.array(
+    [[1, 1, 1, 0],
+     [0, 1, -1, -1]], jnp.float32)
+
+
+def _filter_transform(w):
+    """(O, C, 3, 3) → (16, C, O): U = G g Gᵀ per (o, c)."""
+    o, c = w.shape[0], w.shape[1]
+    u = jnp.einsum("ij,ocjk,lk->ocil", _G, w.astype(jnp.float32), _G)
+    return u.reshape(o, c, 16).transpose(2, 1, 0)  # (16, C, O)
+
+
+def _input_transform(x, tiles_h, tiles_w):
+    """(N, C, H, W) padded → (16, N·tiles, C): V = Bᵀ d B per 4×4 tile."""
+    n, c = x.shape[0], x.shape[1]
+    # Gather overlapping 4×4 tiles with stride 2.
+    d = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(4, 4),
+        window_strides=(2, 2),
+        padding=[(0, 0), (0, 0)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C·16, th, tw)
+    d = d.reshape(n, c, 4, 4, tiles_h, tiles_w)
+    v = jnp.einsum("ij,ncjkhw,lk->ncilhw", _B_T, d, _B_T)
+    v = v.reshape(n, c, 16, tiles_h * tiles_w)
+    return v.transpose(2, 0, 3, 1).reshape(16, n * tiles_h * tiles_w, c)
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "interpret"))
+def conv2d_winograd(x, w, bias=None, *, padding: int = 1,
+                    interpret: bool = True):
+    """3×3 stride-1 conv via Winograd F(2,3). x: (N,C,H,W), w: (O,C,3,3)."""
+    assert w.shape[2] == 3 and w.shape[3] == 3, "winograd kernel is 3x3 only"
+    n, c, h, w_in = x.shape
+    o = w.shape[0]
+    oh, ow = h + 2 * padding - 2, w_in + 2 * padding - 2
+
+    # Pad input so the 4×4/stride-2 tiling covers the output exactly.
+    tiles_h, tiles_w = -(-oh // 2), -(-ow // 2)
+    need_h = 2 * tiles_h + 2
+    need_w = 2 * tiles_w + 2
+    xp = jnp.pad(x, ((0, 0), (0, 0),
+                     (padding, need_h - h - padding),
+                     (padding, need_w - w_in - padding)))
+
+    u = _filter_transform(w)                     # (16, C, O)
+    v = _input_transform(xp, tiles_h, tiles_w)   # (16, T, C)
+
+    # 16 independent (T, C) @ (C, O) products through the Pallas matmul.
+    def one_point(i, acc):
+        m = mm.matmul(v[i], u[i], bm=512, bn=128,
+                      bk=min(mm.DEFAULT_BK, max(8, c)), interpret=interpret)
+        return acc.at[i].set(m)
+
+    t = v.shape[1]
+    out = jnp.zeros((16, t, o), jnp.float32)
+    for i in range(16):  # unrolled: 16 pallas_call sites in the HLO
+        out = one_point(i, out)
+
+    # Output transform: Y = Aᵀ m A per tile.
+    m = out.reshape(4, 4, n, tiles_h, tiles_w, o)
+    y = jnp.einsum("ij,jkntwo,lk->niltwo", _A_T, m, _A_T)  # (N,2,2,th,tw,O)
+    y = y.transpose(0, 5, 3, 1, 4, 2).reshape(n, o, 2 * tiles_h, 2 * tiles_w)
+    y = y[:, :, :oh, :ow]
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :, None, None]
+    return y.astype(x.dtype)
+
+
+def multiply_count(n, c, h, w, o, padding: int = 1):
+    """Multiplies used by F(2,3) vs direct 3×3 — the 2.25× claim."""
+    oh, ow = h + 2 * padding - 2, w + 2 * padding - 2
+    tiles = -(-oh // 2) * (-(-ow // 2))
+    wino = 16 * tiles * c * o * n
+    direct = oh * ow * 9 * c * o * n
+    return wino, direct

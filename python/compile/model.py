@@ -1,0 +1,331 @@
+"""L2: the paper's three evaluation networks in JAX, calling L1 kernels.
+
+LeNet-5 (MNIST, §V-A), MobileNetV1 (α=1.0, 224², ImageNet head) and
+ResNet-34 (224², ImageNet head) — the exact networks the paper generates
+accelerators for. Each network has two functional paths:
+
+  apply(params, x, impl="pallas")  — every MAC flows through the L1 Pallas
+      kernels (interpret=True). This is the path AOT-lowered into
+      artifacts/<net>.hlo.txt and executed by the rust runtime for
+      functional verification of the full stack.
+  apply(params, x, impl="ref")     — pure jnp/lax (XLA-native convs).
+      Lowered into artifacts/<net>_ref.hlo.txt; XLA:CPU compiles these to
+      optimized native loops, so the rust runtime uses them as the
+      honest "optimized CPU framework" baseline of Table V (the analog of
+      TVM-LLVM / TensorFlow in the paper).
+
+Weights are deterministic synthetic values (seeded per layer name): the
+paper's Tables measure *throughput*, which is value-independent; numerics
+are still verified end-to-end (pallas vs ref paths must agree).
+
+Block-size heuristic: interpret-mode Pallas pays a fixed cost per grid
+step, so convs pick large bm / full-K bk tiles (measured 15× faster than
+the naive 128³ tiling at 112²; EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv as kconv
+from .kernels import pool as kpool
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (deterministic, value-irrelevant but non-trivial)
+# ---------------------------------------------------------------------------
+
+
+def _seed_for(name: str) -> int:
+    return int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+
+
+def _he(name: str, shape, fan_in: int) -> np.ndarray:
+    rng = np.random.default_rng(_seed_for(name))
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def _zeros(shape) -> np.ndarray:
+    return np.zeros(shape, np.float32)
+
+
+def _ones(shape) -> np.ndarray:
+    return np.ones(shape, np.float32)
+
+
+@dataclass
+class ParamSet:
+    """Ordered parameter list; order == HLO parameter order after the image."""
+    names: list = field(default_factory=list)
+    values: list = field(default_factory=list)
+
+    def add(self, name: str, value: np.ndarray) -> None:
+        self.names.append(name)
+        self.values.append(value)
+
+    def conv(self, name: str, o: int, i: int, k: int, bias: bool = True):
+        self.add(f"{name}.w", _he(f"{name}.w", (o, i, k, k), i * k * k))
+        if bias:
+            self.add(f"{name}.b", _zeros((o,)))
+
+    def dwconv(self, name: str, c: int, k: int):
+        self.add(f"{name}.w", _he(f"{name}.w", (c, 1, k, k), k * k))
+
+    def bn(self, name: str, c: int):
+        self.add(f"{name}.gamma", _ones((c,)))
+        self.add(f"{name}.beta", _zeros((c,)))
+        rng = np.random.default_rng(_seed_for(f"{name}.stats"))
+        self.add(f"{name}.mean", (rng.standard_normal(c) * 0.1).astype(np.float32))
+        self.add(f"{name}.var", (_ones((c,)) + rng.random(c).astype(np.float32) * 0.1))
+
+    def dense(self, name: str, i: int, o: int):
+        self.add(f"{name}.w", _he(f"{name}.w", (i, o), i))
+        self.add(f"{name}.b", _zeros((o,)))
+
+
+class _P:
+    """Cursor over a flat parameter list during apply()."""
+
+    def __init__(self, params):
+        self.params = list(params)
+        self.i = 0
+
+    def take(self, n: int = 1):
+        vals = self.params[self.i:self.i + n]
+        self.i += n
+        return vals[0] if n == 1 else vals
+
+    def done(self):
+        assert self.i == len(self.params), \
+            f"consumed {self.i} of {len(self.params)} params"
+
+
+# Interpret-mode Pallas grid-step overhead dominates; pick tiles that
+# minimize grid steps (see module docstring).
+_CONV_BM, _CONV_BN, _CONV_BK_CAP = 2048, 128, 1152
+
+
+def _conv_blocks(k_total: int):
+    return dict(bm=_CONV_BM, bn=_CONV_BN, bk=min(_CONV_BK_CAP, k_total))
+
+
+def _conv(x, w, b, stride, padding, act, impl):
+    if impl == "pallas":
+        kdim = w.shape[1] * w.shape[2] * w.shape[3]
+        return kconv.conv2d(x, w, b, stride=stride, padding=padding, act=act,
+                            **_conv_blocks(kdim))
+    return kref.conv2d(x, w, stride=stride, padding=padding, bias=b, act=act)
+
+
+def _dwconv(x, w, stride, padding, act, impl):
+    if impl == "pallas":
+        return kconv.depthwise_conv2d(x, w, None, stride=stride,
+                                      padding=padding, act=act)
+    return kref.depthwise_conv2d(x, w, stride=stride, padding=padding, act=act)
+
+
+def _dense(x, w, b, act, impl):
+    if impl == "pallas":
+        return kconv.dense(x, w, b, act=act)
+    return kref.matmul_bias_act(x, w, b, act)
+
+
+def _maxpool(x, k, stride, padding, impl):
+    if impl == "pallas":
+        return kpool.pool2d(x, k=k, stride=stride, padding=padding, mode="max")
+    return kref.maxpool2d(x, k, stride, padding)
+
+
+def _avgpool(x, k, impl):
+    if impl == "pallas":
+        return kpool.pool2d(x, k=k, mode="avg")
+    return kref.avgpool2d(x, k)
+
+
+def _gap(x, impl):
+    if impl == "pallas":
+        return kpool.global_avgpool(x)
+    return kref.global_avgpool(x)
+
+
+def _bn(x, g, b, m, v):
+    # Batchnorm is always folded arithmetic (the paper fuses it into the
+    # conv loop — LF); numerically identical in both impls.
+    return kref.batchnorm(x, g, b, m, v)
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5  (32×32×1 input, classic C1..F7; ~390K MACs)
+# ---------------------------------------------------------------------------
+
+
+def lenet5_params() -> ParamSet:
+    p = ParamSet()
+    p.conv("c1", 6, 1, 5)
+    p.conv("c3", 16, 6, 5)
+    p.dense("f5", 400, 120)
+    p.dense("f6", 120, 84)
+    p.dense("f7", 84, 10)
+    return p
+
+
+def lenet5_apply(params, x, impl: str = "pallas"):
+    """x: (N, 1, 32, 32) → logits (N, 10)."""
+    p = _P(params)
+    w, b = p.take(2)
+    y = _conv(x, w, b, 1, 0, "tanh", impl)          # (N, 6, 28, 28)
+    y = _avgpool(y, 2, impl)                        # (N, 6, 14, 14)
+    w, b = p.take(2)
+    y = _conv(y, w, b, 1, 0, "tanh", impl)          # (N, 16, 10, 10)
+    y = _avgpool(y, 2, impl)                        # (N, 16, 5, 5)
+    y = y.reshape(y.shape[0], -1)                   # (N, 400)
+    w, b = p.take(2)
+    y = _dense(y, w, b, "tanh", impl)
+    w, b = p.take(2)
+    y = _dense(y, w, b, "tanh", impl)
+    w, b = p.take(2)
+    y = _dense(y, w, b, "none", impl)
+    p.done()
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV1  (α=1.0, 224²; 13 depthwise-separable blocks; §V-A)
+# ---------------------------------------------------------------------------
+
+# (stride of the dw conv, output channels of the pointwise conv)
+MOBILENET_BLOCKS = [
+    (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+    (1, 512), (1, 512), (1, 512), (1, 512), (1, 512),
+    (2, 1024), (1, 1024),
+]
+
+
+def mobilenet_v1_params() -> ParamSet:
+    p = ParamSet()
+    p.conv("conv1", 32, 3, 3, bias=False)
+    p.bn("conv1.bn", 32)
+    c = 32
+    for i, (stride, cout) in enumerate(MOBILENET_BLOCKS):
+        p.dwconv(f"b{i}.dw", c, 3)
+        p.bn(f"b{i}.dw.bn", c)
+        p.conv(f"b{i}.pw", cout, c, 1, bias=False)
+        p.bn(f"b{i}.pw.bn", cout)
+        c = cout
+    p.dense("fc", 1024, 1000)
+    return p
+
+
+def mobilenet_v1_apply(params, x, impl: str = "pallas"):
+    """x: (N, 3, 224, 224) → logits (N, 1000)."""
+    p = _P(params)
+    w = p.take()
+    g, b_, m, v = p.take(4)
+    y = _conv(x, w, None, 2, 1, "none", impl)
+    y = kref.apply_act(_bn(y, g, b_, m, v), "relu6")
+    c = 32
+    for stride, cout in MOBILENET_BLOCKS:
+        wd = p.take()
+        g, b_, m, v = p.take(4)
+        y = _dwconv(y, wd, stride, 1, "none", impl)
+        y = kref.apply_act(_bn(y, g, b_, m, v), "relu6")
+        wp = p.take()
+        g, b_, m, v = p.take(4)
+        y = _conv(y, wp, None, 1, 0, "none", impl)
+        y = kref.apply_act(_bn(y, g, b_, m, v), "relu6")
+        c = cout
+    y = _gap(y, impl)                               # (N, 1024)
+    w, b_ = p.take(2)
+    y = _dense(y, w, b_, "none", impl)
+    p.done()
+    return y
+
+
+# ---------------------------------------------------------------------------
+# ResNet-34  (224²; basic blocks [3, 4, 6, 3]; §V-A)
+# ---------------------------------------------------------------------------
+
+RESNET34_STAGES = [(64, 3), (128, 4), (256, 6), (512, 3)]
+
+
+def resnet34_params() -> ParamSet:
+    p = ParamSet()
+    p.conv("conv1", 64, 3, 7, bias=False)
+    p.bn("conv1.bn", 64)
+    cin = 64
+    for s, (c, nblocks) in enumerate(RESNET34_STAGES):
+        for b in range(nblocks):
+            name = f"s{s}b{b}"
+            p.conv(f"{name}.conv1", c, cin, 3, bias=False)
+            p.bn(f"{name}.bn1", c)
+            p.conv(f"{name}.conv2", c, c, 3, bias=False)
+            p.bn(f"{name}.bn2", c)
+            if b == 0 and cin != c:
+                p.conv(f"{name}.down", c, cin, 1, bias=False)
+                p.bn(f"{name}.down.bn", c)
+            cin = c
+    p.dense("fc", 512, 1000)
+    return p
+
+
+def resnet34_apply(params, x, impl: str = "pallas"):
+    """x: (N, 3, 224, 224) → logits (N, 1000)."""
+    p = _P(params)
+    w = p.take()
+    g, b_, m, v = p.take(4)
+    y = _conv(x, w, None, 2, 3, "none", impl)        # (N, 64, 112, 112)
+    y = kref.apply_act(_bn(y, g, b_, m, v), "relu")
+    y = _maxpool(y, 3, 2, 1, impl)                   # (N, 64, 56, 56)
+    cin = 64
+    for s, (c, nblocks) in enumerate(RESNET34_STAGES):
+        for b in range(nblocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            w1 = p.take()
+            g1, be1, m1, v1 = p.take(4)
+            w2 = p.take()
+            g2, be2, m2, v2 = p.take(4)
+            z = _conv(y, w1, None, stride, 1, "none", impl)
+            z = kref.apply_act(_bn(z, g1, be1, m1, v1), "relu")
+            z = _conv(z, w2, None, 1, 1, "none", impl)
+            z = _bn(z, g2, be2, m2, v2)
+            if b == 0 and cin != c:
+                wd = p.take()
+                gd, bd, md, vd = p.take(4)
+                y = _conv(y, wd, None, stride, 0, "none", impl)
+                y = _bn(y, gd, bd, md, vd)
+            y = kref.apply_act(z + y, "relu")
+            cin = c
+    y = _gap(y, impl)                                # (N, 512)
+    w, b_ = p.take(2)
+    y = _dense(y, w, b_, "none", impl)
+    p.done()
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Registry used by aot.py, tests, and the Makefile
+# ---------------------------------------------------------------------------
+
+NETWORKS = {
+    "lenet5": dict(
+        params=lenet5_params, apply=lenet5_apply,
+        input_shape=(1, 32, 32), num_classes=10),
+    "mobilenet_v1": dict(
+        params=mobilenet_v1_params, apply=mobilenet_v1_apply,
+        input_shape=(3, 224, 224), num_classes=1000),
+    "resnet34": dict(
+        params=resnet34_params, apply=resnet34_apply,
+        input_shape=(3, 224, 224), num_classes=1000),
+}
+
+
+def make_inputs(net: str, batch: int = 1, seed: int = 0):
+    """Deterministic input batch + device-ready parameter list."""
+    spec = NETWORKS[net]
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((batch, *spec["input_shape"])).astype(np.float32)
+    pset = spec["params"]()
+    return jnp.asarray(x), [jnp.asarray(v) for v in pset.values], pset

@@ -1,0 +1,126 @@
+"""L1 correctness: conv2d / depthwise / dense / pooling Pallas kernels vs
+lax-based oracles, across shape/stride/padding sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import pool as kpool
+from compile.kernels import ref
+
+TOL = dict(rtol=5e-4, atol=5e-4)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    hw=st.integers(6, 20),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv2d_shapes(n, cin, cout, hw, k, stride):
+    pad = k // 2
+    x = _rand((n, cin, hw, hw), seed=hw * 31 + cin)
+    w = _rand((cout, cin, k, k), seed=cout * 17 + k, scale=0.3)
+    got = kconv.conv2d(x, w, stride=stride, padding=pad)
+    want = ref.conv2d(x, w, stride=stride, padding=pad)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("k,stride,pad", [(5, 1, 0), (7, 2, 3), (1, 1, 0), (3, 2, 1)])
+def test_conv2d_paper_layer_geometries(k, stride, pad):
+    """The filter/stride groups the paper parameterizes kernels by (§IV-H):
+    7×7/2 (ResNet conv1), 3×3 (workhorse), 1×1 (MobileNet pointwise), 5×5
+    (LeNet)."""
+    x = _rand((1, 4, 16, 16), seed=1)
+    w = _rand((6, 4, k, k), seed=2, scale=0.3)
+    b = _rand((6,), seed=3)
+    got = kconv.conv2d(x, w, b, stride=stride, padding=pad, act="relu")
+    want = ref.conv2d(x, w, stride=stride, padding=pad, bias=b, act="relu")
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_conv2d_matches_im2col_oracle():
+    x = _rand((2, 3, 12, 12), seed=4)
+    w = _rand((5, 3, 3, 3), seed=5, scale=0.3)
+    got = kconv.conv2d(x, w, stride=1, padding=1)
+    want = ref.conv2d_im2col(x, w, stride=1, padding=1)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 16),
+    hw=st.integers(6, 18),
+    stride=st.sampled_from([1, 2]),
+    bc=st.sampled_from([4, 8, 32]),
+)
+def test_depthwise_shapes(c, hw, stride, bc):
+    x = _rand((2, c, hw, hw), seed=c * 3 + hw)
+    w = _rand((c, 1, 3, 3), seed=c, scale=0.3)
+    got = kconv.depthwise_conv2d(x, w, stride=stride, padding=1, bc=bc)
+    want = ref.depthwise_conv2d(x, w, stride=stride, padding=1)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_depthwise_bias_act():
+    x = _rand((1, 8, 10, 10), seed=6)
+    w = _rand((8, 1, 3, 3), seed=7, scale=0.3)
+    b = _rand((8,), seed=8)
+    got = kconv.depthwise_conv2d(x, w, b, stride=1, padding=1, act="relu6")
+    want = ref.depthwise_conv2d(x, w, stride=1, padding=1, bias=b, act="relu6")
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_dense_matches_ref():
+    x = _rand((9, 400), seed=9)
+    w = _rand((400, 120), seed=10, scale=0.1)
+    b = _rand((120,), seed=11)
+    got = kconv.dense(x, w, b, act="tanh")
+    want = ref.matmul_bias_act(x, w, b, "tanh")
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    hw=st.sampled_from([8, 12, 14, 16]),
+    k=st.sampled_from([2, 3]),
+    mode=st.sampled_from(["max", "avg"]),
+)
+def test_pool_shapes(c, hw, k, mode):
+    x = _rand((2, c, hw, hw), seed=c * 5 + hw)
+    got = kpool.pool2d(x, k=k, mode=mode)
+    want = (ref.maxpool2d if mode == "max" else ref.avgpool2d)(x, k)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_pool_stride_padding():
+    """ResNet's 3×3/2 pad-1 maxpool — padding fills -inf, not zeros."""
+    x = _rand((1, 4, 14, 14), seed=12)
+    got = kpool.pool2d(x, k=3, stride=2, padding=1, mode="max")
+    want = ref.maxpool2d(x, 3, 2, 1)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_global_avgpool():
+    x = _rand((3, 7, 9, 9), seed=13)
+    np.testing.assert_allclose(kpool.global_avgpool(x),
+                               ref.global_avgpool(x), **TOL)
+
+
+def test_pool_negative_inputs_max():
+    """All-negative maps: max-pool must not leak the 0 padding value."""
+    x = -jnp.abs(_rand((1, 2, 8, 8), seed=14)) - 1.0
+    got = kpool.pool2d(x, k=3, stride=2, padding=1, mode="max")
+    want = ref.maxpool2d(x, 3, 2, 1)
+    np.testing.assert_allclose(got, want, **TOL)
+    assert np.all(np.asarray(got) < 0)

@@ -1,0 +1,107 @@
+"""L1 correctness: Pallas tiled matmul vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (ragged, tiny, tile-aligned), block sizes, dtypes,
+and the fused bias/activation epilogue.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+)
+def test_matmul_ragged_shapes(m, k, n):
+    a, b = _rand((m, k), seed=m * 7 + k), _rand((k, n), seed=n * 13 + k)
+    np.testing.assert_allclose(mm.matmul(a, b), ref.matmul(a, b), **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 64, 128]),
+    bn=st.sampled_from([8, 16, 32, 64, 128]),
+    bk=st.sampled_from([8, 16, 32, 64, 128]),
+)
+def test_matmul_block_sizes(bm, bn, bk):
+    """Any legal tile produces the same numbers — the schedule only moves
+    work between grid steps (the paper's claim that unroll/tile factors are
+    performance-only knobs)."""
+    a, b = _rand((96, 112), seed=1), _rand((112, 80), seed=2)
+    got = mm.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul(a, b), **TOL)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "relu6", "tanh"])
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_matmul_fused_epilogue(act, with_bias):
+    a, b = _rand((70, 45), seed=3), _rand((45, 33), seed=4)
+    bias = _rand((33,), seed=5) if with_bias else None
+    got = mm.matmul(a, b, bias, act=act)
+    want = ref.matmul_bias_act(a, b, bias, act)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    a, b = _rand((64, 64), dtype, 6), _rand((64, 64), dtype, 7)
+    got = mm.matmul(a, b)
+    want = ref.matmul(a, b)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+    assert got.dtype == dtype
+
+
+def test_matmul_identity():
+    a = _rand((40, 40), seed=8)
+    eye = jnp.eye(40, dtype=jnp.float32)
+    np.testing.assert_allclose(mm.matmul(a, eye), a, **TOL)
+
+
+def test_matmul_zeros():
+    a = _rand((17, 23), seed=9)
+    z = jnp.zeros((23, 31), jnp.float32)
+    np.testing.assert_allclose(mm.matmul(a, z), jnp.zeros((17, 31)), **TOL)
+
+
+def test_matmul_single_element():
+    a = jnp.asarray([[3.0]], jnp.float32)
+    b = jnp.asarray([[4.0]], jnp.float32)
+    np.testing.assert_allclose(mm.matmul(a, b), [[12.0]], **TOL)
+
+
+def test_matmul_shape_mismatch_raises():
+    a, b = _rand((4, 5)), _rand((6, 4))
+    with pytest.raises(AssertionError):
+        mm.matmul(a, b)
+
+
+def test_vmem_bytes_monotone():
+    """Bigger tiles never shrink the VMEM working set (used by §Perf model)."""
+    prev = 0
+    for b in [32, 64, 128, 256]:
+        cur = mm.vmem_bytes(b, b, b)
+        assert cur > prev
+        prev = cur
+
+
+def test_mxu_utilization_bounds():
+    assert mm.mxu_utilization(128, 128, 128, 128, 128, 128) == 1.0
+    u = mm.mxu_utilization(100, 100, 100, 128, 128, 128)
+    assert 0.0 < u < 1.0
+    # exactly the padding ratio
+    np.testing.assert_allclose(u, (100 ** 3) / (128 ** 3))

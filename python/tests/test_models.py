@@ -1,0 +1,83 @@
+"""L2 correctness: full networks — pallas path vs XLA-ref path, shapes,
+parameter accounting, determinism."""
+import numpy as np
+import pytest
+
+from compile import model
+
+# MACs per network as the rust graph layer computes them; cross-checked
+# here from the python parameter/shape definitions.
+EXPECTED_PARAM_COUNTS = {
+    "lenet5": 61_706,
+    "mobilenet_v1": 4_253_864,
+    "resnet34": 21_814_696,
+}
+
+
+@pytest.mark.parametrize("net", list(model.NETWORKS))
+def test_param_counts(net):
+    pset = model.NETWORKS[net]["params"]()
+    total = sum(int(np.prod(v.shape)) for v in pset.values)
+    assert total == EXPECTED_PARAM_COUNTS[net], f"{net}: {total}"
+
+
+@pytest.mark.parametrize("net", list(model.NETWORKS))
+def test_ref_output_shape(net):
+    x, params, _ = model.make_inputs(net, batch=2)
+    out = model.NETWORKS[net]["apply"](params, x, impl="ref")
+    assert out.shape == (2, model.NETWORKS[net]["num_classes"])
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_lenet5_pallas_matches_ref():
+    x, params, _ = model.make_inputs("lenet5", batch=4)
+    ref_out = model.NETWORKS["lenet5"]["apply"](params, x, impl="ref")
+    pal_out = model.NETWORKS["lenet5"]["apply"](params, x, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal_out), np.asarray(ref_out),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("net", ["mobilenet_v1", "resnet34"])
+def test_large_net_pallas_matches_ref(net):
+    x, params, _ = model.make_inputs(net, batch=1)
+    ref_out = model.NETWORKS[net]["apply"](params, x, impl="ref")
+    pal_out = model.NETWORKS[net]["apply"](params, x, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal_out), np.asarray(ref_out),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_weights_deterministic():
+    a = model.NETWORKS["lenet5"]["params"]()
+    b = model.NETWORKS["lenet5"]["params"]()
+    assert a.names == b.names
+    for va, vb in zip(a.values, b.values):
+        np.testing.assert_array_equal(va, vb)
+
+
+def test_make_inputs_deterministic():
+    xa, _, _ = model.make_inputs("lenet5", batch=3, seed=42)
+    xb, _, _ = model.make_inputs("lenet5", batch=3, seed=42)
+    np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    xc, _, _ = model.make_inputs("lenet5", batch=3, seed=43)
+    assert not np.array_equal(np.asarray(xa), np.asarray(xc))
+
+
+def test_param_names_unique():
+    for net in model.NETWORKS:
+        names = model.NETWORKS[net]["params"]().names
+        assert len(names) == len(set(names)), f"dup param names in {net}"
+
+
+def test_mobilenet_block_structure():
+    """13 separable blocks, channel doubling at stride-2 points (§V-A)."""
+    assert len(model.MOBILENET_BLOCKS) == 13
+    assert model.MOBILENET_BLOCKS[-1][1] == 1024
+    strides = [s for s, _ in model.MOBILENET_BLOCKS]
+    assert strides.count(2) == 4
+
+
+def test_resnet34_stage_structure():
+    assert [n for _, n in model.RESNET34_STAGES] == [3, 4, 6, 3]
+    # 34 = 1 (conv1) + 2 * (3+4+6+3) + 1 (fc)
+    assert 1 + 2 * sum(n for _, n in model.RESNET34_STAGES) + 1 == 34

@@ -1,0 +1,52 @@
+"""L1 correctness: int8 Pallas matmul vs exact integer reference, and the
+quantize→matmul→dequantize path vs fp32 within quantization error."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96))
+def test_int8_matmul_is_exact(m, k, n):
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    a = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int8)
+    got = quant.matmul_int8(a, b)
+    want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    # int32 accumulation is exact for these ranges (k ≤ 96 × 127² < 2³¹)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+    assert got.dtype == jnp.int32
+
+
+def test_quantize_symmetric_roundtrip():
+    x = _rand((40, 40), seed=1, scale=3.0)
+    q, s = quant.quantize_symmetric(x)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(q, np.float32) * float(s) - np.asarray(x))
+    # max quantization error ≤ scale/2
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_dequantized_matmul_close_to_fp32():
+    a = _rand((64, 80), seed=2)
+    b = _rand((80, 48), seed=3)
+    got = quant.matmul_quantized(a, b)
+    want = np.asarray(ref.matmul(a, b))
+    # int8 symmetric quantization: relative error a few percent
+    denom = np.abs(want).mean()
+    rel = np.abs(np.asarray(got) - want).mean() / denom
+    assert rel < 0.05, rel
+
+
+def test_zero_inputs():
+    a = jnp.zeros((16, 16), jnp.int8)
+    b = jnp.zeros((16, 16), jnp.int8)
+    got = quant.matmul_int8(a, b)
+    assert np.all(np.asarray(got) == 0)

@@ -1,0 +1,70 @@
+"""L1 correctness: Winograd F(2,3) conv vs the direct-conv oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, winograd
+
+TOL = dict(rtol=3e-3, atol=3e-3)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    c=st.integers(1, 8),
+    o=st.integers(1, 8),
+    h=st.integers(6, 16),
+    w=st.integers(6, 16),
+)
+def test_winograd_matches_direct(n, c, o, h, w):
+    x = _rand((n, c, h, w), seed=h * 31 + w)
+    k = _rand((o, c, 3, 3), seed=c * 7 + o, scale=0.3)
+    got = winograd.conv2d_winograd(x, k, padding=1)
+    want = ref.conv2d(x, k, stride=1, padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_winograd_with_bias():
+    x = _rand((1, 4, 10, 10), seed=1)
+    k = _rand((6, 4, 3, 3), seed=2, scale=0.3)
+    b = _rand((6,), seed=3)
+    got = winograd.conv2d_winograd(x, k, b, padding=1)
+    want = ref.conv2d(x, k, stride=1, padding=1, bias=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_winograd_valid_padding():
+    x = _rand((1, 3, 8, 8), seed=4)
+    k = _rand((2, 3, 3, 3), seed=5, scale=0.3)
+    got = winograd.conv2d_winograd(x, k, padding=0)
+    want = ref.conv2d(x, k, stride=1, padding=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_winograd_rejects_non_3x3():
+    x = _rand((1, 3, 8, 8))
+    k = _rand((2, 3, 5, 5))
+    with pytest.raises(AssertionError):
+        winograd.conv2d_winograd(x, k)
+
+
+def test_multiply_reduction_is_2_25x():
+    # The DiCecco engine's raison d'être: 36 multiplies → 16 per 2×2 tile.
+    wino, direct = winograd.multiply_count(1, 64, 56, 56, 64)
+    assert abs(direct / wino - 2.25) < 1e-9
+
+
+def test_resnet_conv_shape():
+    """The exact geometry DiCecco's engine targets (ResNet 3×3 layers)."""
+    x = _rand((1, 16, 28, 28), seed=6)
+    k = _rand((16, 16, 3, 3), seed=7, scale=0.2)
+    got = winograd.conv2d_winograd(x, k, padding=1)
+    assert got.shape == (1, 16, 28, 28)
+    want = ref.conv2d(x, k, stride=1, padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)

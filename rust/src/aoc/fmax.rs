@@ -1,0 +1,137 @@
+//! f_max prediction.
+//!
+//! The paper (§V-F): "Routing congestion increases with larger tile sizes,
+//! leading to large drops in f_max … the fanout from these LSUs can lead to
+//! the routing failure." We model achieved clock as the shell base clock
+//! degraded by (a) overall utilization and (b) a congestion knee once any
+//! resource class crosses ~50%, plus (c) a fanout term from the widest LSU.
+//! Constants are fitted to Table II's three (utilization, f_max) points —
+//! see DESIGN.md §Calibration.
+
+
+use crate::device::Utilization;
+
+/// Fitted model constants.
+#[derive(Debug, Clone, Copy)]
+pub struct FmaxModel {
+    /// Clock of a near-empty design (shell-limited).
+    pub base_mhz: f64,
+    /// Linear degradation per unit of max utilization.
+    pub util_slope: f64,
+    /// Congestion knee position (fraction of device).
+    pub knee: f64,
+    /// Additional slope beyond the knee.
+    pub knee_slope: f64,
+    /// MHz lost per doubling of the widest LSU beyond 64 B.
+    pub fanout_per_doubling: f64,
+    /// Floor: below this the router fails outright (returns None).
+    pub min_mhz: f64,
+}
+
+impl Default for FmaxModel {
+    fn default() -> Self {
+        // Fit to Table II: (0.25, 218), (0.48, 187), (0.61, 125).
+        FmaxModel {
+            base_mhz: 250.0,
+            util_slope: 134.0,
+            knee: 0.50,
+            knee_slope: 400.0,
+            fanout_per_doubling: 2.0,
+            min_mhz: 60.0,
+        }
+    }
+}
+
+/// Routing outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouteResult {
+    /// Achieved clock in MHz.
+    Routed(f64),
+    /// Congestion-driven routing failure (§V-F: "can also lead to routing
+    /// failure before utilizing all DSPs").
+    RoutingFailure,
+}
+
+impl RouteResult {
+    pub fn mhz(&self) -> Option<f64> {
+        match self {
+            RouteResult::Routed(m) => Some(*m),
+            RouteResult::RoutingFailure => None,
+        }
+    }
+}
+
+/// Predict f_max for a design with the given utilization and widest LSU.
+pub fn predict(model: &FmaxModel, util: &Utilization, max_lsu_width_bytes: u64) -> RouteResult {
+    if !util.fits() {
+        return RouteResult::RoutingFailure;
+    }
+    let u = util.logic_frac.max(util.bram_frac); // congestion-relevant max
+    let mut f = model.base_mhz - model.util_slope * u;
+    if u > model.knee {
+        f -= model.knee_slope * (u - model.knee);
+    }
+    if max_lsu_width_bytes > 64 {
+        let doublings = ((max_lsu_width_bytes as f64) / 64.0).log2();
+        f -= model.fanout_per_doubling * doublings;
+    }
+    if f < model.min_mhz {
+        RouteResult::RoutingFailure
+    } else {
+        RouteResult::Routed(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn util(logic: f64, bram: f64, dsp: f64) -> Utilization {
+        Utilization { logic_frac: logic, bram_frac: bram, dsp_frac: dsp, ff_frac: logic * 0.8 }
+    }
+
+    #[test]
+    fn fit_matches_table2_lenet() {
+        let m = FmaxModel::default();
+        let f = predict(&m, &util(0.25, 0.19, 0.05), 16).mhz().unwrap();
+        assert!((f - 218.0).abs() < 8.0, "{f}");
+    }
+
+    #[test]
+    fn fit_matches_table2_mobilenet() {
+        let m = FmaxModel::default();
+        let f = predict(&m, &util(0.46, 0.48, 0.15), 128).mhz().unwrap();
+        assert!((f - 187.0).abs() < 8.0, "{f}");
+    }
+
+    #[test]
+    fn fit_matches_table2_resnet() {
+        let m = FmaxModel::default();
+        let f = predict(&m, &util(0.59, 0.61, 0.16), 128).mhz().unwrap();
+        assert!((f - 125.0).abs() < 10.0, "{f}");
+    }
+
+    #[test]
+    fn over_capacity_fails_routing() {
+        let m = FmaxModel::default();
+        assert_eq!(predict(&m, &util(1.02, 0.3, 0.1), 16), RouteResult::RoutingFailure);
+    }
+
+    #[test]
+    fn extreme_congestion_fails_routing() {
+        let m = FmaxModel::default();
+        // 95% logic blows past the knee → below min clock → fail.
+        assert_eq!(predict(&m, &util(0.97, 0.9, 0.5), 1024), RouteResult::RoutingFailure);
+    }
+
+    #[test]
+    fn fmax_monotonically_decreases_with_utilization() {
+        let m = FmaxModel::default();
+        let mut prev = f64::INFINITY;
+        for u in [0.1, 0.3, 0.5, 0.6, 0.7] {
+            let f = predict(&m, &util(u, u, u), 16).mhz().unwrap();
+            assert!(f < prev);
+            prev = f;
+        }
+    }
+}

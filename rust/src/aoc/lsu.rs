@@ -1,0 +1,230 @@
+//! LSU (load-store unit) inference — §II-B.
+//!
+//! AOC materializes an LSU per global access site. The type depends on the
+//! access pattern and decides both throughput and resource cost:
+//!
+//! * **burst-coalesced**: stride-1 aligned accesses; one wide unit whose
+//!   width grows with the unroll factor (the efficient case §IV-A aims for).
+//! * **pipelined/streaming**: scalar in-order accesses.
+//! * **replicated**: non-consecutive accesses under unrolling — one LSU per
+//!   lane, "which incurs a significant cost in logic and BRAM" (§IV-A).
+//!
+//! AOC also infers a BRAM cache in front of small, reused read-only arrays;
+//! we model that with a capacity threshold.
+
+
+use crate::texpr::{Access, Dir, LoopNest, MemSpace, Pattern};
+
+/// Cache-inference capacity threshold (AOC's const-cache is 64 KiB by
+/// default on S10 BSPs).
+pub const CACHE_BYTES: u64 = 64 * 1024;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LsuKind {
+    /// Wide stride-1 unit; `width_bytes` per cycle.
+    BurstCoalesced,
+    /// Scalar pipelined unit.
+    Pipelined,
+    /// Replicated scalar units (`count` of them) + arbitration.
+    Replicated,
+    /// Backed by an inferred on-chip cache (small read-only array).
+    Cached,
+}
+
+/// One inferred LSU instance group for an access site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lsu {
+    pub buffer: String,
+    pub kind: LsuKind,
+    pub dir: Dir,
+    /// Parallel width in bytes per cycle this site can sustain.
+    pub width_bytes: u64,
+    /// Number of replicated units (1 unless `Replicated`).
+    pub count: u64,
+    /// Effective stall factor: average cycles per useful word, ≥ 1 —
+    /// models DDR burst waste for windowed/strided patterns.
+    pub stall_factor: f64,
+}
+
+/// Infer the LSUs of one kernel loop nest.
+pub fn infer(nest: &LoopNest) -> Vec<Lsu> {
+    nest.accesses
+        .iter()
+        .filter(|a| a.space == MemSpace::Global)
+        .map(|a| infer_one(nest, a))
+        .collect()
+}
+
+fn infer_one(nest: &LoopNest, a: &Access) -> Lsu {
+    // Unroll factor effective at this access = product of unroll factors of
+    // the loops that index it.
+    let unroll: u64 = nest
+        .loops
+        .iter()
+        .filter(|l| l.unroll > 1 && a.indexed_by.contains(&l.var))
+        .map(|l| l.unroll)
+        .product();
+    let unroll = unroll.max(1);
+    let eb = nest.precision.bytes();
+
+    // Read-only array small enough for AOC's inferred cache: after the
+    // first pass it streams from BRAM regardless of pattern.
+    if a.dir == Dir::Read && a.array_bytes <= CACHE_BYTES {
+        return Lsu {
+            buffer: a.buffer.clone(),
+            kind: LsuKind::Cached,
+            dir: a.dir,
+            width_bytes: eb * unroll,
+            count: 1,
+            stall_factor: 1.0,
+        };
+    }
+
+    match a.pattern {
+        Pattern::Consecutive => Lsu {
+            buffer: a.buffer.clone(),
+            kind: if unroll > 1 { LsuKind::BurstCoalesced } else { LsuKind::Pipelined },
+            dir: a.dir,
+            width_bytes: eb * unroll,
+            count: 1,
+            stall_factor: 1.0,
+        },
+        Pattern::Strided => Lsu {
+            buffer: a.buffer.clone(),
+            kind: if unroll > 1 { LsuKind::Replicated } else { LsuKind::Pipelined },
+            dir: a.dir,
+            width_bytes: eb * unroll,
+            count: unroll,
+            // Strided bursts waste most of each 64B line (row-replay of
+            // K>1 stride-1 windows); narrower elements waste more.
+            stall_factor: 6.0 * 4.0 / eb as f64,
+        },
+        Pattern::Windowed => Lsu {
+            buffer: a.buffer.clone(),
+            kind: if unroll > 1 { LsuKind::Replicated } else { LsuKind::Pipelined },
+            dir: a.dir,
+            width_bytes: eb * unroll,
+            count: unroll,
+            // Windowed/data-dependent addressing defeats coalescing: a full
+            // 64B DDR burst feeds one element.
+            stall_factor: 64.0 / eb as f64 / 1.0,
+        },
+    }
+}
+
+/// Aggregate resource cost of a set of LSUs, in the units of
+/// [`crate::aoc::resources`]. Calibrated against AOC area-report orders of
+/// magnitude (see DESIGN.md §Calibration).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LsuCost {
+    pub aluts: u64,
+    pub ffs: u64,
+    pub bram_blocks: u64,
+}
+
+pub fn cost(lsus: &[Lsu]) -> LsuCost {
+    let mut c = LsuCost::default();
+    for l in lsus {
+        match l.kind {
+            LsuKind::BurstCoalesced => {
+                c.aluts += 1_500 + 12 * l.width_bytes;
+                c.ffs += 3_000 + 24 * l.width_bytes;
+                c.bram_blocks += 2 + l.width_bytes / 64;
+            }
+            LsuKind::Pipelined => {
+                c.aluts += 400;
+                c.ffs += 800;
+            }
+            LsuKind::Cached => {
+                c.aluts += 900;
+                c.ffs += 1_500;
+                // cache data + tag storage
+                c.bram_blocks += 4;
+            }
+            LsuKind::Replicated => {
+                c.aluts += l.count * 900;
+                c.ffs += l.count * 1_400;
+                c.bram_blocks += l.count; // per-unit burst buffer
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::schedule::Scheduler;
+    use crate::texpr::{self, LoopVar};
+
+    fn resnet_conv3x3_nest() -> crate::texpr::LoopNest {
+        let g = models::resnet34();
+        let n = g.nodes.iter().find(|n| n.name == "s0b0.conv1").unwrap();
+        texpr::lower(n, &g.nodes[n.inputs[0]].shape)
+    }
+
+    #[test]
+    fn rolled_accesses_are_pipelined_or_cached() {
+        let nest = resnet_conv3x3_nest();
+        let lsus = infer(&nest);
+        assert!(lsus.iter().all(|l| l.count == 1));
+        // 64×64×9 weights = 147KB > cache → pipelined; ifmap 802KB → pipelined
+        let w = lsus.iter().find(|l| l.buffer == "weights").unwrap();
+        assert_eq!(w.kind, LsuKind::Pipelined);
+    }
+
+    #[test]
+    fn small_weights_get_cached() {
+        let g = models::lenet5();
+        let c1 = &g.nodes[1];
+        let nest = texpr::lower(c1, &g.nodes[0].shape);
+        let lsus = infer(&nest);
+        let w = lsus.iter().find(|l| l.buffer == "weights").unwrap();
+        assert_eq!(w.kind, LsuKind::Cached); // 156 params → 624 B
+    }
+
+    #[test]
+    fn unrolled_consecutive_becomes_burst_coalesced() {
+        let mut nest = resnet_conv3x3_nest();
+        let mut s = Scheduler::new(&mut nest);
+        s.cache_write().unwrap();
+        s.tile_and_unroll(LoopVar::InC, 16).unwrap();
+        let lsus = infer(&nest);
+        let w = lsus.iter().find(|l| l.buffer == "weights").unwrap();
+        assert_eq!(w.kind, LsuKind::BurstCoalesced);
+        assert_eq!(w.width_bytes, 64);
+    }
+
+    #[test]
+    fn unrolled_windowed_replicates() {
+        let g = models::resnet34();
+        let c1 = &g.nodes[1]; // 7×7 s2 → Windowed ifmap
+        let mut nest = texpr::lower(c1, &g.nodes[0].shape);
+        let mut s = Scheduler::new(&mut nest);
+        s.tile_and_unroll(LoopVar::KW, 7).unwrap();
+        let lsus = infer(&nest);
+        let i = lsus.iter().find(|l| l.buffer == "ifmap").unwrap();
+        assert_eq!(i.kind, LsuKind::Replicated);
+        assert_eq!(i.count, 7);
+        assert!(i.stall_factor > 8.0);
+    }
+
+    #[test]
+    fn replication_cost_scales_with_count() {
+        let a = cost(&[Lsu { buffer: "x".into(), kind: LsuKind::Replicated, dir: Dir::Read, width_bytes: 4, count: 4, stall_factor: 16.0 }]);
+        let b = cost(&[Lsu { buffer: "x".into(), kind: LsuKind::Replicated, dir: Dir::Read, width_bytes: 4, count: 16, stall_factor: 16.0 }]);
+        assert!(b.aluts == 4 * a.aluts);
+        assert!(b.bram_blocks == 4 * a.bram_blocks);
+    }
+
+    #[test]
+    fn channelized_kernel_has_no_lsus() {
+        let mut nest = resnet_conv3x3_nest();
+        let mut s = Scheduler::new(&mut nest);
+        s.channelize("ifmap");
+        s.channelize("ofmap");
+        s.cache_read("weights").unwrap();
+        assert!(infer(&nest).is_empty());
+    }
+}

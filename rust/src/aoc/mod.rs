@@ -1,0 +1,16 @@
+//! The "Intel AOC compiler" model (§II-B): given generated OpenCL-like
+//! kernels, infer LSUs, analyze loop pipelining (II), estimate resources
+//! and predict routing/f_max — everything the paper's flow gets back from
+//! `aoc` + Quartus place-and-route, at zero hours instead of 3–12 (§IV-J).
+
+pub mod fmax;
+pub mod lsu;
+pub mod pipeline;
+pub mod report;
+pub mod resources;
+
+pub use fmax::{FmaxModel, RouteResult};
+pub use lsu::{Lsu, LsuKind};
+pub use pipeline::PipelineReport;
+pub use report::{synthesize, SynthesisReport};
+pub use resources::{KernelResources, ProgramResources};

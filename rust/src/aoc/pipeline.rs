@@ -1,0 +1,110 @@
+//! Loop-pipelining analysis: initiation interval (II) per kernel.
+//!
+//! AOC pipelines the innermost loop body; the achievable II is set by the
+//! longest loop-carried dependence. The paper's pathologies (§IV):
+//!
+//! * global-memory accumulation (read-modify-write) carries the dependence
+//!   through the external memory system — the load-use distance stalls the
+//!   pipeline hard;
+//! * even a private fp32 accumulator carries an ~8-cycle adder-latency
+//!   RAW unless `-fp-relaxed` lets AOC build a reduction tree (OF, §IV-I);
+//! * the separate activation loop (unfused) blocks pipelining across the
+//!   producer/consumer pair entirely — it runs as a second pass.
+
+
+use crate::schedule::{AppliedOpts, OptKind};
+use crate::texpr::{Dir, LoopNest, MemSpace};
+
+/// fp32 accumulator latency on S10 without relaxed ordering.
+pub const FP_ACC_LATENCY: u64 = 8;
+/// Effective loop-carried II of a global read-modify-write accumulation:
+/// the LSU's store-to-load forwarding keeps the dependence at II≈1; the
+/// real damage shows up as doubled LSU occupancy + traffic (memory model).
+pub const GLOBAL_RMW_II: u64 = 1;
+
+/// Pipelining report for one kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineReport {
+    /// Initiation interval of the reduction loop.
+    pub ii: u64,
+    /// True when the epilogue runs as a separate (second) pass over the
+    /// output — costs an extra `out_elems` cycles plus its own LSUs.
+    pub separate_pass: bool,
+}
+
+/// Analyze the initiation interval of a scheduled nest.
+pub fn analyze(nest: &LoopNest, opts: &AppliedOpts) -> PipelineReport {
+    let has_reduction = nest.reduction_size > 1 && nest.macs_per_iter > 0;
+    let ii = if !has_reduction {
+        1
+    } else if nest.accum_space == MemSpace::Global
+        || nest.accesses.iter().any(|a| a.dir == Dir::ReadWrite && a.space == MemSpace::Global)
+    {
+        GLOBAL_RMW_II
+    } else if opts.contains(OptKind::FloatOpt) {
+        // -fp-relaxed: reduction tree / fused FMAC chain → II = 1.
+        1
+    } else {
+        // Private register accumulation, strict fp order.
+        FP_ACC_LATENCY
+    };
+    PipelineReport { ii, separate_pass: nest.separate_epilogue }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::schedule::Scheduler;
+    use crate::texpr;
+
+    fn nest() -> texpr::LoopNest {
+        let g = models::lenet5();
+        texpr::lower(&g.nodes[1], &g.nodes[0].shape)
+    }
+
+    #[test]
+    fn naive_nest_has_global_rmw_ii() {
+        let n = nest();
+        let r = analyze(&n, &AppliedOpts::default());
+        assert_eq!(r.ii, GLOBAL_RMW_II);
+        assert!(r.separate_pass);
+    }
+
+    #[test]
+    fn cached_write_without_of_pays_fp_latency() {
+        let mut n = nest();
+        let mut s = Scheduler::new(&mut n);
+        s.cache_write().unwrap();
+        let applied = s.finish();
+        let r = analyze(&n, &applied);
+        assert_eq!(r.ii, FP_ACC_LATENCY);
+    }
+
+    #[test]
+    fn cached_write_plus_float_opt_reaches_ii_1() {
+        let mut n = nest();
+        let mut s = Scheduler::new(&mut n);
+        s.cache_write().unwrap();
+        s.applied.record(OptKind::FloatOpt);
+        let applied = s.finish();
+        assert_eq!(analyze(&n, &applied).ii, 1);
+    }
+
+    #[test]
+    fn elementwise_kernels_pipeline_at_ii_1() {
+        let g = models::mobilenet_v1();
+        let bn = g.nodes.iter().find(|n| n.name == "conv1.bn").unwrap();
+        let n = texpr::lower(bn, &g.nodes[bn.inputs[0]].shape);
+        assert_eq!(analyze(&n, &AppliedOpts::default()).ii, 1);
+    }
+
+    #[test]
+    fn fusing_clears_separate_pass() {
+        let mut n = nest();
+        let mut s = Scheduler::new(&mut n);
+        s.fuse_epilogue().unwrap();
+        let applied = s.finish();
+        assert!(!analyze(&n, &applied).separate_pass);
+    }
+}

@@ -1,0 +1,83 @@
+//! Synthesis report (the Quartus area-report analog; rows of Table II).
+
+
+use crate::aoc::fmax::{self, FmaxModel, RouteResult};
+use crate::aoc::lsu;
+use crate::aoc::resources::{self, ProgramResources};
+use crate::codegen::KernelProgram;
+use crate::device::FpgaDevice;
+
+/// Full synthesis outcome for a program on a device.
+#[derive(Debug, Clone)]
+pub struct SynthesisReport {
+    pub program: String,
+    pub device: String,
+    pub resources: ProgramResources,
+    pub fmax_mhz: f64,
+    pub routed: bool,
+    /// Widest LSU in the design (fanout/congestion driver).
+    pub max_lsu_width_bytes: u64,
+}
+
+impl SynthesisReport {
+    /// Table II row: `Logic (%) | BRAM (%) | DSP (%) | fmax`.
+    pub fn table2_row(&self) -> (f64, f64, f64, f64) {
+        (
+            self.resources.utilization.logic_frac * 100.0,
+            self.resources.utilization.bram_frac * 100.0,
+            self.resources.utilization.dsp_frac * 100.0,
+            self.fmax_mhz,
+        )
+    }
+}
+
+/// Synthesize: estimate resources, predict routing/f_max.
+pub fn synthesize(
+    prog: &KernelProgram,
+    dev: &FpgaDevice,
+    model: &FmaxModel,
+) -> crate::Result<SynthesisReport> {
+    let res = resources::program_resources(prog, dev);
+    let max_lsu = prog
+        .kernels
+        .iter()
+        .flat_map(|k| lsu::infer(&k.nest))
+        .map(|l| l.width_bytes)
+        .max()
+        .unwrap_or(0);
+    match fmax::predict(model, &res.utilization, max_lsu) {
+        RouteResult::Routed(f) => Ok(SynthesisReport {
+            program: prog.name.clone(),
+            device: dev.name.clone(),
+            resources: res,
+            fmax_mhz: f,
+            routed: true,
+            max_lsu_width_bytes: max_lsu,
+        }),
+        RouteResult::RoutingFailure => Err(anyhow::anyhow!(
+            "routing failure: design for '{}' exceeds device capacity/congestion \
+             (logic {:.0}%, bram {:.0}%, dsp {:.0}%)",
+            prog.name,
+            res.utilization.logic_frac * 100.0,
+            res.utilization.bram_frac * 100.0,
+            res.utilization.dsp_frac * 100.0
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_program_synthesizes_at_shell() {
+        let prog = KernelProgram { name: "empty".into(), kernels: vec![], channels: vec![], queues: 1 };
+        let dev = FpgaDevice::stratix10sx();
+        let rep = synthesize(&prog, &dev, &FmaxModel::default()).unwrap();
+        assert!(rep.routed);
+        assert!(rep.fmax_mhz > 200.0);
+        let (logic, _, dsp, _) = rep.table2_row();
+        assert!(logic > 10.0 && logic < 15.0); // shell only
+        assert_eq!(dsp, 0.0);
+    }
+}

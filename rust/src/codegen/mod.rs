@@ -1,0 +1,244 @@
+//! OpenCL-like kernel IR and pseudo-OpenCL source emission.
+//!
+//! The flow maps graph nodes onto kernels — one per layer in pipelined
+//! mode, one per (filter, stride) group in folded mode (§III, §IV-H) —
+//! then the AOC model (`crate::aoc`) analyzes these kernels exactly the way
+//! Intel's offline compiler analyzes real OpenCL kernels.
+
+
+use crate::graph::ParamGroup;
+use crate::schedule::AppliedOpts;
+use crate::texpr::{LoopNest, MemSpace};
+
+/// A channel (kernel-to-kernel FIFO) connection, §IV-E.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Channel {
+    pub name: String,
+    pub from_kernel: usize,
+    pub to_kernel: usize,
+    /// FIFO depth in elements (user-specified; must cover the largest
+    /// feature map for buffered channels, §IV-J).
+    pub depth: u64,
+}
+
+/// One generated OpenCL kernel.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub id: usize,
+    pub name: String,
+    pub nest: LoopNest,
+    pub applied: AppliedOpts,
+    /// Runs without host control (§IV-F). Requires no global args.
+    pub autorun: bool,
+    /// Which graph nodes this kernel executes (several in folded mode).
+    pub layers: Vec<usize>,
+    /// Parameterized-kernel group (folded mode only).
+    pub group: Option<ParamGroup>,
+    /// Host command queue index (one queue per kernel = CE, §IV-G).
+    pub queue: usize,
+}
+
+impl Kernel {
+    /// A kernel qualifies for autorun iff it has no global-memory accesses
+    /// (§IV-F: "Kernels that have no arguments (i.e., no accesses to global
+    /// memory) can be declared autorun").
+    pub fn autorun_eligible(&self) -> bool {
+        !self.nest.accesses.iter().any(|a| a.space == MemSpace::Global)
+    }
+
+    /// Number of distinct global buffers (→ kernel arguments).
+    pub fn global_args(&self) -> usize {
+        let mut bufs: Vec<&str> = self
+            .nest
+            .accesses
+            .iter()
+            .filter(|a| a.space == MemSpace::Global)
+            .map(|a| a.buffer.as_str())
+            .collect();
+        bufs.sort_unstable();
+        bufs.dedup();
+        bufs.len()
+    }
+}
+
+/// The complete generated accelerator program: kernels + channels.
+#[derive(Debug, Clone)]
+pub struct KernelProgram {
+    pub name: String,
+    pub kernels: Vec<Kernel>,
+    pub channels: Vec<Channel>,
+    /// Number of host command queues (1 = serialized; one per kernel = CE).
+    pub queues: usize,
+}
+
+impl KernelProgram {
+    pub fn kernel_by_layer(&self, node_id: usize) -> Option<&Kernel> {
+        self.kernels.iter().find(|k| k.layers.contains(&node_id))
+    }
+
+    pub fn autorun_count(&self) -> usize {
+        self.kernels.iter().filter(|k| k.autorun).count()
+    }
+
+    /// Emit human-readable pseudo-OpenCL for inspection / docs — the shape
+    /// of what TVM+our optimizations would hand to AOC.
+    pub fn to_pseudo_opencl(&self) -> String {
+        let mut out = String::new();
+        for ch in &self.channels {
+            out.push_str(&format!(
+                "channel float {} __attribute__((depth({})));\n",
+                ch.name, ch.depth
+            ));
+        }
+        if !self.channels.is_empty() {
+            out.push('\n');
+        }
+        for k in &self.kernels {
+            out.push_str(&render_kernel(k));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn render_kernel(k: &Kernel) -> String {
+    let mut s = String::new();
+    if k.autorun {
+        s.push_str("__attribute__((autorun))\n");
+    }
+    s.push_str("__kernel void ");
+    s.push_str(&k.name);
+    s.push('(');
+    let mut args: Vec<String> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for a in &k.nest.accesses {
+        if a.space == MemSpace::Global && seen.insert(a.buffer.clone()) {
+            args.push(format!("__global float* restrict {}", a.buffer));
+        }
+    }
+    for l in &k.nest.loops {
+        if l.dynamic {
+            args.push(format!("int n_{}", l.var.name()));
+        }
+    }
+    s.push_str(&args.join(", "));
+    s.push_str(") {\n");
+    let mut indent = 1usize;
+    for l in &k.nest.loops {
+        let pad = "  ".repeat(indent);
+        let extent = if l.dynamic {
+            format!("n_{}", l.var.name())
+        } else {
+            l.extent.to_string()
+        };
+        if l.unroll > 1 && l.unroll == l.extent && !l.dynamic {
+            s.push_str(&format!("{pad}#pragma unroll\n"));
+        } else if l.unroll > 1 {
+            s.push_str(&format!("{pad}#pragma unroll {}\n", l.unroll));
+        }
+        s.push_str(&format!(
+            "{pad}for (int {v} = 0; {v} < {extent}; ++{v}) {{\n",
+            v = l.var.name()
+        ));
+        indent += 1;
+    }
+    let pad = "  ".repeat(indent);
+    let acc = match k.nest.accum_space {
+        MemSpace::Private => "acc /*register*/",
+        MemSpace::Local => "acc_local[...]",
+        _ => "ofmap[...] /*global RMW*/",
+    };
+    if k.nest.macs_per_iter > 0 {
+        let in_src = k
+            .nest
+            .accesses
+            .iter()
+            .find(|a| a.buffer == "ifmap")
+            .map(|a| match a.space {
+                MemSpace::Channel => "read_channel_intel(ch_in)".to_string(),
+                MemSpace::Local => "ifmap_local[...]".to_string(),
+                _ => "ifmap[...]".to_string(),
+            })
+            .unwrap_or_else(|| "ifmap[...]".into());
+        s.push_str(&format!("{pad}{acc} += {in_src} * weights[...];\n"));
+    } else {
+        s.push_str(&format!("{pad}{acc} = reduce(ifmap[...]);\n"));
+    }
+    for _ in 0..k.nest.loops.len() {
+        indent -= 1;
+        s.push_str(&format!("{}}}\n", "  ".repeat(indent)));
+    }
+    if !k.nest.epilogue.is_empty() {
+        let where_ = if k.nest.separate_epilogue {
+            "/* SEPARATE loop (unfused): extra pass + temp array */"
+        } else {
+            "/* fused into reduction epilogue */"
+        };
+        s.push_str(&format!("  // epilogue: {:?} {}\n", k.nest.epilogue, where_));
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::schedule::Scheduler;
+    use crate::texpr;
+
+    fn kernel_for(node_idx: usize) -> Kernel {
+        let g = models::lenet5();
+        let n = &g.nodes[node_idx];
+        let nest = texpr::lower(n, &g.nodes[n.inputs[0]].shape);
+        Kernel {
+            id: 0,
+            name: nest.name.clone(),
+            nest,
+            applied: Default::default(),
+            autorun: false,
+            layers: vec![node_idx],
+            group: None,
+            queue: 0,
+        }
+    }
+
+    #[test]
+    fn global_args_counted_once() {
+        let k = kernel_for(1);
+        assert_eq!(k.global_args(), 3); // ifmap, weights, ofmap
+    }
+
+    #[test]
+    fn autorun_requires_no_global_access() {
+        let mut k = kernel_for(2); // avgpool
+        assert!(!k.autorun_eligible());
+        let mut s = Scheduler::new(&mut k.nest);
+        s.channelize("ifmap");
+        s.channelize("ofmap");
+        assert!(k.autorun_eligible());
+    }
+
+    #[test]
+    fn pseudo_opencl_contains_pragmas() {
+        let mut k = kernel_for(1);
+        let mut s = Scheduler::new(&mut k.nest);
+        s.unroll(crate::texpr::LoopVar::KW).unwrap();
+        let prog = KernelProgram { name: "t".into(), kernels: vec![k], channels: vec![], queues: 1 };
+        let src = prog.to_pseudo_opencl();
+        assert!(src.contains("#pragma unroll"));
+        assert!(src.contains("__kernel void"));
+        assert!(src.contains("__global float*"));
+    }
+
+    #[test]
+    fn channels_render_with_depth() {
+        let prog = KernelProgram {
+            name: "t".into(),
+            kernels: vec![],
+            channels: vec![Channel { name: "ch0".into(), from_kernel: 0, to_kernel: 1, depth: 256 }],
+            queues: 1,
+        };
+        assert!(prog.to_pseudo_opencl().contains("depth(256)"));
+    }
+}

@@ -1,0 +1,356 @@
+//! Inference coordinator: the "host program" of the paper's flow (§II-B)
+//! grown into a serving component — request router, dynamic batcher and
+//! command-queue workers over the PJRT runtime.
+//!
+//! OpenCL-host concepts map directly:
+//! * command queue → one single-threaded worker owning a PJRT client;
+//!   several workers = concurrent execution (CE, §IV-G), one = serialized;
+//! * dynamic batching → the batched (`b16`) executable when the queue has
+//!   enough pending frames, the `b1` executable otherwise;
+//! * kernel-launch overhead → per-dispatch cost the batcher amortizes
+//!   (the serving analog of autorun, §IV-F).
+//!
+//! Workers construct their own `Runtime` (PJRT client + weights) at spawn,
+//! so nothing `!Send` crosses threads.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencyStats;
+use crate::runtime::{Impl, Manifest, Runtime};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub network: String,
+    pub impl_: Impl,
+    /// Number of command-queue workers (1 = serialized, >1 = CE).
+    pub workers: usize,
+    /// Use the batched executable when this many frames are waiting.
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            network: "lenet5".into(),
+            impl_: Impl::Ref,
+            workers: 2,
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            artifacts_dir: Manifest::default_dir(),
+        }
+    }
+}
+
+/// One inference request.
+struct Request {
+    frame: Vec<f32>,
+    submitted: Instant,
+    resp: Sender<crate::Result<u32>>,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_frames: u64,
+    pub p50_us: Option<u64>,
+    pub p99_us: Option<u64>,
+    pub mean_us: Option<f64>,
+}
+
+struct Shared {
+    latency: Mutex<LatencyStats>,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batched_frames: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// A running inference server.
+pub struct InferenceServer {
+    req_tx: Sender<Request>,
+    shared: Arc<Shared>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Start the router + `cfg.workers` command-queue workers.
+    pub fn start(cfg: ServerConfig) -> crate::Result<InferenceServer> {
+        // Fail fast if artifacts are missing.
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        if manifest.network(&cfg.network).is_none() {
+            anyhow::bail!("network {} not in artifacts", cfg.network);
+        }
+
+        let shared = Arc::new(Shared {
+            latency: Mutex::new(LatencyStats::default()),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_frames: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+
+        // Worker channels: each worker owns its Runtime (one "queue").
+        let mut worker_txs: Vec<Sender<Vec<Request>>> = Vec::new();
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let (tx, rx): (Sender<Vec<Request>>, Receiver<Vec<Request>>) = channel();
+            worker_txs.push(tx);
+            let cfg2 = cfg.clone();
+            let shared2 = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("queue-{w}"))
+                    .spawn(move || worker_loop(cfg2, shared2, rx))
+                    .expect("spawn worker"),
+            );
+        }
+
+        // Dispatcher: router + dynamic batcher.
+        let (req_tx, req_rx) = channel::<Request>();
+        let cfg2 = cfg.clone();
+        let shared2 = Arc::clone(&shared);
+        let dispatcher = std::thread::Builder::new()
+            .name("router".into())
+            .spawn(move || dispatcher_loop(cfg2, shared2, req_rx, worker_txs))
+            .expect("spawn dispatcher");
+
+        Ok(InferenceServer { req_tx, shared, dispatcher: Some(dispatcher), workers })
+    }
+
+    /// Submit one frame; blocks until classified.
+    pub fn infer(&self, frame: Vec<f32>) -> crate::Result<u32> {
+        let (tx, rx) = channel();
+        self.req_tx
+            .send(Request { frame, submitted: Instant::now(), resp: tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    /// Submit asynchronously; returns the response channel.
+    pub fn infer_async(&self, frame: Vec<f32>) -> crate::Result<Receiver<crate::Result<u32>>> {
+        let (tx, rx) = channel();
+        self.req_tx
+            .send(Request { frame, submitted: Instant::now(), resp: tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        let lat = self.shared.latency.lock().unwrap();
+        StatsSnapshot {
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            batched_frames: self.shared.batched_frames.load(Ordering::Relaxed),
+            p50_us: lat.percentile(50.0),
+            p99_us: lat.percentile(99.0),
+            mean_us: lat.mean(),
+        }
+    }
+
+    /// Stop accepting work and join all threads.
+    pub fn shutdown(mut self) -> StatsSnapshot {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let stats = self.stats();
+        // Dropping req_tx disconnects the dispatcher, which drops worker
+        // channels, which stops workers.
+        drop(std::mem::replace(&mut self.req_tx, channel().0));
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        stats
+    }
+}
+
+fn dispatcher_loop(
+    cfg: ServerConfig,
+    shared: Arc<Shared>,
+    req_rx: Receiver<Request>,
+    worker_txs: Vec<Sender<Vec<Request>>>,
+) {
+    let mut next_worker = 0usize;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Block for the first request.
+        let first = match req_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        let mut batch = vec![first];
+        // Dynamic batching: fill up to max_batch within max_wait. Blocking
+        // recv_timeout instead of a try_recv+yield spin: on few-core hosts
+        // the spin steals cycles from the PJRT workers (§Perf L3 log).
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            match req_rx.try_recv() {
+                Ok(r) => {
+                    batch.push(r);
+                    continue;
+                }
+                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Empty) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match req_rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Round-robin across command queues.
+        let w = next_worker % worker_txs.len();
+        next_worker = next_worker.wrapping_add(1);
+        if worker_txs[w].send(batch).is_err() {
+            break;
+        }
+    }
+}
+
+fn worker_loop(cfg: ServerConfig, shared: Arc<Shared>, rx: Receiver<Vec<Request>>) {
+    // Each worker = one command queue with its own PJRT client.
+    let rt = match Runtime::new(&cfg.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("worker: runtime init failed: {e}");
+            return;
+        }
+    };
+    let b1 = rt.load(&cfg.network, cfg.impl_, 1);
+    let b16 = rt.load(&cfg.network, cfg.impl_, cfg.max_batch).ok();
+    let b1 = match b1 {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("worker: load failed: {e}");
+            return;
+        }
+    };
+    let frame_elems = b1.frame_elems();
+
+    while let Ok(batch) = rx.recv() {
+        let use_batched = b16.as_ref().filter(|_| batch.len() > 1).is_some();
+        if use_batched {
+            let model = b16.as_ref().unwrap();
+            // Pad to the executable's fixed batch with zero frames.
+            let mut frames = vec![0f32; cfg.max_batch * frame_elems];
+            for (i, r) in batch.iter().enumerate() {
+                frames[i * frame_elems..(i + 1) * frame_elems].copy_from_slice(&r.frame);
+            }
+            let result = model.classify(&rt.client, &frames);
+            shared.batches.fetch_add(1, Ordering::Relaxed);
+            shared.batched_frames.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            match result {
+                Ok(preds) => {
+                    for (r, &p) in batch.iter().zip(&preds) {
+                        finish(&shared, r, Ok(p));
+                    }
+                }
+                Err(e) => {
+                    for r in &batch {
+                        finish(&shared, r, Err(anyhow::anyhow!("{e}")));
+                    }
+                }
+            }
+        } else {
+            for r in &batch {
+                let result = b1
+                    .classify(&rt.client, &r.frame)
+                    .map(|p| p.first().copied().unwrap_or(0));
+                shared.batches.fetch_add(1, Ordering::Relaxed);
+                finish(&shared, r, result);
+            }
+        }
+    }
+}
+
+fn finish(shared: &Shared, req: &Request, result: crate::Result<u32>) {
+    let us = req.submitted.elapsed().as_micros() as u64;
+    shared.latency.lock().unwrap().record(us);
+    shared.completed.fetch_add(1, Ordering::Relaxed);
+    let _ = req.resp.send(result);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn serves_requests_and_batches() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let server = InferenceServer::start(ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        })
+        .unwrap();
+        let data = crate::data::mnist_like(32, 32, 9);
+        // Async burst to give the batcher something to coalesce.
+        let rxs: Vec<_> = (0..32)
+            .map(|i| server.infer_async(data.frame(i).to_vec()).unwrap())
+            .collect();
+        for rx in rxs {
+            let pred = rx.recv().unwrap().unwrap();
+            assert!(pred < 10);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 32);
+        assert!(stats.p50_us.is_some());
+        // The burst must have produced at least one multi-frame batch.
+        assert!(stats.batched_frames >= 2, "{stats:?}");
+    }
+
+    #[test]
+    fn single_worker_serializes_like_one_queue() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let server = InferenceServer::start(ServerConfig {
+            workers: 1,
+            max_batch: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let data = crate::data::mnist_like(4, 32, 10);
+        for i in 0..4 {
+            assert!(server.infer(data.frame(i).to_vec()).unwrap() < 10);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.batched_frames, 0);
+    }
+
+    #[test]
+    fn bad_network_fails_fast() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let r = InferenceServer::start(ServerConfig { network: "vgg16".into(), ..Default::default() });
+        assert!(r.is_err());
+    }
+}

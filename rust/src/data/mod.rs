@@ -1,0 +1,115 @@
+//! Synthetic dataset generation (the paper classifies MNIST / ImageNet;
+//! throughput is value-independent, so deterministic synthetic frames
+//! exercise the identical code path — DESIGN.md §Substitutions).
+
+use crate::util::rng::Rng;
+
+/// A batch of NCHW fp32 frames + synthetic labels.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub data: Vec<f32>,
+    pub shape: (usize, usize, usize, usize),
+    pub labels: Vec<u32>,
+}
+
+impl Batch {
+    pub fn frames(&self) -> usize {
+        self.shape.0
+    }
+
+    pub fn frame_elems(&self) -> usize {
+        self.shape.1 * self.shape.2 * self.shape.3
+    }
+
+    pub fn frame(&self, i: usize) -> &[f32] {
+        let n = self.frame_elems();
+        &self.data[i * n..(i + 1) * n]
+    }
+}
+
+/// MNIST-like frames: a bright digit-ish stroke pattern per class on a dark
+/// background, plus noise — deterministic per (seed, index).
+pub fn mnist_like(n: usize, hw: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0f32; n * hw * hw];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = (rng.below(10)) as u32;
+        labels.push(class);
+        let frame = &mut data[i * hw * hw..(i + 1) * hw * hw];
+        // noise floor
+        for v in frame.iter_mut() {
+            *v = rng.f32() * 0.1;
+        }
+        // class-dependent stroke: a line whose angle/offset encodes class
+        let off = 4 + (class as usize) % (hw / 2);
+        for y in 2..hw - 2 {
+            let x = (off + y * (1 + class as usize % 3)) % (hw - 2);
+            frame[y * hw + x] = 0.9 + rng.f32() * 0.1;
+            frame[y * hw + x + 1] = 0.7;
+        }
+    }
+    Batch { data, shape: (n, 1, hw, hw), labels }
+}
+
+/// ImageNet-like frames: 3-channel noise with per-class channel bias.
+pub fn imagenet_like(n: usize, hw: usize, classes: u32, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let c = 3usize;
+    let mut data = vec![0f32; n * c * hw * hw];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = rng.below(classes as u64) as u32;
+        labels.push(class);
+        for ch in 0..c {
+            let bias = ((class as usize + ch) % 7) as f32 * 0.1;
+            let frame = &mut data[(i * c + ch) * hw * hw..(i * c + ch + 1) * hw * hw];
+            for v in frame.iter_mut() {
+                *v = rng.normal() * 0.5 + bias;
+            }
+        }
+    }
+    Batch { data, shape: (n, c, hw, hw), labels }
+}
+
+/// Inputs matching a network's expected shape (mirrors
+/// `python/compile/model.py::make_inputs` shapes, not values).
+pub fn for_network(net: &str, frames: usize, seed: u64) -> Option<Batch> {
+    match net {
+        "lenet5" => Some(mnist_like(frames, 32, seed)),
+        "mobilenet_v1" | "resnet34" => Some(imagenet_like(frames, 224, 1000, seed)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = mnist_like(4, 32, 7);
+        let b = mnist_like(4, 32, 7);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.labels, b.labels);
+        let c = mnist_like(4, 32, 8);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn shapes() {
+        let b = for_network("lenet5", 3, 0).unwrap();
+        assert_eq!(b.shape, (3, 1, 32, 32));
+        assert_eq!(b.frame(2).len(), 1024);
+        let b = for_network("resnet34", 2, 0).unwrap();
+        assert_eq!(b.shape, (2, 3, 224, 224));
+        assert!(for_network("vgg", 1, 0).is_none());
+    }
+
+    #[test]
+    fn values_bounded() {
+        let b = mnist_like(8, 32, 1);
+        assert!(b.data.iter().all(|v| (0.0..=1.1).contains(v)));
+        assert!(b.labels.iter().all(|&l| l < 10));
+    }
+}

@@ -1,0 +1,164 @@
+//! Device models: the Stratix 10SX D5005 PAC the paper targets (§V-B) plus
+//! throughput models for the baseline platforms of Table V.
+//!
+//! The FPGA numbers are the published device capacities the paper quotes:
+//! "over 1.6M ALUTs, 3.4M FFs, 5.7K DSPs and 11M bits of on-chip RAM …
+//! 32GB of external DDR4 arranged in 4 banks, with a theoretical peak
+//! bandwidth of 76.8GB/s".
+
+
+/// An FPGA device resource envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FpgaDevice {
+    pub name: String,
+    /// Adaptive lookup tables.
+    pub aluts: u64,
+    /// Flip-flops.
+    pub ffs: u64,
+    /// Hard floating-point DSP blocks (1 fp32 FMAC per DSP per cycle on S10).
+    pub dsps: u64,
+    /// On-chip RAM capacity in bits (M20K fabric).
+    pub bram_bits: u64,
+    /// Size of one BRAM block in bits (M20K = 20 Kb).
+    pub bram_block_bits: u64,
+    /// External memory theoretical peak bandwidth, bytes/second.
+    pub ext_bw_bytes_per_s: f64,
+    /// Number of external memory banks.
+    pub ext_banks: u32,
+    /// Baseline OpenCL shell clock the AOC model degrades from, MHz.
+    pub base_clock_mhz: f64,
+    /// Fraction of the device consumed by the board shell/BSP logic.
+    pub shell_overhead_frac: f64,
+}
+
+impl FpgaDevice {
+    /// The paper's target: Intel Stratix 10SX 1SX280HN2F43E2VG on a D5005 PAC.
+    pub fn stratix10sx() -> Self {
+        FpgaDevice {
+            name: "Stratix 10SX D5005 (1SX280HN2F43E2VG)".into(),
+            aluts: 1_866_240,
+            ffs: 3_732_480,
+            dsps: 5_760,
+            // 229 Mb of M20K (the paper's "11M bits" rounds the 11,721
+            // M20K block count; utilization is reported against blocks).
+            bram_bits: 11_721 * 20 * 1024,
+            bram_block_bits: 20 * 1024,
+            ext_bw_bytes_per_s: 76.8e9,
+            ext_banks: 4,
+            base_clock_mhz: 240.0,
+            shell_overhead_frac: 0.12,
+        }
+    }
+
+    /// Total number of BRAM blocks.
+    pub fn bram_blocks(&self) -> u64 {
+        self.bram_bits / self.bram_block_bits
+    }
+
+    /// Peak external-memory floats per cycle at a given clock — the
+    /// paper's §IV-J rule-1 bandwidth roof ("approximately 76 floats" at
+    /// 250 MHz on this device).
+    pub fn bw_floats_per_cycle(&self, clock_mhz: f64) -> f64 {
+        self.ext_bw_bytes_per_s / (clock_mhz * 1e6) / 4.0
+    }
+}
+
+/// Utilization of a synthesized design against a device.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Utilization {
+    pub logic_frac: f64,
+    pub bram_frac: f64,
+    pub dsp_frac: f64,
+    pub ff_frac: f64,
+}
+
+impl Utilization {
+    /// True when every resource fits on the device (routing headroom is
+    /// modeled separately in `aoc::fmax`).
+    pub fn fits(&self) -> bool {
+        self.logic_frac <= 1.0
+            && self.bram_frac <= 1.0
+            && self.dsp_frac <= 1.0
+            && self.ff_frac <= 1.0
+    }
+
+    /// Largest single resource fraction — drives routing congestion.
+    pub fn max_frac(&self) -> f64 {
+        self.logic_frac
+            .max(self.bram_frac)
+            .max(self.dsp_frac)
+            .max(self.ff_frac)
+    }
+}
+
+/// Calibrated throughput models for the comparison platforms of Table V.
+/// The CPU columns are *measured* on this host through the PJRT runtime
+/// (see `runtime`); these constants model the platforms we do not have
+/// (56-thread Xeon 8280 scaling, GTX 1060 + cuDNN) so `bench table5` can
+/// print the full table. Each value is FPS for batch-1 inference.
+#[derive(Debug, Clone)]
+pub struct BaselineModel {
+    /// Parallel-scaling efficiency when going from 1 to `n` CPU threads:
+    /// FPS(n) = FPS(1) * n * efficiency(net). Small nets scale poorly
+    /// (per-op launch overhead dominates) — the paper sees LeNet-5 *lose*
+    /// throughput from 1t to 56t (2345 → 1470).
+    pub cpu_thread_efficiency_small: f64,
+    pub cpu_thread_efficiency_large: f64,
+    /// GTX 1060 sustained fp32 throughput fraction of its 4.4 TFLOPS peak
+    /// for batch-1 CNN inference (cuDNN, no batching — heavily underutilized
+    /// for small nets, which is why the paper's FPGA beats it on LeNet-5).
+    pub gpu_peak_flops: f64,
+    pub gpu_eff_small: f64,
+    pub gpu_eff_large: f64,
+}
+
+impl Default for BaselineModel {
+    fn default() -> Self {
+        BaselineModel {
+            cpu_thread_efficiency_small: 0.011,
+            cpu_thread_efficiency_large: 0.20,
+            gpu_peak_flops: 4.4e12,
+            gpu_eff_small: 0.00028,
+            gpu_eff_large: 0.011,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s10sx_capacities_match_paper() {
+        let d = FpgaDevice::stratix10sx();
+        assert!(d.aluts > 1_600_000, "paper: over 1.6M ALUTs");
+        assert!(d.ffs > 3_400_000, "paper: 3.4M FFs");
+        assert_eq!(d.dsps, 5_760, "paper: 5.7K DSPs");
+        assert_eq!(d.ext_banks, 4);
+        assert!((d.ext_bw_bytes_per_s - 76.8e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn bandwidth_roof_is_about_76_floats_at_250mhz() {
+        // §IV-J rule 1: "Assuming a 250 MHz operating frequency, this can
+        // support 307.2 bytes/cycle, which is approximately 76 floats."
+        let d = FpgaDevice::stratix10sx();
+        let floats = d.bw_floats_per_cycle(250.0);
+        assert!((floats - 76.8).abs() < 1.0, "{floats}");
+    }
+
+    #[test]
+    fn utilization_fits() {
+        let u = Utilization { logic_frac: 0.59, bram_frac: 0.61, dsp_frac: 0.16, ff_frac: 0.3 };
+        assert!(u.fits());
+        assert!((u.max_frac() - 0.61).abs() < 1e-12);
+        let over = Utilization { logic_frac: 1.01, ..u };
+        assert!(!over.fits());
+    }
+
+    #[test]
+    fn bram_blocks_m20k() {
+        let d = FpgaDevice::stratix10sx();
+        assert_eq!(d.bram_blocks(), 11_721);
+    }
+}

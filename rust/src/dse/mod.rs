@@ -1,0 +1,180 @@
+//! Design-space explorer over unroll/tile factors — the automation the
+//! paper leaves to future work (§IV-J: "we manually sweep through several
+//! parameter values … Ideally, a design space explorer (DSE) can be
+//! developed to automate this process").
+//!
+//! The explorer sweeps candidate (t_ic, t_oc) tiles per parameterized
+//! group (folded) or per-kernel unroll caps (pipelined), applies the three
+//! §IV-J legality rules through the normal flow, and keeps the best
+//! simulated-FPS design. Because our "synthesis" is a model, a full sweep
+//! takes milliseconds where the paper's Quartus runs took 3–12 hours per
+//! point.
+
+use crate::flow::{patterns::FactorPlan, Flow, Mode, OptConfig};
+use crate::graph::{Graph, ParamGroup};
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub plan: FactorPlan,
+    pub fps: f64,
+    pub fmax_mhz: f64,
+    pub dsp_frac: f64,
+    pub logic_frac: f64,
+    pub bram_frac: f64,
+    /// None = synthesized; Some(reason) = rejected.
+    pub rejected: Option<String>,
+}
+
+/// Exploration result: best design + full log.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub best: Option<DsePoint>,
+    pub log: Vec<DsePoint>,
+    pub evaluated: usize,
+}
+
+/// Candidate per-dimension tile factors (powers of two are router-friendly
+/// and divide the evaluation networks' channel counts).
+pub const TILE_CANDIDATES: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Sweep folded-mode tiles for every parameterized group, one group at a
+/// time (coordinate descent: groups are resource-coupled but the paper's
+/// manual sweep treats them independently too).
+pub fn explore_folded(flow: &Flow, graph: &Graph, budget_per_group: usize) -> DseResult {
+    let base_plan = crate::flow::default_factors(graph);
+    let groups: Vec<ParamGroup> = base_plan.group_tiles.keys().copied().collect();
+
+    let mut best_plan = base_plan.clone();
+    let mut log = Vec::new();
+    let mut evaluated = 0;
+    let mut best_fps = eval(flow, graph, Mode::Folded, &best_plan, &mut log, &mut evaluated);
+
+    for g in &groups {
+        let mut candidates: Vec<(u64, u64)> = Vec::new();
+        for &a in &TILE_CANDIDATES {
+            for &b in &TILE_CANDIDATES {
+                candidates.push((a, b));
+            }
+        }
+        candidates.truncate(budget_per_group.max(1));
+        for (t_ic, t_oc) in candidates {
+            let mut plan = best_plan.clone();
+            plan.group_tiles.insert(*g, (t_ic, t_oc));
+            let fps = eval(flow, graph, Mode::Folded, &plan, &mut log, &mut evaluated);
+            if fps > best_fps {
+                best_fps = fps;
+                best_plan = plan;
+            }
+        }
+    }
+
+    let best = log
+        .iter()
+        .filter(|p| p.rejected.is_none())
+        .max_by(|a, b| a.fps.total_cmp(&b.fps))
+        .cloned();
+    DseResult { best, log, evaluated }
+}
+
+/// Sweep pipelined unroll caps.
+pub fn explore_pipelined(flow: &Flow, graph: &Graph) -> DseResult {
+    let mut log = Vec::new();
+    let mut evaluated = 0;
+    for cap in [16u64, 32, 64, 128, 256, 512, 1024] {
+        let mut plan = crate::flow::default_factors(graph);
+        plan.pipelined_cap = cap;
+        eval(flow, graph, Mode::Pipelined, &plan, &mut log, &mut evaluated);
+    }
+    let best = log
+        .iter()
+        .filter(|p| p.rejected.is_none())
+        .max_by(|a, b| a.fps.total_cmp(&b.fps))
+        .cloned();
+    DseResult { best, log, evaluated }
+}
+
+fn eval(
+    flow: &Flow,
+    graph: &Graph,
+    mode: Mode,
+    plan: &FactorPlan,
+    log: &mut Vec<DsePoint>,
+    evaluated: &mut usize,
+) -> f64 {
+    *evaluated += 1;
+    match flow.compile_with(graph, mode, &OptConfig::optimized(), plan) {
+        Ok(acc) => {
+            let u = &acc.synthesis.resources.utilization;
+            let fps = acc.performance.fps;
+            log.push(DsePoint {
+                plan: plan.clone(),
+                fps,
+                fmax_mhz: acc.synthesis.fmax_mhz,
+                dsp_frac: u.dsp_frac,
+                logic_frac: u.logic_frac,
+                bram_frac: u.bram_frac,
+                rejected: None,
+            });
+            fps
+        }
+        Err(e) => {
+            log.push(DsePoint {
+                plan: plan.clone(),
+                fps: 0.0,
+                fmax_mhz: 0.0,
+                dsp_frac: 0.0,
+                logic_frac: 0.0,
+                bram_frac: 0.0,
+                rejected: Some(e.to_string()),
+            });
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn pipelined_dse_finds_a_design() {
+        let flow = Flow::new();
+        let r = explore_pipelined(&flow, &models::lenet5());
+        let best = r.best.expect("some design routes");
+        assert!(best.fps > 1000.0);
+        assert!(r.evaluated >= 7);
+    }
+
+    #[test]
+    fn folded_dse_improves_or_matches_default() {
+        let flow = Flow::new();
+        let g = models::mobilenet_v1();
+        let default_fps = flow
+            .compile(&g, Mode::Folded, crate::flow::OptLevel::Optimized)
+            .unwrap()
+            .performance
+            .fps;
+        let r = explore_folded(&flow, &g, 12);
+        let best = r.best.expect("best exists");
+        assert!(best.fps >= default_fps * 0.99, "dse {} vs default {}", best.fps, default_fps);
+    }
+
+    #[test]
+    fn dse_log_contains_rejections_for_huge_tiles() {
+        // Force an oversized sweep on ResNet: 64×64 tiles on the 3×3 group
+        // would be 36K lanes — must be rejected (rule 3 / routing).
+        let flow = Flow::new();
+        let g = models::resnet34();
+        let mut plan = crate::flow::default_factors(&g);
+        for (_, t) in plan.group_tiles.iter_mut() {
+            *t = (64, 64);
+        }
+        let mut log = Vec::new();
+        let mut n = 0;
+        let fps = eval(&flow, &g, Mode::Folded, &plan, &mut log, &mut n);
+        assert_eq!(fps, 0.0);
+        assert!(log[0].rejected.is_some());
+    }
+}

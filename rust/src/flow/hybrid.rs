@@ -1,0 +1,217 @@
+//! Mixed pipelined/folded deployment — the paper's §V-F mitigation
+//! ("exploring deployments that use a mix of pipelined and folded
+//! execution") and §III's observation that a fully-pipelined large network
+//! cannot hold all activations on chip.
+//!
+//! The graph is cut at a topological point: the *front* (large feature
+//! maps, small channel counts — where global round-trips hurt most) runs
+//! pipelined with channels; the *back* runs folded with parameterized
+//! kernels. The two sections decouple through a global-memory staging
+//! buffer, so steady-state throughput is `1 / max(front interval, back
+//! frame time)` while both sections must co-reside on the device.
+
+use crate::aoc::{self, SynthesisReport};
+use crate::graph::{Graph, GraphBuilder, Op, Shape};
+use crate::sim::{folded, pipelined};
+
+use super::patterns::{self, FactorPlan, OptConfig};
+use super::Flow;
+
+/// A compiled hybrid deployment.
+#[derive(Debug, Clone)]
+pub struct HybridAccelerator {
+    pub network: String,
+    /// Number of graph nodes executed pipelined (prefix length).
+    pub cut: usize,
+    pub fps: f64,
+    pub front_interval_s: f64,
+    pub back_time_s: f64,
+    pub synthesis: SynthesisReport,
+}
+
+/// Candidate cut points: after each spatial-reduction node (pool or
+/// strided conv) the feature map shrinks — natural staging boundaries.
+pub fn cut_points(graph: &Graph) -> Vec<usize> {
+    let mut cuts = Vec::new();
+    for n in graph.topo() {
+        let shrinks = match n.op {
+            Op::MaxPool { stride, .. } | Op::AvgPool { stride, .. } => stride > 1,
+            Op::Conv2d { stride, .. } | Op::DepthwiseConv2d { stride, .. } => stride > 1,
+            _ => false,
+        };
+        // Only cut on the linear spine (single consumer) to keep both
+        // sections well-formed.
+        if shrinks && n.id + 1 < graph.nodes.len() {
+            cuts.push(n.id + 1);
+        }
+    }
+    cuts
+}
+
+/// Split `graph` into a front prefix `[0, cut)` + back suffix; the back
+/// gets a fresh Input node shaped like the cut tensor. Returns None when
+/// the cut crosses a residual edge (not a clean frontier).
+pub fn split(graph: &Graph, cut: usize) -> Option<(Graph, Graph)> {
+    if cut == 0 || cut >= graph.nodes.len() {
+        return None;
+    }
+    // Frontier must be exactly one value: the output of node cut-1, and no
+    // back node may read any front node other than cut-1.
+    for n in &graph.nodes[cut..] {
+        for &i in &n.inputs {
+            if i < cut && i != cut - 1 {
+                return None;
+            }
+        }
+    }
+
+    let front = rebuild_range(graph, 0, cut, None)?;
+    let boundary_shape = graph.nodes[cut - 1].shape.clone();
+    let back = rebuild_range(graph, cut, graph.nodes.len(), Some(boundary_shape))?;
+    Some((front, back))
+}
+
+fn rebuild_range(graph: &Graph, lo: usize, hi: usize, input_shape: Option<Shape>) -> Option<Graph> {
+    let mut map: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+    let mut b: Option<GraphBuilder> = None;
+    if let Some(shape) = input_shape {
+        let (builder, id) = GraphBuilder::new(format!("{}_part", graph.name), shape);
+        b = Some(builder);
+        if lo > 0 {
+            map[lo - 1] = Some(id);
+        }
+    }
+    let mut last = 0usize;
+    for node in &graph.nodes[lo..hi] {
+        match node.op {
+            Op::Input => {
+                let (builder, id) = GraphBuilder::new(format!("{}_part", graph.name), node.shape.clone());
+                b = Some(builder);
+                map[node.id] = Some(id);
+            }
+            _ => {
+                let builder = b.as_mut()?;
+                let inputs: Vec<usize> = node.inputs.iter().map(|&i| map[i]).collect::<Option<_>>()?;
+                let id = builder.add(node.name.clone(), node.op.clone(), &inputs);
+                map[node.id] = Some(id);
+            }
+        }
+        last = map[node.id]?;
+    }
+    let g = b?.finish(last);
+    g.validate().ok()?;
+    Some(g)
+}
+
+
+impl Flow {
+    /// Compile a hybrid deployment with an explicit cut.
+    pub fn compile_hybrid(
+        &self,
+        graph: &Graph,
+        cut: usize,
+        cfg: &OptConfig,
+        plan: &FactorPlan,
+    ) -> crate::Result<HybridAccelerator> {
+        let (front_g, back_g) =
+            split(graph, cut).ok_or_else(|| anyhow::anyhow!("cut {cut} is not a clean frontier"))?;
+
+        let (front_prog, _front_work) = patterns::build_pipelined(&front_g, cfg, plan);
+        let (back_prog, back_work) = patterns::build_folded(&back_g, cfg, plan);
+
+        // Co-residency: merge programs for the resource/fmax check.
+        let mut merged = front_prog.clone();
+        merged.name = format!("{}_hybrid@{cut}", graph.name);
+        let base = merged.kernels.len();
+        for mut k in back_prog.kernels.clone() {
+            k.id += base;
+            k.queue += merged.queues;
+            merged.kernels.push(k);
+        }
+        merged.queues += back_prog.queues;
+        let synthesis = aoc::synthesize(&merged, &self.device, &self.fmax_model)?;
+        let fmax = synthesis.fmax_mhz;
+
+        let front_perf = pipelined::simulate(&front_prog, &self.device, fmax, &self.host);
+        let back_perf = folded::simulate(&back_prog, &back_work, &self.device, fmax, &self.host);
+
+        // Sections overlap across frames (staged through global memory):
+        // throughput is governed by the slower section.
+        let interval = front_perf.frame_time_s.max(back_perf.frame_time_s);
+        Ok(HybridAccelerator {
+            network: graph.name.clone(),
+            cut,
+            fps: 1.0 / interval,
+            front_interval_s: front_perf.frame_time_s,
+            back_time_s: back_perf.frame_time_s,
+            synthesis,
+        })
+    }
+
+    /// Search all clean cut points; return the best hybrid (if any beats
+    /// nothing — the caller compares against pure modes).
+    pub fn best_hybrid(
+        &self,
+        graph: &Graph,
+        cfg: &OptConfig,
+        plan: &FactorPlan,
+    ) -> Option<HybridAccelerator> {
+        cut_points(graph)
+            .into_iter()
+            .filter_map(|cut| self.compile_hybrid(graph, cut, cfg, plan).ok())
+            .max_by(|a, b| a.fps.total_cmp(&b.fps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{default_factors, Mode, OptLevel};
+    use crate::graph::models;
+
+    #[test]
+    fn mobilenet_splits_cleanly() {
+        let g = models::mobilenet_v1();
+        let cuts = cut_points(&g);
+        assert!(!cuts.is_empty());
+        let (front, back) = split(&g, cuts[1]).expect("clean cut");
+        assert_eq!(front.total_macs() + back.total_macs(), g.total_macs());
+        front.validate().unwrap();
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn resnet_residual_cuts_rejected_or_clean() {
+        let g = models::resnet34();
+        // Splitting inside a residual block must be rejected (the shortcut
+        // edge crosses the cut); boundary cuts succeed.
+        let mid_block = g.nodes.iter().find(|n| n.name == "s0b0.conv2").unwrap().id;
+        assert!(split(&g, mid_block).is_none());
+    }
+
+    #[test]
+    fn hybrid_mobilenet_compiles_and_reports() {
+        let flow = Flow::new();
+        let g = models::mobilenet_v1();
+        let plan = default_factors(&g);
+        let hybrid = flow.best_hybrid(&g, &OptConfig::optimized(), &plan);
+        let Some(h) = hybrid else {
+            // Acceptable outcome: no clean cut fits on the device.
+            return;
+        };
+        assert!(h.fps > 0.0);
+        assert!(h.front_interval_s > 0.0 && h.back_time_s > 0.0);
+        // Compare against pure folded for the record.
+        let folded = flow.compile(&g, Mode::Folded, OptLevel::Optimized).unwrap();
+        println!("hybrid {} FPS vs folded {} FPS", h.fps, folded.performance.fps);
+    }
+
+    #[test]
+    fn bad_cut_errors() {
+        let flow = Flow::new();
+        let g = models::mobilenet_v1();
+        let plan = default_factors(&g);
+        assert!(flow.compile_hybrid(&g, 0, &OptConfig::optimized(), &plan).is_err());
+        assert!(flow.compile_hybrid(&g, 10_000, &OptConfig::optimized(), &plan).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Factor-selection legality (§IV-J): the three requirements the paper
+//! imposes on unroll/tile factors.
+//!
+//! 1. For loops that access *non-cached* global memory, the factor must not
+//!    exceed the bandwidth roof (~76 fp32 words/cycle on the S10SX @250MHz).
+//! 2. The loop count must be evenly divisible by the factor (no
+//!    prologue/epilogue code).
+//! 3. The design must fit the device (checked post-synthesis).
+
+use crate::aoc::lsu::{infer, LsuKind};
+use crate::codegen::KernelProgram;
+use crate::device::FpgaDevice;
+
+/// Largest divisor of `extent` that is ≤ `cap` (rule 2 helper). Always ≥ 1.
+pub fn largest_divisor_leq(extent: u64, cap: u64) -> u64 {
+    let cap = cap.min(extent).max(1);
+    (1..=cap).rev().find(|f| extent % f == 0).unwrap_or(1)
+}
+
+/// All divisors of `extent` up to `cap` — the DSE's candidate factors.
+pub fn divisors_leq(extent: u64, cap: u64) -> Vec<u64> {
+    (1..=cap.min(extent)).filter(|f| extent % f == 0).collect()
+}
+
+/// Violations found by [`check_program`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// Rule 1: a non-cached global stream wider than the bandwidth roof.
+    BandwidthRoof { kernel: String, buffer: String, words_per_cycle: u64, roof: u64 },
+    /// Rule 2: a loop whose extent is not divisible by its unroll factor.
+    NotDivisible { kernel: String, var: &'static str, extent: u64, unroll: u64 },
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::BandwidthRoof { kernel, buffer, words_per_cycle, roof } => write!(
+                f,
+                "{kernel}/{buffer}: {words_per_cycle} words/cycle exceeds the {roof}-word bandwidth roof (§IV-J rule 1)"
+            ),
+            Violation::NotDivisible { kernel, var, extent, unroll } => write!(
+                f,
+                "{kernel}: loop {var} extent {extent} not divisible by factor {unroll} (§IV-J rule 2)"
+            ),
+        }
+    }
+}
+
+/// Check rules 1 and 2 on a scheduled program (rule 3 is the synthesis
+/// fit + routing check in `aoc::report`).
+pub fn check_program(prog: &KernelProgram, dev: &FpgaDevice, fmax_mhz: f64) -> Vec<Violation> {
+    // Roof in *bytes* per cycle so reduced-precision designs stream
+    // proportionally more elements (§VII extension).
+    let roof_bytes = (dev.bw_floats_per_cycle(fmax_mhz).floor() as u64) * 4;
+    let mut out = Vec::new();
+    for k in &prog.kernels {
+        for l in &k.nest.loops {
+            if l.extent % l.unroll != 0 {
+                out.push(Violation::NotDivisible {
+                    kernel: k.name.clone(),
+                    var: l.var.name(),
+                    extent: l.extent,
+                    unroll: l.unroll,
+                });
+            }
+        }
+        let eb = k.nest.precision.bytes();
+        for lsu in infer(&k.nest) {
+            // Cached and BRAM-stashed operands are exempt (the roof binds
+            // streamed operands only).
+            if matches!(lsu.kind, LsuKind::BurstCoalesced | LsuKind::Replicated) {
+                let bytes = lsu.width_bytes.max(lsu.count * eb);
+                if bytes > roof_bytes {
+                    out.push(Violation::BandwidthRoof {
+                        kernel: k.name.clone(),
+                        buffer: lsu.buffer.clone(),
+                        words_per_cycle: bytes / eb,
+                        roof: roof_bytes / eb,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::patterns::{build_folded, default_factors, OptConfig};
+    use crate::graph::models;
+
+    #[test]
+    fn divisor_helpers() {
+        assert_eq!(largest_divisor_leq(400, 8), 8);
+        assert_eq!(largest_divisor_leq(28, 5), 4);
+        assert_eq!(largest_divisor_leq(7, 3), 1);
+        assert_eq!(largest_divisor_leq(84, 10), 7);
+        assert_eq!(divisors_leq(12, 6), vec![1, 2, 3, 4, 6]);
+    }
+
+    #[test]
+    fn roof_is_about_76_words_at_250() {
+        let dev = crate::device::FpgaDevice::stratix10sx();
+        assert_eq!(dev.bw_floats_per_cycle(250.0).floor() as u64, 76);
+    }
+
+    #[test]
+    fn default_plans_are_legal() {
+        let dev = crate::device::FpgaDevice::stratix10sx();
+        for g in models::all() {
+            let plan = default_factors(&g);
+            let (prog, _) = build_folded(&g, &OptConfig::optimized(), &plan);
+            let v = check_program(&prog, &dev, 250.0);
+            assert!(v.is_empty(), "{}: {:?}", g.name, v);
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! The compilation flow (Fig. 1): frozen graph → scheduled kernels →
+//! "synthesis" (AOC model) → performance simulation. This module is the
+//! paper's primary contribution, re-hosted on explicit models.
+
+pub mod hybrid;
+pub mod legality;
+pub mod multi;
+pub mod patterns;
+pub mod report_json;
+
+use crate::aoc::{self, FmaxModel, SynthesisReport};
+use crate::codegen::KernelProgram;
+use crate::device::FpgaDevice;
+use crate::graph::Graph;
+use crate::schedule::OptKind;
+use crate::sim::folded::LayerWork;
+use crate::sim::{folded, pipelined, HostModel, PerformanceReport};
+
+pub use patterns::{default_factors, FactorPlan, OptConfig};
+
+/// Execution mode (§III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// One kernel per layer, channels between them, all concurrently live.
+    Pipelined,
+    /// Parameterized kernels reused across layers; global-memory hand-off.
+    Folded,
+}
+
+impl Mode {
+    /// The paper deploys LeNet-5 pipelined and the larger networks folded
+    /// (§III: pipelining requires all activations in on-chip memory).
+    /// Decide by whether weights + largest activations fit in ~60% of BRAM.
+    pub fn auto(graph: &Graph, dev: &FpgaDevice) -> Mode {
+        let need_bits = (graph.weight_bytes() + 2 * graph.max_activation_bytes()) * 8;
+        if (need_bits as f64) < 0.6 * dev.bram_bits as f64 {
+            Mode::Pipelined
+        } else {
+            Mode::Folded
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Pipelined => "pipelined",
+            Mode::Folded => "folded",
+        }
+    }
+}
+
+/// Optimization level shortcut.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptLevel {
+    /// TVM default schedule (§IV pathologies intact).
+    Base,
+    /// All Table-I optimizations for the mode.
+    Optimized,
+}
+
+/// A fully compiled accelerator: kernels + synthesis + performance.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub network: String,
+    pub mode: Mode,
+    pub program: KernelProgram,
+    pub synthesis: SynthesisReport,
+    pub performance: PerformanceReport,
+    pub work: Vec<LayerWork>,
+    /// Table III row.
+    pub applied: Vec<OptKind>,
+    /// FLOPs per frame (for GFLOPS accounting).
+    pub flops_per_frame: u64,
+}
+
+impl Accelerator {
+    pub fn gflops(&self) -> f64 {
+        self.performance.gflops(self.flops_per_frame)
+    }
+}
+
+/// Flow driver. Owns the device + models; `compile` runs the whole Fig.-1
+/// pipeline in milliseconds (the real flow's AOC+Quartus step takes
+/// "3 to 12 hours", §IV-J).
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub device: FpgaDevice,
+    pub fmax_model: FmaxModel,
+    pub host: HostModel,
+}
+
+impl Default for Flow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Flow {
+    pub fn new() -> Flow {
+        Flow {
+            device: FpgaDevice::stratix10sx(),
+            fmax_model: FmaxModel::default(),
+            host: HostModel::default(),
+        }
+    }
+
+    /// Compile with defaults for the level.
+    pub fn compile(&self, graph: &Graph, mode: Mode, level: OptLevel) -> crate::Result<Accelerator> {
+        let cfg = match level {
+            OptLevel::Base => OptConfig::base(),
+            OptLevel::Optimized => OptConfig::optimized(),
+        };
+        self.compile_with(graph, mode, &cfg, &default_factors(graph))
+    }
+
+    /// Compile with an explicit optimization config + factor plan (DSE and
+    /// the ablation benches drive this).
+    pub fn compile_with(
+        &self,
+        graph: &Graph,
+        mode: Mode,
+        cfg: &OptConfig,
+        plan: &FactorPlan,
+    ) -> crate::Result<Accelerator> {
+        graph.validate().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        let (program, work) = match mode {
+            Mode::Pipelined => patterns::build_pipelined(graph, cfg, plan),
+            Mode::Folded => patterns::build_folded(graph, cfg, plan),
+        };
+
+        // Rule 1/2 legality (rule 3 = fit, checked by synthesize()).
+        let violations = legality::check_program(&program, &self.device, 250.0);
+        if !violations.is_empty() {
+            anyhow::bail!(
+                "illegal factor plan for {}: {}",
+                graph.name,
+                violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("; ")
+            );
+        }
+
+        let synthesis = aoc::synthesize(&program, &self.device, &self.fmax_model)?;
+        let fmax = synthesis.fmax_mhz;
+        let performance = match mode {
+            Mode::Pipelined => pipelined::simulate(&program, &self.device, fmax, &self.host),
+            Mode::Folded => folded::simulate(&program, &work, &self.device, fmax, &self.host),
+        };
+        let applied = patterns::applied_summary(&program);
+
+        Ok(Accelerator {
+            network: graph.name.clone(),
+            mode,
+            program,
+            synthesis,
+            performance,
+            work,
+            applied,
+            flops_per_frame: graph.total_flops(),
+        })
+    }
+
+    /// The mode the paper uses for each evaluation network (Table III).
+    pub fn paper_mode(network: &str) -> Mode {
+        match network {
+            "lenet5" => Mode::Pipelined,
+            _ => Mode::Folded,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn auto_mode_matches_paper_choices() {
+        let dev = FpgaDevice::stratix10sx();
+        assert_eq!(Mode::auto(&models::lenet5(), &dev), Mode::Pipelined);
+        assert_eq!(Mode::auto(&models::mobilenet_v1(), &dev), Mode::Folded);
+        assert_eq!(Mode::auto(&models::resnet34(), &dev), Mode::Folded);
+    }
+
+    #[test]
+    fn lenet_compiles_both_levels() {
+        let flow = Flow::new();
+        let g = models::lenet5();
+        let base = flow.compile(&g, Mode::Pipelined, OptLevel::Base).unwrap();
+        let opt = flow.compile(&g, Mode::Pipelined, OptLevel::Optimized).unwrap();
+        assert!(opt.performance.fps > base.performance.fps * 3.0,
+            "opt {} vs base {}", opt.performance.fps, base.performance.fps);
+        assert!(opt.synthesis.fmax_mhz > 100.0);
+    }
+
+    #[test]
+    fn optimized_applies_table3_rows() {
+        let flow = Flow::new();
+        // LeNet-5 row: LU LF CW OF CH AR CE (no PK/LT)
+        let l = flow.compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized).unwrap();
+        assert!(l.applied.contains(&OptKind::Channels));
+        assert!(!l.applied.contains(&OptKind::Parameterize));
+        // MobileNet row: PK LU LT LF CW OF (no CH/AR/CE)
+        let m = flow.compile(&models::mobilenet_v1(), Mode::Folded, OptLevel::Optimized).unwrap();
+        assert!(m.applied.contains(&OptKind::Parameterize));
+        assert!(m.applied.contains(&OptKind::Tile));
+        assert!(!m.applied.contains(&OptKind::Channels));
+        assert!(!m.applied.contains(&OptKind::Autorun));
+        assert!(!m.applied.contains(&OptKind::Concurrent));
+    }
+
+    #[test]
+    fn all_networks_fit_when_optimized() {
+        let flow = Flow::new();
+        for g in models::all() {
+            let mode = Flow::paper_mode(&g.name);
+            let acc = flow.compile(&g, mode, OptLevel::Optimized).unwrap();
+            assert!(acc.synthesis.resources.utilization.fits(), "{}", g.name);
+            assert!(acc.performance.fps > 0.0);
+        }
+    }
+
+    #[test]
+    fn gflops_scale_with_fps() {
+        let flow = Flow::new();
+        let acc = flow.compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized).unwrap();
+        let expect = acc.performance.fps * acc.flops_per_frame as f64 / 1e9;
+        assert!((acc.gflops() - expect).abs() < 1e-9);
+    }
+}

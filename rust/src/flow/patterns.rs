@@ -1,0 +1,691 @@
+//! Pattern-based application of the paper's optimizations (Table I) and
+//! the construction of the kernel program for each execution mode (§III).
+//!
+//! | Opt | Pipelined | Folded | Pattern (Table I)                          |
+//! |-----|-----------|--------|--------------------------------------------|
+//! | LU  | ✓         | ✓      | all kernels except transpose/padding       |
+//! | LF  | ✓         | ✓      | activation/batchnorm in conv, FC, pooling  |
+//! | CW  | ✓         | ✓      | all kernels except transpose/padding       |
+//! | OF  | ✓         | ✓      | -fpc -fp-relaxed for all bitstreams        |
+//! | CH  | ✓         |        | movement of activations, all layers        |
+//! | AR  | ✓         |        | pooling, transpose/padding                 |
+//! | CE  | ✓         |        | host optimization                          |
+//! | PK  |           | ✓      | convs with same stride and filter size     |
+//! | LT  |           | ✓      | conv, FC                                   |
+
+use std::collections::BTreeMap;
+
+use crate::codegen::{Channel, Kernel, KernelProgram};
+use crate::graph::{Graph, GroupKind, Node, Op, ParamGroup};
+use crate::schedule::{OptKind, Scheduler};
+use crate::sim::folded::LayerWork;
+use crate::texpr::{self, Epilogue, LoopVar};
+
+use super::legality;
+
+/// Which optimizations are enabled (ablation switch-board).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptConfig {
+    pub unroll: bool,
+    pub tile: bool,
+    pub fuse: bool,
+    pub cached_writes: bool,
+    pub float_opt: bool,
+    pub channels: bool,
+    pub autorun: bool,
+    pub concurrent: bool,
+    pub parameterize: bool,
+    /// Extension (§VII): datapath precision (fp32 = the paper's setting).
+    pub precision: crate::texpr::Precision,
+    /// Extension (§V-F): vector types align strided loads.
+    pub vectorize: bool,
+    /// Extension (§VII future work #2): weight density in (0, 1] — a
+    /// zero-skipping datapath (HPIPE-style, the paper's related work §VI)
+    /// skips MACs whose weight is pruned away. 1.0 = dense (the paper).
+    pub weight_density: f64,
+}
+
+impl OptConfig {
+    /// TVM's default schedule: nothing enabled (§IV's pathology list).
+    pub fn base() -> Self {
+        OptConfig {
+            unroll: false,
+            tile: false,
+            fuse: false,
+            cached_writes: false,
+            float_opt: false,
+            channels: false,
+            autorun: false,
+            concurrent: false,
+            parameterize: false,
+            precision: crate::texpr::Precision::F32,
+            vectorize: false,
+            weight_density: 1.0,
+        }
+    }
+
+    /// Everything Table I allows for the mode.
+    pub fn optimized() -> Self {
+        OptConfig {
+            unroll: true,
+            tile: true,
+            fuse: true,
+            cached_writes: true,
+            float_opt: true,
+            channels: true,
+            autorun: true,
+            concurrent: true,
+            parameterize: true,
+            // The paper evaluates fp32 without vector types; the
+            // extensions stay opt-in (see `with_precision`, `with_vectors`).
+            precision: crate::texpr::Precision::F32,
+            vectorize: false,
+            weight_density: 1.0,
+        }
+    }
+
+    /// Extension (§VII #2): prune weights to `density` and skip zero MACs.
+    pub fn with_sparsity(mut self, density: f64) -> Self {
+        assert!((0.0..=1.0).contains(&density) && density > 0.0);
+        self.weight_density = density;
+        self
+    }
+
+    /// Extension: reduced-precision datapath (paper §VII future work).
+    pub fn with_precision(mut self, p: crate::texpr::Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    /// Extension: vectorized aligned loads (§V-F mitigation).
+    pub fn with_vectors(mut self) -> Self {
+        self.vectorize = true;
+        self
+    }
+
+    /// Disable one optimization (ablation benches).
+    pub fn without(mut self, opt: OptKind) -> Self {
+        match opt {
+            OptKind::Unroll => self.unroll = false,
+            OptKind::Tile => self.tile = false,
+            OptKind::Fuse => self.fuse = false,
+            OptKind::CachedWrite => self.cached_writes = false,
+            OptKind::FloatOpt => self.float_opt = false,
+            OptKind::Channels => self.channels = false,
+            OptKind::Autorun => self.autorun = false,
+            OptKind::Concurrent => self.concurrent = false,
+            OptKind::Parameterize => self.parameterize = false,
+            OptKind::Quantize => self.precision = crate::texpr::Precision::F32,
+            OptKind::Vectorize => self.vectorize = false,
+            OptKind::Sparsify => self.weight_density = 1.0,
+        }
+        self
+    }
+}
+
+/// Per-group tile/unroll factors for folded mode; per-node caps for
+/// pipelined. Produced by [`default_factors`] or by the DSE.
+#[derive(Debug, Clone, Default)]
+pub struct FactorPlan {
+    /// Folded: (input-channel tile, output-channel tile) per group.
+    pub group_tiles: BTreeMap<ParamGroup, (u64, u64)>,
+    /// Pipelined: max unroll lanes per kernel.
+    pub pipelined_cap: u64,
+    /// Dense reduction tile (both modes).
+    pub dense_tile: (u64, u64),
+}
+
+/// The factor choices used for the paper's Table II–V runs. Chosen by the
+/// §IV-J rules (bandwidth roof, divisibility, resource fit); the DSE
+/// (`crate::dse`) rediscovers factors of this magnitude automatically.
+pub fn default_factors(graph: &Graph) -> FactorPlan {
+    let mut plan = FactorPlan {
+        group_tiles: BTreeMap::new(),
+        pipelined_cap: 256,
+        dense_tile: (8, 10),
+    };
+    for node in graph.topo() {
+        if let Some(g) = node.op.param_group() {
+            let tile = match g.kind {
+                GroupKind::Conv => {
+                    // Total MAC lanes = k² × t_ic × t_oc (the filter taps
+                    // are fully unrolled for k ≥ 3): budget each group to a
+                    // few hundred lanes so the summed DSP count lands near
+                    // Table II's utilization.
+                    if g.kernel == 1 && g.stride == 1 {
+                        (32, 16) // the MobileNet workhorse (§III): 512 lanes
+                    } else if g.kernel >= 7 {
+                        (1, 2) // conv1-style: 49 taps × 2 = 98 lanes
+                    } else if g.kernel >= 5 {
+                        (2, 8) // 5×5: 400 lanes
+                    } else if g.stride == 1 && g.kernel == 3 {
+                        (8, 8) // 3×3 workhorse (ResNet): 576 lanes
+                    } else if g.kernel == 1 {
+                        (16, 8) // 1×1 downsample: 128 lanes
+                    } else {
+                        (2, 4) // strided 3×3: 72 lanes
+                    }
+                }
+                GroupKind::Depthwise => (8, 1),
+                GroupKind::Dense => (8, 10),
+            };
+            plan.group_tiles.entry(g).or_insert(tile);
+        }
+    }
+    plan
+}
+
+/// Is `node` an epilogue op (BN / activation) fusible into its producer?
+fn fusible_epilogue(graph: &Graph, node: &Node, consumers: &[Vec<usize>]) -> bool {
+    if !matches!(node.op, Op::BatchNorm | Op::Activate(_)) {
+        return false;
+    }
+    let producer = &graph.nodes[node.inputs[0]];
+    // Fuse into compute ops and pooling (Table I pattern), when the
+    // producer has no other consumer.
+    (producer.op.is_compute()
+        || matches!(producer.op, Op::BatchNorm | Op::Activate(_) | Op::Add | Op::MaxPool { .. } | Op::AvgPool { .. }))
+        && consumers[producer.id].len() == 1
+}
+
+fn epilogue_of_node(node: &Node) -> Epilogue {
+    match node.op {
+        Op::BatchNorm => Epilogue::BatchNormFold,
+        Op::Activate(a) => Epilogue::Activation(a),
+        _ => unreachable!("only BN/Act absorb"),
+    }
+}
+
+/// Resolve the kernel-bearing ancestor of `id` after fusion/skip decisions:
+/// follows through absorbed BN/Act nodes and Flatten/Input pass-throughs.
+fn resolve_producer(absorbed_into: &BTreeMap<usize, usize>, skipped: &[bool], graph: &Graph, mut id: usize) -> usize {
+    loop {
+        if let Some(&host) = absorbed_into.get(&id) {
+            id = host;
+            continue;
+        }
+        if skipped[id] {
+            match graph.nodes[id].inputs.first() {
+                Some(&prev) => {
+                    id = prev;
+                    continue;
+                }
+                None => return id, // graph input: no producing kernel
+            }
+        }
+        return id;
+    }
+}
+
+/// Layer-to-kernel construction shared by both modes. Returns, per
+/// surviving node: its scheduled kernel, plus the absorption map.
+struct Mapped {
+    kernels: Vec<Kernel>,
+    /// node id → kernel index (for surviving nodes).
+    node_kernel: BTreeMap<usize, usize>,
+    /// absorbed node → host node.
+    absorbed_into: BTreeMap<usize, usize>,
+    skipped: Vec<bool>,
+}
+
+fn map_layers(graph: &Graph, cfg: &OptConfig, folded: bool, plan: &FactorPlan) -> Mapped {
+    let consumers = graph.consumers();
+    let mut absorbed_into: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut skipped = vec![false; graph.nodes.len()];
+    // Pass 1: decide skips (Input/Flatten/Transform are layout-only) and
+    // epilogue absorption (LF).
+    for node in graph.topo() {
+        match node.op {
+            Op::Input | Op::Flatten | Op::Transform => skipped[node.id] = true,
+            _ => {}
+        }
+        if cfg.fuse && fusible_epilogue(graph, node, &consumers) {
+            // Chase through already-absorbed producers so conv→bn→relu
+            // folds completely into the conv kernel.
+            let mut host = node.inputs[0];
+            while let Some(&h) = absorbed_into.get(&host) {
+                host = h;
+            }
+            // Table I pattern: activation/batchnorm fuse into conv, FC and
+            // pooling; residual adds also take the trailing ReLU.
+            if graph.nodes[host].op.is_compute()
+                || matches!(
+                    graph.nodes[host].op,
+                    Op::Add | Op::MaxPool { .. } | Op::AvgPool { .. } | Op::GlobalAvgPool
+                )
+            {
+                absorbed_into.insert(node.id, host);
+            }
+        }
+    }
+
+    // Pass 2: build kernels.
+    let mut kernels: Vec<Kernel> = Vec::new();
+    let mut node_kernel: BTreeMap<usize, usize> = BTreeMap::new();
+    // Folded: one kernel per parameter group.
+    let mut group_kernel: BTreeMap<ParamGroup, usize> = BTreeMap::new();
+
+    for node in graph.topo() {
+        if skipped[node.id] || absorbed_into.contains_key(&node.id) {
+            continue;
+        }
+        let input_shape = &graph.nodes[node.inputs[0]].shape;
+
+        if folded && cfg.parameterize {
+            if let Some(g) = node.op.param_group() {
+                if let Some(&kid) = group_kernel.get(&g) {
+                    node_kernel.insert(node.id, kid);
+                    // Extend the group's epilogue set with this layer's
+                    // absorbed ops (runtime-selected per layer).
+                    continue;
+                }
+            }
+        }
+
+        let mut nest = texpr::lower(node, input_shape);
+        let mut s = Scheduler::new(&mut nest);
+
+        // Absorb fused epilogues (LF).
+        for (&abs, &host) in &absorbed_into {
+            if host == node.id {
+                s.absorb_epilogue(epilogue_of_node(&graph.nodes[abs]));
+            }
+        }
+        if cfg.fuse && s.nest.separate_epilogue {
+            let _ = s.fuse_epilogue();
+        }
+
+        // CW: cached accumulation (all kernels except transpose/padding).
+        if cfg.cached_writes && !node.op.unroll_exempt() {
+            let _ = s.cache_write();
+        }
+
+        // OF: float flags apply to the whole bitstream.
+        if cfg.float_opt {
+            s.applied.record(OptKind::FloatOpt);
+        }
+
+        // Extensions: reduced precision + vector types (§VII / §V-F).
+        if cfg.precision != crate::texpr::Precision::F32 {
+            s.quantize(cfg.precision);
+        }
+        if cfg.vectorize {
+            s.vectorize("ifmap");
+        }
+        if cfg.weight_density < 1.0 && node.op.is_compute() {
+            s.sparsify(cfg.weight_density);
+        }
+
+        // LU/LT: factor selection per mode.
+        if node.op.is_compute() {
+            if folded {
+                if cfg.parameterize {
+                    s.parameterize();
+                }
+                if cfg.tile && cfg.unroll {
+                    apply_folded_tiles(&mut s, node, plan);
+                } else if cfg.unroll {
+                    // unroll without tiling: full filter taps only
+                    for v in [LoopVar::KH, LoopVar::KW] {
+                        let _ = s.unroll(v);
+                    }
+                }
+                // Folded kernels stage operand tiles in BRAM.
+                if cfg.cached_writes {
+                    let _ = s.cache_read("weights");
+                    let _ = s.cache_read("ifmap");
+                    tile_stash_bytes(&mut s, plan, node);
+                }
+            } else if cfg.unroll {
+                apply_pipelined_unroll(&mut s, node, plan);
+            }
+        } else if cfg.unroll && !node.op.unroll_exempt() {
+            // Pools etc: unroll the window taps (Table I: all kernels
+            // except transpose/padding), capped at 8 per dim so huge
+            // global-average windows stay under the bandwidth roof.
+            for v in [LoopVar::KH, LoopVar::KW] {
+                if let Some(l) = s.nest.find_loop(v) {
+                    let f = legality::largest_divisor_leq(l.extent, 8);
+                    let _ = s.tile_and_unroll(v, f);
+                }
+            }
+            if !folded {
+                record_strip_mine_as_unroll(&mut s);
+            }
+        }
+
+        // CH: pipelined activations move via channels; first/last kernels
+        // keep their global image/logits access.
+        if !folded && cfg.channels {
+            s.channelize("ifmap");
+            s.channelize("ofmap");
+            let _ = s.cache_read("weights"); // weight stash in BRAM
+        }
+
+        let applied = s.finish();
+        let kid = kernels.len();
+        kernels.push(Kernel {
+            id: kid,
+            name: format!("k{}_{}", kid, nest.name),
+            nest,
+            applied,
+            autorun: false, // decided after channel wiring
+            layers: vec![node.id],
+            group: if folded && cfg.parameterize { node.op.param_group() } else { None },
+            queue: 0,
+        });
+        node_kernel.insert(node.id, kid);
+        if folded && cfg.parameterize {
+            if let Some(g) = node.op.param_group() {
+                group_kernel.insert(g, kid);
+            }
+        }
+    }
+
+    // Record layer membership for group kernels.
+    for (&nid, &kid) in &node_kernel {
+        if !kernels[kid].layers.contains(&nid) {
+            kernels[kid].layers.push(nid);
+        }
+    }
+
+    Mapped { kernels, node_kernel, absorbed_into, skipped }
+}
+
+/// In pipelined mode strip-mine+full-inner-unroll is reported as LU, not
+/// LT — the paper's Table III applies LT only to folded designs.
+fn record_strip_mine_as_unroll(s: &mut Scheduler) {
+    if s.applied.opts.contains(&OptKind::Tile) {
+        s.applied.opts.retain(|o| *o != OptKind::Tile);
+        s.applied.record(OptKind::Unroll);
+    }
+}
+
+fn apply_pipelined_unroll(s: &mut Scheduler, node: &Node, plan: &FactorPlan) {
+    let cap = plan.pipelined_cap.max(1);
+    match node.op {
+        Op::Dense { .. } => {
+            let (t_in, _) = plan.dense_tile;
+            let extent = s.nest.find_loop(LoopVar::InC).map(|l| l.extent).unwrap_or(1);
+            let f = legality::largest_divisor_leq(extent, t_in);
+            let _ = s.tile_and_unroll(LoopVar::InC, f);
+            record_strip_mine_as_unroll(s);
+        }
+        _ => {
+            // Unroll reduction loops innermost-first while ≤ cap, then the
+            // output-channel loop if it still fits (full unrolls only).
+            let mut product = 1u64;
+            for v in [LoopVar::KW, LoopVar::KH, LoopVar::InC] {
+                if let Some(l) = s.nest.find_loop(v) {
+                    if l.reduction && product * l.extent <= cap {
+                        product *= l.extent;
+                        let _ = s.unroll(v);
+                    }
+                }
+            }
+            if let Some(l) = s.nest.find_loop(LoopVar::OutC) {
+                if product * l.extent <= cap {
+                    let _ = s.unroll(LoopVar::OutC);
+                }
+            }
+        }
+    }
+}
+
+fn apply_folded_tiles(s: &mut Scheduler, node: &Node, plan: &FactorPlan) {
+    let Some(g) = node.op.param_group() else { return };
+    match g.kind {
+        GroupKind::Dense => {
+            let (t_in, t_out) = plan.dense_tile;
+            for (v, t) in [(LoopVar::InC, t_in), (LoopVar::OutC, t_out)] {
+                if let Some(l) = s.nest.find_loop(v) {
+                    let f = legality::largest_divisor_leq(l.extent, t);
+                    let _ = s.tile_and_unroll(v, f);
+                }
+            }
+        }
+        GroupKind::Depthwise => {
+            let (t_c, _) = plan.group_tiles.get(&g).copied().unwrap_or((8, 1));
+            for v in [LoopVar::KH, LoopVar::KW] {
+                let _ = s.unroll(v);
+            }
+            if let Some(l) = s.nest.find_loop(LoopVar::OutC) {
+                let f = legality::largest_divisor_leq(l.extent, t_c);
+                let _ = s.tile_and_unroll(LoopVar::OutC, f);
+            }
+        }
+        GroupKind::Conv => {
+            let (t_ic, t_oc) = plan.group_tiles.get(&g).copied().unwrap_or((8, 8));
+            if g.kernel >= 3 {
+                for v in [LoopVar::KH, LoopVar::KW] {
+                    let _ = s.unroll(v);
+                }
+            }
+            if let Some(l) = s.nest.find_loop(LoopVar::InC) {
+                let f = legality::largest_divisor_leq(l.extent, t_ic);
+                let _ = s.tile_and_unroll(LoopVar::InC, f);
+            }
+            if let Some(l) = s.nest.find_loop(LoopVar::OutC) {
+                let f = legality::largest_divisor_leq(l.extent, t_oc);
+                let _ = s.tile_and_unroll(LoopVar::OutC, f);
+            }
+        }
+    }
+}
+
+/// Size the BRAM tile stashes of a folded kernel: double-buffered weight
+/// tile + an input line strip.
+fn tile_stash_bytes(s: &mut Scheduler, plan: &FactorPlan, node: &Node) {
+    let Some(g) = node.op.param_group() else { return };
+    let (t_ic, t_oc) = plan.group_tiles.get(&g).copied().unwrap_or((8, 8));
+    let k2 = (g.kernel * g.kernel) as u64;
+    for a in &mut s.nest.accesses {
+        if a.space == crate::texpr::MemSpace::Local {
+            a.array_bytes = match a.buffer.as_str() {
+                "weights" => 2 * t_ic * t_oc * k2 * 4,
+                // strip of k input rows × tile channels (max W on chip 224)
+                "ifmap" => 2 * t_ic * (g.kernel as u64) * 224 * 4,
+                _ => a.array_bytes,
+            };
+        }
+    }
+}
+
+/// Build the pipelined-mode program (§III): one kernel per surviving layer,
+/// channel-connected in topological order.
+pub fn build_pipelined(graph: &Graph, cfg: &OptConfig, plan: &FactorPlan) -> (KernelProgram, Vec<LayerWork>) {
+    let mut mapped = map_layers(graph, cfg, false, plan);
+
+    // Channels between consecutive kernels (CH).
+    let mut channels = Vec::new();
+    if cfg.channels {
+        let depth = (graph.max_activation_bytes() / 4).max(16);
+        for k in &mapped.kernels {
+            let node = &graph.nodes[k.layers[0]];
+            for &inp in &node.inputs {
+                let src = resolve_producer(&mapped.absorbed_into, &mapped.skipped, graph, inp);
+                if let Some(&src_k) = mapped.node_kernel.get(&src) {
+                    if src_k != k.id {
+                        channels.push(Channel {
+                            name: format!("ch_{}_{}", src_k, k.id),
+                            from_kernel: src_k,
+                            to_kernel: k.id,
+                            depth,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // AR: weightless channel-only kernels become autorun.
+    if cfg.autorun {
+        for k in &mut mapped.kernels {
+            let node = &graph.nodes[k.layers[0]];
+            if !node.op.has_weights() && k.autorun_eligible() {
+                k.autorun = true;
+                k.applied.record(OptKind::Autorun);
+            }
+        }
+    }
+
+    // CE: one queue per kernel.
+    let queues = if cfg.concurrent { mapped.kernels.len().max(1) } else { 1 };
+    if cfg.concurrent {
+        for (q, k) in mapped.kernels.iter_mut().enumerate() {
+            k.queue = q;
+            k.applied.record(OptKind::Concurrent);
+        }
+    }
+
+    let prog = KernelProgram { name: format!("{}_pipelined", graph.name), kernels: mapped.kernels, channels, queues };
+    let work = work_list(graph, &mapped.node_kernel, &mapped.absorbed_into, &mapped.skipped);
+    (prog, work)
+}
+
+/// Build the folded-mode program (§III, §IV-H): parameterized kernels per
+/// (filter, stride) group; feature maps round-trip through global memory.
+pub fn build_folded(graph: &Graph, cfg: &OptConfig, plan: &FactorPlan) -> (KernelProgram, Vec<LayerWork>) {
+    let mapped = map_layers(graph, cfg, true, plan);
+    let prog = KernelProgram {
+        name: format!("{}_folded", graph.name),
+        kernels: mapped.kernels,
+        channels: vec![],
+        queues: 1, // CE not applicable (§IV-J)
+    };
+    let work = work_list(graph, &mapped.node_kernel, &mapped.absorbed_into, &mapped.skipped);
+    (prog, work)
+}
+
+fn work_list(
+    graph: &Graph,
+    node_kernel: &BTreeMap<usize, usize>,
+    absorbed: &BTreeMap<usize, usize>,
+    skipped: &[bool],
+) -> Vec<LayerWork> {
+    let mut work = Vec::new();
+    for node in graph.topo() {
+        if skipped[node.id] || absorbed.contains_key(&node.id) {
+            continue;
+        }
+        let Some(&kid) = node_kernel.get(&node.id) else { continue };
+        let nest = texpr::lower(node, &graph.nodes[node.inputs[0]].shape);
+        work.push(LayerWork {
+            node_id: node.id,
+            layer_name: node.name.clone(),
+            kernel_id: kid,
+            out_elems: nest.out_elems,
+            reduction: nest.reduction_size,
+        });
+    }
+    work
+}
+
+/// Which optimizations ended up applied across a program — the Table III
+/// row for a network.
+pub fn applied_summary(prog: &KernelProgram) -> Vec<OptKind> {
+    let mut out: Vec<OptKind> = Vec::new();
+    for k in &prog.kernels {
+        for o in &k.applied.opts {
+            if !out.contains(o) {
+                out.push(*o);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn lenet_pipelined_optimized_structure() {
+        let g = models::lenet5();
+        let (prog, work) = build_pipelined(&g, &OptConfig::optimized(), &default_factors(&g));
+        // c1, s2, c3, s4, f5, f6, f7 → 7 kernels (flatten skipped)
+        assert_eq!(prog.kernels.len(), 7);
+        assert_eq!(prog.queues, 7);
+        assert_eq!(prog.channels.len(), 6);
+        assert_eq!(work.len(), 7);
+        // pools are autorun (weightless, channel-fed)
+        assert!(prog.kernels.iter().any(|k| k.autorun));
+        // convs/dense are not (weights still loaded from global at init)
+        let summary = applied_summary(&prog);
+        for o in [OptKind::Unroll, OptKind::Fuse, OptKind::CachedWrite, OptKind::FloatOpt, OptKind::Channels, OptKind::Autorun, OptKind::Concurrent] {
+            assert!(summary.contains(&o), "{o:?} missing from {summary:?}");
+        }
+        assert!(!summary.contains(&OptKind::Parameterize));
+    }
+
+    #[test]
+    fn lenet_base_has_no_opts() {
+        let g = models::lenet5();
+        let (prog, _) = build_pipelined(&g, &OptConfig::base(), &default_factors(&g));
+        assert!(applied_summary(&prog).is_empty());
+        assert_eq!(prog.queues, 1);
+        assert!(prog.channels.is_empty());
+        assert_eq!(prog.autorun_count(), 0);
+        // BN/act don't exist in LeNet; epilogues stay separate
+        assert!(prog.kernels.iter().filter(|k| k.nest.macs_per_iter > 0).all(|k| k.nest.separate_epilogue));
+    }
+
+    #[test]
+    fn mobilenet_folded_groups() {
+        let g = models::mobilenet_v1();
+        let (prog, work) = build_folded(&g, &OptConfig::optimized(), &default_factors(&g));
+        // groups: conv3x3s2 (conv1), dw3x3s1, dw3x3s2, conv1x1s1, dense,
+        // plus gap kernel → 6 kernels
+        let groups: Vec<_> = prog.kernels.iter().filter_map(|k| k.group).collect();
+        assert!(groups.len() >= 5, "{groups:?}");
+        assert_eq!(prog.kernels.iter().filter(|k| k.group == Some(crate::graph::ParamGroup { kind: GroupKind::Conv, kernel: 1, stride: 1 })).count(), 1);
+        // all 13 pointwise layers share that one kernel
+        let pw_kernel = prog.kernels.iter().find(|k| k.group == Some(crate::graph::ParamGroup { kind: GroupKind::Conv, kernel: 1, stride: 1 })).unwrap();
+        assert_eq!(pw_kernel.layers.len(), 13);
+        // bn/act absorbed: work = 27 conv/dw (conv1 + 13×2) + gap + fc = 29
+        assert_eq!(work.len(), 29, "{:?}", work.iter().map(|w| &w.layer_name).collect::<Vec<_>>());
+        assert_eq!(prog.queues, 1);
+    }
+
+    #[test]
+    fn resnet_folded_kernel_count_is_small() {
+        let g = models::resnet34();
+        let (prog, _) = build_folded(&g, &OptConfig::optimized(), &default_factors(&g));
+        // A non-parameterized design would need ~70 kernels; PK folds the
+        // 36 convs into 5 groups. Residual adds stay per-layer (16) plus
+        // maxpool + gap helpers.
+        assert!(prog.kernels.len() <= 24, "{} kernels", prog.kernels.len());
+    }
+
+    #[test]
+    fn no_parameterize_means_kernel_per_layer() {
+        let g = models::mobilenet_v1();
+        let cfg = OptConfig::optimized().without(OptKind::Parameterize);
+        let (prog, _) = build_folded(&g, &cfg, &default_factors(&g));
+        assert!(prog.kernels.len() > 25, "{}", prog.kernels.len());
+    }
+
+    #[test]
+    fn fusion_absorbs_bn_act_chains() {
+        let g = models::mobilenet_v1();
+        let (_, work) = build_folded(&g, &OptConfig::optimized(), &default_factors(&g));
+        assert!(!work.iter().any(|w| w.layer_name.contains(".bn") || w.layer_name.contains(".act")));
+        let cfg = OptConfig::optimized().without(OptKind::Fuse);
+        let (_, work_nofuse) = build_folded(&g, &cfg, &default_factors(&g));
+        assert!(work_nofuse.len() > work.len() + 20);
+    }
+
+    #[test]
+    fn default_factors_respect_divisibility() {
+        let g = models::resnet34();
+        let plan = default_factors(&g);
+        let (prog, _) = build_folded(&g, &OptConfig::optimized(), &plan);
+        for k in &prog.kernels {
+            for l in &k.nest.loops {
+                assert_eq!(l.extent % l.unroll, 0, "kernel {} loop {:?}", k.name, l.var);
+            }
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! JSON emission for compiled accelerators — machine-readable reports for
+//! CI dashboards and the CLI's `--json` flag (serde is unavailable
+//! offline; uses the in-crate `util::json`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::Accelerator;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn s(v: impl Into<String>) -> Json {
+    Json::Str(v.into())
+}
+
+impl Accelerator {
+    /// Full machine-readable report.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("network".into(), s(self.network.clone()));
+        root.insert("mode".into(), s(self.mode.name()));
+        root.insert("flops_per_frame".into(), num(self.flops_per_frame as f64));
+        root.insert(
+            "applied".into(),
+            Json::Arr(self.applied.iter().map(|o| s(o.abbrev())).collect()),
+        );
+
+        let u = &self.synthesis.resources.utilization;
+        let mut synth = BTreeMap::new();
+        synth.insert("fmax_mhz".into(), num(self.synthesis.fmax_mhz));
+        synth.insert("logic_frac".into(), num(u.logic_frac));
+        synth.insert("bram_frac".into(), num(u.bram_frac));
+        synth.insert("dsp_frac".into(), num(u.dsp_frac));
+        synth.insert("max_lsu_width_bytes".into(), num(self.synthesis.max_lsu_width_bytes as f64));
+        root.insert("synthesis".into(), Json::Obj(synth));
+
+        let mut perf = BTreeMap::new();
+        perf.insert("fps".into(), num(self.performance.fps));
+        perf.insert("frame_time_s".into(), num(self.performance.frame_time_s));
+        perf.insert("bottleneck".into(), s(self.performance.bottleneck.clone()));
+        perf.insert("host_frac".into(), num(self.performance.host_frac));
+        perf.insert("gflops".into(), num(self.gflops()));
+        root.insert("performance".into(), Json::Obj(perf));
+
+        root.insert(
+            "kernels".into(),
+            Json::Arr(
+                self.program
+                    .kernels
+                    .iter()
+                    .map(|k| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".into(), s(k.name.clone()));
+                        m.insert("lanes".into(), num(k.nest.total_unroll() as f64));
+                        m.insert("autorun".into(), Json::Bool(k.autorun));
+                        m.insert("layers".into(), num(k.layers.len() as f64));
+                        if let Some(g) = k.group {
+                            m.insert("group".into(), s(g.to_string()));
+                        }
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::flow::{Flow, Mode, OptLevel};
+    use crate::graph::models;
+    use crate::util::json;
+
+    #[test]
+    fn json_roundtrips_and_carries_key_fields() {
+        let acc = Flow::new()
+            .compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized)
+            .unwrap();
+        let j = acc.to_json();
+        let text = j.to_string();
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed.get("network").unwrap().as_str(), Some("lenet5"));
+        assert_eq!(parsed.get("mode").unwrap().as_str(), Some("pipelined"));
+        let fps = parsed.get("performance").unwrap().get("fps").unwrap().as_f64().unwrap();
+        assert!((fps - acc.performance.fps).abs() / fps < 1e-9);
+        let kernels = parsed.get("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(kernels.len(), acc.program.kernels.len());
+        let applied = parsed.get("applied").unwrap().as_arr().unwrap();
+        assert!(applied.iter().any(|a| a.as_str() == Some("CH")));
+    }
+}

@@ -1,0 +1,222 @@
+//! Relay-analog CNN graph IR (§II-A): a DAG of [`ops::Op`] nodes with shape
+//! and cost inference, topological iteration, and the three evaluation
+//! networks of the paper in [`models`].
+
+pub mod models;
+pub mod passes;
+pub mod ops;
+pub mod shape;
+
+
+pub use ops::{Activation, GroupKind, Op, ParamGroup};
+pub use shape::{NodeCost, Shape};
+
+/// Node identifier (index into `Graph::nodes`).
+pub type NodeId = usize;
+
+/// One node of the network graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub shape: Shape,
+    pub cost: NodeCost,
+}
+
+/// A frozen inference graph (per-frame; batch handled by the runtime).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub input: NodeId,
+    pub output: NodeId,
+}
+
+/// Incremental graph builder: nodes are appended in topological order
+/// (inputs must already exist), shapes and costs inferred on insert.
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>, input_shape: Shape) -> (Self, NodeId) {
+        let mut b = GraphBuilder { name: name.into(), nodes: Vec::new() };
+        let cost = shape::node_cost(&Op::Input, &input_shape, &input_shape);
+        b.nodes.push(Node {
+            id: 0,
+            name: "input".into(),
+            op: Op::Input,
+            inputs: vec![],
+            shape: input_shape,
+            cost,
+        });
+        (b, 0)
+    }
+
+    /// Append a node; panics on shape errors (model definitions are static).
+    pub fn add(&mut self, name: impl Into<String>, op: Op, inputs: &[NodeId]) -> NodeId {
+        let name = name.into();
+        let in_shapes: Vec<&Shape> = inputs
+            .iter()
+            .map(|&i| &self.nodes.get(i).unwrap_or_else(|| panic!("{name}: bad input id {i}")).shape)
+            .collect();
+        let out = shape::infer_shape(&op, &in_shapes)
+            .unwrap_or_else(|e| panic!("{}: shape error: {e}", name));
+        let cost = shape::node_cost(&op, in_shapes[0], &out);
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name, op, inputs: inputs.to_vec(), shape: out, cost });
+        id
+    }
+
+    pub fn finish(self, output: NodeId) -> Graph {
+        assert!(output < self.nodes.len());
+        Graph { name: self.name, nodes: self.nodes, input: 0, output }
+    }
+}
+
+impl Graph {
+    /// Nodes in topological order (construction order is topological).
+    pub fn topo(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter()
+    }
+
+    /// Total multiply-accumulates per frame.
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.cost.macs).sum()
+    }
+
+    /// Total FLOPs per frame (§V-C convention: 2 per MAC + elementwise).
+    pub fn total_flops(&self) -> u64 {
+        self.nodes.iter().map(|n| n.cost.flops).sum()
+    }
+
+    /// Total trainable parameters.
+    pub fn total_params(&self) -> u64 {
+        self.nodes.iter().map(|n| n.cost.params).sum()
+    }
+
+    /// Largest intermediate feature map in bytes — sizes the channel FIFO
+    /// depth requirement for pipelined mode (§IV-J: "the depth must be
+    /// sufficient to hold the output of the largest feature map").
+    pub fn max_activation_bytes(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| !matches!(n.op, Op::Input))
+            .map(|n| n.cost.out_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sum of all weight bytes (fp32).
+    pub fn weight_bytes(&self) -> u64 {
+        self.total_params() * 4
+    }
+
+    /// Consumers of each node (fan-out), indexed by NodeId.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// FLOPs performed by 3×3 convolutions only — the paper reports
+    /// "70.4 GFLOPS for our 3×3 convolutions in ResNet-34" (§V-E).
+    pub fn flops_3x3_conv(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv2d { kernel: 3, .. }))
+            .map(|n| n.cost.flops)
+            .sum()
+    }
+
+    /// Validate structural invariants (acyclic by construction; here:
+    /// input reachability, id consistency, single-consumer flatten chain).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node {i} has id {}", n.id));
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    return Err(format!("node {} references later node {}", n.name, inp));
+                }
+            }
+            if !matches!(n.op, Op::Input) && n.inputs.is_empty() {
+                return Err(format!("node {} has no inputs", n.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ops::Activation;
+
+    fn tiny() -> Graph {
+        let (mut b, x) = GraphBuilder::new("tiny", Shape::Chw(1, 8, 8));
+        let c = b.add(
+            "c1",
+            Op::Conv2d { out_channels: 4, kernel: 3, stride: 1, padding: 1, bias: true, activation: Activation::Relu },
+            &[x],
+        );
+        let p = b.add("p1", Op::MaxPool { kernel: 2, stride: 2, padding: 0 }, &[c]);
+        let f = b.add("f", Op::Flatten, &[p]);
+        let d = b.add("fc", Op::Dense { out_features: 10, bias: true, activation: Activation::None }, &[f]);
+        b.finish(d)
+    }
+
+    #[test]
+    fn builder_infers_shapes() {
+        let g = tiny();
+        assert_eq!(g.nodes[1].shape, Shape::Chw(4, 8, 8));
+        assert_eq!(g.nodes[2].shape, Shape::Chw(4, 4, 4));
+        assert_eq!(g.nodes[4].shape, Shape::Flat(10));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let g = tiny();
+        let conv_macs = 4 * 8 * 8 * 9;
+        let fc_macs = 64 * 10;
+        assert_eq!(g.total_macs(), (conv_macs + fc_macs) as u64);
+        assert!(g.total_flops() > 2 * g.total_macs());
+        assert_eq!(g.total_params(), (4 * 9 + 4 + 64 * 10 + 10) as u64);
+    }
+
+    #[test]
+    fn consumers_fanout() {
+        let g = tiny();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![1]);
+        assert_eq!(cons[1], vec![2]);
+        assert!(cons[4].is_empty());
+    }
+
+    #[test]
+    fn max_activation_excludes_input() {
+        let g = tiny();
+        // conv output 4·8·8·4B = 1024B is the largest
+        assert_eq!(g.max_activation_bytes(), 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape error")]
+    fn bad_shape_panics() {
+        let (mut b, x) = GraphBuilder::new("bad", Shape::Chw(1, 2, 2));
+        b.add(
+            "c",
+            Op::Conv2d { out_channels: 1, kernel: 5, stride: 1, padding: 0, bias: false, activation: Activation::None },
+            &[x],
+        );
+    }
+}

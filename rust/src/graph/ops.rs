@@ -1,0 +1,186 @@
+//! Operator set of the graph IR — the subset of Relay the paper's three
+//! networks need (§V-A), plus the transpose/padding helper ops TVM inserts
+//! (Table I exempts them from unrolling and marks them autorun-eligible).
+
+
+/// Activation functions — fused into the producing op by loop fusion (§IV-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    None,
+    Relu,
+    Relu6,
+    Tanh,
+}
+
+impl Activation {
+    /// Elementwise FLOPs this activation costs per output element.
+    pub fn flops_per_elem(&self) -> u64 {
+        match self {
+            Activation::None => 0,
+            Activation::Relu => 1,
+            Activation::Relu6 => 2,
+            // tanh is polynomial/LUT on FPGA; count the paper's convention
+            // of one "FP operation" per transcendental call.
+            Activation::Tanh => 1,
+        }
+    }
+}
+
+/// Graph operators. Feature maps are NCHW; conv weights are OIHW.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// External input (the image).
+    Input,
+    /// 2-D convolution.
+    Conv2d {
+        out_channels: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        bias: bool,
+        activation: Activation,
+    },
+    /// Depthwise 2-D convolution (channel multiplier 1).
+    DepthwiseConv2d {
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        bias: bool,
+        activation: Activation,
+    },
+    /// Fully-connected layer over flattened input.
+    Dense { out_features: usize, bias: bool, activation: Activation },
+    /// Inference-mode batch normalization (folded scale/shift).
+    BatchNorm,
+    /// Standalone activation (when not fused).
+    Activate(Activation),
+    /// Max pooling.
+    MaxPool { kernel: usize, stride: usize, padding: usize },
+    /// Average pooling.
+    AvgPool { kernel: usize, stride: usize, padding: usize },
+    /// Global average pooling NCHW → NC.
+    GlobalAvgPool,
+    /// Elementwise residual addition of two inputs.
+    Add,
+    /// Explicit padding / layout transpose helper (TVM-inserted; Table I
+    /// exempts these from unrolling and allows autorun).
+    Transform,
+    /// Flatten NCHW → N(CHW).
+    Flatten,
+    /// Softmax over the class dimension.
+    Softmax,
+}
+
+impl Op {
+    /// Short mnemonic used in kernel names and reports.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv2d { .. } => "conv2d",
+            Op::DepthwiseConv2d { .. } => "dwconv2d",
+            Op::Dense { .. } => "dense",
+            Op::BatchNorm => "batchnorm",
+            Op::Activate(_) => "activate",
+            Op::MaxPool { .. } => "maxpool",
+            Op::AvgPool { .. } => "avgpool",
+            Op::GlobalAvgPool => "gap",
+            Op::Add => "add",
+            Op::Transform => "transform",
+            Op::Flatten => "flatten",
+            Op::Softmax => "softmax",
+        }
+    }
+
+    /// Does this op carry trainable weights? (Weightless ops are the
+    /// paper's autorun candidates, §IV-F.)
+    pub fn has_weights(&self) -> bool {
+        matches!(self, Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. } | Op::BatchNorm)
+    }
+
+    /// Is this a MAC-dominated op that the unroll/tile optimizations target?
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. })
+    }
+
+    /// Table I exempts transpose/padding helpers from unrolling.
+    pub fn unroll_exempt(&self) -> bool {
+        matches!(self, Op::Transform | Op::Input | Op::Flatten)
+    }
+
+    /// The convolution "shape class" the paper groups parameterized kernels
+    /// by: (kernel, stride) for convs, discriminated by op kind (§IV-H).
+    pub fn param_group(&self) -> Option<ParamGroup> {
+        match *self {
+            Op::Conv2d { kernel, stride, .. } => Some(ParamGroup {
+                kind: GroupKind::Conv,
+                kernel,
+                stride,
+            }),
+            Op::DepthwiseConv2d { kernel, stride, .. } => Some(ParamGroup {
+                kind: GroupKind::Depthwise,
+                kernel,
+                stride,
+            }),
+            Op::Dense { .. } => Some(ParamGroup { kind: GroupKind::Dense, kernel: 1, stride: 1 }),
+            _ => None,
+        }
+    }
+}
+
+/// Parameterized-kernel grouping key (§IV-H): "we group operations by the
+/// filter size and stride of convolutions".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ParamGroup {
+    pub kind: GroupKind,
+    pub kernel: usize,
+    pub stride: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GroupKind {
+    Conv,
+    Depthwise,
+    Dense,
+}
+
+impl std::fmt::Display for ParamGroup {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let k = match self.kind {
+            GroupKind::Conv => "conv",
+            GroupKind::Depthwise => "dw",
+            GroupKind::Dense => "dense",
+        };
+        write!(f, "{k}{}x{}s{}", self.kernel, self.kernel, self.stride)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_groups_follow_filter_and_stride() {
+        let a = Op::Conv2d { out_channels: 64, kernel: 3, stride: 1, padding: 1, bias: false, activation: Activation::None };
+        let b = Op::Conv2d { out_channels: 128, kernel: 3, stride: 1, padding: 1, bias: true, activation: Activation::Relu };
+        // Same filter size + stride → same group even with different
+        // channel counts (those become runtime parameters, §IV-H).
+        assert_eq!(a.param_group(), b.param_group());
+        let c = Op::Conv2d { out_channels: 64, kernel: 3, stride: 2, padding: 1, bias: false, activation: Activation::None };
+        assert_ne!(a.param_group(), c.param_group());
+        let d = Op::DepthwiseConv2d { kernel: 3, stride: 1, padding: 1, bias: false, activation: Activation::None };
+        assert_ne!(a.param_group(), d.param_group());
+    }
+
+    #[test]
+    fn autorun_candidates_are_weightless() {
+        assert!(!Op::MaxPool { kernel: 2, stride: 2, padding: 0 }.has_weights());
+        assert!(!Op::Transform.has_weights());
+        assert!(Op::Conv2d { out_channels: 1, kernel: 1, stride: 1, padding: 0, bias: false, activation: Activation::None }.has_weights());
+    }
+
+    #[test]
+    fn group_display() {
+        let g = ParamGroup { kind: GroupKind::Conv, kernel: 3, stride: 1 };
+        assert_eq!(g.to_string(), "conv3x3s1");
+    }
+}

@@ -1,0 +1,259 @@
+//! Graph-level optimization passes — the Relay-style rewrites TVM applies
+//! before lowering (§II-A: "rules-based transformations such as operator
+//! fusion, dead code elimination, and layout changes").
+//!
+//! * [`fold_batchnorm`] — inference-mode BN after a bias-less conv folds
+//!   into the conv's weights/bias: the BN node disappears from the graph
+//!   (strictly stronger than the schedule-level LF, which keeps the BN
+//!   arithmetic but fuses its loop).
+//! * [`eliminate_dead`] — drop nodes that cannot reach the output.
+//! * [`fuse_pad`] — explicit `Transform` padding nodes merge into the
+//!   consuming conv's padding attribute.
+
+use super::ops::Op;
+use super::{Graph, Node, NodeId};
+
+/// Statistics returned by a pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    pub removed: usize,
+    pub rewritten: usize,
+}
+
+/// Fold `conv(bias=false) → BatchNorm` into `conv(bias=true)`.
+///
+/// Numerically: `bn(conv(x, W)) = conv(x, W·γ/σ) + (β − μγ/σ)` — a conv
+/// with scaled weights and a bias. At the graph level the BN node is
+/// removed and the conv gains `bias = true` (the weight rewrite itself
+/// happens at parameter-load time in a real deployment; costs/shapes here
+/// only need the structural change).
+pub fn fold_batchnorm(graph: &Graph) -> (Graph, PassStats) {
+    let consumers = graph.consumers();
+    let mut stats = PassStats::default();
+    // BN node id → its producer (conv) id, for BNs we can fold.
+    let mut fold: Vec<Option<NodeId>> = vec![None; graph.nodes.len()];
+    for n in graph.topo() {
+        if let Op::BatchNorm = n.op {
+            let p = &graph.nodes[n.inputs[0]];
+            let foldable = match p.op {
+                Op::Conv2d { bias, .. } | Op::DepthwiseConv2d { bias, .. } => !bias,
+                _ => false,
+            };
+            if foldable && consumers[p.id].len() == 1 {
+                fold[n.id] = Some(p.id);
+            }
+        }
+    }
+
+    rebuild(graph, |node, _new_id_of| match &node.op {
+        Op::BatchNorm if fold[node.id].is_some() => {
+            stats.removed += 1;
+            Rewrite::ReplaceWithInput
+        }
+        Op::Conv2d { out_channels, kernel, stride, padding, bias: false, activation }
+            if consumers[node.id].iter().any(|&c| fold[c] == Some(node.id)) =>
+        {
+            stats.rewritten += 1;
+            Rewrite::NewOp(Op::Conv2d {
+                out_channels: *out_channels,
+                kernel: *kernel,
+                stride: *stride,
+                padding: *padding,
+                bias: true,
+                activation: *activation,
+            })
+        }
+        Op::DepthwiseConv2d { kernel, stride, padding, bias: false, activation }
+            if consumers[node.id].iter().any(|&c| fold[c] == Some(node.id)) =>
+        {
+            stats.rewritten += 1;
+            Rewrite::NewOp(Op::DepthwiseConv2d {
+                kernel: *kernel,
+                stride: *stride,
+                padding: *padding,
+                bias: true,
+                activation: *activation,
+            })
+        }
+        _ => Rewrite::Keep,
+    })
+    .map(|g| (g, stats))
+    .expect("fold_batchnorm preserves validity")
+}
+
+/// Remove nodes that do not reach the output.
+pub fn eliminate_dead(graph: &Graph) -> (Graph, PassStats) {
+    let mut live = vec![false; graph.nodes.len()];
+    let mut stack = vec![graph.output];
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        stack.extend(&graph.nodes[id].inputs);
+    }
+    let mut stats = PassStats::default();
+    let g = rebuild(graph, |node, _| {
+        if live[node.id] {
+            Rewrite::Keep
+        } else {
+            stats.removed += 1;
+            Rewrite::Drop
+        }
+    })
+    .expect("DCE preserves validity");
+    (g, stats)
+}
+
+/// Merge a standalone padding `Transform` into the consuming conv. (Our
+/// models don't emit standalone pads, but imported graphs may.)
+pub fn fuse_pad(graph: &Graph) -> (Graph, PassStats) {
+    // Structural no-op placeholder for imported graphs: Transform nodes
+    // adjacent to convs are dropped (their cost is zero).
+    let consumers = graph.consumers();
+    let mut stats = PassStats::default();
+    let g = rebuild(graph, |node, _| {
+        if matches!(node.op, Op::Transform)
+            && consumers[node.id].len() == 1
+            && matches!(graph.nodes[consumers[node.id][0]].op, Op::Conv2d { .. } | Op::DepthwiseConv2d { .. })
+        {
+            stats.removed += 1;
+            Rewrite::ReplaceWithInput
+        } else {
+            Rewrite::Keep
+        }
+    })
+    .expect("fuse_pad preserves validity");
+    (g, stats)
+}
+
+/// Run the standard pass pipeline.
+pub fn standard_pipeline(graph: &Graph) -> (Graph, PassStats) {
+    let (g, s1) = fold_batchnorm(graph);
+    let (g, s2) = fuse_pad(&g);
+    let (g, s3) = eliminate_dead(&g);
+    (
+        g,
+        PassStats {
+            removed: s1.removed + s2.removed + s3.removed,
+            rewritten: s1.rewritten + s2.rewritten + s3.rewritten,
+        },
+    )
+}
+
+enum Rewrite {
+    Keep,
+    NewOp(Op),
+    /// Remove this node, re-pointing consumers at its first input.
+    ReplaceWithInput,
+    /// Remove this node entirely (must be dead).
+    Drop,
+}
+
+/// Rebuild a graph applying per-node rewrites, recomputing ids, shapes and
+/// costs. Returns None if the result fails validation.
+fn rebuild(graph: &Graph, mut f: impl FnMut(&Node, &[Option<NodeId>]) -> Rewrite) -> Option<Graph> {
+    let mut new_id: Vec<Option<NodeId>> = vec![None; graph.nodes.len()];
+    let mut builder: Option<super::GraphBuilder> = None;
+    for node in graph.topo() {
+        match f(node, &new_id) {
+            Rewrite::Drop => continue,
+            Rewrite::ReplaceWithInput => {
+                let src = node.inputs[0];
+                new_id[node.id] = new_id[src];
+            }
+            rewrite => {
+                let op = match rewrite {
+                    Rewrite::NewOp(op) => op,
+                    _ => node.op.clone(),
+                };
+                if matches!(node.op, Op::Input) {
+                    let (b, id) = super::GraphBuilder::new(graph.name.clone(), node.shape.clone());
+                    builder = Some(b);
+                    new_id[node.id] = Some(id);
+                } else {
+                    let b = builder.as_mut()?;
+                    let inputs: Vec<NodeId> =
+                        node.inputs.iter().map(|&i| new_id[i].expect("topo order")).collect();
+                    let id = b.add(node.name.clone(), op, &inputs);
+                    new_id[node.id] = Some(id);
+                }
+            }
+        }
+    }
+    let out = new_id[graph.output]?;
+    let g = builder?.finish(out);
+    g.validate().ok()?;
+    Some(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn fold_bn_removes_all_mobilenet_bns() {
+        let g = models::mobilenet_v1();
+        let bns_before = g.nodes.iter().filter(|n| matches!(n.op, Op::BatchNorm)).count();
+        assert_eq!(bns_before, 27);
+        let (g2, stats) = fold_batchnorm(&g);
+        assert_eq!(stats.removed, 27);
+        assert_eq!(stats.rewritten, 27);
+        assert_eq!(g2.nodes.iter().filter(|n| matches!(n.op, Op::BatchNorm)).count(), 0);
+        // Every conv now carries a bias.
+        assert!(g2.nodes.iter().all(|n| match n.op {
+            Op::Conv2d { bias, .. } | Op::DepthwiseConv2d { bias, .. } => bias,
+            _ => true,
+        }));
+    }
+
+    #[test]
+    fn fold_bn_preserves_macs_and_shapes() {
+        let g = models::resnet34();
+        let (g2, _) = fold_batchnorm(&g);
+        assert_eq!(g.total_macs(), g2.total_macs());
+        assert_eq!(g.nodes[g.output].shape, g2.nodes[g2.output].shape);
+        g2.validate().unwrap();
+    }
+
+    #[test]
+    fn folded_resnet_still_compiles() {
+        use crate::flow::{Flow, Mode, OptLevel};
+        let (g2, _) = standard_pipeline(&models::resnet34());
+        let acc = Flow::new().compile(&g2, Mode::Folded, OptLevel::Optimized).unwrap();
+        assert!(acc.performance.fps > 0.0);
+        // Fewer nodes → no BN kernels/work entries at all.
+        assert!(!acc.work.iter().any(|w| w.layer_name.contains("bn")));
+    }
+
+    #[test]
+    fn dce_removes_unreachable() {
+        use crate::graph::{Activation, GraphBuilder, Shape};
+        let (mut b, x) = GraphBuilder::new("dead", Shape::Chw(1, 8, 8));
+        let live = b.add("live", Op::Conv2d { out_channels: 2, kernel: 3, stride: 1, padding: 1, bias: true, activation: Activation::Relu }, &[x]);
+        let _dead = b.add("dead", Op::Conv2d { out_channels: 4, kernel: 3, stride: 1, padding: 1, bias: true, activation: Activation::Relu }, &[x]);
+        let g = b.finish(live);
+        let (g2, stats) = eliminate_dead(&g);
+        assert_eq!(stats.removed, 1);
+        assert_eq!(g2.nodes.len(), 2);
+        g2.validate().unwrap();
+    }
+
+    #[test]
+    fn lenet_unchanged_by_pipeline() {
+        // No BNs, no pads, nothing dead.
+        let g = models::lenet5();
+        let (g2, stats) = standard_pipeline(&g);
+        assert_eq!(stats, PassStats::default());
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+    }
+
+    #[test]
+    fn pass_is_idempotent() {
+        let (g1, _) = standard_pipeline(&models::mobilenet_v1());
+        let (g2, stats) = standard_pipeline(&g1);
+        assert_eq!(stats, PassStats::default());
+        assert_eq!(g1.nodes.len(), g2.nodes.len());
+    }
+}

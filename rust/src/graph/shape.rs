@@ -1,0 +1,228 @@
+//! Shape, FLOP, parameter and activation-size inference per node.
+//!
+//! FLOP counting follows the paper's §V-C convention: GFLOPS is computed
+//! from FPS × "the number of floating point operations performed by the
+//! networks", with a multiply-accumulate counted as 2 FP operations.
+
+
+use super::ops::{Activation, Op};
+
+/// Feature-map shape (batch excluded; the graph is per-frame).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// Channels × height × width.
+    Chw(usize, usize, usize),
+    /// Flat feature vector.
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn elems(&self) -> usize {
+        match *self {
+            Shape::Chw(c, h, w) => c * h * w,
+            Shape::Flat(n) => n,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4 // fp32 everywhere, as in the paper (§V-A)
+    }
+
+    pub fn chw(&self) -> Option<(usize, usize, usize)> {
+        match *self {
+            Shape::Chw(c, h, w) => Some((c, h, w)),
+            Shape::Flat(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Shape::Chw(c, h, w) => write!(f, "{c}x{h}x{w}"),
+            Shape::Flat(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// Static per-node cost summary.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NodeCost {
+    /// Multiply-accumulates.
+    pub macs: u64,
+    /// Total FLOPs (2 per MAC + elementwise work).
+    pub flops: u64,
+    /// Trainable parameter count.
+    pub params: u64,
+    /// Output feature-map bytes.
+    pub out_bytes: u64,
+}
+
+fn conv_out(h: usize, k: usize, s: usize, p: usize) -> usize {
+    (h + 2 * p - k) / s + 1
+}
+
+/// Infer the output shape of `op` applied to `inputs` (first input is the
+/// data path; residual `Add` takes two).
+pub fn infer_shape(op: &Op, inputs: &[&Shape]) -> Result<Shape, String> {
+    let first = *inputs.first().ok_or("op has no inputs")?;
+    match op {
+        Op::Input => Ok(first.clone()),
+        Op::Conv2d { out_channels, kernel, stride, padding, .. } => {
+            let (_, h, w) = first.chw().ok_or("conv2d needs CHW input")?;
+            if h + 2 * padding < *kernel {
+                return Err(format!("conv2d kernel {kernel} larger than padded input {h}"));
+            }
+            Ok(Shape::Chw(*out_channels, conv_out(h, *kernel, *stride, *padding), conv_out(w, *kernel, *stride, *padding)))
+        }
+        Op::DepthwiseConv2d { kernel, stride, padding, .. } => {
+            let (c, h, w) = first.chw().ok_or("dwconv needs CHW input")?;
+            Ok(Shape::Chw(c, conv_out(h, *kernel, *stride, *padding), conv_out(w, *kernel, *stride, *padding)))
+        }
+        Op::Dense { out_features, .. } => match first {
+            Shape::Flat(_) => Ok(Shape::Flat(*out_features)),
+            Shape::Chw(..) => Err("dense needs flat input (insert Flatten)".into()),
+        },
+        Op::BatchNorm | Op::Activate(_) | Op::Transform => Ok(first.clone()),
+        Op::MaxPool { kernel, stride, padding } | Op::AvgPool { kernel, stride, padding } => {
+            let (c, h, w) = first.chw().ok_or("pool needs CHW input")?;
+            Ok(Shape::Chw(c, conv_out(h, *kernel, *stride, *padding), conv_out(w, *kernel, *stride, *padding)))
+        }
+        Op::GlobalAvgPool => {
+            let (c, _, _) = first.chw().ok_or("gap needs CHW input")?;
+            Ok(Shape::Flat(c))
+        }
+        Op::Add => {
+            if inputs.len() != 2 {
+                return Err("add needs exactly two inputs".into());
+            }
+            if inputs[0] != inputs[1] {
+                return Err(format!("add shape mismatch: {} vs {}", inputs[0], inputs[1]));
+            }
+            Ok(first.clone())
+        }
+        Op::Flatten => Ok(Shape::Flat(first.elems())),
+        Op::Softmax => Ok(first.clone()),
+    }
+}
+
+/// Compute static costs for `op` given its input and inferred output shape.
+pub fn node_cost(op: &Op, input: &Shape, output: &Shape) -> NodeCost {
+    let out_elems = output.elems() as u64;
+    let act_flops = |a: &Activation| a.flops_per_elem() * out_elems;
+    let (macs, mut flops, params) = match op {
+        Op::Conv2d { out_channels, kernel, bias, activation, .. } => {
+            let (cin, _, _) = input.chw().expect("checked in infer_shape");
+            let k2 = (kernel * kernel) as u64;
+            let macs = out_elems * cin as u64 * k2;
+            let mut flops = 2 * macs + act_flops(activation);
+            let mut params = *out_channels as u64 * cin as u64 * k2;
+            if *bias {
+                params += *out_channels as u64;
+                flops += out_elems;
+            }
+            (macs, flops, params)
+        }
+        Op::DepthwiseConv2d { kernel, bias, activation, .. } => {
+            let (c, _, _) = input.chw().expect("checked");
+            let k2 = (kernel * kernel) as u64;
+            let macs = out_elems * k2;
+            let mut flops = 2 * macs + act_flops(activation);
+            let mut params = c as u64 * k2;
+            if *bias {
+                params += c as u64;
+                flops += out_elems;
+            }
+            (macs, flops, params)
+        }
+        Op::Dense { out_features, bias, activation } => {
+            let cin = input.elems() as u64;
+            let macs = cin * *out_features as u64;
+            let mut flops = 2 * macs + act_flops(activation);
+            let mut params = cin * *out_features as u64;
+            if *bias {
+                params += *out_features as u64;
+                flops += out_elems;
+            }
+            (macs, flops, params)
+        }
+        Op::BatchNorm => {
+            let c = match input {
+                Shape::Chw(c, ..) => *c as u64,
+                Shape::Flat(n) => *n as u64,
+            };
+            (0, 2 * out_elems, 4 * c)
+        }
+        Op::Activate(a) => (0, act_flops(a), 0),
+        Op::MaxPool { kernel, .. } => (0, out_elems * ((kernel * kernel - 1) as u64), 0),
+        Op::AvgPool { kernel, .. } => (0, out_elems * ((kernel * kernel) as u64), 0),
+        Op::GlobalAvgPool => {
+            let (_, h, w) = input.chw().expect("checked");
+            (0, out_elems * (h * w) as u64, 0)
+        }
+        Op::Add => (0, out_elems, 0),
+        Op::Softmax => (0, 5 * out_elems, 0),
+        Op::Input | Op::Transform | Op::Flatten => (0, 0, 0),
+    };
+    if matches!(op, Op::Input) {
+        flops = 0;
+    }
+    NodeCost { macs, flops, params, out_bytes: output.bytes() as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::Activation;
+
+    #[test]
+    fn conv_shape_and_cost() {
+        let op = Op::Conv2d { out_channels: 6, kernel: 5, stride: 1, padding: 0, bias: true, activation: Activation::Tanh };
+        let input = Shape::Chw(1, 32, 32);
+        let out = infer_shape(&op, &[&input]).unwrap();
+        assert_eq!(out, Shape::Chw(6, 28, 28));
+        let c = node_cost(&op, &input, &out);
+        // LeNet C1: 6·28·28 outputs × 25 taps = 117,600 MACs
+        assert_eq!(c.macs, 117_600);
+        assert_eq!(c.params, 6 * 25 + 6);
+    }
+
+    #[test]
+    fn dwconv_costs_scale_with_channels_not_channel_sq() {
+        let op = Op::DepthwiseConv2d { kernel: 3, stride: 1, padding: 1, bias: false, activation: Activation::None };
+        let input = Shape::Chw(32, 16, 16);
+        let out = infer_shape(&op, &[&input]).unwrap();
+        assert_eq!(out, Shape::Chw(32, 16, 16));
+        let c = node_cost(&op, &input, &out);
+        assert_eq!(c.macs, (32 * 16 * 16 * 9) as u64);
+    }
+
+    #[test]
+    fn add_requires_matching_shapes() {
+        let a = Shape::Chw(64, 8, 8);
+        let b = Shape::Chw(64, 8, 8);
+        assert!(infer_shape(&Op::Add, &[&a, &b]).is_ok());
+        let c = Shape::Chw(32, 8, 8);
+        assert!(infer_shape(&Op::Add, &[&a, &c]).is_err());
+    }
+
+    #[test]
+    fn dense_needs_flatten() {
+        let op = Op::Dense { out_features: 10, bias: true, activation: Activation::None };
+        assert!(infer_shape(&op, &[&Shape::Chw(16, 5, 5)]).is_err());
+        assert_eq!(infer_shape(&op, &[&Shape::Flat(400)]).unwrap(), Shape::Flat(10));
+    }
+
+    #[test]
+    fn pool_window_arithmetic() {
+        let op = Op::MaxPool { kernel: 3, stride: 2, padding: 1 };
+        let out = infer_shape(&op, &[&Shape::Chw(64, 112, 112)]).unwrap();
+        assert_eq!(out, Shape::Chw(64, 56, 56));
+    }
+
+    #[test]
+    fn conv_too_small_errors() {
+        let op = Op::Conv2d { out_channels: 4, kernel: 7, stride: 1, padding: 0, bias: false, activation: Activation::None };
+        assert!(infer_shape(&op, &[&Shape::Chw(3, 4, 4)]).is_err());
+    }
+}

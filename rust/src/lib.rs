@@ -1,0 +1,65 @@
+//! # tvm-fpga-flow
+//!
+//! Reproduction of *"A Compilation Flow for the Generation of CNN Inference
+//! Accelerators on FPGAs"* (Chung & Abdelrahman, 2022) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper compiles a frozen CNN graph through TVM into Intel-OpenCL
+//! kernels, applies nine automated optimizations (its Table I), and
+//! synthesizes a Stratix 10SX bitstream with Intel AOC. This crate rebuilds
+//! the whole flow with the FPGA toolchain replaced by explicit models (no
+//! FPGA in this environment — see DESIGN.md §Substitutions):
+//!
+//! * [`graph`] — Relay-analog CNN graph IR + the three evaluation networks
+//!   (LeNet-5, MobileNetV1, ResNet-34).
+//! * [`texpr`] — tensor-expression loop nests lowered from graph ops.
+//! * [`schedule`] — scheduling primitives: unroll, strip-mine/tile, fuse,
+//!   cache-write, parameterize (the paper's §IV-A..D, H).
+//! * [`codegen`] — OpenCL-like kernel IR + pseudo-OpenCL source emission.
+//! * [`aoc`] — the "AOC compiler" model: LSU inference, loop-pipelining II
+//!   analysis, ALUT/FF/DSP/BRAM estimation, f_max prediction.
+//! * [`device`] — Stratix 10SX D5005 device model + baseline platforms.
+//! * [`sim`] — cycle-approximate dataflow simulator for pipelined
+//!   (channels, autorun, concurrent queues) and folded (parameterized
+//!   kernels) execution.
+//! * [`flow`] — the end-to-end compilation flow (the paper's contribution):
+//!   pattern-based optimization application (Table I) + legality rules
+//!   (§IV-J) + compile driver.
+//! * [`dse`] — design-space explorer over unroll/tile factors (the paper's
+//!   future-work §IV-J automated).
+//! * [`runtime`] — PJRT runtime: loads `artifacts/*.hlo.txt` AOT-lowered
+//!   from JAX (L2) with Pallas kernels (L1) and executes inference on CPU.
+//!   Python never runs on this path.
+//! * [`coordinator`] — tokio inference server: request router, dynamic
+//!   batcher, command-queue execution, metrics.
+//! * [`data`] — synthetic dataset generation (deterministic).
+//! * [`metrics`] — FPS/GFLOPS accounting and table formatting (§V-C).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tvm_fpga_flow::flow::{Flow, Mode, OptLevel};
+//! use tvm_fpga_flow::graph::models;
+//!
+//! let net = models::lenet5();
+//! let acc = Flow::new().compile(&net, Mode::Pipelined, OptLevel::Optimized).unwrap();
+//! println!("fmax = {:.0} MHz, FPS = {:.0}", acc.synthesis.fmax_mhz, acc.performance.fps);
+//! ```
+
+pub mod aoc;
+pub mod codegen;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod dse;
+pub mod flow;
+pub mod graph;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod texpr;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,364 @@
+//! `fpga-flow` — CLI for the compilation flow.
+//!
+//! ```text
+//! fpga-flow compile  --net lenet5 [--mode pipelined|folded] [--base] [--explain]
+//! fpga-flow report                      # Tables II/III/IV vs the paper
+//! fpga-flow codegen  --net lenet5       # dump pseudo-OpenCL
+//! fpga-flow simulate --net resnet34 [--base]
+//! fpga-flow dse      --net mobilenet_v1 [--budget 16]
+//! fpga-flow infer    --net lenet5 --frames 100 [--impl pallas|ref]
+//! fpga-flow serve    --net lenet5 --requests 256 --workers 2
+//! fpga-flow hybrid   --net mobilenet_v1      # mixed pipelined/folded (§V-F)
+//! fpga-flow multi    --net resnet34 --devices 2  # multi-FPGA (§VII)
+//! fpga-flow passes   --net resnet34          # graph-level passes (bn-fold, DCE)
+//! fpga-flow validate                          # artifact cross-checks
+//! ```
+
+use tvm_fpga_flow::coordinator::{InferenceServer, ServerConfig};
+use tvm_fpga_flow::dse;
+use tvm_fpga_flow::flow::{Flow, Mode, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::metrics::{self, paper};
+use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
+use tvm_fpga_flow::util::bench::Table;
+use tvm_fpga_flow::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "compile" => cmd_compile(&args),
+        "report" => cmd_report(),
+        "codegen" => cmd_codegen(&args),
+        "simulate" => cmd_simulate(&args),
+        "dse" => cmd_dse(&args),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "hybrid" => cmd_hybrid(&args),
+        "multi" => cmd_multi(&args),
+        "passes" => cmd_passes(&args),
+        "validate" => cmd_validate(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "fpga-flow — CNN-accelerator compilation flow (paper reproduction)\n\
+         commands: compile report codegen simulate dse infer serve hybrid multi\n\
+                   passes validate\n\
+         see `rust/src/main.rs` header for per-command flags"
+    );
+}
+
+fn net_arg(args: &Args) -> tvm_fpga_flow::Result<tvm_fpga_flow::graph::Graph> {
+    let name = args.opt_or("net", "lenet5");
+    models::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown network {name} (lenet5|mobilenet_v1|resnet34)"))
+}
+
+fn mode_arg(args: &Args, net: &str) -> Mode {
+    match args.opt("mode") {
+        Some("pipelined") => Mode::Pipelined,
+        Some("folded") => Mode::Folded,
+        _ => Flow::paper_mode(net),
+    }
+}
+
+fn cmd_compile(args: &Args) -> tvm_fpga_flow::Result<()> {
+    let g = net_arg(args)?;
+    let mode = mode_arg(args, &g.name);
+    let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
+    let flow = Flow::new();
+    if args.has_flag("explain") {
+        println!(
+            "flow stages (Fig. 1): frozen graph [{} nodes, {:.2} GFLOPs]\n\
+             → relay-analog IR → tensor-expression loop nests\n\
+             → schedule ({} mode: {})\n\
+             → OpenCL-like kernels → AOC model (LSU inference, II, resources, fmax)\n\
+             → performance simulation",
+            g.nodes.len(),
+            g.total_flops() as f64 / 1e9,
+            mode.name(),
+            if level == OptLevel::Base { "TVM default" } else { "Table-I optimizations" },
+        );
+    }
+    let acc = flow.compile(&g, mode, level)?;
+    if args.has_flag("json") {
+        println!("{}", acc.to_json().to_string());
+        return Ok(());
+    }
+    let (logic, bram, dsp, fmax) = acc.synthesis.table2_row();
+    println!("network      : {} ({} mode)", acc.network, acc.mode.name());
+    println!("kernels      : {} (+{} channels, {} queues)", acc.program.kernels.len(), acc.program.channels.len(), acc.program.queues);
+    println!("applied opts : {}", acc.applied.iter().map(|o| o.abbrev()).collect::<Vec<_>>().join(" "));
+    println!("resources    : logic {logic:.1}%  bram {bram:.1}%  dsp {dsp:.1}%  fmax {fmax:.0} MHz");
+    println!("performance  : {:.2} FPS ({:.3} ms/frame, bottleneck: {})", acc.performance.fps, acc.performance.frame_time_s * 1e3, acc.performance.bottleneck);
+    println!("GFLOPS       : {:.2}", acc.gflops());
+    Ok(())
+}
+
+fn cmd_report() -> tvm_fpga_flow::Result<()> {
+    let flow = Flow::new();
+    let mut t2 = Table::new("Table II — resources & fmax (ours vs paper)", &["network", "logic%", "paper", "bram%", "paper", "dsp%", "paper", "fmax", "paper"]);
+    let mut t3 = Table::new("Table III — applied optimizations", &["network", "ours", "paper"]);
+    let mut t4 = Table::new("Table IV — base vs optimized FPS", &["network", "base", "paper", "opt", "paper", "speedup", "paper"]);
+    for ((name, pl, pb, pd, pf), ((_, p3), (_, p4b, p4o, p4s))) in paper::TABLE2
+        .iter()
+        .zip(paper::TABLE3.iter().zip(paper::TABLE4.iter()))
+    {
+        let g = models::by_name(name).unwrap();
+        let mode = Flow::paper_mode(name);
+        let opt = flow.compile(&g, mode, OptLevel::Optimized)?;
+        let base = flow.compile(&g, mode, OptLevel::Base)?;
+        let (l, b, d, f) = opt.synthesis.table2_row();
+        t2.row(&[
+            name.to_string(),
+            format!("{l:.0}"), format!("{pl:.0}"),
+            format!("{b:.0}"), format!("{pb:.0}"),
+            format!("{d:.0}"), format!("{pd:.0}"),
+            format!("{f:.0}"), format!("{pf:.0}"),
+        ]);
+        t3.row(&[
+            name.to_string(),
+            opt.applied.iter().map(|o| o.abbrev()).collect::<Vec<_>>().join(" "),
+            p3.join(" "),
+        ]);
+        let (bf, of) = (base.performance.fps, opt.performance.fps);
+        t4.row(&[
+            name.to_string(),
+            format!("{bf:.4}"), format!("{p4b:.4}"),
+            format!("{of:.2}"), format!("{p4o:.2}"),
+            format!("{:.1}x", of / bf), format!("{p4s:.1}x"),
+        ]);
+    }
+    t2.print();
+    t3.print();
+    t4.print();
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> tvm_fpga_flow::Result<()> {
+    let g = net_arg(args)?;
+    let mode = mode_arg(args, &g.name);
+    let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
+    let acc = Flow::new().compile(&g, mode, level)?;
+    println!("// pseudo-OpenCL for {} ({} mode)\n", g.name, mode.name());
+    print!("{}", acc.program.to_pseudo_opencl());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> tvm_fpga_flow::Result<()> {
+    let g = net_arg(args)?;
+    let mode = mode_arg(args, &g.name);
+    let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
+    let acc = Flow::new().compile(&g, mode, level)?;
+    let mut t = Table::new(
+        &format!("per-layer timing — {} ({}, fmax {:.0} MHz)", g.name, mode.name(), acc.synthesis.fmax_mhz),
+        &["layer", "kernel", "compute cyc", "memory cyc", "governing"],
+    );
+    for l in acc.performance.per_layer.iter().take(40) {
+        t.row(&[
+            l.layer.clone(),
+            l.kernel.clone(),
+            format!("{:.0}", l.compute_cycles),
+            format!("{:.0}", l.memory_cycles),
+            if l.compute_cycles >= l.memory_cycles { "compute".into() } else { "memory".into() },
+        ]);
+    }
+    t.print();
+    println!("total: {:.2} FPS, host fraction {:.1}%", acc.performance.fps, acc.performance.host_frac * 100.0);
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> tvm_fpga_flow::Result<()> {
+    let g = net_arg(args)?;
+    let flow = Flow::new();
+    let budget: usize = args.opt_parse("budget").unwrap_or(16);
+    let mode = mode_arg(args, &g.name);
+    let r = match mode {
+        Mode::Folded => dse::explore_folded(&flow, &g, budget),
+        Mode::Pipelined => dse::explore_pipelined(&flow, &g),
+    };
+    println!("evaluated {} design points ({} rejected)", r.evaluated, r.log.iter().filter(|p| p.rejected.is_some()).count());
+    if let Some(best) = &r.best {
+        println!(
+            "best: {:.2} FPS @ {:.0} MHz  (dsp {:.1}%, logic {:.1}%, bram {:.1}%)",
+            best.fps, best.fmax_mhz, best.dsp_frac * 100.0, best.logic_frac * 100.0, best.bram_frac * 100.0
+        );
+        for (g, (a, b)) in &best.plan.group_tiles {
+            println!("  {g}: tile ({a}, {b})");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> tvm_fpga_flow::Result<()> {
+    let name = args.opt_or("net", "lenet5").to_string();
+    let frames: usize = args.opt_parse("frames").unwrap_or(100);
+    let impl_ = match args.opt("impl") {
+        Some("pallas") => Impl::Pallas,
+        _ => Impl::Ref,
+    };
+    let rt = Runtime::new(Manifest::default_dir())?;
+    let model = rt.load(&name, impl_, 1)?;
+    let data = tvm_fpga_flow::data::for_network(&name, frames, 0)
+        .ok_or_else(|| anyhow::anyhow!("no data generator for {name}"))?;
+    let t0 = std::time::Instant::now();
+    let mut hist = [0u64; 16];
+    for i in 0..frames {
+        let pred = model.classify(&rt.client, data.frame(i))?[0];
+        hist[(pred as usize).min(15)] += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let fps = metrics::fps(frames as u64, dt);
+    let g = models::by_name(&name).unwrap();
+    println!(
+        "{name} [{}]: {frames} frames in {dt:.3}s → {fps:.1} FPS, {:.2} GFLOPS (CPU/PJRT)",
+        impl_.tag(),
+        metrics::gflops(fps, g.total_flops())
+    );
+    println!("prediction histogram (first 16 classes): {hist:?}");
+    Ok(())
+}
+
+fn cmd_hybrid(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::flow::{default_factors, OptConfig};
+    let g = net_arg(args)?;
+    let flow = Flow::new();
+    let plan = default_factors(&g);
+    let folded = flow.compile(&g, Mode::Folded, OptLevel::Optimized)?;
+    match flow.best_hybrid(&g, &OptConfig::optimized(), &plan) {
+        Some(h) => {
+            println!(
+                "{}: best hybrid cut at node {} → {:.2} FPS (front {:.2} ms pipelined, back {:.2} ms folded)",
+                g.name, h.cut, h.fps, h.front_interval_s * 1e3, h.back_time_s * 1e3
+            );
+            println!("pure folded: {:.2} FPS", folded.performance.fps);
+        }
+        None => println!("{}: no clean hybrid cut fits the device", g.name),
+    }
+    Ok(())
+}
+
+fn cmd_multi(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::flow::multi::Link;
+    use tvm_fpga_flow::flow::{default_factors, OptConfig};
+    let g = net_arg(args)?;
+    let devices: usize = args.opt_parse("devices").unwrap_or(2);
+    let flow = Flow::new();
+    let plan = default_factors(&g);
+    let m = flow.compile_multi(&g, devices, &OptConfig::optimized(), &plan, &Link::default())?;
+    println!("{}: {} devices → {:.2} FPS", g.name, m.devices, m.fps);
+    for sh in &m.shares {
+        println!(
+            "  dev{}: {} layers, {:.2} ms/frame (+{:.2} ms link), fmax {:.0} MHz, logic {:.0}%",
+            sh.device_index,
+            sh.layers.len(),
+            sh.frame_time_s * 1e3,
+            sh.transfer_in_s * 1e3,
+            sh.fmax_mhz,
+            sh.logic_frac * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_passes(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::graph::passes;
+    let g = net_arg(args)?;
+    let (g2, stats) = passes::standard_pipeline(&g);
+    println!(
+        "{}: {} nodes → {} nodes ({} removed, {} rewritten by bn-fold/pad-fuse/DCE)",
+        g.name,
+        g.nodes.len(),
+        g2.nodes.len(),
+        stats.removed,
+        stats.rewritten
+    );
+    let flow = Flow::new();
+    let mode = Flow::paper_mode(&g.name);
+    let before = flow.compile(&g, mode, OptLevel::Optimized)?;
+    let after = flow.compile(&g2, mode, OptLevel::Optimized)?;
+    println!(
+        "compiled FPS: {:.2} (original graph) vs {:.2} (after passes)",
+        before.performance.fps, after.performance.fps
+    );
+    Ok(())
+}
+
+fn cmd_validate() -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::runtime::hlo;
+    let m = Manifest::load(Manifest::default_dir())?;
+    let mut problems = 0usize;
+    for net in &m.networks {
+        let g = models::by_name(&net.name);
+        // 1. manifest weights must match the rust graph definition.
+        let total: usize = net.params.iter().map(|(_, _, _, nb)| nb).sum();
+        match &g {
+            Some(g) if total as u64 == g.weight_bytes() => {
+                println!("[ok] {}: {} params, {:.1} MB weights", net.name, net.params.len(), total as f64 / 1e6)
+            }
+            Some(g) => {
+                println!("[!!] {}: weights {} B != graph {} B", net.name, total, g.weight_bytes());
+                problems += 1;
+            }
+            None => println!("[--] {}: no rust graph (python-only network)", net.name),
+        }
+        // 2. every executable parses and has image+weights parameters.
+        for (file, impl_, batch) in &net.executables {
+            let text = std::fs::read_to_string(m.dir.join(file))?;
+            let s = hlo::stats(&text);
+            let expect = net.params.len() + 1;
+            if s.entry_parameters != expect {
+                println!("[!!] {file}: {} entry params, expected {expect}", s.entry_parameters);
+                problems += 1;
+            } else {
+                println!(
+                    "[ok] {file} (impl={impl_}, b{batch}): {} instrs, {} convs, {} dots, {} whiles",
+                    s.instructions, s.convolutions, s.dots, s.while_loops
+                );
+            }
+        }
+    }
+    anyhow::ensure!(problems == 0, "{problems} validation problem(s)");
+    println!("artifacts validated.");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
+    let requests: usize = args.opt_parse("requests").unwrap_or(256);
+    let workers: usize = args.opt_parse("workers").unwrap_or(2);
+    let name = args.opt_or("net", "lenet5").to_string();
+    let server = InferenceServer::start(ServerConfig {
+        network: name.clone(),
+        workers,
+        ..Default::default()
+    })?;
+    let data = tvm_fpga_flow::data::for_network(&name, requests.min(512), 1)
+        .ok_or_else(|| anyhow::anyhow!("no data generator for {name}"))?;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| server.infer_async(data.frame(i % data.frames()).to_vec()))
+        .collect::<Result<_, _>>()?;
+    for rx in rxs {
+        rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!(
+        "{requests} requests, {workers} queues: {:.1} req/s  p50 {}µs  p99 {}µs  ({} batches, {} batched frames)",
+        requests as f64 / dt,
+        stats.p50_us.unwrap_or(0),
+        stats.p99_us.unwrap_or(0),
+        stats.batches,
+        stats.batched_frames,
+    );
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Metrics (§V-C): FPS, GFLOPS, comparison accounting, plus the paper's
+//! published numbers for every table so benches can print
+//! ours-vs-paper side by side.
+
+/// FPS from a measured duration over N frames (§V-C: N = 1000).
+pub fn fps(frames: u64, total_seconds: f64) -> f64 {
+    frames as f64 / total_seconds
+}
+
+/// GFLOPS from FPS and per-frame FLOPs (§V-C).
+pub fn gflops(fps: f64, flops_per_frame: u64) -> f64 {
+    fps * flops_per_frame as f64 / 1e9
+}
+
+/// Speedup formatted the way the paper's tables do: `1604 (3.07×)`.
+pub fn speedup_cell(ours: f64, theirs: f64) -> String {
+    format!("{theirs:.4} ({:.2}x)", ours / theirs)
+}
+
+/// Published values from the paper, used by the table benches to print the
+/// reference column and by EXPERIMENTS.md to compute deviations.
+pub mod paper {
+    /// Table II rows: (network, logic %, bram %, dsp %, f_max MHz).
+    pub const TABLE2: [(&str, f64, f64, f64, f64); 3] = [
+        ("lenet5", 25.0, 19.0, 5.0, 218.0),
+        ("mobilenet_v1", 46.0, 48.0, 15.0, 187.0),
+        ("resnet34", 59.0, 61.0, 16.0, 125.0),
+    ];
+
+    /// Table III rows: (network, applied optimization abbreviations).
+    pub const TABLE3: [(&str, &[&str]); 3] = [
+        ("lenet5", &["LU", "LF", "CW", "OF", "CH", "AR", "CE"]),
+        ("mobilenet_v1", &["PK", "LU", "LT", "LF", "CW", "OF"]),
+        ("resnet34", &["PK", "LU", "LT", "LF", "CW", "OF"]),
+    ];
+
+    /// Table IV rows: (network, base FPS, optimized FPS, speedup).
+    pub const TABLE4: [(&str, f64, f64, f64); 3] = [
+        ("lenet5", 524.0, 4917.0, 9.38),
+        ("mobilenet_v1", 0.17, 30.3, 178.2),
+        ("resnet34", 8.3e-3, 7.04, 846.0),
+    ];
+
+    /// Table V rows: (network, S10SX FPS, TVM-1t, TVM-56t, TF, TF-cuDNN).
+    /// Note the paper's internal inconsistency: ResNet-34 is 7.04 FPS in
+    /// Table IV but 4.6 FPS in Table V (we reproduce both, see
+    /// EXPERIMENTS.md).
+    pub const TABLE5: [(&str, f64, f64, f64, f64, f64); 3] = [
+        ("lenet5", 4917.0, 2345.0, 1470.0, 1075.0, 1604.0),
+        ("mobilenet_v1", 30.3, 15.6, 84.5, 21.6, 43.7),
+        ("resnet34", 4.6, 1.2, 13.7, 10.7, 31.7),
+    ];
+
+    /// §V-E comparisons.
+    pub const SEC5E_DICECCO_GFLOPS: f64 = 50.0; // their 3×3 Winograd engine
+    pub const SEC5E_OURS_3X3_GFLOPS: f64 = 70.4; // paper's claim for ResNet-34 3×3
+    pub const SEC5E_HADJIS_GFLOPS_NORM: f64 = 0.59; // normalized LeNet-5
+    pub const SEC5E_OURS_LENET_GFLOPS: f64 = 1.91;
+    pub const SEC5E_DNNWEAVER_SPEEDUP: f64 = 9.22; // AlexNet vs our MobileNet
+    /// FP-operation counts the paper quotes in §V-E.
+    pub const SEC5E_LENET_FLOPS: f64 = 389e3;
+    pub const SEC5E_MOBILENET_FLOPS: f64 = 1.11e9;
+}
+
+/// Relative deviation |ours/paper − 1| as a percentage (EXPERIMENTS.md).
+pub fn deviation_pct(ours: f64, paper: f64) -> f64 {
+    if paper == 0.0 {
+        return f64::NAN;
+    }
+    (ours / paper - 1.0).abs() * 100.0
+}
+
+/// Simple latency recorder for the coordinator: p50/p95/p99 over a window.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, micros: u64) {
+        self.samples_us.push(micros);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        if self.samples_us.is_empty() {
+            return None;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        Some(s[idx.min(s.len() - 1)])
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples_us.is_empty() {
+            return None;
+        }
+        Some(self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fps_and_gflops() {
+        assert_eq!(fps(1000, 2.0), 500.0);
+        // §V-E cross-check: 4917 FPS × 389K FLOPs ≈ 1.91 GFLOPS
+        let g = gflops(4917.0, 389_000);
+        assert!((g - 1.91).abs() < 0.01, "{g}");
+    }
+
+    #[test]
+    fn paper_table5_sec5e_consistency() {
+        // DiCecco comparison: 70.4 / 50 = 1.4× (paper: "a speedup of 1.4×")
+        let s = paper::SEC5E_OURS_3X3_GFLOPS / paper::SEC5E_DICECCO_GFLOPS;
+        assert!((s - 1.4).abs() < 0.01);
+        // Hadjis: 1.91 / 0.59 ≈ 3.23×
+        let h = paper::SEC5E_OURS_LENET_GFLOPS / paper::SEC5E_HADJIS_GFLOPS_NORM;
+        assert!((h - 3.23).abs() < 0.02);
+    }
+
+    #[test]
+    fn deviation() {
+        assert!((deviation_pct(110.0, 100.0) - 10.0).abs() < 1e-9);
+        assert!(deviation_pct(1.0, 0.0).is_nan());
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::default();
+        for i in 1..=100 {
+            l.record(i);
+        }
+        assert_eq!(l.percentile(50.0), Some(51)); // nearest-rank on 1..=100
+        assert_eq!(l.percentile(99.0), Some(99));
+        assert_eq!(l.percentile(0.0), Some(1));
+        assert!((l.mean().unwrap() - 50.5).abs() < 1e-9);
+        assert_eq!(LatencyStats::default().percentile(50.0), None);
+    }
+}

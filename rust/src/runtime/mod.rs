@@ -1,0 +1,372 @@
+//! PJRT runtime: loads the HLO-text executables AOT-lowered from the JAX
+//! L2 models (which call the L1 Pallas kernels) and runs inference on the
+//! CPU PJRT client. Python never runs on this path — `make artifacts` is
+//! the only python invocation in the whole system.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md: serialized protos from jax ≥ 0.5 carry
+//! 64-bit ids that xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids).
+//!
+//! Weight parameters are pre-transferred to device buffers once at load
+//! (`execute_b` path) so the per-request hot path moves only the image.
+
+pub mod hlo;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// One entry of `artifacts/manifest.json` per network.
+#[derive(Debug, Clone)]
+pub struct NetworkArtifacts {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub weights_file: String,
+    /// (file, impl, batch)
+    pub executables: Vec<(String, String, usize)>,
+    /// (name, shape, byte offset, byte length) per parameter, in order.
+    pub params: Vec<(String, Vec<usize>, usize, usize)>,
+}
+
+/// Parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub networks: Vec<NetworkArtifacts>,
+    /// (file, m, k, n) matmul micro-kernels.
+    pub kernels: Vec<(String, usize, usize, usize)>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("missing artifacts (run `make artifacts`): {e}"))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+
+        let mut networks = Vec::new();
+        let nets = j.get("networks").and_then(Json::as_obj).ok_or_else(|| anyhow::anyhow!("manifest: no networks"))?;
+        for (name, entry) in nets {
+            let input_shape = entry
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_u64).map(|v| v as usize).collect())
+                .unwrap_or_default();
+            let num_classes = entry.get("num_classes").and_then(Json::as_u64).unwrap_or(0) as usize;
+            let weights_file = entry.get("weights_file").and_then(Json::as_str).unwrap_or("").to_string();
+            let mut executables = Vec::new();
+            for e in entry.get("executables").and_then(Json::as_arr).unwrap_or(&[]) {
+                executables.push((
+                    e.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+                    e.get("impl").and_then(Json::as_str).unwrap_or("").to_string(),
+                    e.get("batch").and_then(Json::as_u64).unwrap_or(1) as usize,
+                ));
+            }
+            let mut params = Vec::new();
+            for p in entry.get("params").and_then(Json::as_arr).unwrap_or(&[]) {
+                params.push((
+                    p.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                    p.get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_u64).map(|v| v as usize).collect())
+                        .unwrap_or_default(),
+                    p.get("offset").and_then(Json::as_u64).unwrap_or(0) as usize,
+                    p.get("nbytes").and_then(Json::as_u64).unwrap_or(0) as usize,
+                ));
+            }
+            networks.push(NetworkArtifacts {
+                name: name.clone(),
+                input_shape,
+                num_classes,
+                weights_file,
+                executables,
+                params,
+            });
+        }
+
+        let mut kernels = Vec::new();
+        for k in j.get("kernels").and_then(Json::as_arr).unwrap_or(&[]) {
+            kernels.push((
+                k.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+                k.get("m").and_then(Json::as_u64).unwrap_or(0) as usize,
+                k.get("k").and_then(Json::as_u64).unwrap_or(0) as usize,
+                k.get("n").and_then(Json::as_u64).unwrap_or(0) as usize,
+            ));
+        }
+
+        Ok(Manifest { dir, networks, kernels })
+    }
+
+    pub fn network(&self, name: &str) -> Option<&NetworkArtifacts> {
+        self.networks.iter().find(|n| n.name == name)
+    }
+
+    /// Default artifacts dir: `$REPRO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("REPRO_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// Which functional path to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Impl {
+    /// Every MAC through the L1 Pallas kernels (functional verification).
+    Pallas,
+    /// Pure-XLA lowering (optimized CPU baseline for Table V).
+    Ref,
+}
+
+impl Impl {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Impl::Pallas => "pallas",
+            Impl::Ref => "ref",
+        }
+    }
+}
+
+/// A compiled network executable with device-resident weights.
+pub struct LoadedModel {
+    pub network: String,
+    pub impl_: Impl,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    exe: xla::PjRtLoadedExecutable,
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    /// Host copies of the weights, kept for the naive literal-transfer
+    /// path (`infer_via_literals`) used by the §Perf before/after bench.
+    weight_host: Vec<(Vec<f32>, Vec<usize>)>,
+}
+
+/// The PJRT runtime: one CPU client + the artifacts manifest.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Load + compile one network executable and pre-transfer its weights.
+    pub fn load(&self, network: &str, impl_: Impl, batch: usize) -> crate::Result<LoadedModel> {
+        let net = self
+            .manifest
+            .network(network)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {network}"))?;
+        let (file, _, _) = net
+            .executables
+            .iter()
+            .find(|(_, i, b)| i == impl_.tag() && *b == batch)
+            .ok_or_else(|| anyhow::anyhow!("no {network} executable impl={} batch={batch}", impl_.tag()))?;
+
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compile: {e:?}"))?;
+
+        // Load the weight blob and pre-transfer each parameter (§Perf L3:
+        // the request path must move only the image, never the weights).
+        let blob = std::fs::read(self.manifest.dir.join(&net.weights_file))?;
+        let mut weight_buffers = Vec::with_capacity(net.params.len());
+        let mut weight_host = Vec::with_capacity(net.params.len());
+        for (name, shape, offset, nbytes) in &net.params {
+            let bytes = blob
+                .get(*offset..*offset + *nbytes)
+                .ok_or_else(|| anyhow::anyhow!("weights blob too short at {name}"))?;
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&floats, shape, None)
+                .map_err(|e| anyhow::anyhow!("transfer {name}: {e:?}"))?;
+            weight_buffers.push(buf);
+            weight_host.push((floats, shape.clone()));
+        }
+
+        Ok(LoadedModel {
+            network: network.to_string(),
+            impl_,
+            batch,
+            input_shape: net.input_shape.clone(),
+            num_classes: net.num_classes,
+            exe,
+            weight_buffers,
+            weight_host,
+        })
+    }
+
+    /// Load a matmul micro-kernel executable (runtime hot-path bench).
+    pub fn load_matmul(&self, m: usize, k: usize, n: usize) -> crate::Result<xla::PjRtLoadedExecutable> {
+        let (file, ..) = self
+            .manifest
+            .kernels
+            .iter()
+            .find(|(_, mm, kk, nn)| *mm == m && *kk == k && *nn == n)
+            .ok_or_else(|| anyhow::anyhow!("no matmul kernel {m}x{k}x{n}"))?;
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compile: {e:?}"))
+    }
+}
+
+impl LoadedModel {
+    /// Elements of one input frame.
+    pub fn frame_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Run one batch: `frames` must hold `batch × frame_elems()` floats.
+    /// Returns `batch × num_classes` logits.
+    pub fn infer(&self, client: &xla::PjRtClient, frames: &[f32]) -> crate::Result<Vec<f32>> {
+        let expect = self.batch * self.frame_elems();
+        if frames.len() != expect {
+            anyhow::bail!("expected {expect} floats, got {}", frames.len());
+        }
+        let mut dims = vec![self.batch];
+        dims.extend(&self.input_shape);
+        let image = client
+            .buffer_from_host_buffer(frames, &dims, None)
+            .map_err(|e| anyhow::anyhow!("image transfer: {e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_buffers.len());
+        args.push(&image);
+        args.extend(self.weight_buffers.iter());
+
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// The naive execution path: rebuild every argument as a `Literal`
+    /// each call (weights included) — what a straightforward port of the
+    /// reference loader does. Kept as the measured "before" of the §Perf
+    /// L3 log; `infer` is the optimized path.
+    pub fn infer_via_literals(&self, frames: &[f32]) -> crate::Result<Vec<f32>> {
+        let expect = self.batch * self.frame_elems();
+        if frames.len() != expect {
+            anyhow::bail!("expected {expect} floats, got {}", frames.len());
+        }
+        let mut dims: Vec<i64> = vec![self.batch as i64];
+        dims.extend(self.input_shape.iter().map(|&d| d as i64));
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + self.weight_host.len());
+        args.push(
+            xla::Literal::vec1(frames)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("image literal: {e:?}"))?,
+        );
+        for (floats, shape) in &self.weight_host {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            args.push(
+                xla::Literal::vec1(floats)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("weight literal: {e:?}"))?,
+            );
+        }
+        let result = self.exe.execute(&args).map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Argmax per frame.
+    pub fn classify(&self, client: &xla::PjRtClient, frames: &[f32]) -> crate::Result<Vec<u32>> {
+        let logits = self.infer(client, frames)?;
+        Ok(logits
+            .chunks(self.num_classes)
+            .map(|c| {
+                c.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i as u32)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert!(m.network("lenet5").is_some());
+        let l = m.network("lenet5").unwrap();
+        assert_eq!(l.input_shape, vec![1, 32, 32]);
+        assert_eq!(l.num_classes, 10);
+        assert_eq!(l.params.len(), 10); // 2×conv(w,b) + 3×dense(w,b)
+        assert!(!m.kernels.is_empty());
+    }
+
+    #[test]
+    fn lenet_ref_and_pallas_agree_through_pjrt() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::new(Manifest::default_dir()).unwrap();
+        let ref_model = rt.load("lenet5", Impl::Ref, 1).unwrap();
+        let pal_model = rt.load("lenet5", Impl::Pallas, 1).unwrap();
+        let batch = crate::data::mnist_like(1, 32, 3);
+        let a = ref_model.infer(&rt.client, &batch.data).unwrap();
+        let b = pal_model.infer(&rt.client, &batch.data).unwrap();
+        assert_eq!(a.len(), 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-3, "pallas {y} vs ref {x}");
+        }
+    }
+
+    #[test]
+    fn batch16_executable_works() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::new(Manifest::default_dir()).unwrap();
+        let model = rt.load("lenet5", Impl::Ref, 16).unwrap();
+        let batch = crate::data::mnist_like(16, 32, 4);
+        let preds = model.classify(&rt.client, &batch.data).unwrap();
+        assert_eq!(preds.len(), 16);
+        assert!(preds.iter().all(|&p| p < 10));
+    }
+
+    #[test]
+    fn wrong_input_size_errors() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::new(Manifest::default_dir()).unwrap();
+        let model = rt.load("lenet5", Impl::Ref, 1).unwrap();
+        assert!(model.infer(&rt.client, &[0.0; 7]).is_err());
+    }
+}

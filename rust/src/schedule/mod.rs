@@ -1,0 +1,372 @@
+//! Scheduling primitives (§IV-A..D, H): the transformations the paper
+//! automates inside TVM's AOCL schedules. Each primitive rewrites a
+//! [`LoopNest`] and records itself so Table III ("applied optimizations")
+//! can be reported per network.
+
+
+use crate::texpr::{Dir, Epilogue, LoopNest, LoopVar, MemSpace, Pattern, Precision};
+
+/// The paper's optimization vocabulary (Table I abbreviations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OptKind {
+    /// PK — parameterized kernels.
+    Parameterize,
+    /// LU — loop unrolling.
+    Unroll,
+    /// LT — loop tiling / strip mining.
+    Tile,
+    /// LF — loop fusion.
+    Fuse,
+    /// CW — cached writes.
+    CachedWrite,
+    /// OF — optimized float ops (-fp-relaxed -fpc).
+    FloatOpt,
+    /// CH — channelization.
+    Channels,
+    /// AR — autorun kernels.
+    Autorun,
+    /// CE — concurrent execution.
+    Concurrent,
+    /// Q — reduced-precision datapath (extension; paper §VII future work).
+    Quantize,
+    /// VT — vector types for aligned loads/stores (extension; §V-F
+    /// mitigation).
+    Vectorize,
+    /// SP — sparse (zero-skipping) datapath (extension; §VII #2).
+    Sparsify,
+}
+
+impl OptKind {
+    pub fn abbrev(&self) -> &'static str {
+        match self {
+            OptKind::Parameterize => "PK",
+            OptKind::Unroll => "LU",
+            OptKind::Tile => "LT",
+            OptKind::Fuse => "LF",
+            OptKind::CachedWrite => "CW",
+            OptKind::FloatOpt => "OF",
+            OptKind::Channels => "CH",
+            OptKind::Autorun => "AR",
+            OptKind::Concurrent => "CE",
+            OptKind::Quantize => "Q",
+            OptKind::Vectorize => "VT",
+            OptKind::Sparsify => "SP",
+        }
+    }
+
+    /// Column order of the paper's Table III.
+    pub fn table_order() -> [OptKind; 9] {
+        [
+            OptKind::Parameterize,
+            OptKind::Unroll,
+            OptKind::Tile,
+            OptKind::Fuse,
+            OptKind::CachedWrite,
+            OptKind::FloatOpt,
+            OptKind::Channels,
+            OptKind::Autorun,
+            OptKind::Concurrent,
+        ]
+    }
+}
+
+/// Error type for illegal schedule directives.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScheduleError {
+    NoSuchLoop(LoopVar),
+    /// §IV-J rule 2: "The loop count must be evenly divisible by the factor
+    /// to avoid prologues and epilogues."
+    NotDivisible { var: LoopVar, extent: u64, factor: u64 },
+    AlreadyUnrolled(LoopVar),
+    NothingToFuse,
+    NotAReduction(LoopVar),
+}
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::NoSuchLoop(v) => write!(f, "no loop {}", v.name()),
+            ScheduleError::NotDivisible { var, extent, factor } => {
+                write!(f, "loop {} extent {extent} not divisible by factor {factor}", var.name())
+            }
+            ScheduleError::AlreadyUnrolled(v) => write!(f, "loop {} already unrolled", v.name()),
+            ScheduleError::NothingToFuse => write!(f, "no separate epilogue to fuse"),
+            ScheduleError::NotAReduction(v) => write!(f, "loop {} is not a reduction", v.name()),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
+
+/// Record of primitives applied to one kernel.
+#[derive(Debug, Clone, Default)]
+pub struct AppliedOpts {
+    pub opts: Vec<OptKind>,
+    /// (loop, factor) pairs for LU/LT reporting and the DSE.
+    pub factors: Vec<(LoopVar, u64)>,
+}
+
+impl AppliedOpts {
+    pub fn record(&mut self, opt: OptKind) {
+        if !self.opts.contains(&opt) {
+            self.opts.push(opt);
+        }
+    }
+
+    pub fn contains(&self, opt: OptKind) -> bool {
+        self.opts.contains(&opt)
+    }
+}
+
+/// Schedule handle over a loop nest (TVM's `s[op]` analog).
+pub struct Scheduler<'a> {
+    pub nest: &'a mut LoopNest,
+    pub applied: AppliedOpts,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(nest: &'a mut LoopNest) -> Self {
+        Scheduler { nest, applied: AppliedOpts::default() }
+    }
+
+    /// §IV-A loop unrolling: fully unroll `var`. "We only fully unroll
+    /// loops since partial unrolling may limit performance gains."
+    pub fn unroll(&mut self, var: LoopVar) -> Result<u64, ScheduleError> {
+        let l = self.nest.find_loop_mut(var).ok_or(ScheduleError::NoSuchLoop(var))?;
+        if l.unroll != 1 {
+            return Err(ScheduleError::AlreadyUnrolled(var));
+        }
+        l.unroll = l.extent;
+        let f = l.unroll;
+        self.applied.record(OptKind::Unroll);
+        self.applied.factors.push((var, f));
+        Ok(f)
+    }
+
+    /// §IV-B strip mining / tiling with intent to fully unroll the inner
+    /// loop: equivalent to partial unrolling by `factor`, subject to the
+    /// §IV-J divisibility rule.
+    pub fn tile_and_unroll(&mut self, var: LoopVar, factor: u64) -> Result<(), ScheduleError> {
+        let l = self.nest.find_loop_mut(var).ok_or(ScheduleError::NoSuchLoop(var))?;
+        if l.extent % factor != 0 {
+            return Err(ScheduleError::NotDivisible { var, extent: l.extent, factor });
+        }
+        if l.unroll != 1 {
+            return Err(ScheduleError::AlreadyUnrolled(var));
+        }
+        l.unroll = factor;
+        self.applied.record(if factor == l.extent { OptKind::Unroll } else { OptKind::Tile });
+        if factor != l.extent {
+            self.applied.record(OptKind::Unroll); // inner loop is fully unrolled
+        }
+        self.applied.factors.push((var, factor));
+        Ok(())
+    }
+
+    /// §IV-C loop fusion: merge the adjacent activation/batchnorm loop into
+    /// the reduction — the temporary global array disappears and with it
+    /// its LSUs.
+    pub fn fuse_epilogue(&mut self) -> Result<(), ScheduleError> {
+        if !self.nest.separate_epilogue {
+            return Err(ScheduleError::NothingToFuse);
+        }
+        self.nest.separate_epilogue = false;
+        self.applied.record(OptKind::Fuse);
+        Ok(())
+    }
+
+    /// Fold a downstream BatchNorm/Activation node into this nest's
+    /// epilogue (pattern of Table I: "Activation/batchnorm in Conv, FC,
+    /// pooling").
+    pub fn absorb_epilogue(&mut self, e: Epilogue) {
+        self.nest.epilogue.push(e);
+        // Fused from birth: absorbed ops never materialize a temporary.
+        self.applied.record(OptKind::Fuse);
+    }
+
+    /// §IV-D cached writes: accumulate in a private register, write global
+    /// memory once per output element. Removes the ReadWrite LSU.
+    pub fn cache_write(&mut self) -> Result<(), ScheduleError> {
+        self.nest.accum_space = MemSpace::Private;
+        for a in &mut self.nest.accesses {
+            if a.dir == Dir::ReadWrite && a.space == MemSpace::Global {
+                a.dir = Dir::Write;
+                a.pattern = Pattern::Consecutive;
+            }
+        }
+        self.applied.record(OptKind::CachedWrite);
+        Ok(())
+    }
+
+    /// Move an input buffer into on-chip BRAM (weight stash for pipelined
+    /// kernels; implied by channelization of activations in §IV-E).
+    pub fn cache_read(&mut self, buffer: &str) -> Result<(), ScheduleError> {
+        for a in &mut self.nest.accesses {
+            if a.buffer == buffer && a.space == MemSpace::Global && a.dir == Dir::Read {
+                a.space = MemSpace::Local;
+            }
+        }
+        Ok(())
+    }
+
+    /// §IV-E channelization: activations arrive/leave via channels instead
+    /// of global LSUs.
+    pub fn channelize(&mut self, buffer: &str) {
+        for a in &mut self.nest.accesses {
+            if a.buffer == buffer {
+                a.space = MemSpace::Channel;
+            }
+        }
+        self.applied.record(OptKind::Channels);
+    }
+
+    /// §IV-H parameterized kernels: mark non-filter dims dynamic so one
+    /// hardware kernel serves every layer in its (filter, stride) group.
+    pub fn parameterize(&mut self) {
+        for l in &mut self.nest.loops {
+            if !matches!(l.var, LoopVar::KH | LoopVar::KW) {
+                l.dynamic = true;
+            }
+        }
+        self.applied.record(OptKind::Parameterize);
+    }
+
+    /// Extension (§VII): quantize the datapath. Scales every access's
+    /// traffic/array bytes and sets the nest precision (DSP packing and
+    /// the bandwidth roof pick it up downstream).
+    pub fn quantize(&mut self, p: Precision) {
+        let old = self.nest.precision.bytes();
+        let new = p.bytes();
+        self.nest.precision = p;
+        for a in &mut self.nest.accesses {
+            a.bytes_per_frame = a.bytes_per_frame * new / old;
+            a.array_bytes = a.array_bytes * new / old;
+        }
+        if p != Precision::F32 {
+            self.applied.record(OptKind::Quantize);
+        }
+    }
+
+    /// Extension (§VII #2): prune weights to `density`, skipping zero MACs
+    /// (HPIPE-style). Weight traffic and effective reduction work scale by
+    /// the density; the skip logic costs extra ALUTs per lane (resources).
+    pub fn sparsify(&mut self, density: f64) {
+        assert!(density > 0.0 && density <= 1.0);
+        self.nest.weight_density = density;
+        for a in &mut self.nest.accesses {
+            if a.buffer == "weights" {
+                a.bytes_per_frame = (a.bytes_per_frame as f64 * density) as u64;
+                a.array_bytes = (a.array_bytes as f64 * density) as u64;
+            }
+        }
+        if density < 1.0 {
+            self.applied.record(OptKind::Sparsify);
+        }
+    }
+
+    /// Extension (§V-F): vector types align a strided/windowed access into
+    /// wide vector loads — the LSU coalesces instead of replicating.
+    pub fn vectorize(&mut self, buffer: &str) {
+        let mut hit = false;
+        for a in &mut self.nest.accesses {
+            if a.buffer == buffer && a.pattern != Pattern::Consecutive {
+                a.pattern = Pattern::Consecutive;
+                hit = true;
+            }
+        }
+        if hit {
+            self.applied.record(OptKind::Vectorize);
+        }
+    }
+
+    pub fn finish(self) -> AppliedOpts {
+        self.applied
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::texpr::{self, MemSpace};
+
+    fn lenet_c1_nest() -> LoopNest {
+        let g = models::lenet5();
+        texpr::lower(&g.nodes[1], &g.nodes[0].shape)
+    }
+
+    #[test]
+    fn unroll_is_full() {
+        let mut nest = lenet_c1_nest();
+        let mut s = Scheduler::new(&mut nest);
+        let f = s.unroll(LoopVar::KW).unwrap();
+        assert_eq!(f, 5);
+        assert_eq!(s.nest.total_unroll(), 5);
+        assert!(s.applied.contains(OptKind::Unroll));
+    }
+
+    #[test]
+    fn unroll_twice_rejected() {
+        let mut nest = lenet_c1_nest();
+        let mut s = Scheduler::new(&mut nest);
+        s.unroll(LoopVar::KW).unwrap();
+        assert_eq!(s.unroll(LoopVar::KW), Err(ScheduleError::AlreadyUnrolled(LoopVar::KW)));
+    }
+
+    #[test]
+    fn tile_divisibility_rule() {
+        let mut nest = lenet_c1_nest();
+        let mut s = Scheduler::new(&mut nest);
+        // OutH extent 28: factor 7 divides, factor 5 does not (§IV-J rule 2)
+        assert!(s.tile_and_unroll(LoopVar::OutH, 7).is_ok());
+        let err = Scheduler::new(&mut lenet_c1_nest()).tile_and_unroll(LoopVar::OutH, 5);
+        assert_eq!(err, Err(ScheduleError::NotDivisible { var: LoopVar::OutH, extent: 28, factor: 5 }));
+    }
+
+    #[test]
+    fn cache_write_removes_rmw() {
+        let mut nest = lenet_c1_nest();
+        assert!(nest.accesses.iter().any(|a| a.dir == Dir::ReadWrite));
+        let mut s = Scheduler::new(&mut nest);
+        s.cache_write().unwrap();
+        assert!(!s.nest.accesses.iter().any(|a| a.dir == Dir::ReadWrite));
+        assert_eq!(s.nest.accum_space, MemSpace::Private);
+    }
+
+    #[test]
+    fn fuse_clears_separate_epilogue() {
+        let mut nest = lenet_c1_nest();
+        assert!(nest.separate_epilogue);
+        let mut s = Scheduler::new(&mut nest);
+        s.fuse_epilogue().unwrap();
+        assert!(!s.nest.separate_epilogue);
+        assert_eq!(s.fuse_epilogue(), Err(ScheduleError::NothingToFuse));
+    }
+
+    #[test]
+    fn channelize_moves_to_channel_space() {
+        let mut nest = lenet_c1_nest();
+        let mut s = Scheduler::new(&mut nest);
+        s.channelize("ifmap");
+        let ifmap = s.nest.accesses.iter().find(|a| a.buffer == "ifmap").unwrap();
+        assert_eq!(ifmap.space, MemSpace::Channel);
+    }
+
+    #[test]
+    fn parameterize_keeps_filter_static() {
+        let mut nest = lenet_c1_nest();
+        let mut s = Scheduler::new(&mut nest);
+        s.parameterize();
+        assert!(s.nest.find_loop(LoopVar::OutC).unwrap().dynamic);
+        assert!(!s.nest.find_loop(LoopVar::KH).unwrap().dynamic);
+        assert!(!s.nest.find_loop(LoopVar::KW).unwrap().dynamic);
+    }
+
+    #[test]
+    fn applied_opts_dedup() {
+        let mut a = AppliedOpts::default();
+        a.record(OptKind::Unroll);
+        a.record(OptKind::Unroll);
+        assert_eq!(a.opts.len(), 1);
+    }
+}

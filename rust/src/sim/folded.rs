@@ -1,0 +1,137 @@
+//! Folded-mode executor (§III): parameterized kernels are invoked layer by
+//! layer from the host; output feature maps round-trip through global
+//! memory between invocations; every invocation pays command-queue launch
+//! overhead (channels/autorun are structurally unavailable — §IV-J).
+
+use crate::codegen::KernelProgram;
+use crate::device::FpgaDevice;
+
+use super::{kernel_cycles, HostModel, LayerTiming, PerformanceReport, FOLDED_EFFICIENCY};
+
+/// One layer's worth of work assigned to a kernel.
+#[derive(Debug, Clone)]
+pub struct LayerWork {
+    pub node_id: usize,
+    pub layer_name: String,
+    /// Index into `program.kernels`.
+    pub kernel_id: usize,
+    pub out_elems: u64,
+    pub reduction: u64,
+}
+
+/// Estimate folded-mode performance: layers execute sequentially.
+pub fn simulate(
+    prog: &KernelProgram,
+    work: &[LayerWork],
+    dev: &FpgaDevice,
+    fmax_mhz: f64,
+    host: &HostModel,
+) -> PerformanceReport {
+    let hz = fmax_mhz * 1e6;
+    let mut per_layer = Vec::with_capacity(work.len());
+    let mut total_cycles = 0.0;
+    let mut worst = ("".to_string(), 0.0f64);
+
+    for w in work {
+        let k = &prog.kernels[w.kernel_id];
+        // Tile-turnaround / ragged-edge stalls only afflict tiled
+        // parameterized kernels; a rolled base kernel pipelines at its
+        // (bad) steady II with no tile structure to refill.
+        let eff = if k.nest.total_unroll() > 1 { FOLDED_EFFICIENCY } else { 1.0 };
+        let (compute, memory) =
+            kernel_cycles(k, dev, fmax_mhz, w.out_elems, w.reduction, eff);
+        let cycles = compute.max(memory);
+        if cycles > worst.1 {
+            worst = (w.layer_name.clone(), cycles);
+        }
+        total_cycles += cycles;
+        per_layer.push(LayerTiming {
+            kernel: k.name.clone(),
+            layer: w.layer_name.clone(),
+            compute_cycles: compute,
+            memory_cycles: memory,
+            cycles,
+        });
+    }
+
+    let launch_time = work.len() as f64 * host.launch_overhead_s;
+    let compute_time = total_cycles / hz;
+    let frame_time = compute_time + launch_time;
+    PerformanceReport {
+        fps: 1.0 / frame_time,
+        frame_time_s: frame_time,
+        bottleneck: worst.0,
+        per_layer,
+        host_frac: launch_time / frame_time,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::Kernel;
+    use crate::graph::models;
+    use crate::texpr;
+
+    fn one_layer_setup() -> (KernelProgram, Vec<LayerWork>) {
+        let g = models::mobilenet_v1();
+        let n = g.nodes.iter().find(|n| n.name == "b0.pw").unwrap();
+        let nest = texpr::lower(n, &g.nodes[n.inputs[0]].shape);
+        let red = nest.reduction_size;
+        let prog = KernelProgram {
+            name: "t".into(),
+            kernels: vec![Kernel {
+                id: 0,
+                name: "conv1x1".into(),
+                nest,
+                applied: Default::default(),
+                autorun: false,
+                layers: vec![n.id],
+                group: n.op.param_group(),
+                queue: 0,
+            }],
+            channels: vec![],
+            queues: 1,
+        };
+        let work = vec![LayerWork {
+            node_id: n.id,
+            layer_name: n.name.clone(),
+            kernel_id: 0,
+            out_elems: n.shape.elems() as u64,
+            reduction: red,
+        }];
+        (prog, work)
+    }
+
+    #[test]
+    fn frame_time_includes_launch_overhead() {
+        let (prog, work) = one_layer_setup();
+        let dev = FpgaDevice::stratix10sx();
+        let host = HostModel::default();
+        let rep = simulate(&prog, &work, &dev, 187.0, &host);
+        assert!(rep.frame_time_s > host.launch_overhead_s);
+        assert!(rep.host_frac > 0.0 && rep.host_frac < 1.0);
+        assert_eq!(rep.bottleneck, "b0.pw");
+    }
+
+    #[test]
+    fn doubling_work_roughly_halves_fps() {
+        let (prog, mut work) = one_layer_setup();
+        let dev = FpgaDevice::stratix10sx();
+        let host = HostModel { launch_overhead_s: 0.0, frame_overhead_s: 0.0 };
+        let rep1 = simulate(&prog, &work, &dev, 187.0, &host);
+        let mut w2 = work[0].clone();
+        w2.layer_name = "again".into();
+        work.push(w2);
+        let rep2 = simulate(&prog, &work, &dev, 187.0, &host);
+        assert!((rep1.fps / rep2.fps - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn per_layer_rows_cover_all_work() {
+        let (prog, work) = one_layer_setup();
+        let dev = FpgaDevice::stratix10sx();
+        let rep = simulate(&prog, &work, &dev, 187.0, &HostModel::default());
+        assert_eq!(rep.per_layer.len(), work.len());
+    }
+}

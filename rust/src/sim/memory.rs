@@ -1,0 +1,77 @@
+//! External-memory (DDR4) model: per-access cycle costs and the global
+//! bandwidth bound.
+//!
+//! Two views, matching how real FPGA kernels lose performance (§II-B, §IV):
+//!
+//! * **per-iteration stall cost** — cycles the pipeline waits per loop
+//!   iteration for each LSU, given its kind (cached/coalesced/replicated)
+//!   and the access pattern's burst efficiency;
+//! * **bandwidth bound** — total traffic divided by the bus's bytes/cycle
+//!   at the achieved clock: no design can beat the §IV-J rule-1 roof.
+
+use crate::aoc::lsu::{Lsu, LsuKind};
+use crate::device::FpgaDevice;
+use crate::texpr::Dir;
+
+/// Per-iteration stall cost of one LSU, in cycles per loop iteration,
+/// charged to the pipeline's effective initiation interval:
+///
+/// * cached / burst-coalesced — fully pipelined from BRAM or wide bursts: 0;
+/// * scalar pipelined — half the pattern's burst waste is hidden by the
+///   memory pipeline (0.5 consecutive, 2 strided, 8 windowed per word);
+/// * read-modify-write — occupies the unit twice per iteration: 1;
+/// * replicated — each unit re-fetches a burst per word.
+pub fn scalar_cost(l: &Lsu) -> f64 {
+    match l.kind {
+        LsuKind::Cached | LsuKind::BurstCoalesced => 0.0,
+        LsuKind::Pipelined => match l.dir {
+            Dir::ReadWrite => 1.0,
+            _ => 0.5 * l.stall_factor,
+        },
+        LsuKind::Replicated => 0.5 * l.stall_factor,
+    }
+}
+
+/// Bytes per cycle the external memory delivers at a clock.
+pub fn bytes_per_cycle(dev: &FpgaDevice, fmax_mhz: f64) -> f64 {
+    dev.ext_bw_bytes_per_s / (fmax_mhz * 1e6)
+}
+
+/// Cycles to move `bytes` at the bandwidth roof.
+pub fn bandwidth_cycles(dev: &FpgaDevice, fmax_mhz: f64, bytes: f64) -> f64 {
+    bytes / bytes_per_cycle(dev, fmax_mhz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lsu(kind: LsuKind, dir: Dir, stall: f64) -> Lsu {
+        Lsu { buffer: "b".into(), kind, dir, width_bytes: 4, count: 1, stall_factor: stall }
+    }
+
+    #[test]
+    fn cached_is_free() {
+        assert_eq!(scalar_cost(&lsu(LsuKind::Cached, Dir::Read, 1.0)), 0.0);
+    }
+
+    #[test]
+    fn windowed_is_expensive() {
+        let w = scalar_cost(&lsu(LsuKind::Pipelined, Dir::Read, 16.0));
+        let c = scalar_cost(&lsu(LsuKind::Pipelined, Dir::Read, 1.0));
+        assert!(w >= 8.0 * c);
+    }
+
+    #[test]
+    fn rmw_costs_a_full_cycle() {
+        assert_eq!(scalar_cost(&lsu(LsuKind::Pipelined, Dir::ReadWrite, 1.0)), 1.0);
+    }
+
+    #[test]
+    fn bandwidth_roof_matches_paper() {
+        // §IV-J: 76.8 GB/s at 250 MHz = 307.2 bytes/cycle
+        let dev = FpgaDevice::stratix10sx();
+        let bpc = bytes_per_cycle(&dev, 250.0);
+        assert!((bpc - 307.2).abs() < 0.5);
+    }
+}

@@ -1,0 +1,182 @@
+//! Cycle-approximate performance simulation of generated accelerators.
+//!
+//! Replaces the paper's physical measurement (OpenCL event profiler on the
+//! D5005, §V-C) with an explicit model. Two executors mirror the two
+//! execution modes of §III:
+//!
+//! * [`pipelined`] — one kernel per layer, all concurrently active,
+//!   activations through channels; throughput set by the slowest stage and
+//!   the per-frame host round-trip.
+//! * [`folded`] — parameterized kernels invoked layer-by-layer through
+//!   command queues; cycles accumulate across layers plus launch overhead.
+//!
+//! [`engine`] adds an event-driven FIFO simulation of the pipelined mode to
+//! expose channel-depth dynamics (stall behaviour of unbuffered channels,
+//! §IV-E) that the analytical steady-state model cannot show.
+
+pub mod engine;
+pub mod folded;
+pub mod memory;
+pub mod pipelined;
+
+use crate::aoc::{lsu, pipeline};
+use crate::codegen::Kernel;
+use crate::device::FpgaDevice;
+
+/// Host-side timing constants (calibrated; see DESIGN.md §Calibration).
+#[derive(Debug, Clone, Copy)]
+pub struct HostModel {
+    /// One OpenCL kernel enqueue + dispatch (folded mode pays this per
+    /// layer invocation; §IV-F motivates autorun by this cost).
+    pub launch_overhead_s: f64,
+    /// Per-frame host round-trip in pipelined mode: input write + output
+    /// read over PCIe + event handling. Binds small-network FPS (LeNet-5).
+    pub frame_overhead_s: f64,
+}
+
+impl Default for HostModel {
+    fn default() -> Self {
+        HostModel { launch_overhead_s: 20e-6, frame_overhead_s: 195e-6 }
+    }
+}
+
+/// Pipeline efficiency of folded (parameterized) kernels: dynamic bounds,
+/// ragged tile edges, tile-turnaround and double-buffer refill stalls.
+/// Calibrated against Table IV/V sustained-MAC rates (§V-F's "DSP
+/// underutilization" discussion).
+pub const FOLDED_EFFICIENCY: f64 = 0.30;
+
+/// Timing of one layer (folded) or one stage (pipelined).
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub kernel: String,
+    pub layer: String,
+    /// Pipeline-issue cycles (compute-side).
+    pub compute_cycles: f64,
+    /// Bandwidth-bound cycles (memory-side).
+    pub memory_cycles: f64,
+    /// Whichever bound governs.
+    pub cycles: f64,
+}
+
+/// Whole-accelerator performance estimate.
+#[derive(Debug, Clone)]
+pub struct PerformanceReport {
+    pub fps: f64,
+    pub frame_time_s: f64,
+    /// Name of the slowest stage (pipelined) / biggest layer (folded).
+    pub bottleneck: String,
+    pub per_layer: Vec<LayerTiming>,
+    /// Fraction of frame time spent in host overhead.
+    pub host_frac: f64,
+}
+
+impl PerformanceReport {
+    /// GFLOPS at this FPS for a network with the given per-frame FLOPs
+    /// (§V-C's metric).
+    pub fn gflops(&self, flops_per_frame: u64) -> f64 {
+        self.fps * flops_per_frame as f64 / 1e9
+    }
+}
+
+/// Compute/memory cycles of one kernel executing one layer's worth of work.
+///
+/// `out_elems`/`reduction` come from the layer (not the kernel) so a
+/// parameterized kernel can be timed for each layer it serves.
+pub fn kernel_cycles(
+    k: &Kernel,
+    dev: &FpgaDevice,
+    fmax_mhz: f64,
+    out_elems: u64,
+    reduction: u64,
+    efficiency: f64,
+) -> (f64, f64) {
+    let nest = &k.nest;
+    let lanes = nest.total_unroll().max(1) as f64;
+    let rep = pipeline::analyze(nest, &k.applied);
+
+    // Per-iteration issue cost: II vs the sum of LSU stalls.
+    let lsus = lsu::infer(nest);
+    let mem_stall: f64 = lsus.iter().map(memory::scalar_cost).sum();
+    let issue = (rep.ii as f64).max(mem_stall.max(1.0));
+
+    // Zero-skipping datapaths only issue MACs for retained weights
+    // (§VII #2; skip-control inefficiency folds into `efficiency`).
+    let iters = (out_elems.max(1) as f64) * (reduction.max(1) as f64)
+        * nest.weight_density.clamp(0.0, 1.0).max(0.01)
+        / lanes;
+    let mut compute = iters * issue / efficiency.clamp(0.05, 1.0);
+
+    // Separate (unfused) epilogue: extra pass over the output through its
+    // own temp-array LSUs (read + write + activation).
+    if rep.separate_pass {
+        compute += out_elems as f64 * 2.0;
+    }
+
+    // Bandwidth bound from real traffic (stall-inflated for bad patterns,
+    // but never above what the bus physically moves).
+    let traffic: f64 = nest.global_bytes_per_frame() as f64;
+    let memory = memory::bandwidth_cycles(dev, fmax_mhz, traffic);
+
+    (compute, memory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::schedule::Scheduler;
+    use crate::texpr::{self, LoopVar};
+
+    fn lenet_c3_kernel(unrolled: bool) -> (Kernel, u64, u64) {
+        let g = models::lenet5();
+        let n = g.nodes.iter().find(|x| x.name == "c3").unwrap();
+        let mut nest = texpr::lower(n, &g.nodes[n.inputs[0]].shape);
+        let mut applied = crate::schedule::AppliedOpts::default();
+        if unrolled {
+            let mut s = Scheduler::new(&mut nest);
+            s.cache_write().unwrap();
+            s.fuse_epilogue().unwrap();
+            s.unroll(LoopVar::InC).unwrap();
+            s.unroll(LoopVar::KH).unwrap();
+            s.unroll(LoopVar::KW).unwrap();
+            s.applied.record(crate::schedule::OptKind::FloatOpt);
+            applied = s.finish();
+        }
+        (
+            Kernel { id: 0, name: "c3".into(), nest, applied, autorun: false, layers: vec![n.id], group: None, queue: 0 },
+            g.nodes.iter().find(|x| x.name == "c3").unwrap().shape.elems() as u64,
+            150,
+        )
+    }
+
+    #[test]
+    fn unrolling_cuts_compute_cycles() {
+        let dev = FpgaDevice::stratix10sx();
+        let (base, oe, red) = lenet_c3_kernel(false);
+        let (opt, _, _) = lenet_c3_kernel(true);
+        let (cb, _) = kernel_cycles(&base, &dev, 218.0, oe, red, 1.0);
+        let (co, _) = kernel_cycles(&opt, &dev, 218.0, oe, red, 1.0);
+        assert!(cb / co > 50.0, "base {cb} vs opt {co}");
+    }
+
+    #[test]
+    fn memory_bound_positive_when_traffic_exists() {
+        let dev = FpgaDevice::stratix10sx();
+        let (base, oe, red) = lenet_c3_kernel(false);
+        let (_, m) = kernel_cycles(&base, &dev, 218.0, oe, red, 1.0);
+        assert!(m > 0.0);
+    }
+
+    #[test]
+    fn gflops_accounting() {
+        let rep = PerformanceReport {
+            fps: 1000.0,
+            frame_time_s: 1e-3,
+            bottleneck: "x".into(),
+            per_layer: vec![],
+            host_frac: 0.0,
+        };
+        assert!((rep.gflops(2_000_000) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,569 @@
+//! Tensor-expression loop nests (§II-A): each graph op lowers to a loop
+//! nest with classified memory accesses — the representation the schedule
+//! primitives transform and the AOC model analyzes.
+//!
+//! This mirrors what TVM's default AOCL schedule emits (§IV): convolutions
+//! become `for oc / oh / ow { for ic / kh / kw { acc += x*w } }` with all
+//! buffers in global memory, accumulation read-modify-written in place and
+//! activations computed in a *separate* adjacent loop — exactly the
+//! pathologies the paper's optimizations then remove.
+
+
+use crate::graph::{Activation, Node, Op, Shape};
+
+/// Loop variable roles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopVar {
+    /// Output channels / features.
+    OutC,
+    /// Output rows.
+    OutH,
+    /// Output cols.
+    OutW,
+    /// Input channels / features (reduction).
+    InC,
+    /// Filter rows (reduction).
+    KH,
+    /// Filter cols (reduction).
+    KW,
+}
+
+impl LoopVar {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoopVar::OutC => "oc",
+            LoopVar::OutH => "oh",
+            LoopVar::OutW => "ow",
+            LoopVar::InC => "ic",
+            LoopVar::KH => "kh",
+            LoopVar::KW => "kw",
+        }
+    }
+}
+
+/// One loop level. `unroll` is the replication factor the schedule applied
+/// (1 = rolled). After strip-mining, `extent` stays the full trip count and
+/// `unroll` divides it (the paper only fully unrolls strip-mined inners,
+/// §IV-A/B, so factor == inner extent).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Loop {
+    pub var: LoopVar,
+    pub extent: u64,
+    pub unroll: u64,
+    pub reduction: bool,
+    /// Extent is a runtime kernel argument (parameterized kernels, §IV-H).
+    pub dynamic: bool,
+}
+
+/// Memory spaces of the OpenCL device model (§II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemSpace {
+    /// External DDR4 through LSUs.
+    Global,
+    /// On-chip BRAM.
+    Local,
+    /// Registers.
+    Private,
+    /// OpenCL channel (kernel-to-kernel FIFO, §IV-E).
+    Channel,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Read,
+    Write,
+    /// Read-modify-write (global accumulation — the II killer, §IV).
+    ReadWrite,
+}
+
+/// Address pattern with respect to the innermost unrolled loop — decides
+/// which LSU AOC infers (§II-B: coalesced/burst-coalesced vs replicated).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Stride-1, aligned: coalescable into one wide access.
+    Consecutive,
+    /// Fixed non-unit stride: replicated LSUs under unrolling.
+    Strided,
+    /// Data-dependent / windowed: replicated LSUs + arbitration.
+    Windowed,
+}
+
+/// One memory access in the loop body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Access {
+    pub buffer: String,
+    pub space: MemSpace,
+    pub dir: Dir,
+    pub pattern: Pattern,
+    /// Which loop vars index this buffer (unrolling one of them replicates
+    /// or widens the access).
+    pub indexed_by: Vec<LoopVar>,
+    /// Bytes touched per frame through this access before caching
+    /// (traffic, counting re-reads).
+    pub bytes_per_frame: u64,
+    /// Size of the underlying array in bytes (what a cache/stash must hold).
+    pub array_bytes: u64,
+}
+
+/// Arithmetic precision of a kernel's datapath — the paper's future-work
+/// §VII extension #1 ("quantized networks that reducing bit precision for
+/// weight/activation representation can be supported") and the §V-F
+/// mitigation ("using reduced precision arithmetic to fit more operations
+/// per DSP and alleviate memory requirements").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    F16,
+    Int8,
+}
+
+impl Precision {
+    /// Bytes per element.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    /// MACs one Stratix-10 DSP performs per cycle at this precision
+    /// (hard fp32 FMAC = 1; fp16 packs 2; the 18×19 multiplier pair packs
+    /// 2 int8 MACs and the adders ride the same block).
+    pub fn macs_per_dsp(&self) -> u64 {
+        match self {
+            Precision::F32 => 1,
+            Precision::F16 => 2,
+            Precision::Int8 => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "fp32",
+            Precision::F16 => "fp16",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// Post-reduction elementwise work attached to the nest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Epilogue {
+    Activation(Activation),
+    BatchNormFold,
+    BiasAdd,
+}
+
+/// A lowered loop nest for one graph node.
+#[derive(Debug, Clone)]
+pub struct LoopNest {
+    pub node_id: usize,
+    pub name: String,
+    pub loops: Vec<Loop>,
+    pub accesses: Vec<Access>,
+    /// MACs per innermost iteration (1 for conv/dense, 0 for pool etc).
+    pub macs_per_iter: u64,
+    /// Output elements per frame.
+    pub out_elems: u64,
+    /// Reduction trip count per output element.
+    pub reduction_size: u64,
+    /// Epilogue ops; `separate_epilogue == true` means they run in an
+    /// adjacent loop with a global temporary (TVM default — pathology #1 of
+    /// §IV), `false` means fused into the reduction (LF applied).
+    pub epilogue: Vec<Epilogue>,
+    pub separate_epilogue: bool,
+    /// Accumulator lives in global memory (TVM default, pathology #3) until
+    /// cached writes (§IV-D) move it to a private register.
+    pub accum_space: MemSpace,
+    /// Datapath precision (fp32 unless the schedule quantizes, §VII).
+    pub precision: Precision,
+    /// Weight density for zero-skipping datapaths (1.0 = dense, §VII #2).
+    pub weight_density: f64,
+}
+
+impl LoopNest {
+    /// Total unroll replication = product of per-loop unroll factors —
+    /// the number of parallel MAC lanes AOC instantiates (§IV-A).
+    pub fn total_unroll(&self) -> u64 {
+        self.loops.iter().map(|l| l.unroll).product()
+    }
+
+    /// Unroll product over reduction loops only.
+    pub fn reduction_unroll(&self) -> u64 {
+        self.loops.iter().filter(|l| l.reduction).map(|l| l.unroll).product()
+    }
+
+    /// Innermost loop with unroll > 1, if any.
+    pub fn innermost_unrolled(&self) -> Option<&Loop> {
+        self.loops.iter().rev().find(|l| l.unroll > 1)
+    }
+
+    /// Global-memory bytes moved per frame given current access spaces.
+    pub fn global_bytes_per_frame(&self) -> u64 {
+        self.accesses
+            .iter()
+            .filter(|a| a.space == MemSpace::Global)
+            .map(|a| if a.dir == Dir::ReadWrite { 2 * a.bytes_per_frame } else { a.bytes_per_frame })
+            .sum()
+    }
+
+    pub fn find_loop(&self, var: LoopVar) -> Option<&Loop> {
+        self.loops.iter().find(|l| l.var == var)
+    }
+
+    pub fn find_loop_mut(&mut self, var: LoopVar) -> Option<&mut Loop> {
+        self.loops.iter_mut().find(|l| l.var == var)
+    }
+}
+
+/// Lower one graph node to its naive (TVM-default) loop nest.
+pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
+    let out_elems = node.shape.elems() as u64;
+    let out_bytes = node.cost.out_bytes;
+    let name = format!("{}_{}", node.name, node.op.mnemonic());
+
+    let mk_loop = |var, extent, reduction| Loop { var, extent, unroll: 1, reduction, dynamic: false };
+
+    match &node.op {
+        Op::Conv2d { out_channels, kernel, stride, .. } => {
+            let (cin, _, _) = input_shape.chw().expect("conv input CHW");
+            let (oc, oh, ow) = node.shape.chw().expect("conv output CHW");
+            debug_assert_eq!(oc, *out_channels);
+            let k = *kernel as u64;
+            let loops = vec![
+                mk_loop(LoopVar::OutC, oc as u64, false),
+                mk_loop(LoopVar::OutH, oh as u64, false),
+                mk_loop(LoopVar::OutW, ow as u64, false),
+                mk_loop(LoopVar::InC, cin as u64, true),
+                mk_loop(LoopVar::KH, k, true),
+                mk_loop(LoopVar::KW, k, true),
+            ];
+            let reduction_size = cin as u64 * k * k;
+            let accesses = vec![
+                Access {
+                    buffer: "ifmap".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::Read,
+                    // 1×1/s1 convs scan the fmap linearly (coalesced);
+                    // K>1/s1 windows replay rows (strided); strided convs
+                    // skip (windowed) — decides LSU type + stall (§II-B).
+                    pattern: conv_ifmap_pattern(*kernel, *stride),
+                    indexed_by: vec![LoopVar::InC, LoopVar::KH, LoopVar::KW, LoopVar::OutH, LoopVar::OutW],
+                    bytes_per_frame: out_elems / oc as u64 * reduction_size * 4,
+                    array_bytes: input_shape.bytes() as u64,
+                },
+                Access {
+                    buffer: "weights".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::Read,
+                    pattern: Pattern::Consecutive,
+                    indexed_by: vec![LoopVar::OutC, LoopVar::InC, LoopVar::KH, LoopVar::KW],
+                    bytes_per_frame: node.cost.params * 4,
+                    array_bytes: node.cost.params * 4,
+                },
+                Access {
+                    buffer: "ofmap".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::ReadWrite, // naive global accumulation
+                    pattern: Pattern::Consecutive,
+                    indexed_by: vec![LoopVar::OutC, LoopVar::OutH, LoopVar::OutW],
+                    bytes_per_frame: out_bytes,
+                    array_bytes: out_bytes,
+                },
+            ];
+            LoopNest {
+                node_id: node.id,
+                name,
+                loops,
+                accesses,
+                macs_per_iter: 1,
+                out_elems,
+                reduction_size,
+                epilogue: epilogue_of(&node.op),
+                separate_epilogue: !epilogue_of(&node.op).is_empty(),
+                accum_space: MemSpace::Global,
+                precision: Precision::F32,
+                weight_density: 1.0,
+            }
+        }
+        Op::DepthwiseConv2d { kernel, stride, .. } => {
+            let (c, oh, ow) = node.shape.chw().expect("dw output CHW");
+            let k = *kernel as u64;
+            let loops = vec![
+                mk_loop(LoopVar::OutC, c as u64, false),
+                mk_loop(LoopVar::OutH, oh as u64, false),
+                mk_loop(LoopVar::OutW, ow as u64, false),
+                mk_loop(LoopVar::KH, k, true),
+                mk_loop(LoopVar::KW, k, true),
+            ];
+            let reduction_size = k * k;
+            let accesses = vec![
+                Access {
+                    buffer: "ifmap".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::Read,
+                    pattern: conv_ifmap_pattern(*kernel, *stride),
+                    indexed_by: vec![LoopVar::OutC, LoopVar::KH, LoopVar::KW, LoopVar::OutH, LoopVar::OutW],
+                    bytes_per_frame: out_elems * reduction_size * 4,
+                    array_bytes: input_shape.bytes() as u64,
+                },
+                Access {
+                    buffer: "weights".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::Read,
+                    pattern: Pattern::Consecutive,
+                    indexed_by: vec![LoopVar::OutC, LoopVar::KH, LoopVar::KW],
+                    bytes_per_frame: node.cost.params * 4,
+                    array_bytes: node.cost.params * 4,
+                },
+                Access {
+                    buffer: "ofmap".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::ReadWrite,
+                    pattern: Pattern::Consecutive,
+                    indexed_by: vec![LoopVar::OutC, LoopVar::OutH, LoopVar::OutW],
+                    bytes_per_frame: out_bytes,
+                    array_bytes: out_bytes,
+                },
+            ];
+            LoopNest {
+                node_id: node.id,
+                name,
+                loops,
+                accesses,
+                macs_per_iter: 1,
+                out_elems,
+                reduction_size,
+                epilogue: epilogue_of(&node.op),
+                separate_epilogue: !epilogue_of(&node.op).is_empty(),
+                accum_space: MemSpace::Global,
+                precision: Precision::F32,
+                weight_density: 1.0,
+            }
+        }
+        Op::Dense { out_features, .. } => {
+            let cin = input_shape.elems() as u64;
+            let loops = vec![
+                mk_loop(LoopVar::OutC, *out_features as u64, false),
+                mk_loop(LoopVar::InC, cin, true),
+            ];
+            let accesses = vec![
+                Access {
+                    buffer: "ifmap".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::Read,
+                    pattern: Pattern::Consecutive,
+                    indexed_by: vec![LoopVar::InC],
+                    bytes_per_frame: cin * 4 * *out_features as u64,
+                    array_bytes: cin * 4,
+                },
+                Access {
+                    buffer: "weights".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::Read,
+                    pattern: Pattern::Consecutive,
+                    indexed_by: vec![LoopVar::OutC, LoopVar::InC],
+                    bytes_per_frame: node.cost.params * 4,
+                    array_bytes: node.cost.params * 4,
+                },
+                Access {
+                    buffer: "ofmap".into(),
+                    space: MemSpace::Global,
+                    dir: Dir::ReadWrite,
+                    pattern: Pattern::Consecutive,
+                    indexed_by: vec![LoopVar::OutC],
+                    bytes_per_frame: out_bytes,
+                    array_bytes: out_bytes,
+                },
+            ];
+            LoopNest {
+                node_id: node.id,
+                name,
+                loops,
+                accesses,
+                macs_per_iter: 1,
+                out_elems,
+                reduction_size: cin,
+                epilogue: epilogue_of(&node.op),
+                separate_epilogue: !epilogue_of(&node.op).is_empty(),
+                accum_space: MemSpace::Global,
+                precision: Precision::F32,
+                weight_density: 1.0,
+            }
+        }
+        Op::MaxPool { kernel, .. } | Op::AvgPool { kernel, .. } => {
+            let (c, oh, ow) = node.shape.chw().expect("pool output CHW");
+            let k = *kernel as u64;
+            elementwise_nest(node, name, vec![
+                mk_loop(LoopVar::OutC, c as u64, false),
+                mk_loop(LoopVar::OutH, oh as u64, false),
+                mk_loop(LoopVar::OutW, ow as u64, false),
+                mk_loop(LoopVar::KH, k, true),
+                mk_loop(LoopVar::KW, k, true),
+            ], out_elems, k * k, out_elems * k * k * 4)
+        }
+        Op::GlobalAvgPool => {
+            let (c, h, w) = input_shape.chw().expect("gap input CHW");
+            elementwise_nest(node, name, vec![
+                mk_loop(LoopVar::OutC, c as u64, false),
+                mk_loop(LoopVar::KH, h as u64, true),
+                mk_loop(LoopVar::KW, w as u64, true),
+            ], out_elems, (h * w) as u64, (c * h * w) as u64 * 4)
+        }
+        // Elementwise / helper ops: one pass over the output.
+        _ => {
+            let loops = match node.shape.chw() {
+                Some((c, h, w)) => vec![
+                    mk_loop(LoopVar::OutC, c as u64, false),
+                    mk_loop(LoopVar::OutH, h as u64, false),
+                    mk_loop(LoopVar::OutW, w as u64, false),
+                ],
+                None => vec![mk_loop(LoopVar::OutC, node.shape.elems() as u64, false)],
+            };
+            let read_bytes = out_bytes * if matches!(node.op, Op::Add) { 2 } else { 1 };
+            elementwise_nest(node, name, loops, out_elems, 1, read_bytes)
+        }
+    }
+}
+
+fn elementwise_nest(
+    node: &Node,
+    name: String,
+    loops: Vec<Loop>,
+    out_elems: u64,
+    reduction_size: u64,
+    read_bytes: u64,
+) -> LoopNest {
+    let accesses = vec![
+        Access {
+            buffer: "ifmap".into(),
+            space: MemSpace::Global,
+            dir: Dir::Read,
+            pattern: Pattern::Consecutive,
+            indexed_by: loops.iter().map(|l| l.var).collect(),
+            bytes_per_frame: read_bytes,
+            array_bytes: read_bytes,
+        },
+        Access {
+            buffer: "ofmap".into(),
+            space: MemSpace::Global,
+            dir: Dir::Write,
+            pattern: Pattern::Consecutive,
+            indexed_by: loops.iter().filter(|l| !l.reduction).map(|l| l.var).collect(),
+            bytes_per_frame: node.cost.out_bytes,
+            array_bytes: node.cost.out_bytes,
+        },
+    ];
+    LoopNest {
+        node_id: node.id,
+        name,
+        loops,
+        accesses,
+        macs_per_iter: 0,
+        out_elems,
+        reduction_size,
+        epilogue: vec![],
+        separate_epilogue: false,
+        accum_space: if reduction_size > 1 { MemSpace::Global } else { MemSpace::Private },
+        precision: Precision::F32,
+        weight_density: 1.0,
+    }
+}
+
+/// Ifmap LSU pattern class for a conv of the given geometry: pointwise
+/// convs scan linearly; stride-1 windows replay rows at a fixed stride;
+/// strided windows defeat coalescing entirely.
+pub fn conv_ifmap_pattern(kernel: usize, stride: usize) -> Pattern {
+    if kernel == 1 && stride == 1 {
+        Pattern::Consecutive
+    } else if stride == 1 {
+        Pattern::Strided
+    } else {
+        Pattern::Windowed
+    }
+}
+
+fn epilogue_of(op: &Op) -> Vec<Epilogue> {
+    let mut e = Vec::new();
+    match op {
+        Op::Conv2d { bias, activation, .. } | Op::DepthwiseConv2d { bias, activation, .. } => {
+            if *bias {
+                e.push(Epilogue::BiasAdd);
+            }
+            if *activation != Activation::None {
+                e.push(Epilogue::Activation(*activation));
+            }
+        }
+        Op::Dense { bias, activation, .. } => {
+            if *bias {
+                e.push(Epilogue::BiasAdd);
+            }
+            if *activation != Activation::None {
+                e.push(Epilogue::Activation(*activation));
+            }
+        }
+        _ => {}
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn conv_nest_structure() {
+        let g = models::lenet5();
+        let c1 = &g.nodes[1];
+        let nest = lower(c1, &g.nodes[0].shape);
+        assert_eq!(nest.loops.len(), 6);
+        assert_eq!(nest.reduction_size, 25); // 1 in-channel × 5×5
+        assert_eq!(nest.total_unroll(), 1);
+        assert_eq!(nest.accum_space, MemSpace::Global);
+        assert!(nest.separate_epilogue, "tanh lowers to an adjacent loop by default");
+        assert_eq!(nest.out_elems, 6 * 28 * 28);
+    }
+
+    #[test]
+    fn dense_nest_structure() {
+        let g = models::lenet5();
+        let f5 = g.nodes.iter().find(|n| n.name == "f5").unwrap();
+        let flat = &g.nodes[f5.inputs[0]];
+        let nest = lower(f5, &flat.shape);
+        assert_eq!(nest.loops.len(), 2);
+        assert_eq!(nest.reduction_size, 400);
+        assert_eq!(nest.macs_per_iter, 1);
+    }
+
+    #[test]
+    fn global_traffic_counts_rmw_twice() {
+        let g = models::lenet5();
+        let c1 = &g.nodes[1];
+        let nest = lower(c1, &g.nodes[0].shape);
+        let ofmap = nest.accesses.iter().find(|a| a.buffer == "ofmap").unwrap();
+        assert_eq!(ofmap.dir, Dir::ReadWrite);
+        let total = nest.global_bytes_per_frame();
+        assert!(total > 2 * ofmap.bytes_per_frame);
+    }
+
+    #[test]
+    fn pool_has_no_macs() {
+        let g = models::resnet34();
+        let mp = g.nodes.iter().find(|n| n.name == "maxpool").unwrap();
+        let nest = lower(mp, &g.nodes[mp.inputs[0]].shape);
+        assert_eq!(nest.macs_per_iter, 0);
+        assert_eq!(nest.reduction_size, 9);
+    }
+
+    #[test]
+    fn strided_conv_window_pattern() {
+        let g = models::resnet34();
+        let c1 = &g.nodes[1]; // 7×7 stride-2
+        let nest = lower(c1, &g.nodes[0].shape);
+        let ifmap = nest.accesses.iter().find(|a| a.buffer == "ifmap").unwrap();
+        assert_eq!(ifmap.pattern, Pattern::Windowed);
+    }
+}

@@ -1,0 +1,187 @@
+//! Micro-bench harness (criterion is unavailable offline): warmup, timed
+//! iterations, median/mean/min/max/stddev, criterion-like one-line output.
+//! All `benches/*.rs` targets (harness = false) use this.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  (±{}, {} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.max),
+            fmt_dur(self.stddev),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup`, then run until `budget` has
+/// elapsed (at least 10 iterations; at most `max_iters`).
+pub fn bench<T>(name: &str, warmup: Duration, budget: Duration, max_iters: u64, mut f: impl FnMut() -> T) -> BenchStats {
+    // Warmup.
+    let wstart = Instant::now();
+    while wstart.elapsed() < warmup {
+        std::hint::black_box(f());
+    }
+    // Timed runs.
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < budget || samples.len() < 10) && (samples.len() as u64) < max_iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    stats_from(name, &mut samples)
+}
+
+/// Quick preset: 50 ms warmup, 500 ms budget.
+pub fn quick<T>(name: &str, f: impl FnMut() -> T) -> BenchStats {
+    bench(name, Duration::from_millis(50), Duration::from_millis(500), 100_000, f)
+}
+
+fn stats_from(name: &str, samples: &mut [Duration]) -> BenchStats {
+    samples.sort_unstable();
+    let n = samples.len().max(1);
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let median = samples[n / 2];
+    let min = *samples.first().unwrap_or(&Duration::ZERO);
+    let max = *samples.last().unwrap_or(&Duration::ZERO);
+    let mean_ns = mean.as_nanos() as f64;
+    let var = samples
+        .iter()
+        .map(|s| {
+            let d = s.as_nanos() as f64 - mean_ns;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n as u64,
+        mean,
+        median,
+        min,
+        max,
+        stddev: Duration::from_nanos(var.sqrt() as u64),
+    }
+}
+
+/// Pretty table printer shared by the table-reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                } else {
+                    widths.push(c.len());
+                }
+            }
+        }
+        let sep = |w: &Vec<usize>| -> String {
+            let mut s = String::from("+");
+            for width in w {
+                s.push_str(&"-".repeat(width + 2));
+                s.push('+');
+            }
+            s
+        };
+        let render_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, w) in widths.iter().enumerate() {
+                let c = cells.get(i).map(|c| c.as_str()).unwrap_or("");
+                s.push_str(&format!(" {c:<w$} |", w = w));
+            }
+            s
+        };
+        let mut out = format!("\n## {}\n{}\n{}\n{}\n", self.title, sep(&widths), render_row(&self.headers), sep(&widths));
+        for row in &self.rows {
+            out.push_str(&render_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("noop", Duration::from_millis(1), Duration::from_millis(20), 10_000, || 1 + 1);
+        assert!(s.iters >= 10);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Table II", &["net", "fmax"]);
+        t.row(&["lenet5".into(), "218".into()]);
+        let s = t.render();
+        assert!(s.contains("Table II"));
+        assert!(s.contains("| lenet5 |"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Tiny argv parser: `--key value`, `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Parse argv-style tokens. A token `--name` followed by a non-`--` token
+/// is an option; a trailing or `--x --y` style token is a flag.
+pub fn parse(tokens: &[String]) -> Args {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < tokens.len() {
+        let t = &tokens[i];
+        if let Some(name) = t.strip_prefix("--") {
+            if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                args.options.insert(name.to_string(), tokens[i + 1].clone());
+                i += 2;
+            } else {
+                args.flags.push(name.to_string());
+                i += 1;
+            }
+        } else {
+            args.positional.push(t.clone());
+            i += 1;
+        }
+    }
+    args
+}
+
+impl Args {
+    pub fn from_env() -> Args {
+        parse(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.opt(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(&toks("compile --net lenet5 --mode pipelined --verbose"));
+        assert_eq!(a.positional, vec!["compile"]);
+        assert_eq!(a.opt("net"), Some("lenet5"));
+        assert_eq!(a.opt("mode"), Some("pipelined"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn parse_typed() {
+        let a = parse(&toks("--frames 1000"));
+        assert_eq!(a.opt_parse::<u64>("frames"), Some(1000));
+        assert_eq!(a.opt_parse::<u64>("missing"), None);
+    }
+
+    #[test]
+    fn default_values() {
+        let a = parse(&toks(""));
+        assert_eq!(a.opt_or("net", "lenet5"), "lenet5");
+    }
+}

@@ -1,0 +1,11 @@
+//! In-crate utilities replacing crates unavailable in the offline build
+//! environment: JSON (serde_json), PRNG (rand), CLI parsing (clap),
+//! property testing (proptest), a micro-bench harness (criterion) and a
+//! thread pool (tokio's runtime on the coordinator's hot path).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;

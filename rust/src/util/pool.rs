@@ -1,0 +1,112 @@
+//! Fixed worker-thread pool over std::sync primitives (tokio is not in the
+//! vendored crate set). The coordinator uses one pool per "command queue":
+//! a single-worker pool serializes like one OpenCL queue; N pools of one
+//! worker each model concurrent execution (CE, §IV-G).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size thread pool.
+pub struct Pool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    pub fn new(threads: usize, name: &str) -> Pool {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped → shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { tx: Some(tx), workers }
+    }
+
+    /// Submit a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.as_ref().expect("pool alive").send(Box::new(job)).expect("workers alive");
+    }
+
+    /// Submit a job returning a value; receive it via the returned handle.
+    pub fn submit_with_result<T: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> T + Send + 'static,
+    ) -> Receiver<T> {
+        let (rtx, rrx) = channel();
+        self.submit(move || {
+            let _ = rtx.send(job());
+        });
+        rrx
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = Pool::new(4, "t");
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit_with_result(move || c.fetch_add(1, Ordering::SeqCst))
+            })
+            .collect();
+        for h in handles {
+            h.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn single_worker_serializes() {
+        let pool = Pool::new(1, "serial");
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let handles: Vec<_> = (0..10)
+            .map(|i| {
+                let o = Arc::clone(&order);
+                pool.submit_with_result(move || o.lock().unwrap().push(i))
+            })
+            .collect();
+        for h in handles {
+            h.recv().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = Pool::new(2, "d");
+        let done = pool.submit_with_result(|| 42);
+        drop(pool); // must not hang
+        assert_eq!(done.recv().unwrap(), 42);
+    }
+}

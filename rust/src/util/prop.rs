@@ -1,0 +1,55 @@
+//! Miniature property-testing harness (no proptest offline): run a
+//! predicate over many seeded-random cases; on failure report the seed and
+//! case number so the exact case replays deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn cases() -> u64 {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(128)
+}
+
+/// Run `f(rng, case_idx)`; panic with replay info on the first failure.
+pub fn check(name: &str, mut f: impl FnMut(&mut Rng, u64)) {
+    let seed_base = 0xC0DEC0DE_u64;
+    for case in 0..cases() {
+        let mut rng = Rng::new(seed_base ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at case {case}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0u64;
+        check("trivial", |_rng, _case| {
+            // count via a cell-free trick: this closure is FnMut
+        });
+        // run again counting
+        check("count", |_rng, case| {
+            n = n.max(case + 1);
+        });
+        assert_eq!(n, cases());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails' failed at case")]
+    fn failing_property_reports_case() {
+        check("fails", |rng, _| {
+            assert!(rng.below(10) < 5, "value too big");
+        });
+    }
+}

@@ -1,0 +1,94 @@
+//! Failure-injection tests: corrupted/truncated artifacts and hostile
+//! manifest contents must produce clean errors, never panics or UB.
+
+use std::fs;
+
+use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
+
+fn artifacts_ready() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("tvm_fpga_flow_test_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_artifacts_dir_is_clean_error() {
+    let err = Manifest::load("/nonexistent/path/xyz");
+    assert!(err.is_err());
+    assert!(format!("{}", err.err().unwrap()).contains("make artifacts"));
+}
+
+#[test]
+fn corrupt_manifest_is_clean_error() {
+    let d = temp_dir("corrupt");
+    fs::write(d.join("manifest.json"), "{ not json !!!").unwrap();
+    let err = Manifest::load(&d);
+    assert!(err.is_err());
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn manifest_missing_networks_key_is_clean_error() {
+    let d = temp_dir("nonet");
+    fs::write(d.join("manifest.json"), r#"{"kernels": []}"#).unwrap();
+    assert!(Manifest::load(&d).is_err());
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn truncated_weights_blob_is_clean_error() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let src = Manifest::default_dir();
+    let d = temp_dir("truncated");
+    // Copy manifest + lenet HLO, but truncate the weights blob.
+    fs::copy(src.join("manifest.json"), d.join("manifest.json")).unwrap();
+    for f in ["lenet5_ref.b1.hlo.txt"] {
+        fs::copy(src.join(f), d.join(f)).unwrap();
+    }
+    let blob = fs::read(src.join("lenet5.weights.bin")).unwrap();
+    fs::write(d.join("lenet5.weights.bin"), &blob[..blob.len() / 2]).unwrap();
+
+    let rt = Runtime::new(&d).unwrap();
+    let err = rt.load("lenet5", Impl::Ref, 1);
+    assert!(err.is_err(), "truncated weights must fail to load");
+    let msg = format!("{}", err.err().unwrap());
+    assert!(msg.contains("blob too short") || msg.contains("No such file"), "{msg}");
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn garbage_hlo_text_is_clean_error() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let src = Manifest::default_dir();
+    let d = temp_dir("badhlo");
+    fs::copy(src.join("manifest.json"), d.join("manifest.json")).unwrap();
+    fs::copy(src.join("lenet5.weights.bin"), d.join("lenet5.weights.bin")).unwrap();
+    fs::write(d.join("lenet5_ref.b1.hlo.txt"), "ENTRY { this is not hlo }").unwrap();
+
+    let rt = Runtime::new(&d).unwrap();
+    let err = rt.load("lenet5", Impl::Ref, 1);
+    assert!(err.is_err(), "garbage HLO must fail to parse/compile");
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn unknown_network_and_batch_are_clean_errors() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(Manifest::default_dir()).unwrap();
+    assert!(rt.load("inception", Impl::Ref, 1).is_err());
+    assert!(rt.load("lenet5", Impl::Ref, 7).is_err(), "no batch-7 executable exists");
+}

@@ -1,0 +1,214 @@
+//! Integration tests across graph → flow → aoc → sim, plus property tests
+//! on the flow invariants (in-crate mini-prop harness; proptest is not in
+//! the offline crate set).
+
+use tvm_fpga_flow::aoc;
+use tvm_fpga_flow::device::FpgaDevice;
+use tvm_fpga_flow::flow::{default_factors, Flow, Mode, OptConfig, OptLevel};
+use tvm_fpga_flow::graph::{models, Activation, GraphBuilder, Op, Shape};
+use tvm_fpga_flow::metrics::paper;
+use tvm_fpga_flow::schedule::OptKind;
+use tvm_fpga_flow::util::prop;
+
+#[test]
+fn table2_within_shape_of_paper() {
+    let flow = Flow::new();
+    for (name, pl, pb, pd, pf) in paper::TABLE2 {
+        let g = models::by_name(name).unwrap();
+        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).unwrap();
+        let (l, b, d, f) = acc.synthesis.table2_row();
+        // Every cell within 2× of the paper (most are far closer).
+        for (ours, theirs, what) in [(l, pl, "logic"), (b, pb, "bram"), (d, pd, "dsp"), (f, pf, "fmax")] {
+            let ratio = ours / theirs;
+            assert!((0.5..2.0).contains(&ratio), "{name} {what}: {ours:.1} vs paper {theirs:.1}");
+        }
+    }
+}
+
+#[test]
+fn table4_speedups_within_shape() {
+    let flow = Flow::new();
+    for (name, pb, po, _) in paper::TABLE4 {
+        let g = models::by_name(name).unwrap();
+        let mode = Flow::paper_mode(name);
+        let base = flow.compile(&g, mode, OptLevel::Base).unwrap().performance.fps;
+        let opt = flow.compile(&g, mode, OptLevel::Optimized).unwrap().performance.fps;
+        assert!((0.2..5.0).contains(&(base / pb)), "{name} base {base} vs paper {pb}");
+        assert!((0.2..5.0).contains(&(opt / po)), "{name} opt {opt} vs paper {po}");
+        assert!(opt > base * 5.0, "{name}: optimizations must matter");
+    }
+}
+
+#[test]
+fn table3_exact_match() {
+    let flow = Flow::new();
+    for (name, expected) in paper::TABLE3 {
+        let g = models::by_name(name).unwrap();
+        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).unwrap();
+        let ours: Vec<&str> = acc.applied.iter().map(|o| o.abbrev()).collect();
+        for e in expected {
+            assert!(ours.contains(e), "{name}: paper applies {e}, we don't ({ours:?})");
+        }
+        for o in &ours {
+            assert!(expected.contains(o), "{name}: we apply {o}, paper doesn't ({expected:?})");
+        }
+    }
+}
+
+#[test]
+fn per_layer_fps_never_negative_or_nan() {
+    let flow = Flow::new();
+    for g in models::all() {
+        for mode in [Mode::Pipelined, Mode::Folded] {
+            // Pipelined mode for the big nets over-commits BRAM → allowed
+            // to fail; when it compiles, numbers must be sane.
+            if let Ok(acc) = flow.compile(&g, mode, OptLevel::Optimized) {
+                assert!(acc.performance.fps.is_finite() && acc.performance.fps > 0.0);
+                for l in &acc.performance.per_layer {
+                    assert!(l.cycles.is_finite() && l.cycles >= 0.0, "{}: {l:?}", g.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn custom_graph_end_to_end() {
+    // A hand-built CNN (not one of the paper's three) must flow through
+    // compile cleanly — the flow is generic, not special-cased.
+    let (mut b, x) = GraphBuilder::new("custom", Shape::Chw(3, 64, 64));
+    let c1 = b.add("c1", Op::Conv2d { out_channels: 16, kernel: 3, stride: 1, padding: 1, bias: true, activation: Activation::Relu }, &[x]);
+    let p1 = b.add("p1", Op::MaxPool { kernel: 2, stride: 2, padding: 0 }, &[c1]);
+    let c2 = b.add("c2", Op::Conv2d { out_channels: 32, kernel: 3, stride: 1, padding: 1, bias: true, activation: Activation::Relu }, &[p1]);
+    let g1 = b.add("gap", Op::GlobalAvgPool, &[c2]);
+    let d = b.add("fc", Op::Dense { out_features: 10, bias: true, activation: Activation::None }, &[g1]);
+    let g = b.finish(d);
+
+    let flow = Flow::new();
+    for mode in [Mode::Pipelined, Mode::Folded] {
+        let acc = flow.compile(&g, mode, OptLevel::Optimized).unwrap();
+        assert!(acc.performance.fps > 0.0, "{:?}", mode);
+        assert!(acc.synthesis.resources.utilization.fits());
+    }
+}
+
+#[test]
+fn routing_failure_is_reported_not_panicked() {
+    // Absurd factor plan → clean error.
+    let g = models::resnet34();
+    let mut plan = default_factors(&g);
+    for (_, t) in plan.group_tiles.iter_mut() {
+        *t = (64, 64);
+    }
+    let err = Flow::new().compile_with(&g, Mode::Folded, &OptConfig::optimized(), &plan);
+    assert!(err.is_err());
+    let msg = format!("{}", err.err().unwrap());
+    assert!(msg.contains("routing failure") || msg.contains("bandwidth"), "{msg}");
+}
+
+// --------------------------- property tests ------------------------------
+
+#[test]
+fn prop_unrolling_never_changes_total_work() {
+    // Schedule factors move cycles around but total MACs are invariant:
+    // out_elems × reduction_size is untouched by any legal tiling.
+    prop::check("work_invariant", |rng, _case| {
+        let g = models::lenet5();
+        let flow = Flow::new();
+        let mut plan = default_factors(&g);
+        plan.pipelined_cap = *rng.pick(&[8u64, 16, 32, 64, 128, 256, 512]);
+        plan.dense_tile = (*rng.pick(&[1u64, 2, 4, 8, 16]), 1);
+        let acc = flow
+            .compile_with(&g, Mode::Pipelined, &OptConfig::optimized(), &plan)
+            .expect("lenet always fits");
+        let macs: u64 = acc
+            .program
+            .kernels
+            .iter()
+            .filter(|k| k.nest.macs_per_iter > 0)
+            .map(|k| k.nest.out_elems * k.nest.reduction_size)
+            .sum();
+        assert_eq!(macs, g.total_macs(), "unroll factors changed total work");
+    });
+}
+
+#[test]
+fn prop_factor_divisibility_holds_for_all_plans() {
+    prop::check("divisibility", |rng, _case| {
+        let g = models::mobilenet_v1();
+        let flow = Flow::new();
+        let mut plan = default_factors(&g);
+        // Random (possibly-illegal) tiles: the flow must clamp to divisors
+        // or reject — it must never emit a non-dividing unroll.
+        let keys: Vec<_> = plan.group_tiles.keys().copied().collect();
+        for k in keys {
+            let t = (rng.range(1, 16), rng.range(1, 16));
+            plan.group_tiles.insert(k, t);
+        }
+        if let Ok(acc) = flow.compile_with(&g, Mode::Folded, &OptConfig::optimized(), &plan) {
+            for k in &acc.program.kernels {
+                for l in &k.nest.loops {
+                    assert_eq!(l.extent % l.unroll, 0, "{} {:?}", k.name, l.var);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_more_unroll_never_slower_at_fixed_fmax() {
+    // With the device clock pinned, more lanes can only reduce per-kernel
+    // cycles (monotonicity of the compute model).
+    prop::check("monotone_unroll", |rng, _case| {
+        let g = models::lenet5();
+        let flow = Flow::new();
+        let caps: Vec<u64> = vec![8, 32, 128, 512];
+        let i = rng.below(caps.len() as u64 - 1) as usize;
+        let (small, big) = (caps[i], caps[i + 1]);
+        let mk = |cap| {
+            let mut plan = default_factors(&g);
+            plan.pipelined_cap = cap;
+            flow.compile_with(&g, Mode::Pipelined, &OptConfig::optimized(), &plan).unwrap()
+        };
+        let a = mk(small);
+        let b = mk(big);
+        let cycles = |acc: &tvm_fpga_flow::flow::Accelerator| {
+            acc.performance.per_layer.iter().map(|l| l.compute_cycles).sum::<f64>()
+        };
+        assert!(
+            cycles(&b) <= cycles(&a) * 1.001,
+            "cap {big} produced more cycles than cap {small}"
+        );
+    });
+}
+
+#[test]
+fn prop_resources_monotone_in_tiles() {
+    prop::check("monotone_resources", |rng, _case| {
+        let g = models::resnet34();
+        let dev = FpgaDevice::stratix10sx();
+        let small_t = rng.range(1, 4);
+        let plan_small = {
+            let mut p = default_factors(&g);
+            for (_, t) in p.group_tiles.iter_mut() {
+                *t = (small_t, small_t);
+            }
+            p
+        };
+        let plan_big = {
+            let mut p = default_factors(&g);
+            for (_, t) in p.group_tiles.iter_mut() {
+                *t = (small_t * 2, small_t * 2);
+            }
+            p
+        };
+        let build = |plan| {
+            let (prog, _) = tvm_fpga_flow::flow::patterns::build_folded(&g, &OptConfig::optimized(), plan);
+            aoc::resources::program_resources(&prog, &dev).total
+        };
+        let a = build(&plan_small);
+        let b = build(&plan_big);
+        assert!(b.dsps >= a.dsps);
+        assert!(b.aluts >= a.aluts);
+    });
+}

@@ -1,0 +1,138 @@
+//! Integration tests over the PJRT runtime + coordinator against the real
+//! AOT artifacts (skipped gracefully when `make artifacts` hasn't run).
+//!
+//! These are the execution-level half of the interchange contract whose
+//! parse-level half lives in python/tests/test_aot.py.
+
+use tvm_fpga_flow::coordinator::{InferenceServer, ServerConfig};
+use tvm_fpga_flow::data;
+use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
+
+fn ready() -> bool {
+    let ok = Manifest::default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn manifest_matches_rust_graph_parameter_counts() {
+    if !ready() {
+        return;
+    }
+    let m = Manifest::load(Manifest::default_dir()).unwrap();
+    // The python L2 models and the rust graph IR must describe the same
+    // networks: parameter byte totals must agree exactly.
+    for g in tvm_fpga_flow::graph::models::all() {
+        let net = m.network(&g.name).expect("network in manifest");
+        let total: usize = net.params.iter().map(|(_, _, _, nbytes)| nbytes).sum();
+        assert_eq!(total as u64, g.weight_bytes(), "{}: python vs rust param bytes", g.name);
+    }
+}
+
+#[test]
+fn lenet_batch1_and_batch16_agree() {
+    if !ready() {
+        return;
+    }
+    let rt = Runtime::new(Manifest::default_dir()).unwrap();
+    let b1 = rt.load("lenet5", Impl::Ref, 1).unwrap();
+    let b16 = rt.load("lenet5", Impl::Ref, 16).unwrap();
+    let frames = data::mnist_like(16, 32, 21);
+    let batched = b16.infer(&rt.client, &frames.data).unwrap();
+    for i in 0..16 {
+        let single = b1.infer(&rt.client, frames.frame(i)).unwrap();
+        for (a, b) in single.iter().zip(&batched[i * 10..(i + 1) * 10]) {
+            assert!((a - b).abs() < 1e-4, "frame {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_reloads() {
+    if !ready() {
+        return;
+    }
+    let rt = Runtime::new(Manifest::default_dir()).unwrap();
+    let frames = data::mnist_like(1, 32, 22);
+    let a = rt.load("lenet5", Impl::Ref, 1).unwrap().infer(&rt.client, frames.frame(0)).unwrap();
+    let b = rt.load("lenet5", Impl::Ref, 1).unwrap().infer(&rt.client, frames.frame(0)).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn logits_are_finite_and_discriminative() {
+    if !ready() {
+        return;
+    }
+    let rt = Runtime::new(Manifest::default_dir()).unwrap();
+    let model = rt.load("lenet5", Impl::Ref, 1).unwrap();
+    let frames = data::mnist_like(8, 32, 23);
+    let mut distinct = std::collections::BTreeSet::new();
+    for i in 0..8 {
+        let logits = model.infer(&rt.client, frames.frame(i)).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let span = logits.iter().cloned().fold(f32::MIN, f32::max)
+            - logits.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(span > 1e-4, "degenerate logits");
+        distinct.insert(
+            logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap(),
+        );
+    }
+    // Synthetic strokes differ per class; at least two classes should win.
+    assert!(distinct.len() >= 2, "model predicts a single class for all inputs");
+}
+
+#[test]
+fn coordinator_throughput_improves_with_batching() {
+    if !ready() {
+        return;
+    }
+    let frames = data::mnist_like(64, 32, 24);
+    let run = |max_batch: usize| {
+        let server = InferenceServer::start(ServerConfig {
+            workers: 1,
+            max_batch,
+            max_wait: std::time::Duration::from_millis(3),
+            ..Default::default()
+        })
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..64)
+            .map(|i| server.infer_async(frames.frame(i).to_vec()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed();
+        server.shutdown();
+        dt
+    };
+    let unbatched = run(1);
+    let batched = run(16);
+    // Batching amortizes dispatch; allow generous slack for CI noise but
+    // it must not be dramatically slower.
+    assert!(
+        batched < unbatched * 3,
+        "batched {batched:?} vs unbatched {unbatched:?}"
+    );
+}
+
+#[test]
+fn mobilenet_single_frame_classifies() {
+    if !ready() {
+        return;
+    }
+    let rt = Runtime::new(Manifest::default_dir()).unwrap();
+    let model = rt.load("mobilenet_v1", Impl::Ref, 1).unwrap();
+    let imgs = data::for_network("mobilenet_v1", 1, 5).unwrap();
+    let pred = model.classify(&rt.client, imgs.frame(0)).unwrap();
+    assert_eq!(pred.len(), 1);
+    assert!(pred[0] < 1000);
+}

@@ -1,0 +1,96 @@
+//! Cross-model consistency: the event-driven FIFO engine and the
+//! analytical pipelined model must agree at steady state when channels are
+//! deep (the analytical model assumes no back-pressure), and the folded
+//! model must be invariant to work-list order permutations.
+
+use tvm_fpga_flow::flow::{Flow, Mode, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::sim::{engine, folded};
+use tvm_fpga_flow::util::rng::Rng;
+
+#[test]
+fn engine_steady_state_matches_analytical_bottleneck() {
+    let flow = Flow::new();
+    let acc = flow.compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized).unwrap();
+
+    // Build engine stages from the analytical per-stage cycles.
+    let stages: Vec<(String, f64, u64)> = acc
+        .performance
+        .per_layer
+        .iter()
+        .zip(&acc.program.kernels)
+        .map(|(l, k)| (k.name.clone(), l.cycles, (k.nest.out_elems / 16).max(1)))
+        .collect();
+    let stages = engine::stages_from_cycles(&stages);
+
+    let bottleneck = acc
+        .performance
+        .per_layer
+        .iter()
+        .map(|l| l.cycles)
+        .fold(0.0f64, f64::max);
+
+    // Deep channels: engine steady interval ≈ analytical bottleneck.
+    let rep = engine::simulate(&stages, 1_000_000, 8);
+    let ratio = rep.steady_interval_cycles / bottleneck;
+    assert!(
+        (0.8..1.3).contains(&ratio),
+        "engine {} vs analytical {bottleneck} (ratio {ratio})",
+        rep.steady_interval_cycles
+    );
+
+    // Shallow channels can only finish later overall (stalls shift the
+    // completion times; the inter-completion *interval* can wobble, so
+    // compare the makespan of the whole run).
+    let shallow = engine::simulate(&stages, 1, 8);
+    let makespan = |r: &engine::EngineReport| r.first_frame_cycles + r.steady_interval_cycles * 7.0;
+    assert!(
+        makespan(&shallow) >= makespan(&rep) * 0.99,
+        "shallow {} vs deep {}",
+        makespan(&shallow),
+        makespan(&rep)
+    );
+}
+
+#[test]
+fn folded_total_invariant_under_work_permutation() {
+    let flow = Flow::new();
+    let g = models::mobilenet_v1();
+    let acc = flow.compile(&g, Mode::Folded, OptLevel::Optimized).unwrap();
+    let fmax = acc.synthesis.fmax_mhz;
+
+    let base = folded::simulate(&acc.program, &acc.work, &flow.device, fmax, &flow.host);
+
+    // Shuffle the work list: total frame time must not change (layers are
+    // sequential; order doesn't matter to the sum).
+    let mut rng = Rng::new(99);
+    let mut work = acc.work.clone();
+    for i in (1..work.len()).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        work.swap(i, j);
+    }
+    let shuffled = folded::simulate(&acc.program, &work, &flow.device, fmax, &flow.host);
+    assert!(
+        (base.frame_time_s - shuffled.frame_time_s).abs() / base.frame_time_s < 1e-9,
+        "{} vs {}",
+        base.frame_time_s,
+        shuffled.frame_time_s
+    );
+}
+
+#[test]
+fn pipelined_latency_at_least_sum_of_stage_fills() {
+    // The event engine's first-frame latency must exceed its steady
+    // interval for any multi-stage pipeline (fill time is real).
+    let flow = Flow::new();
+    let acc = flow.compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized).unwrap();
+    let stages: Vec<(String, f64, u64)> = acc
+        .performance
+        .per_layer
+        .iter()
+        .map(|l| (l.kernel.clone(), l.cycles, 32))
+        .collect();
+    let stages = engine::stages_from_cycles(&stages);
+    let rep = engine::simulate(&stages, 64, 6);
+    assert!(rep.first_frame_cycles > rep.steady_interval_cycles);
+}
