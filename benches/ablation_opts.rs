@@ -7,16 +7,16 @@
 //! cargo bench --bench ablation_opts
 //! ```
 
-use tvm_fpga_flow::flow::{default_factors, Flow, Mode, OptConfig, OptLevel};
+use tvm_fpga_flow::flow::{default_factors, Compiler, Mode, OptConfig, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::schedule::OptKind;
 use tvm_fpga_flow::util::bench::Table;
 
 fn main() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     for name in ["lenet5", "mobilenet_v1", "resnet34"] {
         let g = models::by_name(name).unwrap();
-        let mode = Flow::paper_mode(name);
+        let mode = Compiler::paper_mode(name);
         let full = flow.compile(&g, mode, OptLevel::Optimized).unwrap();
         let full_fps = full.performance.fps;
 

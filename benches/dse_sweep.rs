@@ -6,30 +6,33 @@
 //! ```
 
 use tvm_fpga_flow::dse;
-use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, Mode, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::util::bench::{bench, Table};
 
 fn main() {
-    let flow = Flow::new();
-
     let mut t = Table::new(
         "DSE outcomes per network",
-        &["network", "points", "rejected", "default FPS", "best FPS", "gain"],
+        &["network", "points", "rejected", "cache hit%", "default FPS", "best FPS", "gain"],
     );
     for name in ["lenet5", "mobilenet_v1", "resnet34"] {
         let g = models::by_name(name).unwrap();
-        let mode = Flow::paper_mode(name);
-        let default_fps = flow.compile(&g, mode, OptLevel::Optimized).unwrap().performance.fps;
+        let mode = Compiler::paper_mode(name);
+        let default_fps =
+            Compiler::default().compile(&g, mode, OptLevel::Optimized).unwrap().performance.fps;
+        // Fresh compiler per sweep: the hit% column must reflect the
+        // sweep's own duplicates, not a memo pre-warmed by other rows.
+        let sweep = Compiler::default();
         let r = match mode {
-            tvm_fpga_flow::flow::Mode::Folded => dse::explore_folded(&flow, &g, 16),
-            tvm_fpga_flow::flow::Mode::Pipelined => dse::explore_pipelined(&flow, &g),
+            Mode::Folded => dse::explore_folded(&sweep, &g, 16),
+            Mode::Pipelined => dse::explore_pipelined(&sweep, &g),
         };
         let best = r.best.as_ref().map(|b| b.fps).unwrap_or(0.0);
         t.row(&[
             name.into(),
             r.evaluated.to_string(),
             r.log.iter().filter(|p| p.rejected.is_some()).count().to_string(),
+            format!("{:.0}", r.synth_cache_hit_rate() * 100.0),
             format!("{default_fps:.2}"),
             format!("{best:.2}"),
             format!("{:.2}x", best / default_fps),
@@ -38,13 +41,27 @@ fn main() {
     t.print();
 
     let g = models::mobilenet_v1();
+    // Cold compiler per iteration so the timing covers real synthesis, not
+    // memo lookups against a cache warmed by earlier sweeps.
     let stats = bench(
-        "dse/explore_folded/mobilenet(budget=8)",
+        "dse/explore_folded/mobilenet(budget=8,cold)",
         std::time::Duration::from_millis(100),
         std::time::Duration::from_secs(2),
         1_000,
-        || dse::explore_folded(&flow, &g, 8),
+        || {
+            let cold = Compiler::default();
+            dse::explore_folded(&cold, &g, 8)
+        },
     );
     println!("{}", stats.report());
+    let shared = Compiler::default();
+    let _ = dse::explore_folded(&shared, &g, 8);
+    let warm = dse::explore_folded(&shared, &g, 8);
+    println!(
+        "warm re-sweep: {:.0}% synthesis cache hit rate ({} hits / {} misses)",
+        warm.synth_cache_hit_rate() * 100.0,
+        warm.synth_cache.hits,
+        warm.synth_cache.misses
+    );
     println!("(each point replaces a 3–12 h Quartus run in the paper's manual sweep)");
 }

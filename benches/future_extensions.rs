@@ -12,13 +12,13 @@
 //! ```
 
 use tvm_fpga_flow::flow::multi::Link;
-use tvm_fpga_flow::flow::{default_factors, Flow, Mode, OptConfig, OptLevel};
+use tvm_fpga_flow::flow::{default_factors, Compiler, Mode, OptConfig, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::texpr::Precision;
 use tvm_fpga_flow::util::bench::Table;
 
 fn main() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
 
     // ---- 1. reduced precision -------------------------------------------
     let mut t = Table::new(

@@ -6,28 +6,28 @@
 //! cargo bench --bench sec5e_related_work
 //! ```
 
-use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::paper;
 use tvm_fpga_flow::util::bench::Table;
 
 fn main() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
 
     // --- DiCecco: 3×3-conv GFLOPS of ResNet-34 ---------------------------
     let resnet = models::resnet34();
-    let acc = flow.compile(&resnet, Flow::paper_mode("resnet34"), OptLevel::Optimized).unwrap();
+    let acc = flow.compile(&resnet, Compiler::paper_mode("resnet34"), OptLevel::Optimized).unwrap();
     let ours_3x3 = acc.performance.fps * resnet.flops_3x3_conv() as f64 / 1e9;
 
     // --- Hadjis: LeNet-5 GFLOPS (normalized to FP-op count) --------------
     let lenet = models::lenet5();
-    let lacc = flow.compile(&lenet, Flow::paper_mode("lenet5"), OptLevel::Optimized).unwrap();
+    let lacc = flow.compile(&lenet, Compiler::paper_mode("lenet5"), OptLevel::Optimized).unwrap();
     // The paper normalizes with its 389K FP-op count (§V-E).
     let ours_lenet = lacc.performance.fps * paper::SEC5E_LENET_FLOPS / 1e9;
 
     // --- DNNWeaver: their AlexNet vs our MobileNetV1 ----------------------
     let mobilenet = models::mobilenet_v1();
-    let macc = flow.compile(&mobilenet, Flow::paper_mode("mobilenet_v1"), OptLevel::Optimized).unwrap();
+    let macc = flow.compile(&mobilenet, Compiler::paper_mode("mobilenet_v1"), OptLevel::Optimized).unwrap();
     let ours_mobile_gflops = macc.performance.fps * paper::SEC5E_MOBILENET_FLOPS / 1e9;
     // Venieris et al. report DNNWeaver AlexNet at 9.22× the paper's
     // MobileNet GFLOPS: reconstruct their absolute number from the paper.

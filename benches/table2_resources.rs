@@ -6,13 +6,13 @@
 //! cargo bench --bench table2_resources
 //! ```
 
-use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::{deviation_pct, paper};
 use tvm_fpga_flow::util::bench::{quick, Table};
 
 fn main() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let mut table = Table::new(
         "Table II — resource utilization and f_max (ours | paper)",
         &["network", "logic %", "BRAM %", "DSP %", "f_max MHz", "max dev"],
@@ -20,7 +20,7 @@ fn main() {
 
     for (name, pl, pb, pd, pf) in paper::TABLE2 {
         let g = models::by_name(name).unwrap();
-        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).expect("compiles");
+        let acc = flow.compile(&g, Compiler::paper_mode(name), OptLevel::Optimized).expect("compiles");
         let (l, b, d, f) = acc.synthesis.table2_row();
         let dev = [
             deviation_pct(l, pl),
@@ -46,7 +46,7 @@ fn main() {
     for name in ["lenet5", "mobilenet_v1", "resnet34"] {
         let g = models::by_name(name).unwrap();
         let stats = quick(&format!("synthesize/{name}"), || {
-            flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).unwrap()
+            flow.compile(&g, Compiler::paper_mode(name), OptLevel::Optimized).unwrap()
         });
         println!("{}", stats.report());
     }

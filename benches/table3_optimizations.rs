@@ -5,14 +5,14 @@
 //! cargo bench --bench table3_optimizations
 //! ```
 
-use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::paper;
 use tvm_fpga_flow::schedule::OptKind;
 use tvm_fpga_flow::util::bench::{quick, Table};
 
 fn main() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let mut table = Table::new(
         "Table III — applied optimizations (✓ = ours, ● = paper)",
         &["network", "PK", "LU", "LT", "LF", "CW", "OF", "CH", "AR", "CE"],
@@ -21,7 +21,7 @@ fn main() {
     let mut mismatches = 0;
     for (name, expected) in paper::TABLE3 {
         let g = models::by_name(name).unwrap();
-        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).expect("compiles");
+        let acc = flow.compile(&g, Compiler::paper_mode(name), OptLevel::Optimized).expect("compiles");
         let mut row = vec![name.to_string()];
         for opt in OptKind::table_order() {
             let ours = acc.applied.contains(&opt);

@@ -6,13 +6,13 @@
 //! cargo bench --bench table4_base_vs_opt
 //! ```
 
-use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::paper;
 use tvm_fpga_flow::util::bench::{quick, Table};
 
 fn main() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let mut table = Table::new(
         "Table IV — FPS of base versus optimized circuits (ours | paper)",
         &["network", "base", "optimized", "speedup"],
@@ -21,7 +21,7 @@ fn main() {
     let mut speedups = Vec::new();
     for (name, pb, po, ps) in paper::TABLE4 {
         let g = models::by_name(name).unwrap();
-        let mode = Flow::paper_mode(name);
+        let mode = Compiler::paper_mode(name);
         let base = flow.compile(&g, mode, OptLevel::Base).expect("base compiles");
         let opt = flow.compile(&g, mode, OptLevel::Optimized).expect("opt compiles");
         let s = opt.performance.fps / base.performance.fps;
@@ -49,8 +49,8 @@ fn main() {
 
     let g = models::resnet34();
     let stats = quick("compile_base+opt/resnet34", || {
-        let b = flow.compile(&g, Flow::paper_mode("resnet34"), OptLevel::Base).unwrap();
-        let o = flow.compile(&g, Flow::paper_mode("resnet34"), OptLevel::Optimized).unwrap();
+        let b = flow.compile(&g, Compiler::paper_mode("resnet34"), OptLevel::Base).unwrap();
+        let o = flow.compile(&g, Compiler::paper_mode("resnet34"), OptLevel::Optimized).unwrap();
         (b.performance.fps, o.performance.fps)
     });
     println!("{}", stats.report());

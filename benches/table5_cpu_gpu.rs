@@ -12,7 +12,7 @@
 use std::time::Instant;
 
 use tvm_fpga_flow::data;
-use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::paper;
 use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
@@ -42,7 +42,7 @@ fn main() {
         std::process::exit(1);
     }
     let rt = Runtime::new(Manifest::default_dir()).expect("runtime");
-    let flow = Flow::new();
+    let flow = Compiler::default();
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut table = Table::new(
@@ -53,7 +53,7 @@ fn main() {
     let mut rows = Vec::new();
     for (name, p_fpga, p_1t, p_56t, p_tf, p_gpu) in paper::TABLE5 {
         let g = models::by_name(name).unwrap();
-        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).unwrap();
+        let acc = flow.compile(&g, Compiler::paper_mode(name), OptLevel::Optimized).unwrap();
         let fpga = acc.performance.fps;
         let frames = if name == "lenet5" { 512 } else { 4 };
         let cpu = measure_cpu_fps(&rt, name, frames);

@@ -1,12 +1,13 @@
 //! Design-space exploration (§IV-J future work, automated): sweep tile
 //! factors under the three legality rules and report the Pareto-ish best.
+//! The synthesis memo turns revisited kernel programs into cache hits.
 //!
 //! ```sh
-//! cargo run --release --example dse_explorer -- --net mobilenet_v1 --budget 20
+//! cargo run --release --example dse_explorer -- --net mobilenet_v1 --budget 20 --target stratix10sx
 //! ```
 
 use tvm_fpga_flow::dse;
-use tvm_fpga_flow::flow::{Flow, Mode};
+use tvm_fpga_flow::flow::{Compiler, Mode};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::util::bench::Table;
 use tvm_fpga_flow::util::cli::Args;
@@ -16,18 +17,25 @@ fn main() -> tvm_fpga_flow::Result<()> {
     let name = args.opt_or("net", "mobilenet_v1");
     let budget: usize = args.opt_parse("budget").unwrap_or(20);
     let net = models::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown net {name}"))?;
-    let flow = Flow::new();
+    let compiler = Compiler::for_target(args.opt_or("target", "stratix10sx"))?;
 
-    let mode = Flow::paper_mode(name);
+    let mode = Mode::auto(&net, &compiler.target.device);
     let result = match mode {
-        Mode::Folded => dse::explore_folded(&flow, &net, budget),
-        Mode::Pipelined => dse::explore_pipelined(&flow, &net),
+        Mode::Folded => dse::explore_folded(&compiler, &net, budget),
+        Mode::Pipelined => dse::explore_pipelined(&compiler, &net),
     };
 
     println!(
-        "{name}: evaluated {} points, {} rejected (rule violations / routing failures)",
+        "{name} on {}: evaluated {} points, {} rejected (rule violations / routing failures)",
+        compiler.target.name,
         result.evaluated,
         result.log.iter().filter(|p| p.rejected.is_some()).count()
+    );
+    println!(
+        "synthesis cache: {} hits / {} misses ({:.0}% of synthesis requests skipped)",
+        result.synth_cache.hits,
+        result.synth_cache.misses,
+        result.synth_cache_hit_rate() * 100.0
     );
 
     // Top 10 routed points by FPS.

@@ -18,7 +18,7 @@
 use std::time::Instant;
 
 use tvm_fpga_flow::data;
-use tvm_fpga_flow::flow::{Flow, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::{self, paper};
 use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
@@ -90,11 +90,11 @@ fn main() -> tvm_fpga_flow::Result<()> {
 
     // ---- 2. the compilation flow: Table IV ------------------------------
     println!("\n[2/3] compilation flow: Table IV (base vs optimized, simulated S10SX)");
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let mut t4 = Table::new("Table IV — FPS of base versus optimized circuits", &["network", "base", "optimized", "speedup", "paper"]);
     for (name, pb, po, ps) in paper::TABLE4 {
         let g = models::by_name(name).unwrap();
-        let mode = Flow::paper_mode(name);
+        let mode = Compiler::paper_mode(name);
         let base = flow.compile(&g, mode, OptLevel::Base)?;
         let opt = flow.compile(&g, mode, OptLevel::Optimized)?;
         t4.row(&[

@@ -5,13 +5,13 @@
 //! cargo run --release --example lenet5_pipelined
 //! ```
 
-use tvm_fpga_flow::flow::{Flow, Mode, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, Mode, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::sim::engine;
 use tvm_fpga_flow::util::bench::Table;
 
 fn main() -> tvm_fpga_flow::Result<()> {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let net = models::lenet5();
     let acc = flow.compile(&net, Mode::Pipelined, OptLevel::Optimized)?;
 

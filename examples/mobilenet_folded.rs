@@ -6,13 +6,13 @@
 //! cargo run --release --example mobilenet_folded
 //! ```
 
-use tvm_fpga_flow::flow::{Flow, Mode, OptConfig, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, Mode, OptConfig, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::schedule::OptKind;
 use tvm_fpga_flow::util::bench::Table;
 
 fn main() -> tvm_fpga_flow::Result<()> {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let net = models::mobilenet_v1();
 
     // §III: the workhorse op claim.

@@ -6,12 +6,12 @@
 //! cargo run --release --example resnet34_folded
 //! ```
 
-use tvm_fpga_flow::flow::{default_factors, Flow, Mode, OptConfig, OptLevel};
+use tvm_fpga_flow::flow::{default_factors, Compiler, Mode, OptConfig, OptLevel};
 use tvm_fpga_flow::graph::{models, GroupKind, ParamGroup};
 use tvm_fpga_flow::util::bench::Table;
 
 fn main() -> tvm_fpga_flow::Result<()> {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let net = models::resnet34();
     let acc = flow.compile(&net, Mode::Folded, OptLevel::Optimized)?;
 

@@ -13,7 +13,7 @@
 //! Workers construct their own `Runtime` (PJRT client + weights) at spawn,
 //! so nothing `!Send` crosses threads.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -58,6 +58,7 @@ struct Request {
 /// Aggregate serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct StatsSnapshot {
+    pub submitted: u64,
     pub completed: u64,
     pub batches: u64,
     pub batched_frames: u64,
@@ -68,10 +69,23 @@ pub struct StatsSnapshot {
 
 struct Shared {
     latency: Mutex<LatencyStats>,
+    submitted: AtomicU64,
     completed: AtomicU64,
     batches: AtomicU64,
     batched_frames: AtomicU64,
-    stop: AtomicBool,
+}
+
+fn snapshot(shared: &Shared) -> StatsSnapshot {
+    let lat = shared.latency.lock().unwrap();
+    StatsSnapshot {
+        submitted: shared.submitted.load(Ordering::Relaxed),
+        completed: shared.completed.load(Ordering::Relaxed),
+        batches: shared.batches.load(Ordering::Relaxed),
+        batched_frames: shared.batched_frames.load(Ordering::Relaxed),
+        p50_us: lat.percentile(50.0),
+        p99_us: lat.percentile(99.0),
+        mean_us: lat.mean(),
+    }
 }
 
 /// A running inference server.
@@ -93,10 +107,10 @@ impl InferenceServer {
 
         let shared = Arc::new(Shared {
             latency: Mutex::new(LatencyStats::default()),
+            submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_frames: AtomicU64::new(0),
-            stop: AtomicBool::new(false),
         });
 
         // Worker channels: each worker owns its Runtime (one "queue").
@@ -118,10 +132,9 @@ impl InferenceServer {
         // Dispatcher: router + dynamic batcher.
         let (req_tx, req_rx) = channel::<Request>();
         let cfg2 = cfg.clone();
-        let shared2 = Arc::clone(&shared);
         let dispatcher = std::thread::Builder::new()
             .name("router".into())
-            .spawn(move || dispatcher_loop(cfg2, shared2, req_rx, worker_txs))
+            .spawn(move || dispatcher_loop(cfg2, req_rx, worker_txs))
             .expect("spawn dispatcher");
 
         Ok(InferenceServer { req_tx, shared, dispatcher: Some(dispatcher), workers })
@@ -129,40 +142,45 @@ impl InferenceServer {
 
     /// Submit one frame; blocks until classified.
     pub fn infer(&self, frame: Vec<f32>) -> crate::Result<u32> {
-        let (tx, rx) = channel();
-        self.req_tx
-            .send(Request { frame, submitted: Instant::now(), resp: tx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        let rx = self.submit(frame)?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
     /// Submit asynchronously; returns the response channel.
     pub fn infer_async(&self, frame: Vec<f32>) -> crate::Result<Receiver<crate::Result<u32>>> {
+        self.submit(frame)
+    }
+
+    /// Count the submission *before* handing the request to the
+    /// dispatcher: a worker could otherwise complete it (bumping
+    /// `completed`) before `submitted` is incremented, letting an
+    /// observer see `completed > submitted`.
+    fn submit(&self, frame: Vec<f32>) -> crate::Result<Receiver<crate::Result<u32>>> {
         let (tx, rx) = channel();
-        self.req_tx
-            .send(Request { frame, submitted: Instant::now(), resp: tx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        if self.req_tx.send(Request { frame, submitted: Instant::now(), resp: tx }).is_err() {
+            self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+            anyhow::bail!("server stopped");
+        }
         Ok(rx)
     }
 
     pub fn stats(&self) -> StatsSnapshot {
-        let lat = self.shared.latency.lock().unwrap();
-        StatsSnapshot {
-            completed: self.shared.completed.load(Ordering::Relaxed),
-            batches: self.shared.batches.load(Ordering::Relaxed),
-            batched_frames: self.shared.batched_frames.load(Ordering::Relaxed),
-            p50_us: lat.percentile(50.0),
-            p99_us: lat.percentile(99.0),
-            mean_us: lat.mean(),
-        }
+        snapshot(&self.shared)
     }
 
-    /// Stop accepting work and join all threads.
+    /// Stop accepting work and join all threads, then snapshot. The
+    /// snapshot must come *after* the joins: taking it first could
+    /// under-count completions for batches still in flight on the workers.
+    /// While the workers are healthy, every accepted submission is
+    /// drained before the dispatcher exits (mpsc reports disconnection
+    /// only once its buffer is empty), so the final snapshot satisfies
+    /// `completed == submitted`. A worker that died at startup (runtime
+    /// init failure) abandons batches routed to it, and those
+    /// submissions stay uncounted in `completed`.
     pub fn shutdown(mut self) -> StatsSnapshot {
-        self.shared.stop.store(true, Ordering::SeqCst);
-        let stats = self.stats();
-        // Dropping req_tx disconnects the dispatcher, which drops worker
-        // channels, which stops workers.
+        // Dropping req_tx disconnects the dispatcher once it has drained
+        // the queue, which drops worker channels, which stops workers.
         drop(std::mem::replace(&mut self.req_tx, channel().0));
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -170,22 +188,20 @@ impl InferenceServer {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        stats
+        snapshot(&self.shared)
     }
 }
 
 fn dispatcher_loop(
     cfg: ServerConfig,
-    shared: Arc<Shared>,
     req_rx: Receiver<Request>,
     worker_txs: Vec<Sender<Vec<Request>>>,
 ) {
     let mut next_worker = 0usize;
     loop {
-        if shared.stop.load(Ordering::Relaxed) {
-            break;
-        }
-        // Block for the first request.
+        // Block for the first request. Exit only on disconnection, which
+        // mpsc reports only after the queue is drained — shutdown must
+        // never drop an accepted request.
         let first = match req_rx.recv_timeout(Duration::from_millis(50)) {
             Ok(r) => r,
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
@@ -317,7 +333,10 @@ mod tests {
             assert!(pred < 10);
         }
         let stats = server.shutdown();
-        assert_eq!(stats.completed, 32);
+        assert_eq!(stats.submitted, 32);
+        // Joined-then-snapshotted: nothing submitted may be missing from
+        // the completion count.
+        assert_eq!(stats.completed, stats.submitted, "{stats:?}");
         assert!(stats.p50_us.is_some());
         // The burst must have produced at least one multi-frame batch.
         assert!(stats.batched_frames >= 2, "{stats:?}");
@@ -341,6 +360,7 @@ mod tests {
         }
         let stats = server.shutdown();
         assert_eq!(stats.completed, 4);
+        assert_eq!(stats.completed, stats.submitted);
         assert_eq!(stats.batched_frames, 0);
     }
 

@@ -5,7 +5,14 @@
 //! "over 1.6M ALUTs, 3.4M FFs, 5.7K DSPs and 11M bits of on-chip RAM …
 //! 32GB of external DDR4 arranged in 4 banks, with a theoretical peak
 //! bandwidth of 76.8GB/s".
+//!
+//! [`target`] wraps the device envelopes in a named registry so the rest of
+//! the flow (legality clock, bandwidth roof, shell overhead, f_max base)
+//! picks everything from one `--target` selection.
 
+pub mod target;
+
+pub use target::Target;
 
 /// An FPGA device resource envelope.
 #[derive(Debug, Clone, PartialEq)]
@@ -25,10 +32,14 @@ pub struct FpgaDevice {
     pub ext_bw_bytes_per_s: f64,
     /// Number of external memory banks.
     pub ext_banks: u32,
-    /// Baseline OpenCL shell clock the AOC model degrades from, MHz.
-    pub base_clock_mhz: f64,
     /// Fraction of the device consumed by the board shell/BSP logic.
     pub shell_overhead_frac: f64,
+    /// Clock the §IV-J legality rules assume when sizing the bandwidth
+    /// roof (the paper's "Assuming a 250 MHz operating frequency" on the
+    /// S10SX). It also anchors the f_max model's near-empty-design base
+    /// clock via `flow::Compiler::new`. Faster fabrics stream fewer words
+    /// per cycle from the same DDR, so the roof tightens as this rises.
+    pub legality_clock_mhz: f64,
 }
 
 impl FpgaDevice {
@@ -45,8 +56,46 @@ impl FpgaDevice {
             bram_block_bits: 20 * 1024,
             ext_bw_bytes_per_s: 76.8e9,
             ext_banks: 4,
-            base_clock_mhz: 240.0,
             shell_overhead_frac: 0.12,
+            legality_clock_mhz: 250.0,
+        }
+    }
+
+    /// Arria 10 GX 1150 (10AX115) on a DDR4-2133 dual-bank board — the
+    /// previous-generation mid-range device several related toolflows
+    /// target. Roughly half the fabric, a quarter of the DSPs, and half
+    /// the memory bandwidth of the D5005; the smaller shell is a larger
+    /// fraction of the part.
+    pub fn arria10gx() -> Self {
+        FpgaDevice {
+            name: "Arria 10 GX 1150 (10AX115N2F40)".into(),
+            aluts: 854_400,
+            ffs: 1_708_800,
+            dsps: 1_518,
+            bram_bits: 2_713 * 20 * 1024,
+            bram_block_bits: 20 * 1024,
+            ext_bw_bytes_per_s: 34.1e9,
+            ext_banks: 2,
+            shell_overhead_frac: 0.18,
+            legality_clock_mhz: 200.0,
+        }
+    }
+
+    /// Agilex 7 class envelope (AGF027-sized): a generation past the
+    /// S10SX — more fabric, faster DDR4-3200 banks, a leaner shell, and a
+    /// fabric that closes timing a hundred MHz higher.
+    pub fn agilex7() -> Self {
+        FpgaDevice {
+            name: "Agilex 7 AGF027 (AGFB027R24C)".into(),
+            aluts: 3_651_200,
+            ffs: 7_302_400,
+            dsps: 8_528,
+            bram_bits: 13_272 * 20 * 1024,
+            bram_block_bits: 20 * 1024,
+            ext_bw_bytes_per_s: 102.4e9,
+            ext_banks: 4,
+            shell_overhead_frac: 0.10,
+            legality_clock_mhz: 350.0,
         }
     }
 
@@ -160,5 +209,27 @@ mod tests {
     fn bram_blocks_m20k() {
         let d = FpgaDevice::stratix10sx();
         assert_eq!(d.bram_blocks(), 11_721);
+    }
+
+    #[test]
+    fn profiles_are_ordered_by_generation() {
+        let a10 = FpgaDevice::arria10gx();
+        let s10 = FpgaDevice::stratix10sx();
+        let agx = FpgaDevice::agilex7();
+        for (small, big) in [(&a10, &s10), (&s10, &agx)] {
+            assert!(small.dsps < big.dsps);
+            assert!(small.ext_bw_bytes_per_s < big.ext_bw_bytes_per_s);
+            assert!(small.legality_clock_mhz <= big.legality_clock_mhz);
+        }
+        assert!(a10.aluts < s10.aluts);
+    }
+
+    #[test]
+    fn legality_roof_tightens_with_clock() {
+        // The same DDR moves fewer words per (faster) cycle: the rule-1
+        // roof must shrink monotonically as the legality clock rises.
+        let d = FpgaDevice::stratix10sx();
+        assert!(d.bw_floats_per_cycle(200.0) > d.bw_floats_per_cycle(250.0));
+        assert!(d.bw_floats_per_cycle(250.0) > d.bw_floats_per_cycle(350.0));
     }
 }

@@ -1,0 +1,132 @@
+//! Named compilation targets — the registry behind `--target` and
+//! [`crate::flow::Compiler::for_target`].
+//!
+//! A [`Target`] bundles a device envelope with the identity the CLI and the
+//! staged compile API select it by, so the legality clock, bandwidth roof
+//! and shell overhead all come from one place instead of constants strewn
+//! through the flow (the hard-coded 250 MHz the monolithic driver used).
+
+use super::FpgaDevice;
+
+/// A named compilation target: a device envelope plus registry identity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Target {
+    /// Canonical registry name (what `--target` matches).
+    pub name: String,
+    /// Human-readable description for `--help`-style listings.
+    pub description: String,
+    /// The device resource/bandwidth envelope.
+    pub device: FpgaDevice,
+}
+
+impl Target {
+    /// The paper's target: Stratix 10SX D5005 PAC (§V-B).
+    pub fn stratix10sx() -> Target {
+        Target {
+            name: "stratix10sx".into(),
+            description: "Intel Stratix 10SX D5005 PAC (the paper's board)".into(),
+            device: FpgaDevice::stratix10sx(),
+        }
+    }
+
+    /// Previous-generation mid-range part.
+    pub fn arria10gx() -> Target {
+        Target {
+            name: "arria10gx".into(),
+            description: "Intel Arria 10 GX 1150, DDR4-2133 x2 board".into(),
+            device: FpgaDevice::arria10gx(),
+        }
+    }
+
+    /// Next-generation envelope.
+    pub fn agilex7() -> Target {
+        Target {
+            name: "agilex7".into(),
+            description: "Intel Agilex 7 AGF027-class board, DDR4-3200 x4".into(),
+            device: FpgaDevice::agilex7(),
+        }
+    }
+
+    /// Wrap an ad-hoc device envelope (tests, what-if studies).
+    pub fn custom(name: impl Into<String>, device: FpgaDevice) -> Target {
+        Target { name: name.into(), description: "custom device envelope".into(), device }
+    }
+
+    /// Canonical names of every registered target. Adding a target means
+    /// adding its constructor, its name here, and its `by_name` arm — the
+    /// registry tests assert the three stay in sync.
+    pub fn names() -> &'static [&'static str] {
+        &["stratix10sx", "arria10gx", "agilex7"]
+    }
+
+    /// All registered targets, derived from [`Target::names`].
+    pub fn all() -> Vec<Target> {
+        Self::names()
+            .iter()
+            .map(|n| Self::by_name(n).expect("every registered name resolves"))
+            .collect()
+    }
+
+    /// Look up a target by canonical name or alias (case-insensitive).
+    pub fn by_name(name: &str) -> Option<Target> {
+        match name.to_ascii_lowercase().as_str() {
+            "stratix10sx" | "stratix10" | "s10" | "s10sx" | "d5005" => Some(Target::stratix10sx()),
+            "arria10gx" | "arria10" | "a10" | "a10gx" => Some(Target::arria10gx()),
+            "agilex7" | "agilex" | "agf027" => Some(Target::agilex7()),
+            _ => None,
+        }
+    }
+
+    /// The clock the §IV-J legality rules assume for this target.
+    pub fn legality_clock_mhz(&self) -> f64 {
+        self.device.legality_clock_mhz
+    }
+
+    /// Rule-1 bandwidth roof at the target's legality clock, in fp32 words
+    /// per cycle.
+    pub fn bandwidth_roof_words(&self) -> u64 {
+        self.device.bw_floats_per_cycle(self.device.legality_clock_mhz).floor() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        for name in Target::names() {
+            let t = Target::by_name(name).expect("canonical name resolves");
+            assert_eq!(&t.name, name);
+        }
+        assert_eq!(Target::by_name("S10").unwrap().name, "stratix10sx");
+        assert_eq!(Target::by_name("arria10").unwrap().name, "arria10gx");
+        assert_eq!(Target::by_name("AGILEX").unwrap().name, "agilex7");
+        assert!(Target::by_name("virtex7").is_none());
+    }
+
+    #[test]
+    fn all_matches_names() {
+        let all = Target::all();
+        assert_eq!(all.len(), Target::names().len());
+        for (t, n) in all.iter().zip(Target::names()) {
+            assert_eq!(&t.name, n);
+        }
+    }
+
+    #[test]
+    fn s10_roof_is_the_papers_76_words() {
+        assert_eq!(Target::stratix10sx().bandwidth_roof_words(), 76);
+    }
+
+    #[test]
+    fn roofs_differ_across_targets() {
+        // Arria: less bandwidth but a slower clock → a different roof;
+        // Agilex: more bandwidth but a faster clock.
+        let s10 = Target::stratix10sx().bandwidth_roof_words();
+        let a10 = Target::arria10gx().bandwidth_roof_words();
+        let agx = Target::agilex7().bandwidth_roof_words();
+        assert!(a10 < s10, "{a10} vs {s10}");
+        assert!(agx != s10, "{agx} vs {s10}");
+    }
+}

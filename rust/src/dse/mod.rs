@@ -5,12 +5,18 @@
 //!
 //! The explorer sweeps candidate (t_ic, t_oc) tiles per parameterized
 //! group (folded) or per-kernel unroll caps (pipelined), applies the three
-//! §IV-J legality rules through the normal flow, and keeps the best
-//! simulated-FPS design. Because our "synthesis" is a model, a full sweep
-//! takes milliseconds where the paper's Quartus runs took 3–12 hours per
-//! point.
+//! §IV-J legality rules through the staged flow, and keeps the best
+//! simulated-FPS design. Candidate tiles are ordered diagonal-first
+//! (balanced tiles from small to large, then increasingly skewed pairs) so
+//! a small budget still samples the whole magnitude range instead of only
+//! the lexicographically-first corner of the grid.
+//!
+//! Because many candidate tiles clamp to the same effective factors (rule
+//! 2 divisibility) the sweep revisits identical kernel programs; the
+//! [`Compiler`]'s synthesis memo turns those into cache hits, reported in
+//! [`DseResult::synth_cache`].
 
-use crate::flow::{patterns::FactorPlan, Flow, Mode, OptConfig};
+use crate::flow::{patterns::FactorPlan, CacheStats, Compiler, Mode, OptConfig};
 use crate::graph::{Graph, ParamGroup};
 
 /// One evaluated design point.
@@ -32,36 +38,60 @@ pub struct DseResult {
     pub best: Option<DsePoint>,
     pub log: Vec<DsePoint>,
     pub evaluated: usize,
+    /// Synthesis-memo hits/misses attributable to this exploration.
+    pub synth_cache: CacheStats,
+}
+
+impl DseResult {
+    /// Fraction of synthesis requests served from the memo during the
+    /// sweep.
+    pub fn synth_cache_hit_rate(&self) -> f64 {
+        self.synth_cache.hit_rate()
+    }
 }
 
 /// Candidate per-dimension tile factors (powers of two are router-friendly
 /// and divide the evaluation networks' channel counts).
 pub const TILE_CANDIDATES: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
 
+/// The full (t_ic, t_oc) candidate grid, ordered diagonal-first: balanced
+/// pairs from small to large, then pairs of growing imbalance. Truncating
+/// this order to any budget keeps coverage of the whole magnitude range —
+/// the previous lexicographic `truncate` never reached tiles ≥ 16 for any
+/// realistic budget.
+pub fn tile_candidates_ordered() -> Vec<(u64, u64)> {
+    let n = TILE_CANDIDATES.len();
+    let mut idx: Vec<(usize, usize)> = Vec::with_capacity(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            idx.push((i, j));
+        }
+    }
+    idx.sort_by_key(|&(i, j)| (i.abs_diff(j), i + j, i));
+    idx.into_iter().map(|(i, j)| (TILE_CANDIDATES[i], TILE_CANDIDATES[j])).collect()
+}
+
 /// Sweep folded-mode tiles for every parameterized group, one group at a
 /// time (coordinate descent: groups are resource-coupled but the paper's
 /// manual sweep treats them independently too).
-pub fn explore_folded(flow: &Flow, graph: &Graph, budget_per_group: usize) -> DseResult {
+pub fn explore_folded(compiler: &Compiler, graph: &Graph, budget_per_group: usize) -> DseResult {
+    let cache_before = compiler.cache_stats();
     let base_plan = crate::flow::default_factors(graph);
     let groups: Vec<ParamGroup> = base_plan.group_tiles.keys().copied().collect();
 
     let mut best_plan = base_plan.clone();
     let mut log = Vec::new();
     let mut evaluated = 0;
-    let mut best_fps = eval(flow, graph, Mode::Folded, &best_plan, &mut log, &mut evaluated);
+    let mut best_fps = eval(compiler, graph, Mode::Folded, &best_plan, &mut log, &mut evaluated);
+
+    let mut candidates = tile_candidates_ordered();
+    candidates.truncate(budget_per_group.max(1));
 
     for g in &groups {
-        let mut candidates: Vec<(u64, u64)> = Vec::new();
-        for &a in &TILE_CANDIDATES {
-            for &b in &TILE_CANDIDATES {
-                candidates.push((a, b));
-            }
-        }
-        candidates.truncate(budget_per_group.max(1));
-        for (t_ic, t_oc) in candidates {
+        for &(t_ic, t_oc) in &candidates {
             let mut plan = best_plan.clone();
             plan.group_tiles.insert(*g, (t_ic, t_oc));
-            let fps = eval(flow, graph, Mode::Folded, &plan, &mut log, &mut evaluated);
+            let fps = eval(compiler, graph, Mode::Folded, &plan, &mut log, &mut evaluated);
             if fps > best_fps {
                 best_fps = fps;
                 best_plan = plan;
@@ -69,33 +99,43 @@ pub fn explore_folded(flow: &Flow, graph: &Graph, budget_per_group: usize) -> Ds
         }
     }
 
-    let best = log
-        .iter()
-        .filter(|p| p.rejected.is_none())
-        .max_by(|a, b| a.fps.total_cmp(&b.fps))
-        .cloned();
-    DseResult { best, log, evaluated }
+    finish(log, evaluated, compiler, cache_before)
 }
 
 /// Sweep pipelined unroll caps.
-pub fn explore_pipelined(flow: &Flow, graph: &Graph) -> DseResult {
+pub fn explore_pipelined(compiler: &Compiler, graph: &Graph) -> DseResult {
+    let cache_before = compiler.cache_stats();
     let mut log = Vec::new();
     let mut evaluated = 0;
     for cap in [16u64, 32, 64, 128, 256, 512, 1024] {
         let mut plan = crate::flow::default_factors(graph);
         plan.pipelined_cap = cap;
-        eval(flow, graph, Mode::Pipelined, &plan, &mut log, &mut evaluated);
+        eval(compiler, graph, Mode::Pipelined, &plan, &mut log, &mut evaluated);
     }
+    finish(log, evaluated, compiler, cache_before)
+}
+
+fn finish(
+    log: Vec<DsePoint>,
+    evaluated: usize,
+    compiler: &Compiler,
+    cache_before: CacheStats,
+) -> DseResult {
     let best = log
         .iter()
         .filter(|p| p.rejected.is_none())
         .max_by(|a, b| a.fps.total_cmp(&b.fps))
         .cloned();
-    DseResult { best, log, evaluated }
+    let after = compiler.cache_stats();
+    let synth_cache = CacheStats {
+        hits: after.hits - cache_before.hits,
+        misses: after.misses - cache_before.misses,
+    };
+    DseResult { best, log, evaluated, synth_cache }
 }
 
 fn eval(
-    flow: &Flow,
+    compiler: &Compiler,
     graph: &Graph,
     mode: Mode,
     plan: &FactorPlan,
@@ -103,19 +143,10 @@ fn eval(
     evaluated: &mut usize,
 ) -> f64 {
     *evaluated += 1;
-    match flow.compile_with(graph, mode, &OptConfig::optimized(), plan) {
-        Ok(acc) => {
-            let u = &acc.synthesis.resources.utilization;
-            let fps = acc.performance.fps;
-            log.push(DsePoint {
-                plan: plan.clone(),
-                fps,
-                fmax_mhz: acc.synthesis.fmax_mhz,
-                dsp_frac: u.dsp_frac,
-                logic_frac: u.logic_frac,
-                bram_frac: u.bram_frac,
-                rejected: None,
-            });
+    match eval_point(compiler, graph, mode, plan) {
+        Ok(p) => {
+            let fps = p.fps;
+            log.push(p);
             fps
         }
         Err(e) => {
@@ -133,15 +164,42 @@ fn eval(
     }
 }
 
+/// Evaluate one design point through the staged API: the explorer only
+/// needs the synthesis report and the performance numbers, so no per-point
+/// `Accelerator` (with its kernel-program deep copy) is materialized.
+fn eval_point(
+    compiler: &Compiler,
+    graph: &Graph,
+    mode: Mode,
+    plan: &FactorPlan,
+) -> crate::Result<DsePoint> {
+    let mut session =
+        compiler.graph(graph).mode(mode).opts(OptConfig::optimized()).plan(plan.clone());
+    session.lower()?;
+    let design = session.synthesize()?;
+    let u = design.synthesis.resources.utilization;
+    let perf = design.performance();
+    Ok(DsePoint {
+        plan: plan.clone(),
+        fps: perf.fps,
+        fmax_mhz: design.synthesis.fmax_mhz,
+        dsp_frac: u.dsp_frac,
+        logic_frac: u.logic_frac,
+        bram_frac: u.bram_frac,
+        rejected: None,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::models;
+    use crate::graph::GroupKind;
 
     #[test]
     fn pipelined_dse_finds_a_design() {
-        let flow = Flow::new();
-        let r = explore_pipelined(&flow, &models::lenet5());
+        let compiler = Compiler::default();
+        let r = explore_pipelined(&compiler, &models::lenet5());
         let best = r.best.expect("some design routes");
         assert!(best.fps > 1000.0);
         assert!(r.evaluated >= 7);
@@ -149,14 +207,14 @@ mod tests {
 
     #[test]
     fn folded_dse_improves_or_matches_default() {
-        let flow = Flow::new();
+        let compiler = Compiler::default();
         let g = models::mobilenet_v1();
-        let default_fps = flow
+        let default_fps = compiler
             .compile(&g, Mode::Folded, crate::flow::OptLevel::Optimized)
             .unwrap()
             .performance
             .fps;
-        let r = explore_folded(&flow, &g, 12);
+        let r = explore_folded(&compiler, &g, 12);
         let best = r.best.expect("best exists");
         assert!(best.fps >= default_fps * 0.99, "dse {} vs default {}", best.fps, default_fps);
     }
@@ -165,7 +223,7 @@ mod tests {
     fn dse_log_contains_rejections_for_huge_tiles() {
         // Force an oversized sweep on ResNet: 64×64 tiles on the 3×3 group
         // would be 36K lanes — must be rejected (rule 3 / routing).
-        let flow = Flow::new();
+        let compiler = Compiler::default();
         let g = models::resnet34();
         let mut plan = crate::flow::default_factors(&g);
         for (_, t) in plan.group_tiles.iter_mut() {
@@ -173,8 +231,56 @@ mod tests {
         }
         let mut log = Vec::new();
         let mut n = 0;
-        let fps = eval(&flow, &g, Mode::Folded, &plan, &mut log, &mut n);
+        let fps = eval(&compiler, &g, Mode::Folded, &plan, &mut log, &mut n);
         assert_eq!(fps, 0.0);
         assert!(log[0].rejected.is_some());
+    }
+
+    #[test]
+    fn candidate_order_is_diagonal_first_and_complete() {
+        let c = tile_candidates_ordered();
+        assert_eq!(c.len(), TILE_CANDIDATES.len() * TILE_CANDIDATES.len());
+        // Balanced tiles lead, small to large.
+        assert_eq!(&c[..7], &[(1, 1), (2, 2), (4, 4), (8, 8), (16, 16), (32, 32), (64, 64)]);
+        // No duplicates.
+        let mut seen = std::collections::BTreeSet::new();
+        assert!(c.iter().all(|t| seen.insert(*t)));
+    }
+
+    #[test]
+    fn budget_12_still_evaluates_large_tiles() {
+        // Regression for the old `candidates.truncate(budget)` bug, which
+        // kept only the lexicographically-first (all-small) tile pairs: a
+        // budget of 12 must still evaluate at least one tile ≥ 16 for the
+        // swept groups — checked on a depthwise group whose default tile
+        // is (8, 1), so any ≥16 entry can only come from the sweep.
+        let first12 = tile_candidates_ordered().into_iter().take(12).collect::<Vec<_>>();
+        assert!(first12.iter().any(|&(a, b)| a.max(b) >= 16), "{first12:?}");
+
+        let compiler = Compiler::default();
+        let g = models::mobilenet_v1();
+        let r = explore_folded(&compiler, &g, 12);
+        let dw = ParamGroup { kind: GroupKind::Depthwise, kernel: 3, stride: 1 };
+        assert!(
+            r.log.iter().any(|p| p
+                .plan
+                .group_tiles
+                .get(&dw)
+                .is_some_and(|&(a, b)| a.max(b) >= 16)),
+            "no large depthwise tile was ever evaluated under budget 12"
+        );
+    }
+
+    #[test]
+    fn folded_dse_reports_synthesis_cache_hits() {
+        // Depthwise groups ignore t_oc and small extents clamp large
+        // tiles, so the sweep necessarily revisits identical programs —
+        // the memo must convert those into hits.
+        let compiler = Compiler::default();
+        let g = models::mobilenet_v1();
+        let r = explore_folded(&compiler, &g, 16);
+        assert!(r.synth_cache.hits > 0, "{:?}", r.synth_cache);
+        assert!(r.synth_cache_hit_rate() > 0.0);
+        assert!(r.synth_cache.total() <= r.evaluated as u64);
     }
 }

@@ -10,12 +10,12 @@
 //! buffer, so steady-state throughput is `1 / max(front interval, back
 //! frame time)` while both sections must co-reside on the device.
 
-use crate::aoc::{self, SynthesisReport};
+use crate::aoc::SynthesisReport;
 use crate::graph::{Graph, GraphBuilder, Op, Shape};
 use crate::sim::{folded, pipelined};
 
 use super::patterns::{self, FactorPlan, OptConfig};
-use super::Flow;
+use super::{Compiler, Flow};
 
 /// A compiled hybrid deployment.
 #[derive(Debug, Clone)]
@@ -104,7 +104,7 @@ fn rebuild_range(graph: &Graph, lo: usize, hi: usize, input_shape: Option<Shape>
 }
 
 
-impl Flow {
+impl Compiler {
     /// Compile a hybrid deployment with an explicit cut.
     pub fn compile_hybrid(
         &self,
@@ -129,11 +129,12 @@ impl Flow {
             merged.kernels.push(k);
         }
         merged.queues += back_prog.queues;
-        let synthesis = aoc::synthesize(&merged, &self.device, &self.fmax_model)?;
+        let (synthesis, _) = self.synthesize_memoized(&merged)?;
         let fmax = synthesis.fmax_mhz;
 
-        let front_perf = pipelined::simulate(&front_prog, &self.device, fmax, &self.host);
-        let back_perf = folded::simulate(&back_prog, &back_work, &self.device, fmax, &self.host);
+        let dev = &self.target.device;
+        let front_perf = pipelined::simulate(&front_prog, dev, fmax, &self.host);
+        let back_perf = folded::simulate(&back_prog, &back_work, dev, fmax, &self.host);
 
         // Sections overlap across frames (staged through global memory):
         // throughput is governed by the slower section.
@@ -163,10 +164,37 @@ impl Flow {
     }
 }
 
+impl Flow {
+    /// Deprecated shim over [`Compiler::compile_hybrid`].
+    #[deprecated(since = "0.2.0", note = "use Compiler::compile_hybrid")]
+    pub fn compile_hybrid(
+        &self,
+        graph: &Graph,
+        cut: usize,
+        cfg: &OptConfig,
+        plan: &FactorPlan,
+    ) -> crate::Result<HybridAccelerator> {
+        Compiler::from_parts(self.device.clone(), self.fmax_model, self.host)
+            .compile_hybrid(graph, cut, cfg, plan)
+    }
+
+    /// Deprecated shim over [`Compiler::best_hybrid`].
+    #[deprecated(since = "0.2.0", note = "use Compiler::best_hybrid")]
+    pub fn best_hybrid(
+        &self,
+        graph: &Graph,
+        cfg: &OptConfig,
+        plan: &FactorPlan,
+    ) -> Option<HybridAccelerator> {
+        Compiler::from_parts(self.device.clone(), self.fmax_model, self.host)
+            .best_hybrid(graph, cfg, plan)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::flow::{default_factors, Mode, OptLevel};
+    use crate::flow::{default_factors, Compiler, Mode, OptLevel};
     use crate::graph::models;
 
     #[test]
@@ -191,10 +219,10 @@ mod tests {
 
     #[test]
     fn hybrid_mobilenet_compiles_and_reports() {
-        let flow = Flow::new();
+        let compiler = Compiler::default();
         let g = models::mobilenet_v1();
         let plan = default_factors(&g);
-        let hybrid = flow.best_hybrid(&g, &OptConfig::optimized(), &plan);
+        let hybrid = compiler.best_hybrid(&g, &OptConfig::optimized(), &plan);
         let Some(h) = hybrid else {
             // Acceptable outcome: no clean cut fits on the device.
             return;
@@ -202,16 +230,16 @@ mod tests {
         assert!(h.fps > 0.0);
         assert!(h.front_interval_s > 0.0 && h.back_time_s > 0.0);
         // Compare against pure folded for the record.
-        let folded = flow.compile(&g, Mode::Folded, OptLevel::Optimized).unwrap();
+        let folded = compiler.compile(&g, Mode::Folded, OptLevel::Optimized).unwrap();
         println!("hybrid {} FPS vs folded {} FPS", h.fps, folded.performance.fps);
     }
 
     #[test]
     fn bad_cut_errors() {
-        let flow = Flow::new();
+        let compiler = Compiler::default();
         let g = models::mobilenet_v1();
         let plan = default_factors(&g);
-        assert!(flow.compile_hybrid(&g, 0, &OptConfig::optimized(), &plan).is_err());
-        assert!(flow.compile_hybrid(&g, 10_000, &OptConfig::optimized(), &plan).is_err());
+        assert!(compiler.compile_hybrid(&g, 0, &OptConfig::optimized(), &plan).is_err());
+        assert!(compiler.compile_hybrid(&g, 10_000, &OptConfig::optimized(), &plan).is_err());
     }
 }

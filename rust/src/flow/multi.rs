@@ -9,12 +9,11 @@
 //! (smaller) kernel subset, so per-device utilization drops and f_max
 //! rises — the multi-FPGA win the paper anticipates.
 
-use crate::aoc;
 use crate::graph::Graph;
 use crate::sim::{folded, HostModel};
 
 use super::patterns::{self, FactorPlan, OptConfig};
-use super::Flow;
+use super::{Compiler, Flow};
 
 /// Inter-FPGA link model (PCIe peer-to-peer / serial-lite style).
 #[derive(Debug, Clone, Copy)]
@@ -50,7 +49,7 @@ pub struct MultiAccelerator {
     pub shares: Vec<DeviceShare>,
 }
 
-impl Flow {
+impl Compiler {
     /// Compile a folded deployment across `devices` identical FPGAs.
     pub fn compile_multi(
         &self,
@@ -61,11 +60,12 @@ impl Flow {
         link: &Link,
     ) -> crate::Result<MultiAccelerator> {
         anyhow::ensure!(devices >= 1, "need at least one device");
+        let dev = &self.target.device;
         let (prog, work) = patterns::build_folded(graph, cfg, plan);
 
         // Single-device baseline timings for balancing.
-        let single = aoc::synthesize(&prog, &self.device, &self.fmax_model)?;
-        let base_perf = folded::simulate(&prog, &work, &self.device, single.fmax_mhz, &self.host);
+        let (single, _) = self.synthesize_memoized(&prog)?;
+        let base_perf = folded::simulate(&prog, &work, dev, single.fmax_mhz, &self.host);
         let total_cycles: f64 = base_perf.per_layer.iter().map(|l| l.cycles).sum();
         let target = total_cycles / devices as f64;
 
@@ -112,9 +112,9 @@ impl Flow {
                 })
                 .collect();
 
-            let synth = aoc::synthesize(&sub, &self.device, &self.fmax_model)?;
+            let (synth, _) = self.synthesize_memoized(&sub)?;
             let host = HostModel { ..self.host };
-            let perf = folded::simulate(&sub, &chunk, &self.device, synth.fmax_mhz, &host);
+            let perf = folded::simulate(&sub, &chunk, dev, synth.fmax_mhz, &host);
 
             // Boundary activation transfer into this device.
             let transfer = if d == 0 {
@@ -149,15 +149,31 @@ impl Flow {
     }
 }
 
+impl Flow {
+    /// Deprecated shim over [`Compiler::compile_multi`].
+    #[deprecated(since = "0.2.0", note = "use Compiler::compile_multi")]
+    pub fn compile_multi(
+        &self,
+        graph: &Graph,
+        devices: usize,
+        cfg: &OptConfig,
+        plan: &FactorPlan,
+        link: &Link,
+    ) -> crate::Result<MultiAccelerator> {
+        Compiler::from_parts(self.device.clone(), self.fmax_model, self.host)
+            .compile_multi(graph, devices, cfg, plan, link)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::flow::{default_factors, Mode, OptLevel};
+    use crate::flow::{default_factors, Compiler, Mode, OptLevel};
     use crate::graph::models;
 
     #[test]
     fn two_devices_beat_one_on_resnet() {
-        let flow = Flow::new();
+        let flow = Compiler::default();
         let g = models::resnet34();
         let plan = default_factors(&g);
         let single = flow.compile(&g, Mode::Folded, OptLevel::Optimized).unwrap().performance.fps;
@@ -174,7 +190,7 @@ mod tests {
 
     #[test]
     fn one_device_matches_single_flow_closely() {
-        let flow = Flow::new();
+        let flow = Compiler::default();
         let g = models::mobilenet_v1();
         let plan = default_factors(&g);
         let single = flow.compile(&g, Mode::Folded, OptLevel::Optimized).unwrap().performance.fps;
@@ -186,7 +202,7 @@ mod tests {
 
     #[test]
     fn scaling_has_diminishing_returns() {
-        let flow = Flow::new();
+        let flow = Compiler::default();
         let g = models::resnet34();
         let plan = default_factors(&g);
         let f2 = flow.compile_multi(&g, 2, &OptConfig::optimized(), &plan, &Link::default()).unwrap().fps;
@@ -199,7 +215,7 @@ mod tests {
 
     #[test]
     fn shares_cover_all_layers_once() {
-        let flow = Flow::new();
+        let flow = Compiler::default();
         let g = models::mobilenet_v1();
         let plan = default_factors(&g);
         let multi = flow

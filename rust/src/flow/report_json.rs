@@ -71,13 +71,13 @@ impl Accelerator {
 
 #[cfg(test)]
 mod tests {
-    use crate::flow::{Flow, Mode, OptLevel};
+    use crate::flow::{Compiler, Mode, OptLevel};
     use crate::graph::models;
     use crate::util::json;
 
     #[test]
     fn json_roundtrips_and_carries_key_fields() {
-        let acc = Flow::new()
+        let acc = Compiler::default()
             .compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized)
             .unwrap();
         let j = acc.to_json();

@@ -1,0 +1,597 @@
+//! Staged compilation API: `Compiler` → `CompileSession` → typed stage
+//! artifacts.
+//!
+//! The paper's flow is a staged pipeline (frozen graph → scheduled kernels
+//! → AOC synthesis → performance), but the original driver exposed it only
+//! as a monolithic `compile` call, so every explorer re-ran all stages per
+//! design point. Here each stage returns a typed artifact that can be
+//! inspected, cached and re-entered:
+//!
+//! * [`CompileSession::lower`] → [`LoweredProgram`]: scheduled kernels +
+//!   legality check against the target's clock (§IV-J rules 1/2);
+//! * [`LoweredProgram::synthesize`] → [`SynthesizedDesign`]: the AOC model
+//!   (resources, routing, f_max), **memoized** by a content hash of the
+//!   kernel program so sweeps that revisit a program skip the stage;
+//! * [`SynthesizedDesign::simulate`] → [`Accelerator`]: the performance
+//!   model at the synthesized f_max.
+//!
+//! ```no_run
+//! use tvm_fpga_flow::flow::{Compiler, ModeChoice};
+//! use tvm_fpga_flow::graph::models;
+//!
+//! let net = models::lenet5();
+//! let acc = Compiler::for_target("stratix10sx").unwrap()
+//!     .graph(&net)
+//!     .mode(ModeChoice::Auto)
+//!     .lower().unwrap()
+//!     .synthesize().unwrap()
+//!     .simulate().unwrap();
+//! println!("{:.0} FPS", acc.performance.fps);
+//! ```
+//!
+//! Errors are typed ([`CompileError`]) and surface through `anyhow` so
+//! callers can `downcast_ref::<CompileError>()` to react programmatically.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::aoc::{self, FmaxModel, SynthesisReport};
+use crate::codegen::KernelProgram;
+use crate::device::Target;
+use crate::graph::Graph;
+use crate::sim::folded::LayerWork;
+use crate::sim::{folded, pipelined, HostModel, PerformanceReport};
+
+use super::patterns::{self, default_factors, FactorPlan, OptConfig};
+use super::{legality, Accelerator, Mode, OptLevel};
+
+/// Typed failure modes of the staged compile API.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompileError {
+    /// `Compiler::for_target` was given a name the registry doesn't know.
+    UnknownTarget { name: String },
+    /// A stage needing a graph ran on a session that never got one.
+    MissingGraph,
+    /// The input graph failed structural validation.
+    InvalidGraph(String),
+    /// The factor plan violates the §IV-J legality rules on this target.
+    IllegalPlan { network: String, violations: Vec<String> },
+    /// A stage was requested before the stage it consumes.
+    StageOrder { wanted: &'static str, missing: &'static str },
+    /// The AOC model failed to route the design (rule 3 / congestion).
+    RoutingFailure(String),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::UnknownTarget { name } => write!(
+                f,
+                "unknown target '{name}' (known: {})",
+                Target::names().join(", ")
+            ),
+            CompileError::MissingGraph => write!(f, "no graph attached to this session"),
+            CompileError::InvalidGraph(e) => write!(f, "invalid graph: {e}"),
+            CompileError::IllegalPlan { network, violations } => write!(
+                f,
+                "illegal factor plan for {network}: {}",
+                violations.join("; ")
+            ),
+            CompileError::StageOrder { wanted, missing } => {
+                write!(f, "cannot {wanted} before {missing} has run")
+            }
+            CompileError::RoutingFailure(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Hit/miss counters of the synthesis memo.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of synthesis requests served from the memo (0 when empty).
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+}
+
+/// Synthesis memo: program fingerprint → synthesis outcome. Failures are
+/// cached too (a plan that failed routing once fails identically again).
+#[derive(Debug, Default)]
+struct SynthMemo {
+    map: Mutex<HashMap<u64, Result<SynthesisReport, String>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Stable content hash of a kernel program (FNV-1a over the canonical
+/// debug rendering — every schedule-relevant field of the kernels feeds
+/// the synthesis model and is part of `Debug`).
+pub fn program_fingerprint(prog: &KernelProgram) -> u64 {
+    let repr = format!("{}|{:?}|{:?}|{}", prog.name, prog.kernels, prog.channels, prog.queues);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in repr.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Mode selection for a session: pin a mode or let the flow decide from
+/// the target's resource envelope (§III's deployment choice).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModeChoice {
+    /// Pick pipelined when the estimated design fits on-chip, else folded.
+    Auto,
+    Pipelined,
+    Folded,
+}
+
+impl From<Mode> for ModeChoice {
+    fn from(m: Mode) -> ModeChoice {
+        match m {
+            Mode::Pipelined => ModeChoice::Pipelined,
+            Mode::Folded => ModeChoice::Folded,
+        }
+    }
+}
+
+/// Compilation driver for one target: owns the device envelope, the fitted
+/// AOC/host models, and the synthesis memo shared by every session (and
+/// every clone) it spawns.
+#[derive(Debug, Clone)]
+pub struct Compiler {
+    pub target: Target,
+    pub fmax_model: FmaxModel,
+    pub host: HostModel,
+    memo: Arc<SynthMemo>,
+}
+
+impl Default for Compiler {
+    fn default() -> Self {
+        Compiler::new(Target::stratix10sx())
+    }
+}
+
+impl Compiler {
+    /// Build a compiler for a registered target name (or alias).
+    pub fn for_target(name: &str) -> crate::Result<Compiler> {
+        let target = Target::by_name(name)
+            .ok_or(CompileError::UnknownTarget { name: name.to_string() })?;
+        Ok(Compiler::new(target))
+    }
+
+    /// Build a compiler for an explicit target. The f_max model's base
+    /// clock tracks the target's legality clock (a faster fabric both
+    /// routes faster and tightens the bandwidth roof).
+    pub fn new(target: Target) -> Compiler {
+        let fmax_model =
+            FmaxModel { base_mhz: target.device.legality_clock_mhz, ..FmaxModel::default() };
+        Compiler { target, fmax_model, host: HostModel::default(), memo: Arc::default() }
+    }
+
+    /// Build from explicit parts (the deprecated `Flow` shim path; keeps a
+    /// hand-tuned device/model combination working).
+    pub fn from_parts(device: crate::device::FpgaDevice, fmax_model: FmaxModel, host: HostModel) -> Compiler {
+        let name = format!("custom:{}", device.name);
+        Compiler { target: Target::custom(name, device), fmax_model, host, memo: Arc::default() }
+    }
+
+    /// Start an empty session (attach a graph with [`CompileSession::graph`]).
+    pub fn session(&self) -> CompileSession {
+        CompileSession {
+            compiler: self.clone(),
+            graph: None,
+            mode: ModeChoice::Auto,
+            cfg: OptConfig::optimized(),
+            plan: None,
+            lowered: None,
+            design: None,
+        }
+    }
+
+    /// Start a session on a graph.
+    pub fn graph(&self, graph: &Graph) -> CompileSession {
+        self.session().graph(graph)
+    }
+
+    /// Synthesis-memo counters accumulated by this compiler (shared across
+    /// clones and sessions).
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.memo.hits.load(Ordering::Relaxed),
+            misses: self.memo.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One-shot convenience: run all stages with defaults for the level.
+    pub fn compile(
+        &self,
+        graph: &Graph,
+        mode: impl Into<ModeChoice>,
+        level: OptLevel,
+    ) -> crate::Result<Accelerator> {
+        let cfg = match level {
+            OptLevel::Base => OptConfig::base(),
+            OptLevel::Optimized => OptConfig::optimized(),
+        };
+        self.compile_with(graph, mode, &cfg, &default_factors(graph))
+    }
+
+    /// One-shot convenience with an explicit config + factor plan.
+    pub fn compile_with(
+        &self,
+        graph: &Graph,
+        mode: impl Into<ModeChoice>,
+        cfg: &OptConfig,
+        plan: &FactorPlan,
+    ) -> crate::Result<Accelerator> {
+        self.graph(graph)
+            .mode(mode)
+            .opts(*cfg)
+            .plan(plan.clone())
+            .lower()?
+            .synthesize()?
+            .simulate()
+    }
+
+    /// The mode the paper uses for each evaluation network (Table III).
+    pub fn paper_mode(network: &str) -> Mode {
+        match network {
+            "lenet5" => Mode::Pipelined,
+            _ => Mode::Folded,
+        }
+    }
+
+    /// Memo key: the program fingerprint folded with the device + f_max
+    /// model, so mutating a compiler's public `target`/`fmax_model` can
+    /// never recall a report synthesized for a different context.
+    fn memo_key(&self, prog: &KernelProgram) -> u64 {
+        let ctx = format!("{:?}|{:?}", self.target.device, self.fmax_model);
+        let mut h = program_fingerprint(prog);
+        for b in ctx.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// Memoized synthesis: returns the report and whether it was a hit.
+    pub(crate) fn synthesize_memoized(
+        &self,
+        prog: &KernelProgram,
+    ) -> crate::Result<(SynthesisReport, bool)> {
+        let key = self.memo_key(prog);
+        if let Some(entry) = self.memo.map.lock().unwrap().get(&key).cloned() {
+            self.memo.hits.fetch_add(1, Ordering::Relaxed);
+            return match entry {
+                Ok(rep) => Ok((rep, true)),
+                Err(msg) => Err(CompileError::RoutingFailure(msg).into()),
+            };
+        }
+        self.memo.misses.fetch_add(1, Ordering::Relaxed);
+        let outcome = aoc::synthesize(prog, &self.target.device, &self.fmax_model)
+            .map_err(|e| e.to_string());
+        self.memo.map.lock().unwrap().insert(key, outcome.clone());
+        match outcome {
+            Ok(rep) => Ok((rep, false)),
+            Err(msg) => Err(CompileError::RoutingFailure(msg).into()),
+        }
+    }
+}
+
+/// A configurable compile session. Builder-style setters consume and
+/// return the session; stage methods cache their artifact so a session can
+/// be driven incrementally (`lower` → inspect → `synthesize` → …) or in
+/// one chain.
+#[derive(Debug, Clone)]
+pub struct CompileSession {
+    compiler: Compiler,
+    graph: Option<Graph>,
+    mode: ModeChoice,
+    cfg: OptConfig,
+    plan: Option<FactorPlan>,
+    lowered: Option<LoweredProgram>,
+    design: Option<SynthesizedDesign>,
+}
+
+impl CompileSession {
+    /// Attach (or replace) the input graph; invalidates staged artifacts.
+    pub fn graph(mut self, graph: &Graph) -> Self {
+        self.graph = Some(graph.clone());
+        self.invalidate();
+        self
+    }
+
+    /// Select the execution mode (accepts `Mode` or `ModeChoice`).
+    pub fn mode(mut self, mode: impl Into<ModeChoice>) -> Self {
+        self.mode = mode.into();
+        self.invalidate();
+        self
+    }
+
+    /// Set the optimization switch-board (defaults to all of Table I).
+    pub fn opts(mut self, cfg: OptConfig) -> Self {
+        self.cfg = cfg;
+        self.invalidate();
+        self
+    }
+
+    /// Set the factor plan (defaults to [`default_factors`] of the graph).
+    pub fn plan(mut self, plan: FactorPlan) -> Self {
+        self.plan = Some(plan);
+        self.invalidate();
+        self
+    }
+
+    fn invalidate(&mut self) {
+        self.lowered = None;
+        self.design = None;
+    }
+
+    /// Stage 1: schedule kernels and check §IV-J legality against the
+    /// target's clock. Idempotent; the artifact is cached on the session.
+    pub fn lower(&mut self) -> crate::Result<&LoweredProgram> {
+        if self.lowered.is_none() {
+            let graph = self.graph.as_ref().ok_or(CompileError::MissingGraph)?;
+            graph.validate().map_err(CompileError::InvalidGraph)?;
+            let target = &self.compiler.target;
+            let plan = self.plan.clone().unwrap_or_else(|| default_factors(graph));
+            // Resolve Auto with the session's own config + plan, reusing
+            // the candidate build when pipelined wins rather than lowering
+            // the same program twice.
+            let (mode, prebuilt) = match self.mode {
+                ModeChoice::Pipelined => (Mode::Pipelined, None),
+                ModeChoice::Folded => (Mode::Folded, None),
+                ModeChoice::Auto => {
+                    match super::auto_pipelined_candidate(graph, &target.device, &self.cfg, &plan)
+                    {
+                        Some(built) => (Mode::Pipelined, Some(built)),
+                        None => (Mode::Folded, None),
+                    }
+                }
+            };
+            let (program, work) = match prebuilt {
+                Some(built) => built,
+                None => match mode {
+                    Mode::Pipelined => patterns::build_pipelined(graph, &self.cfg, &plan),
+                    Mode::Folded => patterns::build_folded(graph, &self.cfg, &plan),
+                },
+            };
+
+            // Rules 1/2 (rule 3 = fit, checked by synthesize()).
+            let violations =
+                legality::check_program(&program, &target.device, target.device.legality_clock_mhz);
+            if !violations.is_empty() {
+                return Err(CompileError::IllegalPlan {
+                    network: graph.name.clone(),
+                    violations: violations.iter().map(|v| v.to_string()).collect(),
+                }
+                .into());
+            }
+
+            let applied = patterns::applied_summary(&program);
+            self.lowered = Some(LoweredProgram {
+                compiler: self.compiler.clone(),
+                network: graph.name.clone(),
+                mode,
+                program: Arc::new(program),
+                work: Arc::new(work),
+                applied,
+                flops_per_frame: graph.total_flops(),
+            });
+        }
+        Ok(self.lowered.as_ref().expect("just populated"))
+    }
+
+    /// Stage 2 on this session. Requires [`CompileSession::lower`] to have
+    /// run (typed [`CompileError::StageOrder`] otherwise).
+    pub fn synthesize(&mut self) -> crate::Result<&SynthesizedDesign> {
+        if self.design.is_none() {
+            let design = match self.lowered.as_ref() {
+                Some(lowered) => lowered.synthesize()?,
+                None => {
+                    return Err(CompileError::StageOrder {
+                        wanted: "synthesize",
+                        missing: "lower",
+                    }
+                    .into())
+                }
+            };
+            self.design = Some(design);
+        }
+        Ok(self.design.as_ref().expect("just populated"))
+    }
+
+    /// Stage 3 on this session. Requires [`CompileSession::synthesize`].
+    pub fn simulate(&mut self) -> crate::Result<Accelerator> {
+        match self.design.as_ref() {
+            Some(d) => d.simulate(),
+            None => {
+                Err(CompileError::StageOrder { wanted: "simulate", missing: "synthesize" }.into())
+            }
+        }
+    }
+
+    /// Run every remaining stage and return the finished accelerator.
+    pub fn run(&mut self) -> crate::Result<Accelerator> {
+        self.lower()?;
+        self.synthesize()?;
+        self.simulate()
+    }
+}
+
+/// Stage-1 artifact: scheduled, legality-checked kernels for one mode on
+/// one target. Re-enterable: `synthesize()` can be called any number of
+/// times (memoized). The heavy payloads are `Arc`-shared so cloning an
+/// artifact (or carrying it into the next stage) costs refcount bumps,
+/// not program deep-copies — explorers re-enter stages per design point.
+#[derive(Debug, Clone)]
+pub struct LoweredProgram {
+    compiler: Compiler,
+    pub network: String,
+    pub mode: Mode,
+    pub program: Arc<KernelProgram>,
+    pub work: Arc<Vec<LayerWork>>,
+    /// Table III row.
+    pub applied: Vec<crate::schedule::OptKind>,
+    /// FLOPs per frame (for GFLOPS accounting).
+    pub flops_per_frame: u64,
+}
+
+impl LoweredProgram {
+    /// The target this program was lowered for.
+    pub fn target(&self) -> &Target {
+        &self.compiler.target
+    }
+
+    /// Content hash of the kernel program. The synthesis memo additionally
+    /// folds the target device + f_max model into its key, so equal
+    /// fingerprints share a memo entry only within one compilation context.
+    pub fn fingerprint(&self) -> u64 {
+        program_fingerprint(&self.program)
+    }
+
+    /// Stage 2: run (or recall) the AOC model for this program.
+    pub fn synthesize(&self) -> crate::Result<SynthesizedDesign> {
+        let (synthesis, cache_hit) = self.compiler.synthesize_memoized(&self.program)?;
+        Ok(SynthesizedDesign { lowered: self.clone(), synthesis, cache_hit })
+    }
+}
+
+/// Stage-2 artifact: a routed design with resources and achieved f_max.
+#[derive(Debug, Clone)]
+pub struct SynthesizedDesign {
+    lowered: LoweredProgram,
+    pub synthesis: SynthesisReport,
+    /// True when the report came from the synthesis memo.
+    pub cache_hit: bool,
+}
+
+impl SynthesizedDesign {
+    /// The stage-1 artifact this design was synthesized from.
+    pub fn lowered(&self) -> &LoweredProgram {
+        &self.lowered
+    }
+
+    pub fn fmax_mhz(&self) -> f64 {
+        self.synthesis.fmax_mhz
+    }
+
+    /// Stage 3, report only: run the performance model at the synthesized
+    /// clock without materializing an [`Accelerator`]. Explorers that only
+    /// need FPS/utilization per design point use this to avoid deep-copying
+    /// the kernel program for every candidate.
+    pub fn performance(&self) -> PerformanceReport {
+        let l = &self.lowered;
+        let c = &l.compiler;
+        let fmax = self.synthesis.fmax_mhz;
+        match l.mode {
+            Mode::Pipelined => pipelined::simulate(&l.program, &c.target.device, fmax, &c.host),
+            Mode::Folded => folded::simulate(&l.program, &l.work, &c.target.device, fmax, &c.host),
+        }
+    }
+
+    /// Stage 3: simulate performance at the synthesized clock.
+    pub fn simulate(&self) -> crate::Result<Accelerator> {
+        let l = &self.lowered;
+        let performance = self.performance();
+        Ok(Accelerator {
+            network: l.network.clone(),
+            mode: l.mode,
+            program: l.program.as_ref().clone(),
+            synthesis: self.synthesis.clone(),
+            performance,
+            work: l.work.as_ref().clone(),
+            applied: l.applied.clone(),
+            flops_per_frame: l.flops_per_frame,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn staged_chain_matches_one_shot() {
+        let compiler = Compiler::default();
+        let g = models::lenet5();
+        let staged = compiler
+            .graph(&g)
+            .mode(Mode::Pipelined)
+            .lower()
+            .unwrap()
+            .synthesize()
+            .unwrap()
+            .simulate()
+            .unwrap();
+        let oneshot = compiler.compile(&g, Mode::Pipelined, OptLevel::Optimized).unwrap();
+        assert_eq!(staged.performance.fps, oneshot.performance.fps);
+        assert_eq!(staged.synthesis.fmax_mhz, oneshot.synthesis.fmax_mhz);
+    }
+
+    #[test]
+    fn lowered_artifact_is_inspectable_before_synthesis() {
+        let compiler = Compiler::default();
+        let g = models::mobilenet_v1();
+        let mut session = compiler.graph(&g).mode(ModeChoice::Folded);
+        let lowered = session.lower().unwrap();
+        assert_eq!(lowered.network, "mobilenet_v1");
+        assert_eq!(lowered.mode, Mode::Folded);
+        assert!(!lowered.program.kernels.is_empty());
+        assert!(lowered.fingerprint() != 0);
+        // No synthesis has happened yet.
+        assert_eq!(compiler.cache_stats().total(), 0);
+    }
+
+    #[test]
+    fn memo_hits_on_identical_programs() {
+        let compiler = Compiler::default();
+        let g = models::lenet5();
+        let d1 = compiler.graph(&g).mode(Mode::Pipelined).lower().unwrap().synthesize().unwrap();
+        let d2 = compiler.graph(&g).mode(Mode::Pipelined).lower().unwrap().synthesize().unwrap();
+        assert!(!d1.cache_hit);
+        assert!(d2.cache_hit);
+        assert_eq!(d1.synthesis.fmax_mhz, d2.synthesis.fmax_mhz);
+        assert_eq!(d1.synthesis.resources.total, d2.synthesis.resources.total);
+        let stats = compiler.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_mode_resolves_per_target() {
+        // LeNet-5 fits pipelined on the big S10SX; the big networks don't.
+        let s10 = Compiler::default();
+        let mut s = s10.graph(&models::lenet5()).mode(ModeChoice::Auto);
+        assert_eq!(s.lower().unwrap().mode, Mode::Pipelined);
+        let mut m = s10.graph(&models::resnet34()).mode(ModeChoice::Auto);
+        assert_eq!(m.lower().unwrap().mode, Mode::Folded);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_programs() {
+        let compiler = Compiler::default();
+        let g = models::lenet5();
+        let mut a = compiler.graph(&g).mode(Mode::Pipelined);
+        let mut b = compiler.graph(&g).mode(Mode::Folded);
+        assert_ne!(a.lower().unwrap().fingerprint(), b.lower().unwrap().fingerprint());
+    }
+}

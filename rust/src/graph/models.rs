@@ -310,8 +310,8 @@ mod tests {
 
     #[test]
     fn extra_networks_compile_folded() {
-        use crate::flow::{Flow, Mode, OptLevel};
-        let flow = Flow::new();
+        use crate::flow::{Compiler, Mode, OptLevel};
+        let flow = Compiler::default();
         for name in ["alexnet", "vgg16"] {
             let g = by_name(name).unwrap();
             let acc = flow.compile(&g, Mode::Folded, OptLevel::Optimized).unwrap();

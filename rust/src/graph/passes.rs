@@ -219,9 +219,9 @@ mod tests {
 
     #[test]
     fn folded_resnet_still_compiles() {
-        use crate::flow::{Flow, Mode, OptLevel};
+        use crate::flow::{Compiler, Mode, OptLevel};
         let (g2, _) = standard_pipeline(&models::resnet34());
-        let acc = Flow::new().compile(&g2, Mode::Folded, OptLevel::Optimized).unwrap();
+        let acc = Compiler::default().compile(&g2, Mode::Folded, OptLevel::Optimized).unwrap();
         assert!(acc.performance.fps > 0.0);
         // Fewer nodes → no BN kernels/work entries at all.
         assert!(!acc.work.iter().any(|w| w.layer_name.contains("bn")));

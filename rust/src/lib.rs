@@ -18,33 +18,47 @@
 //! * [`codegen`] — OpenCL-like kernel IR + pseudo-OpenCL source emission.
 //! * [`aoc`] — the "AOC compiler" model: LSU inference, loop-pipelining II
 //!   analysis, ALUT/FF/DSP/BRAM estimation, f_max prediction.
-//! * [`device`] — Stratix 10SX D5005 device model + baseline platforms.
+//! * [`device`] — named [`device::Target`] registry (Stratix 10SX D5005,
+//!   Arria 10 GX, Agilex 7) + baseline platforms; each target carries its
+//!   §IV-J legality clock and bandwidth roof.
 //! * [`sim`] — cycle-approximate dataflow simulator for pipelined
 //!   (channels, autorun, concurrent queues) and folded (parameterized
 //!   kernels) execution.
 //! * [`flow`] — the end-to-end compilation flow (the paper's contribution):
 //!   pattern-based optimization application (Table I) + legality rules
-//!   (§IV-J) + compile driver.
+//!   (§IV-J) + the staged [`flow::Compiler`]/[`flow::CompileSession`] API
+//!   with memoized synthesis.
 //! * [`dse`] — design-space explorer over unroll/tile factors (the paper's
-//!   future-work §IV-J automated).
+//!   future-work §IV-J automated); reports its synthesis-cache hit rate.
 //! * [`runtime`] — PJRT runtime: loads `artifacts/*.hlo.txt` AOT-lowered
 //!   from JAX (L2) with Pallas kernels (L1) and executes inference on CPU.
 //!   Python never runs on this path.
-//! * [`coordinator`] — tokio inference server: request router, dynamic
-//!   batcher, command-queue execution, metrics.
+//! * [`coordinator`] — std::thread inference server: request router,
+//!   dynamic batcher, command-queue workers over the PJRT runtime, metrics.
 //! * [`data`] — synthetic dataset generation (deterministic).
 //! * [`metrics`] — FPS/GFLOPS accounting and table formatting (§V-C).
 //!
 //! ## Quickstart
 //!
+//! The staged API compiles one stage at a time; each stage returns a typed
+//! artifact you can inspect, cache and re-enter:
+//!
 //! ```no_run
-//! use tvm_fpga_flow::flow::{Flow, Mode, OptLevel};
+//! use tvm_fpga_flow::flow::{Compiler, ModeChoice};
 //! use tvm_fpga_flow::graph::models;
 //!
 //! let net = models::lenet5();
-//! let acc = Flow::new().compile(&net, Mode::Pipelined, OptLevel::Optimized).unwrap();
-//! println!("fmax = {:.0} MHz, FPS = {:.0}", acc.synthesis.fmax_mhz, acc.performance.fps);
+//! let compiler = Compiler::for_target("stratix10sx").unwrap();
+//! let mut session = compiler.graph(&net).mode(ModeChoice::Auto);
+//! let lowered = session.lower().unwrap();       // scheduled kernels, §IV-J checked
+//! let design = lowered.synthesize().unwrap();   // AOC model, memoized by content hash
+//! let acc = design.simulate().unwrap();         // performance at the routed f_max
+//! println!("fmax = {:.0} MHz, FPS = {:.0}", design.fmax_mhz(), acc.performance.fps);
 //! ```
+//!
+//! The old monolithic form, `Flow::new().compile(&net, mode, level)`, still
+//! works but is **deprecated** — it is a thin shim over the session API and
+//! gains neither target selection nor synthesis memoization.
 
 pub mod aoc;
 pub mod codegen;

@@ -1,11 +1,13 @@
 //! `fpga-flow` — CLI for the compilation flow.
 //!
 //! ```text
-//! fpga-flow compile  --net lenet5 [--mode pipelined|folded] [--base] [--explain]
+//! fpga-flow compile  --net lenet5 [--target stratix10sx|arria10gx|agilex7]
+//!                    [--mode pipelined|folded] [--base] [--explain] [--json]
+//! fpga-flow targets                     # list registered device targets
 //! fpga-flow report                      # Tables II/III/IV vs the paper
 //! fpga-flow codegen  --net lenet5       # dump pseudo-OpenCL
 //! fpga-flow simulate --net resnet34 [--base]
-//! fpga-flow dse      --net mobilenet_v1 [--budget 16]
+//! fpga-flow dse      --net mobilenet_v1 [--budget 16]   # reports cache hit rate
 //! fpga-flow infer    --net lenet5 --frames 100 [--impl pallas|ref]
 //! fpga-flow serve    --net lenet5 --requests 256 --workers 2
 //! fpga-flow hybrid   --net mobilenet_v1      # mixed pipelined/folded (§V-F)
@@ -13,10 +15,15 @@
 //! fpga-flow passes   --net resnet34          # graph-level passes (bn-fold, DCE)
 //! fpga-flow validate                          # artifact cross-checks
 //! ```
+//!
+//! Every compiling command accepts `--target <name>` (default stratix10sx);
+//! the target supplies the device envelope, the §IV-J legality clock and
+//! the f_max base the AOC model degrades from.
 
 use tvm_fpga_flow::coordinator::{InferenceServer, ServerConfig};
+use tvm_fpga_flow::device::Target;
 use tvm_fpga_flow::dse;
-use tvm_fpga_flow::flow::{Flow, Mode, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, Mode, ModeChoice, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::{self, paper};
 use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
@@ -28,6 +35,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "compile" => cmd_compile(&args),
+        "targets" => cmd_targets(),
         "report" => cmd_report(),
         "codegen" => cmd_codegen(&args),
         "simulate" => cmd_simulate(&args),
@@ -52,10 +60,31 @@ fn main() {
 fn print_help() {
     println!(
         "fpga-flow — CNN-accelerator compilation flow (paper reproduction)\n\
-         commands: compile report codegen simulate dse infer serve hybrid multi\n\
-                   passes validate\n\
-         see `rust/src/main.rs` header for per-command flags"
+         commands: compile targets report codegen simulate dse infer serve\n\
+                   hybrid multi passes validate\n\
+         targets : {}\n\
+         see `rust/src/main.rs` header for per-command flags",
+        Target::names().join(" ")
     );
+}
+
+/// Resolve `--target` (default: the paper's Stratix 10SX D5005).
+fn compiler_arg(args: &Args) -> tvm_fpga_flow::Result<Compiler> {
+    Compiler::for_target(args.opt_or("target", "stratix10sx"))
+}
+
+fn cmd_targets() -> tvm_fpga_flow::Result<()> {
+    for t in Target::all() {
+        println!(
+            "{:<12} {}  (legality clock {:.0} MHz, roof {} words/cycle, {} DSPs)",
+            t.name,
+            t.description,
+            t.legality_clock_mhz(),
+            t.bandwidth_roof_words(),
+            t.device.dsps
+        );
+    }
+    Ok(())
 }
 
 fn net_arg(args: &Args) -> tvm_fpga_flow::Result<tvm_fpga_flow::graph::Graph> {
@@ -63,39 +92,53 @@ fn net_arg(args: &Args) -> tvm_fpga_flow::Result<tvm_fpga_flow::graph::Graph> {
     models::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown network {name} (lenet5|mobilenet_v1|resnet34)"))
 }
 
-fn mode_arg(args: &Args, net: &str) -> Mode {
+/// Explicit `--mode`, or Auto — resolved by the session against the
+/// target (pipelined when the estimated design fits the device, matching
+/// the paper's choices on the S10SX) without lowering the program twice.
+fn mode_arg(args: &Args) -> ModeChoice {
     match args.opt("mode") {
-        Some("pipelined") => Mode::Pipelined,
-        Some("folded") => Mode::Folded,
-        _ => Flow::paper_mode(net),
+        Some("pipelined") => ModeChoice::Pipelined,
+        Some("folded") => ModeChoice::Folded,
+        _ => ModeChoice::Auto,
+    }
+}
+
+/// Pin Auto to a concrete mode for commands that need one up front
+/// (explorer choice, pass comparisons).
+fn resolve_mode(choice: ModeChoice, g: &tvm_fpga_flow::graph::Graph, compiler: &Compiler) -> Mode {
+    match choice {
+        ModeChoice::Pipelined => Mode::Pipelined,
+        ModeChoice::Folded => Mode::Folded,
+        ModeChoice::Auto => Mode::auto(g, &compiler.target.device),
     }
 }
 
 fn cmd_compile(args: &Args) -> tvm_fpga_flow::Result<()> {
     let g = net_arg(args)?;
-    let mode = mode_arg(args, &g.name);
+    let compiler = compiler_arg(args)?;
+    let choice = mode_arg(args);
     let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
-    let flow = Flow::new();
     if args.has_flag("explain") {
         println!(
             "flow stages (Fig. 1): frozen graph [{} nodes, {:.2} GFLOPs]\n\
              → relay-analog IR → tensor-expression loop nests\n\
-             → schedule ({} mode: {})\n\
+             → schedule ({:?} mode: {})\n\
              → OpenCL-like kernels → AOC model (LSU inference, II, resources, fmax)\n\
              → performance simulation",
             g.nodes.len(),
             g.total_flops() as f64 / 1e9,
-            mode.name(),
+            choice,
             if level == OptLevel::Base { "TVM default" } else { "Table-I optimizations" },
         );
     }
-    let acc = flow.compile(&g, mode, level)?;
+    let acc = compiler.compile(&g, choice, level)?;
     if args.has_flag("json") {
         println!("{}", acc.to_json().to_string());
         return Ok(());
     }
     let (logic, bram, dsp, fmax) = acc.synthesis.table2_row();
     println!("network      : {} ({} mode)", acc.network, acc.mode.name());
+    println!("target       : {} [{}]", compiler.target.name, compiler.target.device.name);
     println!("kernels      : {} (+{} channels, {} queues)", acc.program.kernels.len(), acc.program.channels.len(), acc.program.queues);
     println!("applied opts : {}", acc.applied.iter().map(|o| o.abbrev()).collect::<Vec<_>>().join(" "));
     println!("resources    : logic {logic:.1}%  bram {bram:.1}%  dsp {dsp:.1}%  fmax {fmax:.0} MHz");
@@ -105,7 +148,8 @@ fn cmd_compile(args: &Args) -> tvm_fpga_flow::Result<()> {
 }
 
 fn cmd_report() -> tvm_fpga_flow::Result<()> {
-    let flow = Flow::new();
+    // The report compares against the paper, so it pins the paper's board.
+    let flow = Compiler::default();
     let mut t2 = Table::new("Table II — resources & fmax (ours vs paper)", &["network", "logic%", "paper", "bram%", "paper", "dsp%", "paper", "fmax", "paper"]);
     let mut t3 = Table::new("Table III — applied optimizations", &["network", "ours", "paper"]);
     let mut t4 = Table::new("Table IV — base vs optimized FPS", &["network", "base", "paper", "opt", "paper", "speedup", "paper"]);
@@ -114,7 +158,7 @@ fn cmd_report() -> tvm_fpga_flow::Result<()> {
         .zip(paper::TABLE3.iter().zip(paper::TABLE4.iter()))
     {
         let g = models::by_name(name).unwrap();
-        let mode = Flow::paper_mode(name);
+        let mode = Compiler::paper_mode(name);
         let opt = flow.compile(&g, mode, OptLevel::Optimized)?;
         let base = flow.compile(&g, mode, OptLevel::Base)?;
         let (l, b, d, f) = opt.synthesis.table2_row();
@@ -146,21 +190,21 @@ fn cmd_report() -> tvm_fpga_flow::Result<()> {
 
 fn cmd_codegen(args: &Args) -> tvm_fpga_flow::Result<()> {
     let g = net_arg(args)?;
-    let mode = mode_arg(args, &g.name);
+    let compiler = compiler_arg(args)?;
     let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
-    let acc = Flow::new().compile(&g, mode, level)?;
-    println!("// pseudo-OpenCL for {} ({} mode)\n", g.name, mode.name());
+    let acc = compiler.compile(&g, mode_arg(args), level)?;
+    println!("// pseudo-OpenCL for {} ({} mode)\n", g.name, acc.mode.name());
     print!("{}", acc.program.to_pseudo_opencl());
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> tvm_fpga_flow::Result<()> {
     let g = net_arg(args)?;
-    let mode = mode_arg(args, &g.name);
+    let compiler = compiler_arg(args)?;
     let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
-    let acc = Flow::new().compile(&g, mode, level)?;
+    let acc = compiler.compile(&g, mode_arg(args), level)?;
     let mut t = Table::new(
-        &format!("per-layer timing — {} ({}, fmax {:.0} MHz)", g.name, mode.name(), acc.synthesis.fmax_mhz),
+        &format!("per-layer timing — {} ({}, fmax {:.0} MHz)", g.name, acc.mode.name(), acc.synthesis.fmax_mhz),
         &["layer", "kernel", "compute cyc", "memory cyc", "governing"],
     );
     for l in acc.performance.per_layer.iter().take(40) {
@@ -179,14 +223,20 @@ fn cmd_simulate(args: &Args) -> tvm_fpga_flow::Result<()> {
 
 fn cmd_dse(args: &Args) -> tvm_fpga_flow::Result<()> {
     let g = net_arg(args)?;
-    let flow = Flow::new();
+    let compiler = compiler_arg(args)?;
     let budget: usize = args.opt_parse("budget").unwrap_or(16);
-    let mode = mode_arg(args, &g.name);
+    let mode = resolve_mode(mode_arg(args), &g, &compiler);
     let r = match mode {
-        Mode::Folded => dse::explore_folded(&flow, &g, budget),
-        Mode::Pipelined => dse::explore_pipelined(&flow, &g),
+        Mode::Folded => dse::explore_folded(&compiler, &g, budget),
+        Mode::Pipelined => dse::explore_pipelined(&compiler, &g),
     };
     println!("evaluated {} design points ({} rejected)", r.evaluated, r.log.iter().filter(|p| p.rejected.is_some()).count());
+    println!(
+        "synthesis cache: {} hits / {} misses ({:.0}% hit rate)",
+        r.synth_cache.hits,
+        r.synth_cache.misses,
+        r.synth_cache_hit_rate() * 100.0
+    );
     if let Some(best) = &r.best {
         println!(
             "best: {:.2} FPS @ {:.0} MHz  (dsp {:.1}%, logic {:.1}%, bram {:.1}%)",
@@ -231,7 +281,7 @@ fn cmd_infer(args: &Args) -> tvm_fpga_flow::Result<()> {
 fn cmd_hybrid(args: &Args) -> tvm_fpga_flow::Result<()> {
     use tvm_fpga_flow::flow::{default_factors, OptConfig};
     let g = net_arg(args)?;
-    let flow = Flow::new();
+    let flow = compiler_arg(args)?;
     let plan = default_factors(&g);
     let folded = flow.compile(&g, Mode::Folded, OptLevel::Optimized)?;
     match flow.best_hybrid(&g, &OptConfig::optimized(), &plan) {
@@ -252,7 +302,7 @@ fn cmd_multi(args: &Args) -> tvm_fpga_flow::Result<()> {
     use tvm_fpga_flow::flow::{default_factors, OptConfig};
     let g = net_arg(args)?;
     let devices: usize = args.opt_parse("devices").unwrap_or(2);
-    let flow = Flow::new();
+    let flow = compiler_arg(args)?;
     let plan = default_factors(&g);
     let m = flow.compile_multi(&g, devices, &OptConfig::optimized(), &plan, &Link::default())?;
     println!("{}: {} devices → {:.2} FPS", g.name, m.devices, m.fps);
@@ -282,8 +332,8 @@ fn cmd_passes(args: &Args) -> tvm_fpga_flow::Result<()> {
         stats.removed,
         stats.rewritten
     );
-    let flow = Flow::new();
-    let mode = Flow::paper_mode(&g.name);
+    let flow = compiler_arg(args)?;
+    let mode = resolve_mode(mode_arg(args), &g, &flow);
     let before = flow.compile(&g, mode, OptLevel::Optimized)?;
     let after = flow.compile(&g2, mode, OptLevel::Optimized)?;
     println!(

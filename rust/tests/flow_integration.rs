@@ -4,7 +4,7 @@
 
 use tvm_fpga_flow::aoc;
 use tvm_fpga_flow::device::FpgaDevice;
-use tvm_fpga_flow::flow::{default_factors, Flow, Mode, OptConfig, OptLevel};
+use tvm_fpga_flow::flow::{default_factors, Compiler, Mode, OptConfig, OptLevel};
 use tvm_fpga_flow::graph::{models, Activation, GraphBuilder, Op, Shape};
 use tvm_fpga_flow::metrics::paper;
 use tvm_fpga_flow::schedule::OptKind;
@@ -12,10 +12,10 @@ use tvm_fpga_flow::util::prop;
 
 #[test]
 fn table2_within_shape_of_paper() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     for (name, pl, pb, pd, pf) in paper::TABLE2 {
         let g = models::by_name(name).unwrap();
-        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).unwrap();
+        let acc = flow.compile(&g, Compiler::paper_mode(name), OptLevel::Optimized).unwrap();
         let (l, b, d, f) = acc.synthesis.table2_row();
         // Every cell within 2× of the paper (most are far closer).
         for (ours, theirs, what) in [(l, pl, "logic"), (b, pb, "bram"), (d, pd, "dsp"), (f, pf, "fmax")] {
@@ -27,10 +27,10 @@ fn table2_within_shape_of_paper() {
 
 #[test]
 fn table4_speedups_within_shape() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     for (name, pb, po, _) in paper::TABLE4 {
         let g = models::by_name(name).unwrap();
-        let mode = Flow::paper_mode(name);
+        let mode = Compiler::paper_mode(name);
         let base = flow.compile(&g, mode, OptLevel::Base).unwrap().performance.fps;
         let opt = flow.compile(&g, mode, OptLevel::Optimized).unwrap().performance.fps;
         assert!((0.2..5.0).contains(&(base / pb)), "{name} base {base} vs paper {pb}");
@@ -41,10 +41,10 @@ fn table4_speedups_within_shape() {
 
 #[test]
 fn table3_exact_match() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     for (name, expected) in paper::TABLE3 {
         let g = models::by_name(name).unwrap();
-        let acc = flow.compile(&g, Flow::paper_mode(name), OptLevel::Optimized).unwrap();
+        let acc = flow.compile(&g, Compiler::paper_mode(name), OptLevel::Optimized).unwrap();
         let ours: Vec<&str> = acc.applied.iter().map(|o| o.abbrev()).collect();
         for e in expected {
             assert!(ours.contains(e), "{name}: paper applies {e}, we don't ({ours:?})");
@@ -57,7 +57,7 @@ fn table3_exact_match() {
 
 #[test]
 fn per_layer_fps_never_negative_or_nan() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     for g in models::all() {
         for mode in [Mode::Pipelined, Mode::Folded] {
             // Pipelined mode for the big nets over-commits BRAM → allowed
@@ -84,7 +84,7 @@ fn custom_graph_end_to_end() {
     let d = b.add("fc", Op::Dense { out_features: 10, bias: true, activation: Activation::None }, &[g1]);
     let g = b.finish(d);
 
-    let flow = Flow::new();
+    let flow = Compiler::default();
     for mode in [Mode::Pipelined, Mode::Folded] {
         let acc = flow.compile(&g, mode, OptLevel::Optimized).unwrap();
         assert!(acc.performance.fps > 0.0, "{:?}", mode);
@@ -100,7 +100,7 @@ fn routing_failure_is_reported_not_panicked() {
     for (_, t) in plan.group_tiles.iter_mut() {
         *t = (64, 64);
     }
-    let err = Flow::new().compile_with(&g, Mode::Folded, &OptConfig::optimized(), &plan);
+    let err = Compiler::default().compile_with(&g, Mode::Folded, &OptConfig::optimized(), &plan);
     assert!(err.is_err());
     let msg = format!("{}", err.err().unwrap());
     assert!(msg.contains("routing failure") || msg.contains("bandwidth"), "{msg}");
@@ -114,7 +114,7 @@ fn prop_unrolling_never_changes_total_work() {
     // out_elems × reduction_size is untouched by any legal tiling.
     prop::check("work_invariant", |rng, _case| {
         let g = models::lenet5();
-        let flow = Flow::new();
+        let flow = Compiler::default();
         let mut plan = default_factors(&g);
         plan.pipelined_cap = *rng.pick(&[8u64, 16, 32, 64, 128, 256, 512]);
         plan.dense_tile = (*rng.pick(&[1u64, 2, 4, 8, 16]), 1);
@@ -136,7 +136,7 @@ fn prop_unrolling_never_changes_total_work() {
 fn prop_factor_divisibility_holds_for_all_plans() {
     prop::check("divisibility", |rng, _case| {
         let g = models::mobilenet_v1();
-        let flow = Flow::new();
+        let flow = Compiler::default();
         let mut plan = default_factors(&g);
         // Random (possibly-illegal) tiles: the flow must clamp to divisors
         // or reject — it must never emit a non-dividing unroll.
@@ -161,7 +161,7 @@ fn prop_more_unroll_never_slower_at_fixed_fmax() {
     // cycles (monotonicity of the compute model).
     prop::check("monotone_unroll", |rng, _case| {
         let g = models::lenet5();
-        let flow = Flow::new();
+        let flow = Compiler::default();
         let caps: Vec<u64> = vec![8, 32, 128, 512];
         let i = rng.below(caps.len() as u64 - 1) as usize;
         let (small, big) = (caps[i], caps[i + 1]);

@@ -1,0 +1,193 @@
+//! Staged-API contract tests: misuse returns typed errors (never panics),
+//! the synthesis memo is deterministic, and legality follows the target's
+//! clock.
+
+use tvm_fpga_flow::device::{FpgaDevice, Target};
+use tvm_fpga_flow::flow::{
+    default_factors, legality, patterns, CompileError, Compiler, Mode, ModeChoice, OptConfig,
+    OptLevel,
+};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::schedule::OptKind;
+
+fn as_compile_error(e: &anyhow::Error) -> &CompileError {
+    e.downcast_ref::<CompileError>()
+        .unwrap_or_else(|| panic!("expected a typed CompileError, got: {e}"))
+}
+
+#[test]
+fn unknown_target_is_a_typed_error() {
+    let err = Compiler::for_target("virtex7").unwrap_err();
+    match as_compile_error(&err) {
+        CompileError::UnknownTarget { name } => assert_eq!(name, "virtex7"),
+        other => panic!("wrong variant: {other:?}"),
+    }
+    // The message lists the registered names so the CLI error is actionable.
+    let msg = err.to_string();
+    for name in Target::names() {
+        assert!(msg.contains(name), "{msg}");
+    }
+}
+
+#[test]
+fn simulating_before_lowering_is_a_typed_error() {
+    let compiler = Compiler::default();
+    let mut session = compiler.graph(&models::lenet5());
+    let err = session.simulate().unwrap_err();
+    assert!(matches!(
+        as_compile_error(&err),
+        CompileError::StageOrder { wanted: "simulate", .. }
+    ));
+    let err = session.synthesize().unwrap_err();
+    assert!(matches!(
+        as_compile_error(&err),
+        CompileError::StageOrder { wanted: "synthesize", missing: "lower" }
+    ));
+    // Once the stages run in order, the same session succeeds.
+    session.lower().unwrap();
+    session.synthesize().unwrap();
+    assert!(session.simulate().unwrap().performance.fps > 0.0);
+}
+
+#[test]
+fn missing_graph_is_a_typed_error() {
+    let compiler = Compiler::default();
+    let err = compiler.session().lower().unwrap_err();
+    assert!(matches!(as_compile_error(&err), CompileError::MissingGraph));
+}
+
+#[test]
+fn invalid_graph_is_a_typed_error() {
+    let mut g = models::lenet5();
+    // Corrupt the DAG: node 1 now references a later node.
+    g.nodes[1].inputs = vec![9];
+    let err = Compiler::default().graph(&g).lower().unwrap_err();
+    assert!(matches!(as_compile_error(&err), CompileError::InvalidGraph(_)), "{err}");
+}
+
+#[test]
+fn illegal_plan_is_a_typed_error() {
+    // Without cached reads the 3×3 group streams its weight tile straight
+    // from DDR at 576 words/cycle — far over the S10SX's 76-word roof.
+    let g = models::resnet34();
+    let cfg = OptConfig::optimized().without(OptKind::CachedWrite);
+    let err = Compiler::default()
+        .graph(&g)
+        .mode(Mode::Folded)
+        .opts(cfg)
+        .lower()
+        .map(|_| ())
+        .unwrap_err();
+    match as_compile_error(&err) {
+        CompileError::IllegalPlan { network, violations } => {
+            assert_eq!(network, "resnet34");
+            assert!(violations.iter().any(|v| v.contains("bandwidth roof")), "{violations:?}");
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+}
+
+#[test]
+fn routing_failure_is_a_typed_error() {
+    // 64×64 tiles on every group pass rules 1/2 (operands are cached) but
+    // blow the DSP budget — rule 3 surfaces as a typed routing failure.
+    let g = models::resnet34();
+    let mut plan = default_factors(&g);
+    for (_, t) in plan.group_tiles.iter_mut() {
+        *t = (64, 64);
+    }
+    let err = Compiler::default()
+        .compile_with(&g, Mode::Folded, &OptConfig::optimized(), &plan)
+        .unwrap_err();
+    assert!(matches!(as_compile_error(&err), CompileError::RoutingFailure(_)), "{err}");
+}
+
+#[test]
+fn legality_loosens_with_a_slower_target_clock() {
+    // The same no-cache plan that violates the roof at 250 MHz is legal on
+    // a target whose legality clock is 25 MHz (the DDR feeds ~768 words
+    // per slow cycle). Checked both through the raw rule checker and the
+    // staged API.
+    let g = models::resnet34();
+    let cfg = OptConfig::optimized().without(OptKind::CachedWrite);
+    let plan = default_factors(&g);
+    let (prog, _) = patterns::build_folded(&g, &cfg, &plan);
+
+    let dev = FpgaDevice::stratix10sx();
+    assert!(!legality::check_program(&prog, &dev, 250.0).is_empty());
+    assert!(legality::check_program(&prog, &dev, 25.0).is_empty());
+
+    let slow_dev = FpgaDevice { legality_clock_mhz: 25.0, ..FpgaDevice::stratix10sx() };
+    let slow = Compiler::new(Target::custom("s10-slow-clock", slow_dev));
+    slow.graph(&g).mode(Mode::Folded).opts(cfg).lower().expect("legal at 25 MHz");
+}
+
+#[test]
+fn legality_tightens_with_a_faster_target_clock() {
+    // At a 5 GHz legality clock the roof shrinks to ~3 words, so even the
+    // default cached plan's output streams violate rule 1.
+    let g = models::resnet34();
+    let fast_dev = FpgaDevice { legality_clock_mhz: 5000.0, ..FpgaDevice::stratix10sx() };
+    let fast = Compiler::new(Target::custom("s10-fast-clock", fast_dev));
+    let err = fast.graph(&g).mode(Mode::Folded).lower().map(|_| ()).unwrap_err();
+    assert!(matches!(as_compile_error(&err), CompileError::IllegalPlan { .. }), "{err}");
+    // The identical plan lowers fine at the real 250 MHz clock.
+    Compiler::default().graph(&g).mode(Mode::Folded).lower().expect("legal at 250 MHz");
+}
+
+#[test]
+fn synthesis_memo_returns_identical_reports() {
+    let compiler = Compiler::default();
+    let g = models::mobilenet_v1();
+    let mut first = compiler.graph(&g).mode(Mode::Folded);
+    let d1 = first.lower().unwrap().synthesize().unwrap();
+    let mut second = compiler.graph(&g).mode(Mode::Folded);
+    let d2 = second.lower().unwrap().synthesize().unwrap();
+
+    assert!(!d1.cache_hit && d2.cache_hit, "second synthesis must be a memo hit");
+    assert_eq!(d1.synthesis.fmax_mhz, d2.synthesis.fmax_mhz);
+    assert_eq!(d1.synthesis.routed, d2.synthesis.routed);
+    assert_eq!(d1.synthesis.max_lsu_width_bytes, d2.synthesis.max_lsu_width_bytes);
+    assert_eq!(d1.synthesis.resources.total, d2.synthesis.resources.total);
+    assert_eq!(d1.synthesis.resources.utilization, d2.synthesis.resources.utilization);
+    // And the simulated design built on top is byte-for-byte equivalent.
+    assert_eq!(
+        d1.simulate().unwrap().performance.fps,
+        d2.simulate().unwrap().performance.fps
+    );
+}
+
+#[test]
+fn every_registered_target_compiles_lenet_end_to_end() {
+    for name in Target::names() {
+        let compiler = Compiler::for_target(name).unwrap();
+        let g = models::lenet5();
+        let acc = compiler
+            .graph(&g)
+            .mode(ModeChoice::Auto)
+            .lower()
+            .unwrap_or_else(|e| panic!("{name}: lower failed: {e}"))
+            .synthesize()
+            .unwrap_or_else(|e| panic!("{name}: synthesize failed: {e}"))
+            .simulate()
+            .unwrap();
+        assert!(acc.performance.fps > 0.0, "{name}");
+        assert!(acc.synthesis.resources.utilization.fits(), "{name}");
+    }
+}
+
+#[test]
+fn targets_change_the_synthesized_design() {
+    // The same LeNet-5 lowering must synthesize to different utilization
+    // and clock on different device envelopes.
+    let g = models::lenet5();
+    let on = |name: &str| {
+        let c = Compiler::for_target(name).unwrap();
+        let acc = c.compile(&g, Mode::Pipelined, OptLevel::Optimized).unwrap();
+        (acc.synthesis.resources.utilization.logic_frac, acc.synthesis.fmax_mhz)
+    };
+    let (s10_logic, s10_fmax) = on("stratix10sx");
+    let (a10_logic, a10_fmax) = on("arria10gx");
+    assert!(a10_logic > s10_logic, "smaller device → higher utilization");
+    assert!(a10_fmax < s10_fmax, "slower fabric + higher utilization → lower clock");
+}

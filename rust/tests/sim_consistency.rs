@@ -3,14 +3,14 @@
 //! deep (the analytical model assumes no back-pressure), and the folded
 //! model must be invariant to work-list order permutations.
 
-use tvm_fpga_flow::flow::{Flow, Mode, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, Mode, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::sim::{engine, folded};
 use tvm_fpga_flow::util::rng::Rng;
 
 #[test]
 fn engine_steady_state_matches_analytical_bottleneck() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let acc = flow.compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized).unwrap();
 
     // Build engine stages from the analytical per-stage cycles.
@@ -54,7 +54,7 @@ fn engine_steady_state_matches_analytical_bottleneck() {
 
 #[test]
 fn folded_total_invariant_under_work_permutation() {
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let g = models::mobilenet_v1();
     let acc = flow.compile(&g, Mode::Folded, OptLevel::Optimized).unwrap();
     let fmax = acc.synthesis.fmax_mhz;
@@ -82,7 +82,7 @@ fn folded_total_invariant_under_work_permutation() {
 fn pipelined_latency_at_least_sum_of_stage_fills() {
     // The event engine's first-frame latency must exceed its steady
     // interval for any multi-stage pipeline (fill time is real).
-    let flow = Flow::new();
+    let flow = Compiler::default();
     let acc = flow.compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized).unwrap();
     let stages: Vec<(String, f64, u64)> = acc
         .performance
