@@ -20,6 +20,10 @@ fn main() {
         eprintln!("run `make artifacts` first");
         std::process::exit(1);
     }
+    if !tvm_fpga_flow::runtime::backend_available() {
+        eprintln!("PJRT backend unavailable (stubbed xla bindings); see rust/src/runtime/xla.rs");
+        std::process::exit(1);
+    }
     let rt = Runtime::new(Manifest::default_dir()).expect("runtime");
 
     // --- matmul micro-kernels (the L1 hot-spot, via the full AOT path) ---

@@ -1,0 +1,226 @@
+//! Dynamic batch queue: coalesces single submissions into device-native
+//! batches, flushing on size or on a latency deadline (§IV-F's
+//! amortize-the-dispatch insight applied to serving).
+//!
+//! The queue is *bounded*: a full queue rejects the push instead of
+//! buffering unboundedly, which is how the server surfaces
+//! [`super::ServerError::Overloaded`] backpressure to callers.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The queue is at capacity — shed load or retry later.
+    Full(T),
+    /// [`BatchQueue::close`] has been called; no new work is accepted.
+    Closed(T),
+}
+
+struct Inner<T> {
+    queue: VecDeque<(T, Instant)>,
+    closed: bool,
+}
+
+/// A bounded, deadline-flushing batch queue.
+///
+/// `pop_batch` blocks until at least one item is queued, then keeps
+/// collecting until either `max_batch` items are available or the *oldest*
+/// queued item has waited `max_delay` — so the first frame of a batch
+/// bounds the extra latency batching can add.
+///
+/// ```
+/// use std::time::Duration;
+/// use tvm_fpga_flow::coordinator::BatchQueue;
+///
+/// let q: BatchQueue<u32> = BatchQueue::new(64, 8, Duration::from_micros(200));
+/// for i in 0..3 {
+///     q.push(i).unwrap();
+/// }
+/// // Fewer than max_batch items queued: the deadline flushes a partial batch.
+/// assert_eq!(q.pop_batch(), Some(vec![0, 1, 2]));
+/// q.close();
+/// assert_eq!(q.pop_batch(), None); // closed and drained
+/// ```
+pub struct BatchQueue<T> {
+    inner: Mutex<Inner<T>>,
+    nonempty: Condvar,
+    capacity: usize,
+    max_batch: usize,
+    max_delay: Duration,
+}
+
+impl<T> BatchQueue<T> {
+    /// A queue holding at most `capacity` pending items, batching up to
+    /// `max_batch` of them, holding a partial batch at most `max_delay`.
+    pub fn new(capacity: usize, max_batch: usize, max_delay: Duration) -> BatchQueue<T> {
+        BatchQueue {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            nonempty: Condvar::new(),
+            capacity: capacity.max(1),
+            max_batch: max_batch.max(1),
+            max_delay,
+        }
+    }
+
+    /// Enqueue one item. Fails immediately (returning the item) when the
+    /// queue is full or closed — never blocks the submitting thread.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.queue.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        inner.queue.push_back((item, Instant::now()));
+        drop(inner);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Block until a batch is ready; `None` once the queue is closed *and*
+    /// drained. After `close()`, queued items keep coming out (possibly as
+    /// partial batches, with no deadline wait) until the queue is empty —
+    /// shutdown never drops accepted work.
+    pub fn pop_batch(&self) -> Option<Vec<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(&(_, enqueued)) = inner.queue.front() {
+                let deadline = enqueued + self.max_delay;
+                // Fill up to max_batch within the oldest item's deadline.
+                while inner.queue.len() < self.max_batch && !inner.closed {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, timeout) =
+                        self.nonempty.wait_timeout(inner, deadline - now).unwrap();
+                    inner = guard;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+                let k = inner.queue.len().min(self.max_batch);
+                return Some(inner.queue.drain(..k).map(|(item, _)| item).collect());
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.nonempty.wait(inner).unwrap();
+        }
+    }
+
+    /// Stop accepting work and wake every blocked `pop_batch`. Pending
+    /// items remain poppable; new pushes fail with [`PushError::Closed`].
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.nonempty.notify_all();
+    }
+
+    /// Items currently queued (racy by nature; metrics only).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The bound enforced by [`BatchQueue::push`].
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_batch_flushes_without_waiting() {
+        let q: BatchQueue<u32> = BatchQueue::new(64, 4, Duration::from_secs(10));
+        for i in 0..9 {
+            q.push(i).unwrap();
+        }
+        // A 10 s deadline would hang the test if size-triggered flushing
+        // didn't short-circuit it.
+        assert_eq!(q.pop_batch(), Some(vec![0, 1, 2, 3]));
+        assert_eq!(q.pop_batch(), Some(vec![4, 5, 6, 7]));
+        q.close();
+        assert_eq!(q.pop_batch(), Some(vec![8]));
+        assert_eq!(q.pop_batch(), None);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let q: BatchQueue<u32> = BatchQueue::new(64, 8, Duration::from_millis(20));
+        let t0 = Instant::now();
+        q.push(7).unwrap();
+        let batch = q.pop_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch, vec![7]);
+        // It must have waited for the deadline (nothing else arrived), but
+        // not unboundedly.
+        assert!(waited >= Duration::from_millis(15), "{waited:?}");
+        assert!(waited < Duration::from_secs(5), "{waited:?}");
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let q: BatchQueue<u32> = BatchQueue::new(2, 8, Duration::from_millis(1));
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        assert_eq!(q.push(2), Err(PushError::Full(2)));
+        assert_eq!(q.len(), 2);
+        // Draining makes room again.
+        assert_eq!(q.pop_batch(), Some(vec![0, 1]));
+        q.push(3).unwrap();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn close_rejects_new_work_but_drains_old() {
+        let q: BatchQueue<u32> = BatchQueue::new(8, 8, Duration::from_secs(10));
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.push(2), Err(PushError::Closed(2)));
+        // No deadline wait after close: the partial batch flushes at once.
+        let t0 = Instant::now();
+        assert_eq!(q.pop_batch(), Some(vec![1]));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(q.pop_batch(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q: Arc<BatchQueue<u32>> = Arc::new(BatchQueue::new(8, 8, Duration::from_millis(1)));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn late_arrivals_join_the_open_batch() {
+        let q: Arc<BatchQueue<u32>> = Arc::new(BatchQueue::new(64, 4, Duration::from_millis(150)));
+        q.push(0).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            for i in 1..4 {
+                q2.push(i).unwrap();
+            }
+        });
+        // The batch fills to max_batch well before the 150 ms deadline.
+        let t0 = Instant::now();
+        let batch = q.pop_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_millis(140), "{:?}", t0.elapsed());
+    }
+}

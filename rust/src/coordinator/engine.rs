@@ -1,0 +1,366 @@
+//! Execution engines behind the replica workers.
+//!
+//! A replica is "something that classifies a batch of frames": either the
+//! PJRT runtime executing the AOT-lowered networks ([`PjrtEngine`]), or a
+//! modeled accelerator ([`SimEngine`]) whose timing comes from the staged
+//! compile flow's performance report. The scheduler, batcher and stats are
+//! identical over both, so serving behaviour (batch coalescing, weighted
+//! routing, backpressure) is testable without artifacts or a PJRT build.
+//!
+//! [`SimEngine`] timing model: each dispatch pays the accelerator's
+//! *host-side* share of the frame time once per batch (that is the §IV-F
+//! dispatch overhead batching amortizes), while the *device* share is paid
+//! per frame (a pipelined datapath accepts one frame per initiation
+//! interval regardless of how they were submitted).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::flow::multi::ReplicaPlan;
+use crate::flow::Accelerator;
+use crate::graph::Graph;
+use crate::runtime::{Impl, LoadedModel, Runtime};
+
+use super::ServerError;
+
+/// A batch executor owned by one replica worker thread. (Identity and
+/// routing weight live on [`EngineSpec`], which exists before the engine
+/// is built; engines only need to answer shape queries and execute.)
+pub trait Engine: Send {
+    /// Elements of one input frame.
+    fn frame_elems(&self) -> usize;
+
+    /// Classes in the output layer.
+    fn num_classes(&self) -> usize;
+
+    /// Classify every frame; one prediction per input frame, in order.
+    /// Batches larger than the engine's device-native batch are chunked
+    /// internally.
+    fn classify_batch(&self, frames: &[&[f32]]) -> crate::Result<Vec<u32>>;
+}
+
+/// How a replica worker constructs its engine.
+///
+/// Construction is deferred to the worker thread on purpose: the real
+/// PJRT client is not `Send`, so each worker builds (and exclusively owns)
+/// its own runtime — the same reason the pre-replica coordinator created
+/// one `Runtime` per command-queue worker.
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    /// A modeled accelerator; ready-made, cheap to clone.
+    Sim(SimEngine),
+    /// Load artifacts and run through the PJRT runtime.
+    Pjrt { artifacts_dir: PathBuf, network: String, impl_: Impl, native_batch: usize },
+}
+
+impl EngineSpec {
+    /// Routing weight before the engine exists (modeled FPS for sim
+    /// replicas; PJRT replicas are assumed homogeneous).
+    pub fn weight(&self) -> f64 {
+        match self {
+            EngineSpec::Sim(e) => e.modeled_fps().max(f64::MIN_POSITIVE),
+            EngineSpec::Pjrt { .. } => 1.0,
+        }
+    }
+
+    /// Stable replica name for stats.
+    pub fn name(&self) -> String {
+        match self {
+            EngineSpec::Sim(e) => e.name().to_string(),
+            EngineSpec::Pjrt { network, impl_, .. } => format!("{network}@pjrt/{}", impl_.tag()),
+        }
+    }
+
+    /// Build the engine (called on the owning worker thread).
+    pub fn build(self) -> crate::Result<Box<dyn Engine>> {
+        match self {
+            EngineSpec::Sim(e) => Ok(Box::new(e)),
+            EngineSpec::Pjrt { artifacts_dir, network, impl_, native_batch } => Ok(Box::new(
+                PjrtEngine::load(&artifacts_dir, &network, impl_, native_batch)?,
+            )),
+        }
+    }
+}
+
+/// A modeled accelerator replica: timing from the compiled design's
+/// performance report, predictions from a deterministic content hash.
+///
+/// ```
+/// use std::time::Duration;
+/// use tvm_fpga_flow::coordinator::SimEngine;
+/// use tvm_fpga_flow::coordinator::Engine;
+///
+/// let eng = SimEngine::new("demo", 4, 10, 8, Duration::ZERO, Duration::ZERO);
+/// let a = [0.0f32, 1.0, 2.0, 3.0];
+/// let b = [9.0f32, 8.0, 7.0, 6.0];
+/// let preds = eng.classify_batch(&[&a, &b]).unwrap();
+/// assert_eq!(preds.len(), 2);
+/// assert!(preds.iter().all(|&p| p < 10));
+/// // Same frames, same predictions — the engine is deterministic.
+/// assert_eq!(preds, eng.classify_batch(&[&a, &b]).unwrap());
+/// ```
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    name: String,
+    frame_elems: usize,
+    num_classes: usize,
+    native_batch: usize,
+    /// Paid once per dispatch (the host share batching amortizes).
+    dispatch_overhead: Duration,
+    /// Paid once per frame (the device share).
+    frame_time: Duration,
+}
+
+impl SimEngine {
+    /// An engine with explicit timing constants (benches, tests, demos).
+    pub fn new(
+        name: impl Into<String>,
+        frame_elems: usize,
+        num_classes: usize,
+        native_batch: usize,
+        dispatch_overhead: Duration,
+        frame_time: Duration,
+    ) -> SimEngine {
+        SimEngine {
+            name: name.into(),
+            frame_elems: frame_elems.max(1),
+            num_classes: num_classes.max(1),
+            native_batch: native_batch.max(1),
+            dispatch_overhead,
+            frame_time,
+        }
+    }
+
+    /// Derive an engine from a compiled accelerator: the performance
+    /// report's host fraction becomes the per-dispatch overhead, the rest
+    /// of the frame time is paid per frame.
+    pub fn from_accelerator(
+        name: impl Into<String>,
+        acc: &Accelerator,
+        graph: &Graph,
+        native_batch: usize,
+    ) -> SimEngine {
+        let frame_s = acc.performance.frame_time_s.max(0.0);
+        let host_frac = acc.performance.host_frac.clamp(0.0, 1.0);
+        SimEngine::new(
+            name,
+            graph.nodes[graph.input].shape.elems(),
+            graph.nodes[graph.output].shape.elems(),
+            native_batch,
+            Duration::from_secs_f64(frame_s * host_frac),
+            Duration::from_secs_f64(frame_s * (1.0 - host_frac)),
+        )
+    }
+
+    /// One engine per [`ReplicaPlan`] entry, named `network@target`.
+    pub fn from_plan(
+        plan: &ReplicaPlan,
+        graph: &Graph,
+        native_batch: usize,
+    ) -> crate::Result<Vec<SimEngine>> {
+        anyhow::ensure!(
+            plan.network == graph.name,
+            "replica plan is for {} but the graph is {}",
+            plan.network,
+            graph.name
+        );
+        Ok(plan
+            .entries
+            .iter()
+            .map(|e| {
+                SimEngine::from_accelerator(
+                    format!("{}@{}", plan.network, e.target.name),
+                    &e.accelerator,
+                    graph,
+                    native_batch,
+                )
+            })
+            .collect())
+    }
+
+    /// Compress (scale > 1) or stretch modeled time, e.g. to keep demo
+    /// runs of slow networks short. Predictions are unaffected.
+    pub fn with_time_scale(mut self, scale: f64) -> SimEngine {
+        let s = if scale.is_finite() && scale > 0.0 { scale } else { 1.0 };
+        self.dispatch_overhead = Duration::from_secs_f64(self.dispatch_overhead.as_secs_f64() / s);
+        self.frame_time = Duration::from_secs_f64(self.frame_time.as_secs_f64() / s);
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Modeled steady-state throughput at full native batches — the
+    /// replica's routing weight.
+    pub fn modeled_fps(&self) -> f64 {
+        let n = self.native_batch as f64;
+        let batch_s = self.dispatch_overhead.as_secs_f64() + n * self.frame_time.as_secs_f64();
+        n / batch_s.max(1e-12)
+    }
+}
+
+/// Deterministic per-frame "prediction": FNV-1a over the f32 bit patterns.
+fn hash_predict(frame: &[f32], classes: usize) -> u32 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in frame {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    (h % classes.max(1) as u64) as u32
+}
+
+impl Engine for SimEngine {
+    fn frame_elems(&self) -> usize {
+        self.frame_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn classify_batch(&self, frames: &[&[f32]]) -> crate::Result<Vec<u32>> {
+        for f in frames {
+            if f.len() != self.frame_elems {
+                return Err(ServerError::BadFrame {
+                    expected: self.frame_elems,
+                    got: f.len(),
+                }
+                .into());
+            }
+        }
+        let k = frames.len();
+        if k > 0 {
+            let dispatches = k.div_ceil(self.native_batch) as u32;
+            let busy = self.dispatch_overhead * dispatches + self.frame_time * k as u32;
+            if busy > Duration::ZERO {
+                std::thread::sleep(busy);
+            }
+        }
+        Ok(frames.iter().map(|f| hash_predict(f, self.num_classes)).collect())
+    }
+}
+
+/// The PJRT-backed replica: a `batch=1` executable for stragglers plus the
+/// device-native batched executable, with padding handled by
+/// [`LoadedModel::classify_padded`].
+pub struct PjrtEngine {
+    rt: Runtime,
+    b1: LoadedModel,
+    bn: Option<LoadedModel>,
+}
+
+impl PjrtEngine {
+    /// Load the runtime and executables for one replica.
+    pub fn load(
+        artifacts_dir: &std::path::Path,
+        network: &str,
+        impl_: Impl,
+        native_batch: usize,
+    ) -> crate::Result<PjrtEngine> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let b1 = rt.load(network, impl_, 1)?;
+        let bn = (native_batch > 1).then(|| rt.load(network, impl_, native_batch).ok()).flatten();
+        Ok(PjrtEngine { rt, b1, bn })
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn frame_elems(&self) -> usize {
+        self.b1.frame_elems()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.b1.num_classes
+    }
+
+    fn classify_batch(&self, frames: &[&[f32]]) -> crate::Result<Vec<u32>> {
+        let elems = self.frame_elems();
+        for f in frames {
+            if f.len() != elems {
+                return Err(ServerError::BadFrame { expected: elems, got: f.len() }.into());
+            }
+        }
+        let mut preds = Vec::with_capacity(frames.len());
+        match &self.bn {
+            // Multi-frame work goes through the batched executable in
+            // native-sized chunks, padded by the runtime.
+            Some(bn) if frames.len() > 1 => {
+                for chunk in frames.chunks(bn.batch) {
+                    let mut flat = Vec::with_capacity(chunk.len() * elems);
+                    for f in chunk {
+                        flat.extend_from_slice(f);
+                    }
+                    preds.extend(bn.classify_padded(&self.rt.client, &flat, chunk.len())?);
+                }
+            }
+            _ => {
+                for f in frames {
+                    let p = self.b1.classify(&self.rt.client, f)?;
+                    preds.push(p.first().copied().unwrap_or(0));
+                }
+            }
+        }
+        Ok(preds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn sim_engine_validates_frame_size() {
+        let eng = SimEngine::new("t", 4, 10, 8, Duration::ZERO, Duration::ZERO);
+        let bad = [0.0f32; 3];
+        let err = eng.classify_batch(&[&bad]).unwrap_err();
+        let se = err.downcast_ref::<ServerError>().expect("typed ServerError");
+        assert_eq!(*se, ServerError::BadFrame { expected: 4, got: 3 });
+    }
+
+    #[test]
+    fn sim_engine_predictions_spread_across_classes() {
+        let eng = SimEngine::new("t", 16, 10, 8, Duration::ZERO, Duration::ZERO);
+        let data = crate::data::mnist_like(32, 4, 3);
+        let frames: Vec<&[f32]> = (0..32).map(|i| data.frame(i)).collect();
+        let preds = eng.classify_batch(&frames).unwrap();
+        assert!(preds.iter().all(|&p| p < 10));
+        let distinct: std::collections::BTreeSet<_> = preds.iter().collect();
+        assert!(distinct.len() >= 3, "degenerate hash predictions: {preds:?}");
+    }
+
+    #[test]
+    fn from_plan_names_and_shapes_follow_targets() {
+        let g = models::lenet5();
+        let plan = ReplicaPlan::build(&g, &["stratix10sx", "agilex7"]).unwrap();
+        let engines = SimEngine::from_plan(&plan, &g, 8).unwrap();
+        assert_eq!(engines.len(), 2);
+        assert_eq!(engines[0].name(), "lenet5@stratix10sx");
+        assert_eq!(engines[1].name(), "lenet5@agilex7");
+        for e in &engines {
+            assert_eq!(e.frame_elems(), 32 * 32);
+            assert_eq!(e.num_classes(), 10);
+            assert!(e.modeled_fps() > 0.0);
+        }
+    }
+
+    #[test]
+    fn time_scale_speeds_up_the_model() {
+        let eng = SimEngine::new(
+            "t",
+            4,
+            10,
+            8,
+            Duration::from_millis(10),
+            Duration::from_millis(1),
+        );
+        let fast = eng.clone().with_time_scale(10.0);
+        assert!(fast.modeled_fps() > eng.modeled_fps() * 5.0);
+        // Degenerate scales fall back to identity rather than panicking.
+        let same = eng.clone().with_time_scale(0.0);
+        assert!((same.modeled_fps() - eng.modeled_fps()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,218 @@
+//! Replica workers and weighted routing.
+//!
+//! A [`ReplicaSet`] owns one worker thread per replica. Each worker builds
+//! its own engine (PJRT clients are not shareable across threads) and
+//! executes whole batches; the dispatcher shards batches across replicas
+//! with smooth weighted round-robin, weights proportional to each
+//! replica's modeled throughput — an `agilex7` replica modeled at 2× the
+//! `arria10gx` FPS receives 2× the batches.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SendError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::engine::{Engine, EngineSpec};
+use super::stats::Shared;
+use super::{Request, ServerError};
+
+/// Smooth weighted round-robin (the nginx algorithm): deterministic, no
+/// starvation, and interleaves picks instead of bursting — over any window
+/// of `sum(weights)` picks each replica is chosen ~proportionally.
+pub(crate) struct WeightedRouter {
+    weights: Vec<f64>,
+    current: Vec<f64>,
+    total: f64,
+}
+
+impl WeightedRouter {
+    pub(crate) fn new(weights: Vec<f64>) -> WeightedRouter {
+        let weights: Vec<f64> =
+            weights.into_iter().map(|w| if w.is_finite() && w > 0.0 { w } else { 1e-9 }).collect();
+        let total = weights.iter().sum();
+        let current = vec![0.0; weights.len()];
+        WeightedRouter { weights, current, total }
+    }
+
+    /// Index of the next replica to receive work.
+    pub(crate) fn pick(&mut self) -> usize {
+        let mut best = 0;
+        for i in 0..self.weights.len() {
+            self.current[i] += self.weights[i];
+            if self.current[i] > self.current[best] {
+                best = i;
+            }
+        }
+        self.current[best] -= self.total;
+        best
+    }
+}
+
+/// The spawned replica fleet: per-replica *bounded* channels (one batch
+/// executing + one staged per replica) plus the router. Bounded channels
+/// matter: a saturated fleet blocks the dispatcher, the request queue
+/// fills, and submitters see [`super::ServerError::Overloaded`] — the
+/// backpressure path would be dead code if batches could buffer without
+/// limit here. Dropping the set closes every channel, which is what tells
+/// the workers to exit once they drain.
+pub(crate) struct ReplicaSet {
+    txs: Vec<SyncSender<Vec<Request>>>,
+    router: WeightedRouter,
+}
+
+impl ReplicaSet {
+    /// Spawn one worker per spec. Returns the set (for the dispatcher) and
+    /// the join handles (for shutdown).
+    pub(crate) fn spawn(
+        specs: Vec<EngineSpec>,
+        shared: &Arc<Shared>,
+    ) -> (ReplicaSet, Vec<JoinHandle<()>>) {
+        let router = WeightedRouter::new(specs.iter().map(|s| s.weight()).collect());
+        let mut txs = Vec::with_capacity(specs.len());
+        let mut handles = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.into_iter().enumerate() {
+            let (tx, rx): (SyncSender<Vec<Request>>, Receiver<Vec<Request>>) = sync_channel(1);
+            let shared = Arc::clone(shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("replica-{i}"))
+                    .spawn(move || worker_loop(i, spec, shared, rx))
+                    .expect("spawn replica worker"),
+            );
+            txs.push(tx);
+        }
+        (ReplicaSet { txs, router }, handles)
+    }
+
+    /// Route one batch. The weighted pick gets first refusal; a busy
+    /// replica overflows to the next free one (occupancy-aware routing),
+    /// and when the whole fleet is busy the dispatcher *blocks* on the
+    /// weighted pick — that stall is what propagates backpressure to the
+    /// bounded request queue. Dead replicas (panicked workers) are
+    /// skipped; if every replica is gone the batch is answered with
+    /// [`ServerError::Stopped`] so no submission goes unanswered.
+    pub(crate) fn dispatch(&mut self, mut batch: Vec<Request>, shared: &Shared) {
+        let first = self.router.pick();
+        let n = self.txs.len();
+        for step in 0..n {
+            match self.txs[(first + step) % n].try_send(batch) {
+                Ok(()) => return,
+                Err(TrySendError::Full(b)) | Err(TrySendError::Disconnected(b)) => batch = b,
+            }
+        }
+        // Everyone busy (or dead): block on the weighted pick, falling
+        // through to later replicas only if the pick's worker is gone.
+        for step in 0..n {
+            match self.txs[(first + step) % n].send(batch) {
+                Ok(()) => return,
+                Err(SendError(b)) => batch = b,
+            }
+        }
+        for req in &batch {
+            finish(shared, req, Err(ServerError::Stopped.into()));
+        }
+    }
+}
+
+/// One replica worker: build the engine, then execute batches until the
+/// dispatcher hangs up. An engine that fails to build (e.g. PJRT
+/// unavailable, artifacts missing a batch variant) answers every routed
+/// request with a typed error instead of abandoning it — the
+/// `completed == submitted` shutdown invariant holds even for a fleet
+/// that never became healthy.
+fn worker_loop(idx: usize, spec: EngineSpec, shared: Arc<Shared>, rx: Receiver<Vec<Request>>) {
+    let engine: crate::Result<Box<dyn Engine>> = spec.build();
+    while let Ok(batch) = rx.recv() {
+        match &engine {
+            Ok(engine) => execute_batch(idx, engine.as_ref(), &shared, &batch),
+            Err(e) => {
+                let msg = format!("replica engine unavailable: {e}");
+                for req in &batch {
+                    finish(&shared, req, Err(ServerError::Engine(msg.clone()).into()));
+                }
+            }
+        }
+    }
+}
+
+fn execute_batch(idx: usize, engine: &dyn Engine, shared: &Shared, batch: &[Request]) {
+    let frames: Vec<&[f32]> = batch.iter().map(|r| r.frame.as_slice()).collect();
+    let t0 = Instant::now();
+    let result = engine.classify_batch(&frames);
+    let busy_us = t0.elapsed().as_micros() as u64;
+
+    let k = batch.len();
+    shared.batches.fetch_add(1, Ordering::Relaxed);
+    if k > 1 {
+        shared.batched_frames.fetch_add(k as u64, Ordering::Relaxed);
+    }
+    shared.batch_hist.lock().unwrap().record(k);
+    let rs = &shared.replicas[idx];
+    rs.batches.fetch_add(1, Ordering::Relaxed);
+    rs.frames.fetch_add(k as u64, Ordering::Relaxed);
+    rs.busy_us.fetch_add(busy_us, Ordering::Relaxed);
+
+    match result {
+        Ok(preds) if preds.len() == k => {
+            for (req, &p) in batch.iter().zip(&preds) {
+                finish(shared, req, Ok(p));
+            }
+        }
+        Ok(preds) => {
+            let msg = format!("engine returned {} predictions for {k} frames", preds.len());
+            for req in batch {
+                finish(shared, req, Err(ServerError::Engine(msg.clone()).into()));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for req in batch {
+                finish(shared, req, Err(ServerError::Engine(msg.clone()).into()));
+            }
+        }
+    }
+}
+
+/// Record latency + completion and deliver the response. `completed`
+/// counts every delivered response, errors included: it is the "nothing
+/// was dropped" counter, not the success counter.
+pub(crate) fn finish(shared: &Shared, req: &Request, result: crate::Result<u32>) {
+    let us = req.submitted.elapsed().as_micros() as u64;
+    shared.latency.lock().unwrap().record(us);
+    shared.completed.fetch_add(1, Ordering::Relaxed);
+    let _ = req.resp.send(result);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrr_is_proportional() {
+        let mut r = WeightedRouter::new(vec![3.0, 1.0]);
+        let picks: Vec<usize> = (0..8).map(|_| r.pick()).collect();
+        assert_eq!(picks.iter().filter(|&&p| p == 0).count(), 6);
+        assert_eq!(picks.iter().filter(|&&p| p == 1).count(), 2);
+        // Smooth: the heavy replica must not get all its turns in a burst.
+        assert_ne!(picks[..4].iter().filter(|&&p| p == 1).count(), 0);
+    }
+
+    #[test]
+    fn wrr_uniform_weights_round_robin() {
+        let mut r = WeightedRouter::new(vec![1.0, 1.0, 1.0]);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        for i in 0..3 {
+            assert_eq!(picks.iter().filter(|&&p| p == i).count(), 2, "{picks:?}");
+        }
+    }
+
+    #[test]
+    fn wrr_survives_degenerate_weights() {
+        let mut r = WeightedRouter::new(vec![0.0, f64::NAN, -3.0]);
+        for _ in 0..9 {
+            let p = r.pick();
+            assert!(p < 3);
+        }
+    }
+}

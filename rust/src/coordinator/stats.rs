@@ -1,0 +1,151 @@
+//! Serving statistics: counters, latency distributions, batch-size
+//! histogram and per-replica occupancy.
+//!
+//! Two latency distributions are kept. *Queue* latency (submit → dispatch)
+//! is the price of batching and backpressure; *total* latency (submit →
+//! response) adds execution. Comparing the two shows whether a latency
+//! problem is a scheduling problem or an engine problem.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::{BatchHistogram, LatencyStats};
+
+/// Point-in-time view of a running (or just-shut-down) server.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Responses delivered (successes *and* engine errors).
+    pub completed: u64,
+    /// Requests refused with `ServerError::Overloaded` (not in `submitted`).
+    pub rejected: u64,
+    /// Batches executed across all replicas.
+    pub batches: u64,
+    /// Frames that ran inside multi-frame batches.
+    pub batched_frames: u64,
+    /// Total submit→response latency.
+    pub p50_us: Option<u64>,
+    pub p99_us: Option<u64>,
+    pub mean_us: Option<f64>,
+    /// Submit→dispatch (time spent queued, the batching delay).
+    pub queue_p50_us: Option<u64>,
+    pub queue_p99_us: Option<u64>,
+    /// `batch_hist[i]` = number of executed batches of size `i + 1`.
+    pub batch_hist: Vec<u64>,
+    /// One entry per replica, in spec order.
+    pub replicas: Vec<ReplicaStats>,
+}
+
+impl StatsSnapshot {
+    /// Compact `size×count` rendering of the batch histogram.
+    pub fn batch_hist_render(&self) -> String {
+        BatchHistogram::from_counts(self.batch_hist.clone()).render()
+    }
+
+    /// Mean frames per executed batch (0.0 before any batch ran).
+    pub fn mean_batch_size(&self) -> f64 {
+        let frames: u64 =
+            self.batch_hist.iter().enumerate().map(|(i, n)| (i as u64 + 1) * n).sum();
+        if self.batches == 0 {
+            0.0
+        } else {
+            frames as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Per-replica serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaStats {
+    pub name: String,
+    /// Batches this replica executed.
+    pub batches: u64,
+    /// Frames this replica executed.
+    pub frames: u64,
+    /// Wall time spent executing batches, in microseconds.
+    pub busy_us: u64,
+    /// `busy_us` over the server's uptime: 0.0 = idle, ~1.0 = saturated.
+    pub occupancy: f64,
+}
+
+pub(crate) struct ReplicaShared {
+    pub(crate) name: String,
+    pub(crate) batches: AtomicU64,
+    pub(crate) frames: AtomicU64,
+    pub(crate) busy_us: AtomicU64,
+}
+
+/// Shared server-wide counters, written by submitters, the dispatcher and
+/// every replica worker.
+pub(crate) struct Shared {
+    pub(crate) started: Instant,
+    pub(crate) submitted: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    pub(crate) rejected: AtomicU64,
+    pub(crate) batches: AtomicU64,
+    pub(crate) batched_frames: AtomicU64,
+    pub(crate) latency: Mutex<LatencyStats>,
+    pub(crate) queue_latency: Mutex<LatencyStats>,
+    pub(crate) batch_hist: Mutex<BatchHistogram>,
+    pub(crate) replicas: Vec<ReplicaShared>,
+}
+
+impl Shared {
+    pub(crate) fn new(replica_names: Vec<String>, max_batch: usize) -> Shared {
+        Shared {
+            started: Instant::now(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_frames: AtomicU64::new(0),
+            latency: Mutex::new(LatencyStats::default()),
+            queue_latency: Mutex::new(LatencyStats::default()),
+            batch_hist: Mutex::new(BatchHistogram::new(max_batch)),
+            replicas: replica_names
+                .into_iter()
+                .map(|name| ReplicaShared {
+                    name,
+                    batches: AtomicU64::new(0),
+                    frames: AtomicU64::new(0),
+                    busy_us: AtomicU64::new(0),
+                })
+                .collect(),
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> StatsSnapshot {
+        let latency = self.latency.lock().unwrap();
+        let queue = self.queue_latency.lock().unwrap();
+        let uptime_us = self.started.elapsed().as_micros().max(1) as u64;
+        StatsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_frames: self.batched_frames.load(Ordering::Relaxed),
+            p50_us: latency.percentile(50.0),
+            p99_us: latency.percentile(99.0),
+            mean_us: latency.mean(),
+            queue_p50_us: queue.percentile(50.0),
+            queue_p99_us: queue.percentile(99.0),
+            batch_hist: self.batch_hist.lock().unwrap().counts().to_vec(),
+            replicas: self
+                .replicas
+                .iter()
+                .map(|r| {
+                    let busy_us = r.busy_us.load(Ordering::Relaxed);
+                    ReplicaStats {
+                        name: r.name.clone(),
+                        batches: r.batches.load(Ordering::Relaxed),
+                        frames: r.frames.load(Ordering::Relaxed),
+                        busy_us,
+                        occupancy: busy_us as f64 / uptime_us as f64,
+                    }
+                })
+                .collect(),
+        }
+    }
+}

@@ -116,6 +116,22 @@ impl Accelerator {
 /// Legacy flow driver. Owns the device + models; superseded by the staged
 /// [`Compiler`]/[`CompileSession`] API, which adds target selection and
 /// synthesis memoization — `Flow`'s compile entry points delegate there.
+///
+/// # Migration
+///
+/// | deprecated shim                  | replacement                               |
+/// |----------------------------------|-------------------------------------------|
+/// | `Flow::new()`                    | [`Compiler::for_target`] / [`Compiler::new`] |
+/// | `Flow::compile(g, mode, level)`  | [`Compiler::compile`] (same arguments)    |
+/// | `Flow::compile_with(g, m, c, p)` | [`Compiler::compile_with`]                |
+/// | `Flow::compile_hybrid` / `best_hybrid` | the same methods on [`Compiler`]    |
+/// | `Flow::compile_multi`            | [`Compiler::compile_multi`]               |
+///
+/// A hand-tuned `Flow { device, fmax_model, host }` maps to
+/// [`Compiler::from_parts`]. The shims construct a fresh `Compiler` per
+/// call, so they also get a fresh (empty) synthesis memo — sweeps that
+/// want cache hits must hold one `Compiler` and go through it directly.
+/// The shims will be removed once nothing in-tree calls them.
 #[derive(Debug, Clone)]
 pub struct Flow {
     pub device: FpgaDevice,

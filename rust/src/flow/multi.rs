@@ -9,11 +9,12 @@
 //! (smaller) kernel subset, so per-device utilization drops and f_max
 //! rises — the multi-FPGA win the paper anticipates.
 
+use crate::device::Target;
 use crate::graph::Graph;
 use crate::sim::{folded, HostModel};
 
 use super::patterns::{self, FactorPlan, OptConfig};
-use super::{Compiler, Flow};
+use super::{Accelerator, Compiler, Flow, ModeChoice};
 
 /// Inter-FPGA link model (PCIe peer-to-peer / serial-lite style).
 #[derive(Debug, Clone, Copy)]
@@ -149,6 +150,69 @@ impl Compiler {
     }
 }
 
+/// One replica of a serving deployment: the accelerator the staged
+/// session API compiled for one registry target, plus the routing weight
+/// the scheduler derives from its modeled throughput.
+#[derive(Debug, Clone)]
+pub struct ReplicaPlanEntry {
+    pub target: Target,
+    pub accelerator: Accelerator,
+    /// Modeled frames/sec — what weighted routing is proportional to.
+    pub weight: f64,
+}
+
+/// A serving replica plan: one compiled design per requested target.
+///
+/// Unlike [`Compiler::compile_multi`] (which *partitions* one network
+/// across devices), a replica plan gives every device the *whole* network
+/// and lets the coordinator shard traffic across them — the §IV-G
+/// concurrency idea lifted from command queues to whole accelerators.
+/// Heterogeneous fleets are expected: each entry may name a different
+/// registry target, and the per-entry weight keeps routing proportional
+/// to what each board can actually sustain.
+#[derive(Debug, Clone)]
+pub struct ReplicaPlan {
+    pub network: String,
+    pub entries: Vec<ReplicaPlanEntry>,
+}
+
+impl ReplicaPlan {
+    /// Compile `graph` once per target name (mode resolved per target by
+    /// the session's `Auto` rule) through the staged
+    /// [`crate::flow::CompileSession`] pipeline.
+    ///
+    /// ```
+    /// use tvm_fpga_flow::flow::multi::ReplicaPlan;
+    /// use tvm_fpga_flow::graph::models;
+    ///
+    /// let plan =
+    ///     ReplicaPlan::build(&models::lenet5(), &["stratix10sx", "arria10gx"]).unwrap();
+    /// assert_eq!(plan.entries.len(), 2);
+    /// assert!(plan.entries.iter().all(|e| e.weight > 0.0));
+    /// ```
+    pub fn build(graph: &Graph, targets: &[&str]) -> crate::Result<ReplicaPlan> {
+        anyhow::ensure!(!targets.is_empty(), "replica plan needs at least one target");
+        let mut entries = Vec::with_capacity(targets.len());
+        for name in targets {
+            let compiler = Compiler::for_target(name)?;
+            let accelerator = compiler
+                .graph(graph)
+                .mode(ModeChoice::Auto)
+                .lower()?
+                .synthesize()?
+                .simulate()?;
+            let weight = accelerator.performance.fps.max(f64::MIN_POSITIVE);
+            entries.push(ReplicaPlanEntry { target: compiler.target.clone(), accelerator, weight });
+        }
+        Ok(ReplicaPlan { network: graph.name.clone(), entries })
+    }
+
+    /// Routing weights, in entry order.
+    pub fn weights(&self) -> Vec<f64> {
+        self.entries.iter().map(|e| e.weight).collect()
+    }
+}
+
 impl Flow {
     /// Deprecated shim over [`Compiler::compile_multi`].
     #[deprecated(since = "0.2.0", note = "use Compiler::compile_multi")]
@@ -211,6 +275,28 @@ mod tests {
         assert!(f4 >= f2 * 0.95);
         // Contiguous partitions + transfers: 8 devices gain less per device.
         assert!(f8 / f4 < f4 / f2 + 0.5);
+    }
+
+    #[test]
+    fn replica_plan_is_heterogeneous_and_weighted() {
+        let g = models::lenet5();
+        let plan = ReplicaPlan::build(&g, &["stratix10sx", "arria10gx", "agilex7"]).unwrap();
+        assert_eq!(plan.network, "lenet5");
+        assert_eq!(plan.entries.len(), 3);
+        let w = plan.weights();
+        assert!(w.iter().all(|&x| x > 0.0));
+        // Different boards must not collapse to identical modeled FPS.
+        assert!(w.iter().any(|&x| (x - w[0]).abs() > 1e-9), "{w:?}");
+    }
+
+    #[test]
+    fn replica_plan_rejects_unknown_target() {
+        let g = models::lenet5();
+        let err = ReplicaPlan::build(&g, &["virtex7"]).unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::flow::CompileError>().is_some(),
+            "expected typed CompileError, got: {err}"
+        );
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! * [`SynthesizedDesign::simulate`] → [`Accelerator`]: the performance
 //!   model at the synthesized f_max.
 //!
-//! ```no_run
+//! ```
 //! use tvm_fpga_flow::flow::{Compiler, ModeChoice};
 //! use tvm_fpga_flow::graph::models;
 //!
@@ -26,7 +26,7 @@
 //!     .lower().unwrap()
 //!     .synthesize().unwrap()
 //!     .simulate().unwrap();
-//! println!("{:.0} FPS", acc.performance.fps);
+//! assert!(acc.performance.fps > 0.0);
 //! ```
 //!
 //! Errors are typed ([`CompileError`]) and surface through `anyhow` so
@@ -170,6 +170,21 @@ impl Default for Compiler {
 
 impl Compiler {
     /// Build a compiler for a registered target name (or alias).
+    ///
+    /// ```
+    /// use tvm_fpga_flow::flow::{CompileError, Compiler};
+    ///
+    /// let c = Compiler::for_target("arria10gx").unwrap();
+    /// assert_eq!(c.target.name, "arria10gx");
+    /// // Aliases resolve to the canonical target…
+    /// assert_eq!(Compiler::for_target("a10").unwrap().target.name, "arria10gx");
+    /// // …and unknown names fail with a typed error listing the registry.
+    /// let err = Compiler::for_target("virtex7").unwrap_err();
+    /// assert!(matches!(
+    ///     err.downcast_ref::<CompileError>(),
+    ///     Some(CompileError::UnknownTarget { .. })
+    /// ));
+    /// ```
     pub fn for_target(name: &str) -> crate::Result<Compiler> {
         let target = Target::by_name(name)
             .ok_or(CompileError::UnknownTarget { name: name.to_string() })?;
@@ -299,6 +314,22 @@ impl Compiler {
 /// return the session; stage methods cache their artifact so a session can
 /// be driven incrementally (`lower` → inspect → `synthesize` → …) or in
 /// one chain.
+///
+/// ```
+/// use tvm_fpga_flow::flow::{Compiler, Mode, ModeChoice};
+/// use tvm_fpga_flow::graph::models;
+///
+/// let compiler = Compiler::for_target("stratix10sx").unwrap();
+/// let mut session = compiler.graph(&models::lenet5()).mode(ModeChoice::Auto);
+/// // Drive the stages one at a time, inspecting each artifact…
+/// let lowered = session.lower().unwrap();
+/// assert_eq!(lowered.mode, Mode::Pipelined); // Auto resolved for this target
+/// let fmax = session.synthesize().unwrap().fmax_mhz();
+/// assert!(fmax > 100.0);
+/// // …then finish; stage artifacts are cached, nothing reruns.
+/// let acc = session.run().unwrap();
+/// assert!(acc.performance.fps > 0.0);
+/// ```
 #[derive(Debug, Clone)]
 pub struct CompileSession {
     compiler: Compiler,

@@ -32,18 +32,25 @@
 //!   future-work §IV-J automated); reports its synthesis-cache hit rate.
 //! * [`runtime`] — PJRT runtime: loads `artifacts/*.hlo.txt` AOT-lowered
 //!   from JAX (L2) with Pallas kernels (L1) and executes inference on CPU.
-//!   Python never runs on this path.
-//! * [`coordinator`] — std::thread inference server: request router,
-//!   dynamic batcher, command-queue workers over the PJRT runtime, metrics.
+//!   Python never runs on this path. In builds without the PJRT bindings
+//!   the [`runtime::xla`] module is a compile-time shim that reports
+//!   "backend unavailable" at runtime.
+//! * [`coordinator`] — dynamic-batching replica scheduler: a bounded
+//!   [`coordinator::BatchQueue`] coalesces frames into device-native
+//!   batches, a replica set shards them across engines (PJRT-backed or
+//!   simulated accelerators, possibly compiled for different targets) with
+//!   throughput-weighted routing, and overload surfaces as a typed
+//!   [`coordinator::ServerError::Overloaded`].
 //! * [`data`] — synthetic dataset generation (deterministic).
-//! * [`metrics`] — FPS/GFLOPS accounting and table formatting (§V-C).
+//! * [`metrics`] — FPS/GFLOPS accounting, paper tables, serving latency
+//!   stats and the batch-size histogram (§V-C).
 //!
 //! ## Quickstart
 //!
 //! The staged API compiles one stage at a time; each stage returns a typed
 //! artifact you can inspect, cache and re-enter:
 //!
-//! ```no_run
+//! ```
 //! use tvm_fpga_flow::flow::{Compiler, ModeChoice};
 //! use tvm_fpga_flow::graph::models;
 //!
@@ -53,12 +60,54 @@
 //! let lowered = session.lower().unwrap();       // scheduled kernels, §IV-J checked
 //! let design = lowered.synthesize().unwrap();   // AOC model, memoized by content hash
 //! let acc = design.simulate().unwrap();         // performance at the routed f_max
-//! println!("fmax = {:.0} MHz, FPS = {:.0}", design.fmax_mhz(), acc.performance.fps);
+//! assert!(design.fmax_mhz() > 0.0 && acc.performance.fps > 0.0);
+//! ```
+//!
+//! ## Serving
+//!
+//! Compiled designs serve traffic through the coordinator. The demo fleet
+//! below runs on simulated replicas compiled for two different targets —
+//! no artifacts or PJRT build required:
+//!
+//! ```
+//! use std::time::Duration;
+//! use tvm_fpga_flow::coordinator::{EngineSpec, InferenceServer, ServerConfig, SimEngine};
+//! use tvm_fpga_flow::flow::multi::ReplicaPlan;
+//! use tvm_fpga_flow::graph::models;
+//!
+//! let net = models::lenet5();
+//! let plan = ReplicaPlan::build(&net, &["stratix10sx", "agilex7"]).unwrap();
+//! let replicas = SimEngine::from_plan(&plan, &net, 8)
+//!     .unwrap()
+//!     .into_iter()
+//!     // Compress modeled time so the doc-test stays fast.
+//!     .map(|e| EngineSpec::Sim(e.with_time_scale(1e4)))
+//!     .collect();
+//! let server = InferenceServer::start(ServerConfig {
+//!     max_batch: 8,
+//!     max_wait: Duration::from_micros(500),
+//!     replicas,
+//!     ..Default::default()
+//! })
+//! .unwrap();
+//! let data = tvm_fpga_flow::data::mnist_like(16, 32, 1);
+//! let pending: Vec<_> =
+//!     (0..16).map(|i| server.infer_async(data.frame(i).to_vec()).unwrap()).collect();
+//! for rx in pending {
+//!     assert!(rx.recv().unwrap().unwrap() < 10);
+//! }
+//! let stats = server.shutdown();
+//! assert_eq!(stats.completed, stats.submitted);
 //! ```
 //!
 //! The old monolithic form, `Flow::new().compile(&net, mode, level)`, still
 //! works but is **deprecated** — it is a thin shim over the session API and
-//! gains neither target selection nor synthesis memoization.
+//! gains neither target selection nor synthesis memoization. Migration:
+//! `Flow::new()` → [`flow::Compiler::for_target`] (or
+//! [`flow::Compiler::new`] with an explicit target), then either the
+//! staged session chain above or the one-shot
+//! [`flow::Compiler::compile`] / [`flow::Compiler::compile_with`], which
+//! take the same arguments as the shims they replace.
 
 pub mod aoc;
 pub mod codegen;

@@ -9,7 +9,10 @@
 //! fpga-flow simulate --net resnet34 [--base]
 //! fpga-flow dse      --net mobilenet_v1 [--budget 16]   # reports cache hit rate
 //! fpga-flow infer    --net lenet5 --frames 100 [--impl pallas|ref]
-//! fpga-flow serve    --net lenet5 --requests 256 --workers 2
+//! fpga-flow serve    --net lenet5 --requests 256 [--replicas 2]
+//!                    [--max-batch 8] [--max-delay-us 2000]
+//!                    [--queue-capacity 1024] [--engine sim|pjrt]
+//!                    [--targets stratix10sx,arria10gx] [--time-scale 1]
 //! fpga-flow hybrid   --net mobilenet_v1      # mixed pipelined/folded (§V-F)
 //! fpga-flow multi    --net resnet34 --devices 2  # multi-FPGA (§VII)
 //! fpga-flow passes   --net resnet34          # graph-level passes (bn-fold, DCE)
@@ -20,7 +23,7 @@
 //! the target supplies the device envelope, the §IV-J legality clock and
 //! the f_max base the AOC model degrades from.
 
-use tvm_fpga_flow::coordinator::{InferenceServer, ServerConfig};
+use tvm_fpga_flow::coordinator::{EngineSpec, InferenceServer, ServerConfig, ServerError, SimEngine};
 use tvm_fpga_flow::device::Target;
 use tvm_fpga_flow::dse;
 use tvm_fpga_flow::flow::{Compiler, Mode, ModeChoice, OptLevel};
@@ -60,10 +63,28 @@ fn main() {
 fn print_help() {
     println!(
         "fpga-flow — CNN-accelerator compilation flow (paper reproduction)\n\
-         commands: compile targets report codegen simulate dse infer serve\n\
-                   hybrid multi passes validate\n\
-         targets : {}\n\
-         see `rust/src/main.rs` header for per-command flags",
+         \n\
+         compile   --net <n> [--target <t>] [--mode pipelined|folded] [--base] [--explain] [--json]\n\
+         targets   list registered device targets (legality clock, roof, DSPs)\n\
+         report    Tables II/III/IV, ours vs the paper\n\
+         codegen   --net <n> [--target <t>]        dump pseudo-OpenCL\n\
+         simulate  --net <n> [--target <t>] [--base]  per-layer timing\n\
+         dse       --net <n> [--budget 16]         explore tiles; prints cache hit rate\n\
+         infer     --net <n> --frames 100 [--impl pallas|ref]   (needs artifacts)\n\
+         serve     --net <n> --requests 256 [--replicas 2] [--max-batch 8]\n\
+                   [--max-delay-us 2000] [--queue-capacity 1024]\n\
+                   [--engine sim|pjrt] [--targets t1,t2,...] [--time-scale 1]\n\
+                   sim (default): replicas are modeled accelerators compiled for\n\
+                   --targets (cycled to --replicas), weighted by modeled FPS —\n\
+                   works without artifacts. pjrt: --replicas identical runtime\n\
+                   workers over artifacts/.\n\
+         hybrid    --net <n>                       mixed pipelined/folded (§V-F)\n\
+         multi     --net <n> --devices 2           multi-FPGA partition (§VII)\n\
+         passes    --net <n>                       graph passes (bn-fold, DCE)\n\
+         validate  artifact cross-checks           (needs artifacts)\n\
+         \n\
+         targets: {}\n\
+         docs: docs/CLI.md has one worked example per subcommand",
         Target::names().join(" ")
     );
 }
@@ -383,32 +404,122 @@ fn cmd_validate() -> tvm_fpga_flow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
-    let requests: usize = args.opt_parse("requests").unwrap_or(256);
-    let workers: usize = args.opt_parse("workers").unwrap_or(2);
+    use tvm_fpga_flow::flow::multi::ReplicaPlan;
+
     let name = args.opt_or("net", "lenet5").to_string();
+    let requests: usize = args.opt_parse("requests").unwrap_or(256);
+    // `--workers` is the pre-replica name for the same knob.
+    let replicas: usize = args
+        .opt_parse("replicas")
+        .or_else(|| args.opt_parse("workers"))
+        .unwrap_or(2)
+        .max(1);
+    let max_batch: usize = args.opt_parse("max-batch").unwrap_or(8).max(1);
+    let max_delay_us: u64 = args.opt_parse("max-delay-us").unwrap_or(2000);
+    let queue_capacity: usize = args.opt_parse("queue-capacity").unwrap_or(1024);
+    let time_scale: f64 = args.opt_parse("time-scale").unwrap_or(1.0);
+    let engine = args.opt_or("engine", "sim");
+
+    let specs: Vec<EngineSpec> = match engine {
+        "sim" => {
+            // Compile the network for each requested target through the
+            // staged flow; replicas cycle through the target list.
+            let g = net_arg(args)?;
+            let target_csv = args.opt_or("targets", "stratix10sx").to_string();
+            let targets: Vec<&str> = target_csv.split(',').filter(|s| !s.is_empty()).collect();
+            anyhow::ensure!(!targets.is_empty(), "--targets must name at least one target");
+            let cycled: Vec<&str> = (0..replicas).map(|i| targets[i % targets.len()]).collect();
+            let plan = ReplicaPlan::build(&g, &cycled)?;
+            println!("replica plan for {name}:");
+            for e in &plan.entries {
+                println!(
+                    "  {:<12} {} mode, modeled {:.1} FPS (routing weight)",
+                    e.target.name,
+                    e.accelerator.mode.name(),
+                    e.weight
+                );
+            }
+            SimEngine::from_plan(&plan, &g, max_batch)?
+                .into_iter()
+                .map(|e| EngineSpec::Sim(e.with_time_scale(time_scale)))
+                .collect()
+        }
+        // Empty spec list = the legacy homogeneous PJRT fleet.
+        "pjrt" => Vec::new(),
+        other => anyhow::bail!("unknown --engine {other} (sim|pjrt)"),
+    };
+
     let server = InferenceServer::start(ServerConfig {
         network: name.clone(),
-        workers,
+        workers: replicas,
+        max_batch,
+        max_wait: std::time::Duration::from_micros(max_delay_us),
+        queue_capacity,
+        replicas: specs,
         ..Default::default()
     })?;
+
     let data = tvm_fpga_flow::data::for_network(&name, requests.min(512), 1)
         .ok_or_else(|| anyhow::anyhow!("no data generator for {name}"))?;
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|i| server.infer_async(data.frame(i % data.frames()).to_vec()))
-        .collect::<Result<_, _>>()?;
-    for rx in rxs {
+    let mut pending = std::collections::VecDeque::new();
+    for i in 0..requests {
+        let frame = data.frame(i % data.frames()).to_vec();
+        let mut frame = Some(frame);
+        loop {
+            match server.infer_async(frame.take().expect("frame present")) {
+                Ok(rx) => {
+                    pending.push_back(rx);
+                    break;
+                }
+                // Backpressure: drain one in-flight response, then retry.
+                Err(e)
+                    if matches!(
+                        e.downcast_ref::<ServerError>(),
+                        Some(ServerError::Overloaded { .. })
+                    ) =>
+                {
+                    let rx = pending.pop_front().ok_or(e)?;
+                    rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+                    frame = Some(data.frame(i % data.frames()).to_vec());
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    for rx in pending {
         rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
     }
     let dt = t0.elapsed().as_secs_f64();
     let stats = server.shutdown();
+
     println!(
-        "{requests} requests, {workers} queues: {:.1} req/s  p50 {}µs  p99 {}µs  ({} batches, {} batched frames)",
-        requests as f64 / dt,
+        "{requests} requests, {} replica(s), max_batch {max_batch}: {:.1} req/s",
+        stats.replicas.len(),
+        requests as f64 / dt
+    );
+    println!(
+        "latency: p50 {}µs  p99 {}µs   queued: p50 {}µs  p99 {}µs   rejected: {}",
         stats.p50_us.unwrap_or(0),
         stats.p99_us.unwrap_or(0),
-        stats.batches,
-        stats.batched_frames,
+        stats.queue_p50_us.unwrap_or(0),
+        stats.queue_p99_us.unwrap_or(0),
+        stats.rejected
     );
+    println!(
+        "batches: {} (mean size {:.2})  histogram: {}",
+        stats.batches,
+        stats.mean_batch_size(),
+        stats.batch_hist_render()
+    );
+    for r in &stats.replicas {
+        println!(
+            "  {:<24} {:>6} batches {:>7} frames  occupancy {:>5.1}%",
+            r.name,
+            r.batches,
+            r.frames,
+            r.occupancy * 100.0
+        );
+    }
     Ok(())
 }

@@ -1,6 +1,7 @@
 //! Metrics (§V-C): FPS, GFLOPS, comparison accounting, plus the paper's
 //! published numbers for every table so benches can print
-//! ours-vs-paper side by side.
+//! ours-vs-paper side by side; also the serving-side instruments the
+//! coordinator records ([`LatencyStats`], [`BatchHistogram`]).
 
 /// FPS from a measured duration over N frames (§V-C: N = 1000).
 pub fn fps(frames: u64, total_seconds: f64) -> f64 {
@@ -103,6 +104,65 @@ impl LatencyStats {
     }
 }
 
+/// Batch-size histogram for the serving coordinator: how full the dynamic
+/// batcher actually ran the device-native batch dimension.
+///
+/// Bucket `i` counts executed batches of size `i + 1`; sizes beyond the
+/// configured maximum clamp into the last bucket.
+#[derive(Debug, Clone)]
+pub struct BatchHistogram {
+    counts: Vec<u64>,
+}
+
+impl BatchHistogram {
+    /// A histogram for batch sizes `1..=max_batch`.
+    pub fn new(max_batch: usize) -> BatchHistogram {
+        BatchHistogram { counts: vec![0; max_batch.max(1)] }
+    }
+
+    /// Rehydrate from exported bucket counts (e.g. a
+    /// [`crate::coordinator::StatsSnapshot`]'s `batch_hist`).
+    pub fn from_counts(counts: Vec<u64>) -> BatchHistogram {
+        BatchHistogram { counts: if counts.is_empty() { vec![0] } else { counts } }
+    }
+
+    /// Record one executed batch of `size` frames (0 is ignored).
+    pub fn record(&mut self, size: usize) {
+        if size == 0 {
+            return;
+        }
+        let idx = (size - 1).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    /// `counts()[i]` = batches of size `i + 1`.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total batches recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Compact `size×count` rendering, skipping empty buckets:
+    /// `1×3 4×10 8×120`.
+    pub fn render(&self) -> String {
+        let cells: Vec<String> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, n)| format!("{}\u{00d7}{n}", i + 1))
+            .collect();
+        if cells.is_empty() {
+            "(no batches)".into()
+        } else {
+            cells.join(" ")
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +189,20 @@ mod tests {
     fn deviation() {
         assert!((deviation_pct(110.0, 100.0) - 10.0).abs() < 1e-9);
         assert!(deviation_pct(1.0, 0.0).is_nan());
+    }
+
+    #[test]
+    fn batch_histogram_buckets_and_clamps() {
+        let mut h = BatchHistogram::new(4);
+        h.record(1);
+        h.record(1);
+        h.record(4);
+        h.record(9); // clamps into the last bucket
+        h.record(0); // ignored
+        assert_eq!(h.counts(), &[2, 0, 0, 2]);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.render(), "1\u{00d7}2 4\u{00d7}2");
+        assert_eq!(BatchHistogram::new(3).render(), "(no batches)");
     }
 
     #[test]

@@ -9,9 +9,10 @@ use tvm_fpga_flow::data;
 use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
 
 fn ready() -> bool {
-    let ok = Manifest::default_dir().join("manifest.json").exists();
+    let ok = Manifest::default_dir().join("manifest.json").exists()
+        && tvm_fpga_flow::runtime::backend_available();
     if !ok {
-        eprintln!("skipping: run `make artifacts` first");
+        eprintln!("skipping: needs `make artifacts` + the real xla bindings");
     }
     ok
 }

@@ -1,0 +1,212 @@
+//! Integration tests for the dynamic-batching replica scheduler, running
+//! on simulated accelerator engines — no artifacts or PJRT build needed.
+//!
+//! The simulated engine charges a fixed per-dispatch overhead plus a
+//! per-frame cost (the §IV-F amortization model), so batching effects are
+//! measurable in wall-clock time with generous margins.
+
+use std::time::{Duration, Instant};
+
+use tvm_fpga_flow::coordinator::{
+    EngineSpec, InferenceServer, ServerConfig, ServerError, SimEngine,
+};
+
+const FRAME_ELEMS: usize = 16;
+const CLASSES: usize = 10;
+
+/// One simulated accelerator: heavy dispatch overhead, cheap frames —
+/// the regime in which the paper's batching/autorun optimizations matter.
+fn slow_dispatch_engine(overhead: Duration) -> SimEngine {
+    SimEngine::new("sim-accel", FRAME_ELEMS, CLASSES, 8, overhead, Duration::from_micros(50))
+}
+
+fn cfg(replicas: Vec<EngineSpec>, max_batch: usize, max_wait: Duration) -> ServerConfig {
+    ServerConfig { replicas, max_batch, max_wait, ..Default::default() }
+}
+
+fn frames(n: usize) -> Vec<Vec<f32>> {
+    let data = tvm_fpga_flow::data::mnist_like(n, 4, 42);
+    (0..n).map(|i| data.frame(i).to_vec()).collect()
+}
+
+/// Drive `n` async requests through a fresh server, returning (elapsed,
+/// final stats).
+fn run_burst(
+    server: InferenceServer,
+    n: usize,
+) -> (Duration, tvm_fpga_flow::coordinator::StatsSnapshot) {
+    let t0 = Instant::now();
+    let rxs: Vec<_> = frames(n)
+        .into_iter()
+        .map(|f| server.infer_async(f).expect("queue sized for the burst"))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let dt = t0.elapsed();
+    (dt, server.shutdown())
+}
+
+#[test]
+fn dynamic_batching_multiplies_throughput() {
+    let engine = slow_dispatch_engine(Duration::from_millis(2));
+    let n = 64;
+
+    let unbatched = InferenceServer::start(cfg(
+        vec![EngineSpec::Sim(engine.clone())],
+        1,
+        Duration::from_micros(100),
+    ))
+    .unwrap();
+    let (dt1, s1) = run_burst(unbatched, n);
+
+    let batched = InferenceServer::start(cfg(
+        vec![EngineSpec::Sim(engine)],
+        8,
+        Duration::from_millis(2),
+    ))
+    .unwrap();
+    let (dt8, s8) = run_burst(batched, n);
+
+    assert_eq!(s1.completed, n as u64);
+    assert_eq!(s8.completed, n as u64);
+    assert_eq!(s1.batched_frames, 0);
+    assert!(s8.batched_frames > 0, "{s8:?}");
+    // The same simulated accelerator must serve ≥3× the frames/sec once
+    // the batcher amortizes its 2 ms dispatch overhead (the bench
+    // demonstrates ≥4× with a larger burst; the test keeps CI margin).
+    let speedup = dt1.as_secs_f64() / dt8.as_secs_f64();
+    assert!(speedup >= 3.0, "batching speedup only {speedup:.2}x ({dt1:?} vs {dt8:?})");
+}
+
+#[test]
+fn deadline_flushes_partial_batch_through_the_server() {
+    let server = InferenceServer::start(cfg(
+        vec![EngineSpec::Sim(slow_dispatch_engine(Duration::ZERO))],
+        8,
+        Duration::from_millis(100),
+    ))
+    .unwrap();
+    // 3 frames < max_batch: only the deadline can flush them.
+    let rxs: Vec<_> =
+        frames(3).into_iter().map(|f| server.infer_async(f).unwrap()).collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().unwrap() < CLASSES as u32);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 3);
+    // Nothing ever reached max_batch, so every flush was deadline-driven
+    // partial batches. (Usually one batch of 3; a descheduled submitter
+    // may split it, so the asserts avoid exact batch counts.)
+    assert!(stats.batches >= 1 && stats.batches <= 3, "{stats:?}");
+    assert_eq!(stats.batch_hist[7], 0, "a full batch should be impossible: {stats:?}");
+    assert_eq!(stats.batch_hist.iter().sum::<u64>(), stats.batches, "{stats:?}");
+    assert!(stats.mean_batch_size() >= 1.0 && stats.mean_batch_size() <= 3.0);
+}
+
+#[test]
+fn shutdown_drains_nonempty_queue() {
+    // Slow engine: 20 ms per dispatch, so the burst is still queued when
+    // shutdown starts.
+    let server = InferenceServer::start(cfg(
+        vec![EngineSpec::Sim(slow_dispatch_engine(Duration::from_millis(20)))],
+        8,
+        Duration::from_millis(1),
+    ))
+    .unwrap();
+    let rxs: Vec<_> =
+        frames(32).into_iter().map(|f| server.infer_async(f).unwrap()).collect();
+    // Shut down immediately: every accepted request must still be answered.
+    let stats = server.shutdown();
+    assert_eq!(stats.submitted, 32);
+    assert_eq!(stats.completed, stats.submitted, "shutdown dropped work: {stats:?}");
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+}
+
+#[test]
+fn overloaded_when_bounded_queue_is_full() {
+    // Tiny queue + slow replica: the burst must overflow.
+    let server = InferenceServer::start(ServerConfig {
+        replicas: vec![EngineSpec::Sim(slow_dispatch_engine(Duration::from_millis(50)))],
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+        queue_capacity: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for f in frames(24) {
+        match server.infer_async(f) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                let se = e.downcast_ref::<ServerError>().expect("typed error");
+                assert!(matches!(se, ServerError::Overloaded { .. }), "{se:?}");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "bounded queue never pushed back");
+    // Accepted work is still all served.
+    for rx in &accepted {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.rejected, rejected);
+    assert_eq!(stats.submitted, accepted.len() as u64);
+    assert_eq!(stats.completed, stats.submitted);
+    assert_eq!(stats.submitted + stats.rejected, 24);
+}
+
+#[test]
+fn stats_report_occupancy_and_histogram_across_replicas() {
+    // Two replicas with 3:1 modeled throughput (weights follow modeled
+    // FPS, which follows the timing constants).
+    let fast = SimEngine::new(
+        "fast",
+        FRAME_ELEMS,
+        CLASSES,
+        8,
+        Duration::from_millis(1),
+        Duration::from_micros(50),
+    );
+    let slow = SimEngine::new(
+        "slow",
+        FRAME_ELEMS,
+        CLASSES,
+        8,
+        Duration::from_millis(3),
+        Duration::from_micros(150),
+    );
+    let server = InferenceServer::start(cfg(
+        vec![EngineSpec::Sim(fast), EngineSpec::Sim(slow)],
+        8,
+        Duration::from_millis(2),
+    ))
+    .unwrap();
+    let (_, stats) = run_burst(server, 96);
+
+    assert_eq!(stats.completed, 96);
+    assert_eq!(stats.replicas.len(), 2);
+    assert_eq!(stats.replicas[0].name, "r0:fast");
+    assert_eq!(stats.replicas[1].name, "r1:slow");
+    // Both replicas worked, and their busy time was measured.
+    for r in &stats.replicas {
+        assert!(r.frames > 0, "{stats:?}");
+        assert!(r.busy_us > 0, "{stats:?}");
+        assert!(r.occupancy > 0.0 && r.occupancy <= 1.5, "{stats:?}");
+    }
+    assert_eq!(stats.replicas.iter().map(|r| r.frames).sum::<u64>(), 96);
+    // Weighted routing: the fast replica must carry more frames.
+    assert!(
+        stats.replicas[0].frames > stats.replicas[1].frames,
+        "weighted routing ignored modeled throughput: {stats:?}"
+    );
+    // The histogram saw multi-frame batches and accounts for every batch.
+    assert!(stats.batch_hist.iter().skip(1).any(|&n| n > 0), "{stats:?}");
+    assert_eq!(stats.batch_hist.iter().sum::<u64>(), stats.batches, "{stats:?}");
+    // Queue latency was recorded at dispatch.
+    assert!(stats.queue_p50_us.is_some());
+}
