@@ -1,14 +1,17 @@
 //! Regenerates **Table II**: resource utilization and f_max of the
-//! optimized accelerators for the three evaluation networks, vs the paper.
-//! Also times the synthesis path (graph → kernels → AOC model).
+//! optimized accelerators for the three evaluation networks, vs the paper
+//! — plus the int8 column the paper's §VII anticipates, asserting the
+//! modeled DSP/BRAM savings of the quantized datapath. Also times the
+//! synthesis path (graph → kernels → AOC model).
 //!
 //! ```sh
 //! cargo bench --bench table2_resources
 //! ```
 
-use tvm_fpga_flow::flow::{Compiler, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, ModeChoice, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::{deviation_pct, paper};
+use tvm_fpga_flow::quant::QuantConfig;
 use tvm_fpga_flow::util::bench::{quick, Table};
 
 fn main() {
@@ -40,6 +43,52 @@ fn main() {
         ]);
     }
     table.print();
+
+    // int8 vs fp32 (§VII reduced precision): the quantized datapath must
+    // pay for itself on every network — DSPs pack 2:1 and BRAM narrows.
+    // Both columns compile the pass-folded graph (the quantization
+    // front-end always BN-folds), so the delta is precision alone.
+    let mut qtable = Table::new(
+        "Table II-Q — int8 vs fp32 modeled resources (per network)",
+        &["network", "DSP % (f32→int8)", "BRAM % (f32→int8)", "f_max (f32→int8)", "FPS (f32→int8)", "top-1 Δpp"],
+    );
+    for (name, ..) in paper::TABLE2 {
+        let g = models::by_name(name).unwrap();
+        let mode = ModeChoice::from(Compiler::paper_mode(name));
+        let (g_folded, _) = tvm_fpga_flow::graph::passes::standard_pipeline(&g);
+        let f32_acc = flow.compile(&g_folded, mode, OptLevel::Optimized).expect("f32 compiles");
+        let int8_acc = flow
+            .graph(&g)
+            .mode(mode)
+            .with_quantization(QuantConfig::int8())
+            .run()
+            .expect("int8 compiles");
+        let uf = &f32_acc.synthesis.resources.utilization;
+        let ui = &int8_acc.synthesis.resources.utilization;
+        assert!(
+            ui.dsp_frac < uf.dsp_frac,
+            "{name}: int8 DSPs {:.3} must undercut f32 {:.3}",
+            ui.dsp_frac,
+            uf.dsp_frac
+        );
+        assert!(
+            ui.bram_frac < uf.bram_frac,
+            "{name}: int8 BRAM {:.3} must undercut f32 {:.3}",
+            ui.bram_frac,
+            uf.bram_frac
+        );
+        let delta = int8_acc.quant.as_ref().map(|q| q.accuracy.delta_pp).unwrap_or(0.0);
+        assert!(delta < 5.0, "{name}: accuracy delta {delta}pp out of band");
+        qtable.row(&[
+            name.into(),
+            format!("{:.1} → {:.1}", uf.dsp_frac * 100.0, ui.dsp_frac * 100.0),
+            format!("{:.1} → {:.1}", uf.bram_frac * 100.0, ui.bram_frac * 100.0),
+            format!("{:.0} → {:.0}", f32_acc.synthesis.fmax_mhz, int8_acc.synthesis.fmax_mhz),
+            format!("{:.1} → {:.1}", f32_acc.performance.fps, int8_acc.performance.fps),
+            format!("{delta:.2}"),
+        ]);
+    }
+    qtable.print();
 
     // Criterion-style timing of the synthesis path itself (the paper's
     // equivalent step is 3–12 h of Quartus, §IV-J).

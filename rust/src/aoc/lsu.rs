@@ -65,7 +65,8 @@ fn infer_one(nest: &LoopNest, a: &Access) -> Lsu {
         .map(|l| l.unroll)
         .product();
     let unroll = unroll.max(1);
-    let eb = nest.precision.bytes();
+    // Cross-domain boundary kernels pin per-access element types.
+    let eb = a.elem.unwrap_or(nest.precision).bytes();
 
     // Read-only array small enough for AOC's inferred cache: after the
     // first pass it streams from BRAM regardless of pattern.

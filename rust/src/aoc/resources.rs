@@ -176,11 +176,12 @@ pub fn program_resources(prog: &KernelProgram, dev: &FpgaDevice) -> ProgramResou
         per_kernel.push((k.name.clone(), r));
     }
 
-    // Channel FIFOs: registers for shallow, BRAM for deep (§IV-E).
+    // Channel FIFOs: registers for shallow, BRAM for deep (§IV-E). Depth
+    // is in elements, so narrow (quantized) streams need fewer bits.
     for ch in &prog.channels {
-        let bits = ch.depth * 32;
+        let bits = ch.depth * 8 * ch.elem.bytes();
         let r = if ch.depth <= 16 {
-            KernelResources { aluts: 80, ffs: ch.depth * 32, dsps: 0, bram_blocks: 0 }
+            KernelResources { aluts: 80, ffs: ch.depth * 8 * ch.elem.bytes(), dsps: 0, bram_blocks: 0 }
         } else {
             KernelResources {
                 aluts: 250,
@@ -264,12 +265,49 @@ mod tests {
         let mk = |depth| KernelProgram {
             name: "t".into(),
             kernels: vec![],
-            channels: vec![crate::codegen::Channel { name: "c".into(), from_kernel: 0, to_kernel: 1, depth }],
+            channels: vec![crate::codegen::Channel::f32("c", 0, 1, depth)],
             queues: 1,
         };
         let shallow = program_resources(&mk(8), &dev);
         let deep = program_resources(&mk(100_000), &dev);
         assert!(deep.total.bram_blocks > shallow.total.bram_blocks);
+    }
+
+    #[test]
+    fn int8_channels_and_kernels_shrink_resources() {
+        use crate::texpr::Precision;
+        let dev = FpgaDevice::stratix10sx();
+        let mk = |elem| KernelProgram {
+            name: "t".into(),
+            kernels: vec![],
+            channels: vec![crate::codegen::Channel {
+                name: "c".into(),
+                from_kernel: 0,
+                to_kernel: 1,
+                depth: 100_000,
+                elem,
+            }],
+            queues: 1,
+        };
+        let wide = program_resources(&mk(Precision::F32), &dev);
+        let narrow = program_resources(&mk(Precision::Int8), &dev);
+        assert!(
+            narrow.total.bram_blocks < wide.total.bram_blocks,
+            "int8 FIFO {} vs f32 {}",
+            narrow.total.bram_blocks,
+            wide.total.bram_blocks
+        );
+
+        // A quantized MAC kernel packs 2 MACs/DSP and narrows its banks.
+        let mut kf = mk_kernel(Some(16), true);
+        let mut ki = mk_kernel(Some(16), true);
+        crate::schedule::Scheduler::new(&mut ki.nest).quantize(Precision::Int8);
+        crate::schedule::Scheduler::new(&mut kf.nest).quantize(Precision::F32);
+        let rf = kernel_resources(&kf);
+        let ri = kernel_resources(&ki);
+        assert_eq!(ri.dsps * 2, rf.dsps);
+        assert!(ri.bram_blocks <= rf.bram_blocks);
+        assert!(ri.aluts < rf.aluts);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use crate::graph::ParamGroup;
 use crate::schedule::AppliedOpts;
-use crate::texpr::{LoopNest, MemSpace};
+use crate::texpr::{LoopNest, MemSpace, Precision};
 
 /// A channel (kernel-to-kernel FIFO) connection, §IV-E.
 #[derive(Debug, Clone, PartialEq)]
@@ -19,6 +19,16 @@ pub struct Channel {
     /// FIFO depth in elements (user-specified; must cover the largest
     /// feature map for buffered channels, §IV-J).
     pub depth: u64,
+    /// Element type carried by the FIFO (int8 streams pack 4× the elements
+    /// into the same BRAM as fp32, §VII extension).
+    pub elem: Precision,
+}
+
+impl Channel {
+    /// An fp32 channel (the paper's setting).
+    pub fn f32(name: impl Into<String>, from_kernel: usize, to_kernel: usize, depth: u64) -> Channel {
+        Channel { name: name.into(), from_kernel, to_kernel, depth, elem: Precision::F32 }
+    }
 }
 
 /// One generated OpenCL kernel.
@@ -81,13 +91,18 @@ impl KernelProgram {
     }
 
     /// Emit human-readable pseudo-OpenCL for inspection / docs — the shape
-    /// of what TVM+our optimizations would hand to AOC.
+    /// of what TVM+our optimizations would hand to AOC. Buffer and channel
+    /// element types follow each kernel's datapath precision, so a
+    /// quantized program round-trips its dtype metadata instead of
+    /// pretending everything is `float`.
     pub fn to_pseudo_opencl(&self) -> String {
         let mut out = String::new();
         for ch in &self.channels {
             out.push_str(&format!(
-                "channel float {} __attribute__((depth({})));\n",
-                ch.name, ch.depth
+                "channel {} {} __attribute__((depth({})));\n",
+                ch.elem.c_type(),
+                ch.name,
+                ch.depth
             ));
         }
         if !self.channels.is_empty() {
@@ -113,8 +128,17 @@ fn render_kernel(k: &Kernel) -> String {
     let mut seen = std::collections::BTreeSet::new();
     for a in &k.nest.accesses {
         if a.space == MemSpace::Global && seen.insert(a.buffer.clone()) {
-            args.push(format!("__global float* restrict {}", a.buffer));
+            // Cross-domain kernels (quantize/dequantize boundaries) pin
+            // per-access element types; everything else follows the
+            // kernel's datapath precision.
+            let ty = a.elem.unwrap_or(k.nest.precision).c_type();
+            args.push(format!("__global {ty}* restrict {}", a.buffer));
         }
+    }
+    if k.nest.precision == Precision::Int8 && k.nest.macs_per_iter > 0 {
+        // Fixed-point datapaths dequantize the integer accumulator on the
+        // way out (fp16 accumulates in float and needs no scale).
+        args.push("const float dequant_scale".into());
     }
     for l in &k.nest.loops {
         if l.dynamic {
@@ -143,10 +167,11 @@ fn render_kernel(k: &Kernel) -> String {
         indent += 1;
     }
     let pad = "  ".repeat(indent);
+    let accum = k.nest.precision.accum_c_type();
     let acc = match k.nest.accum_space {
-        MemSpace::Private => "acc /*register*/",
-        MemSpace::Local => "acc_local[...]",
-        _ => "ofmap[...] /*global RMW*/",
+        MemSpace::Private => format!("acc /*{accum} register*/"),
+        MemSpace::Local => "acc_local[...]".to_string(),
+        _ => "ofmap[...] /*global RMW*/".to_string(),
     };
     if k.nest.macs_per_iter > 0 {
         let in_src = k
@@ -160,7 +185,12 @@ fn render_kernel(k: &Kernel) -> String {
                 _ => "ifmap[...]".to_string(),
             })
             .unwrap_or_else(|| "ifmap[...]".into());
-        s.push_str(&format!("{pad}{acc} += {in_src} * weights[...];\n"));
+        if k.nest.precision == Precision::Int8 {
+            // int8 MACs widen into the integer accumulator.
+            s.push_str(&format!("{pad}{acc} += (int){in_src} * (int)weights[...];\n"));
+        } else {
+            s.push_str(&format!("{pad}{acc} += {in_src} * weights[...];\n"));
+        }
     } else {
         s.push_str(&format!("{pad}{acc} = reduce(ifmap[...]);\n"));
     }
@@ -236,9 +266,43 @@ mod tests {
         let prog = KernelProgram {
             name: "t".into(),
             kernels: vec![],
-            channels: vec![Channel { name: "ch0".into(), from_kernel: 0, to_kernel: 1, depth: 256 }],
+            channels: vec![Channel::f32("ch0", 0, 1, 256)],
             queues: 1,
         };
-        assert!(prog.to_pseudo_opencl().contains("depth(256)"));
+        let src = prog.to_pseudo_opencl();
+        assert!(src.contains("depth(256)"));
+        assert!(src.contains("channel float ch0"));
+    }
+
+    #[test]
+    fn quantized_kernels_emit_their_element_types() {
+        let mut k = kernel_for(1);
+        let mut s = Scheduler::new(&mut k.nest);
+        s.quantize(crate::texpr::Precision::Int8);
+        s.cache_write().unwrap();
+        let ch = Channel {
+            name: "ch0".into(),
+            from_kernel: 0,
+            to_kernel: 1,
+            depth: 64,
+            elem: crate::texpr::Precision::Int8,
+        };
+        let prog = KernelProgram { name: "t".into(), kernels: vec![k], channels: vec![ch], queues: 1 };
+        let src = prog.to_pseudo_opencl();
+        assert!(src.contains("channel char ch0"), "{src}");
+        assert!(src.contains("__global char* restrict"), "{src}");
+        assert!(src.contains("dequant_scale"), "{src}");
+        assert!(src.contains("(int)"), "int8 MACs must widen: {src}");
+        assert!(!src.contains("__global float"), "{src}");
+    }
+
+    #[test]
+    fn fp16_kernels_emit_half() {
+        let mut k = kernel_for(1);
+        let mut s = Scheduler::new(&mut k.nest);
+        s.quantize(crate::texpr::Precision::F16);
+        let prog = KernelProgram { name: "t".into(), kernels: vec![k], channels: vec![], queues: 1 };
+        let src = prog.to_pseudo_opencl();
+        assert!(src.contains("__global half* restrict"), "{src}");
     }
 }

@@ -152,7 +152,9 @@ impl SimEngine {
         )
     }
 
-    /// One engine per [`ReplicaPlan`] entry, named `network@target`.
+    /// One engine per [`ReplicaPlan`] entry, named `network@target` (with
+    /// a `:precision` suffix for quantized accelerators, so fleet stats
+    /// distinguish an int8 replica from its fp32 sibling).
     pub fn from_plan(
         plan: &ReplicaPlan,
         graph: &Graph,
@@ -168,12 +170,12 @@ impl SimEngine {
             .entries
             .iter()
             .map(|e| {
-                SimEngine::from_accelerator(
-                    format!("{}@{}", plan.network, e.target.name),
-                    &e.accelerator,
-                    graph,
-                    native_batch,
-                )
+                let name = if e.accelerator.precision == crate::texpr::Precision::F32 {
+                    format!("{}@{}", plan.network, e.target.name)
+                } else {
+                    format!("{}@{}:{}", plan.network, e.target.name, e.accelerator.precision)
+                };
+                SimEngine::from_accelerator(name, &e.accelerator, graph, native_batch)
             })
             .collect())
     }
@@ -202,12 +204,9 @@ impl SimEngine {
 
 /// Deterministic per-frame "prediction": FNV-1a over the f32 bit patterns.
 fn hash_predict(frame: &[f32], classes: usize) -> u32 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h = crate::util::FNV_OFFSET;
     for v in frame {
-        for b in v.to_bits().to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
+        h = crate::util::fnv64_with(h, &v.to_bits().to_le_bytes());
     }
     (h % classes.max(1) as u64) as u32
 }
@@ -345,6 +344,27 @@ mod tests {
             assert_eq!(e.num_classes(), 10);
             assert!(e.modeled_fps() > 0.0);
         }
+    }
+
+    #[test]
+    fn quantized_plan_suffixes_replica_names() {
+        let g = models::lenet5();
+        let f32_plan = ReplicaPlan::build(&g, &["stratix10sx"]).unwrap();
+        let i8_plan = ReplicaPlan::build_with(
+            &g,
+            &["stratix10sx"],
+            Some(crate::quant::QuantConfig::int8()),
+        )
+        .unwrap();
+        let f = SimEngine::from_plan(&f32_plan, &g, 8).unwrap();
+        let q = SimEngine::from_plan(&i8_plan, &g, 8).unwrap();
+        assert_eq!(f[0].name(), "lenet5@stratix10sx");
+        assert_eq!(q[0].name(), "lenet5@stratix10sx:int8");
+        // The int8 accelerator is never modeled slower than its fp32
+        // sibling, so routing weights stay sane in mixed fleets.
+        assert!(q[0].modeled_fps() >= f[0].modeled_fps() * 0.99);
+        assert_eq!(q[0].frame_elems(), 32 * 32);
+        assert_eq!(q[0].num_classes(), 10);
     }
 
     #[test]

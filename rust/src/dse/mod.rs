@@ -15,9 +15,17 @@
 //! 2 divisibility) the sweep revisits identical kernel programs; the
 //! [`Compiler`]'s synthesis memo turns those into cache hits, reported in
 //! [`DseResult::synth_cache`].
+//!
+//! [`explore_precisions`] adds datapath precision as a search dimension:
+//! each precision is quantized through [`crate::quant`] (calibration +
+//! Q/DQ rewrite + modeled top-1 loss) and swept like any other factor; the
+//! accepted points collapse into an accuracy-vs-FPS-vs-resources Pareto
+//! front ([`PrecisionFront`]).
 
 use crate::flow::{patterns::FactorPlan, CacheStats, Compiler, Mode, OptConfig};
 use crate::graph::{Graph, ParamGroup};
+use crate::quant::{self, QuantConfig};
+use crate::texpr::Precision;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -28,6 +36,10 @@ pub struct DsePoint {
     pub dsp_frac: f64,
     pub logic_frac: f64,
     pub bram_frac: f64,
+    /// Datapath precision this point was scheduled at.
+    pub precision: Precision,
+    /// Modeled top-1 loss at this precision (0 for fp32).
+    pub accuracy_delta_pp: f64,
     /// None = synthesized; Some(reason) = rejected.
     pub rejected: Option<String>,
 }
@@ -75,6 +87,19 @@ pub fn tile_candidates_ordered() -> Vec<(u64, u64)> {
 /// time (coordinate descent: groups are resource-coupled but the paper's
 /// manual sweep treats them independently too).
 pub fn explore_folded(compiler: &Compiler, graph: &Graph, budget_per_group: usize) -> DseResult {
+    explore_folded_with(compiler, graph, budget_per_group, &OptConfig::optimized(), 0.0)
+}
+
+/// [`explore_folded`] under an explicit optimization config (the precision
+/// sweep's per-precision leg); `accuracy_delta_pp` is stamped on every
+/// point.
+pub fn explore_folded_with(
+    compiler: &Compiler,
+    graph: &Graph,
+    budget_per_group: usize,
+    cfg: &OptConfig,
+    accuracy_delta_pp: f64,
+) -> DseResult {
     let cache_before = compiler.cache_stats();
     let base_plan = crate::flow::default_factors(graph);
     let groups: Vec<ParamGroup> = base_plan.group_tiles.keys().copied().collect();
@@ -82,7 +107,9 @@ pub fn explore_folded(compiler: &Compiler, graph: &Graph, budget_per_group: usiz
     let mut best_plan = base_plan.clone();
     let mut log = Vec::new();
     let mut evaluated = 0;
-    let mut best_fps = eval(compiler, graph, Mode::Folded, &best_plan, &mut log, &mut evaluated);
+    let mut best_fps = eval(
+        compiler, graph, Mode::Folded, cfg, accuracy_delta_pp, &best_plan, &mut log, &mut evaluated,
+    );
 
     let mut candidates = tile_candidates_ordered();
     candidates.truncate(budget_per_group.max(1));
@@ -91,7 +118,10 @@ pub fn explore_folded(compiler: &Compiler, graph: &Graph, budget_per_group: usiz
         for &(t_ic, t_oc) in &candidates {
             let mut plan = best_plan.clone();
             plan.group_tiles.insert(*g, (t_ic, t_oc));
-            let fps = eval(compiler, graph, Mode::Folded, &plan, &mut log, &mut evaluated);
+            let fps = eval(
+                compiler, graph, Mode::Folded, cfg, accuracy_delta_pp, &plan, &mut log,
+                &mut evaluated,
+            );
             if fps > best_fps {
                 best_fps = fps;
                 best_plan = plan;
@@ -104,13 +134,26 @@ pub fn explore_folded(compiler: &Compiler, graph: &Graph, budget_per_group: usiz
 
 /// Sweep pipelined unroll caps.
 pub fn explore_pipelined(compiler: &Compiler, graph: &Graph) -> DseResult {
+    explore_pipelined_with(compiler, graph, &OptConfig::optimized(), 0.0)
+}
+
+/// [`explore_pipelined`] under an explicit optimization config.
+pub fn explore_pipelined_with(
+    compiler: &Compiler,
+    graph: &Graph,
+    cfg: &OptConfig,
+    accuracy_delta_pp: f64,
+) -> DseResult {
     let cache_before = compiler.cache_stats();
     let mut log = Vec::new();
     let mut evaluated = 0;
     for cap in [16u64, 32, 64, 128, 256, 512, 1024] {
         let mut plan = crate::flow::default_factors(graph);
         plan.pipelined_cap = cap;
-        eval(compiler, graph, Mode::Pipelined, &plan, &mut log, &mut evaluated);
+        eval(
+            compiler, graph, Mode::Pipelined, cfg, accuracy_delta_pp, &plan, &mut log,
+            &mut evaluated,
+        );
     }
     finish(log, evaluated, compiler, cache_before)
 }
@@ -134,16 +177,19 @@ fn finish(
     DseResult { best, log, evaluated, synth_cache }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn eval(
     compiler: &Compiler,
     graph: &Graph,
     mode: Mode,
+    cfg: &OptConfig,
+    accuracy_delta_pp: f64,
     plan: &FactorPlan,
     log: &mut Vec<DsePoint>,
     evaluated: &mut usize,
 ) -> f64 {
     *evaluated += 1;
-    match eval_point(compiler, graph, mode, plan) {
+    match eval_point(compiler, graph, mode, cfg, accuracy_delta_pp, plan) {
         Ok(p) => {
             let fps = p.fps;
             log.push(p);
@@ -157,6 +203,8 @@ fn eval(
                 dsp_frac: 0.0,
                 logic_frac: 0.0,
                 bram_frac: 0.0,
+                precision: cfg.precision,
+                accuracy_delta_pp,
                 rejected: Some(e.to_string()),
             });
             0.0
@@ -171,10 +219,11 @@ fn eval_point(
     compiler: &Compiler,
     graph: &Graph,
     mode: Mode,
+    cfg: &OptConfig,
+    accuracy_delta_pp: f64,
     plan: &FactorPlan,
 ) -> crate::Result<DsePoint> {
-    let mut session =
-        compiler.graph(graph).mode(mode).opts(OptConfig::optimized()).plan(plan.clone());
+    let mut session = compiler.graph(graph).mode(mode).opts(*cfg).plan(plan.clone());
     session.lower()?;
     let design = session.synthesize()?;
     let u = design.synthesis.resources.utilization;
@@ -186,8 +235,198 @@ fn eval_point(
         dsp_frac: u.dsp_frac,
         logic_frac: u.logic_frac,
         bram_frac: u.bram_frac,
+        precision: cfg.precision,
+        accuracy_delta_pp,
         rejected: None,
     })
+}
+
+/// One point of the accuracy-vs-FPS-vs-resources trade-off surface.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub precision: Precision,
+    pub fps: f64,
+    pub fmax_mhz: f64,
+    pub dsp_frac: f64,
+    pub logic_frac: f64,
+    pub bram_frac: f64,
+    pub accuracy_delta_pp: f64,
+    pub plan: FactorPlan,
+}
+
+impl ParetoPoint {
+    fn from_dse(p: &DsePoint) -> ParetoPoint {
+        ParetoPoint {
+            precision: p.precision,
+            fps: p.fps,
+            fmax_mhz: p.fmax_mhz,
+            dsp_frac: p.dsp_frac,
+            logic_frac: p.logic_frac,
+            bram_frac: p.bram_frac,
+            accuracy_delta_pp: p.accuracy_delta_pp,
+            plan: p.plan.clone(),
+        }
+    }
+
+    /// Pareto dominance over (FPS↑, DSP↓, logic↓, BRAM↓, accuracy loss↓):
+    /// at least as good everywhere, strictly better somewhere.
+    pub fn dominates(&self, o: &ParetoPoint) -> bool {
+        let no_worse = self.fps >= o.fps
+            && self.dsp_frac <= o.dsp_frac
+            && self.logic_frac <= o.logic_frac
+            && self.bram_frac <= o.bram_frac
+            && self.accuracy_delta_pp <= o.accuracy_delta_pp;
+        no_worse
+            && (self.fps > o.fps
+                || self.dsp_frac < o.dsp_frac
+                || self.logic_frac < o.logic_frac
+                || self.bram_frac < o.bram_frac
+                || self.accuracy_delta_pp < o.accuracy_delta_pp)
+    }
+
+    /// Strictly lower on *every* modeled resource at equal-or-better FPS —
+    /// the "reduced precision actually pays" criterion (accuracy loss
+    /// deliberately excluded; that trade-off is the front's job to expose).
+    pub fn dominates_on_resources(&self, o: &ParetoPoint) -> bool {
+        self.fps >= o.fps
+            && self.dsp_frac < o.dsp_frac
+            && self.logic_frac < o.logic_frac
+            && self.bram_frac < o.bram_frac
+    }
+}
+
+/// Result of a precision-dimension exploration: per-precision sweeps plus
+/// the combined Pareto front.
+#[derive(Debug, Clone)]
+pub struct PrecisionFront {
+    pub network: String,
+    pub mode: Mode,
+    /// The underlying sweep per precision, in input order.
+    pub results: Vec<(Precision, DseResult)>,
+    /// Non-dominated accepted points across all precisions.
+    pub pareto: Vec<ParetoPoint>,
+    /// Best-FPS accepted fp32 point (the baseline quantization must beat).
+    pub baseline_f32: Option<ParetoPoint>,
+}
+
+impl PrecisionFront {
+    /// Front points at one precision.
+    pub fn at(&self, p: Precision) -> impl Iterator<Item = &ParetoPoint> {
+        self.pareto.iter().filter(move |pt| pt.precision == p)
+    }
+
+    /// Does any point at `p` strictly beat the fp32 baseline on every
+    /// modeled resource at equal-or-better FPS?
+    pub fn beats_baseline_on_resources(&self, p: Precision) -> bool {
+        match &self.baseline_f32 {
+            Some(base) => self.at(p).any(|pt| pt.dominates_on_resources(base)),
+            None => false,
+        }
+    }
+
+    /// Total synthesis-cache statistics over all legs of the sweep.
+    pub fn synth_cache(&self) -> CacheStats {
+        self.results.iter().fold(CacheStats::default(), |acc, (_, r)| CacheStats {
+            hits: acc.hits + r.synth_cache.hits,
+            misses: acc.misses + r.synth_cache.misses,
+        })
+    }
+}
+
+/// Explore datapath precision as a DSE dimension: each precision is
+/// quantized through [`crate::quant::prepare`] (BN-fold, calibration, Q/DQ
+/// rewrite, modeled top-1 loss) and tile/unroll-swept like the plain
+/// explorer; accepted points collapse into a Pareto front.
+///
+/// ```
+/// use tvm_fpga_flow::dse::explore_precisions;
+/// use tvm_fpga_flow::flow::{Compiler, Mode};
+/// use tvm_fpga_flow::graph::models;
+/// use tvm_fpga_flow::texpr::Precision;
+///
+/// let compiler = Compiler::default();
+/// let front = explore_precisions(
+///     &compiler,
+///     &models::lenet5(),
+///     Mode::Pipelined,
+///     4,
+///     &[Precision::F32, Precision::Int8],
+/// )
+/// .unwrap();
+/// assert!(!front.pareto.is_empty());
+/// // Reduced precision pays on this workload: some int8 design strictly
+/// // beats the fp32 baseline on every modeled resource at ≥ its FPS.
+/// assert!(front.beats_baseline_on_resources(Precision::Int8));
+/// ```
+pub fn explore_precisions(
+    compiler: &Compiler,
+    graph: &Graph,
+    mode: Mode,
+    budget_per_group: usize,
+    precisions: &[Precision],
+) -> crate::Result<PrecisionFront> {
+    // An fp32-only sweep must reproduce exactly what `compile` builds (raw
+    // graph). As soon as a quantized leg participates, the fp32 baseline
+    // runs the same graph-pass pipeline the quantized legs get, so the
+    // front compares precision against precision — not BN-fold and DCE
+    // smuggled in on one side.
+    let comparing = precisions.iter().any(|&p| p != Precision::F32);
+    let mut results: Vec<(Precision, DseResult)> = Vec::with_capacity(precisions.len());
+    for &p in precisions {
+        let cfg = OptConfig::optimized().with_precision(p);
+        let (eval_graph, delta_pp);
+        if p == Precision::F32 {
+            eval_graph = if comparing {
+                crate::graph::passes::standard_pipeline(graph).0
+            } else {
+                graph.clone()
+            };
+            delta_pp = 0.0;
+        } else {
+            let prep = quant::prepare(graph, &QuantConfig::for_precision(p))?;
+            delta_pp = prep.report.accuracy.delta_pp;
+            eval_graph = prep.graph;
+        }
+        let r = match mode {
+            Mode::Folded => {
+                explore_folded_with(compiler, &eval_graph, budget_per_group, &cfg, delta_pp)
+            }
+            Mode::Pipelined => explore_pipelined_with(compiler, &eval_graph, &cfg, delta_pp),
+        };
+        results.push((p, r));
+    }
+
+    let accepted: Vec<ParetoPoint> = results
+        .iter()
+        .flat_map(|(_, r)| r.log.iter().filter(|p| p.rejected.is_none()).map(ParetoPoint::from_dse))
+        .collect();
+    let pareto: Vec<ParetoPoint> = accepted
+        .iter()
+        .enumerate()
+        .filter(|&(i, p)| {
+            !accepted
+                .iter()
+                .enumerate()
+                .any(|(j, o)| j != i && (o.dominates(p) || (j < i && points_equal(o, p))))
+        })
+        .map(|(_, p)| p.clone())
+        .collect();
+    let baseline_f32 = results
+        .iter()
+        .find(|(p, _)| *p == Precision::F32)
+        .and_then(|(_, r)| r.best.as_ref())
+        .map(ParetoPoint::from_dse);
+    Ok(PrecisionFront { network: graph.name.clone(), mode, results, pareto, baseline_f32 })
+}
+
+/// Metric-space equality (used to drop duplicate front entries that came
+/// from tile candidates clamping to the same design).
+fn points_equal(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    a.precision == b.precision
+        && a.fps == b.fps
+        && a.dsp_frac == b.dsp_frac
+        && a.logic_frac == b.logic_frac
+        && a.bram_frac == b.bram_frac
 }
 
 #[cfg(test)]
@@ -231,9 +470,11 @@ mod tests {
         }
         let mut log = Vec::new();
         let mut n = 0;
-        let fps = eval(&compiler, &g, Mode::Folded, &plan, &mut log, &mut n);
+        let fps =
+            eval(&compiler, &g, Mode::Folded, &OptConfig::optimized(), 0.0, &plan, &mut log, &mut n);
         assert_eq!(fps, 0.0);
         assert!(log[0].rejected.is_some());
+        assert_eq!(log[0].precision, Precision::F32);
     }
 
     #[test]
@@ -269,6 +510,64 @@ mod tests {
                 .is_some_and(|&(a, b)| a.max(b) >= 16)),
             "no large depthwise tile was ever evaluated under budget 12"
         );
+    }
+
+    #[test]
+    fn pareto_dominance_logic() {
+        let base = ParetoPoint {
+            precision: Precision::F32,
+            fps: 100.0,
+            fmax_mhz: 200.0,
+            dsp_frac: 0.4,
+            logic_frac: 0.5,
+            bram_frac: 0.3,
+            accuracy_delta_pp: 0.0,
+            plan: FactorPlan::default(),
+        };
+        let better = ParetoPoint {
+            precision: Precision::Int8,
+            fps: 110.0,
+            dsp_frac: 0.2,
+            logic_frac: 0.4,
+            bram_frac: 0.2,
+            accuracy_delta_pp: 0.0,
+            ..base.clone()
+        };
+        let lossy = ParetoPoint { accuracy_delta_pp: 1.5, ..better.clone() };
+        assert!(better.dominates(&base));
+        assert!(better.dominates_on_resources(&base));
+        assert!(!base.dominates(&better));
+        // Accuracy loss blocks full dominance but not the resource check.
+        assert!(!lossy.dominates(&base));
+        assert!(lossy.dominates_on_resources(&base));
+        // A point never dominates itself.
+        assert!(!base.dominates(&base));
+    }
+
+    #[test]
+    fn precision_front_lenet_pipelined() {
+        let compiler = Compiler::default();
+        let front = explore_precisions(
+            &compiler,
+            &models::lenet5(),
+            Mode::Pipelined,
+            4,
+            &[Precision::F32, Precision::Int8, Precision::F16],
+        )
+        .unwrap();
+        assert_eq!(front.results.len(), 3);
+        let base = front.baseline_f32.as_ref().expect("f32 baseline exists");
+        assert!(base.fps > 0.0);
+        assert!(!front.pareto.is_empty());
+        // The front carries accuracy deltas: fp32 exact, int8 lossy-but-bounded.
+        assert!(front.at(Precision::Int8).all(|p| p.accuracy_delta_pp > 0.0));
+        assert!(front.at(Precision::Int8).all(|p| p.accuracy_delta_pp < 25.0));
+        // No front point is dominated by any other.
+        for (i, p) in front.pareto.iter().enumerate() {
+            for (j, o) in front.pareto.iter().enumerate() {
+                assert!(i == j || !o.dominates(p), "front point {i} dominated by {j}");
+            }
+        }
     }
 
     #[test]

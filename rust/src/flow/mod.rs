@@ -105,6 +105,13 @@ pub struct Accelerator {
     pub applied: Vec<OptKind>,
     /// FLOPs per frame (for GFLOPS accounting).
     pub flops_per_frame: u64,
+    /// Datapath precision (fp32 unless compiled through
+    /// [`CompileSession::with_quantization`] or an explicit
+    /// [`OptConfig::with_precision`]).
+    pub precision: crate::texpr::Precision,
+    /// Quantization report when the session quantized (calibration,
+    /// boundary statistics, modeled top-1 loss).
+    pub quant: Option<crate::quant::QuantReport>,
 }
 
 impl Accelerator {

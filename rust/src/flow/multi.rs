@@ -191,16 +191,47 @@ impl ReplicaPlan {
     /// assert!(plan.entries.iter().all(|e| e.weight > 0.0));
     /// ```
     pub fn build(graph: &Graph, targets: &[&str]) -> crate::Result<ReplicaPlan> {
+        ReplicaPlan::build_with(graph, targets, None)
+    }
+
+    /// [`ReplicaPlan::build`] with an optional quantization recipe, so a
+    /// serving fleet can run int8/fp16 accelerators (higher modeled FPS →
+    /// higher routing weight) with the accuracy delta carried on each
+    /// entry's accelerator. The quantization front-end (calibration,
+    /// accuracy, Q/DQ rewrite) is target-independent, so it runs **once**
+    /// and every replica compiles the same prepared graph.
+    pub fn build_with(
+        graph: &Graph,
+        targets: &[&str],
+        quant: Option<crate::quant::QuantConfig>,
+    ) -> crate::Result<ReplicaPlan> {
         anyhow::ensure!(!targets.is_empty(), "replica plan needs at least one target");
+        let prepared = match &quant {
+            Some(q) if q.precision != crate::texpr::Precision::F32 => {
+                Some(crate::quant::prepare(graph, q)?)
+            }
+            _ => None,
+        };
         let mut entries = Vec::with_capacity(targets.len());
         for name in targets {
             let compiler = Compiler::for_target(name)?;
-            let accelerator = compiler
-                .graph(graph)
-                .mode(ModeChoice::Auto)
-                .lower()?
-                .synthesize()?
-                .simulate()?;
+            let accelerator = match &prepared {
+                Some(prep) => {
+                    let mut acc = compiler
+                        .graph(&prep.graph)
+                        .mode(ModeChoice::Auto)
+                        .opts(OptConfig::optimized().with_precision(prep.report.precision))
+                        .lower()?
+                        .synthesize()?
+                        .simulate()?;
+                    // The per-target compile skipped the front-end; attach
+                    // the shared report so serving keeps the accuracy
+                    // metadata.
+                    acc.quant = Some(prep.report.clone());
+                    acc
+                }
+                None => compiler.graph(graph).mode(ModeChoice::Auto).lower()?.synthesize()?.simulate()?,
+            };
             let weight = accelerator.performance.fps.max(f64::MIN_POSITIVE);
             entries.push(ReplicaPlanEntry { target: compiler.target.clone(), accelerator, weight });
         }

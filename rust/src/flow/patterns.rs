@@ -306,7 +306,14 @@ fn map_layers(graph: &Graph, cfg: &OptConfig, folded: bool, plan: &FactorPlan) -
         }
 
         // Extensions: reduced precision + vector types (§VII / §V-F).
-        if cfg.precision != crate::texpr::Precision::F32 {
+        // Only grid-domain kernels narrow — f32 islands the Q/DQ rewrite
+        // deliberately left wide (softmax, global pooling, dequantize)
+        // keep their f32 buffers; a Quantize boundary writes the narrow
+        // stream, so it is scheduled at the target precision too.
+        if cfg.precision != crate::texpr::Precision::F32
+            && (crate::quant::rewrite::grid_capable(&node.op)
+                || matches!(node.op, Op::Quantize { .. }))
+        {
             s.quantize(cfg.precision);
         }
         if cfg.vectorize {
@@ -474,17 +481,18 @@ fn apply_folded_tiles(s: &mut Scheduler, node: &Node, plan: &FactorPlan) {
 }
 
 /// Size the BRAM tile stashes of a folded kernel: double-buffered weight
-/// tile + an input line strip.
+/// tile + an input line strip, at the datapath's element width.
 fn tile_stash_bytes(s: &mut Scheduler, plan: &FactorPlan, node: &Node) {
     let Some(g) = node.op.param_group() else { return };
     let (t_ic, t_oc) = plan.group_tiles.get(&g).copied().unwrap_or((8, 8));
     let k2 = (g.kernel * g.kernel) as u64;
+    let eb = s.nest.precision.bytes();
     for a in &mut s.nest.accesses {
         if a.space == crate::texpr::MemSpace::Local {
             a.array_bytes = match a.buffer.as_str() {
-                "weights" => 2 * t_ic * t_oc * k2 * 4,
+                "weights" => 2 * t_ic * t_oc * k2 * eb,
                 // strip of k input rows × tile channels (max W on chip 224)
-                "ifmap" => 2 * t_ic * (g.kernel as u64) * 224 * 4,
+                "ifmap" => 2 * t_ic * (g.kernel as u64) * 224 * eb,
                 _ => a.array_bytes,
             };
         }
@@ -496,7 +504,9 @@ fn tile_stash_bytes(s: &mut Scheduler, plan: &FactorPlan, node: &Node) {
 pub fn build_pipelined(graph: &Graph, cfg: &OptConfig, plan: &FactorPlan) -> (KernelProgram, Vec<LayerWork>) {
     let mut mapped = map_layers(graph, cfg, false, plan);
 
-    // Channels between consecutive kernels (CH).
+    // Channels between consecutive kernels (CH). Each FIFO carries its
+    // *producer's* element type: quantized streams pack more elements per
+    // BRAM block (§VII extension), while f32-island stages keep wide FIFOs.
     let mut channels = Vec::new();
     if cfg.channels {
         let depth = (graph.max_activation_bytes() / 4).max(16);
@@ -511,6 +521,7 @@ pub fn build_pipelined(graph: &Graph, cfg: &OptConfig, plan: &FactorPlan) -> (Ke
                             from_kernel: src_k,
                             to_kernel: k.id,
                             depth,
+                            elem: mapped.kernels[src_k].nest.precision,
                         });
                     }
                 }

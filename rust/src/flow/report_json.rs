@@ -1,9 +1,10 @@
-//! JSON emission for compiled accelerators — machine-readable reports for
-//! CI dashboards and the CLI's `--json` flag (serde is unavailable
-//! offline; uses the in-crate `util::json`).
+//! JSON emission for compiled accelerators and DSE results —
+//! machine-readable reports for CI dashboards and the CLI's `--json` flag
+//! (serde is unavailable offline; uses the in-crate `util::json`).
 
 use std::collections::BTreeMap;
 
+use crate::dse::{ParetoPoint, PrecisionFront};
 use crate::util::json::Json;
 
 use super::Accelerator;
@@ -22,11 +23,26 @@ impl Accelerator {
         let mut root = BTreeMap::new();
         root.insert("network".into(), s(self.network.clone()));
         root.insert("mode".into(), s(self.mode.name()));
+        root.insert("precision".into(), s(self.precision.name()));
         root.insert("flops_per_frame".into(), num(self.flops_per_frame as f64));
         root.insert(
             "applied".into(),
             Json::Arr(self.applied.iter().map(|o| s(o.abbrev())).collect()),
         );
+        if let Some(q) = &self.quant {
+            let mut m = BTreeMap::new();
+            m.insert("precision".into(), s(q.precision.name()));
+            m.insert("scheme".into(), s(q.scheme.name()));
+            m.insert("calibrator".into(), s(q.calibrator.clone()));
+            m.insert("calibration_frames".into(), num(q.calibration_frames as f64));
+            m.insert("quantize_nodes".into(), num(q.stats.quantize_nodes as f64));
+            m.insert("dequantize_nodes".into(), num(q.stats.dequantize_nodes as f64));
+            m.insert("folded_pairs".into(), num(q.stats.folded_pairs as f64));
+            m.insert("top1_agreement".into(), num(q.accuracy.top1_agreement));
+            m.insert("accuracy_delta_pp".into(), num(q.accuracy.delta_pp));
+            m.insert("accuracy_estimated".into(), Json::Bool(q.accuracy.estimated));
+            root.insert("quant".into(), Json::Obj(m));
+        }
 
         let u = &self.synthesis.resources.utilization;
         let mut synth = BTreeMap::new();
@@ -69,6 +85,63 @@ impl Accelerator {
     }
 }
 
+fn pareto_point_json(p: &ParetoPoint) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("precision".into(), s(p.precision.name()));
+    m.insert("fps".into(), num(p.fps));
+    m.insert("fmax_mhz".into(), num(p.fmax_mhz));
+    m.insert("dsp_frac".into(), num(p.dsp_frac));
+    m.insert("logic_frac".into(), num(p.logic_frac));
+    m.insert("bram_frac".into(), num(p.bram_frac));
+    m.insert("accuracy_delta_pp".into(), num(p.accuracy_delta_pp));
+    m.insert(
+        "tiles".into(),
+        Json::Arr(
+            p.plan
+                .group_tiles
+                .iter()
+                .map(|(g, (a, b))| {
+                    let mut t = BTreeMap::new();
+                    t.insert("group".into(), s(g.to_string()));
+                    t.insert("t_ic".into(), num(*a as f64));
+                    t.insert("t_oc".into(), num(*b as f64));
+                    Json::Obj(t)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(m)
+}
+
+impl PrecisionFront {
+    /// Machine-readable Pareto front for `fpga-flow dse --json`: the
+    /// accuracy-vs-FPS-vs-resources surface downstream tooling consumes.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("network".into(), s(self.network.clone()));
+        root.insert("mode".into(), s(self.mode.name()));
+        root.insert(
+            "precisions".into(),
+            Json::Arr(self.results.iter().map(|(p, _)| s(p.name())).collect()),
+        );
+        root.insert(
+            "evaluated".into(),
+            num(self.results.iter().map(|(_, r)| r.evaluated).sum::<usize>() as f64),
+        );
+        let cache = self.synth_cache();
+        let mut c = BTreeMap::new();
+        c.insert("hits".into(), num(cache.hits as f64));
+        c.insert("misses".into(), num(cache.misses as f64));
+        c.insert("hit_rate".into(), num(cache.hit_rate()));
+        root.insert("synth_cache".into(), Json::Obj(c));
+        if let Some(b) = &self.baseline_f32 {
+            root.insert("baseline_f32".into(), pareto_point_json(b));
+        }
+        root.insert("pareto".into(), Json::Arr(self.pareto.iter().map(pareto_point_json).collect()));
+        Json::Obj(root)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use crate::flow::{Compiler, Mode, OptLevel};
@@ -91,5 +164,48 @@ mod tests {
         assert_eq!(kernels.len(), acc.program.kernels.len());
         let applied = parsed.get("applied").unwrap().as_arr().unwrap();
         assert!(applied.iter().any(|a| a.as_str() == Some("CH")));
+        // fp32 compilations report their precision and carry no quant block.
+        assert_eq!(parsed.get("precision").unwrap().as_str(), Some("fp32"));
+        assert!(parsed.get("quant").is_none());
+    }
+
+    #[test]
+    fn quantized_accelerator_json_carries_accuracy_delta() {
+        use crate::quant::QuantConfig;
+        let acc = Compiler::default()
+            .graph(&models::lenet5())
+            .with_quantization(QuantConfig::int8())
+            .run()
+            .unwrap();
+        let parsed = json::parse(&acc.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("precision").unwrap().as_str(), Some("int8"));
+        let q = parsed.get("quant").unwrap();
+        assert_eq!(q.get("scheme").unwrap().as_str(), Some("per-channel"));
+        let delta = q.get("accuracy_delta_pp").unwrap().as_f64().unwrap();
+        assert!((0.0..25.0).contains(&delta), "{delta}");
+        assert!(q.get("quantize_nodes").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn precision_front_json_carries_pareto() {
+        use crate::texpr::Precision;
+        let compiler = Compiler::default();
+        let front = crate::dse::explore_precisions(
+            &compiler,
+            &models::lenet5(),
+            Mode::Pipelined,
+            4,
+            &[Precision::F32, Precision::Int8],
+        )
+        .unwrap();
+        let parsed = json::parse(&front.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("network").unwrap().as_str(), Some("lenet5"));
+        let pareto = parsed.get("pareto").unwrap().as_arr().unwrap();
+        assert!(!pareto.is_empty());
+        for p in pareto {
+            assert!(p.get("accuracy_delta_pp").unwrap().as_f64().is_some());
+            assert!(p.get("fps").unwrap().as_f64().unwrap() > 0.0);
+        }
+        assert!(parsed.get("baseline_f32").is_some());
     }
 }

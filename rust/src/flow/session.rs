@@ -40,8 +40,10 @@ use crate::aoc::{self, FmaxModel, SynthesisReport};
 use crate::codegen::KernelProgram;
 use crate::device::Target;
 use crate::graph::Graph;
+use crate::quant::{self, QuantConfig, QuantReport};
 use crate::sim::folded::LayerWork;
 use crate::sim::{folded, pipelined, HostModel, PerformanceReport};
+use crate::texpr::Precision;
 
 use super::patterns::{self, default_factors, FactorPlan, OptConfig};
 use super::{legality, Accelerator, Mode, OptLevel};
@@ -124,12 +126,7 @@ struct SynthMemo {
 /// the synthesis model and is part of `Debug`).
 pub fn program_fingerprint(prog: &KernelProgram) -> u64 {
     let repr = format!("{}|{:?}|{:?}|{}", prog.name, prog.kernels, prog.channels, prog.queues);
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in repr.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
+    crate::util::fnv64(repr.as_bytes())
 }
 
 /// Mode selection for a session: pin a mode or let the flow decide from
@@ -215,6 +212,7 @@ impl Compiler {
             mode: ModeChoice::Auto,
             cfg: OptConfig::optimized(),
             plan: None,
+            quant: None,
             lowered: None,
             design: None,
         }
@@ -278,12 +276,7 @@ impl Compiler {
     /// never recall a report synthesized for a different context.
     fn memo_key(&self, prog: &KernelProgram) -> u64 {
         let ctx = format!("{:?}|{:?}", self.target.device, self.fmax_model);
-        let mut h = program_fingerprint(prog);
-        for b in ctx.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        h
+        crate::util::fnv64_with(program_fingerprint(prog), ctx.as_bytes())
     }
 
     /// Memoized synthesis: returns the report and whether it was a hit.
@@ -337,6 +330,7 @@ pub struct CompileSession {
     mode: ModeChoice,
     cfg: OptConfig,
     plan: Option<FactorPlan>,
+    quant: Option<QuantConfig>,
     lowered: Option<LoweredProgram>,
     design: Option<SynthesizedDesign>,
 }
@@ -370,6 +364,41 @@ impl CompileSession {
         self
     }
 
+    /// Compile with a quantized datapath: the graph is BN-folded,
+    /// calibrated and rewritten with quantize/dequantize boundaries
+    /// ([`crate::quant::prepare`]), every kernel is scheduled at the
+    /// requested precision, and the resulting
+    /// [`Accelerator`] carries the [`QuantReport`] (modeled top-1 loss,
+    /// boundary statistics).
+    ///
+    /// ```
+    /// use tvm_fpga_flow::flow::{Compiler, ModeChoice};
+    /// use tvm_fpga_flow::graph::models;
+    /// use tvm_fpga_flow::quant::QuantConfig;
+    /// use tvm_fpga_flow::texpr::Precision;
+    ///
+    /// let compiler = Compiler::for_target("stratix10sx").unwrap();
+    /// let f32_acc = compiler.graph(&models::lenet5()).run().unwrap();
+    /// let int8_acc = compiler
+    ///     .graph(&models::lenet5())
+    ///     .mode(ModeChoice::Auto)
+    ///     .with_quantization(QuantConfig::int8())
+    ///     .run()
+    ///     .unwrap();
+    /// assert_eq!(int8_acc.precision, Precision::Int8);
+    /// let q = int8_acc.quant.as_ref().unwrap();
+    /// assert!(q.accuracy.delta_pp < 25.0);
+    /// // The narrower datapath never costs more modeled DSPs.
+    /// let quantized_dsp = int8_acc.synthesis.resources.utilization.dsp_frac;
+    /// let baseline_dsp = f32_acc.synthesis.resources.utilization.dsp_frac;
+    /// assert!(quantized_dsp <= baseline_dsp);
+    /// ```
+    pub fn with_quantization(mut self, quant: QuantConfig) -> Self {
+        self.quant = Some(quant);
+        self.invalidate();
+        self
+    }
+
     fn invalidate(&mut self) {
         self.lowered = None;
         self.design = None;
@@ -379,8 +408,23 @@ impl CompileSession {
     /// target's clock. Idempotent; the artifact is cached on the session.
     pub fn lower(&mut self) -> crate::Result<&LoweredProgram> {
         if self.lowered.is_none() {
-            let graph = self.graph.as_ref().ok_or(CompileError::MissingGraph)?;
-            graph.validate().map_err(CompileError::InvalidGraph)?;
+            let src = self.graph.as_ref().ok_or(CompileError::MissingGraph)?;
+            src.validate().map_err(CompileError::InvalidGraph)?;
+            // Quantization front-end (when requested): BN-fold, calibrate,
+            // rewrite quantize/dequantize boundaries, and schedule every
+            // kernel at the requested precision.
+            let (graph, quant_report, cfg) = match &self.quant {
+                Some(q) if q.precision != Precision::F32 => {
+                    let prep = quant::prepare(src, q)?;
+                    (
+                        std::borrow::Cow::Owned(prep.graph),
+                        Some(prep.report),
+                        self.cfg.with_precision(q.precision),
+                    )
+                }
+                _ => (std::borrow::Cow::Borrowed(src), None, self.cfg),
+            };
+            let graph: &Graph = &graph;
             let target = &self.compiler.target;
             let plan = self.plan.clone().unwrap_or_else(|| default_factors(graph));
             // Resolve Auto with the session's own config + plan, reusing
@@ -390,8 +434,7 @@ impl CompileSession {
                 ModeChoice::Pipelined => (Mode::Pipelined, None),
                 ModeChoice::Folded => (Mode::Folded, None),
                 ModeChoice::Auto => {
-                    match super::auto_pipelined_candidate(graph, &target.device, &self.cfg, &plan)
-                    {
+                    match super::auto_pipelined_candidate(graph, &target.device, &cfg, &plan) {
                         Some(built) => (Mode::Pipelined, Some(built)),
                         None => (Mode::Folded, None),
                     }
@@ -400,8 +443,8 @@ impl CompileSession {
             let (program, work) = match prebuilt {
                 Some(built) => built,
                 None => match mode {
-                    Mode::Pipelined => patterns::build_pipelined(graph, &self.cfg, &plan),
-                    Mode::Folded => patterns::build_folded(graph, &self.cfg, &plan),
+                    Mode::Pipelined => patterns::build_pipelined(graph, &cfg, &plan),
+                    Mode::Folded => patterns::build_folded(graph, &cfg, &plan),
                 },
             };
 
@@ -425,6 +468,8 @@ impl CompileSession {
                 work: Arc::new(work),
                 applied,
                 flops_per_frame: graph.total_flops(),
+                precision: cfg.precision,
+                quant: quant_report,
             });
         }
         Ok(self.lowered.as_ref().expect("just populated"))
@@ -483,6 +528,10 @@ pub struct LoweredProgram {
     pub applied: Vec<crate::schedule::OptKind>,
     /// FLOPs per frame (for GFLOPS accounting).
     pub flops_per_frame: u64,
+    /// Datapath precision the kernels were scheduled at.
+    pub precision: Precision,
+    /// Quantization report (present when the session quantized).
+    pub quant: Option<QuantReport>,
 }
 
 impl LoweredProgram {
@@ -551,6 +600,8 @@ impl SynthesizedDesign {
             work: l.work.as_ref().clone(),
             applied: l.applied.clone(),
             flops_per_frame: l.flops_per_frame,
+            precision: l.precision,
+            quant: l.quant.clone(),
         })
     }
 }

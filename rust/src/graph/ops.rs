@@ -69,6 +69,12 @@ pub enum Op {
     Flatten,
     /// Softmax over the class dimension.
     Softmax,
+    /// Quantize onto the symmetric fixed-point grid of the given precision
+    /// (inserted by `crate::quant::rewrite`; elementwise scale + round).
+    Quantize { precision: crate::texpr::Precision },
+    /// Map grid codes of the given precision back to f32 (elementwise
+    /// scale).
+    Dequantize { precision: crate::texpr::Precision },
 }
 
 impl Op {
@@ -88,6 +94,8 @@ impl Op {
             Op::Transform => "transform",
             Op::Flatten => "flatten",
             Op::Softmax => "softmax",
+            Op::Quantize { .. } => "quantize",
+            Op::Dequantize { .. } => "dequantize",
         }
     }
 

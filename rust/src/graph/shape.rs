@@ -103,6 +103,8 @@ pub fn infer_shape(op: &Op, inputs: &[&Shape]) -> Result<Shape, String> {
         }
         Op::Flatten => Ok(Shape::Flat(first.elems())),
         Op::Softmax => Ok(first.clone()),
+        // Grid boundaries change the element type, not the shape.
+        Op::Quantize { .. } | Op::Dequantize { .. } => Ok(first.clone()),
     }
 }
 
@@ -162,6 +164,8 @@ pub fn node_cost(op: &Op, input: &Shape, output: &Shape) -> NodeCost {
         }
         Op::Add => (0, out_elems, 0),
         Op::Softmax => (0, 5 * out_elems, 0),
+        // One scale (+ round) per element at each grid boundary.
+        Op::Quantize { .. } | Op::Dequantize { .. } => (0, out_elems, 0),
         Op::Input | Op::Transform | Op::Flatten => (0, 0, 0),
     };
     if matches!(op, Op::Input) {

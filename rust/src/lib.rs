@@ -28,8 +28,16 @@
 //!   pattern-based optimization application (Table I) + legality rules
 //!   (§IV-J) + the staged [`flow::Compiler`]/[`flow::CompileSession`] API
 //!   with memoized synthesis.
-//! * [`dse`] — design-space explorer over unroll/tile factors (the paper's
-//!   future-work §IV-J automated); reports its synthesis-cache hit rate.
+//! * [`quant`] — quantization-aware compilation (§VII future-work #1):
+//!   calibration (min-max / percentile, empirical or analytic), symmetric
+//!   per-tensor/per-channel fixed-point schemes, quantize/dequantize graph
+//!   rewriting, value-accurate quantized execution and top-1 accuracy
+//!   accounting. Drives `CompileSession::with_quantization` and the DSE's
+//!   precision axis.
+//! * [`dse`] — design-space explorer over unroll/tile factors *and
+//!   datapath precision* (the paper's future-work §IV-J automated);
+//!   reports its synthesis-cache hit rate and an
+//!   accuracy-vs-FPS-vs-resources Pareto front.
 //! * [`runtime`] — PJRT runtime: loads `artifacts/*.hlo.txt` AOT-lowered
 //!   from JAX (L2) with Pallas kernels (L1) and executes inference on CPU.
 //!   Python never runs on this path. In builds without the PJRT bindings
@@ -118,6 +126,7 @@ pub mod dse;
 pub mod flow;
 pub mod graph;
 pub mod metrics;
+pub mod quant;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;

@@ -2,17 +2,22 @@
 //!
 //! ```text
 //! fpga-flow compile  --net lenet5 [--target stratix10sx|arria10gx|agilex7]
-//!                    [--mode pipelined|folded] [--base] [--explain] [--json]
+//!                    [--mode pipelined|folded] [--base] [--precision int8|fp16]
+//!                    [--explain] [--json]
 //! fpga-flow targets                     # list registered device targets
 //! fpga-flow report                      # Tables II/III/IV vs the paper
-//! fpga-flow codegen  --net lenet5       # dump pseudo-OpenCL
+//! fpga-flow codegen  --net lenet5 [--precision int8]  # dump pseudo-OpenCL
 //! fpga-flow simulate --net resnet34 [--base]
-//! fpga-flow dse      --net mobilenet_v1 [--budget 16]   # reports cache hit rate
+//! fpga-flow dse      --net mobilenet_v1 [--budget 16] [--precision int8|all]
+//!                    [--json]           # Pareto front + cache hit rate
+//! fpga-flow quantize --net lenet5 [--precision int8] [--scheme per-channel]
+//!                    [--calibrate minmax|p99.9] [--calib-frames 16]
 //! fpga-flow infer    --net lenet5 --frames 100 [--impl pallas|ref]
 //! fpga-flow serve    --net lenet5 --requests 256 [--replicas 2]
 //!                    [--max-batch 8] [--max-delay-us 2000]
 //!                    [--queue-capacity 1024] [--engine sim|pjrt]
-//!                    [--targets stratix10sx,arria10gx] [--time-scale 1]
+//!                    [--targets stratix10sx,arria10gx] [--precision int8]
+//!                    [--time-scale 1]
 //! fpga-flow hybrid   --net mobilenet_v1      # mixed pipelined/folded (§V-F)
 //! fpga-flow multi    --net resnet34 --devices 2  # multi-FPGA (§VII)
 //! fpga-flow passes   --net resnet34          # graph-level passes (bn-fold, DCE)
@@ -21,15 +26,19 @@
 //!
 //! Every compiling command accepts `--target <name>` (default stratix10sx);
 //! the target supplies the device envelope, the §IV-J legality clock and
-//! the f_max base the AOC model degrades from.
+//! the f_max base the AOC model degrades from. `--precision` routes the
+//! compilation through the `quant` subsystem (calibration, Q/DQ rewrite,
+//! accuracy accounting).
 
 use tvm_fpga_flow::coordinator::{EngineSpec, InferenceServer, ServerConfig, ServerError, SimEngine};
 use tvm_fpga_flow::device::Target;
 use tvm_fpga_flow::dse;
-use tvm_fpga_flow::flow::{Compiler, Mode, ModeChoice, OptLevel};
+use tvm_fpga_flow::flow::{Compiler, Mode, ModeChoice, OptConfig, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::{self, paper};
+use tvm_fpga_flow::quant::{Calibrator, QScheme, QuantConfig};
 use tvm_fpga_flow::runtime::{Impl, Manifest, Runtime};
+use tvm_fpga_flow::texpr::Precision;
 use tvm_fpga_flow::util::bench::Table;
 use tvm_fpga_flow::util::cli::Args;
 
@@ -43,6 +52,7 @@ fn main() {
         "codegen" => cmd_codegen(&args),
         "simulate" => cmd_simulate(&args),
         "dse" => cmd_dse(&args),
+        "quantize" => cmd_quantize(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
         "hybrid" => cmd_hybrid(&args),
@@ -64,16 +74,23 @@ fn print_help() {
     println!(
         "fpga-flow — CNN-accelerator compilation flow (paper reproduction)\n\
          \n\
-         compile   --net <n> [--target <t>] [--mode pipelined|folded] [--base] [--explain] [--json]\n\
+         compile   --net <n> [--target <t>] [--mode pipelined|folded] [--base]\n\
+                   [--precision int8|fp16] [--explain] [--json]\n\
          targets   list registered device targets (legality clock, roof, DSPs)\n\
          report    Tables II/III/IV, ours vs the paper\n\
-         codegen   --net <n> [--target <t>]        dump pseudo-OpenCL\n\
+         codegen   --net <n> [--target <t>] [--precision int8]  dump pseudo-OpenCL\n\
          simulate  --net <n> [--target <t>] [--base]  per-layer timing\n\
-         dse       --net <n> [--budget 16]         explore tiles; prints cache hit rate\n\
+         dse       --net <n> [--budget 16] [--precision int8|fp16|all] [--json]\n\
+                   explore tiles (and precisions); prints the Pareto front\n\
+                   and the synthesis-cache hit rate\n\
+         quantize  --net <n> [--precision int8|fp16] [--scheme per-tensor|per-channel]\n\
+                   [--calibrate minmax|p99.9] [--calib-frames 16]\n\
+                   calibration report, accuracy delta, resources vs fp32\n\
          infer     --net <n> --frames 100 [--impl pallas|ref]   (needs artifacts)\n\
          serve     --net <n> --requests 256 [--replicas 2] [--max-batch 8]\n\
                    [--max-delay-us 2000] [--queue-capacity 1024]\n\
-                   [--engine sim|pjrt] [--targets t1,t2,...] [--time-scale 1]\n\
+                   [--engine sim|pjrt] [--targets t1,t2,...] [--precision int8]\n\
+                   [--time-scale 1]\n\
                    sim (default): replicas are modeled accelerators compiled for\n\
                    --targets (cycled to --replicas), weighted by modeled FPS —\n\
                    works without artifacts. pjrt: --replicas identical runtime\n\
@@ -134,6 +151,56 @@ fn resolve_mode(choice: ModeChoice, g: &tvm_fpga_flow::graph::Graph, compiler: &
     }
 }
 
+/// Parse `--precision` (None when absent; error on an unknown spelling).
+fn precision_arg(args: &Args) -> tvm_fpga_flow::Result<Option<Precision>> {
+    match args.opt("precision") {
+        None => Ok(None),
+        Some(s) => Precision::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("unknown --precision {s} (f32|fp16|int8)")),
+    }
+}
+
+/// Quantization recipe from `--scheme` / `--calibrate` / `--calib-frames`.
+fn quant_cfg_args(args: &Args, p: Precision) -> tvm_fpga_flow::Result<QuantConfig> {
+    let mut cfg = QuantConfig::for_precision(p);
+    if let Some(s) = args.opt("scheme") {
+        cfg.scheme = QScheme::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --scheme {s} (per-tensor|per-channel)"))?;
+    }
+    if let Some(c) = args.opt("calibrate") {
+        cfg.calibrator = Calibrator::parse(c)
+            .ok_or_else(|| anyhow::anyhow!("unknown --calibrate {c} (minmax|p<pct>, e.g. p99.9)"))?;
+    }
+    if let Some(frames) = args.opt_parse::<usize>("calib-frames") {
+        cfg = cfg.with_data(frames);
+    }
+    Ok(cfg)
+}
+
+/// Compile honoring `--base` and `--precision` (quantized compilations go
+/// through the session's quantization front-end).
+fn compile_arg(
+    compiler: &Compiler,
+    g: &tvm_fpga_flow::graph::Graph,
+    args: &Args,
+) -> tvm_fpga_flow::Result<tvm_fpga_flow::flow::Accelerator> {
+    let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
+    match precision_arg(args)? {
+        Some(p) if p != Precision::F32 => {
+            let cfg =
+                if level == OptLevel::Base { OptConfig::base() } else { OptConfig::optimized() };
+            compiler
+                .graph(g)
+                .mode(mode_arg(args))
+                .opts(cfg)
+                .with_quantization(quant_cfg_args(args, p)?)
+                .run()
+        }
+        _ => compiler.compile(g, mode_arg(args), level),
+    }
+}
+
 fn cmd_compile(args: &Args) -> tvm_fpga_flow::Result<()> {
     let g = net_arg(args)?;
     let compiler = compiler_arg(args)?;
@@ -152,19 +219,32 @@ fn cmd_compile(args: &Args) -> tvm_fpga_flow::Result<()> {
             if level == OptLevel::Base { "TVM default" } else { "Table-I optimizations" },
         );
     }
-    let acc = compiler.compile(&g, choice, level)?;
+    let acc = compile_arg(&compiler, &g, args)?;
     if args.has_flag("json") {
         println!("{}", acc.to_json().to_string());
         return Ok(());
     }
     let (logic, bram, dsp, fmax) = acc.synthesis.table2_row();
-    println!("network      : {} ({} mode)", acc.network, acc.mode.name());
+    println!("network      : {} ({} mode, {})", acc.network, acc.mode.name(), acc.precision);
     println!("target       : {} [{}]", compiler.target.name, compiler.target.device.name);
     println!("kernels      : {} (+{} channels, {} queues)", acc.program.kernels.len(), acc.program.channels.len(), acc.program.queues);
     println!("applied opts : {}", acc.applied.iter().map(|o| o.abbrev()).collect::<Vec<_>>().join(" "));
     println!("resources    : logic {logic:.1}%  bram {bram:.1}%  dsp {dsp:.1}%  fmax {fmax:.0} MHz");
     println!("performance  : {:.2} FPS ({:.3} ms/frame, bottleneck: {})", acc.performance.fps, acc.performance.frame_time_s * 1e3, acc.performance.bottleneck);
     println!("GFLOPS       : {:.2}", acc.gflops());
+    if let Some(q) = &acc.quant {
+        println!(
+            "quantization : {} {} ({} calibration, {} q / {} dq boundaries, {} folded), top-1 \u{0394} {:.2}pp{}",
+            q.precision,
+            q.scheme.name(),
+            q.calibrator,
+            q.stats.quantize_nodes,
+            q.stats.dequantize_nodes,
+            q.stats.folded_pairs,
+            q.accuracy.delta_pp,
+            if q.accuracy.estimated { " (modeled)" } else { " (measured)" }
+        );
+    }
     Ok(())
 }
 
@@ -212,9 +292,8 @@ fn cmd_report() -> tvm_fpga_flow::Result<()> {
 fn cmd_codegen(args: &Args) -> tvm_fpga_flow::Result<()> {
     let g = net_arg(args)?;
     let compiler = compiler_arg(args)?;
-    let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
-    let acc = compiler.compile(&g, mode_arg(args), level)?;
-    println!("// pseudo-OpenCL for {} ({} mode)\n", g.name, acc.mode.name());
+    let acc = compile_arg(&compiler, &g, args)?;
+    println!("// pseudo-OpenCL for {} ({} mode, {})\n", g.name, acc.mode.name(), acc.precision);
     print!("{}", acc.program.to_pseudo_opencl());
     Ok(())
 }
@@ -247,26 +326,153 @@ fn cmd_dse(args: &Args) -> tvm_fpga_flow::Result<()> {
     let compiler = compiler_arg(args)?;
     let budget: usize = args.opt_parse("budget").unwrap_or(16);
     let mode = resolve_mode(mode_arg(args), &g, &compiler);
-    let r = match mode {
-        Mode::Folded => dse::explore_folded(&compiler, &g, budget),
-        Mode::Pipelined => dse::explore_pipelined(&compiler, &g),
+    let precisions: Vec<Precision> = match args.opt("precision") {
+        None => vec![Precision::F32],
+        Some("all") => Precision::all().to_vec(),
+        Some(s) => {
+            let p = Precision::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown --precision {s} (f32|fp16|int8|all)"))?;
+            if p == Precision::F32 {
+                vec![Precision::F32]
+            } else {
+                vec![Precision::F32, p]
+            }
+        }
     };
-    println!("evaluated {} design points ({} rejected)", r.evaluated, r.log.iter().filter(|p| p.rejected.is_some()).count());
-    println!(
-        "synthesis cache: {} hits / {} misses ({:.0}% hit rate)",
-        r.synth_cache.hits,
-        r.synth_cache.misses,
-        r.synth_cache_hit_rate() * 100.0
-    );
-    if let Some(best) = &r.best {
+    let front = dse::explore_precisions(&compiler, &g, mode, budget, &precisions)?;
+    if args.has_flag("json") {
+        println!("{}", front.to_json().to_string());
+        return Ok(());
+    }
+    for (p, r) in &front.results {
         println!(
-            "best: {:.2} FPS @ {:.0} MHz  (dsp {:.1}%, logic {:.1}%, bram {:.1}%)",
-            best.fps, best.fmax_mhz, best.dsp_frac * 100.0, best.logic_frac * 100.0, best.bram_frac * 100.0
+            "[{p}] evaluated {} design points ({} rejected), synthesis cache {} hits / {} misses ({:.0}%)",
+            r.evaluated,
+            r.log.iter().filter(|pt| pt.rejected.is_some()).count(),
+            r.synth_cache.hits,
+            r.synth_cache.misses,
+            r.synth_cache_hit_rate() * 100.0
         );
-        for (g, (a, b)) in &best.plan.group_tiles {
-            println!("  {g}: tile ({a}, {b})");
+        if let Some(best) = &r.best {
+            println!(
+                "  best: {:.2} FPS @ {:.0} MHz  (dsp {:.1}%, logic {:.1}%, bram {:.1}%)  top-1 \u{0394} {:.2}pp",
+                best.fps,
+                best.fmax_mhz,
+                best.dsp_frac * 100.0,
+                best.logic_frac * 100.0,
+                best.bram_frac * 100.0,
+                best.accuracy_delta_pp
+            );
+            for (grp, (a, b)) in &best.plan.group_tiles {
+                println!("    {grp}: tile ({a}, {b})");
+            }
         }
     }
+    println!("pareto front ({} points: FPS vs resources vs accuracy):", front.pareto.len());
+    for pt in &front.pareto {
+        println!(
+            "  {:<5} {:>10.2} FPS  dsp {:>5.1}%  logic {:>5.1}%  bram {:>5.1}%  top-1 \u{0394} {:.2}pp",
+            pt.precision.name(),
+            pt.fps,
+            pt.dsp_frac * 100.0,
+            pt.logic_frac * 100.0,
+            pt.bram_frac * 100.0,
+            pt.accuracy_delta_pp
+        );
+    }
+    for p in precisions.iter().filter(|&&p| p != Precision::F32) {
+        if front.beats_baseline_on_resources(*p) {
+            println!(
+                "{p}: at least one design strictly beats the fp32 baseline on every modeled \
+                 resource at equal-or-better FPS"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::quant::{self, CalibrationSource};
+
+    let g = net_arg(args)?;
+    let compiler = compiler_arg(args)?;
+    let p = precision_arg(args)?.unwrap_or(Precision::Int8);
+    anyhow::ensure!(p != Precision::F32, "--precision must be fp16 or int8 for quantize");
+    let mut qcfg = quant_cfg_args(args, p)?;
+    // Default to empirical calibration where forwards are cheap (LeNet);
+    // the big networks calibrate analytically unless --calib-frames asks.
+    if matches!(qcfg.source, CalibrationSource::Analytic) && g.name == "lenet5" {
+        qcfg = qcfg.with_data(16);
+    }
+    let prep = quant::prepare(&g, &qcfg)?;
+    let rep = &prep.report;
+    println!(
+        "{}: {} {} calibration ({})",
+        g.name,
+        rep.precision,
+        rep.scheme.name(),
+        if rep.calibration_frames == 0 {
+            "analytic".to_string()
+        } else {
+            format!("{} frames, {}", rep.calibration_frames, rep.calibrator)
+        }
+    );
+
+    // Per-layer calibrated ranges (over the BN-folded graph the table is
+    // keyed by).
+    let (folded, _) = tvm_fpga_flow::graph::passes::standard_pipeline(&g);
+    let mut shown = 0;
+    for n in folded.topo().filter(|n| n.op.is_compute()) {
+        if shown >= 16 {
+            println!("  … ({} more compute layers)", folded.nodes.iter().filter(|n| n.op.is_compute()).count() - shown);
+            break;
+        }
+        let a = prep.table.activation(n.id);
+        let w = prep.table.weight_ranges(n.id);
+        let wmax = w.iter().map(|r| r.max_abs()).fold(0.0, f64::max);
+        println!(
+            "  {:<16} act [{:+.3}, {:+.3}]  |w|max {:.3} ({} ch)",
+            n.name, a.lo, a.hi, wmax, w.len()
+        );
+        shown += 1;
+    }
+    println!(
+        "boundaries   : {} quantize, {} dequantize, {} folded dq/q pairs",
+        rep.stats.quantize_nodes, rep.stats.dequantize_nodes, rep.stats.folded_pairs
+    );
+    println!(
+        "top-1        : {:.1}% agreement vs fp32 (\u{0394} {:.2}pp, {})",
+        rep.accuracy.top1_agreement * 100.0,
+        rep.accuracy.delta_pp,
+        if rep.accuracy.estimated {
+            "modeled".to_string()
+        } else {
+            format!("measured on {} frames", rep.accuracy.frames)
+        }
+    );
+
+    // Modeled cost vs the fp32 compilation of the *same pass-folded*
+    // graph, so the delta is quantization — not BN-fold smuggled into one
+    // column. The quantized design compiles from the already-prepared
+    // graph (no second calibration pass) at the requested precision.
+    let base = compiler.compile(&folded, mode_arg(args), OptLevel::Optimized)?;
+    let qacc = compiler
+        .graph(&prep.graph)
+        .mode(mode_arg(args))
+        .opts(OptConfig::optimized().with_precision(p))
+        .run()?;
+    let (bl, bb, bd, bf) = base.synthesis.table2_row();
+    let (ql, qb, qd, qf) = qacc.synthesis.table2_row();
+    println!("             :      logic     bram      dsp     fmax       fps");
+    println!(
+        "fp32         : {bl:>9.1}% {bb:>7.1}% {bd:>7.1}% {bf:>7.0}M {:>9.2}",
+        base.performance.fps
+    );
+    println!(
+        "{:<12} : {ql:>9.1}% {qb:>7.1}% {qd:>7.1}% {qf:>7.0}M {:>9.2}",
+        rep.precision.name(),
+        qacc.performance.fps
+    );
     Ok(())
 }
 
@@ -429,13 +635,18 @@ fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
             let targets: Vec<&str> = target_csv.split(',').filter(|s| !s.is_empty()).collect();
             anyhow::ensure!(!targets.is_empty(), "--targets must name at least one target");
             let cycled: Vec<&str> = (0..replicas).map(|i| targets[i % targets.len()]).collect();
-            let plan = ReplicaPlan::build(&g, &cycled)?;
+            let qcfg = match precision_arg(args)? {
+                Some(p) if p != Precision::F32 => Some(quant_cfg_args(args, p)?),
+                _ => None,
+            };
+            let plan = ReplicaPlan::build_with(&g, &cycled, qcfg)?;
             println!("replica plan for {name}:");
             for e in &plan.entries {
                 println!(
-                    "  {:<12} {} mode, modeled {:.1} FPS (routing weight)",
+                    "  {:<12} {} mode ({}), modeled {:.1} FPS (routing weight)",
                     e.target.name,
                     e.accelerator.mode.name(),
+                    e.accelerator.precision,
                     e.weight
                 );
             }
@@ -445,7 +656,13 @@ fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
                 .collect()
         }
         // Empty spec list = the legacy homogeneous PJRT fleet.
-        "pjrt" => Vec::new(),
+        "pjrt" => {
+            anyhow::ensure!(
+                precision_arg(args)?.is_none(),
+                "--precision only applies to the sim engine (PJRT runs the fp32 artifacts)"
+            );
+            Vec::new()
+        }
         other => anyhow::bail!("unknown --engine {other} (sim|pjrt)"),
     };
 

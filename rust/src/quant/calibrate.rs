@@ -1,0 +1,416 @@
+//! Calibration: pick per-tensor activation ranges (and per-channel weight
+//! ranges) that the symmetric grids of [`super::scheme`] are scaled from.
+//!
+//! Two calibration paths share one [`CalibrationTable`]:
+//!
+//! * [`calibrate`] — *empirical*: sweep representative frames through the
+//!   reference executor (after the standard `graph::passes` pipeline has
+//!   folded BN) and record what each node actually produces. Min-max keeps
+//!   the extremes; percentile clips outliers against an absolute-value
+//!   histogram, trading saturation error for grid resolution — the
+//!   standard post-training-quantization recipe.
+//! * [`calibrate_analytic`] — *propagated*: moment propagation through the
+//!   graph (the synthetic weights have known statistics by construction),
+//!   O(nodes) with no tensor materialization. This is what the DSE uses so
+//!   a precision sweep over ResNet-34 costs microseconds, not forwards.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Activation, Graph, NodeId, Op};
+
+use super::exec::Executor;
+use super::scheme::Range;
+
+/// Range-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Calibrator {
+    /// Exact observed extremes.
+    MinMax,
+    /// Clip to the given percentile of |activation| (e.g. 99.9).
+    Percentile(f64),
+}
+
+impl Calibrator {
+    pub fn name(&self) -> String {
+        match self {
+            Calibrator::MinMax => "min-max".into(),
+            Calibrator::Percentile(p) => format!("p{p}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Calibrator> {
+        match s {
+            "minmax" | "min-max" => Some(Calibrator::MinMax),
+            _ => s
+                .strip_prefix('p')
+                .and_then(|v| v.parse::<f64>().ok())
+                .filter(|p| (50.0..=100.0).contains(p))
+                .map(Calibrator::Percentile),
+        }
+    }
+}
+
+/// Calibrated ranges for one network: per-node activation ranges (and a
+/// crude σ estimate for the analytic accuracy model), per-node per-channel
+/// weight ranges.
+#[derive(Debug, Clone)]
+pub struct CalibrationTable {
+    pub network: String,
+    pub method: Calibrator,
+    /// Frames observed (0 = analytic propagation).
+    pub frames: usize,
+    activations: BTreeMap<NodeId, Range>,
+    act_std: BTreeMap<NodeId, f64>,
+    weights: BTreeMap<NodeId, Vec<Range>>,
+}
+
+impl CalibrationTable {
+    /// Calibrated activation range of a node (a conservative unit range if
+    /// the node was never observed).
+    pub fn activation(&self, node: NodeId) -> Range {
+        self.activations.get(&node).copied().unwrap_or(Range::new(-1.0, 1.0))
+    }
+
+    /// Estimated standard deviation of a node's activations.
+    pub fn activation_std(&self, node: NodeId) -> f64 {
+        self.act_std.get(&node).copied().unwrap_or(0.25).max(1e-9)
+    }
+
+    /// Per-output-channel weight ranges of a node (empty if weightless).
+    pub fn weight_ranges(&self, node: NodeId) -> Vec<Range> {
+        self.weights.get(&node).cloned().unwrap_or_default()
+    }
+
+    /// Nodes with calibrated weights — the quantizable compute set.
+    pub fn quantized_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.weights.keys().copied()
+    }
+}
+
+/// Absolute-value histogram with growable range (rebins by pairwise merge
+/// when a sample exceeds the current top).
+#[derive(Debug, Clone)]
+struct AbsHist {
+    bins: Vec<u64>,
+    top: f64,
+    count: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+}
+
+const HIST_BINS: usize = 256;
+
+impl AbsHist {
+    fn new() -> AbsHist {
+        AbsHist {
+            bins: vec![0; HIST_BINS],
+            top: 1e-6,
+            count: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.sumsq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        let a = v.abs();
+        while a > self.top {
+            // Double the range: merge bins pairwise, freeing the top half.
+            for i in 0..HIST_BINS / 2 {
+                self.bins[i] = self.bins[2 * i] + self.bins[2 * i + 1];
+            }
+            for b in &mut self.bins[HIST_BINS / 2..] {
+                *b = 0;
+            }
+            self.top *= 2.0;
+        }
+        let idx = ((a / self.top) * HIST_BINS as f64) as usize;
+        self.bins[idx.min(HIST_BINS - 1)] += 1;
+    }
+
+    /// Smallest |v| threshold covering at least `pct`% of samples.
+    fn percentile_abs(&self, pct: f64) -> f64 {
+        let need = (self.count as f64 * pct / 100.0).ceil() as u64;
+        let mut acc = 0;
+        for (i, &b) in self.bins.iter().enumerate() {
+            acc += b;
+            if acc >= need {
+                return (i + 1) as f64 / HIST_BINS as f64 * self.top;
+            }
+        }
+        self.top
+    }
+
+    fn std(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mean = self.sum / self.count as f64;
+        (self.sumsq / self.count as f64 - mean * mean).max(0.0).sqrt()
+    }
+
+    fn range(&self, method: Calibrator) -> Range {
+        if self.count == 0 {
+            return Range::new(-1.0, 1.0);
+        }
+        match method {
+            Calibrator::MinMax => Range::new(self.min, self.max),
+            Calibrator::Percentile(p) => {
+                let t = self.percentile_abs(p);
+                Range::new(self.min.max(-t), self.max.min(t))
+            }
+        }
+    }
+}
+
+/// Empirical calibration: run `frames` frames of `batch` through the f32
+/// reference executor, collecting per-node activation statistics.
+pub fn calibrate(
+    graph: &Graph,
+    batch: &crate::data::Batch,
+    frames: usize,
+    method: Calibrator,
+) -> CalibrationTable {
+    let exec = Executor::new(graph);
+    let mut hists: Vec<AbsHist> = (0..graph.nodes.len()).map(|_| AbsHist::new()).collect();
+    let frames = frames.min(batch.frames()).max(1);
+    for i in 0..frames {
+        exec.forward(batch.frame(i), |id, act| {
+            for &v in act {
+                hists[id].observe(v as f64);
+            }
+        });
+    }
+    let mut table = CalibrationTable {
+        network: graph.name.clone(),
+        method,
+        frames,
+        activations: BTreeMap::new(),
+        act_std: BTreeMap::new(),
+        weights: BTreeMap::new(),
+    };
+    for n in graph.topo() {
+        table.activations.insert(n.id, hists[n.id].range(method));
+        table.act_std.insert(n.id, hists[n.id].std());
+        if n.op.is_compute() {
+            table.weights.insert(n.id, exec.weight_channel_ranges(n.id));
+        }
+    }
+    table
+}
+
+/// Analytic calibration: propagate (σ, max|x|) estimates through the graph
+/// using the known statistics of the synthetic He-initialized weights —
+/// no tensors are materialized, so this is cheap enough to run inside a
+/// DSE sweep for any network.
+pub fn calibrate_analytic(graph: &Graph, method: Calibrator) -> CalibrationTable {
+    let mut table = CalibrationTable {
+        network: graph.name.clone(),
+        method,
+        frames: 0,
+        activations: BTreeMap::new(),
+        act_std: BTreeMap::new(),
+        weights: BTreeMap::new(),
+    };
+    // Percentile clipping under a roughly-Gaussian activation law: clip at
+    // the two-sided p-quantile (√(2·ln(1/(1−p))) σ) instead of the 4σ tail.
+    let clip_sigmas = match method {
+        Calibrator::MinMax => 4.0,
+        Calibrator::Percentile(p) => {
+            let tail = (1.0 - p / 100.0).max(1e-9);
+            (-2.0 * tail.ln()).sqrt().min(4.0)
+        }
+    };
+
+    // (σ, max|x|) per node.
+    let mut stats: Vec<(f64, f64)> = vec![(0.0, 0.0); graph.nodes.len()];
+    for n in graph.topo() {
+        let inp = |i: usize| stats[n.inputs[i]];
+        let (std, absmax) = match &n.op {
+            // The synthetic datasets are bounded ([0, 1.1] strokes or
+            // biased unit normals) — a conservative shared envelope.
+            Op::Input => (0.6, 2.5),
+            Op::Conv2d { kernel, activation, .. } => {
+                let cin = graph.nodes[n.inputs[0]].shape.chw().map(|c| c.0).unwrap_or(1);
+                compute_stats(inp(0).0, cin * kernel * kernel, *activation, clip_sigmas)
+            }
+            Op::DepthwiseConv2d { kernel, activation, .. } => {
+                compute_stats(inp(0).0, kernel * kernel, *activation, clip_sigmas)
+            }
+            Op::Dense { activation, .. } => {
+                let cin = graph.nodes[n.inputs[0]].shape.elems();
+                compute_stats(inp(0).0, cin, *activation, clip_sigmas)
+            }
+            Op::BatchNorm => inp(0),
+            Op::Activate(a) => {
+                let (s, m) = inp(0);
+                apply_activation_stats(s, m, *a, clip_sigmas)
+            }
+            Op::MaxPool { .. } => {
+                let (s, m) = inp(0);
+                (s, m) // max keeps the envelope
+            }
+            Op::AvgPool { kernel, .. } => {
+                let (s, m) = inp(0);
+                (s / *kernel as f64, m)
+            }
+            Op::GlobalAvgPool => {
+                // Averaging N values shrinks the fluctuation by √N but the
+                // (post-ReLU) mean survives intact — the output envelope is
+                // mean-dominated, not max-dominated.
+                let (s, m) = inp(0);
+                let (_, h, w) = graph.nodes[n.inputs[0]].shape.chw().unwrap_or((1, 1, 1));
+                let s_new = s / ((h * w) as f64).sqrt();
+                (s_new, (0.5 * s + clip_sigmas * s_new).min(m))
+            }
+            Op::Add => {
+                let (s0, m0) = inp(0);
+                let (s1, m1) = inp(1);
+                ((s0 * s0 + s1 * s1).sqrt(), m0 + m1)
+            }
+            Op::Softmax => (0.2, 1.0),
+            Op::Transform | Op::Flatten | Op::Quantize { .. } | Op::Dequantize { .. } => inp(0),
+        };
+        stats[n.id] = (std, absmax);
+        table.activations.insert(n.id, Range::new(-absmax, absmax));
+        table.act_std.insert(n.id, std);
+        if n.op.is_compute() {
+            // He init: σ_w = √(2/fan_in); per-channel extremes ≈ 3.5 σ_w.
+            let (fan_in, oc) = match &n.op {
+                Op::Conv2d { out_channels, kernel, .. } => {
+                    let cin = graph.nodes[n.inputs[0]].shape.chw().map(|c| c.0).unwrap_or(1);
+                    (cin * kernel * kernel, *out_channels)
+                }
+                Op::DepthwiseConv2d { kernel, .. } => {
+                    (kernel * kernel, n.shape.chw().map(|c| c.0).unwrap_or(1))
+                }
+                Op::Dense { out_features, .. } => {
+                    (graph.nodes[n.inputs[0]].shape.elems(), *out_features)
+                }
+                _ => unreachable!("is_compute covers conv/dw/dense"),
+            };
+            let w_absmax = 3.5 * (2.0 / fan_in.max(1) as f64).sqrt();
+            table.weights.insert(n.id, vec![Range::new(-w_absmax, w_absmax); oc.max(1)]);
+        }
+    }
+    table
+}
+
+/// Post-MAC statistics: He-initialized sums double the input variance
+/// (σ_out = σ_in·σ_w·√fan_in = σ_in·√2), then the fused activation shapes
+/// the law.
+fn compute_stats(
+    std_in: f64,
+    _fan_in: usize,
+    act: Activation,
+    clip_sigmas: f64,
+) -> (f64, f64) {
+    let std = (std_in * std::f64::consts::SQRT_2).max(1e-6);
+    apply_activation_stats(std, clip_sigmas * std, act, clip_sigmas)
+}
+
+fn apply_activation_stats(std: f64, absmax: f64, act: Activation, clip_sigmas: f64) -> (f64, f64) {
+    match act {
+        Activation::None => (std, absmax),
+        // Half-Gaussian: σ shrinks to √(1−1/π)·σ ≈ 0.58 σ.
+        Activation::Relu => (0.58 * std, clip_sigmas * 0.58 * std.max(1e-9) * 1.7),
+        Activation::Relu6 => {
+            let s = 0.58 * std;
+            (s.min(2.0), (clip_sigmas * s * 1.7).min(6.0))
+        }
+        Activation::Tanh => (std.min(0.63), absmax.min(1.0)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn empirical_ranges_cover_observations() {
+        let g = models::lenet5();
+        let data = crate::data::mnist_like(4, 32, 5);
+        let t = calibrate(&g, &data, 4, Calibrator::MinMax);
+        // Input range must cover the generator's [0, 1.1] envelope.
+        let r = t.activation(g.input);
+        assert!(r.lo >= 0.0 && r.hi > 0.8 && r.hi <= 1.1, "{r:?}");
+        // Every compute node got per-channel weight ranges.
+        for n in g.nodes.iter().filter(|n| n.op.is_compute()) {
+            assert!(!t.weight_ranges(n.id).is_empty(), "{}", n.name);
+        }
+        assert_eq!(t.frames, 4);
+    }
+
+    #[test]
+    fn percentile_clips_inside_minmax() {
+        let g = models::lenet5();
+        let data = crate::data::mnist_like(4, 32, 5);
+        let mm = calibrate(&g, &data, 4, Calibrator::MinMax);
+        let pc = calibrate(&g, &data, 4, Calibrator::Percentile(99.0));
+        let mut clipped = 0;
+        for n in g.topo() {
+            let a = mm.activation(n.id);
+            let b = pc.activation(n.id);
+            assert!(b.max_abs() <= a.max_abs() + 1e-9, "{}: {b:?} vs {a:?}", n.name);
+            if b.max_abs() < a.max_abs() * 0.999 {
+                clipped += 1;
+            }
+        }
+        assert!(clipped > 0, "p99 never clipped anything");
+    }
+
+    #[test]
+    fn analytic_tables_exist_for_all_networks_instantly() {
+        for g in models::all() {
+            let t = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+            assert_eq!(t.frames, 0);
+            for n in g.topo() {
+                assert!(t.activation(n.id).max_abs() > 0.0, "{}", n.name);
+                assert!(t.activation_std(n.id) > 0.0);
+            }
+            assert!(t.quantized_nodes().count() > 0);
+        }
+    }
+
+    #[test]
+    fn analytic_roughly_tracks_empirical_on_lenet() {
+        let g = models::lenet5();
+        let data = crate::data::mnist_like(8, 32, 5);
+        let emp = calibrate(&g, &data, 8, Calibrator::MinMax);
+        let ana = calibrate_analytic(&g, Calibrator::MinMax);
+        for n in g.topo() {
+            let (e, a) = (emp.activation(n.id).max_abs(), ana.activation(n.id).max_abs());
+            // Same order of magnitude is all the analytic path promises.
+            assert!(a > e / 30.0 && a < e * 30.0 + 5.0, "{}: emp {e} vs ana {a}", n.name);
+        }
+    }
+
+    #[test]
+    fn calibrator_parse() {
+        assert_eq!(Calibrator::parse("minmax"), Some(Calibrator::MinMax));
+        assert_eq!(Calibrator::parse("p99.9"), Some(Calibrator::Percentile(99.9)));
+        assert_eq!(Calibrator::parse("p10"), None);
+        assert_eq!(Calibrator::parse("bogus"), None);
+    }
+
+    #[test]
+    fn hist_percentile_monotone() {
+        let mut h = AbsHist::new();
+        for i in 0..1000 {
+            h.observe(i as f64 / 100.0);
+        }
+        let p50 = h.percentile_abs(50.0);
+        let p99 = h.percentile_abs(99.0);
+        assert!(p50 < p99);
+        assert!(p99 <= h.top);
+    }
+}

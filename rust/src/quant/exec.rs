@@ -1,0 +1,552 @@
+//! Reference graph executor — the numeric ground truth quantization is
+//! measured against.
+//!
+//! The flow has no trained weights (DESIGN.md §Substitutions), so the
+//! executor materializes *deterministic synthetic* weights per node
+//! (He-scaled normals seeded by network name + node id). That is exactly
+//! what the rest of the repo does for data: throughput is value-independent
+//! and accuracy *deltas* (f32 vs quantized on the same weights) exercise
+//! the identical error mechanisms as trained weights — saturation, grid
+//! rounding, per-channel scale mismatch.
+//!
+//! Two evaluation modes share one traversal:
+//!
+//! * [`Executor::forward`] — f32 reference, observing every activation
+//!   (the calibration hook);
+//! * [`Executor::forward_quantized`] — compute ops run on the symmetric
+//!   integer grid (int8: quantized operands, i64 accumulation, rescale) or
+//!   through fp16 rounding, everything else in f32 — the §VII
+//!   reduced-precision datapath, value-accurate.
+
+use crate::graph::{Activation, Graph, NodeId, Op, Shape};
+use crate::texpr::Precision;
+use crate::util::rng::Rng;
+
+use super::calibrate::CalibrationTable;
+use super::scheme::{f16_round, QParams, QScheme, Range};
+
+/// Per-node synthetic parameters.
+#[derive(Debug, Clone, Default)]
+struct NodeParams {
+    /// Conv: OIHW; dense: [out × in]; BN: gamma per channel.
+    weights: Vec<f32>,
+    /// Bias (or BN beta) per output channel.
+    bias: Vec<f32>,
+}
+
+/// Deterministic reference interpreter for one graph.
+pub struct Executor<'g> {
+    pub graph: &'g Graph,
+    params: Vec<NodeParams>,
+}
+
+impl<'g> Executor<'g> {
+    /// Build the executor, materializing synthetic weights for every
+    /// parameterized node.
+    pub fn new(graph: &'g Graph) -> Executor<'g> {
+        let seed = crate::util::fnv64(graph.name.as_bytes());
+        let params = graph
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut rng = Rng::new(seed ^ (n.id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                match &n.op {
+                    Op::Conv2d { out_channels, kernel, bias, .. } => {
+                        let cin = graph.nodes[n.inputs[0]].shape.chw().map(|c| c.0).unwrap_or(1);
+                        let fan_in = cin * kernel * kernel;
+                        he_params(&mut rng, *out_channels * fan_in, fan_in, *out_channels, *bias)
+                    }
+                    Op::DepthwiseConv2d { kernel, bias, .. } => {
+                        let c = n.shape.chw().map(|c| c.0).unwrap_or(1);
+                        let fan_in = kernel * kernel;
+                        he_params(&mut rng, c * fan_in, fan_in, c, *bias)
+                    }
+                    Op::Dense { out_features, bias, .. } => {
+                        let cin = graph.nodes[n.inputs[0]].shape.elems();
+                        he_params(&mut rng, out_features * cin, cin, *out_features, *bias)
+                    }
+                    Op::BatchNorm => {
+                        let c = channels_of(&n.shape);
+                        NodeParams {
+                            weights: (0..c).map(|_| 1.0 + 0.05 * rng.normal()).collect(),
+                            bias: (0..c).map(|_| 0.02 * rng.normal()).collect(),
+                        }
+                    }
+                    _ => NodeParams::default(),
+                }
+            })
+            .collect();
+        Executor { graph, params }
+    }
+
+    /// Per-output-channel weight ranges of one node (empty for weightless
+    /// nodes) — what per-channel calibration quantizes against.
+    pub fn weight_channel_ranges(&self, node: NodeId) -> Vec<Range> {
+        let n = &self.graph.nodes[node];
+        let p = &self.params[node];
+        let oc = match &n.op {
+            Op::Conv2d { out_channels, .. } => *out_channels,
+            Op::DepthwiseConv2d { .. } => n.shape.chw().map(|c| c.0).unwrap_or(1),
+            Op::Dense { out_features, .. } => *out_features,
+            _ => return Vec::new(),
+        };
+        let per = p.weights.len() / oc.max(1);
+        (0..oc)
+            .map(|c| {
+                let mut r = Range::EMPTY;
+                for &w in &p.weights[c * per..(c + 1) * per] {
+                    r.observe(w as f64);
+                }
+                r
+            })
+            .collect()
+    }
+
+    /// f32 reference forward pass; `observe` sees every node's activation
+    /// (in topological order) — the calibration hook. Returns the output
+    /// node's activation (logits).
+    pub fn forward(&self, frame: &[f32], mut observe: impl FnMut(NodeId, &[f32])) -> Vec<f32> {
+        self.run(frame, None, &mut observe)
+    }
+
+    /// Quantized forward pass: compute ops execute on the reduced-precision
+    /// datapath described by (`table`, `precision`, `scheme`).
+    pub fn forward_quantized(
+        &self,
+        frame: &[f32],
+        table: &CalibrationTable,
+        precision: Precision,
+        scheme: QScheme,
+    ) -> Vec<f32> {
+        let q = QuantCtx { table, precision, scheme };
+        self.run(frame, Some(&q), &mut |_, _| {})
+    }
+
+    fn run(
+        &self,
+        frame: &[f32],
+        q: Option<&QuantCtx>,
+        observe: &mut dyn FnMut(NodeId, &[f32]),
+    ) -> Vec<f32> {
+        let g = self.graph;
+        let mut acts: Vec<Vec<f32>> = vec![Vec::new(); g.nodes.len()];
+        for n in g.topo() {
+            let out = match &n.op {
+                Op::Input => {
+                    assert_eq!(frame.len(), n.shape.elems(), "input frame size mismatch");
+                    frame.to_vec()
+                }
+                Op::Conv2d { kernel, stride, padding, bias, activation, .. } => self.conv(
+                    n.id,
+                    &acts[n.inputs[0]],
+                    &g.nodes[n.inputs[0]].shape,
+                    &n.shape,
+                    *kernel,
+                    *stride,
+                    *padding,
+                    false,
+                    *bias,
+                    *activation,
+                    q,
+                ),
+                Op::DepthwiseConv2d { kernel, stride, padding, bias, activation } => self.conv(
+                    n.id,
+                    &acts[n.inputs[0]],
+                    &g.nodes[n.inputs[0]].shape,
+                    &n.shape,
+                    *kernel,
+                    *stride,
+                    *padding,
+                    true,
+                    *bias,
+                    *activation,
+                    q,
+                ),
+                Op::Dense { bias, activation, .. } => {
+                    self.dense(n.id, &acts[n.inputs[0]], *bias, *activation, q)
+                }
+                Op::BatchNorm => {
+                    let p = &self.params[n.id];
+                    let x = &acts[n.inputs[0]];
+                    let c = channels_of(&n.shape);
+                    let per = x.len() / c.max(1);
+                    x.iter()
+                        .enumerate()
+                        .map(|(i, &v)| v * p.weights[i / per.max(1)] + p.bias[i / per.max(1)])
+                        .collect()
+                }
+                Op::Activate(a) => acts[n.inputs[0]].iter().map(|&v| activate(v, *a)).collect(),
+                Op::MaxPool { kernel, stride, padding } => pool(
+                    &acts[n.inputs[0]],
+                    &g.nodes[n.inputs[0]].shape,
+                    &n.shape,
+                    *kernel,
+                    *stride,
+                    *padding,
+                    true,
+                ),
+                Op::AvgPool { kernel, stride, padding } => pool(
+                    &acts[n.inputs[0]],
+                    &g.nodes[n.inputs[0]].shape,
+                    &n.shape,
+                    *kernel,
+                    *stride,
+                    *padding,
+                    false,
+                ),
+                Op::GlobalAvgPool => {
+                    let (c, h, w) = g.nodes[n.inputs[0]].shape.chw().expect("gap input CHW");
+                    let x = &acts[n.inputs[0]];
+                    (0..c)
+                        .map(|ch| {
+                            x[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / (h * w) as f32
+                        })
+                        .collect()
+                }
+                Op::Add => {
+                    let (a, b) = (&acts[n.inputs[0]], &acts[n.inputs[1]]);
+                    a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
+                }
+                Op::Softmax => {
+                    let x = &acts[n.inputs[0]];
+                    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let e: Vec<f32> = x.iter().map(|v| (v - m).exp()).collect();
+                    let s: f32 = e.iter().sum();
+                    e.into_iter().map(|v| v / s).collect()
+                }
+                Op::Transform | Op::Flatten => acts[n.inputs[0]].clone(),
+                Op::Quantize { precision } => {
+                    // A rewritten graph carries explicit grid boundaries:
+                    // round-trip through the calibrated grid of the source.
+                    let src = n.inputs[0];
+                    match q {
+                        Some(ctx) if *precision == Precision::Int8 => {
+                            let qp = ctx.act_params(src);
+                            acts[src].iter().map(|&v| qp.roundtrip(v as f64, 0) as f32).collect()
+                        }
+                        _ if *precision == Precision::F16 => {
+                            acts[src].iter().map(|&v| f16_round(v)).collect()
+                        }
+                        _ => acts[src].clone(),
+                    }
+                }
+                Op::Dequantize { .. } => acts[n.inputs[0]].clone(),
+            };
+            observe(n.id, &out);
+            acts[n.id] = out;
+        }
+        std::mem::take(&mut acts[g.output])
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &self,
+        node: NodeId,
+        x: &[f32],
+        in_shape: &Shape,
+        out_shape: &Shape,
+        k: usize,
+        stride: usize,
+        padding: usize,
+        depthwise: bool,
+        bias: bool,
+        act: Activation,
+        q: Option<&QuantCtx>,
+    ) -> Vec<f32> {
+        let (cin, h, w) = in_shape.chw().expect("conv input CHW");
+        let (oc, oh, ow) = out_shape.chw().expect("conv output CHW");
+        let p = &self.params[node];
+        let dp = q.map(|ctx| ctx.datapath(self, node, x));
+        let mut out = vec![0f32; oc * oh * ow];
+        for o in 0..oc {
+            let w_base = if depthwise { o * k * k } else { o * cin * k * k };
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc_f = 0f64;
+                    let mut acc_i = 0i64;
+                    let crange = if depthwise { o..o + 1 } else { 0..cin };
+                    for c in crange {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * stride + ky) as isize - padding as isize;
+                                let ix = (ox * stride + kx) as isize - padding as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                    continue;
+                                }
+                                let xi = c * h * w + iy as usize * w + ix as usize;
+                                let wi = if depthwise {
+                                    w_base + ky * k + kx
+                                } else {
+                                    w_base + (c * k + ky) * k + kx
+                                };
+                                match &dp {
+                                    Some(Datapath::Int8 { qx, qw, .. }) => {
+                                        acc_i += qx[xi] as i64 * qw[wi] as i64;
+                                    }
+                                    Some(Datapath::F16 { rx }) => {
+                                        acc_f +=
+                                            (rx[xi] * f16_round(p.weights[wi])) as f64;
+                                    }
+                                    None => acc_f += (x[xi] * p.weights[wi]) as f64,
+                                }
+                            }
+                        }
+                    }
+                    let mut v = match &dp {
+                        Some(Datapath::Int8 { sx, wq, .. }) => {
+                            acc_i as f64 * sx * wq.scale(o)
+                        }
+                        _ => acc_f,
+                    } as f32;
+                    if bias {
+                        v += p.bias[o];
+                    }
+                    if matches!(dp, Some(Datapath::F16 { .. })) {
+                        v = f16_round(v);
+                    }
+                    out[(o * oh + oy) * ow + ox] = activate(v, act);
+                }
+            }
+        }
+        out
+    }
+
+    fn dense(
+        &self,
+        node: NodeId,
+        x: &[f32],
+        bias: bool,
+        act: Activation,
+        q: Option<&QuantCtx>,
+    ) -> Vec<f32> {
+        let p = &self.params[node];
+        let cin = x.len();
+        let oc = p.bias.len().max(p.weights.len() / cin.max(1));
+        let dp = q.map(|ctx| ctx.datapath(self, node, x));
+        (0..oc)
+            .map(|o| {
+                let row = &p.weights[o * cin..(o + 1) * cin];
+                let mut v = match &dp {
+                    Some(Datapath::Int8 { qx, qw, sx, wq }) => {
+                        let qrow = &qw[o * cin..(o + 1) * cin];
+                        let acc: i64 =
+                            qx.iter().zip(qrow).map(|(&a, &b)| a as i64 * b as i64).sum();
+                        (acc as f64 * sx * wq.scale(o)) as f32
+                    }
+                    Some(Datapath::F16 { rx }) => f16_round(
+                        rx.iter().zip(row).map(|(&a, &b)| a * f16_round(b)).sum::<f32>(),
+                    ),
+                    None => x.iter().zip(row).map(|(&a, &b)| a * b).sum::<f32>(),
+                };
+                if bias {
+                    v += p.bias[o];
+                }
+                activate(v, act)
+            })
+            .collect()
+    }
+}
+
+/// Quantized-datapath context for one forward pass.
+struct QuantCtx<'a> {
+    table: &'a CalibrationTable,
+    precision: Precision,
+    scheme: QScheme,
+}
+
+/// Prepared operands of one compute op on the reduced-precision datapath.
+enum Datapath {
+    Int8 { qx: Vec<i32>, qw: Vec<i32>, sx: f64, wq: QParams },
+    F16 { rx: Vec<f32> },
+}
+
+impl QuantCtx<'_> {
+    fn act_params(&self, node: NodeId) -> QParams {
+        QParams::per_tensor(self.table.activation(node), Precision::Int8)
+    }
+
+    fn datapath(&self, exec: &Executor, node: NodeId, x: &[f32]) -> Datapath {
+        match self.precision {
+            Precision::F16 => Datapath::F16 { rx: x.iter().map(|&v| f16_round(v)).collect() },
+            _ => {
+                let src = exec.graph.nodes[node].inputs[0];
+                let xq = self.act_params(src);
+                let ranges = self.table.weight_ranges(node);
+                let wq = match self.scheme {
+                    QScheme::PerChannel if !ranges.is_empty() => {
+                        QParams::per_channel(&ranges, Precision::Int8)
+                    }
+                    _ => {
+                        let whole = ranges.iter().fold(Range::EMPTY, |a, r| a.merge(r));
+                        QParams::per_tensor(whole, Precision::Int8)
+                    }
+                };
+                let p = &exec.params[node];
+                let oc = wq.groups().max(1);
+                let per = p.weights.len() / oc;
+                Datapath::Int8 {
+                    qx: x.iter().map(|&v| xq.quantize(v as f64, 0)).collect(),
+                    qw: p
+                        .weights
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &w)| wq.quantize(w as f64, i / per.max(1)))
+                        .collect(),
+                    sx: xq.scale(0),
+                    wq,
+                }
+            }
+        }
+    }
+}
+
+fn he_params(rng: &mut Rng, n_weights: usize, fan_in: usize, oc: usize, bias: bool) -> NodeParams {
+    let std = (2.0 / fan_in.max(1) as f64).sqrt() as f32;
+    NodeParams {
+        weights: (0..n_weights).map(|_| rng.normal() * std).collect(),
+        bias: if bias { (0..oc).map(|_| 0.01 * rng.normal()).collect() } else { vec![0.0; oc] },
+    }
+}
+
+fn channels_of(s: &Shape) -> usize {
+    match s {
+        Shape::Chw(c, ..) => *c,
+        Shape::Flat(n) => *n,
+    }
+}
+
+fn activate(v: f32, a: Activation) -> f32 {
+    match a {
+        Activation::None => v,
+        Activation::Relu => v.max(0.0),
+        Activation::Relu6 => v.clamp(0.0, 6.0),
+        Activation::Tanh => v.tanh(),
+    }
+}
+
+fn pool(
+    x: &[f32],
+    in_shape: &Shape,
+    out_shape: &Shape,
+    k: usize,
+    stride: usize,
+    padding: usize,
+    is_max: bool,
+) -> Vec<f32> {
+    let (c, h, w) = in_shape.chw().expect("pool input CHW");
+    let (_, oh, ow) = out_shape.chw().expect("pool output CHW");
+    let mut out = vec![0f32; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                let mut s = 0f32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = (oy * stride + ky) as isize - padding as isize;
+                        let ix = (ox * stride + kx) as isize - padding as isize;
+                        if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                            continue;
+                        }
+                        let v = x[ch * h * w + iy as usize * w + ix as usize];
+                        m = m.max(v);
+                        s += v;
+                    }
+                }
+                out[(ch * oh + oy) * ow + ox] = if is_max { m } else { s / (k * k) as f32 };
+            }
+        }
+    }
+    out
+}
+
+/// Index of the largest logit (the predicted class).
+pub fn argmax(logits: &[f32]) -> u32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::quant::calibrate::{calibrate, Calibrator};
+
+    #[test]
+    fn forward_is_deterministic_and_shaped() {
+        let g = models::lenet5();
+        let exec = Executor::new(&g);
+        let data = crate::data::mnist_like(2, 32, 7);
+        let a = exec.forward(data.frame(0), |_, _| {});
+        let b = exec.forward(data.frame(0), |_, _| {});
+        assert_eq!(a.len(), 10);
+        assert_eq!(a, b);
+        let c = exec.forward(data.frame(1), |_, _| {});
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn observer_sees_every_node() {
+        let g = models::lenet5();
+        let exec = Executor::new(&g);
+        let data = crate::data::mnist_like(1, 32, 7);
+        let mut seen = Vec::new();
+        exec.forward(data.frame(0), |id, act| seen.push((id, act.len())));
+        assert_eq!(seen.len(), g.nodes.len());
+        for (id, len) in &seen {
+            assert_eq!(*len, g.nodes[*id].shape.elems());
+        }
+    }
+
+    #[test]
+    fn int8_forward_tracks_f32_closely_on_lenet() {
+        let g = models::lenet5();
+        let exec = Executor::new(&g);
+        let data = crate::data::mnist_like(8, 32, 11);
+        let table = calibrate(&g, &data, 8, Calibrator::MinMax);
+        let mut agree = 0;
+        for i in 0..8 {
+            let f = exec.forward(data.frame(i), |_, _| {});
+            let q = exec.forward_quantized(data.frame(i), &table, Precision::Int8, QScheme::PerChannel);
+            assert_eq!(f.len(), q.len());
+            // Logit-level error stays small relative to the logit scale.
+            let scale = f.iter().map(|v| v.abs()).fold(0f32, f32::max).max(1e-3);
+            for (a, b) in f.iter().zip(&q) {
+                assert!((a - b).abs() / scale < 0.25, "logit drift {a} vs {b}");
+            }
+            if argmax(&f) == argmax(&q) {
+                agree += 1;
+            }
+        }
+        // Random-weight logits can sit arbitrarily close together, so a
+        // rare flip is legitimate — but wholesale disagreement is a bug.
+        assert!(agree >= 6, "int8 agreement only {agree}/8");
+    }
+
+    #[test]
+    fn fp16_forward_is_nearly_exact() {
+        let g = models::lenet5();
+        let exec = Executor::new(&g);
+        let data = crate::data::mnist_like(4, 32, 3);
+        let table = calibrate(&g, &data, 4, Calibrator::MinMax);
+        for i in 0..4 {
+            let f = exec.forward(data.frame(i), |_, _| {});
+            let q = exec.forward_quantized(data.frame(i), &table, Precision::F16, QScheme::PerTensor);
+            assert_eq!(argmax(&f), argmax(&q));
+        }
+    }
+
+    #[test]
+    fn per_channel_weight_ranges_cover_weights() {
+        let g = models::lenet5();
+        let exec = Executor::new(&g);
+        let conv = g.nodes.iter().find(|n| n.op.is_compute()).unwrap();
+        let ranges = exec.weight_channel_ranges(conv.id);
+        assert!(!ranges.is_empty());
+        assert!(ranges.iter().all(|r| !r.is_empty() && r.max_abs() > 0.0));
+    }
+}

@@ -1,0 +1,230 @@
+//! Quantization-aware compilation — the paper's §VII future-work #1
+//! ("reduced bit precision for weight/activation representation") built as
+//! a first-class subsystem.
+//!
+//! The fp32 flow pays for its precision in DSPs and BRAM, which caps
+//! unrolling and is a big part of why hand-optimized designs still win
+//! (§V–VI); reduced precision is the standard lever the FPGA-CNN survey
+//! literature identifies for closing that gap. This module provides the
+//! compress-then-compile pipeline:
+//!
+//! * [`scheme`] — symmetric fixed-point grids ([`QParams`]) with
+//!   per-tensor / per-channel scales ([`QScheme`]) and fp16 rounding;
+//! * [`calibrate`] — activation-range calibration: empirical (min-max or
+//!   percentile over representative frames through the reference
+//!   executor) or analytic (moment propagation, O(nodes));
+//! * [`rewrite`] — graph rewriter inserting explicit `Quantize` /
+//!   `Dequantize` boundaries and folding them across compute chains;
+//! * [`exec`] — the value-accurate reference + quantized executors that
+//!   make accuracy loss *measurable*;
+//! * [`accuracy`] — top-1 degradation, measured or estimated.
+//!
+//! Entry points: [`QuantConfig`] (what to quantize and how to calibrate)
+//! and [`prepare`] (graph → quantized graph + calibration + report), which
+//! [`crate::flow::CompileSession::with_quantization`] drives and
+//! [`crate::dse`] sweeps as a search dimension.
+//!
+//! ```
+//! use tvm_fpga_flow::graph::models;
+//! use tvm_fpga_flow::quant::{prepare, QuantConfig};
+//! use tvm_fpga_flow::texpr::Precision;
+//!
+//! let net = models::lenet5();
+//! let prep = prepare(&net, &QuantConfig::int8()).unwrap();
+//! assert_eq!(prep.report.precision, Precision::Int8);
+//! // Quantize/dequantize boundaries were made explicit and folded…
+//! assert!(prep.report.stats.quantize_nodes >= 1);
+//! assert!(prep.report.stats.folded_pairs >= 1);
+//! // …and the modeled top-1 loss is reported.
+//! assert!(prep.report.accuracy.delta_pp < 25.0);
+//! ```
+
+pub mod accuracy;
+pub mod calibrate;
+pub mod exec;
+pub mod rewrite;
+pub mod scheme;
+
+pub use accuracy::AccuracyReport;
+pub use calibrate::{calibrate, calibrate_analytic, CalibrationTable, Calibrator};
+pub use exec::{argmax, Executor};
+pub use rewrite::{insert_qdq, QuantStats};
+pub use scheme::{f16_round, qmax, QParams, QScheme, Range};
+
+use crate::graph::{passes, Graph};
+use crate::texpr::Precision;
+
+/// Where calibration ranges come from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CalibrationSource {
+    /// Moment propagation through the graph — no execution, any network.
+    Analytic,
+    /// Sweep `frames` frames of the network's representative dataset
+    /// through the reference executor (small networks; exact statistics).
+    Data { frames: usize },
+}
+
+/// A complete quantization recipe for one compilation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantConfig {
+    pub precision: Precision,
+    pub scheme: QScheme,
+    pub calibrator: Calibrator,
+    pub source: CalibrationSource,
+}
+
+impl QuantConfig {
+    /// The standard recipe for a precision: per-channel weights, p99.9
+    /// percentile clipping, analytic calibration (works for any network).
+    pub fn for_precision(precision: Precision) -> QuantConfig {
+        QuantConfig {
+            precision,
+            scheme: QScheme::PerChannel,
+            calibrator: Calibrator::Percentile(99.9),
+            source: CalibrationSource::Analytic,
+        }
+    }
+
+    /// int8, per-channel, percentile-calibrated.
+    pub fn int8() -> QuantConfig {
+        QuantConfig::for_precision(Precision::Int8)
+    }
+
+    /// fp16 (rounding only — no calibration sensitivity).
+    pub fn fp16() -> QuantConfig {
+        QuantConfig::for_precision(Precision::F16)
+    }
+
+    pub fn with_scheme(mut self, scheme: QScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    pub fn with_calibrator(mut self, calibrator: Calibrator) -> Self {
+        self.calibrator = calibrator;
+        self
+    }
+
+    /// Calibrate (and measure accuracy) on `frames` real frames instead of
+    /// the analytic model.
+    pub fn with_data(mut self, frames: usize) -> Self {
+        self.source = CalibrationSource::Data { frames: frames.max(1) };
+        self
+    }
+}
+
+/// What one quantized compilation did — carried on
+/// [`crate::flow::Accelerator::quant`] and the DSE's design points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantReport {
+    pub precision: Precision,
+    pub scheme: QScheme,
+    /// Calibration method name (`min-max`, `p99.9`, …).
+    pub calibrator: String,
+    /// Frames calibrated on (0 = analytic).
+    pub calibration_frames: usize,
+    pub stats: QuantStats,
+    pub accuracy: AccuracyReport,
+}
+
+/// Output of [`prepare`]: the compile-ready rewritten graph plus
+/// everything the rest of the flow needs to know about the quantization.
+#[derive(Debug, Clone)]
+pub struct PreparedQuant {
+    /// BN-folded, Q/DQ-rewritten graph.
+    pub graph: Graph,
+    pub table: CalibrationTable,
+    pub report: QuantReport,
+}
+
+/// Run the quantization front-end on a graph: fold BN through the standard
+/// pass pipeline, calibrate, insert + fold Q/DQ boundaries and produce the
+/// accuracy report. `Precision::F32` degenerates to the pass pipeline with
+/// a lossless report.
+pub fn prepare(graph: &Graph, cfg: &QuantConfig) -> crate::Result<PreparedQuant> {
+    let (folded, _) = passes::standard_pipeline(graph);
+    let table = match cfg.source {
+        CalibrationSource::Analytic => calibrate_analytic(&folded, cfg.calibrator),
+        CalibrationSource::Data { frames } => {
+            let batch = crate::data::for_network(&folded.name, frames, 17).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no representative dataset for '{}' — use analytic calibration",
+                    folded.name
+                )
+            })?;
+            calibrate(&folded, &batch, frames, cfg.calibrator)
+        }
+    };
+    let accuracy = match cfg.source {
+        CalibrationSource::Analytic => {
+            accuracy::estimate(&folded, &table, cfg.precision, cfg.scheme)
+        }
+        CalibrationSource::Data { frames } => {
+            accuracy::measure(&folded, &table, cfg.precision, cfg.scheme, frames)
+        }
+    };
+    let (rewritten, stats) = insert_qdq(&folded, cfg.precision);
+    Ok(PreparedQuant {
+        graph: rewritten,
+        table,
+        report: QuantReport {
+            precision: cfg.precision,
+            scheme: cfg.scheme,
+            calibrator: cfg.calibrator.name(),
+            calibration_frames: match cfg.source {
+                CalibrationSource::Analytic => 0,
+                CalibrationSource::Data { frames } => frames,
+            },
+            stats,
+            accuracy,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn prepare_f32_is_lossless_passthrough() {
+        let g = models::lenet5();
+        let p = prepare(&g, &QuantConfig::for_precision(Precision::F32)).unwrap();
+        assert_eq!(p.report.accuracy.delta_pp, 0.0);
+        assert_eq!(p.report.stats, QuantStats::default());
+        assert_eq!(p.graph.total_macs(), g.total_macs());
+    }
+
+    #[test]
+    fn prepare_int8_with_data_measures_accuracy() {
+        let g = models::lenet5();
+        let p = prepare(&g, &QuantConfig::int8().with_data(8)).unwrap();
+        assert!(!p.report.accuracy.estimated);
+        assert_eq!(p.report.accuracy.frames, 8);
+        assert!(p.report.accuracy.top1_agreement >= 0.75);
+        assert!(p.report.stats.quantize_nodes > 0);
+        assert_eq!(p.report.calibration_frames, 8);
+    }
+
+    #[test]
+    fn prepare_analytic_works_for_every_network() {
+        for g in models::all() {
+            for cfg in [QuantConfig::int8(), QuantConfig::fp16()] {
+                let p = prepare(&g, &cfg).unwrap();
+                assert!(p.report.accuracy.estimated, "{}", g.name);
+                assert!(p.report.accuracy.delta_pp < 25.0, "{}", g.name);
+                p.graph.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn data_calibration_requires_a_known_dataset() {
+        use crate::graph::{GraphBuilder, Shape};
+        let (mut b, x) = GraphBuilder::new("unknown-net", Shape::Chw(1, 8, 8));
+        let d = b.add("f", crate::graph::Op::Flatten, &[x]);
+        let g = b.finish(d);
+        assert!(prepare(&g, &QuantConfig::int8().with_data(4)).is_err());
+        assert!(prepare(&g, &QuantConfig::int8()).is_ok());
+    }
+}

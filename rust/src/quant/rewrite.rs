@@ -1,0 +1,227 @@
+//! Graph rewriter: make quantization explicit in the IR.
+//!
+//! [`insert_qdq`] wraps every compute node (conv / depthwise / dense) in
+//! `Quantize → op → Dequantize` and then *folds* boundaries: where one
+//! quantized op feeds another, the inner `Dequantize → Quantize` pair is
+//! never materialized and the activations stay on the integer grid across
+//! the edge — the dq/q folding every post-training-quantization flow does
+//! (and the reason an int8 accelerator's inter-kernel channels carry int8,
+//! not floats). BatchNorm is folded into convs by `graph::passes` *before*
+//! rewriting, so Q/DQ boundaries never straddle a BN.
+
+use crate::graph::{Graph, GraphBuilder, NodeId, Op};
+use crate::texpr::Precision;
+
+/// What the rewriter did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QuantStats {
+    /// Quantize nodes inserted (f32 → grid boundaries).
+    pub quantize_nodes: usize,
+    /// Dequantize nodes inserted (grid → f32 boundaries).
+    pub dequantize_nodes: usize,
+    /// Quantized→quantized edges where a dq/q pair was folded away.
+    pub folded_pairs: usize,
+}
+
+/// Does `op` execute on the integer grid once the datapath is quantized?
+/// Compute ops always (int MACs, f32 epilogue); pooling, residual adds
+/// and ReLU-family activations are grid-preserving under a shared
+/// per-tensor scale (max/average/sum/clip of grid points needs only a
+/// fixed-point rescale — the standard int8 deployment treatment), so they
+/// ride along instead of forcing a dequantize/quantize island per node.
+/// Transcendental activations (tanh), softmax, global pooling into the
+/// classifier head and BN (when not already folded away) stay in f32.
+/// `flow::patterns` consults this when scheduling so f32-island kernels
+/// are never narrowed.
+pub fn grid_capable(op: &Op) -> bool {
+    match op {
+        Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. } => true,
+        Op::MaxPool { .. } | Op::AvgPool { .. } | Op::Add | Op::Flatten => true,
+        Op::Activate(a) => matches!(
+            a,
+            crate::graph::Activation::Relu | crate::graph::Activation::Relu6
+        ),
+        _ => false,
+    }
+}
+
+/// Rewrite `graph` so the quantized regions are explicit. Returns the new
+/// graph and the insertion/fold statistics. `precision` = `F32` is the
+/// identity.
+///
+/// ```
+/// use tvm_fpga_flow::graph::models;
+/// use tvm_fpga_flow::quant::rewrite::insert_qdq;
+/// use tvm_fpga_flow::texpr::Precision;
+///
+/// let (g, stats) = insert_qdq(&models::lenet5(), Precision::Int8);
+/// // Boundaries exist, and chained compute ops share them.
+/// assert!(stats.quantize_nodes >= 1);
+/// assert!(stats.folded_pairs > 0);
+/// g.validate().unwrap();
+/// ```
+pub fn insert_qdq(graph: &Graph, precision: Precision) -> (Graph, QuantStats) {
+    let mut stats = QuantStats::default();
+    if precision == Precision::F32 {
+        return (graph.clone(), stats);
+    }
+
+    // New-graph ids of each old node, in both domains.
+    let mut f32_id: Vec<Option<NodeId>> = vec![None; graph.nodes.len()];
+    let mut grid_id: Vec<Option<NodeId>> = vec![None; graph.nodes.len()];
+    // True when the node itself executes on the grid (so a grid-domain
+    // consumer edge is a genuine dq/q elision, not a shared Quantize).
+    let mut grid_native = vec![false; graph.nodes.len()];
+
+    let input_shape = graph.nodes[graph.input].shape.clone();
+    let (mut b, new_input) = GraphBuilder::new(graph.name.clone(), input_shape);
+    f32_id[graph.input] = Some(new_input);
+
+    for node in graph.topo() {
+        if matches!(node.op, Op::Input) {
+            continue;
+        }
+        let quantized = grid_capable(&node.op);
+        let inputs: Vec<NodeId> = node
+            .inputs
+            .iter()
+            .map(|&src| {
+                if quantized {
+                    // Need the grid-domain value of `src`.
+                    if let Some(q) = grid_id[src] {
+                        if grid_native[src] {
+                            stats.folded_pairs += 1; // dq/q pair never built
+                        }
+                        q
+                    } else {
+                        let f = f32_id[src].expect("topo order");
+                        let q = b.add(
+                            format!("{}.q", graph.nodes[src].name),
+                            Op::Quantize { precision },
+                            &[f],
+                        );
+                        stats.quantize_nodes += 1;
+                        grid_id[src] = Some(q);
+                        q
+                    }
+                } else {
+                    // Need the f32-domain value of `src`.
+                    if let Some(f) = f32_id[src] {
+                        f
+                    } else {
+                        let q = grid_id[src].expect("topo order");
+                        let f = b.add(
+                            format!("{}.dq", graph.nodes[src].name),
+                            Op::Dequantize { precision },
+                            &[q],
+                        );
+                        stats.dequantize_nodes += 1;
+                        f32_id[src] = Some(f);
+                        f
+                    }
+                }
+            })
+            .collect();
+        let id = b.add(node.name.clone(), node.op.clone(), &inputs);
+        if quantized {
+            grid_id[node.id] = Some(id);
+            grid_native[node.id] = true;
+        } else {
+            f32_id[node.id] = Some(id);
+        }
+    }
+
+    // The network output leaves in f32.
+    let out = match f32_id[graph.output] {
+        Some(f) => f,
+        None => {
+            let q = grid_id[graph.output].expect("output lowered");
+            stats.dequantize_nodes += 1;
+            b.add(
+                format!("{}.dq", graph.nodes[graph.output].name),
+                Op::Dequantize { precision },
+                &[q],
+            )
+        }
+    };
+    let g = b.finish(out);
+    debug_assert!(g.validate().is_ok());
+    (g, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::graph::passes;
+
+    fn count(g: &Graph, f: impl Fn(&Op) -> bool) -> usize {
+        g.nodes.iter().filter(|n| f(&n.op)).count()
+    }
+
+    #[test]
+    fn f32_is_identity() {
+        let g = models::lenet5();
+        let (g2, stats) = insert_qdq(&g, Precision::F32);
+        assert_eq!(stats, QuantStats::default());
+        assert_eq!(g2.nodes.len(), g.nodes.len());
+    }
+
+    #[test]
+    fn lenet_gets_boundaries_and_folds() {
+        let g = models::lenet5();
+        let (g2, stats) = insert_qdq(&g, Precision::Int8);
+        g2.validate().unwrap();
+        let q = count(&g2, |op| matches!(op, Op::Quantize { .. }));
+        let dq = count(&g2, |op| matches!(op, Op::Dequantize { .. }));
+        assert_eq!(q, stats.quantize_nodes);
+        assert_eq!(dq, stats.dequantize_nodes);
+        // The whole conv→pool→conv→…→dense chain stays on the grid: one
+        // quantize at the image, one dequantize at the logits.
+        assert_eq!((q, dq), (1, 1), "{stats:?}");
+        assert!(stats.folded_pairs >= 3, "{stats:?}");
+        // Output node is f32 (Dequantize or another f32-domain op).
+        assert!(matches!(g2.nodes[g2.output].op, Op::Dequantize { .. }));
+    }
+
+    #[test]
+    fn resnet_chain_stays_on_grid_through_relu_and_maxpool() {
+        // BN folds away first (the conv/BN boundary of the issue), then
+        // the conv→relu→conv chains share one quantized region.
+        let (g, _) = passes::standard_pipeline(&models::resnet34());
+        let (g2, stats) = insert_qdq(&g, Precision::Int8);
+        g2.validate().unwrap();
+        let computes = count(&g, |op| op.is_compute());
+        // Far fewer quantize boundaries than compute nodes = real folding.
+        assert!(
+            stats.quantize_nodes * 2 < computes,
+            "{} q-nodes for {computes} compute nodes",
+            stats.quantize_nodes
+        );
+        assert!(stats.folded_pairs > computes / 2, "{stats:?}");
+    }
+
+    #[test]
+    fn rewritten_graphs_preserve_macs_and_output_shape() {
+        for g in models::all() {
+            let (g1, _) = passes::standard_pipeline(&g);
+            let (g2, _) = insert_qdq(&g1, Precision::Int8);
+            assert_eq!(g1.total_macs(), g2.total_macs(), "{}", g.name);
+            assert_eq!(
+                g1.nodes[g1.output].shape,
+                g2.nodes[g2.output].shape,
+                "{}",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn rewritten_graph_still_compiles() {
+        use crate::flow::{Compiler, Mode, OptLevel};
+        let (g1, _) = passes::standard_pipeline(&models::mobilenet_v1());
+        let (g2, _) = insert_qdq(&g1, Precision::Int8);
+        let acc = Compiler::default().compile(&g2, Mode::Folded, OptLevel::Optimized).unwrap();
+        assert!(acc.performance.fps > 0.0);
+    }
+}

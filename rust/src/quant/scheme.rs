@@ -1,0 +1,329 @@
+//! Quantization schemes: symmetric fixed-point grids with per-tensor or
+//! per-channel scales, plus fp16 rounding.
+//!
+//! The grids are symmetric (zero-point 0) — the standard choice for FPGA
+//! datapaths because the MAC array then needs no zero-point correction
+//! terms (Abdelouahab et al., 1806.01683 §V). Scales are chosen from
+//! calibrated value ranges: per-tensor for activations (one scale keeps
+//! the inter-kernel interface a plain int stream), per-tensor *or*
+//! per-channel for weights (per-channel tracks the very different filter
+//! magnitudes of depthwise/pointwise layers).
+
+use crate::texpr::Precision;
+
+/// An observed (or propagated) value range.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Range {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Default for Range {
+    fn default() -> Self {
+        Range::EMPTY
+    }
+}
+
+impl Range {
+    /// The empty range (absorbs anything under [`Range::observe`]).
+    pub const EMPTY: Range = Range { lo: f64::INFINITY, hi: f64::NEG_INFINITY };
+
+    pub fn new(lo: f64, hi: f64) -> Range {
+        Range { lo: lo.min(hi), hi: hi.max(lo) }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo > self.hi
+    }
+
+    /// Widen to include `v`.
+    pub fn observe(&mut self, v: f64) {
+        if v < self.lo {
+            self.lo = v;
+        }
+        if v > self.hi {
+            self.hi = v;
+        }
+    }
+
+    /// Union with another range.
+    pub fn merge(&self, o: &Range) -> Range {
+        Range { lo: self.lo.min(o.lo), hi: self.hi.max(o.hi) }
+    }
+
+    /// Largest absolute value covered (0 for the empty range) — what a
+    /// symmetric grid must represent.
+    pub fn max_abs(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.lo.abs().max(self.hi.abs())
+        }
+    }
+}
+
+/// Scale granularity of a quantized tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum QScheme {
+    /// One scale for the whole tensor.
+    PerTensor,
+    /// One scale per output channel (weights only; activations stay
+    /// per-tensor so the kernel interface is a single int stream).
+    #[default]
+    PerChannel,
+}
+
+impl QScheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QScheme::PerTensor => "per-tensor",
+            QScheme::PerChannel => "per-channel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QScheme> {
+        match s {
+            "per-tensor" | "tensor" => Some(QScheme::PerTensor),
+            "per-channel" | "channel" => Some(QScheme::PerChannel),
+            _ => None,
+        }
+    }
+}
+
+/// Largest positive code of the symmetric integer grid at a precision
+/// (fp16/f32 have no integer grid — quantization degenerates to rounding).
+pub fn qmax(p: Precision) -> Option<i32> {
+    match p {
+        Precision::Int8 => Some(127),
+        Precision::F16 | Precision::F32 => None,
+    }
+}
+
+/// Quantization parameters of one tensor: a symmetric grid per scale
+/// group (1 group = per-tensor, N groups = per-channel).
+///
+/// ```
+/// use tvm_fpga_flow::quant::{QParams, Range};
+/// use tvm_fpga_flow::texpr::Precision;
+///
+/// let q = QParams::per_tensor(Range::new(-2.0, 4.0), Precision::Int8);
+/// // The grid covers max |x| = 4.0 with 127 positive codes…
+/// assert!((q.scale(0) - 4.0 / 127.0).abs() < 1e-12);
+/// // …and round-trip error is bounded by half a step.
+/// let x = 1.234_f64;
+/// let err = (q.dequantize(q.quantize(x, 0), 0) - x).abs();
+/// assert!(err <= q.step(0) / 2.0 + 1e-12);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct QParams {
+    pub precision: Precision,
+    /// One scale per group; `scales[0]` is the per-tensor scale.
+    scales: Vec<f64>,
+}
+
+impl QParams {
+    /// Per-tensor symmetric parameters for a range.
+    pub fn per_tensor(range: Range, precision: Precision) -> QParams {
+        QParams { precision, scales: vec![scale_for(range.max_abs(), precision)] }
+    }
+
+    /// Per-channel symmetric parameters (one range per output channel).
+    pub fn per_channel(ranges: &[Range], precision: Precision) -> QParams {
+        assert!(!ranges.is_empty(), "per-channel QParams need at least one range");
+        QParams {
+            precision,
+            scales: ranges.iter().map(|r| scale_for(r.max_abs(), precision)).collect(),
+        }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Scale of group `ch` (clamped into range so per-tensor params accept
+    /// any channel index).
+    pub fn scale(&self, ch: usize) -> f64 {
+        self.scales[ch.min(self.scales.len() - 1)]
+    }
+
+    /// Grid step = scale (symmetric grid with unit code spacing).
+    pub fn step(&self, ch: usize) -> f64 {
+        self.scale(ch)
+    }
+
+    /// Quantize a value onto the grid of group `ch` (round-to-nearest,
+    /// saturating at the code range).
+    pub fn quantize(&self, x: f64, ch: usize) -> i32 {
+        let m = qmax(self.precision).unwrap_or(i32::MAX >> 1) as f64;
+        let q = (x / self.scale(ch)).round();
+        q.clamp(-m, m) as i32
+    }
+
+    /// Map a code back to the real line.
+    pub fn dequantize(&self, q: i32, ch: usize) -> f64 {
+        q as f64 * self.scale(ch)
+    }
+
+    /// Round-trip a value through the grid (`dequantize(quantize(x))`).
+    pub fn roundtrip(&self, x: f64, ch: usize) -> f64 {
+        self.dequantize(self.quantize(x, ch), ch)
+    }
+}
+
+fn scale_for(max_abs: f64, precision: Precision) -> f64 {
+    let m = qmax(precision).unwrap_or(1) as f64;
+    // A degenerate (all-zero) tensor still needs a nonzero scale.
+    (max_abs.max(1e-12)) / m
+}
+
+/// Round an f32 to the nearest fp16-representable value (round to nearest
+/// even, handling overflow to ±inf and flushing subnormals' extra bits),
+/// returned as f32 — how the fp16 datapath is simulated without a half
+/// type in std.
+pub fn f16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    if exp == 0xff {
+        return x; // inf/nan pass through
+    }
+    let e = exp - 127; // unbiased
+    if e > 15 {
+        // Overflows fp16 → ±inf.
+        return f32::from_bits(sign | 0x7f80_0000);
+    }
+    if e < -24 {
+        return f32::from_bits(sign); // below smallest subnormal → ±0
+    }
+    // Keep 10 mantissa bits (fewer for subnormals), round to nearest even.
+    let drop_bits: i32 = if e >= -14 { 13 } else { 13 + (-14 - e) };
+    let drop = drop_bits as u32;
+    let keep_mask = !((1u32 << drop) - 1);
+    let half = 1u32 << (drop - 1);
+    let mant = bits & 0x7fff_ffff; // exponent+mantissa as magnitude
+    let rem = mant & !keep_mask;
+    let mut m = mant & keep_mask;
+    if rem > half || (rem == half && (m >> drop) & 1 == 1) {
+        m += 1u32 << drop; // may carry into the exponent: still correct
+    }
+    f32::from_bits(sign | m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step_per_tensor() {
+        prop::check("qdq-roundtrip-per-tensor", |rng, _| {
+            let max_abs = 0.01 + rng.f64() * 100.0;
+            let q = QParams::per_tensor(Range::new(-max_abs, max_abs), Precision::Int8);
+            // In-range values round-trip within half a grid step.
+            let x = (rng.f64() * 2.0 - 1.0) * max_abs;
+            let err = (q.roundtrip(x, 0) - x).abs();
+            assert!(err <= q.step(0) / 2.0 + 1e-12, "x={x} err={err} step={}", q.step(0));
+        });
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_per_channel() {
+        prop::check("qdq-roundtrip-per-channel", |rng, _| {
+            let n = 1 + rng.below(8) as usize;
+            let ranges: Vec<Range> = (0..n)
+                .map(|_| {
+                    let m = 0.01 + rng.f64() * 10.0;
+                    Range::new(-m, m)
+                })
+                .collect();
+            let q = QParams::per_channel(&ranges, Precision::Int8);
+            for (ch, r) in ranges.iter().enumerate() {
+                let x = (rng.f64() * 2.0 - 1.0) * r.max_abs();
+                let err = (q.roundtrip(x, ch) - x).abs();
+                assert!(err <= q.step(ch) / 2.0 + 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn out_of_range_values_saturate() {
+        prop::check("qdq-saturates", |rng, _| {
+            let m = 0.1 + rng.f64() * 10.0;
+            let q = QParams::per_tensor(Range::new(-m, m), Precision::Int8);
+            let x = m * (1.5 + rng.f64() * 10.0);
+            assert_eq!(q.quantize(x, 0), 127);
+            assert_eq!(q.quantize(-x, 0), -127);
+        });
+    }
+
+    #[test]
+    fn scale_monotone_in_range_across_schemes() {
+        // A wider calibrated range must never produce a finer grid — in
+        // either scheme (coarser grid ⇒ larger step, monotonically).
+        prop::check("scale-monotone", |rng, _| {
+            let a = 0.01 + rng.f64() * 10.0;
+            let b = a * (1.0 + rng.f64() * 10.0);
+            let qa = QParams::per_tensor(Range::new(-a, a), Precision::Int8);
+            let qb = QParams::per_tensor(Range::new(-b, b), Precision::Int8);
+            assert!(qb.scale(0) >= qa.scale(0));
+            let ca = QParams::per_channel(&[Range::new(-a, a), Range::new(-b, b)], Precision::Int8);
+            assert!(ca.scale(1) >= ca.scale(0));
+        });
+    }
+
+    #[test]
+    fn per_channel_scale_never_coarser_than_covering_per_tensor() {
+        prop::check("per-channel-refines", |rng, _| {
+            let n = 2 + rng.below(6) as usize;
+            let ranges: Vec<Range> = (0..n)
+                .map(|_| {
+                    let m = 0.01 + rng.f64() * 5.0;
+                    Range::new(-m, m)
+                })
+                .collect();
+            let whole = ranges.iter().fold(Range::EMPTY, |acc, r| acc.merge(r));
+            let pt = QParams::per_tensor(whole, Precision::Int8);
+            let pc = QParams::per_channel(&ranges, Precision::Int8);
+            for ch in 0..n {
+                assert!(pc.scale(ch) <= pt.scale(0) + 1e-15);
+            }
+        });
+    }
+
+    #[test]
+    fn f16_round_is_idempotent_and_close() {
+        prop::check("f16-round", |rng, _| {
+            let x = (rng.f64() as f32 * 2.0 - 1.0) * 1000.0;
+            let r = f16_round(x);
+            assert_eq!(f16_round(r), r, "not idempotent at {x}");
+            // fp16 has 11 significand bits → relative error ≤ 2^-11.
+            if x != 0.0 {
+                assert!(((r - x) / x).abs() <= 1.0 / 2048.0 + 1e-7, "x={x} r={r}");
+            }
+        });
+    }
+
+    #[test]
+    fn f16_round_known_values() {
+        assert_eq!(f16_round(1.0), 1.0);
+        assert_eq!(f16_round(0.5), 0.5);
+        assert_eq!(f16_round(65504.0), 65504.0); // fp16 max normal
+        assert!(f16_round(1e6).is_infinite());
+        assert_eq!(f16_round(1e-30), 0.0); // below fp16 subnormal range
+        // 1 + 2^-12 rounds back to 1 (beyond the 10-bit mantissa).
+        assert_eq!(f16_round(1.0 + 1.0 / 4096.0), 1.0);
+    }
+
+    #[test]
+    fn range_operations() {
+        let mut r = Range::EMPTY;
+        assert!(r.is_empty());
+        assert_eq!(r.max_abs(), 0.0);
+        r.observe(-3.0);
+        r.observe(1.0);
+        assert_eq!((r.lo, r.hi), (-3.0, 1.0));
+        assert_eq!(r.max_abs(), 3.0);
+        let m = r.merge(&Range::new(0.0, 5.0));
+        assert_eq!((m.lo, m.hi), (-3.0, 5.0));
+    }
+}

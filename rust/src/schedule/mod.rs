@@ -233,12 +233,17 @@ impl<'a> Scheduler<'a> {
 
     /// Extension (§VII): quantize the datapath. Scales every access's
     /// traffic/array bytes and sets the nest precision (DSP packing and
-    /// the bandwidth roof pick it up downstream).
+    /// the bandwidth roof pick it up downstream). Accesses pinned to a
+    /// fixed element type (cross-domain quantize/dequantize boundaries)
+    /// keep their width.
     pub fn quantize(&mut self, p: Precision) {
         let old = self.nest.precision.bytes();
         let new = p.bytes();
         self.nest.precision = p;
         for a in &mut self.nest.accesses {
+            if a.elem.is_some() {
+                continue;
+            }
             a.bytes_per_frame = a.bytes_per_frame * new / old;
             a.array_bytes = a.array_bytes * new / old;
         }

@@ -124,7 +124,7 @@ mod tests {
             name: "lenet5".into(),
             kernels,
             channels: (0..n - 1)
-                .map(|i| Channel { name: format!("ch{i}"), from_kernel: i, to_kernel: i + 1, depth: 4704 })
+                .map(|i| Channel::f32(format!("ch{i}"), i, i + 1, 4704))
                 .collect(),
             queues: if queues > 1 { n } else { 1 },
         }

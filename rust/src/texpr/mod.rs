@@ -103,6 +103,11 @@ pub struct Access {
     pub bytes_per_frame: u64,
     /// Size of the underlying array in bytes (what a cache/stash must hold).
     pub array_bytes: u64,
+    /// Element-type override for cross-domain kernels (quantize boundaries
+    /// read f32 and write int8 in the same nest). `None` = the nest's
+    /// datapath precision; a pinned access is exempt from
+    /// `Scheduler::quantize`'s byte rescaling.
+    pub elem: Option<Precision>,
 }
 
 /// Arithmetic precision of a kernel's datapath — the paper's future-work
@@ -145,6 +150,48 @@ impl Precision {
             Precision::F16 => "fp16",
             Precision::Int8 => "int8",
         }
+    }
+
+    /// OpenCL element type of a buffer/channel at this precision.
+    pub fn c_type(&self) -> &'static str {
+        match self {
+            Precision::F32 => "float",
+            Precision::F16 => "half",
+            Precision::Int8 => "char",
+        }
+    }
+
+    /// OpenCL type of a MAC accumulator at this precision: int8 MACs
+    /// widen into a 32-bit integer and fp16 products accumulate in single
+    /// precision (the standard mixed-precision DSP configuration — and
+    /// what the quantized reference executor models), so only the operand
+    /// stream narrows, never the running sum.
+    pub fn accum_c_type(&self) -> &'static str {
+        match self {
+            Precision::F32 | Precision::F16 => "float",
+            Precision::Int8 => "int",
+        }
+    }
+
+    /// Parse a CLI/user spelling.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "fp32" | "float" => Some(Precision::F32),
+            "f16" | "fp16" | "half" => Some(Precision::F16),
+            "int8" | "i8" | "char" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Every supported precision, widest first.
+    pub fn all() -> [Precision; 3] {
+        [Precision::F32, Precision::F16, Precision::Int8]
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -253,6 +300,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::InC, LoopVar::KH, LoopVar::KW, LoopVar::OutH, LoopVar::OutW],
                     bytes_per_frame: out_elems / oc as u64 * reduction_size * 4,
                     array_bytes: input_shape.bytes() as u64,
+                    elem: None,
                 },
                 Access {
                     buffer: "weights".into(),
@@ -262,6 +310,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::OutC, LoopVar::InC, LoopVar::KH, LoopVar::KW],
                     bytes_per_frame: node.cost.params * 4,
                     array_bytes: node.cost.params * 4,
+                    elem: None,
                 },
                 Access {
                     buffer: "ofmap".into(),
@@ -271,6 +320,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::OutC, LoopVar::OutH, LoopVar::OutW],
                     bytes_per_frame: out_bytes,
                     array_bytes: out_bytes,
+                    elem: None,
                 },
             ];
             LoopNest {
@@ -308,6 +358,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::OutC, LoopVar::KH, LoopVar::KW, LoopVar::OutH, LoopVar::OutW],
                     bytes_per_frame: out_elems * reduction_size * 4,
                     array_bytes: input_shape.bytes() as u64,
+                    elem: None,
                 },
                 Access {
                     buffer: "weights".into(),
@@ -317,6 +368,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::OutC, LoopVar::KH, LoopVar::KW],
                     bytes_per_frame: node.cost.params * 4,
                     array_bytes: node.cost.params * 4,
+                    elem: None,
                 },
                 Access {
                     buffer: "ofmap".into(),
@@ -326,6 +378,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::OutC, LoopVar::OutH, LoopVar::OutW],
                     bytes_per_frame: out_bytes,
                     array_bytes: out_bytes,
+                    elem: None,
                 },
             ];
             LoopNest {
@@ -358,6 +411,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::InC],
                     bytes_per_frame: cin * 4 * *out_features as u64,
                     array_bytes: cin * 4,
+                    elem: None,
                 },
                 Access {
                     buffer: "weights".into(),
@@ -367,6 +421,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::OutC, LoopVar::InC],
                     bytes_per_frame: node.cost.params * 4,
                     array_bytes: node.cost.params * 4,
+                    elem: None,
                 },
                 Access {
                     buffer: "ofmap".into(),
@@ -376,6 +431,7 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                     indexed_by: vec![LoopVar::OutC],
                     bytes_per_frame: out_bytes,
                     array_bytes: out_bytes,
+                    elem: None,
                 },
             ];
             LoopNest {
@@ -412,6 +468,29 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
                 mk_loop(LoopVar::KW, w as u64, true),
             ], out_elems, (h * w) as u64, (c * h * w) as u64 * 4)
         }
+        // Grid boundaries are cross-domain: a quantize reads f32 and
+        // writes the narrow stream, a dequantize reads the narrow stream
+        // and writes f32. Pin the per-access element types so blanket
+        // precision rescaling can never touch the fixed side.
+        Op::Quantize { .. } | Op::Dequantize { .. } => {
+            let loops = match node.shape.chw() {
+                Some((c, h, w)) => vec![
+                    mk_loop(LoopVar::OutC, c as u64, false),
+                    mk_loop(LoopVar::OutH, h as u64, false),
+                    mk_loop(LoopVar::OutW, w as u64, false),
+                ],
+                None => vec![mk_loop(LoopVar::OutC, node.shape.elems() as u64, false)],
+            };
+            let mut nest = elementwise_nest(node, name, loops, out_elems, 1, out_bytes);
+            let (in_p, out_p) = match &node.op {
+                Op::Quantize { precision } => (Precision::F32, *precision),
+                Op::Dequantize { precision } => (*precision, Precision::F32),
+                _ => unreachable!("arm covers quantize/dequantize"),
+            };
+            pin_elem(&mut nest, "ifmap", in_p);
+            pin_elem(&mut nest, "ofmap", out_p);
+            nest
+        }
         // Elementwise / helper ops: one pass over the output.
         _ => {
             let loops = match node.shape.chw() {
@@ -424,6 +503,19 @@ pub fn lower(node: &Node, input_shape: &Shape) -> LoopNest {
             };
             let read_bytes = out_bytes * if matches!(node.op, Op::Add) { 2 } else { 1 };
             elementwise_nest(node, name, loops, out_elems, 1, read_bytes)
+        }
+    }
+}
+
+/// Pin one buffer of a cross-domain nest to a fixed element type,
+/// rescaling its (f32-basis) traffic to that width. Pinned accesses are
+/// exempt from [`crate::schedule::Scheduler::quantize`].
+fn pin_elem(nest: &mut LoopNest, buffer: &str, p: Precision) {
+    for a in &mut nest.accesses {
+        if a.buffer == buffer {
+            a.bytes_per_frame = a.bytes_per_frame * p.bytes() / 4;
+            a.array_bytes = a.array_bytes * p.bytes() / 4;
+            a.elem = Some(p);
         }
     }
 }
@@ -445,6 +537,7 @@ fn elementwise_nest(
             indexed_by: loops.iter().map(|l| l.var).collect(),
             bytes_per_frame: read_bytes,
             array_bytes: read_bytes,
+            elem: None,
         },
         Access {
             buffer: "ofmap".into(),
@@ -454,6 +547,7 @@ fn elementwise_nest(
             indexed_by: loops.iter().filter(|l| !l.reduction).map(|l| l.var).collect(),
             bytes_per_frame: node.cost.out_bytes,
             array_bytes: node.cost.out_bytes,
+            elem: None,
         },
     ];
     LoopNest {

@@ -9,3 +9,35 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+
+/// FNV-1a offset basis (the crate's shared content-hash seed).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Continue an FNV-1a hash over `bytes` from state `h` (start from
+/// [`FNV_OFFSET`], or a prior hash to chain multiple fields).
+pub fn fnv64_with(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a content hash of a byte string.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    fnv64_with(FNV_OFFSET, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_chains() {
+        let a = fnv64(b"hello");
+        assert_eq!(a, fnv64(b"hello"));
+        assert_ne!(a, fnv64(b"hellp"));
+        // Chaining two pieces equals hashing the concatenation.
+        assert_eq!(fnv64_with(fnv64(b"he"), b"llo"), fnv64(b"hello"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Integration tests for the quantization-aware compilation flow: the
+//! precision DSE must produce a Pareto front where reduced precision
+//! actually pays on modeled resources, with a bounded simulated top-1
+//! accuracy delta, and the staged session must thread precision end to
+//! end (kernels, synthesis, serving).
+
+use tvm_fpga_flow::coordinator::SimEngine;
+use tvm_fpga_flow::dse::explore_precisions;
+use tvm_fpga_flow::flow::multi::ReplicaPlan;
+use tvm_fpga_flow::flow::{Compiler, Mode, ModeChoice};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::quant::{self, QParams, QuantConfig, Range};
+use tvm_fpga_flow::texpr::Precision;
+use tvm_fpga_flow::util::prop;
+
+/// Acceptance: `dse --precision int8` yields a front where at least one
+/// int8 design strictly dominates the f32 baseline on every modeled
+/// resource at equal-or-better FPS, and every int8 point carries a
+/// bounded simulated top-1 accuracy delta.
+#[test]
+fn int8_dse_front_dominates_f32_baseline_on_resources() {
+    let compiler = Compiler::default();
+    let g = models::lenet5();
+    let front = explore_precisions(
+        &compiler,
+        &g,
+        Mode::Pipelined,
+        4,
+        &[Precision::F32, Precision::Int8],
+    )
+    .unwrap();
+
+    let base = front.baseline_f32.as_ref().expect("f32 baseline routed");
+    assert!(base.fps > 0.0);
+
+    // Strict resource dominance at equal-or-better FPS.
+    assert!(
+        front.beats_baseline_on_resources(Precision::Int8),
+        "no int8 design dominates the f32 baseline: baseline fps {:.1} dsp {:.3} logic {:.3} bram {:.3}; int8 points: {:?}",
+        base.fps,
+        base.dsp_frac,
+        base.logic_frac,
+        base.bram_frac,
+        front
+            .at(Precision::Int8)
+            .map(|p| (p.fps, p.dsp_frac, p.logic_frac, p.bram_frac))
+            .collect::<Vec<_>>()
+    );
+
+    // The accuracy delta is reported and bounded on every int8 point.
+    let mut int8_points = 0;
+    for p in front.at(Precision::Int8) {
+        int8_points += 1;
+        assert!(p.accuracy_delta_pp > 0.0, "int8 must report a nonzero modeled loss");
+        assert!(p.accuracy_delta_pp < 5.0, "unbounded accuracy delta: {}pp", p.accuracy_delta_pp);
+    }
+    assert!(int8_points > 0, "front has no int8 representation");
+}
+
+/// The folded explorer also sweeps precision: mobilenet's int8 leg must
+/// keep pace with fp32 throughput while spending strictly fewer DSPs.
+#[test]
+fn folded_precision_sweep_saves_resources_on_mobilenet() {
+    let compiler = Compiler::default();
+    let g = models::mobilenet_v1();
+    let front =
+        explore_precisions(&compiler, &g, Mode::Folded, 4, &[Precision::F32, Precision::Int8])
+            .unwrap();
+    let base = front.baseline_f32.as_ref().expect("baseline");
+    let best_int8 = front
+        .results
+        .iter()
+        .find(|(p, _)| *p == Precision::Int8)
+        .and_then(|(_, r)| r.best.clone())
+        .expect("some int8 design routes");
+    assert!(
+        best_int8.fps >= base.fps * 0.9,
+        "int8 {:.2} FPS collapsed vs f32 {:.2}",
+        best_int8.fps,
+        base.fps
+    );
+    assert!(best_int8.dsp_frac < base.dsp_frac, "int8 must pack DSPs");
+    assert!(best_int8.accuracy_delta_pp < 5.0);
+    // The synthesis memo works across the precision sweep too.
+    assert!(front.synth_cache().total() > 0);
+}
+
+/// End-to-end staged session: `with_quantization` threads precision into
+/// kernels, synthesis and the emitted pseudo-OpenCL, and reports accuracy.
+#[test]
+fn with_quantization_threads_precision_end_to_end() {
+    let compiler = Compiler::default();
+    let g = models::lenet5();
+    let f32_acc = compiler.graph(&g).mode(ModeChoice::Pipelined).run().unwrap();
+    let int8_acc = compiler
+        .graph(&g)
+        .mode(ModeChoice::Pipelined)
+        .with_quantization(QuantConfig::int8())
+        .run()
+        .unwrap();
+
+    assert_eq!(int8_acc.precision, Precision::Int8);
+    let report = int8_acc.quant.as_ref().expect("quant report");
+    assert_eq!(report.precision, Precision::Int8);
+    assert!(report.stats.quantize_nodes >= 1);
+    assert!(report.accuracy.delta_pp < 5.0);
+
+    // Modeled resources shrink across the board.
+    let (uf, ui) = (
+        &f32_acc.synthesis.resources.utilization,
+        &int8_acc.synthesis.resources.utilization,
+    );
+    assert!(ui.dsp_frac < uf.dsp_frac, "dsp {} vs {}", ui.dsp_frac, uf.dsp_frac);
+    assert!(ui.bram_frac < uf.bram_frac, "bram {} vs {}", ui.bram_frac, uf.bram_frac);
+    assert!(int8_acc.synthesis.fmax_mhz >= f32_acc.synthesis.fmax_mhz);
+    assert!(int8_acc.performance.fps >= f32_acc.performance.fps * 0.99);
+
+    // Emitted kernels round-trip the dtype metadata. Pipelined activations
+    // move through channels (which carry the narrow type); folded kernels
+    // keep global buffers, which must be typed too.
+    let src = int8_acc.program.to_pseudo_opencl();
+    assert!(src.contains("channel char"), "{src}");
+    assert!(src.contains("dequant_scale"), "{src}");
+    assert!(!src.contains("__global float"), "{src}");
+    let folded_int8 = compiler
+        .graph(&g)
+        .mode(ModeChoice::Folded)
+        .with_quantization(QuantConfig::int8())
+        .run()
+        .unwrap();
+    assert!(
+        folded_int8.program.to_pseudo_opencl().contains("__global char* restrict"),
+        "{}",
+        folded_int8.program.to_pseudo_opencl()
+    );
+    // The f32 compilation is unchanged by the new plumbing.
+    let f32_src = f32_acc.program.to_pseudo_opencl();
+    assert!(f32_src.contains("channel float"));
+    assert!(!f32_src.contains("char"));
+}
+
+/// Empirically-measured (not modeled) accuracy on LeNet-5 stays bounded:
+/// the quantized executor's top-1 decisions overwhelmingly agree with f32.
+#[test]
+fn measured_int8_accuracy_is_bounded_on_lenet() {
+    let g = models::lenet5();
+    let prep = quant::prepare(&g, &QuantConfig::int8().with_data(12)).unwrap();
+    assert!(!prep.report.accuracy.estimated);
+    assert!(
+        prep.report.accuracy.top1_agreement >= 0.75,
+        "agreement {}",
+        prep.report.accuracy.top1_agreement
+    );
+    assert!(prep.report.accuracy.delta_pp <= 25.0);
+}
+
+/// Quantized accelerators serve through the coordinator's sim engines with
+/// precision-tagged replica names.
+#[test]
+fn quantized_replicas_serve_with_tagged_names() {
+    let g = models::lenet5();
+    let plan =
+        ReplicaPlan::build_with(&g, &["stratix10sx"], Some(QuantConfig::int8())).unwrap();
+    assert_eq!(plan.entries[0].accelerator.precision, Precision::Int8);
+    let engines = SimEngine::from_plan(&plan, &g, 8).unwrap();
+    assert_eq!(engines[0].name(), "lenet5@stratix10sx:int8");
+    assert!(engines[0].modeled_fps() > 0.0);
+}
+
+/// Property (via `util::prop`): quantize→dequantize round-trip error is
+/// bounded by half a grid step for in-range values, across both schemes,
+/// and scales are monotone in the calibrated range.
+#[test]
+fn prop_roundtrip_bounds_and_scale_monotonicity() {
+    prop::check("integration-qdq-bounds", |rng, _| {
+        let channels = 1 + rng.below(6) as usize;
+        let ranges: Vec<Range> = (0..channels)
+            .map(|_| {
+                let m = 0.001 + rng.f64() * 50.0;
+                Range::new(-m, m)
+            })
+            .collect();
+        let whole = ranges.iter().fold(Range::EMPTY, |a, r| a.merge(r));
+        let pt = QParams::per_tensor(whole, Precision::Int8);
+        let pc = QParams::per_channel(&ranges, Precision::Int8);
+        for (ch, r) in ranges.iter().enumerate() {
+            let x = (rng.f64() * 2.0 - 1.0) * r.max_abs();
+            for (q, c) in [(&pt, 0), (&pc, ch)] {
+                let err = (q.roundtrip(x, c) - x).abs();
+                assert!(err <= q.step(c) / 2.0 + 1e-12, "err {err} step {}", q.step(c));
+            }
+            // Monotonicity: the per-channel grid never has a coarser step
+            // than the per-tensor grid that must cover every channel.
+            assert!(pc.scale(ch) <= pt.scale(0) + 1e-15);
+        }
+    });
+}
+
+/// fp16 is the gentle rung of the precision ladder: near-zero modeled
+/// loss, DSP packing still engaged.
+#[test]
+fn fp16_compiles_with_negligible_loss() {
+    let compiler = Compiler::default();
+    let g = models::lenet5();
+    let acc = compiler
+        .graph(&g)
+        .mode(ModeChoice::Pipelined)
+        .with_quantization(QuantConfig::fp16())
+        .run()
+        .unwrap();
+    assert_eq!(acc.precision, Precision::F16);
+    assert!(acc.quant.as_ref().unwrap().accuracy.delta_pp < 0.5);
+    assert!(acc.program.to_pseudo_opencl().contains("half"));
+}
