@@ -21,11 +21,27 @@
 //! Q/DQ rewrite + modeled top-1 loss) and swept like any other factor; the
 //! accepted points collapse into an accuracy-vs-FPS-vs-resources Pareto
 //! front ([`PrecisionFront`]).
+//!
+//! Candidate evaluation runs on [`crate::util::pool`] workers: groups
+//! stay sequential (coordinate descent), but the candidates within a
+//! group — which are independent given the best plan so far — fan out and
+//! merge back by submission index, so the log order and the selected
+//! design are identical to the sequential sweep. [`DseResult`] reports
+//! the wall-clock vs summed-per-point time ([`DseResult::parallel_speedup`]).
+//!
+//! [`ablate_passes`] exploits the pass-pipeline refactor for real
+//! ablations: deselecting an optimization rebuilds the design through the
+//! [`crate::pass::PassManager`] with that pass removed from the pipeline.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::flow::{patterns::FactorPlan, CacheStats, Compiler, Mode, OptConfig};
 use crate::graph::{Graph, ParamGroup};
 use crate::quant::{self, QuantConfig};
+use crate::schedule::OptKind;
 use crate::texpr::Precision;
+use crate::util::pool::Pool;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -52,6 +68,12 @@ pub struct DseResult {
     pub evaluated: usize,
     /// Synthesis-memo hits/misses attributable to this exploration.
     pub synth_cache: CacheStats,
+    /// Wall-clock seconds the sweep took (candidates within a group run
+    /// on parallel [`Pool`] workers).
+    pub wall_s: f64,
+    /// Summed per-point evaluation seconds across all workers — the
+    /// sequential-equivalent cost of the same sweep.
+    pub cpu_s: f64,
 }
 
 impl DseResult {
@@ -60,6 +82,22 @@ impl DseResult {
     pub fn synth_cache_hit_rate(&self) -> f64 {
         self.synth_cache.hit_rate()
     }
+
+    /// Wall-clock speedup of the parallel sweep over its
+    /// sequential-equivalent cost (`cpu_s / wall_s`; 1.0 when unknown).
+    pub fn parallel_speedup(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.cpu_s / self.wall_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Worker count for candidate evaluation: the host's parallelism, kept in
+/// [2, 8] so laptop sweeps parallelize and CI runners don't oversubscribe.
+fn dse_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8)
 }
 
 /// Candidate per-dimension tile factors (powers of two are router-friendly
@@ -101,35 +139,68 @@ pub fn explore_folded_with(
     accuracy_delta_pp: f64,
 ) -> DseResult {
     let cache_before = compiler.cache_stats();
+    let sweep_start = Instant::now();
+    let mut cpu_s = 0.0;
     let base_plan = crate::flow::default_factors(graph);
     let groups: Vec<ParamGroup> = base_plan.group_tiles.keys().copied().collect();
 
+    let mut log: Vec<DsePoint> = Vec::new();
+    let mut evaluated = 0usize;
+
+    // Baseline: the default plan (sequential — everything compares to it).
     let mut best_plan = base_plan.clone();
-    let mut log = Vec::new();
-    let mut evaluated = 0;
-    let mut best_fps = eval(
-        compiler, graph, Mode::Folded, cfg, accuracy_delta_pp, &best_plan, &mut log, &mut evaluated,
-    );
+    let t0 = Instant::now();
+    let baseline = point_of(compiler, graph, Mode::Folded, cfg, accuracy_delta_pp, &best_plan);
+    cpu_s += t0.elapsed().as_secs_f64();
+    evaluated += 1;
+    let mut best_fps = baseline.fps;
+    log.push(baseline);
 
     let mut candidates = tile_candidates_ordered();
     candidates.truncate(budget_per_group.max(1));
+    let shared_graph = Arc::new(graph.clone());
+    let pool = Pool::new(dse_workers(), "dse");
 
+    // Coordinate descent over groups (sequential), parallel within a
+    // group: each candidate overwrites only this group's tile in the
+    // best-so-far plan, so candidates are independent. Results merge by
+    // submission index, which reproduces the sequential sweep's log order
+    // and argmax (ties keep the earliest candidate) deterministically.
     for g in &groups {
-        for &(t_ic, t_oc) in &candidates {
-            let mut plan = best_plan.clone();
-            plan.group_tiles.insert(*g, (t_ic, t_oc));
-            let fps = eval(
-                compiler, graph, Mode::Folded, cfg, accuracy_delta_pp, &plan, &mut log,
-                &mut evaluated,
-            );
-            if fps > best_fps {
-                best_fps = fps;
-                best_plan = plan;
+        let handles: Vec<_> = candidates
+            .iter()
+            .map(|&(t_ic, t_oc)| {
+                let compiler = compiler.clone();
+                let graph = Arc::clone(&shared_graph);
+                let cfg = *cfg;
+                let mut plan = best_plan.clone();
+                plan.group_tiles.insert(*g, (t_ic, t_oc));
+                pool.submit_with_result(move || {
+                    let t = Instant::now();
+                    let p =
+                        point_of(&compiler, &graph, Mode::Folded, &cfg, accuracy_delta_pp, &plan);
+                    (p, t.elapsed().as_secs_f64())
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let (p, dt) = h.recv().unwrap_or_else(|_| {
+                panic!(
+                    "dse worker panicked evaluating candidate {i} of group {g:?} \
+                     (panic payload is on the worker thread's stderr)"
+                )
+            });
+            cpu_s += dt;
+            evaluated += 1;
+            if p.rejected.is_none() && p.fps > best_fps {
+                best_fps = p.fps;
+                best_plan = p.plan.clone();
             }
+            log.push(p);
         }
     }
 
-    finish(log, evaluated, compiler, cache_before)
+    finish(log, evaluated, compiler, cache_before, sweep_start.elapsed().as_secs_f64(), cpu_s)
 }
 
 /// Sweep pipelined unroll caps.
@@ -137,7 +208,8 @@ pub fn explore_pipelined(compiler: &Compiler, graph: &Graph) -> DseResult {
     explore_pipelined_with(compiler, graph, &OptConfig::optimized(), 0.0)
 }
 
-/// [`explore_pipelined`] under an explicit optimization config.
+/// [`explore_pipelined`] under an explicit optimization config. The caps
+/// are independent, so all of them evaluate on the worker pool at once.
 pub fn explore_pipelined_with(
     compiler: &Compiler,
     graph: &Graph,
@@ -145,17 +217,38 @@ pub fn explore_pipelined_with(
     accuracy_delta_pp: f64,
 ) -> DseResult {
     let cache_before = compiler.cache_stats();
+    let sweep_start = Instant::now();
+    let shared_graph = Arc::new(graph.clone());
+    let pool = Pool::new(dse_workers(), "dse");
+    let handles: Vec<_> = [16u64, 32, 64, 128, 256, 512, 1024]
+        .into_iter()
+        .map(|cap| {
+            let compiler = compiler.clone();
+            let graph = Arc::clone(&shared_graph);
+            let cfg = *cfg;
+            pool.submit_with_result(move || {
+                let mut plan = crate::flow::default_factors(&graph);
+                plan.pipelined_cap = cap;
+                let t = Instant::now();
+                let p = point_of(&compiler, &graph, Mode::Pipelined, &cfg, accuracy_delta_pp, &plan);
+                (p, t.elapsed().as_secs_f64())
+            })
+        })
+        .collect();
     let mut log = Vec::new();
-    let mut evaluated = 0;
-    for cap in [16u64, 32, 64, 128, 256, 512, 1024] {
-        let mut plan = crate::flow::default_factors(graph);
-        plan.pipelined_cap = cap;
-        eval(
-            compiler, graph, Mode::Pipelined, cfg, accuracy_delta_pp, &plan, &mut log,
-            &mut evaluated,
-        );
+    let mut cpu_s = 0.0;
+    for (i, h) in handles.into_iter().enumerate() {
+        let (p, dt) = h.recv().unwrap_or_else(|_| {
+            panic!(
+                "dse worker panicked evaluating pipelined cap #{i} \
+                 (panic payload is on the worker thread's stderr)"
+            )
+        });
+        cpu_s += dt;
+        log.push(p);
     }
-    finish(log, evaluated, compiler, cache_before)
+    let evaluated = log.len();
+    finish(log, evaluated, compiler, cache_before, sweep_start.elapsed().as_secs_f64(), cpu_s)
 }
 
 fn finish(
@@ -163,6 +256,8 @@ fn finish(
     evaluated: usize,
     compiler: &Compiler,
     cache_before: CacheStats,
+    wall_s: f64,
+    cpu_s: f64,
 ) -> DseResult {
     let best = log
         .iter()
@@ -174,41 +269,32 @@ fn finish(
         hits: after.hits - cache_before.hits,
         misses: after.misses - cache_before.misses,
     };
-    DseResult { best, log, evaluated, synth_cache }
+    DseResult { best, log, evaluated, synth_cache, wall_s, cpu_s }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn eval(
+/// Evaluate one plan into a [`DsePoint`], folding failures (legality,
+/// routing) into `rejected` so the log keeps every candidate.
+fn point_of(
     compiler: &Compiler,
     graph: &Graph,
     mode: Mode,
     cfg: &OptConfig,
     accuracy_delta_pp: f64,
     plan: &FactorPlan,
-    log: &mut Vec<DsePoint>,
-    evaluated: &mut usize,
-) -> f64 {
-    *evaluated += 1;
+) -> DsePoint {
     match eval_point(compiler, graph, mode, cfg, accuracy_delta_pp, plan) {
-        Ok(p) => {
-            let fps = p.fps;
-            log.push(p);
-            fps
-        }
-        Err(e) => {
-            log.push(DsePoint {
-                plan: plan.clone(),
-                fps: 0.0,
-                fmax_mhz: 0.0,
-                dsp_frac: 0.0,
-                logic_frac: 0.0,
-                bram_frac: 0.0,
-                precision: cfg.precision,
-                accuracy_delta_pp,
-                rejected: Some(e.to_string()),
-            });
-            0.0
-        }
+        Ok(p) => p,
+        Err(e) => DsePoint {
+            plan: plan.clone(),
+            fps: 0.0,
+            fmax_mhz: 0.0,
+            dsp_frac: 0.0,
+            logic_frac: 0.0,
+            bram_frac: 0.0,
+            precision: cfg.precision,
+            accuracy_delta_pp,
+            rejected: Some(e.to_string()),
+        },
     }
 }
 
@@ -239,6 +325,65 @@ fn eval_point(
         accuracy_delta_pp,
         rejected: None,
     })
+}
+
+/// One pipeline-subset evaluation: the full pipeline (`disabled: None`)
+/// or the pipeline with one pass deselected.
+#[derive(Debug, Clone)]
+pub struct AblationPoint {
+    /// The pass removed from the pipeline (`None` = full pipeline).
+    pub disabled: Option<OptKind>,
+    pub fps: f64,
+    /// Table III row of the resulting design (empty when it failed).
+    pub applied: Vec<OptKind>,
+    /// Rejection reason when the subset failed to compile/route.
+    pub rejected: Option<String>,
+}
+
+/// Pipeline-subset ablation: because every optimization is a registered
+/// pass selected by [`OptConfig`], deselecting one is a real pipeline
+/// permutation — the design is rebuilt by the
+/// [`crate::pass::PassManager`] without that pass, not patched up. The
+/// first point is the full pipeline; each subsequent point removes one of
+/// `kinds`.
+pub fn ablate_passes(
+    compiler: &Compiler,
+    graph: &Graph,
+    mode: Mode,
+    kinds: &[OptKind],
+) -> Vec<AblationPoint> {
+    let plan = crate::flow::default_factors(graph);
+    let mut points = Vec::with_capacity(kinds.len() + 1);
+    points.push(ablation_point(compiler, graph, mode, &OptConfig::optimized(), &plan, None));
+    for &k in kinds {
+        let cfg = OptConfig::optimized().without(k);
+        points.push(ablation_point(compiler, graph, mode, &cfg, &plan, Some(k)));
+    }
+    points
+}
+
+fn ablation_point(
+    compiler: &Compiler,
+    graph: &Graph,
+    mode: Mode,
+    cfg: &OptConfig,
+    plan: &FactorPlan,
+    disabled: Option<OptKind>,
+) -> AblationPoint {
+    match compiler.compile_with(graph, mode, cfg, plan) {
+        Ok(acc) => AblationPoint {
+            disabled,
+            fps: acc.performance.fps,
+            applied: acc.applied.clone(),
+            rejected: None,
+        },
+        Err(e) => AblationPoint {
+            disabled,
+            fps: 0.0,
+            applied: Vec::new(),
+            rejected: Some(e.to_string()),
+        },
+    }
 }
 
 /// One point of the accuracy-vs-FPS-vs-resources trade-off surface.
@@ -468,13 +613,58 @@ mod tests {
         for (_, t) in plan.group_tiles.iter_mut() {
             *t = (64, 64);
         }
-        let mut log = Vec::new();
-        let mut n = 0;
-        let fps =
-            eval(&compiler, &g, Mode::Folded, &OptConfig::optimized(), 0.0, &plan, &mut log, &mut n);
-        assert_eq!(fps, 0.0);
-        assert!(log[0].rejected.is_some());
-        assert_eq!(log[0].precision, Precision::F32);
+        let p = point_of(&compiler, &g, Mode::Folded, &OptConfig::optimized(), 0.0, &plan);
+        assert_eq!(p.fps, 0.0);
+        assert!(p.rejected.is_some());
+        assert_eq!(p.precision, Precision::F32);
+    }
+
+    #[test]
+    fn parallel_sweep_is_deterministic_and_reports_speedup() {
+        // Fresh compiler (= fresh synthesis memo) per run: with the
+        // single-flight memo the hit/miss split is deterministic too —
+        // misses = distinct programs, hits = revisits.
+        let g = models::mobilenet_v1();
+        let a = explore_folded(&Compiler::default(), &g, 8);
+        let b = explore_folded(&Compiler::default(), &g, 8);
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.log.len(), b.log.len());
+        assert_eq!(a.synth_cache, b.synth_cache, "cache counters must be deterministic");
+        // Merge-by-index keeps the log in the sequential sweep's order.
+        for (x, y) in a.log.iter().zip(&b.log) {
+            assert_eq!(x.fps, y.fps);
+            assert_eq!(x.plan.group_tiles, y.plan.group_tiles);
+            assert_eq!(x.rejected.is_some(), y.rejected.is_some());
+        }
+        assert_eq!(a.best.as_ref().map(|p| p.fps), b.best.as_ref().map(|p| p.fps));
+        // Wall-clock accounting is populated; cpu time covers all points.
+        assert!(a.wall_s > 0.0);
+        assert!(a.cpu_s > 0.0);
+        assert!(a.parallel_speedup() > 0.0);
+    }
+
+    #[test]
+    fn ablation_rebuilds_pipeline_subsets() {
+        let compiler = Compiler::default();
+        let g = models::lenet5();
+        let kinds = [OptKind::Unroll, OptKind::Channels, OptKind::CachedWrite];
+        let points = ablate_passes(&compiler, &g, Mode::Pipelined, &kinds);
+        assert_eq!(points.len(), kinds.len() + 1);
+        let full = &points[0];
+        assert_eq!(full.disabled, None);
+        assert!(full.rejected.is_none());
+        for p in &points[1..] {
+            let k = p.disabled.expect("ablated point names its pass");
+            assert!(
+                !p.applied.contains(&k),
+                "{k:?} still applied after deselection: {:?}",
+                p.applied
+            );
+        }
+        // Unrolling is the dominant lever on LeNet — removing it hurts.
+        let no_unroll =
+            points.iter().find(|p| p.disabled == Some(OptKind::Unroll)).unwrap();
+        assert!(no_unroll.fps < full.fps);
     }
 
     #[test]

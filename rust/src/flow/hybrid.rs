@@ -113,6 +113,7 @@ impl Compiler {
         cfg: &OptConfig,
         plan: &FactorPlan,
     ) -> crate::Result<HybridAccelerator> {
+        cfg.validate()?;
         let (front_g, back_g) =
             split(graph, cut).ok_or_else(|| anyhow::anyhow!("cut {cut} is not a clean frontier"))?;
 

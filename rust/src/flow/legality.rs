@@ -22,6 +22,36 @@ pub fn divisors_leq(extent: u64, cap: u64) -> Vec<u64> {
     (1..=cap.min(extent)).filter(|f| extent % f == 0).collect()
 }
 
+/// Pass-level mode precondition: several Table I optimizations are legal
+/// in one execution mode only (§III/§IV). `Err` carries the trace-visible
+/// reason naming the restriction, so a skipped pass explains itself.
+pub fn mode_restriction(
+    pass: &str,
+    required: super::Mode,
+    actual: super::Mode,
+    rule: &str,
+) -> Result<(), String> {
+    if required == actual {
+        Ok(())
+    } else {
+        Err(format!(
+            "{pass} requires {} mode but the design is {} — {rule}",
+            required.name(),
+            actual.name()
+        ))
+    }
+}
+
+/// §VII #2: the zero-skipping datapath's weight-density domain is (0, 1].
+/// Values outside it would scale traffic by nonsense factors.
+pub fn sparsity_domain(density: f64) -> Result<(), String> {
+    if density > 0.0 && density <= 1.0 {
+        Ok(())
+    } else {
+        Err(format!("weight density {density} outside the (0, 1] sparsity domain (§VII #2)"))
+    }
+}
+
 /// Violations found by [`check_program`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum Violation {

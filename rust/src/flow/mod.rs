@@ -70,16 +70,16 @@ impl Mode {
 
 /// Build the pipelined candidate design and return it when its estimated
 /// utilization fits the device — the auto-mode decision, exposed crate-side
-/// so `CompileSession::lower` can reuse the build instead of lowering the
-/// same program twice.
+/// so `CompileSession::lower` can reuse the build (program, work list and
+/// pass trace) instead of lowering the same program twice.
 pub(crate) fn auto_pipelined_candidate(
     graph: &Graph,
     dev: &FpgaDevice,
     cfg: &OptConfig,
     plan: &FactorPlan,
-) -> Option<(KernelProgram, Vec<LayerWork>)> {
-    let built = patterns::build_pipelined(graph, cfg, plan);
-    let u = crate::aoc::resources::program_resources(&built.0, dev).utilization;
+) -> Option<patterns::BuiltProgram> {
+    let built = patterns::build_with_passes(graph, Mode::Pipelined, cfg, plan);
+    let u = crate::aoc::resources::program_resources(&built.program, dev).utilization;
     (u.bram_frac < 0.6 && u.logic_frac < 0.8).then_some(built)
 }
 
@@ -112,6 +112,13 @@ pub struct Accelerator {
     /// Quantization report when the session quantized (calibration,
     /// boundary statistics, modeled top-1 loss).
     pub quant: Option<crate::quant::QuantReport>,
+    /// Ordered trace of every graph/schedule pass the [`PassManager`]
+    /// ran (or skipped, with the blocking rule) for this compilation —
+    /// rendered by `fpga-flow explain` and emitted as the `pass_trace`
+    /// section of `report_json`.
+    ///
+    /// [`PassManager`]: crate::pass::PassManager
+    pub pass_trace: crate::pass::PassTrace,
 }
 
 impl Accelerator {

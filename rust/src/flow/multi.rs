@@ -61,6 +61,7 @@ impl Compiler {
         link: &Link,
     ) -> crate::Result<MultiAccelerator> {
         anyhow::ensure!(devices >= 1, "need at least one device");
+        cfg.validate()?;
         let dev = &self.target.device;
         let (prog, work) = patterns::build_folded(graph, cfg, plan);
 

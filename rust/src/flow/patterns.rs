@@ -1,5 +1,5 @@
-//! Pattern-based application of the paper's optimizations (Table I) and
-//! the construction of the kernel program for each execution mode (§III).
+//! Optimization selection and program construction for the two execution
+//! modes (§III) — now a thin layer over the [`crate::pass`] subsystem.
 //!
 //! | Opt | Pipelined | Folded | Pattern (Table I)                          |
 //! |-----|-----------|--------|--------------------------------------------|
@@ -12,18 +12,34 @@
 //! | CE  | ✓         |        | host optimization                          |
 //! | PK  |           | ✓      | convs with same stride and filter size     |
 //! | LT  |           | ✓      | conv, FC                                   |
+//!
+//! Each row is implemented by a registered [`crate::pass::SchedulePass`]
+//! whose applicability pattern lives *in the pass*; [`OptConfig`] is the
+//! thin builder that selects passes into a [`Pipeline`], and
+//! [`build_with_passes`] lowers the graph to the neutral per-node program
+//! ([`crate::pass::lower_to_kernels`]) and runs the
+//! [`crate::pass::PassManager`] over it, returning the program, the
+//! per-layer work list and the report-visible [`PassTrace`].
 
 use std::collections::BTreeMap;
 
-use crate::codegen::{Channel, Kernel, KernelProgram};
-use crate::graph::{Graph, GroupKind, Node, Op, ParamGroup};
-use crate::schedule::{OptKind, Scheduler};
+use crate::codegen::KernelProgram;
+use crate::graph::{Graph, GroupKind, ParamGroup};
+use crate::pass::{
+    self, AutorunKernels, CachedWrites, Channelize, ConcurrentQueues, FloatOpts, FuseEpilogues,
+    ParameterizeKernels, PassManager, PassTrace, Pipeline, QuantizeDatapath, ScheduleCtx,
+    SparsifyWeights, TileLoops, UnrollLoops, VectorizeLoads,
+};
+use crate::schedule::OptKind;
 use crate::sim::folded::LayerWork;
-use crate::texpr::{self, Epilogue, LoopVar};
+use crate::texpr;
 
-use super::legality;
+use super::session::CompileError;
+use super::Mode;
 
-/// Which optimizations are enabled (ablation switch-board).
+/// Which optimizations are enabled (ablation switch-board). A thin
+/// builder: [`OptConfig::schedule_pipeline`] turns the selection into the
+/// ordered pass [`Pipeline`] the [`PassManager`] executes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OptConfig {
     pub unroll: bool,
@@ -42,6 +58,8 @@ pub struct OptConfig {
     /// Extension (§VII future work #2): weight density in (0, 1] — a
     /// zero-skipping datapath (HPIPE-style, the paper's related work §VI)
     /// skips MACs whose weight is pruned away. 1.0 = dense (the paper).
+    /// Values outside (0, 1] are rejected by [`OptConfig::validate`] with
+    /// a typed [`CompileError`] when the session compiles.
     pub weight_density: f64,
 }
 
@@ -85,8 +103,9 @@ impl OptConfig {
     }
 
     /// Extension (§VII #2): prune weights to `density` and skip zero MACs.
+    /// The density's (0, 1] domain is enforced at compile time by
+    /// [`OptConfig::validate`].
     pub fn with_sparsity(mut self, density: f64) -> Self {
-        assert!((0.0..=1.0).contains(&density) && density > 0.0);
         self.weight_density = density;
         self
     }
@@ -120,6 +139,74 @@ impl OptConfig {
             OptKind::Sparsify => self.weight_density = 1.0,
         }
         self
+    }
+
+    /// Check every field against its legal domain. The compile session
+    /// rejects invalid configs with a typed [`CompileError`] instead of
+    /// silently producing nonsense costs.
+    pub fn validate(&self) -> Result<(), CompileError> {
+        if !(self.weight_density > 0.0 && self.weight_density <= 1.0) {
+            return Err(CompileError::InvalidOptConfig {
+                field: "weight_density",
+                value: self.weight_density,
+                reason: "must lie in (0, 1] — the zero-skipping datapath's density domain (§VII #2)",
+            });
+        }
+        Ok(())
+    }
+
+    /// Build the ordered schedule-pass pipeline this selection enables.
+    /// Mode-restricted passes (PK/LT folded-only, CH/AR/CE
+    /// pipelined-only) are always included when selected; their
+    /// preconditions skip them — visibly, with the blocking rule in the
+    /// trace — when the mode forbids them.
+    ///
+    /// Order is canonical: LF → PK → OF → Q → VT → SP → LT → LU → CW →
+    /// CH → AR → CE. The structural passes lead — LF must precede PK
+    /// (absorption targets per-layer kernels, not merged groups) and both
+    /// run before the per-kernel rewrites so merged-away kernels are
+    /// never scheduled; Q precedes SP and CW because traffic rescaling
+    /// truncates and BRAM stashes are sized at the datapath's element
+    /// width.
+    pub fn schedule_pipeline(&self) -> Pipeline {
+        let mut p = Pipeline::default();
+        if self.fuse {
+            p = p.schedule(FuseEpilogues);
+        }
+        if self.parameterize {
+            p = p.schedule(ParameterizeKernels);
+        }
+        if self.float_opt {
+            p = p.schedule(FloatOpts);
+        }
+        if self.precision != crate::texpr::Precision::F32 {
+            p = p.schedule(QuantizeDatapath::new(self.precision));
+        }
+        if self.vectorize {
+            p = p.schedule(VectorizeLoads);
+        }
+        if self.weight_density < 1.0 {
+            p = p.schedule(SparsifyWeights::new(self.weight_density));
+        }
+        if self.tile && self.unroll {
+            p = p.schedule(TileLoops);
+        }
+        if self.unroll {
+            p = p.schedule(UnrollLoops::new(self.tile));
+        }
+        if self.cached_writes {
+            p = p.schedule(CachedWrites);
+        }
+        if self.channels {
+            p = p.schedule(Channelize);
+        }
+        if self.autorun {
+            p = p.schedule(AutorunKernels);
+        }
+        if self.concurrent {
+            p = p.schedule(ConcurrentQueues);
+        }
+        p
     }
 }
 
@@ -175,410 +262,65 @@ pub fn default_factors(graph: &Graph) -> FactorPlan {
     plan
 }
 
-/// Is `node` an epilogue op (BN / activation) fusible into its producer?
-fn fusible_epilogue(graph: &Graph, node: &Node, consumers: &[Vec<usize>]) -> bool {
-    if !matches!(node.op, Op::BatchNorm | Op::Activate(_)) {
-        return false;
-    }
-    let producer = &graph.nodes[node.inputs[0]];
-    // Fuse into compute ops and pooling (Table I pattern), when the
-    // producer has no other consumer.
-    (producer.op.is_compute()
-        || matches!(producer.op, Op::BatchNorm | Op::Activate(_) | Op::Add | Op::MaxPool { .. } | Op::AvgPool { .. }))
-        && consumers[producer.id].len() == 1
+/// A pass-built program: the kernels, the per-layer work list and the
+/// trace of every pass that ran (or was skipped, with its reason).
+#[derive(Debug, Clone)]
+pub struct BuiltProgram {
+    pub program: KernelProgram,
+    pub work: Vec<LayerWork>,
+    pub trace: PassTrace,
 }
 
-fn epilogue_of_node(node: &Node) -> Epilogue {
-    match node.op {
-        Op::BatchNorm => Epilogue::BatchNormFold,
-        Op::Activate(a) => Epilogue::Activation(a),
-        _ => unreachable!("only BN/Act absorb"),
-    }
-}
-
-/// Resolve the kernel-bearing ancestor of `id` after fusion/skip decisions:
-/// follows through absorbed BN/Act nodes and Flatten/Input pass-throughs.
-fn resolve_producer(absorbed_into: &BTreeMap<usize, usize>, skipped: &[bool], graph: &Graph, mut id: usize) -> usize {
-    loop {
-        if let Some(&host) = absorbed_into.get(&id) {
-            id = host;
-            continue;
-        }
-        if skipped[id] {
-            match graph.nodes[id].inputs.first() {
-                Some(&prev) => {
-                    id = prev;
-                    continue;
-                }
-                None => return id, // graph input: no producing kernel
-            }
-        }
-        return id;
-    }
-}
-
-/// Layer-to-kernel construction shared by both modes. Returns, per
-/// surviving node: its scheduled kernel, plus the absorption map.
-struct Mapped {
-    kernels: Vec<Kernel>,
-    /// node id → kernel index (for surviving nodes).
-    node_kernel: BTreeMap<usize, usize>,
-    /// absorbed node → host node.
-    absorbed_into: BTreeMap<usize, usize>,
-    skipped: Vec<bool>,
-}
-
-fn map_layers(graph: &Graph, cfg: &OptConfig, folded: bool, plan: &FactorPlan) -> Mapped {
-    let consumers = graph.consumers();
-    let mut absorbed_into: BTreeMap<usize, usize> = BTreeMap::new();
-    let mut skipped = vec![false; graph.nodes.len()];
-    // Pass 1: decide skips (Input/Flatten/Transform are layout-only) and
-    // epilogue absorption (LF).
-    for node in graph.topo() {
-        match node.op {
-            Op::Input | Op::Flatten | Op::Transform => skipped[node.id] = true,
-            _ => {}
-        }
-        if cfg.fuse && fusible_epilogue(graph, node, &consumers) {
-            // Chase through already-absorbed producers so conv→bn→relu
-            // folds completely into the conv kernel.
-            let mut host = node.inputs[0];
-            while let Some(&h) = absorbed_into.get(&host) {
-                host = h;
-            }
-            // Table I pattern: activation/batchnorm fuse into conv, FC and
-            // pooling; residual adds also take the trailing ReLU.
-            if graph.nodes[host].op.is_compute()
-                || matches!(
-                    graph.nodes[host].op,
-                    Op::Add | Op::MaxPool { .. } | Op::AvgPool { .. } | Op::GlobalAvgPool
-                )
-            {
-                absorbed_into.insert(node.id, host);
-            }
-        }
-    }
-
-    // Pass 2: build kernels.
-    let mut kernels: Vec<Kernel> = Vec::new();
-    let mut node_kernel: BTreeMap<usize, usize> = BTreeMap::new();
-    // Folded: one kernel per parameter group.
-    let mut group_kernel: BTreeMap<ParamGroup, usize> = BTreeMap::new();
-
-    for node in graph.topo() {
-        if skipped[node.id] || absorbed_into.contains_key(&node.id) {
-            continue;
-        }
-        let input_shape = &graph.nodes[node.inputs[0]].shape;
-
-        if folded && cfg.parameterize {
-            if let Some(g) = node.op.param_group() {
-                if let Some(&kid) = group_kernel.get(&g) {
-                    node_kernel.insert(node.id, kid);
-                    // Extend the group's epilogue set with this layer's
-                    // absorbed ops (runtime-selected per layer).
-                    continue;
-                }
-            }
-        }
-
-        let mut nest = texpr::lower(node, input_shape);
-        let mut s = Scheduler::new(&mut nest);
-
-        // Absorb fused epilogues (LF).
-        for (&abs, &host) in &absorbed_into {
-            if host == node.id {
-                s.absorb_epilogue(epilogue_of_node(&graph.nodes[abs]));
-            }
-        }
-        if cfg.fuse && s.nest.separate_epilogue {
-            let _ = s.fuse_epilogue();
-        }
-
-        // CW: cached accumulation (all kernels except transpose/padding).
-        if cfg.cached_writes && !node.op.unroll_exempt() {
-            let _ = s.cache_write();
-        }
-
-        // OF: float flags apply to the whole bitstream.
-        if cfg.float_opt {
-            s.applied.record(OptKind::FloatOpt);
-        }
-
-        // Extensions: reduced precision + vector types (§VII / §V-F).
-        // Only grid-domain kernels narrow — f32 islands the Q/DQ rewrite
-        // deliberately left wide (softmax, global pooling, dequantize)
-        // keep their f32 buffers; a Quantize boundary writes the narrow
-        // stream, so it is scheduled at the target precision too.
-        if cfg.precision != crate::texpr::Precision::F32
-            && (crate::quant::rewrite::grid_capable(&node.op)
-                || matches!(node.op, Op::Quantize { .. }))
-        {
-            s.quantize(cfg.precision);
-        }
-        if cfg.vectorize {
-            s.vectorize("ifmap");
-        }
-        if cfg.weight_density < 1.0 && node.op.is_compute() {
-            s.sparsify(cfg.weight_density);
-        }
-
-        // LU/LT: factor selection per mode.
-        if node.op.is_compute() {
-            if folded {
-                if cfg.parameterize {
-                    s.parameterize();
-                }
-                if cfg.tile && cfg.unroll {
-                    apply_folded_tiles(&mut s, node, plan);
-                } else if cfg.unroll {
-                    // unroll without tiling: full filter taps only
-                    for v in [LoopVar::KH, LoopVar::KW] {
-                        let _ = s.unroll(v);
-                    }
-                }
-                // Folded kernels stage operand tiles in BRAM.
-                if cfg.cached_writes {
-                    let _ = s.cache_read("weights");
-                    let _ = s.cache_read("ifmap");
-                    tile_stash_bytes(&mut s, plan, node);
-                }
-            } else if cfg.unroll {
-                apply_pipelined_unroll(&mut s, node, plan);
-            }
-        } else if cfg.unroll && !node.op.unroll_exempt() {
-            // Pools etc: unroll the window taps (Table I: all kernels
-            // except transpose/padding), capped at 8 per dim so huge
-            // global-average windows stay under the bandwidth roof.
-            for v in [LoopVar::KH, LoopVar::KW] {
-                if let Some(l) = s.nest.find_loop(v) {
-                    let f = legality::largest_divisor_leq(l.extent, 8);
-                    let _ = s.tile_and_unroll(v, f);
-                }
-            }
-            if !folded {
-                record_strip_mine_as_unroll(&mut s);
-            }
-        }
-
-        // CH: pipelined activations move via channels; first/last kernels
-        // keep their global image/logits access.
-        if !folded && cfg.channels {
-            s.channelize("ifmap");
-            s.channelize("ofmap");
-            let _ = s.cache_read("weights"); // weight stash in BRAM
-        }
-
-        let applied = s.finish();
-        let kid = kernels.len();
-        kernels.push(Kernel {
-            id: kid,
-            name: format!("k{}_{}", kid, nest.name),
-            nest,
-            applied,
-            autorun: false, // decided after channel wiring
-            layers: vec![node.id],
-            group: if folded && cfg.parameterize { node.op.param_group() } else { None },
-            queue: 0,
-        });
-        node_kernel.insert(node.id, kid);
-        if folded && cfg.parameterize {
-            if let Some(g) = node.op.param_group() {
-                group_kernel.insert(g, kid);
-            }
-        }
-    }
-
-    // Record layer membership for group kernels.
-    for (&nid, &kid) in &node_kernel {
-        if !kernels[kid].layers.contains(&nid) {
-            kernels[kid].layers.push(nid);
-        }
-    }
-
-    Mapped { kernels, node_kernel, absorbed_into, skipped }
-}
-
-/// In pipelined mode strip-mine+full-inner-unroll is reported as LU, not
-/// LT — the paper's Table III applies LT only to folded designs.
-fn record_strip_mine_as_unroll(s: &mut Scheduler) {
-    if s.applied.opts.contains(&OptKind::Tile) {
-        s.applied.opts.retain(|o| *o != OptKind::Tile);
-        s.applied.record(OptKind::Unroll);
-    }
-}
-
-fn apply_pipelined_unroll(s: &mut Scheduler, node: &Node, plan: &FactorPlan) {
-    let cap = plan.pipelined_cap.max(1);
-    match node.op {
-        Op::Dense { .. } => {
-            let (t_in, _) = plan.dense_tile;
-            let extent = s.nest.find_loop(LoopVar::InC).map(|l| l.extent).unwrap_or(1);
-            let f = legality::largest_divisor_leq(extent, t_in);
-            let _ = s.tile_and_unroll(LoopVar::InC, f);
-            record_strip_mine_as_unroll(s);
-        }
-        _ => {
-            // Unroll reduction loops innermost-first while ≤ cap, then the
-            // output-channel loop if it still fits (full unrolls only).
-            let mut product = 1u64;
-            for v in [LoopVar::KW, LoopVar::KH, LoopVar::InC] {
-                if let Some(l) = s.nest.find_loop(v) {
-                    if l.reduction && product * l.extent <= cap {
-                        product *= l.extent;
-                        let _ = s.unroll(v);
-                    }
-                }
-            }
-            if let Some(l) = s.nest.find_loop(LoopVar::OutC) {
-                if product * l.extent <= cap {
-                    let _ = s.unroll(LoopVar::OutC);
-                }
-            }
-        }
-    }
-}
-
-fn apply_folded_tiles(s: &mut Scheduler, node: &Node, plan: &FactorPlan) {
-    let Some(g) = node.op.param_group() else { return };
-    match g.kind {
-        GroupKind::Dense => {
-            let (t_in, t_out) = plan.dense_tile;
-            for (v, t) in [(LoopVar::InC, t_in), (LoopVar::OutC, t_out)] {
-                if let Some(l) = s.nest.find_loop(v) {
-                    let f = legality::largest_divisor_leq(l.extent, t);
-                    let _ = s.tile_and_unroll(v, f);
-                }
-            }
-        }
-        GroupKind::Depthwise => {
-            let (t_c, _) = plan.group_tiles.get(&g).copied().unwrap_or((8, 1));
-            for v in [LoopVar::KH, LoopVar::KW] {
-                let _ = s.unroll(v);
-            }
-            if let Some(l) = s.nest.find_loop(LoopVar::OutC) {
-                let f = legality::largest_divisor_leq(l.extent, t_c);
-                let _ = s.tile_and_unroll(LoopVar::OutC, f);
-            }
-        }
-        GroupKind::Conv => {
-            let (t_ic, t_oc) = plan.group_tiles.get(&g).copied().unwrap_or((8, 8));
-            if g.kernel >= 3 {
-                for v in [LoopVar::KH, LoopVar::KW] {
-                    let _ = s.unroll(v);
-                }
-            }
-            if let Some(l) = s.nest.find_loop(LoopVar::InC) {
-                let f = legality::largest_divisor_leq(l.extent, t_ic);
-                let _ = s.tile_and_unroll(LoopVar::InC, f);
-            }
-            if let Some(l) = s.nest.find_loop(LoopVar::OutC) {
-                let f = legality::largest_divisor_leq(l.extent, t_oc);
-                let _ = s.tile_and_unroll(LoopVar::OutC, f);
-            }
-        }
-    }
-}
-
-/// Size the BRAM tile stashes of a folded kernel: double-buffered weight
-/// tile + an input line strip, at the datapath's element width.
-fn tile_stash_bytes(s: &mut Scheduler, plan: &FactorPlan, node: &Node) {
-    let Some(g) = node.op.param_group() else { return };
-    let (t_ic, t_oc) = plan.group_tiles.get(&g).copied().unwrap_or((8, 8));
-    let k2 = (g.kernel * g.kernel) as u64;
-    let eb = s.nest.precision.bytes();
-    for a in &mut s.nest.accesses {
-        if a.space == crate::texpr::MemSpace::Local {
-            a.array_bytes = match a.buffer.as_str() {
-                "weights" => 2 * t_ic * t_oc * k2 * eb,
-                // strip of k input rows × tile channels (max W on chip 224)
-                "ifmap" => 2 * t_ic * (g.kernel as u64) * 224 * eb,
-                _ => a.array_bytes,
-            };
-        }
-    }
+/// Lower `graph` to the neutral per-node program and run `cfg`'s schedule
+/// pipeline over it through the [`PassManager`].
+pub fn build_with_passes(
+    graph: &Graph,
+    mode: Mode,
+    cfg: &OptConfig,
+    plan: &FactorPlan,
+) -> BuiltProgram {
+    // The session path rejects invalid configs with a typed error before
+    // reaching here; direct callers (hybrid/multi/benches) get a loud
+    // debug check — in release an out-of-domain pass skips with its
+    // reason recorded in the trace rather than panicking mid-build.
+    debug_assert!(cfg.validate().is_ok(), "invalid OptConfig: {:?}", cfg.validate().err());
+    let pipeline = cfg.schedule_pipeline();
+    let mut manager = PassManager::new();
+    let mut program = pass::lower_to_kernels(graph, mode);
+    let ctx = ScheduleCtx { graph, plan, mode };
+    manager.run_schedule_passes(&pipeline, &ctx, &mut program);
+    let work = work_list(graph, &program);
+    BuiltProgram { program, work, trace: manager.into_trace() }
 }
 
 /// Build the pipelined-mode program (§III): one kernel per surviving layer,
 /// channel-connected in topological order.
-pub fn build_pipelined(graph: &Graph, cfg: &OptConfig, plan: &FactorPlan) -> (KernelProgram, Vec<LayerWork>) {
-    let mut mapped = map_layers(graph, cfg, false, plan);
-
-    // Channels between consecutive kernels (CH). Each FIFO carries its
-    // *producer's* element type: quantized streams pack more elements per
-    // BRAM block (§VII extension), while f32-island stages keep wide FIFOs.
-    let mut channels = Vec::new();
-    if cfg.channels {
-        let depth = (graph.max_activation_bytes() / 4).max(16);
-        for k in &mapped.kernels {
-            let node = &graph.nodes[k.layers[0]];
-            for &inp in &node.inputs {
-                let src = resolve_producer(&mapped.absorbed_into, &mapped.skipped, graph, inp);
-                if let Some(&src_k) = mapped.node_kernel.get(&src) {
-                    if src_k != k.id {
-                        channels.push(Channel {
-                            name: format!("ch_{}_{}", src_k, k.id),
-                            from_kernel: src_k,
-                            to_kernel: k.id,
-                            depth,
-                            elem: mapped.kernels[src_k].nest.precision,
-                        });
-                    }
-                }
-            }
-        }
-    }
-
-    // AR: weightless channel-only kernels become autorun.
-    if cfg.autorun {
-        for k in &mut mapped.kernels {
-            let node = &graph.nodes[k.layers[0]];
-            if !node.op.has_weights() && k.autorun_eligible() {
-                k.autorun = true;
-                k.applied.record(OptKind::Autorun);
-            }
-        }
-    }
-
-    // CE: one queue per kernel.
-    let queues = if cfg.concurrent { mapped.kernels.len().max(1) } else { 1 };
-    if cfg.concurrent {
-        for (q, k) in mapped.kernels.iter_mut().enumerate() {
-            k.queue = q;
-            k.applied.record(OptKind::Concurrent);
-        }
-    }
-
-    let prog = KernelProgram { name: format!("{}_pipelined", graph.name), kernels: mapped.kernels, channels, queues };
-    let work = work_list(graph, &mapped.node_kernel, &mapped.absorbed_into, &mapped.skipped);
-    (prog, work)
+pub fn build_pipelined(
+    graph: &Graph,
+    cfg: &OptConfig,
+    plan: &FactorPlan,
+) -> (KernelProgram, Vec<LayerWork>) {
+    let built = build_with_passes(graph, Mode::Pipelined, cfg, plan);
+    (built.program, built.work)
 }
 
 /// Build the folded-mode program (§III, §IV-H): parameterized kernels per
 /// (filter, stride) group; feature maps round-trip through global memory.
-pub fn build_folded(graph: &Graph, cfg: &OptConfig, plan: &FactorPlan) -> (KernelProgram, Vec<LayerWork>) {
-    let mapped = map_layers(graph, cfg, true, plan);
-    let prog = KernelProgram {
-        name: format!("{}_folded", graph.name),
-        kernels: mapped.kernels,
-        channels: vec![],
-        queues: 1, // CE not applicable (§IV-J)
-    };
-    let work = work_list(graph, &mapped.node_kernel, &mapped.absorbed_into, &mapped.skipped);
-    (prog, work)
+pub fn build_folded(
+    graph: &Graph,
+    cfg: &OptConfig,
+    plan: &FactorPlan,
+) -> (KernelProgram, Vec<LayerWork>) {
+    let built = build_with_passes(graph, Mode::Folded, cfg, plan);
+    (built.program, built.work)
 }
 
-fn work_list(
-    graph: &Graph,
-    node_kernel: &BTreeMap<usize, usize>,
-    absorbed: &BTreeMap<usize, usize>,
-    skipped: &[bool],
-) -> Vec<LayerWork> {
+/// Per-layer dispatch list in topological order: every graph node that
+/// survived lowering (owned by some kernel) contributes one entry.
+fn work_list(graph: &Graph, prog: &KernelProgram) -> Vec<LayerWork> {
+    let node_kernel = pass::schedule::node_kernel_map(prog);
     let mut work = Vec::new();
     for node in graph.topo() {
-        if skipped[node.id] || absorbed.contains_key(&node.id) {
-            continue;
-        }
         let Some(&kid) = node_kernel.get(&node.id) else { continue };
         let nest = texpr::lower(node, &graph.nodes[node.inputs[0]].shape);
         work.push(LayerWork {
@@ -697,6 +439,31 @@ mod tests {
             for l in &k.nest.loops {
                 assert_eq!(l.extent % l.unroll, 0, "kernel {} loop {:?}", k.name, l.var);
             }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_domain_density() {
+        for bad in [0.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            let cfg = OptConfig::optimized().with_sparsity(bad);
+            let err = cfg.validate().unwrap_err();
+            assert!(
+                matches!(err, CompileError::InvalidOptConfig { field: "weight_density", .. }),
+                "{bad}: {err:?}"
+            );
+        }
+        assert!(OptConfig::optimized().with_sparsity(0.5).validate().is_ok());
+        assert!(OptConfig::optimized().validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_names_are_stable_across_structural_passes() {
+        // Fused/merged kernels renumber densely; names carry the new ids.
+        let g = models::resnet34();
+        let (prog, _) = build_folded(&g, &OptConfig::optimized(), &default_factors(&g));
+        for (i, k) in prog.kernels.iter().enumerate() {
+            assert_eq!(k.id, i);
+            assert!(k.name.starts_with(&format!("k{i}_")), "{}", k.name);
         }
     }
 }

@@ -5,6 +5,7 @@
 use std::collections::BTreeMap;
 
 use crate::dse::{ParetoPoint, PrecisionFront};
+use crate::pass::PassTrace;
 use crate::util::json::Json;
 
 use super::Accelerator;
@@ -15,6 +16,39 @@ fn num(v: f64) -> Json {
 
 fn s(v: impl Into<String>) -> Json {
     Json::Str(v.into())
+}
+
+impl PassTrace {
+    /// Machine-readable trace: one entry per pass in application order,
+    /// with the matched count, the skip reason (when blocked) and the
+    /// non-zero IR-diff counters.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    let mut m = BTreeMap::new();
+                    m.insert("pass".into(), s(r.name.clone()));
+                    m.insert("abbrev".into(), s(r.abbrev));
+                    m.insert("level".into(), s(r.level.name()));
+                    match &r.skipped {
+                        Some(reason) => {
+                            m.insert("skipped".into(), s(reason.clone()));
+                        }
+                        None => {
+                            m.insert("matched".into(), num(r.matched as f64));
+                            let mut d = BTreeMap::new();
+                            for (k, v) in r.diff.entries() {
+                                d.insert(k.to_string(), num(v as f64));
+                            }
+                            m.insert("diff".into(), Json::Obj(d));
+                        }
+                    }
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    }
 }
 
 impl Accelerator {
@@ -29,6 +63,9 @@ impl Accelerator {
             "applied".into(),
             Json::Arr(self.applied.iter().map(|o| s(o.abbrev())).collect()),
         );
+        if !self.pass_trace.records.is_empty() {
+            root.insert("pass_trace".into(), self.pass_trace.to_json());
+        }
         if let Some(q) = &self.quant {
             let mut m = BTreeMap::new();
             m.insert("precision".into(), s(q.precision.name()));
@@ -167,6 +204,53 @@ mod tests {
         // fp32 compilations report their precision and carry no quant block.
         assert_eq!(parsed.get("precision").unwrap().as_str(), Some("fp32"));
         assert!(parsed.get("quant").is_none());
+    }
+
+    #[test]
+    fn json_carries_ordered_pass_trace() {
+        let acc = Compiler::default()
+            .compile(&models::lenet5(), Mode::Pipelined, OptLevel::Optimized)
+            .unwrap();
+        let parsed = json::parse(&acc.to_json().to_string()).unwrap();
+        let trace = parsed.get("pass_trace").unwrap().as_arr().unwrap();
+        assert_eq!(trace.len(), acc.pass_trace.records.len());
+        let abbrevs: Vec<&str> =
+            trace.iter().filter_map(|e| e.get("abbrev").and_then(|a| a.as_str())).collect();
+        // Canonical order: LF leads, CE closes.
+        assert_eq!(abbrevs.first().copied(), Some("LF"));
+        assert_eq!(abbrevs.last().copied(), Some("CE"));
+        // Applied passes carry matched + diff; skipped ones carry the rule.
+        let lf = &trace[0];
+        assert!(lf.get("matched").unwrap().as_f64().unwrap() > 0.0);
+        assert!(lf.get("diff").is_some());
+        let pk = trace.iter().find(|e| e.get("abbrev").and_then(|a| a.as_str()) == Some("PK"));
+        let reason = pk.unwrap().get("skipped").unwrap().as_str().unwrap();
+        assert!(reason.contains("folded"), "{reason}");
+        // A base compile runs no passes and omits the section entirely.
+        let base = Compiler::default()
+            .compile(&models::lenet5(), Mode::Pipelined, OptLevel::Base)
+            .unwrap();
+        let parsed = json::parse(&base.to_json().to_string()).unwrap();
+        assert!(parsed.get("pass_trace").is_none());
+    }
+
+    #[test]
+    fn quantized_json_trace_includes_graph_passes() {
+        use crate::quant::QuantConfig;
+        let acc = Compiler::default()
+            .graph(&models::mobilenet_v1())
+            .with_quantization(QuantConfig::int8())
+            .run()
+            .unwrap();
+        let parsed = json::parse(&acc.to_json().to_string()).unwrap();
+        let trace = parsed.get("pass_trace").unwrap().as_arr().unwrap();
+        let levels: Vec<&str> =
+            trace.iter().filter_map(|e| e.get("level").and_then(|l| l.as_str())).collect();
+        assert!(levels.contains(&"graph"));
+        assert!(levels.contains(&"schedule"));
+        // Graph front-end leads: bn-fold is the first pass.
+        assert_eq!(trace[0].get("pass").unwrap().as_str(), Some("bn-fold"));
+        assert!(trace[0].get("diff").unwrap().get("nodes_removed").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub enum CompileError {
     StageOrder { wanted: &'static str, missing: &'static str },
     /// The AOC model failed to route the design (rule 3 / congestion).
     RoutingFailure(String),
+    /// An [`OptConfig`] field is outside its legal domain (e.g. a weight
+    /// density outside (0, 1]), which would silently corrupt modeled
+    /// costs.
+    InvalidOptConfig { field: &'static str, value: f64, reason: &'static str },
 }
 
 impl std::fmt::Display for CompileError {
@@ -84,6 +88,9 @@ impl std::fmt::Display for CompileError {
                 write!(f, "cannot {wanted} before {missing} has run")
             }
             CompileError::RoutingFailure(e) => write!(f, "{e}"),
+            CompileError::InvalidOptConfig { field, value, reason } => {
+                write!(f, "invalid OptConfig.{field} = {value}: {reason}")
+            }
         }
     }
 }
@@ -112,13 +119,59 @@ impl CacheStats {
     }
 }
 
+/// One memo slot: either a finished outcome or a marker that some thread
+/// is currently synthesizing this key (single-flight).
+#[derive(Debug, Clone)]
+enum MemoEntry {
+    InFlight,
+    Done(Result<SynthesisReport, String>),
+}
+
 /// Synthesis memo: program fingerprint → synthesis outcome. Failures are
 /// cached too (a plan that failed routing once fails identically again).
+/// Lookups are single-flight: concurrent requests for the same key (the
+/// parallel DSE sweep revisits identical programs) wait on the first
+/// synthesizer instead of duplicating the work, so the hit/miss counters
+/// stay deterministic — misses = distinct programs, hits = revisits —
+/// exactly as in a sequential sweep.
 #[derive(Debug, Default)]
 struct SynthMemo {
-    map: Mutex<HashMap<u64, Result<SynthesisReport, String>>>,
+    map: Mutex<HashMap<u64, MemoEntry>>,
+    done: std::sync::Condvar,
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+/// Clears an `InFlight` claim even if the synthesizing thread unwinds:
+/// waiters then observe a cached failure instead of blocking forever.
+struct InFlightGuard<'a> {
+    memo: &'a SynthMemo,
+    key: u64,
+    armed: bool,
+}
+
+impl InFlightGuard<'_> {
+    fn publish(&mut self, outcome: Result<SynthesisReport, String>) {
+        self.memo.map.lock().unwrap().insert(self.key, MemoEntry::Done(outcome));
+        self.memo.done.notify_all();
+        self.armed = false;
+    }
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            // Unwinding: tolerate a poisoned lock (never held across the
+            // model call, but stay panic-safe inside Drop).
+            if let Ok(mut map) = self.memo.map.lock() {
+                map.insert(
+                    self.key,
+                    MemoEntry::Done(Err("synthesis panicked for this design".to_string())),
+                );
+            }
+            self.memo.done.notify_all();
+        }
+    }
 }
 
 /// Stable content hash of a kernel program (FNV-1a over the canonical
@@ -280,22 +333,46 @@ impl Compiler {
     }
 
     /// Memoized synthesis: returns the report and whether it was a hit.
+    /// Single-flight: a request for an in-flight key blocks until the
+    /// first synthesizer publishes, then counts as a hit.
     pub(crate) fn synthesize_memoized(
         &self,
         prog: &KernelProgram,
     ) -> crate::Result<(SynthesisReport, bool)> {
         let key = self.memo_key(prog);
-        if let Some(entry) = self.memo.map.lock().unwrap().get(&key).cloned() {
-            self.memo.hits.fetch_add(1, Ordering::Relaxed);
-            return match entry {
-                Ok(rep) => Ok((rep, true)),
-                Err(msg) => Err(CompileError::RoutingFailure(msg).into()),
-            };
+        {
+            let mut map = self.memo.map.lock().unwrap();
+            loop {
+                // Probe under the lock; clone out so no borrow outlives
+                // the decision of what to do with the guard.
+                let done: Option<Option<Result<SynthesisReport, String>>> =
+                    map.get(&key).map(|entry| match entry {
+                        MemoEntry::Done(outcome) => Some(outcome.clone()),
+                        MemoEntry::InFlight => None,
+                    });
+                match done {
+                    Some(Some(outcome)) => {
+                        self.memo.hits.fetch_add(1, Ordering::Relaxed);
+                        return match outcome {
+                            Ok(rep) => Ok((rep, true)),
+                            Err(msg) => Err(CompileError::RoutingFailure(msg).into()),
+                        };
+                    }
+                    Some(None) => {
+                        map = self.memo.done.wait(map).unwrap();
+                    }
+                    None => {
+                        map.insert(key, MemoEntry::InFlight);
+                        break;
+                    }
+                }
+            }
         }
         self.memo.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = InFlightGuard { memo: &*self.memo, key, armed: true };
         let outcome = aoc::synthesize(prog, &self.target.device, &self.fmax_model)
             .map_err(|e| e.to_string());
-        self.memo.map.lock().unwrap().insert(key, outcome.clone());
+        guard.publish(outcome.clone());
         match outcome {
             Ok(rep) => Ok((rep, false)),
             Err(msg) => Err(CompileError::RoutingFailure(msg).into()),
@@ -404,25 +481,35 @@ impl CompileSession {
         self.design = None;
     }
 
-    /// Stage 1: schedule kernels and check §IV-J legality against the
-    /// target's clock. Idempotent; the artifact is cached on the session.
+    /// Stage 1: run the graph- and schedule-pass pipelines through the
+    /// [`crate::pass::PassManager`] and check §IV-J legality against the
+    /// target's clock. Idempotent; the artifact (including the
+    /// [`crate::pass::PassTrace`]) is cached on the session.
     pub fn lower(&mut self) -> crate::Result<&LoweredProgram> {
         if self.lowered.is_none() {
             let src = self.graph.as_ref().ok_or(CompileError::MissingGraph)?;
             src.validate().map_err(CompileError::InvalidGraph)?;
+            self.cfg.validate()?;
             // Quantization front-end (when requested): BN-fold, calibrate,
             // rewrite quantize/dequantize boundaries, and schedule every
-            // kernel at the requested precision.
-            let (graph, quant_report, cfg) = match &self.quant {
+            // kernel at the requested precision. The graph passes it ran
+            // lead the session's pass trace.
+            let (graph, quant_report, cfg, graph_trace) = match &self.quant {
                 Some(q) if q.precision != Precision::F32 => {
                     let prep = quant::prepare(src, q)?;
                     (
                         std::borrow::Cow::Owned(prep.graph),
                         Some(prep.report),
                         self.cfg.with_precision(q.precision),
+                        prep.trace,
                     )
                 }
-                _ => (std::borrow::Cow::Borrowed(src), None, self.cfg),
+                _ => (
+                    std::borrow::Cow::Borrowed(src),
+                    None,
+                    self.cfg,
+                    crate::pass::PassTrace::default(),
+                ),
             };
             let graph: &Graph = &graph;
             let target = &self.compiler.target;
@@ -440,13 +527,13 @@ impl CompileSession {
                     }
                 }
             };
-            let (program, work) = match prebuilt {
+            let built = match prebuilt {
                 Some(built) => built,
-                None => match mode {
-                    Mode::Pipelined => patterns::build_pipelined(graph, &cfg, &plan),
-                    Mode::Folded => patterns::build_folded(graph, &cfg, &plan),
-                },
+                None => patterns::build_with_passes(graph, mode, &cfg, &plan),
             };
+            let patterns::BuiltProgram { program, work, trace: schedule_trace } = built;
+            let mut trace = graph_trace;
+            trace.records.extend(schedule_trace.records);
 
             // Rules 1/2 (rule 3 = fit, checked by synthesize()).
             let violations =
@@ -470,6 +557,7 @@ impl CompileSession {
                 flops_per_frame: graph.total_flops(),
                 precision: cfg.precision,
                 quant: quant_report,
+                trace,
             });
         }
         Ok(self.lowered.as_ref().expect("just populated"))
@@ -532,6 +620,9 @@ pub struct LoweredProgram {
     pub precision: Precision,
     /// Quantization report (present when the session quantized).
     pub quant: Option<QuantReport>,
+    /// Ordered trace of every pass (graph-level quantization front-end +
+    /// schedule pipeline) that produced this program.
+    pub trace: crate::pass::PassTrace,
 }
 
 impl LoweredProgram {
@@ -602,6 +693,7 @@ impl SynthesizedDesign {
             flops_per_frame: l.flops_per_frame,
             precision: l.precision,
             quant: l.quant.clone(),
+            pass_trace: l.trace.clone(),
         })
     }
 }

@@ -24,9 +24,16 @@
 //! * [`sim`] — cycle-approximate dataflow simulator for pipelined
 //!   (channels, autorun, concurrent queues) and folded (parameterized
 //!   kernels) execution.
+//! * [`pass`] — the unified optimization-pass pipeline: every Table I
+//!   optimization (and the Q/VT/SP extensions) is a registered
+//!   [`pass::GraphPass`] or [`pass::SchedulePass`] executed by the
+//!   [`pass::PassManager`] over a declarative [`pass::Pipeline`], with a
+//!   report-visible [`pass::PassTrace`] (what matched, what changed, why
+//!   skipped) behind `fpga-flow explain` and `report_json.pass_trace`.
 //! * [`flow`] — the end-to-end compilation flow (the paper's contribution):
-//!   pattern-based optimization application (Table I) + legality rules
-//!   (§IV-J) + the staged [`flow::Compiler`]/[`flow::CompileSession`] API
+//!   [`flow::OptConfig`] selects passes into the mode pipelines, the
+//!   §IV-J legality rules gate them, and the staged
+//!   [`flow::Compiler`]/[`flow::CompileSession`] API runs the manager
 //!   with memoized synthesis.
 //! * [`quant`] — quantization-aware compilation (§VII future-work #1):
 //!   calibration (min-max / percentile, empirical or analytic), symmetric
@@ -126,6 +133,7 @@ pub mod dse;
 pub mod flow;
 pub mod graph;
 pub mod metrics;
+pub mod pass;
 pub mod quant;
 pub mod runtime;
 pub mod schedule;

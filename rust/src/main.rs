@@ -4,6 +4,7 @@
 //! fpga-flow compile  --net lenet5 [--target stratix10sx|arria10gx|agilex7]
 //!                    [--mode pipelined|folded] [--base] [--precision int8|fp16]
 //!                    [--explain] [--json]
+//! fpga-flow explain  --net lenet5 [--mode pipelined]   # ordered pass trace
 //! fpga-flow targets                     # list registered device targets
 //! fpga-flow report                      # Tables II/III/IV vs the paper
 //! fpga-flow codegen  --net lenet5 [--precision int8]  # dump pseudo-OpenCL
@@ -47,6 +48,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "compile" => cmd_compile(&args),
+        "explain" => cmd_explain(&args),
         "targets" => cmd_targets(),
         "report" => cmd_report(),
         "codegen" => cmd_codegen(&args),
@@ -76,6 +78,10 @@ fn print_help() {
          \n\
          compile   --net <n> [--target <t>] [--mode pipelined|folded] [--base]\n\
                    [--precision int8|fp16] [--explain] [--json]\n\
+         explain   --net <n> [--target <t>] [--mode pipelined|folded] [--base]\n\
+                   [--precision int8|fp16]\n\
+                   print the ordered optimization-pass trace: per-pass\n\
+                   IR-diff stats; skipped passes name the blocking rule\n\
          targets   list registered device targets (legality clock, roof, DSPs)\n\
          report    Tables II/III/IV, ours vs the paper\n\
          codegen   --net <n> [--target <t>] [--precision int8]  dump pseudo-OpenCL\n\
@@ -248,6 +254,44 @@ fn cmd_compile(args: &Args) -> tvm_fpga_flow::Result<()> {
     Ok(())
 }
 
+/// `fpga-flow explain`: lower the network through the pass manager and
+/// print the ordered pass trace — per-pass IR-diff statistics for applied
+/// passes; for skipped passes, the legality rule or mode restriction that
+/// blocked them.
+fn cmd_explain(args: &Args) -> tvm_fpga_flow::Result<()> {
+    let g = net_arg(args)?;
+    let compiler = compiler_arg(args)?;
+    let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
+    let cfg = if level == OptLevel::Base { OptConfig::base() } else { OptConfig::optimized() };
+    let mut session = compiler.graph(&g).mode(mode_arg(args)).opts(cfg);
+    if let Some(p) = precision_arg(args)? {
+        if p != Precision::F32 {
+            session = session.with_quantization(quant_cfg_args(args, p)?);
+        }
+    }
+    let lowered = session.lower()?;
+    println!(
+        "pass trace — {} on {} ({} mode, {}, {} kernels, {} channels)",
+        lowered.network,
+        compiler.target.name,
+        lowered.mode.name(),
+        lowered.precision,
+        lowered.program.kernels.len(),
+        lowered.program.channels.len()
+    );
+    if lowered.trace.records.is_empty() {
+        println!("no passes selected (TVM default schedule — §IV's pathology list intact)");
+        return Ok(());
+    }
+    println!(
+        "{} applied, {} skipped (skips name the blocking rule):",
+        lowered.trace.applied(),
+        lowered.trace.skipped()
+    );
+    print!("{}", lowered.trace.render());
+    Ok(())
+}
+
 fn cmd_report() -> tvm_fpga_flow::Result<()> {
     // The report compares against the paper, so it pins the paper's board.
     let flow = Compiler::default();
@@ -352,6 +396,12 @@ fn cmd_dse(args: &Args) -> tvm_fpga_flow::Result<()> {
             r.synth_cache.hits,
             r.synth_cache.misses,
             r.synth_cache_hit_rate() * 100.0
+        );
+        println!(
+            "  sweep: {:.2}s wall, {:.2}s summed across workers ({:.1}x parallel speedup)",
+            r.wall_s,
+            r.cpu_s,
+            r.parallel_speedup()
         );
         if let Some(best) = &r.best {
             println!(

@@ -1,0 +1,187 @@
+//! Graph-level passes — the Relay-style rewrites (§II-A) hosted on the
+//! [`super::GraphPass`] trait so the [`super::PassManager`] can run and
+//! trace them. The rewrite machinery itself lives in
+//! [`crate::graph::passes`] (BN-fold, pad-fuse, DCE) and
+//! [`crate::quant::rewrite`] (quantize/dequantize boundary insertion and
+//! folding); these types carry the pattern description, legality
+//! precondition and IR-diff accounting.
+
+use crate::graph::{passes, Graph, Op};
+use crate::quant::rewrite;
+use crate::texpr::Precision;
+
+use super::{GraphPass, PassDiff};
+
+/// Fold inference-mode `conv(bias=false) → BatchNorm` chains into the
+/// conv's weights/bias: the BN node disappears from the graph (strictly
+/// stronger than schedule-level LF, which keeps the BN arithmetic).
+pub struct FoldBatchNorm;
+
+impl GraphPass for FoldBatchNorm {
+    fn name(&self) -> &'static str {
+        "bn-fold"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "BN"
+    }
+
+    fn description(&self) -> &'static str {
+        "fold BatchNorm after a bias-less conv into the conv's weights/bias"
+    }
+
+    fn run(&self, graph: &Graph, diff: &mut PassDiff) -> (Graph, usize) {
+        let (g, stats) = passes::fold_batchnorm(graph);
+        diff.nodes_removed += stats.removed;
+        diff.nodes_rewritten += stats.rewritten;
+        (g, stats.removed)
+    }
+}
+
+/// Merge standalone padding `Transform` nodes into the consuming conv.
+pub struct FusePad;
+
+impl GraphPass for FusePad {
+    fn name(&self) -> &'static str {
+        "pad-fuse"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "PF"
+    }
+
+    fn description(&self) -> &'static str {
+        "merge explicit padding Transform nodes into the consuming conv"
+    }
+
+    fn run(&self, graph: &Graph, diff: &mut PassDiff) -> (Graph, usize) {
+        let (g, stats) = passes::fuse_pad(graph);
+        diff.nodes_removed += stats.removed;
+        (g, stats.removed)
+    }
+}
+
+/// Remove nodes that cannot reach the graph output.
+pub struct EliminateDead;
+
+impl GraphPass for EliminateDead {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "DCE"
+    }
+
+    fn description(&self) -> &'static str {
+        "drop nodes that cannot reach the output"
+    }
+
+    fn run(&self, graph: &Graph, diff: &mut PassDiff) -> (Graph, usize) {
+        let (g, stats) = passes::eliminate_dead(graph);
+        diff.nodes_removed += stats.removed;
+        (g, stats.removed)
+    }
+}
+
+/// Make quantization explicit: wrap grid-capable regions in
+/// `Quantize → … → Dequantize` boundaries and fold interior dq/q pairs so
+/// chained compute stays on the integer grid
+/// ([`crate::quant::rewrite::insert_qdq`]). BN must already be folded
+/// (the precondition) so boundaries never straddle a BatchNorm.
+pub struct InsertQdq {
+    pub precision: Precision,
+}
+
+impl InsertQdq {
+    pub fn new(precision: Precision) -> InsertQdq {
+        InsertQdq { precision }
+    }
+}
+
+impl GraphPass for InsertQdq {
+    fn name(&self) -> &'static str {
+        "insert-qdq"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "QDQ"
+    }
+
+    fn description(&self) -> &'static str {
+        "insert quantize/dequantize boundaries and fold them across compute chains"
+    }
+
+    fn precondition(&self, graph: &Graph) -> Result<(), String> {
+        // Foldable BNs must be gone first (run `bn-fold` ahead of this
+        // pass): a Q/DQ boundary straddling a BN would quantize the
+        // pre-normalization range and miscalibrate the grid.
+        let has_foldable_bn = graph.topo().any(|n| {
+            matches!(n.op, Op::BatchNorm)
+                && matches!(
+                    graph.nodes[n.inputs[0]].op,
+                    Op::Conv2d { bias: false, .. } | Op::DepthwiseConv2d { bias: false, .. }
+                )
+        });
+        if has_foldable_bn {
+            Err("graph still contains foldable BatchNorm nodes — run bn-fold first".to_string())
+        } else {
+            Ok(())
+        }
+    }
+
+    fn run(&self, graph: &Graph, diff: &mut PassDiff) -> (Graph, usize) {
+        let matched = graph.topo().filter(|n| rewrite::grid_capable(&n.op)).count();
+        let (g, stats) = rewrite::insert_qdq(graph, self.precision);
+        diff.nodes_inserted += stats.quantize_nodes + stats.dequantize_nodes;
+        diff.quantize_nodes += stats.quantize_nodes;
+        diff.dequantize_nodes += stats.dequantize_nodes;
+        diff.pairs_folded += stats.folded_pairs;
+        (g, matched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::pass::{PassManager, Pipeline};
+
+    #[test]
+    fn graph_pipeline_matches_standard_pipeline() {
+        let g = models::mobilenet_v1();
+        let pipeline = Pipeline::default().graph(FoldBatchNorm).graph(FusePad).graph(EliminateDead);
+        let mut pm = PassManager::new();
+        let via_manager = pm.run_graph_passes(&pipeline, &g);
+        let (via_fn, stats) = passes::standard_pipeline(&g);
+        assert_eq!(via_manager.nodes.len(), via_fn.nodes.len());
+        assert_eq!(via_manager.total_macs(), via_fn.total_macs());
+        let removed: usize = pm.trace.records.iter().map(|r| r.diff.nodes_removed).sum();
+        assert_eq!(removed, stats.removed);
+        assert_eq!(pm.trace.records.len(), 3);
+        assert!(pm.trace.records.iter().all(|r| r.skipped.is_none()));
+    }
+
+    #[test]
+    fn qdq_precondition_blocks_unfolded_bn() {
+        let g = models::mobilenet_v1(); // full of foldable BNs
+        let pass = InsertQdq::new(Precision::Int8);
+        assert!(pass.precondition(&g).is_err());
+        let (folded, _) = passes::standard_pipeline(&g);
+        assert!(pass.precondition(&folded).is_ok());
+    }
+
+    #[test]
+    fn qdq_pass_reports_boundary_diff() {
+        let g = models::lenet5();
+        let pipeline = Pipeline::default().graph(InsertQdq::new(Precision::Int8));
+        let mut pm = PassManager::new();
+        let g2 = pm.run_graph_passes(&pipeline, &g);
+        g2.validate().unwrap();
+        let rec = &pm.trace.records[0];
+        assert_eq!(rec.skipped, None);
+        assert_eq!((rec.diff.quantize_nodes, rec.diff.dequantize_nodes), (1, 1));
+        assert!(rec.diff.pairs_folded >= 3);
+        assert!(rec.matched > 0);
+    }
+}

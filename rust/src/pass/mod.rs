@@ -1,0 +1,460 @@
+//! Unified optimization-pass infrastructure.
+//!
+//! The paper's contribution is an *automated sequence* of optimizations
+//! (Table I) applied to TVM-generated kernels. This module makes that
+//! sequence a first-class, inspectable object instead of hard-coded
+//! branching: every optimization is a [`GraphPass`] (rewrites the
+//! [`crate::graph::Graph`]) or a [`SchedulePass`] (rewrites the per-kernel
+//! [`crate::texpr::LoopNest`]s inside a [`KernelProgram`]), a
+//! [`Pipeline`] is an ordered pass list, and the [`PassManager`] runs it
+//! while recording a [`PassTrace`] — for every pass: what its pattern
+//! matched, what it changed (IR-diff statistics: loops unrolled/tiled,
+//! epilogues fused, channels inserted, accesses reclassified, …) and, when
+//! it did not run, which legality rule or mode restriction blocked it.
+//!
+//! * [`graph`] hosts the graph-level passes (BN-fold, pad-fuse, DCE and
+//!   the quantize/dequantize boundary insertion+folding chain).
+//! * [`schedule`] hosts one pass per Table I entry — PK, LU, LT, LF, CW,
+//!   OF, CH, AR, CE — plus the Q/VT/SP extensions, and the neutral
+//!   [`schedule::lower_to_kernels`] builder they all start from.
+//!
+//! [`crate::flow::OptConfig`] is the thin builder that selects passes into
+//! a pipeline ([`crate::flow::OptConfig::schedule_pipeline`]);
+//! [`crate::flow::CompileSession`] runs the manager and carries the trace
+//! onto the finished [`crate::flow::Accelerator`], where `report_json`
+//! emits it as the `pass_trace` section and `fpga-flow explain` renders it.
+
+pub mod graph;
+pub mod schedule;
+
+pub use self::graph::{EliminateDead, FoldBatchNorm, FusePad, InsertQdq};
+pub use self::schedule::{
+    lower_to_kernels, AutorunKernels, CachedWrites, Channelize, ConcurrentQueues, FloatOpts,
+    FuseEpilogues, ParameterizeKernels, QuantizeDatapath, SparsifyWeights, TileLoops, UnrollLoops,
+    VectorizeLoads,
+};
+
+use crate::codegen::KernelProgram;
+use crate::flow::patterns::FactorPlan;
+use crate::flow::Mode;
+use crate::graph::Graph;
+use crate::schedule::OptKind;
+
+/// Which IR a pass rewrites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassLevel {
+    /// Rewrites the CNN graph (Relay-analog IR, §II-A).
+    Graph,
+    /// Rewrites per-kernel loop nests inside the kernel program (§IV).
+    Schedule,
+}
+
+impl PassLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PassLevel::Graph => "graph",
+            PassLevel::Schedule => "schedule",
+        }
+    }
+}
+
+/// IR-diff statistics of one pass application — what actually changed.
+/// Counters a pass does not touch stay zero; [`PassDiff::entries`] lists
+/// only the non-zero ones for reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassDiff {
+    /// Graph nodes removed (BN-fold, DCE, pad-fuse).
+    pub nodes_removed: usize,
+    /// Graph nodes rewritten in place (conv gaining the folded BN bias).
+    pub nodes_rewritten: usize,
+    /// Graph nodes inserted (quantize/dequantize boundaries).
+    pub nodes_inserted: usize,
+    /// Quantize boundaries inserted (f32 → grid).
+    pub quantize_nodes: usize,
+    /// Dequantize boundaries inserted (grid → f32).
+    pub dequantize_nodes: usize,
+    /// dq/q pairs folded away across quantized→quantized edges.
+    pub pairs_folded: usize,
+    /// Epilogue loops fused into their producer's reduction (LF).
+    pub epilogues_fused: usize,
+    /// Kernels merged into a parameterized group kernel (PK).
+    pub kernels_merged: usize,
+    /// Kernels whose datapath/flags were rewritten (OF, Q, SP).
+    pub kernels_rescheduled: usize,
+    /// Loops fully unrolled (LU).
+    pub loops_unrolled: usize,
+    /// Loops strip-mined with an unrolled inner tile (LT).
+    pub loops_tiled: usize,
+    /// Loops made runtime-dynamic for parameterized kernels (PK).
+    pub loops_parameterized: usize,
+    /// Accesses whose direction/pattern changed (CW rmw→write, VT
+    /// strided→consecutive).
+    pub accesses_reclassified: usize,
+    /// Accesses moved off global memory (BRAM stashes, channels).
+    pub accesses_cached: usize,
+    /// Kernel-to-kernel FIFO channels inserted (CH).
+    pub channels_inserted: usize,
+    /// Kernels marked autorun (AR).
+    pub autorun_marked: usize,
+    /// Host command queues created (CE).
+    pub queues_created: usize,
+}
+
+impl PassDiff {
+    pub fn is_empty(&self) -> bool {
+        *self == PassDiff::default()
+    }
+
+    /// Non-zero counters as (name, value) pairs, in declaration order.
+    pub fn entries(&self) -> Vec<(&'static str, usize)> {
+        let all = [
+            ("nodes_removed", self.nodes_removed),
+            ("nodes_rewritten", self.nodes_rewritten),
+            ("nodes_inserted", self.nodes_inserted),
+            ("quantize_nodes", self.quantize_nodes),
+            ("dequantize_nodes", self.dequantize_nodes),
+            ("pairs_folded", self.pairs_folded),
+            ("epilogues_fused", self.epilogues_fused),
+            ("kernels_merged", self.kernels_merged),
+            ("kernels_rescheduled", self.kernels_rescheduled),
+            ("loops_unrolled", self.loops_unrolled),
+            ("loops_tiled", self.loops_tiled),
+            ("loops_parameterized", self.loops_parameterized),
+            ("accesses_reclassified", self.accesses_reclassified),
+            ("accesses_cached", self.accesses_cached),
+            ("channels_inserted", self.channels_inserted),
+            ("autorun_marked", self.autorun_marked),
+            ("queues_created", self.queues_created),
+        ];
+        all.into_iter().filter(|&(_, v)| v > 0).collect()
+    }
+
+    /// Human-readable one-line summary of the non-zero counters.
+    pub fn summary(&self) -> String {
+        let e = self.entries();
+        if e.is_empty() {
+            "no changes".to_string()
+        } else {
+            e.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" ")
+        }
+    }
+}
+
+/// One pass application (or skip) recorded by the [`PassManager`].
+#[derive(Debug, Clone)]
+pub struct PassRecord {
+    pub name: String,
+    /// Table I abbreviation (LU, LT, …) or a short tag for graph passes.
+    pub abbrev: &'static str,
+    pub level: PassLevel,
+    /// Kernels / nodes the pass's applicability pattern matched.
+    pub matched: usize,
+    /// `Some(reason)` when the pass did not run; the reason names the
+    /// blocking legality rule or mode restriction.
+    pub skipped: Option<String>,
+    pub diff: PassDiff,
+}
+
+/// Ordered record of every pass the manager ran (or skipped) for one
+/// compilation — the report-visible artifact behind `fpga-flow explain`
+/// and the `pass_trace` section of `report_json`.
+#[derive(Debug, Clone, Default)]
+pub struct PassTrace {
+    pub records: Vec<PassRecord>,
+}
+
+impl PassTrace {
+    /// Passes that ran.
+    pub fn applied(&self) -> usize {
+        self.records.iter().filter(|r| r.skipped.is_none()).count()
+    }
+
+    /// Passes blocked by a precondition.
+    pub fn skipped(&self) -> usize {
+        self.records.len() - self.applied()
+    }
+
+    /// Render the ordered trace for terminal output.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>2}  {:<4} {:<22} {:<8} {:>7}  result\n",
+            "#", "abbr", "pass", "level", "matched"
+        ));
+        for (i, r) in self.records.iter().enumerate() {
+            let result = match &r.skipped {
+                Some(reason) => format!("skipped: {reason}"),
+                None => r.diff.summary(),
+            };
+            out.push_str(&format!(
+                "{:>2}  {:<4} {:<22} {:<8} {:>7}  {}\n",
+                i + 1,
+                r.abbrev,
+                r.name,
+                r.level.name(),
+                if r.skipped.is_some() { "-".to_string() } else { r.matched.to_string() },
+                result
+            ));
+        }
+        out
+    }
+}
+
+/// A graph-level rewrite (Relay-analog, §II-A): consumes a [`Graph`] and
+/// produces a rewritten one, reporting what it matched and changed.
+pub trait GraphPass {
+    fn name(&self) -> &'static str;
+    /// Short tag shown in traces (graph passes have no Table I column).
+    fn abbrev(&self) -> &'static str;
+    fn description(&self) -> &'static str;
+    /// Legality precondition; `Err(reason)` records the pass as skipped.
+    fn precondition(&self, graph: &Graph) -> Result<(), String> {
+        let _ = graph;
+        Ok(())
+    }
+    /// Apply the rewrite. Returns the new graph and the number of nodes
+    /// the pass's pattern matched; IR-diff counters go into `diff`.
+    fn run(&self, graph: &Graph, diff: &mut PassDiff) -> (Graph, usize);
+}
+
+/// Everything a schedule-level pass may consult while rewriting a program.
+pub struct ScheduleCtx<'a> {
+    /// The (possibly graph-pass-rewritten) source graph the program was
+    /// lowered from — passes match on node ops and wire channels from it.
+    pub graph: &'a Graph,
+    /// Unroll/tile factor plan (defaults or a DSE point).
+    pub plan: &'a FactorPlan,
+    /// Execution mode (§III) — several Table I rows are mode-restricted.
+    pub mode: Mode,
+}
+
+/// A schedule-level transform (§IV): rewrites kernels' loop nests, the
+/// channel graph, or the program's host-queue structure in place.
+pub trait SchedulePass {
+    fn name(&self) -> &'static str;
+    /// Table I abbreviation (LU, LT, LF, CW, OF, CH, AR, CE, PK) or the
+    /// extension tags (Q, VT, SP).
+    fn abbrev(&self) -> &'static str;
+    /// The [`OptKind`] this pass records on kernels it rewrites.
+    fn opt_kind(&self) -> Option<OptKind>;
+    fn description(&self) -> &'static str;
+    /// Legality precondition (mode availability, §IV-J domains);
+    /// `Err(reason)` records the pass as skipped with that reason.
+    fn precondition(&self, ctx: &ScheduleCtx) -> Result<(), String> {
+        let _ = ctx;
+        Ok(())
+    }
+    /// Apply the transform. Returns the number of kernels the pass's
+    /// applicability pattern matched; IR-diff counters go into `diff`.
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize;
+}
+
+/// A declarative, ordered pass list — what [`crate::flow::OptConfig`]
+/// builds and the [`PassManager`] executes.
+#[derive(Default)]
+pub struct Pipeline {
+    pub graph_passes: Vec<Box<dyn GraphPass>>,
+    pub schedule_passes: Vec<Box<dyn SchedulePass>>,
+}
+
+impl Pipeline {
+    /// Append a graph-level pass.
+    pub fn graph(mut self, pass: impl GraphPass + 'static) -> Self {
+        self.graph_passes.push(Box::new(pass));
+        self
+    }
+
+    /// Append a schedule-level pass.
+    pub fn schedule(mut self, pass: impl SchedulePass + 'static) -> Self {
+        self.schedule_passes.push(Box::new(pass));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.graph_passes.len() + self.schedule_passes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g: Vec<&str> = self.graph_passes.iter().map(|p| p.name()).collect();
+        let s: Vec<&str> = self.schedule_passes.iter().map(|p| p.name()).collect();
+        f.debug_struct("Pipeline").field("graph", &g).field("schedule", &s).finish()
+    }
+}
+
+/// Executes [`Pipeline`]s, checking each pass's precondition and recording
+/// a [`PassRecord`] per pass (applied or skipped) into its [`PassTrace`].
+#[derive(Debug, Default)]
+pub struct PassManager {
+    pub trace: PassTrace,
+}
+
+impl PassManager {
+    pub fn new() -> PassManager {
+        PassManager::default()
+    }
+
+    /// Run the pipeline's graph passes in order, threading the graph
+    /// through each. Passes whose precondition fails are recorded as
+    /// skipped and leave the graph untouched.
+    pub fn run_graph_passes(&mut self, pipeline: &Pipeline, graph: &Graph) -> Graph {
+        let mut g = graph.clone();
+        for pass in &pipeline.graph_passes {
+            let mut rec = PassRecord {
+                name: pass.name().to_string(),
+                abbrev: pass.abbrev(),
+                level: PassLevel::Graph,
+                matched: 0,
+                skipped: None,
+                diff: PassDiff::default(),
+            };
+            match pass.precondition(&g) {
+                Err(reason) => rec.skipped = Some(reason),
+                Ok(()) => {
+                    let mut diff = PassDiff::default();
+                    let (next, matched) = pass.run(&g, &mut diff);
+                    rec.matched = matched;
+                    rec.diff = diff;
+                    g = next;
+                }
+            }
+            self.trace.records.push(rec);
+        }
+        g
+    }
+
+    /// Run the pipeline's schedule passes in order over `prog`.
+    pub fn run_schedule_passes(
+        &mut self,
+        pipeline: &Pipeline,
+        ctx: &ScheduleCtx,
+        prog: &mut KernelProgram,
+    ) {
+        for pass in &pipeline.schedule_passes {
+            let mut rec = PassRecord {
+                name: pass.name().to_string(),
+                abbrev: pass.abbrev(),
+                level: PassLevel::Schedule,
+                matched: 0,
+                skipped: None,
+                diff: PassDiff::default(),
+            };
+            match pass.precondition(ctx) {
+                Err(reason) => rec.skipped = Some(reason),
+                Ok(()) => {
+                    let mut diff = PassDiff::default();
+                    rec.matched = pass.run(ctx, prog, &mut diff);
+                    rec.diff = diff;
+                }
+            }
+            self.trace.records.push(rec);
+        }
+    }
+
+    /// Consume the manager, yielding the accumulated trace.
+    pub fn into_trace(self) -> PassTrace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::patterns::{default_factors, OptConfig};
+    use crate::graph::models;
+
+    #[test]
+    fn diff_summary_lists_only_nonzero() {
+        let d = PassDiff { loops_unrolled: 3, channels_inserted: 2, ..PassDiff::default() };
+        let s = d.summary();
+        assert!(s.contains("loops_unrolled=3"));
+        assert!(s.contains("channels_inserted=2"));
+        assert!(!s.contains("nodes_removed"));
+        assert!(PassDiff::default().is_empty());
+        assert_eq!(PassDiff::default().summary(), "no changes");
+    }
+
+    #[test]
+    fn optimized_pipeline_names_every_table1_pass() {
+        let p = OptConfig::optimized().schedule_pipeline();
+        let abbrevs: Vec<&str> = p.schedule_passes.iter().map(|s| s.abbrev()).collect();
+        for want in ["LF", "OF", "PK", "LT", "LU", "CW", "CH", "AR", "CE"] {
+            assert!(abbrevs.contains(&want), "{want} missing from {abbrevs:?}");
+        }
+        // Extensions are opt-in and absent from the paper's default set.
+        for absent in ["Q", "VT", "SP"] {
+            assert!(!abbrevs.contains(&absent), "{absent} unexpectedly in {abbrevs:?}");
+        }
+    }
+
+    #[test]
+    fn folded_trace_skips_pipelined_only_passes_with_reasons() {
+        let g = models::mobilenet_v1();
+        let plan = default_factors(&g);
+        let built = crate::flow::patterns::build_with_passes(
+            &g,
+            Mode::Folded,
+            &OptConfig::optimized(),
+            &plan,
+        );
+        let by_abbrev = |a: &str| {
+            built
+                .trace
+                .records
+                .iter()
+                .find(|r| r.abbrev == a)
+                .unwrap_or_else(|| panic!("{a} missing from trace"))
+        };
+        for a in ["CH", "AR", "CE"] {
+            let r = by_abbrev(a);
+            assert!(r.skipped.is_some(), "{a} should be skipped in folded mode");
+            let reason = r.skipped.as_ref().unwrap();
+            assert!(reason.contains("folded"), "{a} reason should name the mode rule: {reason}");
+        }
+        for a in ["PK", "LT", "LU", "LF", "CW", "OF"] {
+            assert!(by_abbrev(a).skipped.is_none(), "{a} should run in folded mode");
+        }
+        let pk = by_abbrev("PK");
+        assert!(pk.diff.kernels_merged > 0, "{:?}", pk.diff);
+        assert!(pk.diff.loops_parameterized > 0);
+    }
+
+    #[test]
+    fn pipelined_trace_skips_folded_only_passes() {
+        let g = models::lenet5();
+        let plan = default_factors(&g);
+        let built = crate::flow::patterns::build_with_passes(
+            &g,
+            Mode::Pipelined,
+            &OptConfig::optimized(),
+            &plan,
+        );
+        let skipped: Vec<&str> = built
+            .trace
+            .records
+            .iter()
+            .filter(|r| r.skipped.is_some())
+            .map(|r| r.abbrev)
+            .collect();
+        assert!(skipped.contains(&"PK"), "{skipped:?}");
+        assert!(skipped.contains(&"LT"), "{skipped:?}");
+        let ch = built.trace.records.iter().find(|r| r.abbrev == "CH").unwrap();
+        assert_eq!(ch.skipped, None);
+        assert_eq!(ch.diff.channels_inserted, 6);
+        let render = built.trace.render();
+        assert!(render.contains("LF"));
+        assert!(render.contains("skipped:"));
+    }
+
+    #[test]
+    fn base_pipeline_is_empty() {
+        let p = OptConfig::base().schedule_pipeline();
+        assert!(p.is_empty());
+        assert_eq!(format!("{:?}", p), "Pipeline { graph: [], schedule: [] }");
+    }
+}

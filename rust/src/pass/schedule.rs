@@ -1,0 +1,1076 @@
+//! Schedule-level passes — one per Table I optimization (PK, LU, LT, LF,
+//! CW, OF, CH, AR, CE) plus the extensions (Q reduced precision, VT vector
+//! types, SP sparsity). Each pass owns its applicability pattern (the
+//! "Pattern" column of Table I) and rewrites the [`KernelProgram`] in
+//! place through the [`crate::schedule::Scheduler`] primitives; mode
+//! restrictions and factor-domain rules surface as preconditions from
+//! [`crate::flow::legality`], so a skipped pass names the rule that
+//! blocked it.
+//!
+//! Passes start from [`lower_to_kernels`]: the *neutral* program with one
+//! naive (TVM-default) kernel per non-layout graph node. Structural
+//! passes then reshape it — [`FuseEpilogues`] absorbs BN/activation
+//! kernels into their producers, [`ParameterizeKernels`] merges kernels of
+//! one (filter, stride) group — and the remaining passes rewrite loop
+//! nests, accesses, channels and host queues.
+//!
+//! Ordering constraints: the structural passes lead — [`FuseEpilogues`]
+//! must precede [`ParameterizeKernels`] (absorption targets per-layer
+//! kernels; merging first would pile every group member's epilogues onto
+//! the representative) and both precede the per-kernel rewrites so
+//! merged-away kernels are never scheduled; [`QuantizeDatapath`] must run
+//! before [`SparsifyWeights`] and before the BRAM stashes of
+//! [`CachedWrites`] are sized, because byte-traffic rescaling is
+//! integer-truncating and stash sizes read the nest's element width. The
+//! pipeline built by [`crate::flow::OptConfig::schedule_pipeline`] encodes
+//! the canonical order.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::codegen::{Channel, Kernel, KernelProgram};
+use crate::flow::patterns::FactorPlan;
+use crate::flow::{legality, Mode};
+use crate::graph::{Graph, GroupKind, Node, Op, ParamGroup};
+use crate::quant::rewrite;
+use crate::schedule::{AppliedOpts, OptKind, Scheduler};
+use crate::texpr::{self, Dir, Epilogue, LoopVar, MemSpace, Pattern, Precision};
+
+use super::{PassDiff, ScheduleCtx, SchedulePass};
+
+// ---------------------------------------------------------------------------
+// Neutral lowering + program-surgery helpers
+// ---------------------------------------------------------------------------
+
+/// Lower every non-layout graph node to its own naive (TVM-default) kernel
+/// — the neutral program that schedule passes rewrite. Layout-only nodes
+/// (Input / Flatten / Transform) never become kernels.
+pub fn lower_to_kernels(graph: &Graph, mode: Mode) -> KernelProgram {
+    let mut kernels: Vec<Kernel> = Vec::new();
+    for node in graph.topo() {
+        if matches!(node.op, Op::Input | Op::Flatten | Op::Transform) {
+            continue;
+        }
+        let input_shape = &graph.nodes[node.inputs[0]].shape;
+        let nest = texpr::lower(node, input_shape);
+        let id = kernels.len();
+        let name = format!("k{}_{}", id, nest.name);
+        kernels.push(Kernel {
+            id,
+            name,
+            nest,
+            applied: AppliedOpts::default(),
+            autorun: false,
+            layers: vec![node.id],
+            group: None,
+            queue: 0,
+        });
+    }
+    KernelProgram {
+        name: format!("{}_{}", graph.name, mode.name()),
+        kernels,
+        channels: Vec::new(),
+        queues: 1,
+    }
+}
+
+/// node id → kernel index, for every node owned by some kernel.
+pub fn node_kernel_map(prog: &KernelProgram) -> BTreeMap<usize, usize> {
+    let mut map = BTreeMap::new();
+    for (i, k) in prog.kernels.iter().enumerate() {
+        for &nid in &k.layers {
+            map.insert(nid, i);
+        }
+    }
+    map
+}
+
+/// The kernel that produces node `id`'s value: climb through nodes that
+/// own no kernel (layout skips and fused epilogues) via their first input.
+/// `None` when the chain ends at the graph input.
+fn producing_kernel(graph: &Graph, map: &BTreeMap<usize, usize>, mut id: usize) -> Option<usize> {
+    loop {
+        if let Some(&k) = map.get(&id) {
+            return Some(k);
+        }
+        match graph.nodes[id].inputs.first() {
+            Some(&prev) => id = prev,
+            None => return None,
+        }
+    }
+}
+
+/// Remove the kernels at the given indices, renumbering ids and names so
+/// the program stays dense. Only legal before channels are wired (the
+/// structural passes LF and PK run ahead of CH).
+fn remove_kernels(prog: &mut KernelProgram, remove: &BTreeSet<usize>) {
+    if remove.is_empty() {
+        return;
+    }
+    debug_assert!(prog.channels.is_empty(), "kernel removal would dangle channel endpoints");
+    let kernels = std::mem::take(&mut prog.kernels);
+    let mut kept: Vec<Kernel> = kernels
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| !remove.contains(i))
+        .map(|(_, k)| k)
+        .collect();
+    for (new_id, k) in kept.iter_mut().enumerate() {
+        k.id = new_id;
+        k.name = format!("k{}_{}", new_id, k.nest.name);
+    }
+    prog.kernels = kept;
+}
+
+/// Run scheduling primitives on one kernel and merge what they recorded
+/// into the kernel's cumulative applied-optimization set.
+fn with_scheduler(k: &mut Kernel, f: impl FnOnce(&mut Scheduler)) {
+    let mut s = Scheduler::new(&mut k.nest);
+    f(&mut s);
+    let applied = s.finish();
+    k.applied.merge(applied);
+}
+
+/// Is `node` an epilogue op (BN / activation) fusible into its producer?
+/// (Table I pattern: "activation/batchnorm in conv, FC, pooling".)
+fn fusible_epilogue(graph: &Graph, node: &Node, consumers: &[Vec<usize>]) -> bool {
+    if !matches!(node.op, Op::BatchNorm | Op::Activate(_)) {
+        return false;
+    }
+    let producer = &graph.nodes[node.inputs[0]];
+    (producer.op.is_compute()
+        || matches!(
+            producer.op,
+            Op::BatchNorm | Op::Activate(_) | Op::Add | Op::MaxPool { .. } | Op::AvgPool { .. }
+        ))
+        && consumers[producer.id].len() == 1
+}
+
+fn epilogue_of_node(node: &Node) -> Epilogue {
+    match node.op {
+        Op::BatchNorm => Epilogue::BatchNormFold,
+        Op::Activate(a) => Epilogue::Activation(a),
+        _ => unreachable!("only BN/Act absorb"),
+    }
+}
+
+/// In pipelined mode strip-mine+full-inner-unroll is reported as LU, not
+/// LT — the paper's Table III applies LT only to folded designs.
+fn record_strip_mine_as_unroll(s: &mut Scheduler) {
+    if s.applied.opts.contains(&OptKind::Tile) {
+        s.applied.opts.retain(|o| *o != OptKind::Tile);
+        s.applied.record(OptKind::Unroll);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LF — loop fusion
+// ---------------------------------------------------------------------------
+
+/// LF (§IV-C): absorb downstream BatchNorm/activation kernels into their
+/// producer's epilogue and fuse intrinsic adjacent epilogue loops into the
+/// reduction — the temporary global array disappears and with it its LSUs.
+///
+/// Pattern (Table I): activation/batchnorm in conv, FC, pooling; residual
+/// adds also take the trailing ReLU. Available in both modes.
+pub struct FuseEpilogues;
+
+impl SchedulePass for FuseEpilogues {
+    fn name(&self) -> &'static str {
+        "loop-fusion"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "LF"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Fuse)
+    }
+
+    fn description(&self) -> &'static str {
+        "fuse activation/batchnorm epilogues into the producing kernel's reduction"
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let graph = ctx.graph;
+        let consumers = graph.consumers();
+        // Absorption decisions over the graph, chasing through
+        // already-absorbed producers so conv→bn→relu folds completely.
+        let mut absorbed_into: BTreeMap<usize, usize> = BTreeMap::new();
+        for node in graph.topo() {
+            if fusible_epilogue(graph, node, &consumers) {
+                let mut host = node.inputs[0];
+                while let Some(&h) = absorbed_into.get(&host) {
+                    host = h;
+                }
+                if graph.nodes[host].op.is_compute()
+                    || matches!(
+                        graph.nodes[host].op,
+                        Op::Add | Op::MaxPool { .. } | Op::AvgPool { .. } | Op::GlobalAvgPool
+                    )
+                {
+                    absorbed_into.insert(node.id, host);
+                }
+            }
+        }
+
+        let map = node_kernel_map(prog);
+        let mut matched = 0;
+        let mut remove: BTreeSet<usize> = BTreeSet::new();
+        // Ascending absorbed-node-id order fixes the epilogue push order.
+        for (&abs, &host) in &absorbed_into {
+            let (Some(&abs_k), Some(&host_k)) = (map.get(&abs), map.get(&host)) else {
+                continue; // already fused on a previous run
+            };
+            prog.kernels[host_k].nest.epilogue.push(epilogue_of_node(&graph.nodes[abs]));
+            prog.kernels[host_k].applied.record(OptKind::Fuse);
+            remove.insert(abs_k);
+            diff.epilogues_fused += 1;
+            matched += 1;
+        }
+        remove_kernels(prog, &remove);
+
+        // Intrinsic epilogues (bias/activation attributes) still running
+        // in an adjacent loop fuse into the reduction.
+        for k in &mut prog.kernels {
+            if k.nest.separate_epilogue {
+                matched += 1;
+                diff.epilogues_fused += 1;
+                with_scheduler(k, |s| {
+                    let _ = s.fuse_epilogue();
+                });
+            }
+        }
+        matched
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OF — optimized float operations
+// ---------------------------------------------------------------------------
+
+/// OF: compile the bitstream with `-fpc -fp-relaxed` (§IV; Table I:
+/// "all bitstreams"). A whole-program flag — every kernel records it.
+pub struct FloatOpts;
+
+impl SchedulePass for FloatOpts {
+    fn name(&self) -> &'static str {
+        "float-opts"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "OF"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::FloatOpt)
+    }
+
+    fn description(&self) -> &'static str {
+        "-fpc -fp-relaxed float contraction/relaxed ordering for the whole bitstream"
+    }
+
+    fn run(&self, _ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            matched += 1;
+            if !k.applied.contains(OptKind::FloatOpt) {
+                diff.kernels_rescheduled += 1;
+            }
+            k.applied.record(OptKind::FloatOpt);
+        }
+        matched
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Q — reduced-precision datapath (extension)
+// ---------------------------------------------------------------------------
+
+/// Q (extension, §VII future-work #1): schedule grid-capable kernels at a
+/// reduced datapath precision. f32 islands the Q/DQ graph rewrite left
+/// wide (softmax, global pooling, dequantize) keep their f32 buffers; a
+/// Quantize boundary writes the narrow stream, so it is narrowed too.
+pub struct QuantizeDatapath {
+    pub precision: Precision,
+}
+
+impl QuantizeDatapath {
+    pub fn new(precision: Precision) -> QuantizeDatapath {
+        QuantizeDatapath { precision }
+    }
+}
+
+impl SchedulePass for QuantizeDatapath {
+    fn name(&self) -> &'static str {
+        "quantize-datapath"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "Q"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Quantize)
+    }
+
+    fn description(&self) -> &'static str {
+        "narrow grid-capable kernels' operand streams to the target precision"
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            let op = &ctx.graph.nodes[k.layers[0]].op;
+            if rewrite::grid_capable(op) || matches!(op, Op::Quantize { .. }) {
+                matched += 1;
+                if k.nest.precision != self.precision {
+                    diff.kernels_rescheduled += 1;
+                }
+                with_scheduler(k, |s| s.quantize(self.precision));
+            }
+        }
+        matched
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VT — vector types (extension)
+// ---------------------------------------------------------------------------
+
+/// VT (extension, §V-F mitigation): vector types align strided/windowed
+/// input loads into wide vector loads — the LSU coalesces instead of
+/// replicating.
+pub struct VectorizeLoads;
+
+impl SchedulePass for VectorizeLoads {
+    fn name(&self) -> &'static str {
+        "vectorize-loads"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "VT"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Vectorize)
+    }
+
+    fn description(&self) -> &'static str {
+        "coalesce strided/windowed ifmap loads into aligned vector loads"
+    }
+
+    fn run(&self, _ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            let hits = k
+                .nest
+                .accesses
+                .iter()
+                .filter(|a| a.buffer == "ifmap" && a.pattern != Pattern::Consecutive)
+                .count();
+            if hits > 0 {
+                matched += 1;
+                diff.accesses_reclassified += hits;
+            }
+            with_scheduler(k, |s| s.vectorize("ifmap"));
+        }
+        matched
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SP — sparse datapath (extension)
+// ---------------------------------------------------------------------------
+
+/// SP (extension, §VII #2): prune weights to `density` and skip zero MACs
+/// (HPIPE-style). Applies to compute kernels only.
+pub struct SparsifyWeights {
+    pub density: f64,
+}
+
+impl SparsifyWeights {
+    pub fn new(density: f64) -> SparsifyWeights {
+        SparsifyWeights { density }
+    }
+}
+
+impl SchedulePass for SparsifyWeights {
+    fn name(&self) -> &'static str {
+        "sparsify-weights"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "SP"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Sparsify)
+    }
+
+    fn description(&self) -> &'static str {
+        "prune weights to the target density; zero MACs are skipped"
+    }
+
+    fn precondition(&self, _ctx: &ScheduleCtx) -> Result<(), String> {
+        legality::sparsity_domain(self.density)
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            if !ctx.graph.nodes[k.layers[0]].op.is_compute() {
+                continue;
+            }
+            matched += 1;
+            // Idempotent: a nest already at the target density keeps its
+            // (truncating) traffic rescale from being applied twice.
+            if k.nest.weight_density > self.density {
+                diff.kernels_rescheduled += 1;
+                with_scheduler(k, |s| s.sparsify(self.density));
+            }
+        }
+        matched
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PK — parameterized kernels
+// ---------------------------------------------------------------------------
+
+/// PK (§IV-H): group compute kernels by (filter, stride); one hardware
+/// kernel with runtime-dynamic extents serves every layer in its group.
+/// Folded mode only (Table I).
+pub struct ParameterizeKernels;
+
+impl SchedulePass for ParameterizeKernels {
+    fn name(&self) -> &'static str {
+        "parameterized-kernels"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "PK"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Parameterize)
+    }
+
+    fn description(&self) -> &'static str {
+        "merge same-(filter, stride) compute kernels into one parameterized kernel"
+    }
+
+    fn precondition(&self, ctx: &ScheduleCtx) -> Result<(), String> {
+        legality::mode_restriction(
+            "PK parameterized kernels",
+            Mode::Folded,
+            ctx.mode,
+            "Table I restricts PK to folded designs (§IV-H)",
+        )
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        let mut group_rep: BTreeMap<ParamGroup, usize> = BTreeMap::new();
+        let mut remove: BTreeSet<usize> = BTreeSet::new();
+        let mut merged_layers: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, k) in prog.kernels.iter().enumerate() {
+            let node = &ctx.graph.nodes[k.layers[0]];
+            if !node.op.is_compute() {
+                continue;
+            }
+            let Some(g) = node.op.param_group() else { continue };
+            matched += 1;
+            match group_rep.get(&g) {
+                None => {
+                    group_rep.insert(g, i);
+                }
+                Some(&rep) => {
+                    remove.insert(i);
+                    merged_layers.entry(rep).or_default().extend(k.layers.iter().copied());
+                    diff.kernels_merged += 1;
+                }
+            }
+        }
+
+        for (&g, &rep) in &group_rep {
+            let k = &mut prog.kernels[rep];
+            k.group = Some(g);
+            if let Some(mut extra) = merged_layers.remove(&rep) {
+                extra.sort_unstable();
+                for nid in extra {
+                    if !k.layers.contains(&nid) {
+                        k.layers.push(nid);
+                    }
+                }
+            }
+            let newly_dynamic = k
+                .nest
+                .loops
+                .iter()
+                .filter(|l| !matches!(l.var, LoopVar::KH | LoopVar::KW) && !l.dynamic)
+                .count();
+            diff.loops_parameterized += newly_dynamic;
+            with_scheduler(k, |s| s.parameterize());
+        }
+        remove_kernels(prog, &remove);
+        matched
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LT — loop tiling (folded compute kernels)
+// ---------------------------------------------------------------------------
+
+/// LT (§IV-B): strip-mine channel loops with a fully-unrolled inner tile
+/// sized by the [`FactorPlan`]; filter taps of k ≥ 3 convs fully unroll.
+/// Pattern (Table I): conv, FC. Folded mode only.
+pub struct TileLoops;
+
+impl SchedulePass for TileLoops {
+    fn name(&self) -> &'static str {
+        "loop-tiling"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "LT"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Tile)
+    }
+
+    fn description(&self) -> &'static str {
+        "strip-mine channel loops to the plan's tiles with fully-unrolled inners"
+    }
+
+    fn precondition(&self, ctx: &ScheduleCtx) -> Result<(), String> {
+        legality::mode_restriction(
+            "LT loop tiling",
+            Mode::Folded,
+            ctx.mode,
+            "Table III applies LT only to folded designs; pipelined strip-mines report as LU (§IV-B)",
+        )
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            let node = &ctx.graph.nodes[k.layers[0]];
+            if !node.op.is_compute() {
+                continue;
+            }
+            matched += 1;
+            with_scheduler(k, |s| apply_folded_tiles(s, node, ctx.plan, diff));
+        }
+        matched
+    }
+}
+
+fn apply_folded_tiles(s: &mut Scheduler, node: &Node, plan: &FactorPlan, diff: &mut PassDiff) {
+    let Some(g) = node.op.param_group() else { return };
+    match g.kind {
+        GroupKind::Dense => {
+            let (t_in, t_out) = plan.dense_tile;
+            for (v, t) in [(LoopVar::InC, t_in), (LoopVar::OutC, t_out)] {
+                tile_to_cap(s, v, t, diff);
+            }
+        }
+        GroupKind::Depthwise => {
+            let (t_c, _) = plan.group_tiles.get(&g).copied().unwrap_or((8, 1));
+            for v in [LoopVar::KH, LoopVar::KW] {
+                if s.unroll(v).is_ok() {
+                    diff.loops_unrolled += 1;
+                }
+            }
+            tile_to_cap(s, LoopVar::OutC, t_c, diff);
+        }
+        GroupKind::Conv => {
+            let (t_ic, t_oc) = plan.group_tiles.get(&g).copied().unwrap_or((8, 8));
+            if g.kernel >= 3 {
+                for v in [LoopVar::KH, LoopVar::KW] {
+                    if s.unroll(v).is_ok() {
+                        diff.loops_unrolled += 1;
+                    }
+                }
+            }
+            tile_to_cap(s, LoopVar::InC, t_ic, diff);
+            tile_to_cap(s, LoopVar::OutC, t_oc, diff);
+        }
+    }
+}
+
+/// Strip-mine `var` by the largest §IV-J-rule-2 divisor ≤ `cap`.
+fn tile_to_cap(s: &mut Scheduler, var: LoopVar, cap: u64, diff: &mut PassDiff) {
+    let Some(l) = s.nest.find_loop(var) else { return };
+    let f = legality::largest_divisor_leq(l.extent, cap);
+    let full = f == l.extent;
+    if s.tile_and_unroll(var, f).is_ok() {
+        if full {
+            diff.loops_unrolled += 1;
+        } else {
+            diff.loops_tiled += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LU — loop unrolling
+// ---------------------------------------------------------------------------
+
+/// LU (§IV-A): fully unroll loops ("we only fully unroll loops since
+/// partial unrolling may limit performance gains"). Pattern (Table I):
+/// all kernels except transpose/padding. In pipelined mode compute
+/// kernels unroll reduction loops innermost-first under the plan's lane
+/// cap; in folded mode without tiling only the filter taps unroll; pool
+/// windows unroll capped at 8 taps per dimension in both modes.
+pub struct UnrollLoops {
+    /// True when [`TileLoops`] is also in the pipeline — folded compute
+    /// kernels then belong to LT and LU leaves them alone.
+    pub folded_tiling: bool,
+}
+
+impl UnrollLoops {
+    pub fn new(folded_tiling: bool) -> UnrollLoops {
+        UnrollLoops { folded_tiling }
+    }
+}
+
+impl SchedulePass for UnrollLoops {
+    fn name(&self) -> &'static str {
+        "loop-unrolling"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "LU"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Unroll)
+    }
+
+    fn description(&self) -> &'static str {
+        "fully unroll reduction/filter loops into parallel MAC lanes"
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            let node = &ctx.graph.nodes[k.layers[0]];
+            if node.op.is_compute() {
+                match ctx.mode {
+                    Mode::Folded => {
+                        if self.folded_tiling {
+                            continue; // LT owns folded compute kernels
+                        }
+                        matched += 1;
+                        with_scheduler(k, |s| {
+                            for v in [LoopVar::KH, LoopVar::KW] {
+                                if s.unroll(v).is_ok() {
+                                    diff.loops_unrolled += 1;
+                                }
+                            }
+                        });
+                    }
+                    Mode::Pipelined => {
+                        matched += 1;
+                        with_scheduler(k, |s| {
+                            apply_pipelined_unroll(s, node, ctx.plan, diff);
+                        });
+                    }
+                }
+            } else if !node.op.unroll_exempt() {
+                // Pools etc: unroll the window taps, capped at 8 per dim
+                // so huge global-average windows stay under the roof.
+                if k.nest.find_loop(LoopVar::KH).is_some() || k.nest.find_loop(LoopVar::KW).is_some()
+                {
+                    matched += 1;
+                }
+                let pipelined = ctx.mode == Mode::Pipelined;
+                with_scheduler(k, |s| {
+                    for v in [LoopVar::KH, LoopVar::KW] {
+                        if s.nest.find_loop(v).is_some() {
+                            tile_to_cap(s, v, 8, diff);
+                        }
+                    }
+                    if pipelined {
+                        record_strip_mine_as_unroll(s);
+                    }
+                });
+            }
+        }
+        matched
+    }
+}
+
+fn apply_pipelined_unroll(s: &mut Scheduler, node: &Node, plan: &FactorPlan, diff: &mut PassDiff) {
+    let cap = plan.pipelined_cap.max(1);
+    match node.op {
+        Op::Dense { .. } => {
+            let (t_in, _) = plan.dense_tile;
+            tile_to_cap(s, LoopVar::InC, t_in, diff);
+            record_strip_mine_as_unroll(s);
+        }
+        _ => {
+            // Unroll reduction loops innermost-first while ≤ cap, then the
+            // output-channel loop if it still fits (full unrolls only).
+            // The lane budget accumulates from the loop extents (not the
+            // unroll outcomes) so re-running the pass is a no-op.
+            let mut product = 1u64;
+            for v in [LoopVar::KW, LoopVar::KH, LoopVar::InC] {
+                let extent = s
+                    .nest
+                    .find_loop(v)
+                    .and_then(|l| (l.reduction && product * l.extent <= cap).then_some(l.extent));
+                if let Some(e) = extent {
+                    product *= e;
+                    if s.unroll(v).is_ok() {
+                        diff.loops_unrolled += 1;
+                    }
+                }
+            }
+            let oc_fits = match s.nest.find_loop(LoopVar::OutC) {
+                Some(l) => product * l.extent <= cap,
+                None => false,
+            };
+            if oc_fits && s.unroll(LoopVar::OutC).is_ok() {
+                diff.loops_unrolled += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CW — cached writes (+ folded BRAM tile stashes)
+// ---------------------------------------------------------------------------
+
+/// CW (§IV-D): accumulate in a private register and write global memory
+/// once per output element, removing the read-modify-write LSU. Folded
+/// compute kernels additionally stage their weight/input tiles in BRAM
+/// (double-buffered), sized for the plan's tiles at the datapath's element
+/// width. Pattern (Table I): all kernels except transpose/padding.
+pub struct CachedWrites;
+
+impl SchedulePass for CachedWrites {
+    fn name(&self) -> &'static str {
+        "cached-writes"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "CW"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::CachedWrite)
+    }
+
+    fn description(&self) -> &'static str {
+        "accumulate in private registers; folded kernels stash operand tiles in BRAM"
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            let node = &ctx.graph.nodes[k.layers[0]];
+            if node.op.unroll_exempt() {
+                continue;
+            }
+            matched += 1;
+            let rmw = k
+                .nest
+                .accesses
+                .iter()
+                .filter(|a| a.dir == Dir::ReadWrite && a.space == MemSpace::Global)
+                .count();
+            diff.accesses_reclassified += rmw;
+            with_scheduler(k, |s| {
+                let _ = s.cache_write();
+            });
+            if ctx.mode == Mode::Folded && node.op.is_compute() {
+                let staged = k
+                    .nest
+                    .accesses
+                    .iter()
+                    .filter(|a| {
+                        a.space == MemSpace::Global
+                            && a.dir == Dir::Read
+                            && (a.buffer == "weights" || a.buffer == "ifmap")
+                    })
+                    .count();
+                diff.accesses_cached += staged;
+                with_scheduler(k, |s| {
+                    let _ = s.cache_read("weights");
+                    let _ = s.cache_read("ifmap");
+                    tile_stash_bytes(s, ctx.plan, node);
+                });
+            }
+        }
+        matched
+    }
+}
+
+/// Size the BRAM tile stashes of a folded kernel: double-buffered weight
+/// tile + an input line strip, at the datapath's element width.
+fn tile_stash_bytes(s: &mut Scheduler, plan: &FactorPlan, node: &Node) {
+    let Some(g) = node.op.param_group() else { return };
+    let (t_ic, t_oc) = plan.group_tiles.get(&g).copied().unwrap_or((8, 8));
+    let k2 = (g.kernel * g.kernel) as u64;
+    let eb = s.nest.precision.bytes();
+    for a in &mut s.nest.accesses {
+        if a.space == MemSpace::Local {
+            a.array_bytes = match a.buffer.as_str() {
+                "weights" => 2 * t_ic * t_oc * k2 * eb,
+                // strip of k input rows × tile channels (max W on chip 224)
+                "ifmap" => 2 * t_ic * (g.kernel as u64) * 224 * eb,
+                _ => a.array_bytes,
+            };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CH — channelization
+// ---------------------------------------------------------------------------
+
+/// CH (§IV-E): activations move between kernels through OpenCL channels
+/// instead of global LSUs; weights stash in BRAM. Each FIFO carries its
+/// producer's element type. Pattern (Table I): movement of activations,
+/// all layers. Pipelined mode only.
+pub struct Channelize;
+
+impl SchedulePass for Channelize {
+    fn name(&self) -> &'static str {
+        "channelize"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "CH"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Channels)
+    }
+
+    fn description(&self) -> &'static str {
+        "route activations through kernel-to-kernel FIFO channels; stash weights in BRAM"
+    }
+
+    fn precondition(&self, ctx: &ScheduleCtx) -> Result<(), String> {
+        legality::mode_restriction(
+            "CH channelization",
+            Mode::Pipelined,
+            ctx.mode,
+            "folded kernels hand activations through global memory (§IV-E)",
+        )
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        // Channels between consecutive kernels; the FIFO depth must cover
+        // the largest feature map (§IV-J).
+        if prog.channels.is_empty() {
+            let map = node_kernel_map(prog);
+            let depth = (ctx.graph.max_activation_bytes() / 4).max(16);
+            let mut channels = Vec::new();
+            for k in &prog.kernels {
+                let node = &ctx.graph.nodes[k.layers[0]];
+                for &inp in &node.inputs {
+                    if let Some(src_k) = producing_kernel(ctx.graph, &map, inp) {
+                        if src_k != k.id {
+                            channels.push(Channel {
+                                name: format!("ch_{}_{}", src_k, k.id),
+                                from_kernel: src_k,
+                                to_kernel: k.id,
+                                depth,
+                                elem: prog.kernels[src_k].nest.precision,
+                            });
+                        }
+                    }
+                }
+            }
+            diff.channels_inserted += channels.len();
+            prog.channels = channels;
+        }
+
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            matched += 1;
+            let moving = k
+                .nest
+                .accesses
+                .iter()
+                .filter(|a| {
+                    ((a.buffer == "ifmap" || a.buffer == "ofmap")
+                        && a.space != MemSpace::Channel)
+                        || (a.buffer == "weights"
+                            && a.space == MemSpace::Global
+                            && a.dir == Dir::Read)
+                })
+                .count();
+            diff.accesses_cached += moving;
+            with_scheduler(k, |s| {
+                s.channelize("ifmap");
+                s.channelize("ofmap");
+                let _ = s.cache_read("weights"); // weight stash in BRAM
+            });
+        }
+        matched
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AR — autorun kernels
+// ---------------------------------------------------------------------------
+
+/// AR (§IV-F): weightless channel-only kernels need no host arguments and
+/// launch themselves. Pattern (Table I): pooling, transpose/padding.
+/// Pipelined mode only (requires CH to have removed global accesses).
+pub struct AutorunKernels;
+
+impl SchedulePass for AutorunKernels {
+    fn name(&self) -> &'static str {
+        "autorun-kernels"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "AR"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Autorun)
+    }
+
+    fn description(&self) -> &'static str {
+        "declare weightless channel-only kernels autorun (no host control)"
+    }
+
+    fn precondition(&self, ctx: &ScheduleCtx) -> Result<(), String> {
+        legality::mode_restriction(
+            "AR autorun",
+            Mode::Pipelined,
+            ctx.mode,
+            "autorun requires channel-fed kernels with no global arguments (§IV-F)",
+        )
+    }
+
+    fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        let mut matched = 0;
+        for k in &mut prog.kernels {
+            let node = &ctx.graph.nodes[k.layers[0]];
+            if !node.op.has_weights() && k.autorun_eligible() {
+                matched += 1;
+                if !k.autorun {
+                    diff.autorun_marked += 1;
+                }
+                k.autorun = true;
+                k.applied.record(OptKind::Autorun);
+            }
+        }
+        matched
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CE — concurrent execution
+// ---------------------------------------------------------------------------
+
+/// CE (§IV-G): one host command queue per kernel so all kernels launch
+/// concurrently. A host-side optimization; pipelined mode only (§IV-J:
+/// folded designs serialize layer dispatches on one queue).
+pub struct ConcurrentQueues;
+
+impl SchedulePass for ConcurrentQueues {
+    fn name(&self) -> &'static str {
+        "concurrent-queues"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "CE"
+    }
+
+    fn opt_kind(&self) -> Option<OptKind> {
+        Some(OptKind::Concurrent)
+    }
+
+    fn description(&self) -> &'static str {
+        "one host command queue per kernel; all kernels launch concurrently"
+    }
+
+    fn precondition(&self, ctx: &ScheduleCtx) -> Result<(), String> {
+        legality::mode_restriction(
+            "CE concurrent execution",
+            Mode::Pipelined,
+            ctx.mode,
+            "CE is not applicable to folded designs, which serialize layer dispatches (§IV-J)",
+        )
+    }
+
+    fn run(&self, _ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
+        prog.queues = prog.kernels.len().max(1);
+        diff.queues_created = prog.queues;
+        let mut matched = 0;
+        for (q, k) in prog.kernels.iter_mut().enumerate() {
+            k.queue = q;
+            k.applied.record(OptKind::Concurrent);
+            matched += 1;
+        }
+        matched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn neutral_lowering_skips_layout_nodes() {
+        let g = models::lenet5();
+        let prog = lower_to_kernels(&g, Mode::Pipelined);
+        assert_eq!(prog.name, "lenet5_pipelined");
+        // input + flatten are skipped; every other node owns one kernel.
+        let layout = g
+            .topo()
+            .filter(|n| matches!(n.op, Op::Input | Op::Flatten | Op::Transform))
+            .count();
+        assert_eq!(prog.kernels.len(), g.nodes.len() - layout);
+        assert!(prog.channels.is_empty());
+        assert_eq!(prog.queues, 1);
+        for (i, k) in prog.kernels.iter().enumerate() {
+            assert_eq!(k.id, i);
+            assert!(k.name.starts_with(&format!("k{i}_")));
+            assert_eq!(k.layers.len(), 1);
+        }
+    }
+
+    #[test]
+    fn remove_kernels_renumbers_densely() {
+        let g = models::lenet5();
+        let mut prog = lower_to_kernels(&g, Mode::Pipelined);
+        let before = prog.kernels.len();
+        let mut remove = BTreeSet::new();
+        remove.insert(1);
+        remove.insert(3);
+        remove_kernels(&mut prog, &remove);
+        assert_eq!(prog.kernels.len(), before - 2);
+        for (i, k) in prog.kernels.iter().enumerate() {
+            assert_eq!(k.id, i);
+            assert!(k.name.starts_with(&format!("k{i}_")), "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn producing_kernel_climbs_through_fused_nodes() {
+        let g = models::mobilenet_v1();
+        let prog = lower_to_kernels(&g, Mode::Pipelined);
+        let map = node_kernel_map(&prog);
+        // Every non-layout node resolves to its own kernel.
+        for n in g.topo() {
+            if matches!(n.op, Op::Input | Op::Flatten | Op::Transform) {
+                continue;
+            }
+            assert_eq!(producing_kernel(&g, &map, n.id), map.get(&n.id).copied());
+        }
+        // The graph input resolves to no kernel.
+        assert_eq!(producing_kernel(&g, &map, g.input), None);
+    }
+}

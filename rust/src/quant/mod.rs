@@ -51,7 +51,7 @@ pub use exec::{argmax, Executor};
 pub use rewrite::{insert_qdq, QuantStats};
 pub use scheme::{f16_round, qmax, QParams, QScheme, Range};
 
-use crate::graph::{passes, Graph};
+use crate::graph::Graph;
 use crate::texpr::Precision;
 
 /// Where calibration ranges come from.
@@ -135,6 +135,9 @@ pub struct PreparedQuant {
     pub graph: Graph,
     pub table: CalibrationTable,
     pub report: QuantReport,
+    /// Trace of the graph passes (bn-fold, pad-fuse, dce, insert-qdq) the
+    /// front-end ran — prepended to the session's pass trace.
+    pub trace: crate::pass::PassTrace,
 }
 
 /// Run the quantization front-end on a graph: fold BN through the standard
@@ -142,7 +145,11 @@ pub struct PreparedQuant {
 /// accuracy report. `Precision::F32` degenerates to the pass pipeline with
 /// a lossless report.
 pub fn prepare(graph: &Graph, cfg: &QuantConfig) -> crate::Result<PreparedQuant> {
-    let (folded, _) = passes::standard_pipeline(graph);
+    use crate::pass::{EliminateDead, FoldBatchNorm, FusePad, InsertQdq, PassManager, Pipeline};
+
+    let mut manager = PassManager::new();
+    let folding = Pipeline::default().graph(FoldBatchNorm).graph(FusePad).graph(EliminateDead);
+    let folded = manager.run_graph_passes(&folding, graph);
     let table = match cfg.source {
         CalibrationSource::Analytic => calibrate_analytic(&folded, cfg.calibrator),
         CalibrationSource::Data { frames } => {
@@ -163,10 +170,25 @@ pub fn prepare(graph: &Graph, cfg: &QuantConfig) -> crate::Result<PreparedQuant>
             accuracy::measure(&folded, &table, cfg.precision, cfg.scheme, frames)
         }
     };
-    let (rewritten, stats) = insert_qdq(&folded, cfg.precision);
+    let qdq = Pipeline::default().graph(InsertQdq::new(cfg.precision));
+    let rewritten = manager.run_graph_passes(&qdq, &folded);
+    if let Some(reason) = manager.trace.records.last().and_then(|r| r.skipped.clone()) {
+        anyhow::bail!("quantization front-end could not rewrite the graph: {reason}");
+    }
+    let stats = manager
+        .trace
+        .records
+        .last()
+        .map(|r| QuantStats {
+            quantize_nodes: r.diff.quantize_nodes,
+            dequantize_nodes: r.diff.dequantize_nodes,
+            folded_pairs: r.diff.pairs_folded,
+        })
+        .unwrap_or_default();
     Ok(PreparedQuant {
         graph: rewritten,
         table,
+        trace: manager.into_trace(),
         report: QuantReport {
             precision: cfg.precision,
             scheme: cfg.scheme,

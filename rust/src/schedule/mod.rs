@@ -116,6 +116,20 @@ impl AppliedOpts {
     pub fn contains(&self, opt: OptKind) -> bool {
         self.opts.contains(&opt)
     }
+
+    /// Merge another record into this one, deduplicating both the
+    /// optimization set and the (loop, factor) pairs — how a kernel
+    /// accumulates what each [`crate::pass`] pipeline stage applied.
+    pub fn merge(&mut self, other: AppliedOpts) {
+        for o in other.opts {
+            self.record(o);
+        }
+        for f in other.factors {
+            if !self.factors.contains(&f) {
+                self.factors.push(f);
+            }
+        }
+    }
 }
 
 /// Schedule handle over a loop nest (TVM's `s[op]` analog).

@@ -1,0 +1,83 @@
+//! Golden `report_json` regression gate.
+//!
+//! Compiles every evaluation network in both execution modes (and at
+//! int8) on the default target and byte-compares the machine-readable
+//! report against checked-in goldens under `rust/tests/goldens/`. Future
+//! pass reorderings or cost-model changes then surface as reviewable
+//! diffs instead of silent regressions.
+//!
+//! Blessing: when a golden file is missing (or `UPDATE_GOLDENS=1`), the
+//! test writes the current output and passes — commit the generated
+//! files. CI runs this test and then fails on any dirty/untracked golden
+//! (`git diff` in the `golden-reports` job), so an unblessed or drifted
+//! golden cannot land silently.
+
+use std::path::PathBuf;
+
+use tvm_fpga_flow::flow::{Compiler, Mode, OptLevel};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::quant::QuantConfig;
+use tvm_fpga_flow::texpr::Precision;
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/goldens")
+}
+
+/// Compile and render the report; compilation failures golden as text so
+/// combinations that legitimately cannot route stay pinned too.
+fn render(net: &str, mode: Mode, precision: Precision) -> String {
+    let compiler = Compiler::default();
+    let g = models::by_name(net).expect("known network");
+    let result = match precision {
+        Precision::F32 => compiler.compile(&g, mode, OptLevel::Optimized),
+        p => compiler.graph(&g).mode(mode).with_quantization(QuantConfig::for_precision(p)).run(),
+    };
+    match result {
+        Ok(acc) => acc.to_json().to_string(),
+        Err(e) => format!("{{\"error\": \"{e}\"}}"),
+    }
+}
+
+fn check_golden(net: &str, mode: Mode, precision: Precision) {
+    let got = render(net, mode, precision);
+    let dir = goldens_dir();
+    let path = dir.join(format!("{net}_{}_{}.json", mode.name(), precision.name()));
+    let bless = std::env::var("UPDATE_GOLDENS").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(&dir).expect("create goldens dir");
+        std::fs::write(&path, &got).expect("write golden");
+        eprintln!("blessed golden {} — commit it", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    assert_eq!(
+        got,
+        want,
+        "report_json drifted from {} — if intentional, re-bless with UPDATE_GOLDENS=1",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_reports_all_networks_both_modes() {
+    for net in ["lenet5", "mobilenet_v1", "resnet34"] {
+        for mode in [Mode::Pipelined, Mode::Folded] {
+            for precision in [Precision::F32, Precision::Int8] {
+                check_golden(net, mode, precision);
+            }
+        }
+    }
+}
+
+#[test]
+fn reports_are_deterministic() {
+    // The golden gate only works if repeated compiles render identically.
+    for (net, mode) in [("lenet5", Mode::Pipelined), ("mobilenet_v1", Mode::Folded)] {
+        let a = render(net, mode, Precision::F32);
+        let b = render(net, mode, Precision::F32);
+        assert_eq!(a, b, "{net} non-deterministic");
+        let qa = render(net, mode, Precision::Int8);
+        let qb = render(net, mode, Precision::Int8);
+        assert_eq!(qa, qb, "{net} int8 non-deterministic");
+    }
+}

@@ -1,0 +1,213 @@
+//! Property tests over the pass pipeline (via `util::prop`):
+//!
+//! * the optimized schedule pipeline is **idempotent** — running it a
+//!   second time over its own output changes nothing;
+//! * graph passes preserve node-count invariants — BN-fold removes only
+//!   BatchNorm nodes (everything else survives bit-for-bit in count), and
+//!   the quantize/dequantize folding chain never produces more boundaries
+//!   than the unfused per-node wrapping would.
+
+use tvm_fpga_flow::flow::patterns::{build_with_passes, default_factors, OptConfig};
+use tvm_fpga_flow::flow::Mode;
+use tvm_fpga_flow::graph::{models, passes, Activation, Graph, GraphBuilder, Op, Shape};
+use tvm_fpga_flow::pass::{PassManager, ScheduleCtx};
+use tvm_fpga_flow::quant::rewrite::{grid_capable, insert_qdq};
+use tvm_fpga_flow::schedule::OptKind;
+use tvm_fpga_flow::texpr::Precision;
+use tvm_fpga_flow::util::prop;
+use tvm_fpga_flow::util::rng::Rng;
+
+/// Random layer chain: convs (optionally BN'd / activated), depthwise
+/// convs, pools (bounded so spatial dims stay ≥ 4), then flatten + dense.
+/// Always a valid graph; BN only ever follows a conv, like real imports.
+fn random_chain(rng: &mut Rng, case: u64) -> Graph {
+    let channels = 1 + rng.below(3) as usize;
+    let (mut b, x) = GraphBuilder::new(format!("rand{case}"), Shape::Chw(channels, 16, 16));
+    let mut cur = x;
+    let mut pools = 0;
+    let depth = 2 + rng.below(5);
+    for i in 0..depth {
+        cur = match rng.below(5) {
+            0 | 1 => {
+                let oc = 2 + rng.below(6) as usize;
+                let bias = rng.below(2) == 0;
+                let mut c = b.add(
+                    format!("c{i}"),
+                    Op::Conv2d {
+                        out_channels: oc,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        bias,
+                        activation: Activation::None,
+                    },
+                    &[cur],
+                );
+                if rng.below(2) == 0 {
+                    c = b.add(format!("c{i}.bn"), Op::BatchNorm, &[c]);
+                }
+                if rng.below(2) == 0 {
+                    c = b.add(format!("c{i}.act"), Op::Activate(Activation::Relu), &[c]);
+                }
+                c
+            }
+            2 => {
+                let bias = rng.below(2) == 0;
+                let mut d = b.add(
+                    format!("dw{i}"),
+                    Op::DepthwiseConv2d {
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        bias,
+                        activation: Activation::None,
+                    },
+                    &[cur],
+                );
+                if !bias && rng.below(2) == 0 {
+                    d = b.add(format!("dw{i}.bn"), Op::BatchNorm, &[d]);
+                }
+                d
+            }
+            3 if pools < 2 => {
+                pools += 1;
+                b.add(format!("p{i}"), Op::MaxPool { kernel: 2, stride: 2, padding: 0 }, &[cur])
+            }
+            _ => b.add(format!("a{i}"), Op::Activate(Activation::Relu), &[cur]),
+        };
+    }
+    let f = b.add("flat", Op::Flatten, &[cur]);
+    let d = b.add(
+        "fc",
+        Op::Dense { out_features: 10, bias: true, activation: Activation::None },
+        &[f],
+    );
+    b.finish(d)
+}
+
+fn count_op(g: &Graph, f: impl Fn(&Op) -> bool) -> usize {
+    g.nodes.iter().filter(|n| f(&n.op)).count()
+}
+
+#[test]
+fn optimized_schedule_pipeline_is_idempotent() {
+    prop::check("schedule-pipeline-idempotent", |rng, _case| {
+        let g = match rng.below(3) {
+            0 => models::lenet5(),
+            1 => models::mobilenet_v1(),
+            _ => models::resnet34(),
+        };
+        let mode = if rng.below(2) == 0 { Mode::Pipelined } else { Mode::Folded };
+        let mut cfg = OptConfig::optimized();
+        for kind in [
+            OptKind::Unroll,
+            OptKind::Tile,
+            OptKind::Fuse,
+            OptKind::CachedWrite,
+            OptKind::FloatOpt,
+            OptKind::Channels,
+            OptKind::Autorun,
+            OptKind::Concurrent,
+            OptKind::Parameterize,
+        ] {
+            if rng.below(4) == 0 {
+                cfg = cfg.without(kind);
+            }
+        }
+        if rng.below(4) == 0 {
+            cfg = cfg.with_precision(Precision::Int8);
+        }
+        if rng.below(4) == 0 {
+            cfg = cfg.with_vectors();
+        }
+        if rng.below(4) == 0 {
+            cfg = cfg.with_sparsity(0.5);
+        }
+
+        let plan = default_factors(&g);
+        let built = build_with_passes(&g, mode, &cfg, &plan);
+
+        // Re-run the exact same pipeline over its own output: every pass
+        // must be a fixed point (kernels, nests, applied sets, channels,
+        // queues and autorun flags all unchanged).
+        let mut second = built.program.clone();
+        let pipeline = cfg.schedule_pipeline();
+        let mut pm = PassManager::new();
+        pm.run_schedule_passes(&pipeline, &ScheduleCtx { graph: &g, plan: &plan, mode }, &mut second);
+        assert_eq!(
+            format!("{:?}", built.program),
+            format!("{second:?}"),
+            "pipeline not idempotent for {} {:?} cfg {:?}",
+            g.name,
+            mode,
+            cfg
+        );
+    });
+}
+
+#[test]
+fn bn_fold_removes_only_batchnorm_nodes() {
+    prop::check("bn-fold-node-invariants", |rng, case| {
+        let g = random_chain(rng, case);
+        g.validate().expect("generator builds valid graphs");
+        let bn_before = count_op(&g, |op| matches!(op, Op::BatchNorm));
+        let others_before = g.nodes.len() - bn_before;
+
+        let (folded, stats) = passes::fold_batchnorm(&g);
+        folded.validate().expect("bn-fold preserves validity");
+        let bn_after = count_op(&folded, |op| matches!(op, Op::BatchNorm));
+        let others_after = folded.nodes.len() - bn_after;
+
+        // Only BN nodes disappear; every other op kind survives.
+        assert_eq!(others_after, others_before, "non-BN node count changed");
+        assert_eq!(stats.removed, bn_before - bn_after, "{stats:?}");
+        assert_eq!(
+            count_op(&g, |op| matches!(op, Op::Conv2d { .. } | Op::DepthwiseConv2d { .. })),
+            count_op(&folded, |op| matches!(op, Op::Conv2d { .. } | Op::DepthwiseConv2d { .. })),
+        );
+        // Structural rewrite only: MACs and the output shape are intact.
+        assert_eq!(g.total_macs(), folded.total_macs());
+        assert_eq!(g.nodes[g.output].shape, folded.nodes[folded.output].shape);
+    });
+}
+
+#[test]
+fn qdq_fold_never_increases_boundary_count() {
+    prop::check("qdq-boundary-invariants", |rng, case| {
+        let g = random_chain(rng, case);
+        let (folded, _) = passes::standard_pipeline(&g);
+        let (rewritten, stats) = insert_qdq(&folded, Precision::Int8);
+        rewritten.validate().expect("qdq rewrite preserves validity");
+
+        // The unfused baseline wraps every grid-capable node in its own
+        // boundaries: one quantize per input edge plus one dequantize.
+        // Folding must never exceed that.
+        let naive: usize = folded
+            .topo()
+            .filter(|n| grid_capable(&n.op))
+            .map(|n| n.inputs.len() + 1)
+            .sum();
+        let boundaries = stats.quantize_nodes + stats.dequantize_nodes;
+        assert!(
+            boundaries <= naive,
+            "{} boundaries exceed the unfused {} (stats {stats:?})",
+            boundaries,
+            naive
+        );
+        // Inserted boundary nodes are the only additions.
+        assert_eq!(rewritten.nodes.len(), folded.nodes.len() + boundaries);
+        assert_eq!(folded.total_macs(), rewritten.total_macs());
+        // Every folded pair is a quantized→quantized edge that kept the
+        // activations on the grid — there must be at least one whenever
+        // two grid ops are adjacent and boundaries were created at all.
+        if boundaries > 0 {
+            let adjacent_grid_edges = folded
+                .topo()
+                .filter(|n| grid_capable(&n.op))
+                .flat_map(|n| n.inputs.iter())
+                .filter(|&&i| grid_capable(&folded.nodes[i].op))
+                .count();
+            assert!(stats.folded_pairs >= adjacent_grid_edges.min(1), "{stats:?}");
+        }
+    });
+}

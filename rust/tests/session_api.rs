@@ -191,3 +191,42 @@ fn targets_change_the_synthesized_design() {
     assert!(a10_logic > s10_logic, "smaller device → higher utilization");
     assert!(a10_fmax < s10_fmax, "slower fabric + higher utilization → lower clock");
 }
+
+#[test]
+fn weight_density_out_of_domain_is_a_typed_error() {
+    // Regression: a weight density outside (0, 1] used to either panic
+    // (assert inside the scheduler) or silently produce nonsense costs;
+    // the session now rejects it up front with a typed error.
+    let compiler = Compiler::default();
+    let g = models::lenet5();
+    let plan = default_factors(&g);
+    for bad in [0.0, -0.25, 1.5, f64::NAN] {
+        let cfg = OptConfig::optimized().with_sparsity(bad);
+        let err = compiler.compile_with(&g, Mode::Pipelined, &cfg, &plan).unwrap_err();
+        match as_compile_error(&err) {
+            CompileError::InvalidOptConfig { field, .. } => assert_eq!(*field, "weight_density"),
+            other => panic!("wrong variant for {bad}: {other:?}"),
+        }
+        assert!(err.to_string().contains("weight_density"), "{err}");
+    }
+    // The domain boundary itself is legal, as is any interior density.
+    for ok in [1.0, 0.5, 1e-3] {
+        let cfg = OptConfig::optimized().with_sparsity(ok);
+        let acc = compiler.compile_with(&g, Mode::Pipelined, &cfg, &plan).unwrap();
+        assert!(acc.performance.fps > 0.0, "density {ok}");
+    }
+}
+
+#[test]
+fn session_trace_is_cached_with_the_lowering() {
+    // The pass trace is part of the stage-1 artifact: lowering twice
+    // returns the same trace, and it survives into the Accelerator.
+    let compiler = Compiler::default();
+    let mut session = compiler.graph(&models::lenet5()).mode(Mode::Pipelined);
+    let n = session.lower().unwrap().trace.records.len();
+    assert!(n > 0);
+    assert_eq!(session.lower().unwrap().trace.records.len(), n);
+    let acc = session.run().unwrap();
+    assert_eq!(acc.pass_trace.records.len(), n);
+    assert!(acc.pass_trace.applied() > 0);
+}
