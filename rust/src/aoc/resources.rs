@@ -234,7 +234,7 @@ mod tests {
             s.applied.record(OptKind::FloatOpt);
         }
         let applied = s.finish();
-        Kernel { id: 0, name: "k".into(), nest, applied, autorun: false, layers: vec![n.id], group: None, queue: 0 }
+        Kernel { id: 0, name: "k".into(), nest, applied, autorun: false, layers: vec![n.id], absorbed: vec![], group: None, queue: 0 }
     }
 
     #[test]

@@ -42,6 +42,14 @@ pub struct Kernel {
     pub autorun: bool,
     /// Which graph nodes this kernel executes (several in folded mode).
     pub layers: Vec<usize>,
+    /// Graph nodes whose BatchNorm/activation loops were absorbed into
+    /// this kernel's epilogue by loop fusion (LF), in absorption order.
+    /// Carried so the program remains executable stand-alone: without it a
+    /// `BatchNormFold` epilogue entry names no parameters, and the
+    /// `verify` interpreter could not cross-check the fused chain against
+    /// the graph. Parameterized (PK) kernels keep only the representative
+    /// layer's chain — member layers resolve theirs at dispatch.
+    pub absorbed: Vec<usize>,
     /// Parameterized-kernel group (folded mode only).
     pub group: Option<ParamGroup>,
     /// Host command queue index (one queue per kernel = CE, §IV-G).
@@ -205,6 +213,9 @@ fn render_kernel(k: &Kernel) -> String {
             "/* fused into reduction epilogue */"
         };
         s.push_str(&format!("  // epilogue: {:?} {}\n", k.nest.epilogue, where_));
+        if !k.absorbed.is_empty() {
+            s.push_str(&format!("  // absorbed graph nodes: {:?}\n", k.absorbed));
+        }
     }
     s.push_str("}\n");
     s
@@ -228,6 +239,7 @@ mod tests {
             applied: Default::default(),
             autorun: false,
             layers: vec![node_idx],
+            absorbed: vec![],
             group: None,
             queue: 0,
         }

@@ -23,7 +23,7 @@ use crate::schedule::OptKind;
 use crate::sim::folded::LayerWork;
 use crate::sim::{HostModel, PerformanceReport};
 
-pub use patterns::{default_factors, FactorPlan, OptConfig};
+pub use patterns::{default_factors, FactorPlan, OptConfig, CANONICAL_PIPELINE};
 pub use session::{
     program_fingerprint, CacheStats, CompileError, CompileSession, Compiler, LoweredProgram,
     ModeChoice, SynthesizedDesign,

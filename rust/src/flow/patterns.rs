@@ -37,6 +37,26 @@ use crate::texpr;
 use super::session::CompileError;
 use super::Mode;
 
+/// The nine Table-I optimizations in the canonical order
+/// [`OptConfig::schedule_pipeline`] sequences them (the Q/VT/SP
+/// extensions slot in after OF and are selected by `precision`/
+/// `vectorize`/`weight_density`, not listed here). The single source of
+/// truth for "every pass subset of the canonical pipeline": `fpga-flow
+/// verify`'s sweep and the differ's fuzz set both consume it, and a unit
+/// test pins it against the pipeline builder so adding a pass without
+/// extending this list fails loudly.
+pub const CANONICAL_PIPELINE: [OptKind; 9] = [
+    OptKind::Fuse,
+    OptKind::Parameterize,
+    OptKind::FloatOpt,
+    OptKind::Tile,
+    OptKind::Unroll,
+    OptKind::CachedWrite,
+    OptKind::Channels,
+    OptKind::Autorun,
+    OptKind::Concurrent,
+];
+
 /// Which optimizations are enabled (ablation switch-board). A thin
 /// builder: [`OptConfig::schedule_pipeline`] turns the selection into the
 /// ordered pass [`Pipeline`] the [`PassManager`] executes.
@@ -440,6 +460,19 @@ mod tests {
                 assert_eq!(l.extent % l.unroll, 0, "kernel {} loop {:?}", k.name, l.var);
             }
         }
+    }
+
+    #[test]
+    fn canonical_pipeline_matches_schedule_pipeline_order() {
+        // CANONICAL_PIPELINE is what `fpga-flow verify` sweeps subsets of
+        // and what the differ fuzzes over — it must stay in lockstep with
+        // the pipeline the builder actually constructs. LT reports under
+        // its own abbrev while `tile` also implies an LU stage, so compare
+        // via each OptKind's abbreviation in pipeline order.
+        let p = OptConfig::optimized().schedule_pipeline();
+        let built: Vec<&str> = p.schedule_passes.iter().map(|s| s.abbrev()).collect();
+        let canonical: Vec<&str> = CANONICAL_PIPELINE.iter().map(|o| o.abbrev()).collect();
+        assert_eq!(built, canonical, "schedule_pipeline order drifted from CANONICAL_PIPELINE");
     }
 
     #[test]

@@ -31,6 +31,7 @@ impl PassTrace {
                     m.insert("pass".into(), s(r.name.clone()));
                     m.insert("abbrev".into(), s(r.abbrev));
                     m.insert("level".into(), s(r.level.name()));
+                    m.insert("equivalence".into(), s(r.equivalence.name()));
                     match &r.skipped {
                         Some(reason) => {
                             m.insert("skipped".into(), s(reason.clone()));

@@ -551,6 +551,7 @@ impl CompileSession {
                 compiler: self.compiler.clone(),
                 network: graph.name.clone(),
                 mode,
+                graph: Arc::new(graph.clone()),
                 program: Arc::new(program),
                 work: Arc::new(work),
                 applied,
@@ -598,6 +599,15 @@ impl CompileSession {
         self.synthesize()?;
         self.simulate()
     }
+
+    /// Verification stage: lower (if needed) and differentially check the
+    /// scheduled program against the reference executor on `frames`
+    /// deterministic frames. Returns the report; callers decide whether a
+    /// failed report is fatal (the CLI's `fpga-flow verify` does).
+    pub fn verify(&mut self, frames: usize) -> crate::Result<crate::verify::VerifyReport> {
+        self.lower()?;
+        Ok(self.lowered.as_ref().expect("just lowered").verify(frames, 0x5EED_F00D))
+    }
 }
 
 /// Stage-1 artifact: scheduled, legality-checked kernels for one mode on
@@ -610,6 +620,9 @@ pub struct LoweredProgram {
     compiler: Compiler,
     pub network: String,
     pub mode: Mode,
+    /// The (possibly quantization-rewritten) graph the program was lowered
+    /// from — what [`LoweredProgram::verify`] diffs the kernels against.
+    pub graph: Arc<Graph>,
     pub program: Arc<KernelProgram>,
     pub work: Arc<Vec<LayerWork>>,
     /// Table III row.
@@ -642,6 +655,27 @@ impl LoweredProgram {
     pub fn synthesize(&self) -> crate::Result<SynthesizedDesign> {
         let (synthesis, cache_hit) = self.compiler.synthesize_memoized(&self.program)?;
         Ok(SynthesizedDesign { lowered: self.clone(), synthesis, cache_hit })
+    }
+
+    /// Differentially verify this program against the graph-level oracle
+    /// ([`crate::quant::Executor`]) on `frames` deterministic frames:
+    /// the kernel interpreter must agree bit-exactly at int8 and within
+    /// the documented tolerance for f32/fp16 (`docs/VERIFICATION.md`).
+    /// Independent of synthesis — callable straight after `lower`.
+    pub fn verify(&self, frames: usize, seed: u64) -> crate::verify::VerifyReport {
+        let opts = crate::verify::VerifyOptions {
+            scheme: self.quant.as_ref().map(|q| q.scheme).unwrap_or_default(),
+            ..Default::default()
+        };
+        let data = crate::verify::frames_for(&self.graph, frames, seed);
+        crate::verify::verify_program(
+            &self.graph,
+            &self.program,
+            self.precision,
+            self.trace.required_equivalence(),
+            &data,
+            &opts,
+        )
     }
 }
 
@@ -758,6 +792,33 @@ mod tests {
         assert_eq!(s.lower().unwrap().mode, Mode::Pipelined);
         let mut m = s10.graph(&models::resnet34()).mode(ModeChoice::Auto);
         assert_eq!(m.lower().unwrap().mode, Mode::Folded);
+    }
+
+    #[test]
+    fn verify_stage_agrees_with_oracle() {
+        let compiler = Compiler::default();
+        // f32: toleranced agreement.
+        let mut s = compiler.graph(&models::lenet5()).mode(Mode::Pipelined);
+        let rep = s.verify(4).unwrap();
+        assert!(rep.passed, "{}", rep.summary());
+        // int8 through the full quantization front-end (Q/DQ-rewritten
+        // graph): the kernel interpreter must be bit-exact against
+        // Executor::forward_quantized.
+        let mut q = compiler
+            .graph(&models::lenet5())
+            .mode(Mode::Pipelined)
+            .with_quantization(crate::quant::QuantConfig::int8());
+        let rep = q.verify(4).unwrap();
+        assert!(rep.passed, "{}", rep.summary());
+        assert!(rep.bit_exact, "{}", rep.summary());
+        // The lowered artifact carries the rewritten graph it was built
+        // from (Quantize/Dequantize boundaries included).
+        let lowered = q.lower().unwrap();
+        assert!(lowered
+            .graph
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, crate::graph::Op::Quantize { .. })));
     }
 
     #[test]

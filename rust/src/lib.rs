@@ -45,6 +45,13 @@
 //!   datapath precision* (the paper's future-work §IV-J automated);
 //!   reports its synthesis-cache hit rate and an
 //!   accuracy-vs-FPS-vs-resources Pareto front.
+//! * [`verify`] — differential verification that the pass pipeline is
+//!   semantics-preserving: a functional interpreter executes the lowered
+//!   [`codegen::KernelProgram`] (channel dataflow, fused epilogues,
+//!   f32/fp16/int8 datapaths) against the graph-level
+//!   [`quant::Executor`] oracle — bit-exact at int8, toleranced for
+//!   floats — plus a fuzzing harness with counterexample shrinking.
+//!   Drives [`flow::CompileSession::verify`] and `fpga-flow verify`.
 //! * [`runtime`] — PJRT runtime: loads `artifacts/*.hlo.txt` AOT-lowered
 //!   from JAX (L2) with Pallas kernels (L1) and executes inference on CPU.
 //!   Python never runs on this path. In builds without the PJRT bindings
@@ -140,6 +147,7 @@ pub mod schedule;
 pub mod sim;
 pub mod texpr;
 pub mod util;
+pub mod verify;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -5,6 +5,9 @@
 //!                    [--mode pipelined|folded] [--base] [--precision int8|fp16]
 //!                    [--explain] [--json]
 //! fpga-flow explain  --net lenet5 [--mode pipelined]   # ordered pass trace
+//! fpga-flow verify   --net lenet5 --frames 16          # differential check
+//!                    [--mode pipelined|folded] [--precision f32|fp16|int8]
+//!                    [--seed N] [--quick]
 //! fpga-flow targets                     # list registered device targets
 //! fpga-flow report                      # Tables II/III/IV vs the paper
 //! fpga-flow codegen  --net lenet5 [--precision int8]  # dump pseudo-OpenCL
@@ -49,6 +52,7 @@ fn main() {
     let result = match cmd {
         "compile" => cmd_compile(&args),
         "explain" => cmd_explain(&args),
+        "verify" => cmd_verify(&args),
         "targets" => cmd_targets(),
         "report" => cmd_report(),
         "codegen" => cmd_codegen(&args),
@@ -82,6 +86,13 @@ fn print_help() {
                    [--precision int8|fp16]\n\
                    print the ordered optimization-pass trace: per-pass\n\
                    IR-diff stats; skipped passes name the blocking rule\n\
+         verify    --net <n> [--frames 16] [--mode pipelined|folded]\n\
+                   [--precision f32|fp16|int8] [--seed N] [--quick]\n\
+                   differentially test the compiled kernels against the\n\
+                   reference executor for every pass subset of the\n\
+                   canonical pipeline (prefixes + leave-one-out), both\n\
+                   modes, all precisions; int8 must be bit-exact; failing\n\
+                   cases shrink to a reproducer (docs/VERIFICATION.md)\n\
          targets   list registered device targets (legality clock, roof, DSPs)\n\
          report    Tables II/III/IV, ours vs the paper\n\
          codegen   --net <n> [--target <t>] [--precision int8]  dump pseudo-OpenCL\n\
@@ -289,6 +300,126 @@ fn cmd_explain(args: &Args) -> tvm_fpga_flow::Result<()> {
         lowered.trace.skipped()
     );
     print!("{}", lowered.trace.render());
+    Ok(())
+}
+
+/// `fpga-flow verify`: differentially test the compiled kernel program
+/// against the graph-level reference executor, for every pass subset of
+/// the canonical pipeline (cumulative prefixes + leave-one-out), in both
+/// execution modes and at all three datapath precisions. int8 results
+/// must agree bit-exactly with `Executor::forward_quantized`; f32/fp16
+/// within the tolerances documented in docs/VERIFICATION.md. Any failing
+/// scenario is shrunk to a minimal reproducer and written to
+/// `target/verify-repro.json` (override with `VERIFY_REPRO_PATH`).
+fn cmd_verify(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::flow::CANONICAL_PIPELINE as CANONICAL;
+    use tvm_fpga_flow::schedule::OptKind;
+    use tvm_fpga_flow::verify::differ::{self, NetSpec, Scenario};
+
+    let g = net_arg(args)?;
+    let frames: usize = args.opt_parse("frames").unwrap_or(8).max(1);
+    // Accept both spellings the tool itself prints (decimal and 0x-hex),
+    // and reject garbage loudly instead of silently reseeding.
+    let seed: u64 = match args.opt("seed") {
+        None => 0x5EED_F00D,
+        Some(s) => tvm_fpga_flow::util::rng::parse_seed(s)
+            .ok_or_else(|| anyhow::anyhow!("invalid --seed {s} (decimal or 0x-prefixed hex)"))?,
+    };
+
+    // Canonical pipeline order (Table I as OptConfig::schedule_pipeline
+    // sequences it, pinned by a unit test): LF PK OF LT LU CW CH AR CE.
+    let mut subsets: Vec<(String, Vec<OptKind>)> = Vec::new();
+    if args.has_flag("quick") {
+        subsets.push(("base".into(), Vec::new()));
+        subsets.push(("full".into(), CANONICAL.to_vec()));
+    } else {
+        for n in 0..=CANONICAL.len() {
+            let label = if n == 0 {
+                "base".to_string()
+            } else if n == CANONICAL.len() {
+                "full".to_string()
+            } else {
+                format!("+{}", CANONICAL[..n].iter().map(|o| o.abbrev()).collect::<Vec<_>>().join("+"))
+            };
+            subsets.push((label, CANONICAL[..n].to_vec()));
+        }
+        for skip in 0..CANONICAL.len() {
+            let opts: Vec<OptKind> =
+                CANONICAL.iter().enumerate().filter(|&(i, _)| i != skip).map(|(_, o)| *o).collect();
+            subsets.push((format!("full-minus-{}", CANONICAL[skip].abbrev()), opts));
+        }
+    }
+
+    let modes: Vec<Mode> = match mode_arg(args) {
+        ModeChoice::Pipelined => vec![Mode::Pipelined],
+        ModeChoice::Folded => vec![Mode::Folded],
+        ModeChoice::Auto => vec![Mode::Pipelined, Mode::Folded],
+    };
+    let precisions: Vec<Precision> = match precision_arg(args)? {
+        Some(p) => vec![p],
+        None => Precision::all().to_vec(),
+    };
+
+    println!(
+        "differential verification — {} vs reference executor, {frames} frame(s)/scenario, \
+         {} subsets × {} mode(s) × {} precision(s)",
+        g.name,
+        subsets.len(),
+        modes.len(),
+        precisions.len()
+    );
+    let mut ran = 0usize;
+    let mut failures: Vec<(Scenario, String)> = Vec::new();
+    for &mode in &modes {
+        for &precision in &precisions {
+            let mut worst = 0f64;
+            let mut ok = 0usize;
+            for (label, opts) in &subsets {
+                let s = Scenario {
+                    net: NetSpec::Named(g.name.clone()),
+                    mode,
+                    precision,
+                    opts: opts.clone(),
+                    frames,
+                    frame: None,
+                    seed,
+                };
+                let rep = differ::run_scenario(&s);
+                ran += 1;
+                if rep.max_rel_err > worst {
+                    worst = rep.max_rel_err;
+                }
+                if rep.passed {
+                    ok += 1;
+                } else {
+                    println!("  FAIL [{} {} {label}] {}", mode.name(), precision, rep.summary());
+                    failures.push((s, rep.summary()));
+                }
+            }
+            println!(
+                "  {:<9} {:<5} {ok}/{} subsets ok, worst rel err {worst:.3e}{}",
+                mode.name(),
+                precision.name(),
+                subsets.len(),
+                if precision == Precision::Int8 { " (bit-exact required)" } else { "" }
+            );
+        }
+    }
+    if let Some((scenario, _)) = failures.first() {
+        let repro = differ::reproduce(scenario, None);
+        match differ::write_reproducer(&repro) {
+            Ok(path) => println!("shrunk reproducer written to {}", path.display()),
+            Err(e) => println!("could not write reproducer: {e}"),
+        }
+        println!("shrunk: {}", repro.shrunk.describe());
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "{}/{} verification scenarios failed",
+        failures.len(),
+        ran
+    );
+    println!("all {ran} scenarios agree with the reference executor.");
     Ok(())
 }
 

@@ -10,7 +10,7 @@ use crate::graph::{passes, Graph, Op};
 use crate::quant::rewrite;
 use crate::texpr::Precision;
 
-use super::{GraphPass, PassDiff};
+use super::{Equivalence, GraphPass, PassDiff};
 
 /// Fold inference-mode `conv(bias=false) → BatchNorm` chains into the
 /// conv's weights/bias: the BN node disappears from the graph (strictly
@@ -28,6 +28,12 @@ impl GraphPass for FoldBatchNorm {
 
     fn description(&self) -> &'static str {
         "fold BatchNorm after a bias-less conv into the conv's weights/bias"
+    }
+
+    fn equivalence(&self) -> Equivalence {
+        // Folding γ/β into conv weights re-rounds every product — results
+        // track the unfolded graph only within float tolerance.
+        Equivalence::FloatTolerant
     }
 
     fn run(&self, graph: &Graph, diff: &mut PassDiff) -> (Graph, usize) {
@@ -110,6 +116,10 @@ impl GraphPass for InsertQdq {
 
     fn description(&self) -> &'static str {
         "insert quantize/dequantize boundaries and fold them across compute chains"
+    }
+
+    fn equivalence(&self) -> Equivalence {
+        Equivalence::GridExact
     }
 
     fn precondition(&self, graph: &Graph) -> Result<(), String> {

@@ -58,6 +58,42 @@ impl PassLevel {
     }
 }
 
+/// The semantics-preservation obligation a pass carries — what the
+/// differential verifier (`crate::verify`) may assume survived the pass.
+/// Ordered by the numeric drift the obligation permits (none → float
+/// reassociation), so a trace's overall obligation is the `max` over its
+/// applied passes and [`FloatTolerant`](Equivalence::FloatTolerant) — the
+/// only variant that licenses drift — dominates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Equivalence {
+    /// The pass must not change computed values at all (structural
+    /// rewrites: LF, PK, LU, LT, CW, CH, AR, CE, DCE, pad-fuse).
+    #[default]
+    BitExact,
+    /// The pass only rewrites modeled costs (traffic, LSU patterns,
+    /// density bookkeeping); computed values stay bit-identical (VT, SP).
+    CostModelOnly,
+    /// Values move onto/off a fixed-point grid; agreement is exact *on the
+    /// grid semantics* (Q datapath narrowing, quantize/dequantize
+    /// boundary insertion).
+    GridExact,
+    /// Floating-point contraction/reassociation is permitted (OF
+    /// `-fp-relaxed`, BN folding into conv weights) — agreement within a
+    /// documented tolerance.
+    FloatTolerant,
+}
+
+impl Equivalence {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Equivalence::BitExact => "bit-exact",
+            Equivalence::GridExact => "grid-exact",
+            Equivalence::FloatTolerant => "float-tolerant",
+            Equivalence::CostModelOnly => "cost-model-only",
+        }
+    }
+}
+
 /// IR-diff statistics of one pass application — what actually changed.
 /// Counters a pass does not touch stay zero; [`PassDiff::entries`] lists
 /// only the non-zero ones for reports.
@@ -153,6 +189,10 @@ pub struct PassRecord {
     /// blocking legality rule or mode restriction.
     pub skipped: Option<String>,
     pub diff: PassDiff,
+    /// The equivalence obligation the pass declared (recorded even for
+    /// skipped passes; a skipped pass contributes nothing to the trace's
+    /// overall obligation).
+    pub equivalence: Equivalence,
 }
 
 /// Ordered record of every pass the manager ran (or skipped) for one
@@ -174,12 +214,25 @@ impl PassTrace {
         self.records.len() - self.applied()
     }
 
+    /// The strongest tolerance the *applied* passes are allowed to need —
+    /// what the differential verifier must budget for when comparing the
+    /// compiled program against the reference executor. An empty (or
+    /// all-skipped) trace demands bit-exactness.
+    pub fn required_equivalence(&self) -> Equivalence {
+        self.records
+            .iter()
+            .filter(|r| r.skipped.is_none())
+            .map(|r| r.equivalence)
+            .max()
+            .unwrap_or(Equivalence::BitExact)
+    }
+
     /// Render the ordered trace for terminal output.
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:>2}  {:<4} {:<22} {:<8} {:>7}  result\n",
-            "#", "abbr", "pass", "level", "matched"
+            "{:>2}  {:<4} {:<22} {:<8} {:>7}  {:<15} result\n",
+            "#", "abbr", "pass", "level", "matched", "preserves"
         ));
         for (i, r) in self.records.iter().enumerate() {
             let result = match &r.skipped {
@@ -187,12 +240,13 @@ impl PassTrace {
                 None => r.diff.summary(),
             };
             out.push_str(&format!(
-                "{:>2}  {:<4} {:<22} {:<8} {:>7}  {}\n",
+                "{:>2}  {:<4} {:<22} {:<8} {:>7}  {:<15} {}\n",
                 i + 1,
                 r.abbrev,
                 r.name,
                 r.level.name(),
                 if r.skipped.is_some() { "-".to_string() } else { r.matched.to_string() },
+                r.equivalence.name(),
                 result
             ));
         }
@@ -211,6 +265,12 @@ pub trait GraphPass {
     fn precondition(&self, graph: &Graph) -> Result<(), String> {
         let _ = graph;
         Ok(())
+    }
+    /// The semantics-preservation obligation this pass carries (checked by
+    /// the `crate::verify` differential harness). Defaults to bit-exact —
+    /// a pass that reorders floats or moves values onto a grid must say so.
+    fn equivalence(&self) -> Equivalence {
+        Equivalence::BitExact
     }
     /// Apply the rewrite. Returns the new graph and the number of nodes
     /// the pass's pattern matched; IR-diff counters go into `diff`.
@@ -243,6 +303,11 @@ pub trait SchedulePass {
     fn precondition(&self, ctx: &ScheduleCtx) -> Result<(), String> {
         let _ = ctx;
         Ok(())
+    }
+    /// The semantics-preservation obligation this pass carries (checked by
+    /// the `crate::verify` differential harness). Defaults to bit-exact.
+    fn equivalence(&self) -> Equivalence {
+        Equivalence::BitExact
     }
     /// Apply the transform. Returns the number of kernels the pass's
     /// applicability pattern matched; IR-diff counters go into `diff`.
@@ -312,6 +377,7 @@ impl PassManager {
                 matched: 0,
                 skipped: None,
                 diff: PassDiff::default(),
+                equivalence: pass.equivalence(),
             };
             match pass.precondition(&g) {
                 Err(reason) => rec.skipped = Some(reason),
@@ -343,6 +409,7 @@ impl PassManager {
                 matched: 0,
                 skipped: None,
                 diff: PassDiff::default(),
+                equivalence: pass.equivalence(),
             };
             match pass.precondition(ctx) {
                 Err(reason) => rec.skipped = Some(reason),
@@ -449,6 +516,34 @@ mod tests {
         let render = built.trace.render();
         assert!(render.contains("LF"));
         assert!(render.contains("skipped:"));
+    }
+
+    #[test]
+    fn trace_equivalence_is_max_over_applied_passes() {
+        let g = models::lenet5();
+        let plan = default_factors(&g);
+        // Base pipeline: nothing applied → bit-exact by definition.
+        let base =
+            crate::flow::patterns::build_with_passes(&g, Mode::Pipelined, &OptConfig::base(), &plan);
+        assert_eq!(base.trace.required_equivalence(), Equivalence::BitExact);
+        // OF is in the optimized set → float reassociation allowed.
+        let opt = crate::flow::patterns::build_with_passes(
+            &g,
+            Mode::Pipelined,
+            &OptConfig::optimized(),
+            &plan,
+        );
+        assert_eq!(opt.trace.required_equivalence(), Equivalence::FloatTolerant);
+        // Dropping OF leaves only structural (bit-exact) passes applied.
+        let cfg = OptConfig::optimized().without(crate::schedule::OptKind::FloatOpt);
+        let strict = crate::flow::patterns::build_with_passes(&g, Mode::Pipelined, &cfg, &plan);
+        assert_eq!(strict.trace.required_equivalence(), Equivalence::BitExact);
+        // VT makes no value claim at all — the weakest obligation wins.
+        let vt = cfg.with_vectors();
+        let cost = crate::flow::patterns::build_with_passes(&g, Mode::Pipelined, &vt, &plan);
+        assert_eq!(cost.trace.required_equivalence(), Equivalence::CostModelOnly);
+        // The rendered trace names each pass's obligation.
+        assert!(opt.trace.render().contains("float-tolerant"));
     }
 
     #[test]

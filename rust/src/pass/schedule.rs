@@ -35,7 +35,7 @@ use crate::quant::rewrite;
 use crate::schedule::{AppliedOpts, OptKind, Scheduler};
 use crate::texpr::{self, Dir, Epilogue, LoopVar, MemSpace, Pattern, Precision};
 
-use super::{PassDiff, ScheduleCtx, SchedulePass};
+use super::{Equivalence, PassDiff, ScheduleCtx, SchedulePass};
 
 // ---------------------------------------------------------------------------
 // Neutral lowering + program-surgery helpers
@@ -61,6 +61,7 @@ pub fn lower_to_kernels(graph: &Graph, mode: Mode) -> KernelProgram {
             applied: AppliedOpts::default(),
             autorun: false,
             layers: vec![node.id],
+            absorbed: vec![],
             group: None,
             queue: 0,
         });
@@ -224,6 +225,11 @@ impl SchedulePass for FuseEpilogues {
             };
             prog.kernels[host_k].nest.epilogue.push(epilogue_of_node(&graph.nodes[abs]));
             prog.kernels[host_k].applied.record(OptKind::Fuse);
+            // Record *which* node was absorbed, in push order — without
+            // this the program cannot name the BN parameters its
+            // `BatchNormFold` epilogue applies, and `crate::verify` cannot
+            // cross-check the fused chain against the graph.
+            prog.kernels[host_k].absorbed.push(abs);
             remove.insert(abs_k);
             diff.epilogues_fused += 1;
             matched += 1;
@@ -268,6 +274,12 @@ impl SchedulePass for FloatOpts {
 
     fn description(&self) -> &'static str {
         "-fpc -fp-relaxed float contraction/relaxed ordering for the whole bitstream"
+    }
+
+    fn equivalence(&self) -> Equivalence {
+        // -fp-relaxed reassociates reductions; results may drift within a
+        // documented tolerance (never bit-exactly reproducible).
+        Equivalence::FloatTolerant
     }
 
     fn run(&self, _ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
@@ -318,6 +330,12 @@ impl SchedulePass for QuantizeDatapath {
         "narrow grid-capable kernels' operand streams to the target precision"
     }
 
+    fn equivalence(&self) -> Equivalence {
+        // Operand streams move onto the fixed-point grid; agreement with
+        // the quantized reference executor is exact on grid semantics.
+        Equivalence::GridExact
+    }
+
     fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
         let mut matched = 0;
         for k in &mut prog.kernels {
@@ -358,6 +376,11 @@ impl SchedulePass for VectorizeLoads {
 
     fn description(&self) -> &'static str {
         "coalesce strided/windowed ifmap loads into aligned vector loads"
+    }
+
+    fn equivalence(&self) -> Equivalence {
+        // Rewrites modeled LSU patterns only — no value claim to check.
+        Equivalence::CostModelOnly
     }
 
     fn run(&self, _ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
@@ -410,6 +433,12 @@ impl SchedulePass for SparsifyWeights {
 
     fn description(&self) -> &'static str {
         "prune weights to the target density; zero MACs are skipped"
+    }
+
+    fn equivalence(&self) -> Equivalence {
+        // The model rescales weight traffic/skip logic only; actual weight
+        // pruning (a value change) is out of the modeled value domain.
+        Equivalence::CostModelOnly
     }
 
     fn precondition(&self, _ctx: &ScheduleCtx) -> Result<(), String> {
@@ -798,10 +827,14 @@ impl SchedulePass for CachedWrites {
                     })
                     .count();
                 diff.accesses_cached += staged;
+                // The input-line strip must cover the widest feature map
+                // this kernel actually reads — for a parameterized (PK)
+                // kernel that is the max over every member layer.
+                let max_w = max_input_width(ctx.graph, &k.layers);
                 with_scheduler(k, |s| {
                     let _ = s.cache_read("weights");
                     let _ = s.cache_read("ifmap");
-                    tile_stash_bytes(s, ctx.plan, node);
+                    tile_stash_bytes(s, ctx.plan, node, max_w);
                 });
             }
         }
@@ -809,9 +842,34 @@ impl SchedulePass for CachedWrites {
     }
 }
 
+/// Widest input feature map (in elements per row; flat inputs count their
+/// full length) any of `layers` reads — what the double-buffered ifmap
+/// line strip of a folded kernel must span. Shared with the `verify`
+/// interpreter's stash-capacity check so the sizing code and its checker
+/// agree on what "the strip" means (the check still catches sizing-formula
+/// bugs like a hard-coded on-chip width).
+pub(crate) fn max_input_width(graph: &Graph, layers: &[usize]) -> u64 {
+    layers
+        .iter()
+        .filter_map(|&nid| {
+            let inp = graph.nodes[nid].inputs.first().copied()?;
+            let shape = &graph.nodes[inp].shape;
+            Some(match shape.chw() {
+                Some((_, _, w)) => w as u64,
+                None => shape.elems() as u64,
+            })
+        })
+        .max()
+        .unwrap_or(1)
+}
+
 /// Size the BRAM tile stashes of a folded kernel: double-buffered weight
-/// tile + an input line strip, at the datapath's element width.
-fn tile_stash_bytes(s: &mut Scheduler, plan: &FactorPlan, node: &Node) {
+/// tile + an input line strip, at the datapath's element width. `max_w`
+/// is the widest member-layer input row (previously hard-coded to 224,
+/// which over-sized the stash ~7× on LeNet-class maps and would
+/// under-size it for anything wider — surfaced by the `verify` harness's
+/// stash-capacity check).
+fn tile_stash_bytes(s: &mut Scheduler, plan: &FactorPlan, node: &Node, max_w: u64) {
     let Some(g) = node.op.param_group() else { return };
     let (t_ic, t_oc) = plan.group_tiles.get(&g).copied().unwrap_or((8, 8));
     let k2 = (g.kernel * g.kernel) as u64;
@@ -820,8 +878,8 @@ fn tile_stash_bytes(s: &mut Scheduler, plan: &FactorPlan, node: &Node) {
         if a.space == MemSpace::Local {
             a.array_bytes = match a.buffer.as_str() {
                 "weights" => 2 * t_ic * t_oc * k2 * eb,
-                // strip of k input rows × tile channels (max W on chip 224)
-                "ifmap" => 2 * t_ic * (g.kernel as u64) * 224 * eb,
+                // strip of k input rows × tile channels at the actual width
+                "ifmap" => 2 * t_ic * (g.kernel as u64) * max_w * eb,
                 _ => a.array_bytes,
             };
         }
@@ -1056,6 +1114,70 @@ mod tests {
             assert_eq!(k.id, i);
             assert!(k.name.starts_with(&format!("k{i}_")), "{}", k.name);
         }
+    }
+
+    #[test]
+    fn absorbed_chain_recorded_in_fusion_order() {
+        // Regression (surfaced by the verify harness): LF used to discard
+        // the identity of absorbed BN/activation nodes, so a
+        // `BatchNormFold` epilogue named no parameters and the fused chain
+        // was unrecoverable from the program. Kernels now record the
+        // absorbed node ids in push (= graph) order.
+        use crate::flow::patterns::{build_with_passes, default_factors, OptConfig};
+        let g = models::mobilenet_v1();
+        let plan = default_factors(&g);
+        let built = build_with_passes(&g, Mode::Pipelined, &OptConfig::optimized(), &plan);
+        let mut checked = 0;
+        for k in &built.program.kernels {
+            if !ctx_is_conv(&g, k.layers[0]) {
+                continue;
+            }
+            // Every MobileNet conv/dw hosts a bn → relu chain.
+            assert_eq!(k.absorbed.len(), 2, "kernel {}: {:?}", k.name, k.absorbed);
+            assert!(matches!(g.nodes[k.absorbed[0]].op, Op::BatchNorm), "{}", k.name);
+            assert!(matches!(g.nodes[k.absorbed[1]].op, Op::Activate(_)), "{}", k.name);
+            // Push order is graph order: the epilogue suffix mirrors it.
+            let n = k.nest.epilogue.len();
+            assert!(matches!(k.nest.epilogue[n - 2], Epilogue::BatchNormFold), "{}", k.name);
+            assert!(matches!(k.nest.epilogue[n - 1], Epilogue::Activation(_)), "{}", k.name);
+            checked += 1;
+        }
+        assert!(checked >= 14, "only {checked} conv kernels checked");
+    }
+
+    fn ctx_is_conv(g: &Graph, node: usize) -> bool {
+        matches!(g.nodes[node].op, Op::Conv2d { .. } | Op::DepthwiseConv2d { .. })
+    }
+
+    #[test]
+    fn folded_ifmap_stash_sized_to_actual_layer_width() {
+        // Regression (surfaced by the verify harness's stash-capacity
+        // check): the folded ifmap line strip was hard-coded to a 224-wide
+        // feature map, over-sizing LeNet-class stashes ~7× and
+        // under-sizing anything wider. It now spans the widest member
+        // layer's actual input row.
+        use crate::flow::patterns::{build_folded, default_factors, OptConfig};
+        let g = models::lenet5();
+        let plan = default_factors(&g);
+        let (prog, _) = build_folded(&g, &OptConfig::optimized(), &plan);
+        let group = ParamGroup { kind: GroupKind::Conv, kernel: 5, stride: 1 };
+        let k = prog
+            .kernels
+            .iter()
+            .find(|k| k.group == Some(group))
+            .expect("lenet folded has a conv5x5s1 kernel");
+        let (t_ic, _) = plan.group_tiles[&group];
+        // Widest member input: c1 reads the 32-wide image (c3 reads 14).
+        let expect = 2 * t_ic * 5 * 32 * k.nest.precision.bytes();
+        let ifmap = k
+            .nest
+            .accesses
+            .iter()
+            .find(|a| a.buffer == "ifmap" && a.space == MemSpace::Local)
+            .expect("folded conv stashes its ifmap strip in BRAM");
+        assert_eq!(ifmap.array_bytes, expect, "kernel {}", k.name);
+        let old_2240 = 2 * t_ic * 5 * 224 * k.nest.precision.bytes();
+        assert!(ifmap.array_bytes < old_2240, "stash still sized for a 224-wide map");
     }
 
     #[test]

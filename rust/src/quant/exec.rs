@@ -79,6 +79,20 @@ impl<'g> Executor<'g> {
         Executor { graph, params }
     }
 
+    /// Synthetic weights of one node (oracle hook for the `crate::verify`
+    /// kernel interpreter, which must run on the *same* parameters as the
+    /// reference it is diffed against). Conv: OIHW; dense: [out × in];
+    /// BN: per-channel γ. Empty for weightless nodes.
+    pub fn weights(&self, node: NodeId) -> &[f32] {
+        &self.params[node].weights
+    }
+
+    /// Synthetic per-output-channel bias (or BN β) of one node — the
+    /// companion oracle hook to [`Executor::weights`].
+    pub fn bias(&self, node: NodeId) -> &[f32] {
+        &self.params[node].bias
+    }
+
     /// Per-output-channel weight ranges of one node (empty for weightless
     /// nodes) — what per-channel calibration quantizes against.
     pub fn weight_channel_ranges(&self, node: NodeId) -> Vec<Range> {
@@ -118,8 +132,23 @@ impl<'g> Executor<'g> {
         precision: Precision,
         scheme: QScheme,
     ) -> Vec<f32> {
+        self.forward_quantized_observed(frame, table, precision, scheme, |_, _| {})
+    }
+
+    /// [`Executor::forward_quantized`] with an observer that sees every
+    /// node's activation in topological order — the mismatch-localization
+    /// hook of the `crate::verify` differential harness (find the first
+    /// node where the kernel interpreter and this oracle diverge).
+    pub fn forward_quantized_observed(
+        &self,
+        frame: &[f32],
+        table: &CalibrationTable,
+        precision: Precision,
+        scheme: QScheme,
+        mut observe: impl FnMut(NodeId, &[f32]),
+    ) -> Vec<f32> {
         let q = QuantCtx { table, precision, scheme };
-        self.run(frame, Some(&q), &mut |_, _| {})
+        self.run(frame, Some(&q), &mut observe)
     }
 
     fn run(
@@ -360,6 +389,53 @@ enum Datapath {
     F16 { rx: Vec<f32> },
 }
 
+/// Quantized operands of one compute op — the grid-side of [`Datapath`],
+/// shared with the `verify` interpreter so both sides of the differential
+/// prepare operands identically (scheme selection, range merge and
+/// per-channel weight-group indexing are pass-invariant semantics).
+pub(crate) struct QuantizedOperands {
+    pub qx: Vec<i32>,
+    pub qw: Vec<i32>,
+    /// Activation (per-tensor) scale.
+    pub sx: f64,
+    /// Weight grid (per-tensor or per-channel).
+    pub wq: QParams,
+}
+
+/// Quantize `x` against the calibrated activation range and `weights`
+/// against the per-channel ranges under `scheme` (per-tensor = the merged
+/// range) — the canonical int8 operand preparation.
+pub(crate) fn quantize_operands(
+    x: &[f32],
+    weights: &[f32],
+    act_range: Range,
+    weight_ranges: &[Range],
+    scheme: QScheme,
+) -> QuantizedOperands {
+    let xq = QParams::per_tensor(act_range, Precision::Int8);
+    let wq = match scheme {
+        QScheme::PerChannel if !weight_ranges.is_empty() => {
+            QParams::per_channel(weight_ranges, Precision::Int8)
+        }
+        _ => {
+            let whole = weight_ranges.iter().fold(Range::EMPTY, |a, r| a.merge(r));
+            QParams::per_tensor(whole, Precision::Int8)
+        }
+    };
+    let oc = wq.groups().max(1);
+    let per = weights.len() / oc;
+    QuantizedOperands {
+        qx: x.iter().map(|&v| xq.quantize(v as f64, 0)).collect(),
+        qw: weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| wq.quantize(w as f64, i / per.max(1)))
+            .collect(),
+        sx: xq.scale(0),
+        wq,
+    }
+}
+
 impl QuantCtx<'_> {
     fn act_params(&self, node: NodeId) -> QParams {
         QParams::per_tensor(self.table.activation(node), Precision::Int8)
@@ -370,31 +446,14 @@ impl QuantCtx<'_> {
             Precision::F16 => Datapath::F16 { rx: x.iter().map(|&v| f16_round(v)).collect() },
             _ => {
                 let src = exec.graph.nodes[node].inputs[0];
-                let xq = self.act_params(src);
-                let ranges = self.table.weight_ranges(node);
-                let wq = match self.scheme {
-                    QScheme::PerChannel if !ranges.is_empty() => {
-                        QParams::per_channel(&ranges, Precision::Int8)
-                    }
-                    _ => {
-                        let whole = ranges.iter().fold(Range::EMPTY, |a, r| a.merge(r));
-                        QParams::per_tensor(whole, Precision::Int8)
-                    }
-                };
-                let p = &exec.params[node];
-                let oc = wq.groups().max(1);
-                let per = p.weights.len() / oc;
-                Datapath::Int8 {
-                    qx: x.iter().map(|&v| xq.quantize(v as f64, 0)).collect(),
-                    qw: p
-                        .weights
-                        .iter()
-                        .enumerate()
-                        .map(|(i, &w)| wq.quantize(w as f64, i / per.max(1)))
-                        .collect(),
-                    sx: xq.scale(0),
-                    wq,
-                }
+                let q = quantize_operands(
+                    x,
+                    &exec.params[node].weights,
+                    self.table.activation(src),
+                    &self.table.weight_ranges(node),
+                    self.scheme,
+                );
+                Datapath::Int8 { qx: q.qx, qw: q.qw, sx: q.sx, wq: q.wq }
             }
         }
     }
@@ -408,14 +467,19 @@ fn he_params(rng: &mut Rng, n_weights: usize, fan_in: usize, oc: usize, bias: bo
     }
 }
 
-fn channels_of(s: &Shape) -> usize {
+/// Channel count of a shape (flat tensors are all-channel). Shared with
+/// the `verify` interpreter so both sides of the differential stay in
+/// lockstep on scheduling-invariant semantics.
+pub(crate) fn channels_of(s: &Shape) -> usize {
     match s {
         Shape::Chw(c, ..) => *c,
         Shape::Flat(n) => *n,
     }
 }
 
-fn activate(v: f32, a: Activation) -> f32 {
+/// Activation semantics (shared with the `verify` interpreter — no
+/// schedule pass has value freedom here).
+pub(crate) fn activate(v: f32, a: Activation) -> f32 {
     match a {
         Activation::None => v,
         Activation::Relu => v.max(0.0),
@@ -424,7 +488,9 @@ fn activate(v: f32, a: Activation) -> f32 {
     }
 }
 
-fn pool(
+/// Pooling semantics (shared with the `verify` interpreter; average
+/// pools divide by the full window even at padded borders).
+pub(crate) fn pool(
     x: &[f32],
     in_shape: &Shape,
     out_shape: &Shape,

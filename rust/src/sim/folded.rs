@@ -87,6 +87,7 @@ mod tests {
                 applied: Default::default(),
                 autorun: false,
                 layers: vec![n.id],
+                absorbed: vec![],
                 group: n.op.param_group(),
                 queue: 0,
             }],

@@ -144,7 +144,7 @@ mod tests {
             applied = s.finish();
         }
         (
-            Kernel { id: 0, name: "c3".into(), nest, applied, autorun: false, layers: vec![n.id], group: None, queue: 0 },
+            Kernel { id: 0, name: "c3".into(), nest, applied, autorun: false, layers: vec![n.id], absorbed: vec![], group: None, queue: 0 },
             g.nodes.iter().find(|x| x.name == "c3").unwrap().shape.elems() as u64,
             150,
         )

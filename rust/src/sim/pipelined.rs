@@ -115,6 +115,7 @@ mod tests {
                 applied,
                 autorun: !n.op.has_weights(),
                 layers: vec![n.id],
+                absorbed: vec![],
                 group: None,
                 queue: if queues > 1 { i } else { 0 },
             });

@@ -10,8 +10,11 @@ pub fn cases() -> u64 {
 }
 
 /// Run `f(rng, case_idx)`; panic with replay info on the first failure.
+/// The base seed honors the `FLOW_TEST_SEED` env override
+/// ([`super::rng::test_seed`]) and is printed on failure so the exact
+/// failing case replays deterministically.
 pub fn check(name: &str, mut f: impl FnMut(&mut Rng, u64)) {
-    let seed_base = 0xC0DEC0DE_u64;
+    let seed_base = super::rng::test_seed(0xC0DEC0DE);
     for case in 0..cases() {
         let mut rng = Rng::new(seed_base ^ case.wrapping_mul(0x9E3779B97F4A7C15));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -23,7 +26,11 @@ pub fn check(name: &str, mut f: impl FnMut(&mut Rng, u64)) {
                 .map(|s| s.as_str())
                 .or_else(|| e.downcast_ref::<&str>().copied())
                 .unwrap_or("<non-string panic>");
-            panic!("property '{name}' failed at case {case}: {msg}");
+            let replay = case + 1;
+            panic!(
+                "property '{name}' failed at case {case} (replay: FLOW_TEST_SEED={seed_base} \
+                 PROP_CASES={replay}): {msg}"
+            );
         }
     }
 }

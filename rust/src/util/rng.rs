@@ -2,6 +2,24 @@
 //! the offline environment. Used by the synthetic data generator, the
 //! coordinator's jittered workloads and the in-crate property tests.
 
+/// Base seed for randomized tests: the `FLOW_TEST_SEED` environment
+/// variable (decimal, or hex with a `0x` prefix) when set, else `default`.
+/// Every randomized test derives its cases from this seed and prints it on
+/// failure, so any CI failure replays locally with
+/// `FLOW_TEST_SEED=<seed> cargo test …`.
+pub fn test_seed(default: u64) -> u64 {
+    std::env::var("FLOW_TEST_SEED").ok().and_then(|s| parse_seed(&s)).unwrap_or(default)
+}
+
+/// Parse a seed spelling: decimal or `0x`-prefixed hex.
+pub fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
+    }
+}
+
 /// xoshiro256** seeded via splitmix64.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -114,6 +132,18 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
         assert!(mean.abs() < 0.02, "{mean}");
         assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn seed_spellings_parse() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed(" 0xC0DEC0DE "), Some(0xC0DE_C0DE));
+        assert_eq!(parse_seed("0Xff"), Some(255));
+        assert_eq!(parse_seed("nope"), None);
+        // Without the env override the default passes through.
+        if std::env::var("FLOW_TEST_SEED").is_err() {
+            assert_eq!(test_seed(7), 7);
+        }
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! Differential fuzzing harness: randomized (network × pass-subset ×
+//! precision × mode) scenarios through [`super::verify_program`], with a
+//! greedy shrinker that reduces any counterexample to a minimal
+//! (net, config, frame) reproducer.
+//!
+//! A [`Scenario`] is fully described by plain data (network name or chain
+//! seed, mode, precision, enabled pass kinds, frame seed/index), so a CI
+//! failure serializes to JSON ([`Reproducer`]), uploads as an artifact and
+//! replays locally byte-for-byte. [`Fault`]s inject known-wrong programs
+//! to prove the harness actually catches and shrinks mismatches (the
+//! `forced-mismatch` self-test of `rust/tests/differential.rs`).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::codegen::KernelProgram;
+use crate::flow::patterns::{build_with_passes, default_factors, OptConfig};
+use crate::flow::Mode;
+use crate::graph::{models, Activation, Graph, GraphBuilder, Op, Shape};
+use crate::schedule::OptKind;
+use crate::texpr::Precision;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::{frames_for, verify_program, VerifyOptions, VerifyReport};
+
+/// Network under test: a named evaluation model or a seeded random chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetSpec {
+    Named(String),
+    Chain { seed: u64 },
+}
+
+impl NetSpec {
+    pub fn describe(&self) -> String {
+        match self {
+            NetSpec::Named(n) => n.clone(),
+            NetSpec::Chain { seed } => format!("chain:{seed:#x}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NetSpec> {
+        match s.strip_prefix("chain:") {
+            Some(seed) => crate::util::rng::parse_seed(seed).map(|seed| NetSpec::Chain { seed }),
+            None => Some(NetSpec::Named(s.to_string())),
+        }
+    }
+}
+
+/// One differential-testing scenario — plain data, fully replayable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub net: NetSpec,
+    pub mode: Mode,
+    pub precision: Precision,
+    /// Enabled optimization kinds (the pass subset under test).
+    pub opts: Vec<OptKind>,
+    /// Frames to verify (ignored when `frame` pins a single index).
+    pub frames: usize,
+    /// When set, verify only this frame index — the shrinker's output.
+    pub frame: Option<usize>,
+    /// Frame-generation seed.
+    pub seed: u64,
+}
+
+/// The pass kinds the fuzzer toggles: the canonical Table-I pipeline
+/// ([`crate::flow::patterns::CANONICAL_PIPELINE`] — the single source of
+/// truth, so a newly registered pass is fuzzed automatically) plus the VT
+/// extension. Q rides `precision`; SP is excluded because its value
+/// semantics are cost-model-only.
+pub fn fuzz_opts() -> Vec<OptKind> {
+    crate::flow::patterns::CANONICAL_PIPELINE
+        .iter()
+        .copied()
+        .chain(std::iter::once(OptKind::Vectorize))
+        .collect()
+}
+
+impl Scenario {
+    /// The materialized network.
+    pub fn graph(&self) -> Graph {
+        match &self.net {
+            NetSpec::Named(n) => models::by_name(n).unwrap_or_else(|| {
+                panic!("scenario names unknown network {n}")
+            }),
+            NetSpec::Chain { seed } => random_chain(*seed),
+        }
+    }
+
+    /// The optimization config this scenario's pass subset selects.
+    pub fn cfg(&self) -> OptConfig {
+        let mut cfg = OptConfig::base();
+        for o in &self.opts {
+            match o {
+                OptKind::Unroll => cfg.unroll = true,
+                OptKind::Tile => cfg.tile = true,
+                OptKind::Fuse => cfg.fuse = true,
+                OptKind::CachedWrite => cfg.cached_writes = true,
+                OptKind::FloatOpt => cfg.float_opt = true,
+                OptKind::Channels => cfg.channels = true,
+                OptKind::Autorun => cfg.autorun = true,
+                OptKind::Concurrent => cfg.concurrent = true,
+                OptKind::Parameterize => cfg.parameterize = true,
+                OptKind::Vectorize => cfg.vectorize = true,
+                OptKind::Sparsify => cfg.weight_density = 0.5,
+                OptKind::Quantize => {}
+            }
+        }
+        cfg.with_precision(self.precision)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {} {} opts=[{}] frames={}{} seed={:#x}",
+            self.net.describe(),
+            self.mode.name(),
+            self.precision,
+            self.opts.iter().map(|o| o.abbrev()).collect::<Vec<_>>().join(" "),
+            self.frames,
+            self.frame.map(|i| format!(" frame={i}")).unwrap_or_default(),
+            self.seed
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("net".into(), Json::Str(self.net.describe()));
+        m.insert("mode".into(), Json::Str(self.mode.name().into()));
+        m.insert("precision".into(), Json::Str(self.precision.name().into()));
+        m.insert(
+            "opts".into(),
+            Json::Arr(self.opts.iter().map(|o| Json::Str(o.abbrev().into())).collect()),
+        );
+        m.insert("frames".into(), Json::Num(self.frames as f64));
+        match self.frame {
+            Some(i) => m.insert("frame".into(), Json::Num(i as f64)),
+            None => m.insert("frame".into(), Json::Null),
+        };
+        m.insert("seed".into(), Json::Str(format!("{:#x}", self.seed)));
+        Json::Obj(m)
+    }
+
+    /// Parse a scenario back from [`Scenario::to_json`] output (the replay
+    /// path of an uploaded reproducer).
+    pub fn from_json(j: &Json) -> Option<Scenario> {
+        let net = NetSpec::parse(j.get("net")?.as_str()?)?;
+        let mode = match j.get("mode")?.as_str()? {
+            "pipelined" => Mode::Pipelined,
+            "folded" => Mode::Folded,
+            _ => return None,
+        };
+        let precision = Precision::parse(j.get("precision")?.as_str()?)?;
+        // Strict: an unknown abbreviation means the reproducer came from
+        // a different build (or was corrupted) — replaying a silently
+        // weakened pass subset would mask the original failure.
+        let opts = j
+            .get("opts")?
+            .as_arr()?
+            .iter()
+            .map(|o| o.as_str().and_then(opt_from_abbrev))
+            .collect::<Option<Vec<OptKind>>>()?;
+        let frames = j.get("frames")?.as_u64()? as usize;
+        let frame = match j.get("frame") {
+            Some(Json::Num(n)) => Some(*n as usize),
+            _ => None,
+        };
+        let seed = crate::util::rng::parse_seed(j.get("seed")?.as_str()?)?;
+        Some(Scenario { net, mode, precision, opts, frames, frame, seed })
+    }
+}
+
+fn opt_from_abbrev(s: &str) -> Option<OptKind> {
+    [
+        OptKind::Parameterize,
+        OptKind::Unroll,
+        OptKind::Tile,
+        OptKind::Fuse,
+        OptKind::CachedWrite,
+        OptKind::FloatOpt,
+        OptKind::Channels,
+        OptKind::Autorun,
+        OptKind::Concurrent,
+        OptKind::Quantize,
+        OptKind::Vectorize,
+        OptKind::Sparsify,
+    ]
+    .into_iter()
+    .find(|o| o.abbrev() == s)
+}
+
+/// Draw a random scenario: mostly small random chains (wide structural
+/// diversity, cheap forwards), sometimes LeNet-5 (a real network with
+/// tanh/avg-pool f32 islands), over random pass subsets, modes and
+/// precisions.
+pub fn random_scenario(rng: &mut Rng) -> Scenario {
+    let net = if rng.below(10) < 7 {
+        NetSpec::Chain { seed: rng.next_u64() }
+    } else {
+        NetSpec::Named("lenet5".into())
+    };
+    let mode = if rng.below(2) == 0 { Mode::Pipelined } else { Mode::Folded };
+    let precision = match rng.below(3) {
+        0 => Precision::F32,
+        1 => Precision::F16,
+        _ => Precision::Int8,
+    };
+    let opts: Vec<OptKind> = fuzz_opts().into_iter().filter(|_| rng.below(2) == 0).collect();
+    Scenario { net, mode, precision, opts, frames: 2, frame: None, seed: rng.next_u64() }
+}
+
+/// Random layer chain (the `pass_properties` generator, re-homed where
+/// both the property tests and the differ can reach it): convs
+/// (optionally BN'd / activated), depthwise convs, bounded pools, then
+/// flatten + dense. Always a valid graph.
+pub fn random_chain(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let channels = 1 + rng.below(3) as usize;
+    let (mut b, x) = GraphBuilder::new(format!("chain{seed:x}"), Shape::Chw(channels, 16, 16));
+    let mut cur = x;
+    let mut pools = 0;
+    let depth = 2 + rng.below(5);
+    for i in 0..depth {
+        cur = match rng.below(5) {
+            0 | 1 => {
+                let oc = 2 + rng.below(6) as usize;
+                let bias = rng.below(2) == 0;
+                let mut c = b.add(
+                    format!("c{i}"),
+                    Op::Conv2d {
+                        out_channels: oc,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        bias,
+                        activation: Activation::None,
+                    },
+                    &[cur],
+                );
+                if rng.below(2) == 0 {
+                    c = b.add(format!("c{i}.bn"), Op::BatchNorm, &[c]);
+                }
+                if rng.below(2) == 0 {
+                    c = b.add(format!("c{i}.act"), Op::Activate(Activation::Relu), &[c]);
+                }
+                c
+            }
+            2 => {
+                let bias = rng.below(2) == 0;
+                let mut d = b.add(
+                    format!("dw{i}"),
+                    Op::DepthwiseConv2d {
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        bias,
+                        activation: Activation::None,
+                    },
+                    &[cur],
+                );
+                if !bias && rng.below(2) == 0 {
+                    d = b.add(format!("dw{i}.bn"), Op::BatchNorm, &[d]);
+                }
+                d
+            }
+            3 if pools < 2 => {
+                pools += 1;
+                b.add(format!("p{i}"), Op::MaxPool { kernel: 2, stride: 2, padding: 0 }, &[cur])
+            }
+            _ => b.add(format!("a{i}"), Op::Activate(Activation::Relu), &[cur]),
+        };
+    }
+    let f = b.add("flat", Op::Flatten, &[cur]);
+    let d = b.add(
+        "fc",
+        Op::Dense { out_features: 10, bias: true, activation: Activation::None },
+        &[f],
+    );
+    b.finish(d)
+}
+
+/// Known-wrong program mutations for harness self-tests: prove a real
+/// divergence is caught, localized and shrunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Clear the first non-empty kernel epilogue (the kernel "forgets"
+    /// its bias/activation) — a value mismatch *and* a structural
+    /// violation.
+    DropEpilogue,
+    /// Re-widen the first narrowed kernel to f32 while the oracle stays
+    /// quantized — a pure value mismatch localizing to that kernel.
+    WidenPrecision,
+}
+
+impl Fault {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fault::DropEpilogue => "drop-epilogue",
+            Fault::WidenPrecision => "widen-precision",
+        }
+    }
+}
+
+/// Apply a fault to a built program. Returns the id of the mutated kernel
+/// (`None` when no kernel qualifies — the scenario is then vacuous).
+pub fn apply_fault(prog: &mut KernelProgram, fault: Fault) -> Option<usize> {
+    match fault {
+        Fault::DropEpilogue => {
+            for k in &mut prog.kernels {
+                if !k.nest.epilogue.is_empty() {
+                    k.nest.epilogue.clear();
+                    return Some(k.id);
+                }
+            }
+            None
+        }
+        Fault::WidenPrecision => {
+            for k in &mut prog.kernels {
+                if k.nest.precision != Precision::F32 {
+                    k.nest.precision = Precision::F32;
+                    return Some(k.id);
+                }
+            }
+            None
+        }
+    }
+}
+
+/// Build and verify one scenario.
+pub fn run_scenario(s: &Scenario) -> VerifyReport {
+    run_scenario_with_fault(s, None)
+}
+
+/// [`run_scenario`] with an optional injected fault (self-tests).
+pub fn run_scenario_with_fault(s: &Scenario, fault: Option<Fault>) -> VerifyReport {
+    let g = s.graph();
+    let cfg = s.cfg();
+    let plan = default_factors(&g);
+    let mut built = build_with_passes(&g, s.mode, &cfg, &plan);
+    if let Some(f) = fault {
+        apply_fault(&mut built.program, f);
+    }
+    let all = frames_for(&g, s.frames, s.seed);
+    let frames: Vec<Vec<f32>> = match s.frame {
+        Some(i) => vec![all[i.min(all.len() - 1)].clone()],
+        None => all,
+    };
+    verify_program(
+        &g,
+        &built.program,
+        s.precision,
+        built.trace.required_equivalence(),
+        &frames,
+        &VerifyOptions::default(),
+    )
+}
+
+/// Greedily shrink a failing scenario to a minimal reproducer: pin the
+/// single failing frame, drop every droppable pass, widen the precision
+/// to f32 when the failure survives it. The result still fails (and the
+/// original is returned unchanged if it never failed).
+pub fn shrink(s: &Scenario, fault: Option<Fault>) -> Scenario {
+    let fails = |sc: &Scenario| !run_scenario_with_fault(sc, fault).passed;
+    let mut cur = s.clone();
+    if !fails(&cur) {
+        return cur;
+    }
+    // 1. One frame is enough.
+    if cur.frame.is_none() {
+        for i in 0..cur.frames.max(1) {
+            let mut t = cur.clone();
+            t.frame = Some(i);
+            if fails(&t) {
+                cur = t;
+                break;
+            }
+        }
+    }
+    // 2. Drop passes to a fixpoint.
+    loop {
+        let mut shrunk = false;
+        for i in 0..cur.opts.len() {
+            let mut t = cur.clone();
+            t.opts.remove(i);
+            if fails(&t) {
+                cur = t;
+                shrunk = true;
+                break;
+            }
+        }
+        if !shrunk {
+            break;
+        }
+    }
+    // 3. Prefer the plain f32 datapath when the failure survives it.
+    if cur.precision != Precision::F32 {
+        let mut t = cur.clone();
+        t.precision = Precision::F32;
+        if fails(&t) {
+            cur = t;
+        }
+    }
+    cur
+}
+
+/// A shrunk counterexample plus everything needed to replay it.
+#[derive(Debug, Clone)]
+pub struct Reproducer {
+    pub original: Scenario,
+    pub shrunk: Scenario,
+    pub fault: Option<Fault>,
+    /// `VerifyReport::summary` of the shrunk failure.
+    pub summary: String,
+    /// Shell line that replays the shrunk scenario.
+    pub replay: String,
+}
+
+/// Build the reproducer for a failing scenario (runs the shrinker).
+pub fn reproduce(original: &Scenario, fault: Option<Fault>) -> Reproducer {
+    let shrunk = shrink(original, fault);
+    let report = run_scenario_with_fault(&shrunk, fault);
+    Reproducer {
+        original: original.clone(),
+        shrunk: shrunk.clone(),
+        fault,
+        summary: report.summary(),
+        replay: format!(
+            "VERIFY_REPRO_PATH={} cargo test --test differential replay_reproducer -- --nocapture",
+            repro_path().display()
+        ),
+    }
+}
+
+impl Reproducer {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("original".into(), self.original.to_json());
+        m.insert("shrunk".into(), self.shrunk.to_json());
+        m.insert(
+            "fault".into(),
+            match self.fault {
+                Some(f) => Json::Str(f.name().into()),
+                None => Json::Null,
+            },
+        );
+        m.insert("summary".into(), Json::Str(self.summary.clone()));
+        m.insert("replay".into(), Json::Str(self.replay.clone()));
+        Json::Obj(m)
+    }
+}
+
+/// Where reproducers are written: `$VERIFY_REPRO_PATH` or
+/// `target/verify-repro.json` (uploaded by the CI `verify-fuzz` job).
+pub fn repro_path() -> PathBuf {
+    std::env::var("VERIFY_REPRO_PATH")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/verify-repro.json"))
+}
+
+/// Serialize a reproducer to [`repro_path`], creating parent directories.
+pub fn write_reproducer(r: &Reproducer) -> std::io::Result<PathBuf> {
+    let path = repro_path();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, r.to_json().to_string())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_json_roundtrips() {
+        let s = Scenario {
+            net: NetSpec::Chain { seed: 0xBEEF },
+            mode: Mode::Folded,
+            precision: Precision::Int8,
+            opts: vec![OptKind::Fuse, OptKind::Parameterize],
+            frames: 4,
+            frame: Some(2),
+            seed: 0x1234,
+        };
+        let j = s.to_json();
+        let back = Scenario::from_json(&j).expect("roundtrip parses");
+        assert_eq!(s, back);
+        let named = Scenario { net: NetSpec::Named("lenet5".into()), frame: None, ..s };
+        assert_eq!(Scenario::from_json(&named.to_json()), Some(named.clone()));
+        // Unknown pass abbreviations are rejected, not silently dropped —
+        // a version-skewed reproducer must not replay a weaker subset.
+        if let Json::Obj(mut m) = named.to_json() {
+            m.insert("opts".into(), Json::Arr(vec![Json::Str("ZZ".into())]));
+            assert_eq!(Scenario::from_json(&Json::Obj(m)), None);
+        } else {
+            unreachable!("scenario json is an object");
+        }
+    }
+
+    #[test]
+    fn random_chains_are_deterministic_and_valid() {
+        for seed in [1u64, 7, 99, 0xABCD] {
+            let a = random_chain(seed);
+            let b = random_chain(seed);
+            a.validate().expect("generator builds valid graphs");
+            assert_eq!(a.nodes.len(), b.nodes.len());
+            assert_eq!(a.name, b.name);
+        }
+    }
+
+    #[test]
+    fn canonical_scenarios_pass() {
+        // The full optimized subset, both modes, all precisions, on a
+        // representative chain.
+        for mode in [Mode::Pipelined, Mode::Folded] {
+            for p in Precision::all() {
+                let s = Scenario {
+                    net: NetSpec::Chain { seed: 42 },
+                    mode,
+                    precision: p,
+                    opts: fuzz_opts(),
+                    frames: 2,
+                    frame: None,
+                    seed: 5,
+                };
+                let rep = run_scenario(&s);
+                assert!(rep.passed, "{}: {}", s.describe(), rep.summary());
+            }
+        }
+    }
+
+    #[test]
+    fn injected_fault_fails_and_shrinks() {
+        let s = Scenario {
+            net: NetSpec::Named("lenet5".into()),
+            mode: Mode::Pipelined,
+            precision: Precision::Int8,
+            opts: fuzz_opts(),
+            frames: 3,
+            frame: None,
+            seed: 21,
+        };
+        let fault = Some(Fault::DropEpilogue);
+        assert!(!run_scenario_with_fault(&s, fault).passed);
+        let shrunk = shrink(&s, fault);
+        assert!(shrunk.frame.is_some(), "shrinker pins one frame");
+        assert!(shrunk.opts.is_empty(), "fault survives every pass removal: {shrunk:?}");
+        assert_eq!(shrunk.precision, Precision::F32, "fault survives widening");
+        assert!(!run_scenario_with_fault(&shrunk, fault).passed, "shrunk case still fails");
+    }
+}

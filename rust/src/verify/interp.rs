@@ -1,0 +1,822 @@
+//! Functional interpreter for lowered [`KernelProgram`]s.
+//!
+//! Executes the *compiled* dataflow — kernels firing in channel order,
+//! per-dispatch layers of parameterized kernels, fused epilogue chains,
+//! and the f32/fp16/int8 datapaths the schedule selected — so the program
+//! can be diffed against the graph-level oracle
+//! ([`crate::quant::Executor`]). The interpreter deliberately derives
+//! *what* to compute from the program, not the graph:
+//!
+//! * dispatch order comes from the channel topology (pipelined) or the
+//!   per-layer work order (folded);
+//! * each kernel's datapath precision comes from its scheduled
+//!   [`LoopNest::precision`], not from the verify request;
+//! * bias/activation intrinsics come from the kernel's recorded
+//!   [`Epilogue`] entries — a pass that drops or reorders them produces a
+//!   wrong value, which is exactly what the differential harness exists
+//!   to catch;
+//! * absorbed BatchNorm/activation chains are resolved per dispatched
+//!   layer (parameterized kernels apply them as runtime parameters, so
+//!   member layers of one group may carry different chains).
+//!
+//! Elementary op arithmetic mirrors the oracle's evaluation order
+//! (accumulator widths, loop order, fp16 rounding points) so that int8
+//! programs agree **bit-exactly** and float programs agree within the
+//! documented tolerance (`docs/VERIFICATION.md`).
+//!
+//! [`LoopNest::precision`]: crate::texpr::LoopNest
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::codegen::{Kernel, KernelProgram};
+use crate::graph::{Activation, Graph, NodeId, Op};
+use crate::pass::schedule::node_kernel_map;
+use crate::quant::calibrate::CalibrationTable;
+// The scheduling-invariant op semantics (activation, pooling, channel
+// grouping) are shared with the oracle on purpose: no pass has value
+// freedom there, and a one-sided change would turn every differential
+// run into a spurious failure.
+use crate::quant::exec::{
+    activate, channels_of, pool, quantize_operands, Executor, QuantizedOperands,
+};
+use crate::quant::scheme::{f16_round, QParams, QScheme};
+use crate::texpr::{Epilogue, LoopVar, MemSpace, Precision};
+
+/// One interpreted frame: the logits plus every intermediate the program
+/// produced (indexed by graph node id) for mismatch localization.
+#[derive(Debug, Clone)]
+pub struct FrameRun {
+    pub logits: Vec<f32>,
+    pub per_node: Vec<Option<Vec<f32>>>,
+}
+
+/// Functional interpreter over one (graph, program) pair. Construction
+/// performs all structural validation once ([`Interpreter::structure`]);
+/// [`Interpreter::run_frame`] then executes frames.
+pub struct Interpreter<'a> {
+    graph: &'a Graph,
+    program: &'a KernelProgram,
+    oracle: &'a Executor<'a>,
+    table: &'a CalibrationTable,
+    scheme: QScheme,
+    /// Datapath precision the oracle runs at (`F32` = plain forward).
+    precision: Precision,
+    map: BTreeMap<NodeId, usize>,
+    /// Absorbed BN/activation chain of every kernel-owned node.
+    chains: BTreeMap<NodeId, Vec<NodeId>>,
+    /// (kernel, node) dispatch order.
+    dispatch: Vec<(usize, NodeId)>,
+    violations: Vec<String>,
+}
+
+impl<'a> Interpreter<'a> {
+    pub fn new(
+        graph: &'a Graph,
+        program: &'a KernelProgram,
+        oracle: &'a Executor<'a>,
+        table: &'a CalibrationTable,
+        scheme: QScheme,
+        precision: Precision,
+    ) -> Interpreter<'a> {
+        let map = node_kernel_map(program);
+        let consumers = graph.consumers();
+        let mut chains = BTreeMap::new();
+        for &nid in map.keys() {
+            chains.insert(nid, absorbed_chain(graph, &map, &consumers, nid));
+        }
+        let mut itp = Interpreter {
+            graph,
+            program,
+            oracle,
+            table,
+            scheme,
+            precision,
+            map,
+            chains,
+            dispatch: Vec::new(),
+            violations: Vec::new(),
+        };
+        itp.check_structure();
+        let dispatch = itp.build_dispatch();
+        itp.dispatch = dispatch;
+        itp
+    }
+
+    /// Structural findings (empty = the program is well-formed). Each
+    /// entry names one violated invariant; any entry fails verification.
+    pub fn structure(&self) -> &[String] {
+        &self.violations
+    }
+
+    // -- structural validation ---------------------------------------------
+
+    fn check_structure(&mut self) {
+        let mut v = Vec::new();
+        let prog = self.program;
+        let g = self.graph;
+
+        // Autorun legality (§IV-F): no global arguments, no weights.
+        for k in &prog.kernels {
+            if k.autorun {
+                if !k.autorun_eligible() {
+                    v.push(format!("kernel {} is autorun but accesses global memory", k.name));
+                }
+                if g.nodes[k.layers[0]].op.has_weights() {
+                    v.push(format!("kernel {} is autorun but its op carries weights", k.name));
+                }
+            }
+        }
+
+        // Channel endpoints, element types and §IV-J depth coverage.
+        for ch in &prog.channels {
+            if ch.from_kernel >= prog.kernels.len() || ch.to_kernel >= prog.kernels.len() {
+                v.push(format!("channel {} has a dangling endpoint", ch.name));
+                continue;
+            }
+            let producer = &prog.kernels[ch.from_kernel];
+            if ch.elem != producer.nest.precision {
+                v.push(format!(
+                    "channel {} carries {} but its producer {} streams {}",
+                    ch.name,
+                    ch.elem.name(),
+                    producer.name,
+                    producer.nest.precision.name()
+                ));
+            }
+            let out_node = self.output_node(producer.layers[0]);
+            let produced = g.nodes[out_node].shape.elems() as u64;
+            if ch.depth < produced {
+                v.push(format!(
+                    "channel {} depth {} cannot buffer {}'s {}-element feature map (§IV-J)",
+                    ch.name, ch.depth, producer.name, produced
+                ));
+            }
+        }
+
+        // Channel topology must mirror the graph's cross-kernel edges.
+        if !prog.channels.is_empty() {
+            let mut have: BTreeSet<(usize, usize)> = BTreeSet::new();
+            for ch in &prog.channels {
+                have.insert((ch.from_kernel, ch.to_kernel));
+            }
+            let mut want: BTreeSet<(usize, usize)> = BTreeSet::new();
+            for k in &prog.kernels {
+                for &layer in &k.layers {
+                    for &inp in &g.nodes[layer].inputs {
+                        if let Some(src) = self.producing_kernel(inp) {
+                            if src != k.id {
+                                want.insert((src, k.id));
+                            }
+                        }
+                    }
+                }
+            }
+            for &(a, b) in want.difference(&have) {
+                v.push(format!(
+                    "graph edge {} → {} has no channel",
+                    prog.kernels[a].name, prog.kernels[b].name
+                ));
+            }
+            for &(a, b) in have.difference(&want) {
+                v.push(format!(
+                    "channel {} → {} matches no graph edge",
+                    prog.kernels[a].name, prog.kernels[b].name
+                ));
+            }
+        }
+
+        // Every non-layout graph node must survive lowering: either it
+        // owns a kernel or it is an absorbed epilogue of one.
+        let mut covered: BTreeSet<NodeId> = self.map.keys().copied().collect();
+        for chain in self.chains.values() {
+            covered.extend(chain.iter().copied());
+        }
+        for n in g.topo() {
+            if matches!(n.op, Op::Input | Op::Flatten | Op::Transform) {
+                continue;
+            }
+            if !covered.contains(&n.id) {
+                v.push(format!("node {} ({}) was lost by lowering", n.name, n.op.mnemonic()));
+            }
+        }
+
+        // The recorded epilogue/absorbed chain of each kernel must match
+        // the graph for its representative layer. (Member layers of a
+        // parameterized group resolve their chains at dispatch.)
+        for k in &prog.kernels {
+            let rep = k.layers[0];
+            let chain = &self.chains[&rep];
+            if &k.absorbed != chain {
+                v.push(format!(
+                    "kernel {} records absorbed nodes {:?} but the graph chain is {chain:?}",
+                    k.name, k.absorbed
+                ));
+            }
+            let mut expected = expected_intrinsic(&g.nodes[rep].op);
+            for &a in chain {
+                expected.push(match g.nodes[a].op {
+                    Op::BatchNorm => Epilogue::BatchNormFold,
+                    Op::Activate(act) => Epilogue::Activation(act),
+                    _ => continue,
+                });
+            }
+            if k.nest.epilogue != expected {
+                v.push(format!(
+                    "kernel {} epilogue {:?} diverges from the graph-implied {:?}",
+                    k.name, k.nest.epilogue, expected
+                ));
+            }
+        }
+
+        // Folded tile stashes must hold at least the strip they stage:
+        // double-buffered, k input rows at the widest member layer's
+        // actual row width, times the achieved input-channel tile (the
+        // nest's InC unroll — never larger than the plan tile the stash
+        // was sized for). Over-sizing is a cost bug only; under-sizing
+        // (e.g. a hard-coded on-chip width) is flagged here.
+        for k in &prog.kernels {
+            let node = &g.nodes[k.layers[0]];
+            let Some(grp) = node.op.param_group() else { continue };
+            let eb = k.nest.precision.bytes();
+            let t_inner =
+                k.nest.find_loop(LoopVar::InC).map(|l| l.unroll.max(1)).unwrap_or(1);
+            for a in &k.nest.accesses {
+                if a.space == MemSpace::Local && a.buffer == "ifmap" {
+                    let max_w = crate::pass::schedule::max_input_width(g, &k.layers);
+                    let need = 2 * t_inner * grp.kernel as u64 * max_w * eb;
+                    if a.array_bytes < need {
+                        v.push(format!(
+                            "kernel {}: ifmap stash of {} B cannot hold its {} B double-buffered \
+                             line strip",
+                            k.name, a.array_bytes, need
+                        ));
+                    }
+                }
+            }
+        }
+
+        self.violations = v;
+    }
+
+    /// The kernel producing node `id`'s value, climbing through nodes that
+    /// own no kernel (layout skips, fused epilogues) via their first input.
+    fn producing_kernel(&self, mut id: NodeId) -> Option<usize> {
+        loop {
+            if let Some(&k) = self.map.get(&id) {
+                return Some(k);
+            }
+            match self.graph.nodes[id].inputs.first() {
+                Some(&prev) => id = prev,
+                None => return None,
+            }
+        }
+    }
+
+    /// The last node of `host`'s absorbed chain (= the value the kernel's
+    /// output stream actually carries), or `host` itself.
+    fn output_node(&self, host: NodeId) -> NodeId {
+        self.chains.get(&host).and_then(|c| c.last().copied()).unwrap_or(host)
+    }
+
+    // -- dispatch ----------------------------------------------------------
+
+    /// Topological position of every node (for ordering layer dispatches).
+    fn topo_pos(&self) -> Vec<usize> {
+        let mut pos = vec![0usize; self.graph.nodes.len()];
+        for (i, n) in self.graph.topo().enumerate() {
+            pos[n.id] = i;
+        }
+        pos
+    }
+
+    /// (kernel, layer) dispatch order: channel-driven (Kahn over the FIFO
+    /// topology) when the program is channelized, per-layer topological
+    /// order otherwise. A cyclic channel graph is recorded as a violation
+    /// and falls back to topological dispatch.
+    fn build_dispatch(&mut self) -> Vec<(usize, NodeId)> {
+        let pos = self.topo_pos();
+        let topo_dispatch = |map: &BTreeMap<NodeId, usize>| -> Vec<(usize, NodeId)> {
+            let mut d: Vec<(usize, NodeId)> =
+                map.iter().map(|(&nid, &k)| (k, nid)).collect();
+            d.sort_by_key(|&(_, nid)| pos[nid]);
+            d
+        };
+        if self.program.channels.is_empty() {
+            return topo_dispatch(&self.map);
+        }
+        let n = self.program.kernels.len();
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for ch in &self.program.channels {
+            if ch.from_kernel < n && ch.to_kernel < n && ch.from_kernel != ch.to_kernel {
+                adj[ch.from_kernel].push(ch.to_kernel);
+                indeg[ch.to_kernel] += 1;
+            }
+        }
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        while let Some(&next) = ready.iter().min() {
+            ready.retain(|&i| i != next);
+            order.push(next);
+            for &to in &adj[next] {
+                indeg[to] -= 1;
+                if indeg[to] == 0 {
+                    ready.push(to);
+                }
+            }
+        }
+        if order.len() != n {
+            self.violations.push("channel topology is cyclic — kernels can never fire".into());
+            return topo_dispatch(&self.map);
+        }
+        let mut dispatch = Vec::new();
+        for k in order {
+            let mut layers = self.program.kernels[k].layers.clone();
+            layers.sort_by_key(|&nid| pos[nid]);
+            for nid in layers {
+                dispatch.push((k, nid));
+            }
+        }
+        dispatch
+    }
+
+    // -- execution ---------------------------------------------------------
+
+    /// Execute one frame through the program. `Err` means the program's
+    /// dataflow could not produce a result (e.g. a kernel fired before its
+    /// producer under a wrong channel topology).
+    pub fn run_frame(&self, frame: &[f32]) -> Result<FrameRun, String> {
+        let g = self.graph;
+        if frame.len() != g.nodes[g.input].shape.elems() {
+            return Err(format!(
+                "frame has {} elements, the graph input wants {}",
+                frame.len(),
+                g.nodes[g.input].shape.elems()
+            ));
+        }
+        let mut values: Vec<Option<Vec<f32>>> = vec![None; g.nodes.len()];
+        values[g.input] = Some(frame.to_vec());
+        for &(k, nid) in &self.dispatch {
+            self.fire(&self.program.kernels[k], nid, &mut values)?;
+        }
+        // The graph output may itself be a layout node over the last
+        // kernel's result.
+        self.ensure_value(g.output, &mut values)?;
+        let logits = values[g.output]
+            .clone()
+            .ok_or_else(|| "program produced no value for the graph output".to_string())?;
+        Ok(FrameRun { logits, per_node: values })
+    }
+
+    /// Materialize `id`'s value when it is a layout node over an already
+    /// computed producer.
+    fn ensure_value(&self, id: NodeId, values: &mut Vec<Option<Vec<f32>>>) -> Result<(), String> {
+        if values[id].is_some() {
+            return Ok(());
+        }
+        let n = &self.graph.nodes[id];
+        match n.op {
+            Op::Flatten | Op::Transform => {
+                let src = n.inputs[0];
+                self.ensure_value(src, values)?;
+                values[id] = values[src].clone();
+                Ok(())
+            }
+            _ => Err(format!(
+                "kernel fired before its input {} ({}) was produced — dataflow order diverges \
+                 from the graph",
+                n.name,
+                n.op.mnemonic()
+            )),
+        }
+    }
+
+    fn input_value(
+        &self,
+        id: NodeId,
+        values: &mut Vec<Option<Vec<f32>>>,
+    ) -> Result<Vec<f32>, String> {
+        self.ensure_value(id, values)?;
+        Ok(values[id].clone().expect("ensured"))
+    }
+
+    /// Fire kernel `k` for layer `nid`: compute the node at the kernel's
+    /// scheduled precision, apply the epilogue intrinsics the kernel
+    /// recorded, then the layer's absorbed BN/activation chain.
+    fn fire(
+        &self,
+        k: &Kernel,
+        nid: NodeId,
+        values: &mut Vec<Option<Vec<f32>>>,
+    ) -> Result<(), String> {
+        let g = self.graph;
+        let n = &g.nodes[nid];
+        let chain = self.chains.get(&nid).cloned().unwrap_or_default();
+        // Intrinsic epilogue entries for this dispatch: the kernel's
+        // recorded entries for its representative layer (minus the
+        // absorbed suffix); runtime parameters for group members.
+        let intrinsic: Vec<Epilogue> = if nid == k.layers[0] {
+            let cut = k.nest.epilogue.len().saturating_sub(chain.len());
+            k.nest.epilogue[..cut].to_vec()
+        } else {
+            expected_intrinsic(&n.op)
+        };
+        let out = match &n.op {
+            Op::Conv2d { kernel, stride, padding, .. } => {
+                let x = self.input_value(n.inputs[0], values)?;
+                self.conv(k, nid, &x, *kernel, *stride, *padding, false, &intrinsic)
+            }
+            Op::DepthwiseConv2d { kernel, stride, padding, .. } => {
+                let x = self.input_value(n.inputs[0], values)?;
+                self.conv(k, nid, &x, *kernel, *stride, *padding, true, &intrinsic)
+            }
+            Op::Dense { .. } => {
+                let x = self.input_value(n.inputs[0], values)?;
+                self.dense(k, nid, &x, &intrinsic)
+            }
+            Op::BatchNorm => {
+                let x = self.input_value(n.inputs[0], values)?;
+                self.batchnorm(nid, &x)
+            }
+            Op::Activate(a) => {
+                let x = self.input_value(n.inputs[0], values)?;
+                x.iter().map(|&v| activate(v, *a)).collect()
+            }
+            Op::MaxPool { kernel, stride, padding } => {
+                let x = self.input_value(n.inputs[0], values)?;
+                pool(&x, &g.nodes[n.inputs[0]].shape, &n.shape, *kernel, *stride, *padding, true)
+            }
+            Op::AvgPool { kernel, stride, padding } => {
+                let x = self.input_value(n.inputs[0], values)?;
+                pool(&x, &g.nodes[n.inputs[0]].shape, &n.shape, *kernel, *stride, *padding, false)
+            }
+            Op::GlobalAvgPool => {
+                let x = self.input_value(n.inputs[0], values)?;
+                let (c, h, w) = g.nodes[n.inputs[0]].shape.chw().expect("gap input CHW");
+                (0..c)
+                    .map(|ch| x[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / (h * w) as f32)
+                    .collect()
+            }
+            Op::Add => {
+                let a = self.input_value(n.inputs[0], values)?;
+                let b = self.input_value(n.inputs[1], values)?;
+                a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
+            }
+            Op::Softmax => {
+                let x = self.input_value(n.inputs[0], values)?;
+                let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let e: Vec<f32> = x.iter().map(|v| (v - m).exp()).collect();
+                let s: f32 = e.iter().sum();
+                e.into_iter().map(|v| v / s).collect()
+            }
+            Op::Quantize { precision } => {
+                let src = n.inputs[0];
+                let x = self.input_value(src, values)?;
+                if self.precision != Precision::F32 && *precision == Precision::Int8 {
+                    let qp = QParams::per_tensor(self.table.activation(src), Precision::Int8);
+                    x.iter().map(|&v| qp.roundtrip(v as f64, 0) as f32).collect()
+                } else if *precision == Precision::F16 {
+                    x.iter().map(|&v| f16_round(v)).collect()
+                } else {
+                    x
+                }
+            }
+            Op::Dequantize { .. } => self.input_value(n.inputs[0], values)?,
+            Op::Input | Op::Flatten | Op::Transform => {
+                return Err(format!("layout node {} owns a kernel", n.name));
+            }
+        };
+        values[nid] = Some(out);
+        // Absorbed chain: runtime-parameterized epilogue per dispatch.
+        for &a in &chain {
+            let prev = values[self.graph.nodes[a].inputs[0]]
+                .clone()
+                .ok_or_else(|| format!("absorbed node {a} has no input value"))?;
+            let out = match self.graph.nodes[a].op {
+                Op::BatchNorm => self.batchnorm(a, &prev),
+                Op::Activate(act) => prev.iter().map(|&v| activate(v, act)).collect(),
+                _ => prev,
+            };
+            values[a] = Some(out);
+        }
+        Ok(())
+    }
+
+    // -- datapaths (mirroring the oracle's evaluation order) ---------------
+
+    /// Quantized operands for a compute dispatch, iff the *kernel* was
+    /// scheduled at int8 (the verify request only enables the grid).
+    /// Operand preparation itself is the oracle's
+    /// ([`crate::quant::exec::quantize_operands`]) — pass-invariant
+    /// semantics are shared, only the *decision* to quantize is read off
+    /// the program.
+    fn int8_operands(&self, k: &Kernel, nid: NodeId, x: &[f32]) -> Option<QuantizedOperands> {
+        if k.nest.precision != Precision::Int8 || self.precision != Precision::Int8 {
+            return None;
+        }
+        let src = self.graph.nodes[nid].inputs[0];
+        Some(quantize_operands(
+            x,
+            self.oracle.weights(nid),
+            self.table.activation(src),
+            &self.table.weight_ranges(nid),
+            self.scheme,
+        ))
+    }
+
+    fn f16_datapath(&self, k: &Kernel) -> bool {
+        k.nest.precision == Precision::F16 && self.precision == Precision::F16
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &self,
+        kern: &Kernel,
+        nid: NodeId,
+        x: &[f32],
+        k: usize,
+        stride: usize,
+        padding: usize,
+        depthwise: bool,
+        intrinsic: &[Epilogue],
+    ) -> Vec<f32> {
+        let g = self.graph;
+        let n = &g.nodes[nid];
+        let (cin, h, w) = g.nodes[n.inputs[0]].shape.chw().expect("conv input CHW");
+        let (oc, oh, ow) = n.shape.chw().expect("conv output CHW");
+        let weights = self.oracle.weights(nid);
+        let bias = self.oracle.bias(nid);
+        let int8 = self.int8_operands(kern, nid, x);
+        let f16 = int8.is_none() && self.f16_datapath(kern);
+        let rx: Vec<f32> =
+            if f16 { x.iter().map(|&v| f16_round(v)).collect() } else { Vec::new() };
+        let mut out = vec![0f32; oc * oh * ow];
+        for o in 0..oc {
+            let w_base = if depthwise { o * k * k } else { o * cin * k * k };
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc_f = 0f64;
+                    let mut acc_i = 0i64;
+                    let crange = if depthwise { o..o + 1 } else { 0..cin };
+                    for c in crange {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * stride + ky) as isize - padding as isize;
+                                let ix = (ox * stride + kx) as isize - padding as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                    continue;
+                                }
+                                let xi = c * h * w + iy as usize * w + ix as usize;
+                                let wi = if depthwise {
+                                    w_base + ky * k + kx
+                                } else {
+                                    w_base + (c * k + ky) * k + kx
+                                };
+                                if let Some(q8) = &int8 {
+                                    acc_i += q8.qx[xi] as i64 * q8.qw[wi] as i64;
+                                } else if f16 {
+                                    acc_f += (rx[xi] * f16_round(weights[wi])) as f64;
+                                } else {
+                                    acc_f += (x[xi] * weights[wi]) as f64;
+                                }
+                            }
+                        }
+                    }
+                    let v = match &int8 {
+                        Some(q8) => (acc_i as f64 * q8.sx * q8.wq.scale(o)) as f32,
+                        None => acc_f as f32,
+                    };
+                    out[(o * oh + oy) * ow + ox] =
+                        apply_conv_epilogue(v, o, bias, intrinsic, f16);
+                }
+            }
+        }
+        out
+    }
+
+    fn dense(&self, kern: &Kernel, nid: NodeId, x: &[f32], intrinsic: &[Epilogue]) -> Vec<f32> {
+        let weights = self.oracle.weights(nid);
+        let bias = self.oracle.bias(nid);
+        let cin = x.len();
+        let oc = bias.len().max(weights.len() / cin.max(1));
+        let int8 = self.int8_operands(kern, nid, x);
+        let f16 = int8.is_none() && self.f16_datapath(kern);
+        (0..oc)
+            .map(|o| {
+                let row = &weights[o * cin..(o + 1) * cin];
+                let mut v = match &int8 {
+                    Some(q8) => {
+                        let qrow = &q8.qw[o * cin..(o + 1) * cin];
+                        let acc: i64 =
+                            q8.qx.iter().zip(qrow).map(|(&a, &b)| a as i64 * b as i64).sum();
+                        (acc as f64 * q8.sx * q8.wq.scale(o)) as f32
+                    }
+                    _ if f16 => f16_round(
+                        x.iter()
+                            .map(|&v| f16_round(v))
+                            .zip(row)
+                            .map(|(a, &b)| a * f16_round(b))
+                            .sum::<f32>(),
+                    ),
+                    _ => x.iter().zip(row).map(|(&a, &b)| a * b).sum::<f32>(),
+                };
+                // The oracle's dense fp16 path rounds *before* the bias
+                // (conv rounds after) — mirrored, and documented in
+                // docs/VERIFICATION.md.
+                for e in intrinsic {
+                    match e {
+                        Epilogue::BiasAdd => v += bias[o],
+                        Epilogue::Activation(a) => v = activate(v, *a),
+                        Epilogue::BatchNormFold => {}
+                    }
+                }
+                v
+            })
+            .collect()
+    }
+
+    fn batchnorm(&self, nid: NodeId, x: &[f32]) -> Vec<f32> {
+        let w = self.oracle.weights(nid);
+        let b = self.oracle.bias(nid);
+        let c = channels_of(&self.graph.nodes[nid].shape);
+        let per = x.len() / c.max(1);
+        x.iter()
+            .enumerate()
+            .map(|(i, &v)| v * w[i / per.max(1)] + b[i / per.max(1)])
+            .collect()
+    }
+
+}
+
+/// Conv-family epilogue at one output element, honoring the kernel's
+/// recorded intrinsics. fp16 datapaths round once after the bias and
+/// before the first activation (the oracle's evaluation order).
+fn apply_conv_epilogue(
+    mut v: f32,
+    o: usize,
+    bias: &[f32],
+    intrinsic: &[Epilogue],
+    f16: bool,
+) -> f32 {
+    let mut rounded = !f16;
+    for e in intrinsic {
+        match e {
+            Epilogue::BiasAdd => v += bias[o],
+            Epilogue::Activation(a) => {
+                if !rounded {
+                    v = f16_round(v);
+                    rounded = true;
+                }
+                v = activate(v, *a);
+            }
+            Epilogue::BatchNormFold => {}
+        }
+    }
+    if !rounded {
+        v = f16_round(v);
+    }
+    v
+}
+
+/// Intrinsic epilogue a node's op attributes imply (what `texpr::lower`
+/// seeds the nest with).
+pub fn expected_intrinsic(op: &Op) -> Vec<Epilogue> {
+    let mut e = Vec::new();
+    match op {
+        Op::Conv2d { bias, activation, .. }
+        | Op::DepthwiseConv2d { bias, activation, .. }
+        | Op::Dense { bias, activation, .. } => {
+            if *bias {
+                e.push(Epilogue::BiasAdd);
+            }
+            if *activation != Activation::None {
+                e.push(Epilogue::Activation(*activation));
+            }
+        }
+        _ => {}
+    }
+    e
+}
+
+/// The BN/activation nodes absorbed into `host`'s kernel, in absorption
+/// order: follow single-consumer edges to epilogue ops that own no kernel.
+pub fn absorbed_chain(
+    graph: &Graph,
+    map: &BTreeMap<NodeId, usize>,
+    consumers: &[Vec<NodeId>],
+    host: NodeId,
+) -> Vec<NodeId> {
+    let mut chain = Vec::new();
+    let mut cur = host;
+    loop {
+        if consumers[cur].len() != 1 {
+            break;
+        }
+        let next = consumers[cur][0];
+        let absorbable = !map.contains_key(&next)
+            && matches!(graph.nodes[next].op, Op::BatchNorm | Op::Activate(_));
+        if !absorbable {
+            break;
+        }
+        chain.push(next);
+        cur = next;
+    }
+    chain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::patterns::{build_with_passes, default_factors, OptConfig};
+    use crate::flow::Mode;
+    use crate::graph::models;
+    use crate::quant::calibrate::{calibrate_analytic, Calibrator};
+
+    fn interp_setup(
+        mode: Mode,
+        cfg: &OptConfig,
+    ) -> (Graph, crate::codegen::KernelProgram) {
+        let g = models::lenet5();
+        let plan = default_factors(&g);
+        let built = build_with_passes(&g, mode, cfg, &plan);
+        (g, built.program)
+    }
+
+    #[test]
+    fn well_formed_programs_have_no_violations() {
+        for mode in [Mode::Pipelined, Mode::Folded] {
+            for cfg in [OptConfig::base(), OptConfig::optimized()] {
+                let (g, prog) = interp_setup(mode, &cfg);
+                let exec = Executor::new(&g);
+                let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+                let itp = Interpreter::new(
+                    &g,
+                    &prog,
+                    &exec,
+                    &table,
+                    QScheme::PerChannel,
+                    Precision::F32,
+                );
+                assert_eq!(itp.structure(), &[] as &[String], "{mode:?} {cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn interpreter_matches_oracle_on_lenet_f32() {
+        let (g, prog) = interp_setup(Mode::Pipelined, &OptConfig::optimized());
+        let exec = Executor::new(&g);
+        let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+        let itp =
+            Interpreter::new(&g, &prog, &exec, &table, QScheme::PerChannel, Precision::F32);
+        let data = crate::data::mnist_like(2, 32, 7);
+        for i in 0..2 {
+            let want = exec.forward(data.frame(i), |_, _| {});
+            let got = itp.run_frame(data.frame(i)).unwrap().logits;
+            assert_eq!(want.len(), got.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a, b, "f32 interpretation should mirror the oracle bitwise");
+            }
+        }
+    }
+
+    #[test]
+    fn structural_checks_flag_broken_programs() {
+        let (g, mut prog) = interp_setup(Mode::Pipelined, &OptConfig::optimized());
+        // Drop the first kernel's epilogue: the chain check must fire.
+        let victim = prog
+            .kernels
+            .iter_mut()
+            .find(|k| !k.nest.epilogue.is_empty())
+            .expect("lenet has epilogues");
+        victim.nest.epilogue.clear();
+        let exec = Executor::new(&g);
+        let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+        let itp =
+            Interpreter::new(&g, &prog, &exec, &table, QScheme::PerChannel, Precision::F32);
+        assert!(
+            itp.structure().iter().any(|v| v.contains("epilogue")),
+            "{:?}",
+            itp.structure()
+        );
+    }
+
+    #[test]
+    fn channel_mis_wiring_is_flagged() {
+        let (g, mut prog) = interp_setup(Mode::Pipelined, &OptConfig::optimized());
+        assert!(!prog.channels.is_empty());
+        // Re-point one channel at its own producer: now one graph edge has
+        // no channel and one channel matches no edge.
+        let last = prog.kernels.len() - 1;
+        prog.channels[0].to_kernel = if prog.channels[0].to_kernel == last { 0 } else { last };
+        let exec = Executor::new(&g);
+        let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+        let itp =
+            Interpreter::new(&g, &prog, &exec, &table, QScheme::PerChannel, Precision::F32);
+        assert!(
+            itp.structure().iter().any(|v| v.contains("channel")),
+            "{:?}",
+            itp.structure()
+        );
+    }
+}

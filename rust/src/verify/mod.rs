@@ -1,0 +1,384 @@
+//! Differential verification: prove the pass pipeline is
+//! semantics-preserving.
+//!
+//! Every Table-I optimization rewrites [`KernelProgram`]s, and the
+//! paper's quality claims rest on those programs still computing the
+//! frozen network. This subsystem closes that loop:
+//!
+//! * [`interp`] — a functional interpreter that executes the *lowered*
+//!   program (channel dataflow, per-dispatch parameterized layers, fused
+//!   epilogues, f32/fp16/int8 datapaths) plus structural validation of
+//!   autorun/channel/stash invariants;
+//! * the graph-level [`crate::quant::Executor`] is the **oracle** — both
+//!   sides share its deterministic synthetic weights and one calibration
+//!   table, so int8 programs must agree **bit-exactly** with
+//!   [`Executor::forward_quantized`] and float programs within the
+//!   documented tolerance ([`rel_tolerance`]);
+//! * [`differ`] — a fuzzing harness over randomized (network × pass
+//!   subset × precision × mode) scenarios with a shrinker that reduces
+//!   any counterexample to a minimal (net, config, frame) reproducer.
+//!
+//! Entry points: [`verify_program`] (one program against the oracle),
+//! [`crate::flow::CompileSession::verify`] (a staged-API verification
+//! stage), `fpga-flow verify` (CLI sweep over the canonical pipeline's
+//! pass subsets) and `rust/tests/differential.rs` (CI fuzzing).
+//! Methodology, tolerances and known modeling gaps are documented in
+//! `docs/VERIFICATION.md`.
+//!
+//! [`Executor::forward_quantized`]: crate::quant::Executor::forward_quantized
+
+pub mod differ;
+pub mod interp;
+
+pub use differ::{shrink, Fault, NetSpec, Reproducer, Scenario};
+pub use interp::Interpreter;
+
+use crate::codegen::KernelProgram;
+use crate::graph::{Graph, NodeId};
+use crate::pass::Equivalence;
+use crate::quant::calibrate::{calibrate_analytic, Calibrator};
+use crate::quant::exec::Executor;
+use crate::quant::scheme::QScheme;
+use crate::texpr::Precision;
+use crate::util::rng::Rng;
+
+/// How the verifier calibrates and quantizes (shared by both sides).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VerifyOptions {
+    pub scheme: QScheme,
+    pub calibrator: Calibrator,
+}
+
+impl Default for VerifyOptions {
+    fn default() -> Self {
+        VerifyOptions { scheme: QScheme::PerChannel, calibrator: Calibrator::Percentile(99.9) }
+    }
+}
+
+/// Documented agreement bound, as a fraction of the logit scale, keyed
+/// by datapath precision *and* the trace's declared obligation
+/// ([`Equivalence`]): int8 always demands bit-exactness (integer
+/// accumulation has no rounding freedom); f32 is bit-exact too **unless**
+/// a float-tolerant pass (OF `-fp-relaxed`, BN-fold) actually applied, in
+/// which case reassociation headroom of 1e-5 is granted; fp16
+/// additionally tolerates its 11-bit significand.
+pub fn rel_tolerance(precision: Precision, equivalence: Equivalence) -> f64 {
+    match precision {
+        Precision::Int8 => 0.0,
+        Precision::F32 => {
+            if equivalence == Equivalence::FloatTolerant {
+                1e-5
+            } else {
+                0.0
+            }
+        }
+        Precision::F16 => 1e-3,
+    }
+}
+
+/// First node where the program diverged from the oracle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeMismatch {
+    pub node: NodeId,
+    pub name: String,
+    /// Frame index (into the verified frame set) that diverged.
+    pub frame: usize,
+    /// Relative error at that node, against the node's own value scale.
+    pub rel_err: f64,
+}
+
+/// Outcome of verifying one program against the oracle.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    /// `KernelProgram::name` (carries network + mode).
+    pub program: String,
+    pub precision: Precision,
+    /// What the applied passes promised ([`Equivalence`]) — together with
+    /// the precision this keys the pass/fail tolerance
+    /// ([`rel_tolerance`]): an f32 program whose trace never applied a
+    /// float-tolerant pass must match the oracle bit-for-bit.
+    pub equivalence: Equivalence,
+    pub frames: usize,
+    /// Applied relative tolerance ([`rel_tolerance`]).
+    pub tolerance: f64,
+    /// Worst relative logit error observed across all frames.
+    pub max_rel_err: f64,
+    /// Every logit of every frame was bitwise equal to the oracle's.
+    pub bit_exact: bool,
+    /// Structural invariant violations (autorun/channel/stash/epilogue).
+    pub violations: Vec<String>,
+    /// Dataflow execution failure, if the program could not run at all.
+    pub failure: Option<String>,
+    /// First diverging node (localization), when agreement failed.
+    pub first_mismatch: Option<NodeMismatch>,
+    pub passed: bool,
+}
+
+impl VerifyReport {
+    /// One-line human summary (CLI tables, panic messages).
+    pub fn summary(&self) -> String {
+        let verdict = if self.passed { "PASS" } else { "FAIL" };
+        let mut s = format!(
+            "{verdict} {} [{}] {} frame(s): max rel err {:.3e} (tol {:.1e}{})",
+            self.program,
+            self.precision,
+            self.frames,
+            self.max_rel_err,
+            self.tolerance,
+            if self.tolerance == 0.0 { ", bit-exact required" } else { "" },
+        );
+        if let Some(m) = &self.first_mismatch {
+            s.push_str(&format!("; first divergence at {} (frame {})", m.name, m.frame));
+        }
+        if let Some(f) = &self.failure {
+            s.push_str(&format!("; execution failed: {f}"));
+        }
+        if !self.violations.is_empty() {
+            s.push_str(&format!("; {} structural violation(s): {}", self.violations.len(), self.violations.join(" | ")));
+        }
+        s
+    }
+}
+
+/// Deterministic verification frames for a graph: the network's
+/// representative dataset when one exists, else seeded synthetic frames
+/// shaped like bounded image strokes.
+pub fn frames_for(graph: &Graph, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let n = n.max(1);
+    let elems = graph.nodes[graph.input].shape.elems();
+    if let Some(batch) = crate::data::for_network(&graph.name, n, seed) {
+        if batch.frame_elems() == elems {
+            return (0..n.min(batch.frames())).map(|i| batch.frame(i).to_vec()).collect();
+        }
+    }
+    let mut rng = Rng::new(seed ^ crate::util::fnv64(graph.name.as_bytes()));
+    (0..n)
+        .map(|_| (0..elems).map(|_| 0.1 + 0.45 * rng.normal().abs()).collect())
+        .collect()
+}
+
+/// Run `frames` through both the kernel-program interpreter and the graph
+/// oracle and report agreement. Both sides share the oracle's synthetic
+/// weights and one analytic calibration table, so any disagreement is a
+/// property of the *program*, not of data or parameters.
+pub fn verify_program(
+    graph: &Graph,
+    program: &KernelProgram,
+    precision: Precision,
+    equivalence: Equivalence,
+    frames: &[Vec<f32>],
+    opts: &VerifyOptions,
+) -> VerifyReport {
+    let exec = Executor::new(graph);
+    let table = calibrate_analytic(graph, opts.calibrator);
+    let interp = Interpreter::new(graph, program, &exec, &table, opts.scheme, precision);
+    let violations = interp.structure().to_vec();
+    let tolerance = rel_tolerance(precision, equivalence);
+
+    let mut max_rel_err = 0f64;
+    let mut bit_exact = true;
+    let mut failure = None;
+    let mut first_mismatch: Option<NodeMismatch> = None;
+
+    for (fi, frame) in frames.iter().enumerate() {
+        // Observer-free oracle pass first — per-node activations are only
+        // materialized below when this frame actually diverges (both
+        // sides are deterministic, so the re-run reproduces the state).
+        let oracle_logits = if precision == Precision::F32 {
+            exec.forward(frame, |_, _| {})
+        } else {
+            exec.forward_quantized(frame, &table, precision, opts.scheme)
+        };
+        let run = match interp.run_frame(frame) {
+            Ok(run) => run,
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+        };
+        let rel = slice_rel_err(&oracle_logits, &run.logits);
+        if rel > 0.0 {
+            bit_exact = false;
+        }
+        if rel > max_rel_err {
+            max_rel_err = rel;
+        }
+        if rel > tolerance && first_mismatch.is_none() {
+            // Localize: re-run the oracle observing every node, and find
+            // the first topological node whose program value diverges
+            // beyond the tolerance.
+            let mut oracle_nodes: Vec<Vec<f32>> = vec![Vec::new(); graph.nodes.len()];
+            if precision == Precision::F32 {
+                exec.forward(frame, |id, a| oracle_nodes[id] = a.to_vec());
+            } else {
+                exec.forward_quantized_observed(frame, &table, precision, opts.scheme, |id, a| {
+                    oracle_nodes[id] = a.to_vec()
+                });
+            }
+            for n in graph.topo() {
+                let Some(got) = &run.per_node[n.id] else { continue };
+                let want = &oracle_nodes[n.id];
+                if want.is_empty() {
+                    continue;
+                }
+                let nrel = slice_rel_err(want, got);
+                if nrel > tolerance {
+                    first_mismatch = Some(NodeMismatch {
+                        node: n.id,
+                        name: n.name.clone(),
+                        frame: fi,
+                        rel_err: nrel,
+                    });
+                    break;
+                }
+            }
+            if first_mismatch.is_none() {
+                // Logits disagreed but no single node exceeded tolerance
+                // (accumulated drift): point at the output.
+                first_mismatch = Some(NodeMismatch {
+                    node: graph.output,
+                    name: graph.nodes[graph.output].name.clone(),
+                    frame: fi,
+                    rel_err: rel,
+                });
+            }
+        }
+    }
+
+    let agreement_ok = if precision == Precision::Int8 {
+        bit_exact
+    } else {
+        max_rel_err <= tolerance
+    };
+    let passed = violations.is_empty() && failure.is_none() && agreement_ok;
+    VerifyReport {
+        program: program.name.clone(),
+        precision,
+        equivalence,
+        frames: frames.len(),
+        tolerance,
+        max_rel_err,
+        bit_exact,
+        violations,
+        failure,
+        first_mismatch,
+        passed,
+    }
+}
+
+/// Worst per-element error of `got` against `want`, relative to `want`'s
+/// own magnitude scale (length mismatch or a NaN on either side =
+/// infinite error). Exactly equal elements contribute 0 regardless of
+/// scale.
+fn slice_rel_err(want: &[f32], got: &[f32]) -> f64 {
+    if want.len() != got.len() {
+        return f64::INFINITY;
+    }
+    let scale = want.iter().map(|v| v.abs()).fold(0f32, f32::max).max(1e-3) as f64;
+    let mut worst = 0f64;
+    for (&a, &b) in want.iter().zip(got) {
+        if a == b {
+            continue;
+        }
+        // A NaN on either side is an unconditional failure: NaN compares
+        // false against every threshold, so propagating it raw would let
+        // a NaN-emitting program bug slip through as "0 error".
+        let diff = (a as f64 - b as f64).abs();
+        let rel = if diff.is_nan() { f64::INFINITY } else { diff / scale };
+        if rel > worst {
+            worst = rel;
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::patterns::{build_with_passes, default_factors, OptConfig};
+    use crate::flow::Mode;
+    use crate::graph::models;
+
+    fn verify_lenet(mode: Mode, precision: Precision, cfg: OptConfig) -> VerifyReport {
+        let g = models::lenet5();
+        let plan = default_factors(&g);
+        let cfg = cfg.with_precision(precision);
+        let built = build_with_passes(&g, mode, &cfg, &plan);
+        let frames = frames_for(&g, 3, 11);
+        verify_program(
+            &g,
+            &built.program,
+            precision,
+            built.trace.required_equivalence(),
+            &frames,
+            &VerifyOptions::default(),
+        )
+    }
+
+    #[test]
+    fn lenet_verifies_across_modes_and_precisions() {
+        for mode in [Mode::Pipelined, Mode::Folded] {
+            for p in Precision::all() {
+                for cfg in [OptConfig::base(), OptConfig::optimized()] {
+                    let rep = verify_lenet(mode, p, cfg);
+                    assert!(rep.passed, "{mode:?} {p} {cfg:?}: {}", rep.summary());
+                    if p == Precision::Int8 {
+                        assert!(rep.bit_exact, "{}", rep.summary());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frames_are_deterministic_and_shaped() {
+        let g = models::lenet5();
+        let a = frames_for(&g, 4, 9);
+        let b = frames_for(&g, 4, 9);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|f| f.len() == g.nodes[g.input].shape.elems()));
+        // Unknown graphs synthesize deterministic frames too.
+        let (mut gb, x) = crate::graph::GraphBuilder::new("no-such-net", crate::graph::Shape::Chw(2, 8, 8));
+        let f = gb.add("f", crate::graph::Op::Flatten, &[x]);
+        let g2 = gb.finish(f);
+        let c = frames_for(&g2, 2, 1);
+        let d = frames_for(&g2, 2, 1);
+        assert_eq!(c, d);
+        assert_eq!(c[0].len(), 2 * 8 * 8);
+        assert_ne!(c[0], c[1]);
+    }
+
+    #[test]
+    fn tolerances_enforce_the_declared_obligation() {
+        use crate::pass::Equivalence as E;
+        // int8 is bit-exact no matter what the passes claim.
+        assert_eq!(rel_tolerance(Precision::Int8, E::FloatTolerant), 0.0);
+        // f32 is bit-exact unless a float-tolerant pass actually applied —
+        // cost-model-only passes (VT/SP) grant no drift headroom.
+        assert_eq!(rel_tolerance(Precision::F32, E::BitExact), 0.0);
+        assert_eq!(rel_tolerance(Precision::F32, E::CostModelOnly), 0.0);
+        assert_eq!(rel_tolerance(Precision::F32, E::GridExact), 0.0);
+        assert!(rel_tolerance(Precision::F32, E::FloatTolerant) > 0.0);
+        assert!(
+            rel_tolerance(Precision::F32, E::FloatTolerant)
+                < rel_tolerance(Precision::F16, E::FloatTolerant)
+        );
+        // FloatTolerant dominates the max-fold even when cost-only passes
+        // rode along.
+        assert_eq!(E::CostModelOnly.max(E::FloatTolerant), E::FloatTolerant);
+    }
+
+    #[test]
+    fn slice_rel_err_behaves() {
+        assert_eq!(slice_rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!(slice_rel_err(&[1.0, 2.0], &[1.0]) == f64::INFINITY);
+        let e = slice_rel_err(&[0.0, 10.0], &[1.0, 10.0]);
+        assert!((e - 0.1).abs() < 1e-12, "{e}");
+        // NaN anywhere is an unconditional (infinite) failure — it must
+        // never slip through the `> tolerance` comparisons as 0 error.
+        assert_eq!(slice_rel_err(&[1.0, f32::NAN], &[1.0, 2.0]), f64::INFINITY);
+        assert_eq!(slice_rel_err(&[1.0, 2.0], &[1.0, f32::NAN]), f64::INFINITY);
+        assert_eq!(slice_rel_err(&[f32::NAN], &[f32::NAN]), f64::INFINITY);
+    }
+}

@@ -1,0 +1,82 @@
+//! Integration tests over the `fpga-flow` binary itself: spawn the real
+//! CLI and assert the output *shape* of the subcommands scripts and CI
+//! dashboards consume (`explain`, `quantize`, `dse --json`, `verify`).
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_fpga-flow"))
+        .args(args)
+        .output()
+        .expect("spawn fpga-flow");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn explain_prints_ordered_trace_with_skips_and_obligations() {
+    let (out, err, ok) = run(&["explain", "--net", "lenet5", "--mode", "pipelined"]);
+    assert!(ok, "explain failed: {err}");
+    assert!(out.contains("pass trace — lenet5"), "{out}");
+    // Header + per-pass rows with the Table-I abbreviations.
+    assert!(out.contains("preserves"), "equivalence column missing: {out}");
+    for abbrev in ["LF", "OF", "LU", "CW", "CH", "AR", "CE"] {
+        assert!(out.contains(abbrev), "{abbrev} missing from trace: {out}");
+    }
+    // Folded-only passes are skipped in pipelined mode, naming the rule.
+    assert!(out.contains("skipped:"), "{out}");
+    assert!(out.contains("applied"), "{out}");
+    // OF carries the float-tolerant obligation.
+    assert!(out.contains("float-tolerant"), "{out}");
+}
+
+#[test]
+fn quantize_reports_calibration_boundaries_and_resources() {
+    let (out, err, ok) = run(&["quantize", "--net", "lenet5", "--precision", "int8"]);
+    assert!(ok, "quantize failed: {err}");
+    for needle in ["lenet5", "boundaries", "quantize", "dequantize", "top-1", "fp32", "int8"] {
+        assert!(out.contains(needle), "quantize output missing '{needle}': {out}");
+    }
+    // The resource comparison table has both rows.
+    assert!(out.contains("logic"), "{out}");
+    assert!(out.contains("fmax"), "{out}");
+}
+
+#[test]
+fn dse_json_emits_a_parseable_pareto_front() {
+    let (out, err, ok) = run(&["dse", "--net", "lenet5", "--budget", "2", "--json"]);
+    assert!(ok, "dse failed: {err}");
+    let json = tvm_fpga_flow::util::json::parse(out.trim()).unwrap_or_else(|e| {
+        panic!("dse --json did not emit valid JSON ({e}): {out}");
+    });
+    let pareto = json
+        .get("pareto")
+        .and_then(|p| p.as_arr())
+        .unwrap_or_else(|| panic!("no pareto array: {out}"));
+    assert!(!pareto.is_empty(), "empty pareto front: {out}");
+    for pt in pareto {
+        for key in ["precision", "fps"] {
+            assert!(pt.get(key).is_some(), "pareto point missing '{key}': {out}");
+        }
+    }
+}
+
+#[test]
+fn verify_quick_sweep_passes_on_lenet() {
+    let (out, err, ok) = run(&["verify", "--net", "lenet5", "--frames", "4", "--quick"]);
+    assert!(ok, "verify failed:\nstdout: {out}\nstderr: {err}");
+    assert!(out.contains("differential verification"), "{out}");
+    assert!(out.contains("scenarios agree with the reference executor"), "{out}");
+    assert!(!out.contains("FAIL"), "{out}");
+}
+
+#[test]
+fn unknown_subcommand_prints_help_and_succeeds() {
+    let (out, _, ok) = run(&["definitely-not-a-command"]);
+    assert!(ok);
+    assert!(out.contains("fpga-flow"), "{out}");
+    assert!(out.contains("verify"), "help must document the verify subcommand: {out}");
+}

@@ -1,0 +1,257 @@
+//! Differential fuzzing of the pass pipeline: randomized (network ×
+//! pass-subset × precision × mode) scenarios run through both the
+//! kernel-program interpreter (`verify::interp`) and the graph-level
+//! reference executor (`quant::exec`), asserting bit-exact int8 agreement
+//! and toleranced f32/fp16 agreement (docs/VERIFICATION.md).
+//!
+//! Seeds honor `FLOW_TEST_SEED` (printed on failure for replay); the case
+//! count honors `FLOW_DIFFER_CASES` (CI's nightly-style `verify-fuzz` job
+//! raises it). Any failure is shrunk to a minimal (net, config, frame)
+//! reproducer and written to `target/verify-repro.json`
+//! (`VERIFY_REPRO_PATH` overrides), which CI uploads as an artifact.
+
+use tvm_fpga_flow::flow::Mode;
+use tvm_fpga_flow::graph::Op;
+use tvm_fpga_flow::schedule::OptKind;
+use tvm_fpga_flow::texpr::Precision;
+use tvm_fpga_flow::util::rng::{test_seed, Rng};
+use tvm_fpga_flow::verify::differ::{self, fuzz_opts, Fault, NetSpec, Scenario};
+
+/// Shrink, persist and report a failing scenario, then panic with replay
+/// instructions.
+fn fail_with_repro(s: &Scenario, fault: Option<Fault>, summary: &str, seed: u64, case: u64) -> ! {
+    let repro = differ::reproduce(s, fault);
+    let where_ = match differ::write_reproducer(&repro) {
+        Ok(p) => p.display().to_string(),
+        Err(e) => format!("<unwritable: {e}>"),
+    };
+    // FLOW_DIFFER_CASES must ride along: CI runs more cases than the
+    // local default, and a failure at case >= the default would otherwise
+    // never be reached when replaying.
+    let replay_cases = (case + 1).max(50);
+    panic!(
+        "differential case {case} failed (replay: FLOW_TEST_SEED={seed} \
+         FLOW_DIFFER_CASES={replay_cases}):\n  scenario: {}\n  \
+         {summary}\n  shrunk:   {}\n  reproducer: {where_}",
+        s.describe(),
+        repro.shrunk.describe()
+    );
+}
+
+/// Scenario count: `FLOW_DIFFER_CASES` can raise it (the CI `verify-fuzz`
+/// job does), never lower it below the 50-case CI floor.
+fn differ_cases() -> u64 {
+    std::env::var("FLOW_DIFFER_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(56).max(50)
+}
+
+/// ≥ 50 seeded random scenarios per CI run: random chains (structural
+/// diversity) and LeNet-5, over random pass subsets, both modes, all
+/// three precisions.
+#[test]
+fn seeded_random_scenarios_agree_with_oracle() {
+    let seed = test_seed(0xD1FF_E12A);
+    let mut rng = Rng::new(seed);
+    let cases = differ_cases();
+    for case in 0..cases {
+        let s = differ::random_scenario(&mut rng);
+        let rep = differ::run_scenario(&s);
+        if !rep.passed {
+            fail_with_repro(&s, None, &rep.summary(), seed, case);
+        }
+        if s.precision == Precision::Int8 {
+            assert!(rep.bit_exact, "case {case} int8 not bit-exact: {}", rep.summary());
+        }
+    }
+}
+
+/// The full canonical pipeline on LeNet-5: both modes × all precisions,
+/// int8 bit-exact against `Executor::forward_quantized`.
+#[test]
+fn lenet_full_pipeline_verifies_everywhere() {
+    for mode in [Mode::Pipelined, Mode::Folded] {
+        for precision in Precision::all() {
+            let s = Scenario {
+                net: NetSpec::Named("lenet5".into()),
+                mode,
+                precision,
+                opts: fuzz_opts(),
+                frames: 4,
+                frame: None,
+                seed: 0xF1E1D,
+            };
+            let rep = differ::run_scenario(&s);
+            assert!(rep.passed, "{}: {}", s.describe(), rep.summary());
+            if precision == Precision::Int8 {
+                assert!(rep.bit_exact, "{}", rep.summary());
+            }
+        }
+    }
+}
+
+/// Forced-mismatch self-test: inject a known-wrong program (a kernel that
+/// "forgets" its bias/activation epilogue), prove the harness catches it,
+/// and prove the shrinker emits a *minimal* reproducer — one frame, no
+/// removable passes, widest precision that still fails.
+#[test]
+fn forced_mismatch_is_caught_and_shrunk_to_minimal() {
+    let s = Scenario {
+        net: NetSpec::Named("lenet5".into()),
+        mode: Mode::Pipelined,
+        precision: Precision::Int8,
+        opts: fuzz_opts(),
+        frames: 3,
+        frame: None,
+        seed: 0xBAD,
+    };
+    let fault = Some(Fault::DropEpilogue);
+    let rep = differ::run_scenario_with_fault(&s, fault);
+    assert!(!rep.passed, "injected fault must fail verification");
+    assert!(
+        rep.violations.iter().any(|v| v.contains("epilogue")),
+        "dropped epilogue should also trip the structural check: {:?}",
+        rep.violations
+    );
+
+    let shrunk = differ::shrink(&s, fault);
+    // Minimality: a single pinned frame, every pass removed, precision
+    // widened to plain f32 — nothing left to take away.
+    assert!(shrunk.frame.is_some(), "shrinker must pin one frame: {shrunk:?}");
+    assert!(shrunk.opts.is_empty(), "shrinker must drop every pass: {shrunk:?}");
+    assert_eq!(shrunk.precision, Precision::F32, "shrinker must widen precision");
+    assert!(!differ::run_scenario_with_fault(&shrunk, fault).passed, "shrunk case still fails");
+    // Re-shrinking is a fixed point.
+    assert_eq!(differ::shrink(&shrunk, fault), shrunk);
+
+    // The reproducer serializes with everything needed to replay.
+    let repro = differ::reproduce(&s, fault);
+    let json = repro.to_json().to_string();
+    for key in ["\"original\"", "\"shrunk\"", "\"replay\"", "drop-epilogue", "\"seed\""] {
+        assert!(json.contains(key), "reproducer json missing {key}: {json}");
+    }
+    let parsed = tvm_fpga_flow::util::json::parse(&json).expect("reproducer json parses");
+    let back = Scenario::from_json(parsed.get("shrunk").expect("shrunk present"))
+        .expect("shrunk scenario parses");
+    assert_eq!(back, repro.shrunk);
+}
+
+/// Mismatch localization: re-widening one narrowed kernel to f32 while
+/// the oracle stays int8 must point the report at exactly that layer.
+#[test]
+fn widened_kernel_localizes_to_its_layer() {
+    let s = Scenario {
+        net: NetSpec::Named("lenet5".into()),
+        mode: Mode::Pipelined,
+        precision: Precision::Int8,
+        opts: fuzz_opts(),
+        frames: 2,
+        frame: None,
+        seed: 0x10CA1,
+    };
+    let rep = differ::run_scenario_with_fault(&s, Some(Fault::WidenPrecision));
+    assert!(!rep.passed, "widened kernel must break int8 bit-exactness");
+    let m = rep.first_mismatch.expect("divergence must localize to a node");
+    // The first narrowed kernel is the first conv (c1).
+    assert_eq!(m.name, "c1", "localization pointed at {} instead", m.name);
+}
+
+/// Pinned regression: parameterized (PK) groups whose member layers carry
+/// *different* absorbed epilogue chains (one conv with bn+relu, another
+/// bare) must still verify — epilogues resolve per dispatched layer, not
+/// from the representative's static nest.
+#[test]
+fn parameterized_groups_with_mixed_epilogue_chains_verify() {
+    // Find a deterministic chain whose convs disagree on their bn/act
+    // suffixes (they all share the conv3x3s1 group, so PK merges them).
+    let mut found = None;
+    for seed in 0..500u64 {
+        let g = differ::random_chain(seed);
+        let mut sigs = std::collections::BTreeSet::new();
+        let mut convs = 0;
+        for n in &g.nodes {
+            if matches!(n.op, Op::Conv2d { .. }) {
+                convs += 1;
+                let has_bn = g.nodes.iter().any(|m| m.name == format!("{}.bn", n.name));
+                let has_act = g.nodes.iter().any(|m| m.name == format!("{}.act", n.name));
+                sigs.insert((has_bn, has_act));
+            }
+        }
+        if convs >= 2 && sigs.len() >= 2 {
+            found = Some(seed);
+            break;
+        }
+    }
+    let seed = found.expect("some chain in 0..500 mixes conv epilogue chains");
+    for precision in [Precision::F32, Precision::Int8] {
+        let s = Scenario {
+            net: NetSpec::Chain { seed },
+            mode: Mode::Folded,
+            precision,
+            opts: vec![
+                OptKind::Fuse,
+                OptKind::Parameterize,
+                OptKind::Tile,
+                OptKind::Unroll,
+                OptKind::CachedWrite,
+            ],
+            frames: 2,
+            frame: None,
+            seed: 3,
+        };
+        // PK really merged multiple layers into one kernel.
+        let g = s.graph();
+        let built = tvm_fpga_flow::flow::patterns::build_with_passes(
+            &g,
+            Mode::Folded,
+            &s.cfg(),
+            &tvm_fpga_flow::flow::patterns::default_factors(&g),
+        );
+        assert!(
+            built.program.kernels.iter().any(|k| k.layers.len() > 1),
+            "chain:{seed:#x} did not exercise a merged kernel"
+        );
+        let rep = differ::run_scenario(&s);
+        assert!(rep.passed, "{}: {}", s.describe(), rep.summary());
+    }
+}
+
+/// Replay an uploaded reproducer (`VERIFY_REPRO_PATH`): parses the shrunk
+/// scenario and re-runs it, printing the outcome. No-op without the env.
+#[test]
+fn replay_reproducer() {
+    let Ok(path) = std::env::var("VERIFY_REPRO_PATH") else { return };
+    if !std::path::Path::new(&path).exists() {
+        return;
+    }
+    let text = std::fs::read_to_string(&path).expect("read reproducer");
+    let json = tvm_fpga_flow::util::json::parse(&text).expect("reproducer parses");
+    let s = Scenario::from_json(json.get("shrunk").expect("shrunk scenario"))
+        .expect("scenario parses");
+    let rep = differ::run_scenario(&s);
+    println!("replayed {} → {}", s.describe(), rep.summary());
+}
+
+/// Nightly-scale coverage of the big evaluation networks (folded, paper
+/// mode). Gated behind `FLOW_VERIFY_HEAVY=1` — each frame of ResNet-34 is
+/// ~3.6 GMACs on *both* sides of the diff.
+#[test]
+fn heavy_networks_verify() {
+    if std::env::var("FLOW_VERIFY_HEAVY").is_err() {
+        eprintln!("skipped (set FLOW_VERIFY_HEAVY=1 to run the big-network sweep)");
+        return;
+    }
+    for net in ["mobilenet_v1", "resnet34"] {
+        for precision in [Precision::F32, Precision::Int8] {
+            let s = Scenario {
+                net: NetSpec::Named(net.into()),
+                mode: Mode::Folded,
+                precision,
+                opts: fuzz_opts(),
+                frames: 1,
+                frame: None,
+                seed: 0xB16,
+            };
+            let rep = differ::run_scenario(&s);
+            assert!(rep.passed, "{}: {}", s.describe(), rep.summary());
+        }
+    }
+}

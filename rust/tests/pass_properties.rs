@@ -9,80 +9,22 @@
 
 use tvm_fpga_flow::flow::patterns::{build_with_passes, default_factors, OptConfig};
 use tvm_fpga_flow::flow::Mode;
-use tvm_fpga_flow::graph::{models, passes, Activation, Graph, GraphBuilder, Op, Shape};
+use tvm_fpga_flow::graph::{models, passes, Graph, Op};
 use tvm_fpga_flow::pass::{PassManager, ScheduleCtx};
 use tvm_fpga_flow::quant::rewrite::{grid_capable, insert_qdq};
 use tvm_fpga_flow::schedule::OptKind;
 use tvm_fpga_flow::texpr::Precision;
 use tvm_fpga_flow::util::prop;
 use tvm_fpga_flow::util::rng::Rng;
+// One chain generator for the whole test estate: the differential fuzzer
+// (rust/tests/differential.rs) and these pipeline properties exercise the
+// same graph family, so coverage can't silently drift apart.
+use tvm_fpga_flow::verify::differ::random_chain;
 
-/// Random layer chain: convs (optionally BN'd / activated), depthwise
-/// convs, pools (bounded so spatial dims stay ≥ 4), then flatten + dense.
-/// Always a valid graph; BN only ever follows a conv, like real imports.
-fn random_chain(rng: &mut Rng, case: u64) -> Graph {
-    let channels = 1 + rng.below(3) as usize;
-    let (mut b, x) = GraphBuilder::new(format!("rand{case}"), Shape::Chw(channels, 16, 16));
-    let mut cur = x;
-    let mut pools = 0;
-    let depth = 2 + rng.below(5);
-    for i in 0..depth {
-        cur = match rng.below(5) {
-            0 | 1 => {
-                let oc = 2 + rng.below(6) as usize;
-                let bias = rng.below(2) == 0;
-                let mut c = b.add(
-                    format!("c{i}"),
-                    Op::Conv2d {
-                        out_channels: oc,
-                        kernel: 3,
-                        stride: 1,
-                        padding: 1,
-                        bias,
-                        activation: Activation::None,
-                    },
-                    &[cur],
-                );
-                if rng.below(2) == 0 {
-                    c = b.add(format!("c{i}.bn"), Op::BatchNorm, &[c]);
-                }
-                if rng.below(2) == 0 {
-                    c = b.add(format!("c{i}.act"), Op::Activate(Activation::Relu), &[c]);
-                }
-                c
-            }
-            2 => {
-                let bias = rng.below(2) == 0;
-                let mut d = b.add(
-                    format!("dw{i}"),
-                    Op::DepthwiseConv2d {
-                        kernel: 3,
-                        stride: 1,
-                        padding: 1,
-                        bias,
-                        activation: Activation::None,
-                    },
-                    &[cur],
-                );
-                if !bias && rng.below(2) == 0 {
-                    d = b.add(format!("dw{i}.bn"), Op::BatchNorm, &[d]);
-                }
-                d
-            }
-            3 if pools < 2 => {
-                pools += 1;
-                b.add(format!("p{i}"), Op::MaxPool { kernel: 2, stride: 2, padding: 0 }, &[cur])
-            }
-            _ => b.add(format!("a{i}"), Op::Activate(Activation::Relu), &[cur]),
-        };
-    }
-    let f = b.add("flat", Op::Flatten, &[cur]);
-    let d = b.add(
-        "fc",
-        Op::Dense { out_features: 10, bias: true, activation: Activation::None },
-        &[f],
-    );
-    b.finish(d)
+/// Seeded random layer chain from the shared generator (convs optionally
+/// BN'd / activated, depthwise convs, bounded pools, flatten + dense).
+fn chain_for(rng: &mut Rng) -> Graph {
+    random_chain(rng.next_u64())
 }
 
 fn count_op(g: &Graph, f: impl Fn(&Op) -> bool) -> usize {
@@ -147,8 +89,8 @@ fn optimized_schedule_pipeline_is_idempotent() {
 
 #[test]
 fn bn_fold_removes_only_batchnorm_nodes() {
-    prop::check("bn-fold-node-invariants", |rng, case| {
-        let g = random_chain(rng, case);
+    prop::check("bn-fold-node-invariants", |rng, _case| {
+        let g = chain_for(rng);
         g.validate().expect("generator builds valid graphs");
         let bn_before = count_op(&g, |op| matches!(op, Op::BatchNorm));
         let others_before = g.nodes.len() - bn_before;
@@ -173,8 +115,8 @@ fn bn_fold_removes_only_batchnorm_nodes() {
 
 #[test]
 fn qdq_fold_never_increases_boundary_count() {
-    prop::check("qdq-boundary-invariants", |rng, case| {
-        let g = random_chain(rng, case);
+    prop::check("qdq-boundary-invariants", |rng, _case| {
+        let g = chain_for(rng);
         let (folded, _) = passes::standard_pipeline(&g);
         let (rewritten, stats) = insert_qdq(&folded, Precision::Int8);
         rewritten.validate().expect("qdq rewrite preserves validity");
