@@ -1,0 +1,60 @@
+//! Pass-trace consistency lints (FLOW050–FLOW052).
+//!
+//! Every pass declares an [`Equivalence`] obligation and the manager
+//! records what it actually did ([`PassRecord`]). These lints cross-check
+//! the two: a pass recorded as skipped must not report IR changes, a pass
+//! whose diff moved values onto a quantization grid must have declared at
+//! least grid-level equivalence (the differential harness otherwise holds
+//! it to a tolerance it cannot meet), and an applied pass that matched
+//! sites but changed nothing is noted as a no-op.
+//!
+//! [`Equivalence`]: crate::pass::Equivalence
+//! [`PassRecord`]: crate::pass::PassRecord
+
+use crate::analysis::{Diagnostic, Lint, Span};
+use crate::pass::{Equivalence, PassTrace};
+
+pub(crate) fn check(trace: &PassTrace) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for r in &trace.records {
+        if r.skipped.is_some() && !r.diff.is_empty() {
+            out.push(Diagnostic::new(
+                Lint::TraceInconsistent,
+                Span::pass(r.name.clone()),
+                format!(
+                    "pass {} is recorded as skipped ({}) but reports IR changes",
+                    r.name,
+                    r.skipped.as_deref().unwrap_or("")
+                ),
+            ));
+        }
+        let grid_moves = r.diff.quantize_nodes + r.diff.dequantize_nodes + r.diff.pairs_folded;
+        if r.skipped.is_none()
+            && grid_moves > 0
+            && matches!(r.equivalence, Equivalence::BitExact | Equivalence::CostModelOnly)
+        {
+            out.push(Diagnostic::new(
+                Lint::EquivalenceUnderstated,
+                Span::pass(r.name.clone()),
+                format!(
+                    "pass {} moved {} value(s) onto a quantization grid but declares {} \
+                     equivalence",
+                    r.name,
+                    grid_moves,
+                    r.equivalence.name()
+                ),
+            ));
+        }
+        if r.skipped.is_none() && r.matched > 0 && r.diff.is_empty() {
+            out.push(Diagnostic::new(
+                Lint::PassNoEffect,
+                Span::pass(r.name.clone()),
+                format!(
+                    "pass {} matched {} site(s) but recorded no IR change",
+                    r.name, r.matched
+                ),
+            ));
+        }
+    }
+    out
+}

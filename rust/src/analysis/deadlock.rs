@@ -1,0 +1,208 @@
+//! Channel deadlock analysis (FLOW001–FLOW008).
+//!
+//! A channelized program (§IV-E) deadlocks statically when its FIFO
+//! topology is cyclic (no kernel in the cycle can ever fire), or
+//! dynamically when some channel's per-frame writes and reads do not
+//! balance: a surplus producer eventually blocks on a full FIFO, a
+//! surplus consumer blocks on an empty one. Both are decidable here
+//! because kernels stream whole feature maps with statically-known
+//! element counts, so we prove for every channel
+//!
+//! ```text
+//! writes(ch) = |fmap(producer)|   reads(ch) = Σ |input| over consumers
+//! ```
+//!
+//! balance exactly, and that the §IV-J depth rule (a buffered channel
+//! covers the largest feature map it carries) holds under the recorded
+//! dispatch order.
+
+use std::collections::BTreeSet;
+
+use crate::analysis::{Diagnostic, Lint, Span, View};
+
+pub(crate) fn check(view: &View) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let prog = view.program;
+    let g = view.graph;
+    let n = prog.kernels.len();
+
+    // FLOW004: endpoints must name kernels; dangling channels are dropped
+    // from the remaining analyses.
+    let channels: Vec<_> = prog
+        .channels
+        .iter()
+        .filter(|ch| {
+            let ok = ch.from_kernel < n && ch.to_kernel < n;
+            if !ok {
+                out.push(Diagnostic::new(
+                    Lint::ChannelDangling,
+                    Span::channel(ch.name.clone()),
+                    format!("channel {} has a dangling endpoint", ch.name),
+                ));
+            }
+            ok
+        })
+        .collect();
+
+    // FLOW001: Kahn's algorithm over the FIFO topology; kernels left with
+    // nonzero in-degree sit on a cycle and can never fire.
+    let mut indeg = vec![0usize; n];
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for ch in &channels {
+        if ch.from_kernel != ch.to_kernel {
+            adj[ch.from_kernel].push(ch.to_kernel);
+            indeg[ch.to_kernel] += 1;
+        } else {
+            out.push(Diagnostic::new(
+                Lint::ChannelCycle,
+                Span::channel(ch.name.clone()).with_kernel(prog.kernels[ch.from_kernel].name.clone()),
+                format!(
+                    "channel {} loops kernel {} back to itself — it can never fire",
+                    ch.name, prog.kernels[ch.from_kernel].name
+                ),
+            ));
+        }
+    }
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut fired = 0usize;
+    while let Some(&next) = ready.iter().min() {
+        ready.retain(|&i| i != next);
+        fired += 1;
+        for &to in &adj[next] {
+            indeg[to] -= 1;
+            if indeg[to] == 0 {
+                ready.push(to);
+            }
+        }
+    }
+    if fired != n {
+        let stuck: Vec<&str> = (0..n)
+            .filter(|&i| indeg[i] > 0)
+            .map(|i| prog.kernels[i].name.as_str())
+            .collect();
+        out.push(Diagnostic::new(
+            Lint::ChannelCycle,
+            Span::kernel(stuck.join(", ")),
+            format!(
+                "channel topology is cyclic — kernels {} can never fire",
+                stuck.join(", ")
+            ),
+        ));
+        // Token counts are meaningless on a cyclic topology.
+        return out;
+    }
+
+    // FLOW002/FLOW003/FLOW005: per-channel token balance, depth coverage
+    // and element type.
+    for ch in &channels {
+        let producer = &prog.kernels[ch.from_kernel];
+        let consumer = &prog.kernels[ch.to_kernel];
+        if ch.elem != producer.nest.precision {
+            out.push(Diagnostic::new(
+                Lint::ChannelElemMismatch,
+                Span::channel(ch.name.clone()).with_kernel(producer.name.clone()),
+                format!(
+                    "channel {} carries {} but its producer {} streams {}",
+                    ch.name,
+                    ch.elem.name(),
+                    producer.name,
+                    producer.nest.precision.name()
+                ),
+            ));
+        }
+        let out_node = view.output_node(producer.layers[0]);
+        let writes = g.nodes[out_node].shape.elems() as u64;
+        let reads: u64 = consumer
+            .layers
+            .iter()
+            .flat_map(|&layer| g.nodes[layer].inputs.iter())
+            .filter(|&&inp| view.producing_kernel(inp) == Some(ch.from_kernel))
+            .map(|&inp| g.nodes[inp].shape.elems() as u64)
+            .sum();
+        if reads != 0 && reads != writes {
+            out.push(Diagnostic::new(
+                Lint::ChannelTokenImbalance,
+                Span::channel(ch.name.clone()).with_kernel(consumer.name.clone()),
+                format!(
+                    "channel {} is unbalanced: {} writes {} tokens per frame but {} reads {}",
+                    ch.name, producer.name, writes, consumer.name, reads
+                ),
+            ));
+        }
+        if ch.depth < writes {
+            out.push(Diagnostic::new(
+                Lint::ChannelUnderDepth,
+                Span::channel(ch.name.clone()).with_kernel(producer.name.clone()),
+                format!(
+                    "channel {} depth {} cannot buffer {}'s {}-element feature map (§IV-J)",
+                    ch.name, ch.depth, producer.name, writes
+                ),
+            ));
+        }
+    }
+
+    // FLOW006/FLOW007: the channel set must mirror the graph's
+    // cross-kernel edges — a missing channel starves its consumer, an
+    // orphan channel fills and never drains.
+    if !channels.is_empty() {
+        let mut have: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for ch in &channels {
+            have.insert((ch.from_kernel, ch.to_kernel));
+        }
+        let mut want: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for k in &prog.kernels {
+            for &layer in &k.layers {
+                for &inp in &g.nodes[layer].inputs {
+                    if let Some(src) = view.producing_kernel(inp) {
+                        if src != k.id {
+                            want.insert((src, k.id));
+                        }
+                    }
+                }
+            }
+        }
+        for &(a, b) in want.difference(&have) {
+            out.push(Diagnostic::new(
+                Lint::ChannelMissing,
+                Span::kernel(prog.kernels[b].name.clone()),
+                format!(
+                    "graph edge {} → {} has no channel",
+                    prog.kernels[a].name, prog.kernels[b].name
+                ),
+            ));
+        }
+        for &(a, b) in have.difference(&want) {
+            let name = channels
+                .iter()
+                .find(|ch| (ch.from_kernel, ch.to_kernel) == (a, b))
+                .map(|ch| ch.name.clone())
+                .unwrap_or_default();
+            out.push(Diagnostic::new(
+                Lint::ChannelOrphan,
+                Span::channel(name),
+                format!(
+                    "channel {} → {} matches no graph edge",
+                    prog.kernels[a].name, prog.kernels[b].name
+                ),
+            ));
+        }
+    }
+
+    // FLOW008: a kernel none of whose layer outputs reach a consumer or
+    // the graph output computes a value nobody reads.
+    for k in &prog.kernels {
+        let live = k.layers.iter().any(|&layer| {
+            let out_node = view.output_node(layer);
+            out_node == g.output || !view.consumers[out_node].is_empty()
+        });
+        if !live {
+            out.push(Diagnostic::new(
+                Lint::DeadKernel,
+                Span::kernel(k.name.clone()),
+                format!("kernel {}'s output is never consumed", k.name),
+            ));
+        }
+    }
+
+    out
+}

@@ -1,0 +1,537 @@
+//! Static design-rule analysis: deadlock, overflow and resource
+//! diagnostics *before* synthesis.
+//!
+//! The paper's optimizations each carry legality obligations —
+//! channelization must not deadlock (§IV-E/§IV-J), int8 datapaths must not
+//! wrap their accumulators (§VII), folded stashes must hold their strips
+//! (§IV-H) — that were historically checked in three inconsistent places:
+//! `flow::legality` strings, the `verify` interpreter's structural pass,
+//! and scattered panics. Most failures then surfaced *dynamically*, when
+//! the differential harness happened to execute a bad program. This module
+//! rejects illegal designs statically and explains why, the way a compiler
+//! front-end reports lints: every finding is a [`Diagnostic`] with a
+//! stable lint code (`FLOW0xx`), a [`Severity`], and a structured [`Span`]
+//! naming the offending kernel/channel/node.
+//!
+//! The analyzer runs as the `analyze` stage of the staged compile API,
+//! between lowering and synthesis
+//! ([`CompileSession::analyze`](crate::flow::CompileSession::analyze)),
+//! and behind `fpga-flow check`. Analyses:
+//!
+//! * [`deadlock`] — cycle detection over the channel topology plus a
+//!   per-frame token-count analysis proving every channel's writes and
+//!   reads balance under the recorded dispatch order and channel depths;
+//! * [`overflow`] — abstract value-range propagation through the
+//!   int8/fp16 datapath from calibrated ranges and layer reduction
+//!   extents, proving the integer accumulators cannot wrap;
+//! * [`structure`] — resource-budget, stash-capacity and structural
+//!   well-formedness diagnostics (autorun legality, lost nodes, epilogue
+//!   divergence), shared with the `verify` interpreter;
+//! * [`consistency`] — per-pass lints cross-checking each pass's declared
+//!   [`Equivalence`](crate::pass::Equivalence) obligation against its
+//!   trace record.
+//!
+//! §IV-J rules 1/2 ([`crate::flow::legality::check_program`]) emit the
+//! same [`Diagnostic`] type, so `fpga-flow check` and `report_json`
+//! surface every design-rule family uniformly.
+
+pub mod consistency;
+pub mod deadlock;
+pub mod overflow;
+pub mod structure;
+
+use std::collections::BTreeMap;
+
+use crate::codegen::KernelProgram;
+use crate::device::FpgaDevice;
+use crate::graph::{Graph, NodeId};
+use crate::pass::PassTrace;
+use crate::util::json::Json;
+
+/// Lint severity, ordered `Note < Warning < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Informational — never fails a check.
+    Note,
+    /// Suspicious but not provably wrong; fails under `--deny warnings`.
+    Warning,
+    /// Provably violates a design rule; the design must not synthesize.
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// The stable lint registry. Codes are append-only: a code is never
+/// renumbered or reused, so downstream tooling can match on them
+/// (`docs/ANALYSIS.md` is the human catalog).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lint {
+    /// FLOW001: the channel topology contains a cycle — no kernel in it
+    /// can ever fire.
+    ChannelCycle,
+    /// FLOW002: a channel's per-frame writes and reads do not balance.
+    ChannelTokenImbalance,
+    /// FLOW003: a channel's depth cannot buffer its producer's feature map
+    /// under the sequential dispatch order (§IV-J).
+    ChannelUnderDepth,
+    /// FLOW004: a channel endpoint names no kernel.
+    ChannelDangling,
+    /// FLOW005: a channel's element type differs from its producer's
+    /// datapath precision.
+    ChannelElemMismatch,
+    /// FLOW006: a cross-kernel graph edge has no channel.
+    ChannelMissing,
+    /// FLOW007: a channel matches no graph edge (it can never drain).
+    ChannelOrphan,
+    /// FLOW008: a kernel's outputs are never consumed.
+    DeadKernel,
+    /// FLOW010: an int8 accumulator can wrap its 32-bit C type.
+    AccumOverflow,
+    /// FLOW011: an int8 accumulator is within 2× of wrapping.
+    AccumMargin,
+    /// FLOW012: a calibrated fp16 stream value exceeds the fp16 range.
+    F16RangeOverflow,
+    /// FLOW020: §IV-J rule 1 — a streamed operand exceeds the bandwidth
+    /// roof.
+    BandwidthRoof,
+    /// FLOW021: §IV-J rule 2 — a loop extent is not divisible by its
+    /// factor.
+    NotDivisible,
+    /// FLOW022: §VII #2 — a weight density outside the (0, 1] domain.
+    SparsityDomain,
+    /// FLOW030: modeled utilization exceeds the device (rule 3 pre-check).
+    OverBudget,
+    /// FLOW031: modeled utilization is close enough to the device ceiling
+    /// to risk routing failure.
+    NearBudget,
+    /// FLOW032: a folded ifmap stash cannot hold its line strip.
+    StashCapacity,
+    /// FLOW033: an autorun kernel accesses global memory (§IV-F).
+    AutorunGlobal,
+    /// FLOW034: an autorun kernel's op carries weights (§IV-F).
+    AutorunWeights,
+    /// FLOW035: a graph node was lost by lowering.
+    NodeLost,
+    /// FLOW036: a kernel's epilogue diverges from the graph-implied chain.
+    EpilogueDivergence,
+    /// FLOW037: a kernel's absorbed-node record diverges from the graph.
+    AbsorbedMismatch,
+    /// FLOW050: a pass recorded as skipped reports IR changes.
+    TraceInconsistent,
+    /// FLOW051: a pass's diff moved values onto a quantization grid but its
+    /// declared equivalence obligation does not admit that.
+    EquivalenceUnderstated,
+    /// FLOW052: an applied pass matched sites but changed nothing.
+    PassNoEffect,
+}
+
+impl Lint {
+    /// Stable code (`FLOWnnn`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Lint::ChannelCycle => "FLOW001",
+            Lint::ChannelTokenImbalance => "FLOW002",
+            Lint::ChannelUnderDepth => "FLOW003",
+            Lint::ChannelDangling => "FLOW004",
+            Lint::ChannelElemMismatch => "FLOW005",
+            Lint::ChannelMissing => "FLOW006",
+            Lint::ChannelOrphan => "FLOW007",
+            Lint::DeadKernel => "FLOW008",
+            Lint::AccumOverflow => "FLOW010",
+            Lint::AccumMargin => "FLOW011",
+            Lint::F16RangeOverflow => "FLOW012",
+            Lint::BandwidthRoof => "FLOW020",
+            Lint::NotDivisible => "FLOW021",
+            Lint::SparsityDomain => "FLOW022",
+            Lint::OverBudget => "FLOW030",
+            Lint::NearBudget => "FLOW031",
+            Lint::StashCapacity => "FLOW032",
+            Lint::AutorunGlobal => "FLOW033",
+            Lint::AutorunWeights => "FLOW034",
+            Lint::NodeLost => "FLOW035",
+            Lint::EpilogueDivergence => "FLOW036",
+            Lint::AbsorbedMismatch => "FLOW037",
+            Lint::TraceInconsistent => "FLOW050",
+            Lint::EquivalenceUnderstated => "FLOW051",
+            Lint::PassNoEffect => "FLOW052",
+        }
+    }
+
+    /// Short kebab-case slug (catalog key in `docs/ANALYSIS.md`).
+    pub fn slug(&self) -> &'static str {
+        match self {
+            Lint::ChannelCycle => "channel-cycle",
+            Lint::ChannelTokenImbalance => "channel-token-imbalance",
+            Lint::ChannelUnderDepth => "channel-under-depth",
+            Lint::ChannelDangling => "channel-dangling",
+            Lint::ChannelElemMismatch => "channel-elem-mismatch",
+            Lint::ChannelMissing => "channel-missing",
+            Lint::ChannelOrphan => "channel-orphan",
+            Lint::DeadKernel => "dead-kernel",
+            Lint::AccumOverflow => "accum-overflow",
+            Lint::AccumMargin => "accum-margin",
+            Lint::F16RangeOverflow => "f16-range-overflow",
+            Lint::BandwidthRoof => "bandwidth-roof",
+            Lint::NotDivisible => "not-divisible",
+            Lint::SparsityDomain => "sparsity-domain",
+            Lint::OverBudget => "over-budget",
+            Lint::NearBudget => "near-budget",
+            Lint::StashCapacity => "stash-capacity",
+            Lint::AutorunGlobal => "autorun-global",
+            Lint::AutorunWeights => "autorun-weights",
+            Lint::NodeLost => "node-lost",
+            Lint::EpilogueDivergence => "epilogue-divergence",
+            Lint::AbsorbedMismatch => "absorbed-mismatch",
+            Lint::TraceInconsistent => "trace-inconsistent",
+            Lint::EquivalenceUnderstated => "equivalence-understated",
+            Lint::PassNoEffect => "pass-no-effect",
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        match self {
+            Lint::DeadKernel
+            | Lint::AccumMargin
+            | Lint::NearBudget
+            | Lint::EquivalenceUnderstated => Severity::Warning,
+            Lint::PassNoEffect => Severity::Note,
+            _ => Severity::Error,
+        }
+    }
+
+    /// Every registered lint, in code order (drives the catalog test).
+    pub fn all() -> &'static [Lint] {
+        &[
+            Lint::ChannelCycle,
+            Lint::ChannelTokenImbalance,
+            Lint::ChannelUnderDepth,
+            Lint::ChannelDangling,
+            Lint::ChannelElemMismatch,
+            Lint::ChannelMissing,
+            Lint::ChannelOrphan,
+            Lint::DeadKernel,
+            Lint::AccumOverflow,
+            Lint::AccumMargin,
+            Lint::F16RangeOverflow,
+            Lint::BandwidthRoof,
+            Lint::NotDivisible,
+            Lint::SparsityDomain,
+            Lint::OverBudget,
+            Lint::NearBudget,
+            Lint::StashCapacity,
+            Lint::AutorunGlobal,
+            Lint::AutorunWeights,
+            Lint::NodeLost,
+            Lint::EpilogueDivergence,
+            Lint::AbsorbedMismatch,
+            Lint::TraceInconsistent,
+            Lint::EquivalenceUnderstated,
+            Lint::PassNoEffect,
+        ]
+    }
+}
+
+/// Structured location of a finding: which kernel/channel/node/pass the
+/// lint is about. All fields optional — a program-wide finding carries an
+/// empty span.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Span {
+    pub kernel: Option<String>,
+    pub channel: Option<String>,
+    pub node: Option<String>,
+    pub pass: Option<String>,
+}
+
+impl Span {
+    pub fn kernel(name: impl Into<String>) -> Span {
+        Span { kernel: Some(name.into()), ..Span::default() }
+    }
+
+    pub fn channel(name: impl Into<String>) -> Span {
+        Span { channel: Some(name.into()), ..Span::default() }
+    }
+
+    pub fn node(name: impl Into<String>) -> Span {
+        Span { node: Some(name.into()), ..Span::default() }
+    }
+
+    pub fn pass(name: impl Into<String>) -> Span {
+        Span { pass: Some(name.into()), ..Span::default() }
+    }
+
+    pub fn with_node(mut self, name: impl Into<String>) -> Span {
+        self.node = Some(name.into());
+        self
+    }
+
+    pub fn with_kernel(mut self, name: impl Into<String>) -> Span {
+        self.kernel = Some(name.into());
+        self
+    }
+}
+
+/// One analyzer finding: a registered lint at a structured location with a
+/// human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub lint: Lint,
+    pub span: Span,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(lint: Lint, span: Span, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { lint, span, message: message.into() }
+    }
+
+    pub fn code(&self) -> &'static str {
+        self.lint.code()
+    }
+
+    pub fn severity(&self) -> Severity {
+        self.lint.severity()
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}[{}] {}", self.severity().name(), self.code(), self.message)
+    }
+}
+
+/// The analyzer's report: every finding, in analysis order (channels →
+/// overflow → legality → structure/budget → pass consistency).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AnalysisReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity() == Severity::Error)
+    }
+
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity() == sev).count()
+    }
+
+    /// No errors; with `deny_warnings`, no warnings either. Notes never
+    /// fail a check.
+    pub fn is_clean(&self, deny_warnings: bool) -> bool {
+        self.count(Severity::Error) == 0
+            && (!deny_warnings || self.count(Severity::Warning) == 0)
+    }
+
+    /// One `severity[CODE] message` line per finding, plus a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.to_string());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{} error(s), {} warning(s), {} note(s)\n",
+            self.count(Severity::Error),
+            self.count(Severity::Warning),
+            self.count(Severity::Note)
+        ));
+        out
+    }
+
+    /// Machine-readable report (the `diagnostics` section of
+    /// `report_json` and `fpga-flow check --json`).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("errors".into(), Json::Num(self.count(Severity::Error) as f64));
+        root.insert("warnings".into(), Json::Num(self.count(Severity::Warning) as f64));
+        root.insert("notes".into(), Json::Num(self.count(Severity::Note) as f64));
+        root.insert(
+            "items".into(),
+            Json::Arr(
+                self.diagnostics
+                    .iter()
+                    .map(|d| {
+                        let mut m = BTreeMap::new();
+                        m.insert("code".into(), Json::Str(d.code().into()));
+                        m.insert("lint".into(), Json::Str(d.lint.slug().into()));
+                        m.insert("severity".into(), Json::Str(d.severity().name().into()));
+                        m.insert("message".into(), Json::Str(d.message.clone()));
+                        if let Some(k) = &d.span.kernel {
+                            m.insert("kernel".into(), Json::Str(k.clone()));
+                        }
+                        if let Some(c) = &d.span.channel {
+                            m.insert("channel".into(), Json::Str(c.clone()));
+                        }
+                        if let Some(n) = &d.span.node {
+                            m.insert("node".into(), Json::Str(n.clone()));
+                        }
+                        if let Some(p) = &d.span.pass {
+                            m.insert("pass".into(), Json::Str(p.clone()));
+                        }
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+}
+
+/// Shared program view: the node→kernel map, absorbed chains and consumer
+/// lists every analysis consults. Built once per [`analyze`] call.
+pub(crate) struct View<'a> {
+    pub graph: &'a Graph,
+    pub program: &'a KernelProgram,
+    pub map: BTreeMap<NodeId, usize>,
+    pub chains: BTreeMap<NodeId, Vec<NodeId>>,
+    pub consumers: Vec<Vec<NodeId>>,
+}
+
+impl<'a> View<'a> {
+    pub fn new(graph: &'a Graph, program: &'a KernelProgram) -> View<'a> {
+        let map = crate::pass::schedule::node_kernel_map(program);
+        let consumers = graph.consumers();
+        let mut chains = BTreeMap::new();
+        for &nid in map.keys() {
+            chains.insert(
+                nid,
+                crate::verify::interp::absorbed_chain(graph, &map, &consumers, nid),
+            );
+        }
+        View { graph, program, map, chains, consumers }
+    }
+
+    /// The kernel producing node `id`'s value, climbing through nodes that
+    /// own no kernel (layout skips, fused epilogues) via their first input.
+    pub fn producing_kernel(&self, mut id: NodeId) -> Option<usize> {
+        loop {
+            if let Some(&k) = self.map.get(&id) {
+                return Some(k);
+            }
+            match self.graph.nodes[id].inputs.first() {
+                Some(&prev) => id = prev,
+                None => return None,
+            }
+        }
+    }
+
+    /// The last node of `host`'s absorbed chain (= the value the kernel's
+    /// output stream actually carries), or `host` itself.
+    pub fn output_node(&self, host: NodeId) -> NodeId {
+        self.chains.get(&host).and_then(|c| c.last().copied()).unwrap_or(host)
+    }
+}
+
+/// Structural findings for the verify interpreter, which keeps its legacy
+/// message-string surface ([`Interpreter::structure`]) but no longer owns
+/// an implementation. Cycle lints are excluded — the interpreter's
+/// dispatch builder detects cycles itself (it also needs the fallback
+/// dispatch order) and reports them on its own.
+///
+/// [`Interpreter::structure`]: crate::verify::interp::Interpreter::structure
+pub(crate) fn structural_violations(graph: &Graph, program: &KernelProgram) -> Vec<Diagnostic> {
+    let view = View::new(graph, program);
+    let mut v = deadlock::check(&view);
+    v.retain(|d| d.lint != Lint::ChannelCycle);
+    v.extend(structure::check(&view));
+    v
+}
+
+/// Run every analysis on a lowered program. `legality_clock_mhz` keys the
+/// §IV-J rule-1 roof (the target's legality clock); `trace`, when present,
+/// enables the per-pass consistency lints.
+pub fn analyze(
+    graph: &Graph,
+    program: &KernelProgram,
+    device: &FpgaDevice,
+    legality_clock_mhz: f64,
+    trace: Option<&PassTrace>,
+) -> AnalysisReport {
+    let view = View::new(graph, program);
+    let mut diagnostics = Vec::new();
+    diagnostics.extend(deadlock::check(&view));
+    diagnostics.extend(overflow::check(&view));
+    diagnostics.extend(crate::flow::legality::check_program(
+        program,
+        device,
+        legality_clock_mhz,
+    ));
+    diagnostics.extend(structure::check(&view));
+    diagnostics.extend(structure::check_budget(program, device));
+    if let Some(trace) = trace {
+        diagnostics.extend(consistency::check(trace));
+    }
+    AnalysisReport { diagnostics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_codes_are_unique_and_stable() {
+        let mut seen = std::collections::BTreeSet::new();
+        for l in Lint::all() {
+            assert!(seen.insert(l.code()), "duplicate lint code {}", l.code());
+            assert!(l.code().starts_with("FLOW"), "{}", l.code());
+            assert!(!l.slug().is_empty());
+        }
+        // Stability spot checks — these codes are documented and must
+        // never be renumbered.
+        assert_eq!(Lint::ChannelCycle.code(), "FLOW001");
+        assert_eq!(Lint::AccumOverflow.code(), "FLOW010");
+        assert_eq!(Lint::BandwidthRoof.code(), "FLOW020");
+        assert_eq!(Lint::StashCapacity.code(), "FLOW032");
+        assert_eq!(Lint::TraceInconsistent.code(), "FLOW050");
+    }
+
+    #[test]
+    fn severity_ordering_and_cleanliness() {
+        assert!(Severity::Note < Severity::Warning);
+        assert!(Severity::Warning < Severity::Error);
+        let mut rep = AnalysisReport::default();
+        assert!(rep.is_clean(true));
+        rep.diagnostics.push(Diagnostic::new(Lint::NearBudget, Span::default(), "w"));
+        assert!(rep.is_clean(false));
+        assert!(!rep.is_clean(true));
+        rep.diagnostics.push(Diagnostic::new(Lint::OverBudget, Span::default(), "e"));
+        assert!(!rep.is_clean(false));
+    }
+
+    #[test]
+    fn diagnostics_render_with_codes() {
+        let d = Diagnostic::new(
+            Lint::ChannelUnderDepth,
+            Span::channel("ch0").with_kernel("conv1"),
+            "channel ch0 depth 4 cannot buffer conv1's 100-element feature map (§IV-J)",
+        );
+        let line = d.to_string();
+        assert!(line.starts_with("error[FLOW003]"), "{line}");
+        assert!(line.contains("ch0"), "{line}");
+    }
+
+    #[test]
+    fn report_json_carries_spans() {
+        let rep = AnalysisReport {
+            diagnostics: vec![Diagnostic::new(
+                Lint::AccumOverflow,
+                Span::kernel("fc").with_node("fc1"),
+                "overflow",
+            )],
+        };
+        let parsed = crate::util::json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("errors").unwrap().as_u64(), Some(1));
+        let item = parsed.get("items").unwrap().idx(0).unwrap();
+        assert_eq!(item.get("code").unwrap().as_str(), Some("FLOW010"));
+        assert_eq!(item.get("kernel").unwrap().as_str(), Some("fc"));
+        assert_eq!(item.get("node").unwrap().as_str(), Some("fc1"));
+    }
+}

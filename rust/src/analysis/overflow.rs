@@ -1,0 +1,119 @@
+//! Quantized-accumulator overflow analysis (FLOW010–FLOW012).
+//!
+//! The int8 datapath (§VII extension) accumulates `i8 × i8` products in
+//! the C `int` type ([`Precision::accum_c_type`]); symmetric quantization
+//! bounds every operand code by `qmax = 127`, so after a reduction of
+//! extent `R` the accumulator magnitude is at most `R · 127²`. We recover
+//! `R` per layer from the graph's cost model (`macs / out_elems` — the
+//! MAC tree feeding one output element) and prove that bound stays under
+//! [`accum_limit`](crate::quant::accum_limit); when it cannot, the exact
+//! layer is flagged. Calibrated ranges ([`calibrate_analytic`]) translate
+//! the proof back to real units — the dequantized worst case under the
+//! layer's `QParams` scales — and bound the fp16 stream values, whose
+//! accumulators are fp32 but whose channel/stream payloads saturate at
+//! the fp16 max finite value.
+
+use crate::analysis::{Diagnostic, Lint, Span, View};
+use crate::quant::{accum_limit, calibrate_analytic, Calibrator};
+use crate::texpr::Precision;
+
+/// Largest finite fp16 value: anything calibrated beyond this saturates
+/// (or becomes infinity) on the stream.
+pub const F16_MAX: f64 = 65504.0;
+
+pub(crate) fn check(view: &View) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let g = view.graph;
+    let needs_table = view
+        .program
+        .kernels
+        .iter()
+        .any(|k| matches!(k.nest.precision, Precision::Int8 | Precision::F16));
+    if !needs_table {
+        return out;
+    }
+    // MinMax (4σ envelope), not the percentile clip used for accuracy
+    // simulation: an overflow proof must hold for the range extremes.
+    let table = calibrate_analytic(g, Calibrator::MinMax);
+
+    for k in &view.program.kernels {
+        let precision = k.nest.precision;
+        match precision {
+            Precision::F32 => continue,
+            Precision::Int8 => {
+                let Some(limit) = accum_limit(precision) else { continue };
+                if k.nest.macs_per_iter == 0 {
+                    continue;
+                }
+                for &nid in &k.layers {
+                    let n = &g.nodes[nid];
+                    let elems = n.shape.elems() as u64;
+                    if n.cost.macs == 0 || elems == 0 {
+                        continue;
+                    }
+                    // Reduction extent: MACs feeding one output element.
+                    let red = n.cost.macs / elems;
+                    let bound = red as i128 * 127 * 127;
+                    if bound <= limit as i128 / 2 {
+                        continue;
+                    }
+                    // Real-unit translation of the bound under the layer's
+                    // quantization scales, for the message.
+                    let sx = n
+                        .inputs
+                        .first()
+                        .map(|&i| table.activation(i).max_abs() / 127.0)
+                        .unwrap_or(0.0);
+                    let sw = table
+                        .weight_ranges(nid)
+                        .iter()
+                        .map(|r| r.max_abs() / 127.0)
+                        .fold(0.0f64, f64::max);
+                    let real = bound as f64 * sx * sw;
+                    let span = Span::kernel(k.name.clone()).with_node(n.name.clone());
+                    if bound > limit as i128 {
+                        out.push(Diagnostic::new(
+                            Lint::AccumOverflow,
+                            span,
+                            format!(
+                                "layer {}: int8 accumulator can reach |{}| = {} × 127² and wrap \
+                                 the 32-bit limit {} (≈{:.3e} in real units)",
+                                n.name, bound, red, limit, real
+                            ),
+                        ));
+                    } else {
+                        out.push(Diagnostic::new(
+                            Lint::AccumMargin,
+                            span,
+                            format!(
+                                "layer {}: int8 accumulator bound {} = {} × 127² is within 2× of \
+                                 the 32-bit limit {}",
+                                n.name, bound, red, limit
+                            ),
+                        ));
+                    }
+                }
+            }
+            Precision::F16 => {
+                // fp16 accumulates in fp32; the risk is the stream value
+                // itself leaving the representable fp16 range.
+                for &nid in &k.layers {
+                    let out_node = view.output_node(nid);
+                    let max_abs = table.activation(out_node).max_abs();
+                    if max_abs > F16_MAX {
+                        out.push(Diagnostic::new(
+                            Lint::F16RangeOverflow,
+                            Span::kernel(k.name.clone()).with_node(g.nodes[out_node].name.clone()),
+                            format!(
+                                "layer {}: calibrated activation range ±{:.3e} exceeds the fp16 \
+                                 max finite value {}",
+                                g.nodes[out_node].name, max_abs, F16_MAX
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,175 @@
+//! Structural and resource diagnostics (FLOW030–FLOW037).
+//!
+//! These unify what used to be three disjoint checkers: the verify
+//! interpreter's structural pass (autorun legality, lost nodes, epilogue
+//! divergence, stash sizing — `verify/interp.rs` now delegates here), the
+//! §IV-J rule-3 pre-check over the [`aoc::resources`](crate::aoc::resources)
+//! model, and the folded stash-capacity rule that was independently
+//! re-derived by the scheduler. One implementation, one [`Diagnostic`]
+//! vocabulary.
+
+use crate::analysis::{Diagnostic, Lint, Span, View};
+use crate::codegen::{Kernel, KernelProgram};
+use crate::device::FpgaDevice;
+use crate::graph::{Graph, Op};
+use crate::texpr::{Epilogue, LoopVar, MemSpace};
+use crate::verify::interp::expected_intrinsic;
+
+/// Utilization fraction above which routing failure becomes likely (the
+/// congestion model's feasible region ends well before 100%).
+pub const NEAR_BUDGET_FRAC: f64 = 0.85;
+
+pub(crate) fn check(view: &View) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let prog = view.program;
+    let g = view.graph;
+
+    // FLOW033/FLOW034: autorun legality (§IV-F) — no global arguments, no
+    // weights.
+    for k in &prog.kernels {
+        if k.autorun {
+            if !k.autorun_eligible() {
+                out.push(Diagnostic::new(
+                    Lint::AutorunGlobal,
+                    Span::kernel(k.name.clone()),
+                    format!("kernel {} is autorun but accesses global memory", k.name),
+                ));
+            }
+            if g.nodes[k.layers[0]].op.has_weights() {
+                out.push(Diagnostic::new(
+                    Lint::AutorunWeights,
+                    Span::kernel(k.name.clone()),
+                    format!("kernel {} is autorun but its op carries weights", k.name),
+                ));
+            }
+        }
+    }
+
+    // FLOW035: every non-layout graph node must survive lowering — either
+    // it owns a kernel or it is an absorbed epilogue of one.
+    let mut covered: std::collections::BTreeSet<usize> = view.map.keys().copied().collect();
+    for chain in view.chains.values() {
+        covered.extend(chain.iter().copied());
+    }
+    for n in g.topo() {
+        if matches!(n.op, Op::Input | Op::Flatten | Op::Transform) {
+            continue;
+        }
+        if !covered.contains(&n.id) {
+            out.push(Diagnostic::new(
+                Lint::NodeLost,
+                Span::node(n.name.clone()),
+                format!("node {} ({}) was lost by lowering", n.name, n.op.mnemonic()),
+            ));
+        }
+    }
+
+    // FLOW036/FLOW037: the recorded epilogue/absorbed chain of each kernel
+    // must match the graph for its representative layer. (Member layers of
+    // a parameterized group resolve their chains at dispatch.)
+    for k in &prog.kernels {
+        let rep = k.layers[0];
+        let chain = &view.chains[&rep];
+        if &k.absorbed != chain {
+            out.push(Diagnostic::new(
+                Lint::AbsorbedMismatch,
+                Span::kernel(k.name.clone()),
+                format!(
+                    "kernel {} records absorbed nodes {:?} but the graph chain is {chain:?}",
+                    k.name, k.absorbed
+                ),
+            ));
+        }
+        let mut expected = expected_intrinsic(&g.nodes[rep].op);
+        for &a in chain {
+            expected.push(match g.nodes[a].op {
+                Op::BatchNorm => Epilogue::BatchNormFold,
+                Op::Activate(act) => Epilogue::Activation(act),
+                _ => continue,
+            });
+        }
+        if k.nest.epilogue != expected {
+            out.push(Diagnostic::new(
+                Lint::EpilogueDivergence,
+                Span::kernel(k.name.clone()),
+                format!(
+                    "kernel {} epilogue {:?} diverges from the graph-implied {:?}",
+                    k.name, k.nest.epilogue, expected
+                ),
+            ));
+        }
+    }
+
+    // FLOW032: folded stash capacity.
+    for k in &prog.kernels {
+        out.extend(stash_capacity(g, k));
+    }
+
+    out
+}
+
+/// §IV-H stash rule, the single implementation both the analyzer and the
+/// verify interpreter consult: a folded ifmap stash must hold at least the
+/// strip it stages — double-buffered, `kernel` input rows at the widest
+/// member layer's actual row width, times the achieved input-channel tile
+/// (the nest's InC unroll — never larger than the plan tile the stash was
+/// sized for). Over-sizing is a cost bug only; under-sizing (e.g. a
+/// hard-coded on-chip width) deadlocks the strip loader and is flagged.
+pub fn stash_capacity(graph: &Graph, k: &Kernel) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let node = &graph.nodes[k.layers[0]];
+    let Some(grp) = node.op.param_group() else {
+        return out;
+    };
+    let eb = k.nest.precision.bytes();
+    let t_inner = k.nest.find_loop(LoopVar::InC).map(|l| l.unroll.max(1)).unwrap_or(1);
+    for a in &k.nest.accesses {
+        if a.space == MemSpace::Local && a.buffer == "ifmap" {
+            let max_w = crate::pass::schedule::max_input_width(graph, &k.layers);
+            let need = 2 * t_inner * grp.kernel as u64 * max_w * eb;
+            if a.array_bytes < need {
+                out.push(Diagnostic::new(
+                    Lint::StashCapacity,
+                    Span::kernel(k.name.clone()),
+                    format!(
+                        "kernel {}: ifmap stash of {} B cannot hold its {} B double-buffered \
+                         line strip",
+                        k.name, a.array_bytes, need
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// FLOW030/FLOW031: §IV-J rule-3 pre-check. Synthesis re-derives the same
+/// model ([`crate::aoc::resources::program_resources`]) before routing;
+/// flagging it here turns an hour-long Quartus failure into a static lint.
+pub(crate) fn check_budget(prog: &KernelProgram, dev: &FpgaDevice) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let res = crate::aoc::resources::program_resources(prog, dev);
+    let util = &res.utilization;
+    for (dim, frac) in crate::aoc::resources::over_budget(util) {
+        out.push(Diagnostic::new(
+            Lint::OverBudget,
+            Span::default(),
+            format!(
+                "modeled {dim} utilization {:.0}% exceeds the device budget (§IV-J rule 3)",
+                frac * 100.0
+            ),
+        ));
+    }
+    if util.fits() && util.max_frac() > NEAR_BUDGET_FRAC {
+        out.push(Diagnostic::new(
+            Lint::NearBudget,
+            Span::default(),
+            format!(
+                "modeled peak utilization {:.0}% is above the {:.0}% routing-risk threshold",
+                util.max_frac() * 100.0,
+                NEAR_BUDGET_FRAC * 100.0
+            ),
+        ));
+    }
+    out
+}

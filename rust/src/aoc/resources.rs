@@ -214,6 +214,20 @@ pub fn program_resources(prog: &KernelProgram, dev: &FpgaDevice) -> ProgramResou
     ProgramResources { per_kernel, total, utilization }
 }
 
+/// Resource dimensions over the device budget, as `(name, fraction)` — the
+/// analyzer's FLOW030 source (§IV-J rule 3). Empty iff `u.fits()`.
+pub fn over_budget(u: &Utilization) -> Vec<(&'static str, f64)> {
+    [
+        ("logic", u.logic_frac),
+        ("ff", u.ff_frac),
+        ("dsp", u.dsp_frac),
+        ("bram", u.bram_frac),
+    ]
+    .into_iter()
+    .filter(|&(_, f)| f > 1.0)
+    .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

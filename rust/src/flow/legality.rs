@@ -7,6 +7,7 @@
 //!    prologue/epilogue code).
 //! 3. The design must fit the device (checked post-synthesis).
 
+use crate::analysis::{Diagnostic, Lint, Span};
 use crate::aoc::lsu::{infer, LsuKind};
 use crate::codegen::KernelProgram;
 use crate::device::FpgaDevice;
@@ -43,42 +44,25 @@ pub fn mode_restriction(
 }
 
 /// §VII #2: the zero-skipping datapath's weight-density domain is (0, 1].
-/// Values outside it would scale traffic by nonsense factors.
-pub fn sparsity_domain(density: f64) -> Result<(), String> {
+/// Values outside it would scale traffic by nonsense factors. `Err` is a
+/// typed FLOW022 diagnostic (pass preconditions keep only its message).
+pub fn sparsity_domain(density: f64) -> Result<(), Diagnostic> {
     if density > 0.0 && density <= 1.0 {
         Ok(())
     } else {
-        Err(format!("weight density {density} outside the (0, 1] sparsity domain (§VII #2)"))
-    }
-}
-
-/// Violations found by [`check_program`].
-#[derive(Debug, Clone, PartialEq)]
-pub enum Violation {
-    /// Rule 1: a non-cached global stream wider than the bandwidth roof.
-    BandwidthRoof { kernel: String, buffer: String, words_per_cycle: u64, roof: u64 },
-    /// Rule 2: a loop whose extent is not divisible by its unroll factor.
-    NotDivisible { kernel: String, var: &'static str, extent: u64, unroll: u64 },
-}
-
-impl std::fmt::Display for Violation {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            Violation::BandwidthRoof { kernel, buffer, words_per_cycle, roof } => write!(
-                f,
-                "{kernel}/{buffer}: {words_per_cycle} words/cycle exceeds the {roof}-word bandwidth roof (§IV-J rule 1)"
-            ),
-            Violation::NotDivisible { kernel, var, extent, unroll } => write!(
-                f,
-                "{kernel}: loop {var} extent {extent} not divisible by factor {unroll} (§IV-J rule 2)"
-            ),
-        }
+        Err(Diagnostic::new(
+            Lint::SparsityDomain,
+            Span::default(),
+            format!("weight density {density} outside the (0, 1] sparsity domain (§VII #2)"),
+        ))
     }
 }
 
 /// Check rules 1 and 2 on a scheduled program (rule 3 is the synthesis
-/// fit + routing check in `aoc::report`).
-pub fn check_program(prog: &KernelProgram, dev: &FpgaDevice, fmax_mhz: f64) -> Vec<Violation> {
+/// fit + routing check in `aoc::report`, pre-checked statically by
+/// [`crate::analysis::structure`]). Findings are FLOW020/FLOW021
+/// diagnostics, sharing the analyzer's vocabulary.
+pub fn check_program(prog: &KernelProgram, dev: &FpgaDevice, fmax_mhz: f64) -> Vec<Diagnostic> {
     // Roof in *bytes* per cycle so reduced-precision designs stream
     // proportionally more elements (§VII extension).
     let roof_bytes = (dev.bw_floats_per_cycle(fmax_mhz).floor() as u64) * 4;
@@ -86,12 +70,17 @@ pub fn check_program(prog: &KernelProgram, dev: &FpgaDevice, fmax_mhz: f64) -> V
     for k in &prog.kernels {
         for l in &k.nest.loops {
             if l.extent % l.unroll != 0 {
-                out.push(Violation::NotDivisible {
-                    kernel: k.name.clone(),
-                    var: l.var.name(),
-                    extent: l.extent,
-                    unroll: l.unroll,
-                });
+                out.push(Diagnostic::new(
+                    Lint::NotDivisible,
+                    Span::kernel(k.name.clone()),
+                    format!(
+                        "{}: loop {} extent {} not divisible by factor {} (§IV-J rule 2)",
+                        k.name,
+                        l.var.name(),
+                        l.extent,
+                        l.unroll
+                    ),
+                ));
             }
         }
         let eb = k.nest.precision.bytes();
@@ -101,12 +90,18 @@ pub fn check_program(prog: &KernelProgram, dev: &FpgaDevice, fmax_mhz: f64) -> V
             if matches!(lsu.kind, LsuKind::BurstCoalesced | LsuKind::Replicated) {
                 let bytes = lsu.width_bytes.max(lsu.count * eb);
                 if bytes > roof_bytes {
-                    out.push(Violation::BandwidthRoof {
-                        kernel: k.name.clone(),
-                        buffer: lsu.buffer.clone(),
-                        words_per_cycle: bytes / eb,
-                        roof: roof_bytes / eb,
-                    });
+                    out.push(Diagnostic::new(
+                        Lint::BandwidthRoof,
+                        Span::kernel(k.name.clone()),
+                        format!(
+                            "{}/{}: {} words/cycle exceeds the {}-word bandwidth roof \
+                             (§IV-J rule 1)",
+                            k.name,
+                            lsu.buffer,
+                            bytes / eb,
+                            roof_bytes / eb
+                        ),
+                    ));
                 }
             }
         }

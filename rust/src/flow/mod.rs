@@ -119,6 +119,12 @@ pub struct Accelerator {
     ///
     /// [`PassManager`]: crate::pass::PassManager
     pub pass_trace: crate::pass::PassTrace,
+    /// Static design-rule report ([`CompileSession::analyze`]) for the
+    /// lowered program this accelerator was built from — the
+    /// `diagnostics` section of `report_json`. Always free of Error-level
+    /// findings here (a design that reaches simulation passed legality
+    /// and fit); warnings/notes ride along.
+    pub analysis: crate::analysis::AnalysisReport,
 }
 
 impl Accelerator {

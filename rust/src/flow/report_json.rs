@@ -67,6 +67,10 @@ impl Accelerator {
         if !self.pass_trace.records.is_empty() {
             root.insert("pass_trace".into(), self.pass_trace.to_json());
         }
+        // Static design-rule report (severity counts + every finding with
+        // its FLOW code and span) — legality violations used to be dropped
+        // from the JSON report entirely.
+        root.insert("diagnostics".into(), self.analysis.to_json());
         if let Some(q) = &self.quant {
             let mut m = BTreeMap::new();
             m.insert("precision".into(), s(q.precision.name()));
@@ -205,6 +209,10 @@ mod tests {
         // fp32 compilations report their precision and carry no quant block.
         assert_eq!(parsed.get("precision").unwrap().as_str(), Some("fp32"));
         assert!(parsed.get("quant").is_none());
+        // A compiled design carries its analyzer report with zero errors.
+        let diags = parsed.get("diagnostics").unwrap();
+        assert_eq!(diags.get("errors").unwrap().as_u64(), Some(0));
+        assert!(diags.get("items").unwrap().as_arr().is_some());
     }
 
     #[test]

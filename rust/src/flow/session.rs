@@ -58,7 +58,11 @@ pub enum CompileError {
     /// The input graph failed structural validation.
     InvalidGraph(String),
     /// The factor plan violates the §IV-J legality rules on this target.
-    IllegalPlan { network: String, violations: Vec<String> },
+    IllegalPlan { network: String, violations: Vec<crate::analysis::Diagnostic> },
+    /// The static design-rule analyzer found Error-level diagnostics
+    /// ([`CompileSession::analyze`]); the design would deadlock, overflow
+    /// or fail synthesis.
+    Analysis { network: String, diagnostics: Vec<crate::analysis::Diagnostic> },
     /// A stage was requested before the stage it consumes.
     StageOrder { wanted: &'static str, missing: &'static str },
     /// The AOC model failed to route the design (rule 3 / congestion).
@@ -82,7 +86,17 @@ impl std::fmt::Display for CompileError {
             CompileError::IllegalPlan { network, violations } => write!(
                 f,
                 "illegal factor plan for {network}: {}",
-                violations.join("; ")
+                violations.iter().map(|v| v.message.as_str()).collect::<Vec<_>>().join("; ")
+            ),
+            CompileError::Analysis { network, diagnostics } => write!(
+                f,
+                "design-rule analysis failed for {network}: {}",
+                diagnostics
+                    .iter()
+                    .filter(|d| d.severity() == crate::analysis::Severity::Error)
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join("; ")
             ),
             CompileError::StageOrder { wanted, missing } => {
                 write!(f, "cannot {wanted} before {missing} has run")
@@ -541,7 +555,7 @@ impl CompileSession {
             if !violations.is_empty() {
                 return Err(CompileError::IllegalPlan {
                     network: graph.name.clone(),
-                    violations: violations.iter().map(|v| v.to_string()).collect(),
+                    violations,
                 }
                 .into());
             }
@@ -600,6 +614,38 @@ impl CompileSession {
         self.simulate()
     }
 
+    /// Analysis stage: lower (if needed) and run the static design-rule
+    /// analyzer ([`crate::analysis`]) over the scheduled program — channel
+    /// deadlock, accumulator overflow, resource budget, structural and
+    /// pass-trace consistency lints. Sits between lowering and synthesis:
+    /// Error-level findings return a typed [`CompileError::Analysis`]
+    /// (the design must not synthesize); warnings and notes come back in
+    /// the report for the caller to judge (`fpga-flow check
+    /// --deny warnings` makes warnings fatal too).
+    ///
+    /// ```
+    /// use tvm_fpga_flow::flow::{Compiler, Mode};
+    /// use tvm_fpga_flow::graph::models;
+    ///
+    /// let compiler = Compiler::default();
+    /// let mut session = compiler.graph(&models::lenet5()).mode(Mode::Pipelined);
+    /// let report = session.analyze().unwrap();
+    /// assert!(report.is_clean(false));
+    /// ```
+    pub fn analyze(&mut self) -> crate::Result<crate::analysis::AnalysisReport> {
+        self.lower()?;
+        let lowered = self.lowered.as_ref().expect("just lowered");
+        let report = lowered.analyze();
+        if report.count(crate::analysis::Severity::Error) > 0 {
+            return Err(CompileError::Analysis {
+                network: lowered.network.clone(),
+                diagnostics: report.diagnostics,
+            }
+            .into());
+        }
+        Ok(report)
+    }
+
     /// Verification stage: lower (if needed) and differentially check the
     /// scheduled program against the reference executor on `frames`
     /// deterministic frames. Returns the report; callers decide whether a
@@ -655,6 +701,22 @@ impl LoweredProgram {
     pub fn synthesize(&self) -> crate::Result<SynthesizedDesign> {
         let (synthesis, cache_hit) = self.compiler.synthesize_memoized(&self.program)?;
         Ok(SynthesizedDesign { lowered: self.clone(), synthesis, cache_hit })
+    }
+
+    /// Static design-rule analysis of this program (infallible form: the
+    /// full report, whatever its severity counts — the session-level
+    /// [`CompileSession::analyze`] turns Error findings into a typed
+    /// [`CompileError::Analysis`]). Independent of synthesis; the
+    /// pass-trace consistency lints run against this lowering's trace.
+    pub fn analyze(&self) -> crate::analysis::AnalysisReport {
+        let device = &self.compiler.target.device;
+        crate::analysis::analyze(
+            &self.graph,
+            &self.program,
+            device,
+            device.legality_clock_mhz,
+            Some(&self.trace),
+        )
     }
 
     /// Differentially verify this program against the graph-level oracle
@@ -728,6 +790,7 @@ impl SynthesizedDesign {
             precision: l.precision,
             quant: l.quant.clone(),
             pass_trace: l.trace.clone(),
+            analysis: l.analyze(),
         })
     }
 }

@@ -45,6 +45,12 @@
 //!   datapath precision* (the paper's future-work §IV-J automated);
 //!   reports its synthesis-cache hit rate and an
 //!   accuracy-vs-FPS-vs-resources Pareto front.
+//! * [`analysis`] — static design-rule analyzer: channel-deadlock,
+//!   accumulator-overflow, resource-budget, structural and pass-trace
+//!   consistency diagnostics with stable `FLOW0xx` lint codes, run as the
+//!   `analyze` stage between lowering and synthesis
+//!   ([`flow::CompileSession::analyze`], `fpga-flow check`,
+//!   `report_json.diagnostics`).
 //! * [`verify`] — differential verification that the pass pipeline is
 //!   semantics-preserving: a functional interpreter executes the lowered
 //!   [`codegen::KernelProgram`] (channel dataflow, fused epilogues,
@@ -131,6 +137,7 @@
 //! [`flow::Compiler::compile`] / [`flow::Compiler::compile_with`], which
 //! take the same arguments as the shims they replace.
 
+pub mod analysis;
 pub mod aoc;
 pub mod codegen;
 pub mod coordinator;

@@ -8,6 +8,9 @@
 //! fpga-flow verify   --net lenet5 --frames 16          # differential check
 //!                    [--mode pipelined|folded] [--precision f32|fp16|int8]
 //!                    [--seed N] [--quick]
+//! fpga-flow check    --net lenet5 [--mode pipelined|folded] [--base]
+//!                    [--precision int8|fp16] [--deny warnings] [--json]
+//!                    # static design-rule analysis (FLOW lints)
 //! fpga-flow targets                     # list registered device targets
 //! fpga-flow report                      # Tables II/III/IV vs the paper
 //! fpga-flow codegen  --net lenet5 [--precision int8]  # dump pseudo-OpenCL
@@ -53,6 +56,7 @@ fn main() {
         "compile" => cmd_compile(&args),
         "explain" => cmd_explain(&args),
         "verify" => cmd_verify(&args),
+        "check" => cmd_check(&args),
         "targets" => cmd_targets(),
         "report" => cmd_report(),
         "codegen" => cmd_codegen(&args),
@@ -93,6 +97,13 @@ fn print_help() {
                    canonical pipeline (prefixes + leave-one-out), both\n\
                    modes, all precisions; int8 must be bit-exact; failing\n\
                    cases shrink to a reproducer (docs/VERIFICATION.md)\n\
+         check     --net <n> [--target <t>] [--mode pipelined|folded] [--base]\n\
+                   [--precision int8|fp16] [--deny warnings] [--json]\n\
+                   static design-rule analysis before synthesis: channel\n\
+                   deadlock, accumulator overflow, resource budget and\n\
+                   pass-trace consistency lints (stable FLOW0xx codes,\n\
+                   docs/ANALYSIS.md); exits nonzero on errors (and on\n\
+                   warnings under --deny warnings)\n\
          targets   list registered device targets (legality clock, roof, DSPs)\n\
          report    Tables II/III/IV, ours vs the paper\n\
          codegen   --net <n> [--target <t>] [--precision int8]  dump pseudo-OpenCL\n\
@@ -420,6 +431,52 @@ fn cmd_verify(args: &Args) -> tvm_fpga_flow::Result<()> {
         ran
     );
     println!("all {ran} scenarios agree with the reference executor.");
+    Ok(())
+}
+
+/// `fpga-flow check`: lower the network and run the static design-rule
+/// analyzer — every finding prints as `severity[FLOWnnn] message`
+/// (catalog: docs/ANALYSIS.md). Exits nonzero when the report carries
+/// Error-level findings, or any Warning under `--deny warnings`. A plan
+/// the §IV-J legality gate rejects still produces a diagnostics report
+/// (FLOW020/FLOW021) instead of a bare compile error.
+fn cmd_check(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::analysis::AnalysisReport;
+    use tvm_fpga_flow::flow::CompileError;
+
+    let g = net_arg(args)?;
+    let compiler = compiler_arg(args)?;
+    let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
+    let cfg = if level == OptLevel::Base { OptConfig::base() } else { OptConfig::optimized() };
+    let mut session = compiler.graph(&g).mode(mode_arg(args)).opts(cfg);
+    if let Some(p) = precision_arg(args)? {
+        if p != Precision::F32 {
+            session = session.with_quantization(quant_cfg_args(args, p)?);
+        }
+    }
+    let deny = matches!(args.opt("deny"), Some("warnings"));
+    let report = match session.lower() {
+        Ok(lowered) => lowered.analyze(),
+        Err(e) => match e.downcast::<CompileError>() {
+            Ok(CompileError::IllegalPlan { violations, .. }) => {
+                AnalysisReport { diagnostics: violations }
+            }
+            Ok(other) => return Err(other.into()),
+            Err(e) => return Err(e),
+        },
+    };
+    if args.has_flag("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        println!("design-rule check — {} on {}", g.name, compiler.target.name);
+        print!("{}", report.render());
+    }
+    anyhow::ensure!(
+        report.is_clean(deny),
+        "design-rule check failed for {}{}",
+        g.name,
+        if deny { " (--deny warnings)" } else { "" }
+    );
     Ok(())
 }
 

@@ -442,7 +442,7 @@ impl SchedulePass for SparsifyWeights {
     }
 
     fn precondition(&self, _ctx: &ScheduleCtx) -> Result<(), String> {
-        legality::sparsity_domain(self.density)
+        legality::sparsity_domain(self.density).map_err(|d| d.message)
     }
 
     fn run(&self, ctx: &ScheduleCtx, prog: &mut KernelProgram, diff: &mut PassDiff) -> usize {
@@ -844,10 +844,11 @@ impl SchedulePass for CachedWrites {
 
 /// Widest input feature map (in elements per row; flat inputs count their
 /// full length) any of `layers` reads — what the double-buffered ifmap
-/// line strip of a folded kernel must span. Shared with the `verify`
-/// interpreter's stash-capacity check so the sizing code and its checker
-/// agree on what "the strip" means (the check still catches sizing-formula
-/// bugs like a hard-coded on-chip width).
+/// line strip of a folded kernel must span. Shared with the analyzer's
+/// stash-capacity lint (`analysis::structure::stash_capacity`, FLOW032 —
+/// also what the `verify` interpreter delegates to) so the sizing code and
+/// its checker agree on what "the strip" means (the check still catches
+/// sizing-formula bugs like a hard-coded on-chip width).
 pub(crate) fn max_input_width(graph: &Graph, layers: &[usize]) -> u64 {
     layers
         .iter()

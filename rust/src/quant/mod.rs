@@ -49,7 +49,7 @@ pub use accuracy::AccuracyReport;
 pub use calibrate::{calibrate, calibrate_analytic, CalibrationTable, Calibrator};
 pub use exec::{argmax, Executor};
 pub use rewrite::{insert_qdq, QuantStats};
-pub use scheme::{f16_round, qmax, QParams, QScheme, Range};
+pub use scheme::{accum_limit, f16_round, qmax, QParams, QScheme, Range};
 
 use crate::graph::Graph;
 use crate::texpr::Precision;

@@ -99,6 +99,18 @@ pub fn qmax(p: Precision) -> Option<i32> {
     }
 }
 
+/// Accumulator magnitude limit of a precision's emitted C accumulator
+/// type ([`Precision::accum_c_type`]): int8 reductions accumulate in a
+/// 32-bit `int`, float datapaths in `float` (no wrap, only saturation —
+/// the analyzer checks their *range* instead). This is what the FLOW010
+/// overflow proof compares the worst-case `R · qmax²` bound against.
+pub fn accum_limit(p: Precision) -> Option<i64> {
+    match p {
+        Precision::Int8 => Some(i32::MAX as i64),
+        Precision::F16 | Precision::F32 => None,
+    }
+}
+
 /// Quantization parameters of one tensor: a symmetric grid per scale
 /// group (1 group = per-tensor, N groups = per-channel).
 ///

@@ -26,7 +26,7 @@
 //!
 //! [`LoopNest::precision`]: crate::texpr::LoopNest
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeMap;
 
 use crate::codegen::{Kernel, KernelProgram};
 use crate::graph::{Activation, Graph, NodeId, Op};
@@ -40,7 +40,7 @@ use crate::quant::exec::{
     activate, channels_of, pool, quantize_operands, Executor, QuantizedOperands,
 };
 use crate::quant::scheme::{f16_round, QParams, QScheme};
-use crate::texpr::{Epilogue, LoopVar, MemSpace, Precision};
+use crate::texpr::{Epilogue, Precision};
 
 /// One interpreted frame: the logits plus every intermediate the program
 /// produced (indexed by graph node id) for mismatch localization.
@@ -111,171 +111,18 @@ impl<'a> Interpreter<'a> {
     // -- structural validation ---------------------------------------------
 
     fn check_structure(&mut self) {
-        let mut v = Vec::new();
-        let prog = self.program;
-        let g = self.graph;
-
-        // Autorun legality (§IV-F): no global arguments, no weights.
-        for k in &prog.kernels {
-            if k.autorun {
-                if !k.autorun_eligible() {
-                    v.push(format!("kernel {} is autorun but accesses global memory", k.name));
-                }
-                if g.nodes[k.layers[0]].op.has_weights() {
-                    v.push(format!("kernel {} is autorun but its op carries weights", k.name));
-                }
-            }
-        }
-
-        // Channel endpoints, element types and §IV-J depth coverage.
-        for ch in &prog.channels {
-            if ch.from_kernel >= prog.kernels.len() || ch.to_kernel >= prog.kernels.len() {
-                v.push(format!("channel {} has a dangling endpoint", ch.name));
-                continue;
-            }
-            let producer = &prog.kernels[ch.from_kernel];
-            if ch.elem != producer.nest.precision {
-                v.push(format!(
-                    "channel {} carries {} but its producer {} streams {}",
-                    ch.name,
-                    ch.elem.name(),
-                    producer.name,
-                    producer.nest.precision.name()
-                ));
-            }
-            let out_node = self.output_node(producer.layers[0]);
-            let produced = g.nodes[out_node].shape.elems() as u64;
-            if ch.depth < produced {
-                v.push(format!(
-                    "channel {} depth {} cannot buffer {}'s {}-element feature map (§IV-J)",
-                    ch.name, ch.depth, producer.name, produced
-                ));
-            }
-        }
-
-        // Channel topology must mirror the graph's cross-kernel edges.
-        if !prog.channels.is_empty() {
-            let mut have: BTreeSet<(usize, usize)> = BTreeSet::new();
-            for ch in &prog.channels {
-                have.insert((ch.from_kernel, ch.to_kernel));
-            }
-            let mut want: BTreeSet<(usize, usize)> = BTreeSet::new();
-            for k in &prog.kernels {
-                for &layer in &k.layers {
-                    for &inp in &g.nodes[layer].inputs {
-                        if let Some(src) = self.producing_kernel(inp) {
-                            if src != k.id {
-                                want.insert((src, k.id));
-                            }
-                        }
-                    }
-                }
-            }
-            for &(a, b) in want.difference(&have) {
-                v.push(format!(
-                    "graph edge {} → {} has no channel",
-                    prog.kernels[a].name, prog.kernels[b].name
-                ));
-            }
-            for &(a, b) in have.difference(&want) {
-                v.push(format!(
-                    "channel {} → {} matches no graph edge",
-                    prog.kernels[a].name, prog.kernels[b].name
-                ));
-            }
-        }
-
-        // Every non-layout graph node must survive lowering: either it
-        // owns a kernel or it is an absorbed epilogue of one.
-        let mut covered: BTreeSet<NodeId> = self.map.keys().copied().collect();
-        for chain in self.chains.values() {
-            covered.extend(chain.iter().copied());
-        }
-        for n in g.topo() {
-            if matches!(n.op, Op::Input | Op::Flatten | Op::Transform) {
-                continue;
-            }
-            if !covered.contains(&n.id) {
-                v.push(format!("node {} ({}) was lost by lowering", n.name, n.op.mnemonic()));
-            }
-        }
-
-        // The recorded epilogue/absorbed chain of each kernel must match
-        // the graph for its representative layer. (Member layers of a
-        // parameterized group resolve their chains at dispatch.)
-        for k in &prog.kernels {
-            let rep = k.layers[0];
-            let chain = &self.chains[&rep];
-            if &k.absorbed != chain {
-                v.push(format!(
-                    "kernel {} records absorbed nodes {:?} but the graph chain is {chain:?}",
-                    k.name, k.absorbed
-                ));
-            }
-            let mut expected = expected_intrinsic(&g.nodes[rep].op);
-            for &a in chain {
-                expected.push(match g.nodes[a].op {
-                    Op::BatchNorm => Epilogue::BatchNormFold,
-                    Op::Activate(act) => Epilogue::Activation(act),
-                    _ => continue,
-                });
-            }
-            if k.nest.epilogue != expected {
-                v.push(format!(
-                    "kernel {} epilogue {:?} diverges from the graph-implied {:?}",
-                    k.name, k.nest.epilogue, expected
-                ));
-            }
-        }
-
-        // Folded tile stashes must hold at least the strip they stage:
-        // double-buffered, k input rows at the widest member layer's
-        // actual row width, times the achieved input-channel tile (the
-        // nest's InC unroll — never larger than the plan tile the stash
-        // was sized for). Over-sizing is a cost bug only; under-sizing
-        // (e.g. a hard-coded on-chip width) is flagged here.
-        for k in &prog.kernels {
-            let node = &g.nodes[k.layers[0]];
-            let Some(grp) = node.op.param_group() else { continue };
-            let eb = k.nest.precision.bytes();
-            let t_inner =
-                k.nest.find_loop(LoopVar::InC).map(|l| l.unroll.max(1)).unwrap_or(1);
-            for a in &k.nest.accesses {
-                if a.space == MemSpace::Local && a.buffer == "ifmap" {
-                    let max_w = crate::pass::schedule::max_input_width(g, &k.layers);
-                    let need = 2 * t_inner * grp.kernel as u64 * max_w * eb;
-                    if a.array_bytes < need {
-                        v.push(format!(
-                            "kernel {}: ifmap stash of {} B cannot hold its {} B double-buffered \
-                             line strip",
-                            k.name, a.array_bytes, need
-                        ));
-                    }
-                }
-            }
-        }
-
-        self.violations = v;
-    }
-
-    /// The kernel producing node `id`'s value, climbing through nodes that
-    /// own no kernel (layout skips, fused epilogues) via their first input.
-    fn producing_kernel(&self, mut id: NodeId) -> Option<usize> {
-        loop {
-            if let Some(&k) = self.map.get(&id) {
-                return Some(k);
-            }
-            match self.graph.nodes[id].inputs.first() {
-                Some(&prev) => id = prev,
-                None => return None,
-            }
-        }
-    }
-
-    /// The last node of `host`'s absorbed chain (= the value the kernel's
-    /// output stream actually carries), or `host` itself.
-    fn output_node(&self, host: NodeId) -> NodeId {
-        self.chains.get(&host).and_then(|c| c.last().copied()).unwrap_or(host)
+        // Structural validation is owned by the static analyzer
+        // ([`crate::analysis`]) — autorun legality, channel wiring/depth,
+        // token balance, lost nodes, epilogue/absorbed divergence and the
+        // §IV-H stash-capacity rule are a single implementation there.
+        // The interpreter keeps its legacy message-string surface for
+        // verify reports; cycle detection stays in `build_dispatch` (which
+        // also needs the fallback dispatch order) and is excluded from the
+        // delegated set to avoid double-reporting.
+        self.violations = crate::analysis::structural_violations(self.graph, self.program)
+            .into_iter()
+            .map(|d| d.message)
+            .collect();
     }
 
     // -- dispatch ----------------------------------------------------------

@@ -1,0 +1,119 @@
+//! Golden design-rule-check regression gate.
+//!
+//! Runs the static analyzer (`LoweredProgram::analyze`) over every
+//! evaluation network × execution mode × precision and byte-compares the
+//! JSON report against checked-in goldens under
+//! `rust/tests/goldens/analysis/`. A new or re-ordered lint then surfaces
+//! as a reviewable diff instead of silently changing `fpga-flow check`.
+//!
+//! Blessing: when a golden file is missing (or `UPDATE_GOLDENS=1`), the
+//! test writes the current output and passes — commit the generated
+//! files. CI runs this test and then fails on any dirty/untracked golden
+//! (`git diff` in the `check` job), so drift cannot land silently.
+
+use std::path::PathBuf;
+
+use tvm_fpga_flow::analysis::AnalysisReport;
+use tvm_fpga_flow::flow::{CompileError, Compiler, Mode};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::quant::QuantConfig;
+use tvm_fpga_flow::texpr::Precision;
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/goldens/analysis")
+}
+
+/// Lower and analyze; an illegal plan still yields a diagnostic report
+/// (that is the point of the analyzer), any other failure goldens as an
+/// error object so broken combinations stay pinned too.
+fn report_for(net: &str, mode: Mode, precision: Precision) -> Result<AnalysisReport, String> {
+    let compiler = Compiler::default();
+    let g = models::by_name(net).expect("known network");
+    let mut session = compiler.graph(&g).mode(mode);
+    if precision != Precision::F32 {
+        session = session.with_quantization(QuantConfig::for_precision(precision));
+    }
+    match session.lower() {
+        Ok(lowered) => Ok(lowered.analyze()),
+        Err(e) => match e.downcast::<CompileError>() {
+            Ok(CompileError::IllegalPlan { violations, .. }) => {
+                Ok(AnalysisReport { diagnostics: violations })
+            }
+            Ok(other) => Err(other.to_string()),
+            Err(e) => Err(e.to_string()),
+        },
+    }
+}
+
+fn render(net: &str, mode: Mode, precision: Precision) -> String {
+    match report_for(net, mode, precision) {
+        Ok(report) => report.to_json().to_string(),
+        Err(e) => format!("{{\"error\": \"{e}\"}}"),
+    }
+}
+
+fn check_golden(net: &str, mode: Mode, precision: Precision) {
+    let got = render(net, mode, precision);
+    let dir = goldens_dir();
+    let path = dir.join(format!("{net}_{}_{}.json", mode.name(), precision.name()));
+    let bless = std::env::var("UPDATE_GOLDENS").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(&dir).expect("create goldens dir");
+        std::fs::write(&path, &got).expect("write golden");
+        eprintln!("blessed golden {} — commit it", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    assert_eq!(
+        got,
+        want,
+        "design-rule report drifted from {} — if intentional, re-bless with UPDATE_GOLDENS=1",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_checks_all_networks_modes_precisions() {
+    for net in ["lenet5", "mobilenet_v1", "resnet34"] {
+        for mode in [Mode::Pipelined, Mode::Folded] {
+            for precision in Precision::all() {
+                check_golden(net, mode, precision);
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_configurations_are_error_free_at_every_precision() {
+    // Acceptance gate: the three evaluation networks in their paper
+    // mapping (LeNet pipelined, the big nets folded) must carry zero
+    // error-level diagnostics at f32, fp16, and int8.
+    for (net, mode) in
+        [("lenet5", Mode::Pipelined), ("mobilenet_v1", Mode::Folded), ("resnet34", Mode::Folded)]
+    {
+        for precision in Precision::all() {
+            let report = report_for(net, mode, precision)
+                .unwrap_or_else(|e| panic!("{net} {precision:?}: {e}"));
+            assert_eq!(
+                report.errors().count(),
+                0,
+                "{net} {} {}: {}",
+                mode.name(),
+                precision.name(),
+                report.render()
+            );
+        }
+    }
+}
+
+#[test]
+fn check_reports_are_deterministic() {
+    // The golden gate only works if repeated analyses render identically.
+    for (net, mode) in [("lenet5", Mode::Pipelined), ("resnet34", Mode::Folded)] {
+        for precision in [Precision::F32, Precision::Int8] {
+            let a = render(net, mode, precision);
+            let b = render(net, mode, precision);
+            assert_eq!(a, b, "{net} {} analysis non-deterministic", precision.name());
+        }
+    }
+}

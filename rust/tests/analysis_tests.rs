@@ -1,0 +1,247 @@
+//! Static design-rule analyzer: deliberately broken programs must be
+//! rejected with the documented FLOW lint codes, and analyzer-clean
+//! programs must actually run under the verify interpreter (soundness).
+
+use tvm_fpga_flow::analysis::{self, Lint, Severity};
+use tvm_fpga_flow::codegen::{Channel, KernelProgram};
+use tvm_fpga_flow::device::FpgaDevice;
+use tvm_fpga_flow::flow::patterns::build_with_passes;
+use tvm_fpga_flow::flow::{default_factors, CompileError, Compiler, Mode, OptConfig};
+use tvm_fpga_flow::graph::{models, Activation, Graph, GraphBuilder, Op, Shape};
+use tvm_fpga_flow::quant::{calibrate_analytic, Calibrator, Executor, QScheme};
+use tvm_fpga_flow::texpr::Precision;
+use tvm_fpga_flow::verify::Interpreter;
+
+fn lowered_lenet(mode: Mode) -> (Graph, KernelProgram) {
+    let g = models::lenet5();
+    let plan = default_factors(&g);
+    let built = build_with_passes(&g, mode, &OptConfig::optimized(), &plan);
+    (g, built.program)
+}
+
+fn codes(g: &Graph, prog: &KernelProgram) -> Vec<&'static str> {
+    let dev = FpgaDevice::stratix10sx();
+    analysis::analyze(g, prog, &dev, 250.0, None).diagnostics.iter().map(|d| d.code()).collect()
+}
+
+#[test]
+fn clean_lenet_has_no_errors_in_either_mode() {
+    let dev = FpgaDevice::stratix10sx();
+    for mode in [Mode::Pipelined, Mode::Folded] {
+        let (g, prog) = lowered_lenet(mode);
+        let report = analysis::analyze(&g, &prog, &dev, 250.0, None);
+        assert_eq!(report.errors().count(), 0, "{mode:?}: {}", report.render());
+    }
+}
+
+#[test]
+fn cyclic_channel_topology_is_flow001() {
+    let (g, mut prog) = lowered_lenet(Mode::Pipelined);
+    assert!(!prog.channels.is_empty(), "optimized pipelined LeNet is channelized");
+    // A back-edge from the last kernel to the first closes a cycle over
+    // the whole chain: no kernel can ever fire.
+    prog.channels.push(Channel {
+        name: "back_edge".into(),
+        from_kernel: prog.kernels.len() - 1,
+        to_kernel: 0,
+        depth: 16,
+        elem: Precision::F32,
+    });
+    let codes = codes(&g, &prog);
+    assert!(codes.contains(&"FLOW001"), "expected FLOW001 deadlock, got {codes:?}");
+}
+
+#[test]
+fn self_loop_channel_is_flow001() {
+    let (g, mut prog) = lowered_lenet(Mode::Pipelined);
+    let k = prog.channels[0].from_kernel;
+    prog.channels.push(Channel {
+        name: "self_loop".into(),
+        from_kernel: k,
+        to_kernel: k,
+        depth: 16,
+        elem: Precision::F32,
+    });
+    let codes = codes(&g, &prog);
+    assert!(codes.contains(&"FLOW001"), "{codes:?}");
+}
+
+#[test]
+fn unbalanced_channel_reads_are_flow002() {
+    let (g, mut prog) = lowered_lenet(Mode::Pipelined);
+    // Dispatch the consumer's layer twice per frame: it now reads the
+    // producer's stream twice while the producer writes it once.
+    let victim = prog.channels[0].to_kernel;
+    let dup = prog.kernels[victim].layers[0];
+    prog.kernels[victim].layers.push(dup);
+    let dev = FpgaDevice::stratix10sx();
+    let report = analysis::analyze(&g, &prog, &dev, 250.0, None);
+    let imbalance: Vec<_> =
+        report.diagnostics.iter().filter(|d| d.code() == "FLOW002").collect();
+    assert!(!imbalance.is_empty(), "expected FLOW002, got {}", report.render());
+    assert_eq!(imbalance[0].severity(), Severity::Error);
+    assert!(imbalance[0].span.channel.is_some(), "token lints carry the channel span");
+}
+
+#[test]
+fn under_depth_channel_is_flow003() {
+    let (g, mut prog) = lowered_lenet(Mode::Pipelined);
+    prog.channels[0].depth = 1;
+    let codes = codes(&g, &prog);
+    assert!(codes.contains(&"FLOW003"), "{codes:?}");
+}
+
+#[test]
+fn channel_elem_mismatch_is_flow005() {
+    let (g, mut prog) = lowered_lenet(Mode::Pipelined);
+    prog.channels[0].elem = Precision::Int8;
+    let codes = codes(&g, &prog);
+    assert!(codes.contains(&"FLOW005"), "{codes:?}");
+}
+
+#[test]
+fn rewired_channel_is_missing_plus_orphan() {
+    let (g, mut prog) = lowered_lenet(Mode::Pipelined);
+    let last = prog.kernels.len() - 1;
+    prog.channels[0].to_kernel = if prog.channels[0].to_kernel == last { 0 } else { last };
+    let codes = codes(&g, &prog);
+    assert!(codes.contains(&"FLOW006"), "graph edge lost its channel: {codes:?}");
+    assert!(codes.contains(&"FLOW007"), "rewired channel matches no edge: {codes:?}");
+}
+
+/// A Dense reduction of `in_features` at int8 accumulates up to
+/// `in_features × 127²` in a 32-bit int.
+fn dense_net(in_features: usize) -> Graph {
+    let (mut b, x) = GraphBuilder::new("overflow_net", Shape::Flat(in_features));
+    let d = b.add(
+        "wide_dense",
+        Op::Dense { out_features: 8, bias: true, activation: Activation::Relu },
+        &[x],
+    );
+    b.finish(d)
+}
+
+#[test]
+fn int8_accumulator_overflow_is_flow010() {
+    // 200k × 127² ≈ 3.2e9 > i32::MAX ≈ 2.1e9: the accumulator can wrap.
+    let g = dense_net(200_000);
+    let plan = default_factors(&g);
+    let cfg = OptConfig::optimized().with_precision(Precision::Int8);
+    let built = build_with_passes(&g, Mode::Folded, &cfg, &plan);
+    let dev = FpgaDevice::stratix10sx();
+    let report = analysis::analyze(&g, &built.program, &dev, 250.0, None);
+    let overflow: Vec<_> =
+        report.diagnostics.iter().filter(|d| d.code() == "FLOW010").collect();
+    assert!(!overflow.is_empty(), "expected FLOW010, got {}", report.render());
+    assert_eq!(overflow[0].severity(), Severity::Error);
+    assert_eq!(overflow[0].lint, Lint::AccumOverflow);
+    // The span names the exact offending layer.
+    assert_eq!(overflow[0].span.node.as_deref(), Some("wide_dense"), "{:?}", overflow[0].span);
+    // The same design at f32 is not an overflow risk.
+    let f32_built = build_with_passes(&g, Mode::Folded, &OptConfig::optimized(), &plan);
+    let f32_report = analysis::analyze(&g, &f32_built.program, &dev, 250.0, None);
+    assert!(!f32_report.diagnostics.iter().any(|d| d.code() == "FLOW010"));
+}
+
+#[test]
+fn int8_accumulator_margin_is_flow011_warning() {
+    // 100k × 127² ≈ 1.6e9: under the limit but within 2× of it.
+    let g = dense_net(100_000);
+    let plan = default_factors(&g);
+    let cfg = OptConfig::optimized().with_precision(Precision::Int8);
+    let built = build_with_passes(&g, Mode::Folded, &cfg, &plan);
+    let dev = FpgaDevice::stratix10sx();
+    let report = analysis::analyze(&g, &built.program, &dev, 250.0, None);
+    let margin: Vec<_> = report.diagnostics.iter().filter(|d| d.code() == "FLOW011").collect();
+    assert!(!margin.is_empty(), "expected FLOW011, got {}", report.render());
+    assert_eq!(margin[0].severity(), Severity::Warning);
+    assert!(!report.diagnostics.iter().any(|d| d.code() == "FLOW010"));
+}
+
+#[test]
+fn lenet_int8_accumulators_are_proven_safe() {
+    // LeNet's deepest reduction (400-element dense) is far from wrapping:
+    // the proof should produce neither the error nor the margin warning.
+    let g = models::lenet5();
+    let plan = default_factors(&g);
+    let cfg = OptConfig::optimized().with_precision(Precision::Int8);
+    let built = build_with_passes(&g, Mode::Pipelined, &cfg, &plan);
+    let dev = FpgaDevice::stratix10sx();
+    let report = analysis::analyze(&g, &built.program, &dev, 250.0, None);
+    assert!(
+        !report.diagnostics.iter().any(|d| matches!(d.code(), "FLOW010" | "FLOW011")),
+        "{}",
+        report.render()
+    );
+}
+
+#[test]
+fn session_analyze_rejects_broken_designs_with_typed_error() {
+    // Through the staged API: an analyzer-clean design returns the report…
+    let compiler = Compiler::default();
+    let report =
+        compiler.graph(&models::lenet5()).mode(Mode::Pipelined).analyze().expect("clean");
+    assert!(report.is_clean(false), "{}", report.render());
+    // …and an overflow-prone one comes back as CompileError::Analysis
+    // carrying the FLOW010 diagnostics.
+    let g = dense_net(200_000);
+    let err = compiler
+        .graph(&g)
+        .mode(Mode::Folded)
+        .opts(OptConfig::optimized().with_precision(Precision::Int8))
+        .analyze()
+        .unwrap_err();
+    match err.downcast_ref::<CompileError>() {
+        Some(CompileError::Analysis { network, diagnostics }) => {
+            assert_eq!(network, "overflow_net");
+            assert!(diagnostics.iter().any(|d| d.code() == "FLOW010"), "{diagnostics:?}");
+        }
+        other => panic!("wrong error variant: {other:?}"),
+    }
+}
+
+#[test]
+fn analyzer_clean_programs_run_under_the_interpreter() {
+    // Soundness cross-check: every (mode × precision × level) lowering of
+    // LeNet the analyzer passes must execute to completion under the
+    // verify interpreter on seeded frames — "clean" must mean "runnable".
+    let g = models::lenet5();
+    let plan = default_factors(&g);
+    let dev = FpgaDevice::stratix10sx();
+    let exec = Executor::new(&g);
+    let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+    let mut checked = 0usize;
+    for mode in [Mode::Pipelined, Mode::Folded] {
+        for precision in Precision::all() {
+            for base_cfg in [OptConfig::base(), OptConfig::optimized()] {
+                let cfg = base_cfg.with_precision(precision);
+                let built = build_with_passes(&g, mode, &cfg, &plan);
+                let report =
+                    analysis::analyze(&g, &built.program, &dev, 250.0, Some(&built.trace));
+                assert_eq!(
+                    report.errors().count(),
+                    0,
+                    "{mode:?} {precision:?}: {}",
+                    report.render()
+                );
+                let itp = Interpreter::new(
+                    &g,
+                    &built.program,
+                    &exec,
+                    &table,
+                    QScheme::PerChannel,
+                    precision,
+                );
+                for seed in [0x5EED_0001u64, 0x5EED_0002] {
+                    let frames = tvm_fpga_flow::verify::frames_for(&g, 1, seed);
+                    let run = itp.run_frame(&frames[0]).unwrap_or_else(|e| {
+                        panic!("{mode:?} {precision:?}: analyzer-clean but stuck: {e}")
+                    });
+                    assert!(!run.logits.is_empty());
+                }
+                checked += 1;
+            }
+        }
+    }
+    assert_eq!(checked, 12);
+}

@@ -81,7 +81,10 @@ fn illegal_plan_is_a_typed_error() {
     match as_compile_error(&err) {
         CompileError::IllegalPlan { network, violations } => {
             assert_eq!(network, "resnet34");
-            assert!(violations.iter().any(|v| v.contains("bandwidth roof")), "{violations:?}");
+            assert!(
+                violations.iter().any(|v| v.message.contains("bandwidth roof")),
+                "{violations:?}"
+            );
         }
         other => panic!("wrong variant: {other:?}"),
     }
