@@ -510,12 +510,33 @@ pub fn explore_precisions(
     budget_per_group: usize,
     precisions: &[Precision],
 ) -> crate::Result<PrecisionFront> {
+    explore_precisions_measured(compiler, graph, mode, budget_per_group, precisions, 0)
+}
+
+/// [`explore_precisions`] with *measured* accuracy: when `frames > 0` and
+/// the network has a representative dataset, every quantized leg
+/// calibrates on real frames and reports empirical held-out top-1 loss
+/// (`estimated: false`) instead of the analytic noise model. The sweep is
+/// affordable because calibration and measurement run arena-backed
+/// ([`crate::quant::calibrate_in`] / `accuracy::measure_in`) — one
+/// executor build plus zero steady-state allocations per frame.
+/// `frames == 0`, or a network without a dataset, keeps the analytic
+/// estimate (exactly [`explore_precisions`]).
+pub fn explore_precisions_measured(
+    compiler: &Compiler,
+    graph: &Graph,
+    mode: Mode,
+    budget_per_group: usize,
+    precisions: &[Precision],
+    frames: usize,
+) -> crate::Result<PrecisionFront> {
     // An fp32-only sweep must reproduce exactly what `compile` builds (raw
     // graph). As soon as a quantized leg participates, the fp32 baseline
     // runs the same graph-pass pipeline the quantized legs get, so the
     // front compares precision against precision — not BN-fold and DCE
     // smuggled in on one side.
     let comparing = precisions.iter().any(|&p| p != Precision::F32);
+    let measured = frames > 0 && crate::data::for_network(&graph.name, 1, 0).is_some();
     let mut results: Vec<(Precision, DseResult)> = Vec::with_capacity(precisions.len());
     for &p in precisions {
         let cfg = OptConfig::optimized().with_precision(p);
@@ -528,7 +549,12 @@ pub fn explore_precisions(
             };
             delta_pp = 0.0;
         } else {
-            let prep = quant::prepare(graph, &QuantConfig::for_precision(p))?;
+            let quant_cfg = if measured {
+                QuantConfig::for_precision(p).with_data(frames)
+            } else {
+                QuantConfig::for_precision(p)
+            };
+            let prep = quant::prepare(graph, &quant_cfg)?;
             delta_pp = prep.report.accuracy.delta_pp;
             eval_graph = prep.graph;
         }
@@ -758,6 +784,44 @@ mod tests {
                 assert!(i == j || !o.dominates(p), "front point {i} dominated by {j}");
             }
         }
+    }
+
+    #[test]
+    fn measured_precision_front_uses_real_frames() {
+        let compiler = Compiler::default();
+        let front = explore_precisions_measured(
+            &compiler,
+            &models::lenet5(),
+            Mode::Pipelined,
+            4,
+            &[Precision::F32, Precision::Int8],
+            8,
+        )
+        .unwrap();
+        assert_eq!(front.results.len(), 2);
+        assert!(!front.pareto.is_empty());
+        // Measured int8 loss is the empirical held-out number, bounded
+        // like the analytic band.
+        assert!(front.at(Precision::Int8).all(|p| p.accuracy_delta_pp < 25.0));
+        // frames == 0 degenerates to the analytic sweep.
+        let analytic = explore_precisions_measured(
+            &compiler,
+            &models::lenet5(),
+            Mode::Pipelined,
+            4,
+            &[Precision::F32, Precision::Int8],
+            0,
+        )
+        .unwrap();
+        let plain = explore_precisions(
+            &compiler,
+            &models::lenet5(),
+            Mode::Pipelined,
+            4,
+            &[Precision::F32, Precision::Int8],
+        )
+        .unwrap();
+        assert_eq!(analytic.pareto.len(), plain.pareto.len());
     }
 
     #[test]

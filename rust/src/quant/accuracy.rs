@@ -15,9 +15,10 @@
 
 use crate::graph::Graph;
 use crate::texpr::Precision;
+use crate::util::scratch::Scratch;
 
 use super::calibrate::CalibrationTable;
-use super::exec::{argmax, Executor};
+use super::exec::{argmax, Executor, FastExecutor};
 use super::scheme::{qmax, QScheme};
 
 /// Top-1 fidelity of a quantized datapath vs the f32 reference.
@@ -58,6 +59,22 @@ pub fn measure(
     scheme: QScheme,
     frames: usize,
 ) -> AccuracyReport {
+    measure_in(graph, table, precision, scheme, frames, &mut Scratch::new())
+}
+
+/// [`measure`] over a caller-owned [`Scratch`] arena: both executors are
+/// built once (weights quantized once, buffers checked out once) and run
+/// the whole held-out sweep allocation-free — what lets the precision DSE
+/// afford realistic frame counts per design point. Bit-identical to the
+/// allocating baseline (the fast path is, per executor, bit-exact).
+pub fn measure_in(
+    graph: &Graph,
+    table: &CalibrationTable,
+    precision: Precision,
+    scheme: QScheme,
+    frames: usize,
+    scratch: &mut Scratch,
+) -> AccuracyReport {
     if precision == Precision::F32 {
         return AccuracyReport::exact();
     }
@@ -66,14 +83,18 @@ pub fn measure(
         return estimate(graph, table, precision, scheme);
     };
     let exec = Executor::new(graph);
+    let mut fref = FastExecutor::reference(&exec, true, scratch);
+    let mut fq = FastExecutor::quantized(&exec, table, precision, scheme, true, scratch);
     let mut agree = 0usize;
     for i in 0..frames {
-        let f = exec.forward(data.frame(i), |_, _| {});
-        let q = exec.forward_quantized(data.frame(i), table, precision, scheme);
-        if argmax(&f) == argmax(&q) {
+        let f = argmax(fref.forward(data.frame(i)));
+        let q = argmax(fq.forward(data.frame(i)));
+        if f == q {
             agree += 1;
         }
     }
+    fref.release(scratch);
+    fq.release(scratch);
     let top1_agreement = agree as f64 / frames as f64;
     AccuracyReport {
         top1_agreement,

@@ -17,8 +17,9 @@
 use std::collections::BTreeMap;
 
 use crate::graph::{Activation, Graph, NodeId, Op};
+use crate::util::scratch::Scratch;
 
-use super::exec::Executor;
+use super::exec::{Executor, FastExecutor};
 use super::scheme::Range;
 
 /// Range-selection policy.
@@ -179,16 +180,35 @@ pub fn calibrate(
     frames: usize,
     method: Calibrator,
 ) -> CalibrationTable {
+    calibrate_in(graph, batch, frames, method, &mut Scratch::new())
+}
+
+/// [`calibrate`] over a caller-owned [`Scratch`] arena. Executor state
+/// (synthetic weights, per-node activation buffers) is built **once** and
+/// reused across the whole frame loop — nothing is constructed or heap-
+/// allocated per frame, which is what lets default calibration frame
+/// counts be raised without blowing the wall-clock budget
+/// (`calibration_is_identical_through_the_fast_path` pins the results to
+/// the allocating path bit-for-bit).
+pub fn calibrate_in(
+    graph: &Graph,
+    batch: &crate::data::Batch,
+    frames: usize,
+    method: Calibrator,
+    scratch: &mut Scratch,
+) -> CalibrationTable {
     let exec = Executor::new(graph);
+    let mut fast = FastExecutor::reference(&exec, false, scratch);
     let mut hists: Vec<AbsHist> = (0..graph.nodes.len()).map(|_| AbsHist::new()).collect();
     let frames = frames.min(batch.frames()).max(1);
     for i in 0..frames {
-        exec.forward(batch.frame(i), |id, act| {
+        fast.forward_observed(batch.frame(i), |id, act| {
             for &v in act {
                 hists[id].observe(v as f64);
             }
         });
     }
+    fast.release(scratch);
     let mut table = CalibrationTable {
         network: graph.name.clone(),
         method,
@@ -348,6 +368,35 @@ mod tests {
             assert!(!t.weight_ranges(n.id).is_empty(), "{}", n.name);
         }
         assert_eq!(t.frames, 4);
+    }
+
+    #[test]
+    fn calibration_is_identical_through_the_fast_path() {
+        // Satellite regression for the hoisted executor construction:
+        // calibrate() now observes through the non-allocating FastExecutor.
+        // Rebuild the table the old way (allocating Executor::forward per
+        // frame) and demand bit-identical ranges, σ and weight ranges.
+        let g = models::lenet5();
+        let data = crate::data::mnist_like(6, 32, 5);
+        for method in [Calibrator::MinMax, Calibrator::Percentile(99.5)] {
+            let fast = calibrate(&g, &data, 6, method);
+            let exec = Executor::new(&g);
+            let mut hists: Vec<AbsHist> = (0..g.nodes.len()).map(|_| AbsHist::new()).collect();
+            for i in 0..6 {
+                exec.forward(data.frame(i), |id, act| {
+                    for &v in act {
+                        hists[id].observe(v as f64);
+                    }
+                });
+            }
+            for n in g.topo() {
+                assert_eq!(fast.activation(n.id), hists[n.id].range(method), "{}", n.name);
+                assert_eq!(fast.activation_std(n.id), hists[n.id].std().max(1e-9), "{}", n.name);
+                if n.op.is_compute() {
+                    assert_eq!(fast.weight_ranges(n.id), exec.weight_channel_ranges(n.id));
+                }
+            }
+        }
     }
 
     #[test]

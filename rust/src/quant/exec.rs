@@ -17,10 +17,22 @@
 //!   integer grid (int8: quantized operands, i64 accumulation, rescale) or
 //!   through fp16 rounding, everything else in f32 — the §VII
 //!   reduced-precision datapath, value-accurate.
+//!
+//! [`Executor`] allocates fresh buffers per node per frame — it is the
+//! *semantic baseline*. The hot paths (calibration, accuracy measurement,
+//! differential verification) run on [`FastExecutor`] instead: the same
+//! traversal over non-allocating `*_into` kernel cores with
+//! [`Scratch`]-arena-owned buffers, frame-invariant operand caches
+//! (quantized/fp16-rounded weights) and fused conv→bn→relu epilogue
+//! chains — bit-identical to the baseline by construction
+//! (`rust/tests/fastpath_equivalence.rs`) and allocation-free at steady
+//! state (`rust/tests/alloc_regression.rs`). See docs/ARCHITECTURE.md
+//! ("Host-executor fast path").
 
 use crate::graph::{Activation, Graph, NodeId, Op, Shape};
 use crate::texpr::Precision;
 use crate::util::rng::Rng;
+use crate::util::scratch::Scratch;
 
 use super::calibrate::CalibrationTable;
 use super::scheme::{f16_round, QParams, QScheme, Range};
@@ -412,8 +424,21 @@ pub(crate) fn quantize_operands(
     weight_ranges: &[Range],
     scheme: QScheme,
 ) -> QuantizedOperands {
-    let xq = QParams::per_tensor(act_range, Precision::Int8);
-    let wq = match scheme {
+    let prep = int8_prep(weights, act_range, weight_ranges, scheme);
+    QuantizedOperands {
+        qx: x.iter().map(|&v| prep.xq.quantize(v as f64, 0)).collect(),
+        qw: prep.qw,
+        sx: prep.sx,
+        wq: prep.wq,
+    }
+}
+
+/// Weight-grid selection under `scheme`: per-channel when asked for and
+/// ranges exist, otherwise one per-tensor grid over the merged range.
+/// Factored out so the per-frame [`quantize_operands`] and the
+/// frame-invariant [`int8_prep`] provably build identical grids.
+pub(crate) fn weight_grid(weight_ranges: &[Range], scheme: QScheme) -> QParams {
+    match scheme {
         QScheme::PerChannel if !weight_ranges.is_empty() => {
             QParams::per_channel(weight_ranges, Precision::Int8)
         }
@@ -421,18 +446,64 @@ pub(crate) fn quantize_operands(
             let whole = weight_ranges.iter().fold(Range::EMPTY, |a, r| a.merge(r));
             QParams::per_tensor(whole, Precision::Int8)
         }
-    };
+    }
+}
+
+/// Frame-invariant half of the int8 operand preparation: quantized
+/// weights plus both grids. Built once per node (weights and calibrated
+/// ranges never change between frames); only the activation quantization
+/// remains per-frame ([`quantize_into`]).
+///
+/// Deliberately does *not* pre-multiply `sx * wq.scale(o)` into one
+/// factor: f64 multiplication is non-associative, and the baseline
+/// computes `(acc as f64 * sx * wq.scale(o)) as f32` — the fast path must
+/// keep that exact grouping to stay bit-identical.
+pub(crate) struct Int8Prep {
+    pub qw: Vec<i32>,
+    /// Activation (per-tensor) grid.
+    pub xq: QParams,
+    /// Activation scale (`xq.scale(0)`).
+    pub sx: f64,
+    /// Weight grid (per-tensor or per-channel).
+    pub wq: QParams,
+}
+
+/// Build the frame-invariant int8 operand cache for one compute node.
+pub(crate) fn int8_prep(
+    weights: &[f32],
+    act_range: Range,
+    weight_ranges: &[Range],
+    scheme: QScheme,
+) -> Int8Prep {
+    let xq = QParams::per_tensor(act_range, Precision::Int8);
+    let wq = weight_grid(weight_ranges, scheme);
     let oc = wq.groups().max(1);
     let per = weights.len() / oc;
-    QuantizedOperands {
-        qx: x.iter().map(|&v| xq.quantize(v as f64, 0)).collect(),
+    Int8Prep {
         qw: weights
             .iter()
             .enumerate()
             .map(|(i, &w)| wq.quantize(w as f64, i / per.max(1)))
             .collect(),
         sx: xq.scale(0),
+        xq,
         wq,
+    }
+}
+
+/// Quantize a frame's activations into a caller-owned buffer (the
+/// per-frame half of [`int8_prep`]). `out.len()` must equal `x.len()`.
+pub(crate) fn quantize_into(x: &[f32], xq: &QParams, out: &mut [i32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = xq.quantize(v as f64, 0);
+    }
+}
+
+/// Round a frame's activations onto the fp16 grid into a caller-owned
+/// buffer (the per-frame half of the fp16 datapath).
+pub(crate) fn f16_round_into(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = f16_round(v);
     }
 }
 
@@ -499,9 +570,27 @@ pub(crate) fn pool(
     padding: usize,
     is_max: bool,
 ) -> Vec<f32> {
-    let (c, h, w) = in_shape.chw().expect("pool input CHW");
+    let (c, _, _) = in_shape.chw().expect("pool input CHW");
     let (_, oh, ow) = out_shape.chw().expect("pool output CHW");
     let mut out = vec![0f32; c * oh * ow];
+    pool_into(x, in_shape, out_shape, k, stride, padding, is_max, &mut out);
+    out
+}
+
+/// Non-allocating [`pool`]: writes `c * oh * ow` values into `out`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pool_into(
+    x: &[f32],
+    in_shape: &Shape,
+    out_shape: &Shape,
+    k: usize,
+    stride: usize,
+    padding: usize,
+    is_max: bool,
+    out: &mut [f32],
+) {
+    let (c, h, w) = in_shape.chw().expect("pool input CHW");
+    let (_, oh, ow) = out_shape.chw().expect("pool output CHW");
     for ch in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -523,7 +612,586 @@ pub(crate) fn pool(
             }
         }
     }
-    out
+}
+
+/// Non-allocating BatchNorm: `v * γ[channel] + β[channel]`, channel-major
+/// layout (identical index arithmetic to the baseline traversal).
+pub(crate) fn batchnorm_into(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    channels: usize,
+    out: &mut [f32],
+) {
+    let per = (x.len() / channels.max(1)).max(1);
+    for (i, (o, &v)) in out.iter_mut().zip(x).enumerate() {
+        *o = v * gamma[i / per] + beta[i / per];
+    }
+}
+
+/// Operand views for one compute dispatch on the shared `*_into` cores.
+/// Weights are frame-invariant (cached by [`FastExecutor`] /
+/// the verify interpreter); only the activation side changes per frame.
+pub(crate) enum MatOperands<'a> {
+    F32 { x: &'a [f32], w: &'a [f32] },
+    /// fp16: both sides pre-rounded onto the half grid.
+    F16 { rx: &'a [f32], rw: &'a [f32] },
+    /// int8: quantized operands plus the scales for the f32 rescale.
+    Int8 { qx: &'a [i32], qw: &'a [i32], sx: f64, wq: &'a QParams },
+}
+
+/// Conv/depthwise geometry for [`conv_core_into`].
+#[derive(Clone, Copy)]
+pub(crate) struct ConvGeom {
+    pub cin: usize,
+    pub h: usize,
+    pub w: usize,
+    pub oc: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub depthwise: bool,
+}
+
+impl ConvGeom {
+    /// Geometry from the graph shapes of a conv/depthwise node.
+    pub fn from_shapes(
+        in_shape: &Shape,
+        out_shape: &Shape,
+        k: usize,
+        stride: usize,
+        padding: usize,
+        depthwise: bool,
+    ) -> ConvGeom {
+        let (cin, h, w) = in_shape.chw().expect("conv input CHW");
+        let (oc, oh, ow) = out_shape.chw().expect("conv output CHW");
+        ConvGeom { cin, h, w, oc, oh, ow, k, stride, padding, depthwise }
+    }
+}
+
+/// Non-allocating conv/depthwise core, all three precisions. `epilogue`
+/// receives `(macc_result, output_channel)` for every output element —
+/// bias, fp16 rounding, activation and any fused elementwise chain live
+/// in the caller's closure, so one core serves both executors and the
+/// verify interpreter (whose recorded epilogue may differ from op attrs).
+///
+/// Bit-identical to [`Executor`]'s branchy reference loop: the nest
+/// visits exactly the in-bounds `(c, ky, kx)` iterations in the same
+/// ascending order (skipped padding taps contribute nothing there too),
+/// and per-precision accumulation keeps the baseline expression shapes —
+/// f32/fp16 `acc += (x * w) as f64`, int8 i64 MACs rescaled as
+/// `(acc as f64 * sx * wq.scale(o)) as f32`.
+pub(crate) fn conv_core_into(
+    dp: &MatOperands<'_>,
+    g: ConvGeom,
+    epilogue: impl Fn(f32, usize) -> f32,
+    out: &mut [f32],
+) {
+    match dp {
+        MatOperands::F32 { x, w } => conv_nest(
+            x,
+            w,
+            g,
+            0f64,
+            |acc, a: f32, b: f32| acc + (a * b) as f64,
+            |acc, _| acc as f32,
+            &epilogue,
+            out,
+        ),
+        MatOperands::F16 { rx, rw } => conv_nest(
+            rx,
+            rw,
+            g,
+            0f64,
+            |acc, a: f32, b: f32| acc + (a * b) as f64,
+            |acc, _| acc as f32,
+            &epilogue,
+            out,
+        ),
+        MatOperands::Int8 { qx, qw, sx, wq } => conv_nest(
+            qx,
+            qw,
+            g,
+            0i64,
+            |acc, a: i32, b: i32| acc + a as i64 * b as i64,
+            |acc, o| (acc as f64 * sx * wq.scale(o)) as f32,
+            &epilogue,
+            out,
+        ),
+    }
+}
+
+/// The one conv loop nest, generic over element/accumulator type, with
+/// per-output valid kernel ranges so the inner loop runs on contiguous
+/// slices with no per-tap bounds branch.
+#[allow(clippy::too_many_arguments)]
+fn conv_nest<T: Copy, A: Copy>(
+    x: &[T],
+    wts: &[T],
+    g: ConvGeom,
+    zero: A,
+    mac: impl Fn(A, T, T) -> A,
+    finish: impl Fn(A, usize) -> f32,
+    epilogue: &impl Fn(f32, usize) -> f32,
+    out: &mut [f32],
+) {
+    let ConvGeom { cin, h, w, oc, oh, ow, k, stride, padding, depthwise } = g;
+    for o in 0..oc {
+        let w_base = if depthwise { o * k * k } else { o * cin * k * k };
+        for oy in 0..oh {
+            // Valid tap rows: padding.saturating_sub clamps the low edge,
+            // (h + padding) the high edge; an empty range is a fully
+            // padded window (the baseline accumulates nothing there too).
+            let ky_lo = padding.saturating_sub(oy * stride).min(k);
+            let ky_hi = (h + padding).saturating_sub(oy * stride).min(k);
+            for ox in 0..ow {
+                let kx_lo = padding.saturating_sub(ox * stride).min(k);
+                let kx_hi = (w + padding).saturating_sub(ox * stride).min(k);
+                let span = kx_hi.saturating_sub(kx_lo);
+                let mut acc = zero;
+                if span > 0 {
+                    // kx_lo < k here, so it equals the unclamped low edge
+                    // and ix0 cannot underflow.
+                    let ix0 = ox * stride + kx_lo - padding;
+                    let (c0, c1) = if depthwise { (o, o + 1) } else { (0, cin) };
+                    for c in c0..c1 {
+                        let xc = &x[c * h * w..(c + 1) * h * w];
+                        let wc = w_base + if depthwise { 0 } else { c * k * k };
+                        for ky in ky_lo..ky_hi {
+                            let iy = oy * stride + ky - padding;
+                            let xs = &xc[iy * w + ix0..iy * w + ix0 + span];
+                            let ws = &wts[wc + ky * k + kx_lo..wc + ky * k + kx_hi];
+                            for (&xa, &wb) in xs.iter().zip(ws) {
+                                acc = mac(acc, xa, wb);
+                            }
+                        }
+                    }
+                }
+                out[(o * oh + oy) * ow + ox] = epilogue(finish(acc, o), o);
+            }
+        }
+    }
+}
+
+/// Non-allocating dense core, all three precisions; `epilogue` as in
+/// [`conv_core_into`]. fp16 rounds the dot product *before* the epilogue
+/// (the baseline's dense order — conv instead rounds after the bias,
+/// which is why rounding sits in the caller's closure there).
+pub(crate) fn dense_core_into(
+    dp: &MatOperands<'_>,
+    cin: usize,
+    oc: usize,
+    epilogue: impl Fn(f32, usize) -> f32,
+    out: &mut [f32],
+) {
+    for (o, slot) in out.iter_mut().enumerate().take(oc) {
+        let v = match dp {
+            MatOperands::F32 { x, w } => {
+                let row = &w[o * cin..(o + 1) * cin];
+                x.iter().zip(row).map(|(&a, &b)| a * b).sum::<f32>()
+            }
+            MatOperands::F16 { rx, rw } => {
+                let row = &rw[o * cin..(o + 1) * cin];
+                f16_round(rx.iter().zip(row).map(|(&a, &b)| a * b).sum::<f32>())
+            }
+            MatOperands::Int8 { qx, qw, sx, wq } => {
+                let qrow = &qw[o * cin..(o + 1) * cin];
+                let acc: i64 = qx.iter().zip(qrow).map(|(&a, &b)| a as i64 * b as i64).sum();
+                (acc as f64 * sx * wq.scale(o)) as f32
+            }
+        };
+        *slot = epilogue(v, o);
+    }
+}
+
+/// Outputs smaller than this skip epilogue fusion in [`FastExecutor`].
+/// For tiny tensors the fused closure's per-element chain dispatch costs
+/// more than the separate cache-warm elementwise passes it replaces;
+/// measured by the fusion sweep in `benches/executor_fastpath.rs`
+/// (re-run with `cargo bench --bench executor_fastpath` after touching
+/// the epilogue code and update this constant from the printed table).
+pub const FUSE_BREAK_EVEN_ELEMS: usize = 64;
+
+/// One fused elementwise step a compute host absorbed into its epilogue.
+enum ChainStep {
+    /// BatchNorm node (γ/β indexed by the host's output channel).
+    Bn(NodeId),
+    Act(Activation),
+}
+
+/// Frame-invariant prepared operands of one node.
+enum Prep {
+    None,
+    /// int8 compute op: quantized weights + activation/weight grids.
+    Int8(Int8Prep),
+    /// fp16 compute op: weights pre-rounded onto the half grid.
+    F16 { rw: Vec<f32> },
+    /// Explicit int8 `Quantize` boundary: the calibrated roundtrip grid.
+    Grid(QParams),
+}
+
+/// Zero-allocation forward executor over [`Scratch`]-owned buffers.
+///
+/// Wraps an [`Executor`] (same graph, same synthetic parameters) and
+/// replays its exact numeric semantics through the non-allocating
+/// `*_into` cores with frame-invariant operand caches. After the
+/// constructor's warm-up checkouts, [`FastExecutor::forward`] performs
+/// zero heap allocations per frame (`rust/tests/alloc_regression.rs`)
+/// and is bit-identical to the baseline
+/// (`rust/tests/fastpath_equivalence.rs`).
+///
+/// Single-consumer conv→bn→relu chains are fused into the host's
+/// epilogue closure (one traversal instead of three) when the host
+/// output has at least [`FUSE_BREAK_EVEN_ELEMS`] elements and no
+/// observer needs the intermediate activations — fused elementwise ops
+/// apply in the same per-element order, so fusion is bit-exact.
+pub struct FastExecutor<'g> {
+    exec: &'g Executor<'g>,
+    prep: Vec<Prep>,
+    /// Fused chain per host node (empty = nothing absorbed).
+    chains: Vec<Vec<ChainStep>>,
+    /// Node whose buffer receives the host's (possibly fused) result.
+    target: Vec<NodeId>,
+    /// Nodes evaluated inside some host's chain — skipped when fusing.
+    fused_member: Vec<bool>,
+    /// Per-node activation buffers, arena-owned.
+    acts: Vec<Vec<f32>>,
+    /// Shared input-quantization scratch (int8 datapath).
+    qx: Vec<i32>,
+    /// Shared fp16 input-rounding scratch.
+    rx: Vec<f32>,
+}
+
+impl<'g> FastExecutor<'g> {
+    /// f32 reference datapath (mirrors [`Executor::forward`]).
+    pub fn reference(exec: &'g Executor<'g>, fuse: bool, scratch: &mut Scratch) -> FastExecutor<'g> {
+        FastExecutor::build(exec, None, None, QScheme::PerChannel, fuse, scratch)
+    }
+
+    /// Reduced-precision datapath (mirrors [`Executor::forward_quantized`]
+    /// at `precision` under `scheme`). The table is only read here — the
+    /// preps copy everything they need.
+    pub fn quantized(
+        exec: &'g Executor<'g>,
+        table: &CalibrationTable,
+        precision: Precision,
+        scheme: QScheme,
+        fuse: bool,
+        scratch: &mut Scratch,
+    ) -> FastExecutor<'g> {
+        FastExecutor::build(exec, Some(precision), Some(table), scheme, fuse, scratch)
+    }
+
+    fn build(
+        exec: &'g Executor<'g>,
+        quant: Option<Precision>,
+        table: Option<&CalibrationTable>,
+        scheme: QScheme,
+        fuse: bool,
+        scratch: &mut Scratch,
+    ) -> FastExecutor<'g> {
+        let g = exec.graph;
+        // The baseline routes every non-F16 quantized precision onto the
+        // int8 operand path (QuantCtx::datapath); mirror that exactly.
+        let prep: Vec<Prep> = g
+            .nodes
+            .iter()
+            .map(|n| match (&n.op, quant) {
+                (
+                    Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. },
+                    Some(Precision::F16),
+                ) => Prep::F16 {
+                    rw: exec.params[n.id].weights.iter().map(|&w| f16_round(w)).collect(),
+                },
+                (Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. }, Some(_)) => {
+                    let t = table.expect("quantized mode carries a calibration table");
+                    Prep::Int8(int8_prep(
+                        &exec.params[n.id].weights,
+                        t.activation(n.inputs[0]),
+                        &t.weight_ranges(n.id),
+                        scheme,
+                    ))
+                }
+                (Op::Quantize { precision: Precision::Int8 }, Some(_)) => {
+                    let t = table.expect("quantized mode carries a calibration table");
+                    Prep::Grid(QParams::per_tensor(t.activation(n.inputs[0]), Precision::Int8))
+                }
+                _ => Prep::None,
+            })
+            .collect();
+
+        let mut chains: Vec<Vec<ChainStep>> = vec![Vec::new(); g.nodes.len()];
+        let mut target: Vec<NodeId> = (0..g.nodes.len()).collect();
+        let mut fused_member = vec![false; g.nodes.len()];
+        if fuse {
+            let consumers = g.consumers();
+            for n in g.topo() {
+                if !matches!(
+                    n.op,
+                    Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. }
+                ) || n.shape.elems() < FUSE_BREAK_EVEN_ELEMS
+                {
+                    continue;
+                }
+                let mut steps = Vec::new();
+                let mut cur = n.id;
+                // Walk single-consumer elementwise successors; BN/Activate
+                // preserve shape, so the chain tail has the host's layout.
+                while consumers[cur].len() == 1 {
+                    let next = consumers[cur][0];
+                    match &g.nodes[next].op {
+                        Op::BatchNorm => steps.push(ChainStep::Bn(next)),
+                        Op::Activate(a) => steps.push(ChainStep::Act(*a)),
+                        _ => break,
+                    }
+                    fused_member[next] = true;
+                    cur = next;
+                    if next == g.output {
+                        break;
+                    }
+                }
+                if !steps.is_empty() {
+                    chains[n.id] = steps;
+                    target[n.id] = cur;
+                }
+            }
+        }
+
+        let max_elems = g.nodes.iter().map(|n| n.shape.elems()).max().unwrap_or(0);
+        let acts = g.nodes.iter().map(|n| scratch.take_f32(n.shape.elems())).collect();
+        let qx = match quant {
+            Some(p) if p != Precision::F16 => scratch.take_i32(max_elems),
+            _ => Vec::new(),
+        };
+        let rx = match quant {
+            Some(Precision::F16) => scratch.take_f32(max_elems),
+            _ => Vec::new(),
+        };
+        FastExecutor { exec, prep, chains, target, fused_member, acts, qx, rx }
+    }
+
+    /// Return every arena-owned buffer to `scratch` so the next executor
+    /// (or frame state) with the same shapes reuses them.
+    pub fn release(self, scratch: &mut Scratch) {
+        for b in self.acts {
+            scratch.put_f32(b);
+        }
+        if !self.qx.is_empty() {
+            scratch.put_i32(self.qx);
+        }
+        if !self.rx.is_empty() {
+            scratch.put_f32(self.rx);
+        }
+    }
+
+    /// Run one frame (fused, allocation-free) and return the logits.
+    pub fn forward(&mut self, frame: &[f32]) -> &[f32] {
+        self.run(frame, None);
+        &self.acts[self.exec.graph.output]
+    }
+
+    /// Run one frame with an observer that sees every node's activation
+    /// in topological order (the calibration / localization hook).
+    /// Fusion is disabled for the pass — the observer needs the chain's
+    /// intermediate activations — but execution stays allocation-free.
+    pub fn forward_observed(
+        &mut self,
+        frame: &[f32],
+        mut observe: impl FnMut(NodeId, &[f32]),
+    ) -> &[f32] {
+        self.run(frame, Some(&mut observe));
+        &self.acts[self.exec.graph.output]
+    }
+
+    fn run(&mut self, frame: &[f32], mut observe: Option<&mut dyn FnMut(NodeId, &[f32])>) {
+        let fusing = observe.is_none();
+        let FastExecutor { exec, prep, chains, target, fused_member, acts, qx, rx } = self;
+        let g = exec.graph;
+        let params = &exec.params;
+        for n in g.topo() {
+            let nid = n.id;
+            if fusing && fused_member[nid] {
+                continue;
+            }
+            let tgt = if fusing { target[nid] } else { nid };
+            let chain: &[ChainStep] = if fusing { &chains[nid] } else { &[] };
+            // Detach the output buffer so the inputs stay readable.
+            let mut out = std::mem::take(&mut acts[tgt]);
+            match &n.op {
+                Op::Input => {
+                    assert_eq!(frame.len(), out.len(), "input frame size mismatch");
+                    out.copy_from_slice(frame);
+                }
+                Op::Conv2d { kernel, stride, padding, bias, activation, .. }
+                | Op::DepthwiseConv2d { kernel, stride, padding, bias, activation } => {
+                    let depthwise = matches!(n.op, Op::DepthwiseConv2d { .. });
+                    let x = &acts[n.inputs[0]];
+                    let geom = ConvGeom::from_shapes(
+                        &g.nodes[n.inputs[0]].shape,
+                        &n.shape,
+                        *kernel,
+                        *stride,
+                        *padding,
+                        depthwise,
+                    );
+                    let p = &params[nid];
+                    let f16 = matches!(prep[nid], Prep::F16 { .. });
+                    let ep = |mut v: f32, o: usize| {
+                        if *bias {
+                            v += p.bias[o];
+                        }
+                        if f16 {
+                            v = f16_round(v);
+                        }
+                        v = activate(v, *activation);
+                        for s in chain {
+                            v = match s {
+                                ChainStep::Bn(b) => v * params[*b].weights[o] + params[*b].bias[o],
+                                ChainStep::Act(a) => activate(v, *a),
+                            };
+                        }
+                        v
+                    };
+                    match &prep[nid] {
+                        Prep::Int8(ip) => {
+                            let qxs = &mut qx[..x.len()];
+                            quantize_into(x, &ip.xq, qxs);
+                            let dp =
+                                MatOperands::Int8 { qx: qxs, qw: &ip.qw, sx: ip.sx, wq: &ip.wq };
+                            conv_core_into(&dp, geom, ep, &mut out);
+                        }
+                        Prep::F16 { rw } => {
+                            let rxs = &mut rx[..x.len()];
+                            f16_round_into(x, rxs);
+                            conv_core_into(&MatOperands::F16 { rx: rxs, rw }, geom, ep, &mut out);
+                        }
+                        _ => {
+                            let dp = MatOperands::F32 { x, w: &p.weights };
+                            conv_core_into(&dp, geom, ep, &mut out);
+                        }
+                    }
+                }
+                Op::Dense { bias, activation, .. } => {
+                    let x = &acts[n.inputs[0]];
+                    let p = &params[nid];
+                    let cin = x.len();
+                    let oc = p.bias.len().max(p.weights.len() / cin.max(1));
+                    debug_assert_eq!(out.len(), oc, "dense output shape mismatch");
+                    let ep = |mut v: f32, o: usize| {
+                        if *bias {
+                            v += p.bias[o];
+                        }
+                        v = activate(v, *activation);
+                        for s in chain {
+                            v = match s {
+                                ChainStep::Bn(b) => v * params[*b].weights[o] + params[*b].bias[o],
+                                ChainStep::Act(a) => activate(v, *a),
+                            };
+                        }
+                        v
+                    };
+                    match &prep[nid] {
+                        Prep::Int8(ip) => {
+                            let qxs = &mut qx[..cin];
+                            quantize_into(x, &ip.xq, qxs);
+                            let dp =
+                                MatOperands::Int8 { qx: qxs, qw: &ip.qw, sx: ip.sx, wq: &ip.wq };
+                            dense_core_into(&dp, cin, oc, ep, &mut out);
+                        }
+                        Prep::F16 { rw } => {
+                            let rxs = &mut rx[..cin];
+                            f16_round_into(x, rxs);
+                            dense_core_into(&MatOperands::F16 { rx: rxs, rw }, cin, oc, ep, &mut out);
+                        }
+                        _ => {
+                            let dp = MatOperands::F32 { x, w: &p.weights };
+                            dense_core_into(&dp, cin, oc, ep, &mut out);
+                        }
+                    }
+                }
+                Op::BatchNorm => {
+                    let p = &params[nid];
+                    batchnorm_into(
+                        &acts[n.inputs[0]],
+                        &p.weights,
+                        &p.bias,
+                        channels_of(&n.shape),
+                        &mut out,
+                    );
+                }
+                Op::Activate(a) => {
+                    for (o, &v) in out.iter_mut().zip(&acts[n.inputs[0]]) {
+                        *o = activate(v, *a);
+                    }
+                }
+                Op::MaxPool { kernel, stride, padding } => pool_into(
+                    &acts[n.inputs[0]],
+                    &g.nodes[n.inputs[0]].shape,
+                    &n.shape,
+                    *kernel,
+                    *stride,
+                    *padding,
+                    true,
+                    &mut out,
+                ),
+                Op::AvgPool { kernel, stride, padding } => pool_into(
+                    &acts[n.inputs[0]],
+                    &g.nodes[n.inputs[0]].shape,
+                    &n.shape,
+                    *kernel,
+                    *stride,
+                    *padding,
+                    false,
+                    &mut out,
+                ),
+                Op::GlobalAvgPool => {
+                    let (c, h, w) = g.nodes[n.inputs[0]].shape.chw().expect("gap input CHW");
+                    let x = &acts[n.inputs[0]];
+                    for (ch, o) in out.iter_mut().enumerate().take(c) {
+                        *o = x[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / (h * w) as f32;
+                    }
+                }
+                Op::Add => {
+                    let (a, b) = (&acts[n.inputs[0]], &acts[n.inputs[1]]);
+                    for ((o, &va), &vb) in out.iter_mut().zip(a).zip(b) {
+                        *o = va + vb;
+                    }
+                }
+                Op::Softmax => {
+                    let x = &acts[n.inputs[0]];
+                    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    for (o, &v) in out.iter_mut().zip(x) {
+                        *o = (v - m).exp();
+                    }
+                    let s: f32 = out.iter().sum();
+                    for o in out.iter_mut() {
+                        *o /= s;
+                    }
+                }
+                Op::Transform | Op::Flatten | Op::Dequantize { .. } => {
+                    out.copy_from_slice(&acts[n.inputs[0]]);
+                }
+                Op::Quantize { precision } => {
+                    let x = &acts[n.inputs[0]];
+                    match (&prep[nid], precision) {
+                        (Prep::Grid(qp), _) => {
+                            for (o, &v) in out.iter_mut().zip(x) {
+                                *o = qp.roundtrip(v as f64, 0) as f32;
+                            }
+                        }
+                        (_, Precision::F16) => f16_round_into(x, &mut out),
+                        _ => out.copy_from_slice(x),
+                    }
+                }
+            }
+            acts[tgt] = out;
+            if let Some(obs) = observe.as_deref_mut() {
+                obs(nid, &acts[nid]);
+            }
+        }
+    }
 }
 
 /// Index of the largest logit (the predicted class).

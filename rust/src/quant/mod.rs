@@ -46,8 +46,8 @@ pub mod rewrite;
 pub mod scheme;
 
 pub use accuracy::AccuracyReport;
-pub use calibrate::{calibrate, calibrate_analytic, CalibrationTable, Calibrator};
-pub use exec::{argmax, Executor};
+pub use calibrate::{calibrate, calibrate_analytic, calibrate_in, CalibrationTable, Calibrator};
+pub use exec::{argmax, Executor, FastExecutor, FUSE_BREAK_EVEN_ELEMS};
 pub use rewrite::{insert_qdq, QuantStats};
 pub use scheme::{accum_limit, f16_round, qmax, QParams, QScheme, Range};
 
@@ -150,6 +150,10 @@ pub fn prepare(graph: &Graph, cfg: &QuantConfig) -> crate::Result<PreparedQuant>
     let mut manager = PassManager::new();
     let folding = Pipeline::default().graph(FoldBatchNorm).graph(FusePad).graph(EliminateDead);
     let folded = manager.run_graph_passes(&folding, graph);
+    // One arena for the whole front-end: calibration and accuracy
+    // measurement run the same shapes, so the measure pass reuses the
+    // buffers calibration checked back in.
+    let mut scratch = crate::util::scratch::Scratch::new();
     let table = match cfg.source {
         CalibrationSource::Analytic => calibrate_analytic(&folded, cfg.calibrator),
         CalibrationSource::Data { frames } => {
@@ -159,7 +163,7 @@ pub fn prepare(graph: &Graph, cfg: &QuantConfig) -> crate::Result<PreparedQuant>
                     folded.name
                 )
             })?;
-            calibrate(&folded, &batch, frames, cfg.calibrator)
+            calibrate_in(&folded, &batch, frames, cfg.calibrator, &mut scratch)
         }
     };
     let accuracy = match cfg.source {
@@ -167,7 +171,7 @@ pub fn prepare(graph: &Graph, cfg: &QuantConfig) -> crate::Result<PreparedQuant>
             accuracy::estimate(&folded, &table, cfg.precision, cfg.scheme)
         }
         CalibrationSource::Data { frames } => {
-            accuracy::measure(&folded, &table, cfg.precision, cfg.scheme, frames)
+            accuracy::measure_in(&folded, &table, cfg.precision, cfg.scheme, frames, &mut scratch)
         }
     };
     let qdq = Pipeline::default().graph(InsertQdq::new(cfg.precision));

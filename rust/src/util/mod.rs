@@ -9,6 +9,7 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod scratch;
 
 /// FNV-1a offset basis (the crate's shared content-hash seed).
 pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;

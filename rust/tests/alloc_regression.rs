@@ -1,0 +1,200 @@
+//! Allocation regression tests for the host-executor fast path: after
+//! warm-up, the steady-state frame loop of [`FastExecutor`] (all three
+//! precisions) and of the verify interpreter's `run_frame_into` must
+//! perform **zero** heap allocations per frame — the tentpole property
+//! the `Scratch` arena exists to provide.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator. The
+//! counter is thread-local and armed only around the measured region, so
+//! the test harness's other threads (and its own bookkeeping) never
+//! pollute a measurement. `try_with` guards against TLS teardown — the
+//! allocator runs during thread shutdown too, when the thread-local may
+//! already be gone.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use tvm_fpga_flow::flow::patterns::{build_with_passes, default_factors, OptConfig};
+use tvm_fpga_flow::flow::Mode;
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::quant::{calibrate_analytic, Calibrator, Executor, FastExecutor, QScheme};
+use tvm_fpga_flow::texpr::Precision;
+use tvm_fpga_flow::util::scratch::Scratch;
+use tvm_fpga_flow::verify::Interpreter;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+    static COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+impl CountingAlloc {
+    fn record() {
+        // During TLS teardown `with` would panic inside the allocator;
+        // `try_with` just skips counting there.
+        let armed = ARMED.try_with(Cell::get).unwrap_or(false);
+        if armed {
+            let _ = COUNT.try_with(|c| c.set(c.get() + 1));
+        }
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::record();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::record();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        CountingAlloc::record();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Heap allocations (alloc + alloc_zeroed + realloc) performed by `f` on
+/// this thread.
+fn allocations_in(f: impl FnOnce()) -> u64 {
+    COUNT.with(|c| c.set(0));
+    ARMED.with(|c| c.set(true));
+    f();
+    ARMED.with(|c| c.set(false));
+    COUNT.with(Cell::get)
+}
+
+/// The harness itself must actually count — otherwise the zero-allocation
+/// asserts below would pass vacuously.
+#[test]
+fn counting_allocator_counts() {
+    let n = allocations_in(|| {
+        let v: Vec<u64> = Vec::with_capacity(32);
+        std::hint::black_box(&v);
+    });
+    assert!(n >= 1, "a fresh Vec allocation must be counted, got {n}");
+}
+
+/// f32 reference fast path: zero steady-state allocations per frame.
+#[test]
+fn f32_executor_frames_do_not_allocate() {
+    let g = models::lenet5();
+    let exec = Executor::new(&g);
+    let data = tvm_fpga_flow::data::mnist_like(4, 32, 5);
+    let mut scratch = Scratch::new();
+    let mut fast = FastExecutor::reference(&exec, true, &mut scratch);
+    // Warm-up: first frames touch lazily-initialized runtime state
+    // (stdio locks etc.) that is not the executor's to avoid.
+    for i in 0..2 {
+        std::hint::black_box(fast.forward(data.frame(i)));
+    }
+    let n = allocations_in(|| {
+        for i in 0..8 {
+            let logits = fast.forward(data.frame(i % 4));
+            std::hint::black_box(tvm_fpga_flow::quant::argmax(logits));
+        }
+    });
+    fast.release(&mut scratch);
+    assert_eq!(n, 0, "f32 fast path allocated {n} times across 8 frames");
+}
+
+/// int8 (and fp16) quantized fast paths: zero steady-state allocations
+/// per frame — operand quantization reuses the arena's shared scratch.
+#[test]
+fn quantized_executor_frames_do_not_allocate() {
+    let g = models::lenet5();
+    let exec = Executor::new(&g);
+    let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+    let data = tvm_fpga_flow::data::mnist_like(4, 32, 5);
+    let mut scratch = Scratch::new();
+    for precision in [Precision::Int8, Precision::F16] {
+        let mut fast = FastExecutor::quantized(
+            &exec,
+            &table,
+            precision,
+            QScheme::PerChannel,
+            true,
+            &mut scratch,
+        );
+        for i in 0..2 {
+            std::hint::black_box(fast.forward(data.frame(i)));
+        }
+        let n = allocations_in(|| {
+            for i in 0..8 {
+                let logits = fast.forward(data.frame(i % 4));
+                std::hint::black_box(tvm_fpga_flow::quant::argmax(logits));
+            }
+        });
+        fast.release(&mut scratch);
+        assert_eq!(
+            n,
+            0,
+            "{} fast path allocated {n} times across 8 frames",
+            precision.name()
+        );
+    }
+}
+
+/// The verify interpreter's arena-backed frame loop: zero steady-state
+/// allocations per `run_frame_into` on a compiled LeNet-5 program.
+#[test]
+fn interpreter_frames_do_not_allocate() {
+    let g = models::lenet5();
+    let plan = default_factors(&g);
+    let built = build_with_passes(&g, Mode::Pipelined, &OptConfig::optimized(), &plan);
+    let exec = Executor::new(&g);
+    let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+    let itp = Interpreter::new(
+        &g,
+        &built.program,
+        &exec,
+        &table,
+        QScheme::PerChannel,
+        Precision::F32,
+    );
+    assert_eq!(itp.structure(), &[] as &[String]);
+    let data = tvm_fpga_flow::data::mnist_like(4, 32, 5);
+    let mut scratch = Scratch::new();
+    let mut st = itp.frame_state(&mut scratch);
+    for i in 0..2 {
+        itp.run_frame_into(data.frame(i), &mut st).unwrap();
+    }
+    let n = allocations_in(|| {
+        for i in 0..8 {
+            itp.run_frame_into(data.frame(i % 4), &mut st).unwrap();
+            std::hint::black_box(itp.logits(&st));
+        }
+    });
+    itp.release_state(st, &mut scratch);
+    assert_eq!(n, 0, "interpreter fast path allocated {n} times across 8 frames");
+}
+
+/// Releasing one executor and building the next with the same shapes is
+/// served from the pool — the cross-component reuse the arena promises
+/// (calibrate → measure, scenario → scenario).
+#[test]
+fn released_buffers_are_reused_across_executors() {
+    let g = models::lenet5();
+    let exec = Executor::new(&g);
+    let mut scratch = Scratch::new();
+    let fast = FastExecutor::reference(&exec, true, &mut scratch);
+    fast.release(&mut scratch);
+    let before = scratch.stats();
+    let fast2 = FastExecutor::reference(&exec, true, &mut scratch);
+    let after = scratch.stats();
+    fast2.release(&mut scratch);
+    let checkouts = after.checkouts - before.checkouts;
+    let hits = after.hits - before.hits;
+    assert_eq!(checkouts, hits, "second executor must be served entirely from the pool");
+    assert!(hits > 0, "second executor checked nothing out");
+}

@@ -46,21 +46,43 @@ fn differ_cases() -> u64 {
 
 /// ≥ 50 seeded random scenarios per CI run: random chains (structural
 /// diversity) and LeNet-5, over random pass subsets, both modes, all
-/// three precisions.
+/// three precisions. One `Scratch` arena rides across every scenario —
+/// the arena-backed fast path is what lets CI's `verify-fuzz` job run
+/// 400 scenarios in the wall-clock budget 120 used to need; when
+/// `FLOW_FUZZ_BUDGET_S` is set (CI does), the sweep asserts it stayed
+/// inside that budget.
 #[test]
 fn seeded_random_scenarios_agree_with_oracle() {
     let seed = test_seed(0xD1FF_E12A);
     let mut rng = Rng::new(seed);
     let cases = differ_cases();
+    let budget_s: Option<u64> =
+        std::env::var("FLOW_FUZZ_BUDGET_S").ok().and_then(|s| s.parse().ok());
+    let started = std::time::Instant::now();
+    let mut scratch = tvm_fpga_flow::util::scratch::Scratch::new();
     for case in 0..cases {
         let s = differ::random_scenario(&mut rng);
-        let rep = differ::run_scenario(&s);
+        let rep = differ::run_scenario_in(&s, &mut scratch);
         if !rep.passed {
             fail_with_repro(&s, None, &rep.summary(), seed, case);
         }
         if s.precision == Precision::Int8 {
             assert!(rep.bit_exact, "case {case} int8 not bit-exact: {}", rep.summary());
         }
+    }
+    let elapsed = started.elapsed();
+    eprintln!(
+        "{cases} scenarios in {:.1}s ({} pooled scratch buffers)",
+        elapsed.as_secs_f64(),
+        scratch.pooled()
+    );
+    if let Some(budget) = budget_s {
+        assert!(
+            elapsed.as_secs() <= budget,
+            "{cases} scenarios took {:.1}s — over the FLOW_FUZZ_BUDGET_S={budget}s budget \
+             the 120-scenario sweep used to fit",
+            elapsed.as_secs_f64()
+        );
     }
 }
 

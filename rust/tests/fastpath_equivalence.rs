@@ -1,0 +1,184 @@
+//! Bit-exactness of the arena-backed host-executor fast path.
+//!
+//! [`FastExecutor`] (and the `*_into` cores it shares with the verify
+//! interpreter) re-implements the reference [`Executor`]'s datapaths
+//! without per-frame allocation and with optional conv→bn→relu epilogue
+//! fusion. Its contract is **bit-identical output at every precision** —
+//! the goldens, the differential harness and the ≥5× bench all lean on
+//! it. These tests pin that contract on LeNet-5 and on seeded-random
+//! layer chains (`util::prop` seeds; replay with `FLOW_TEST_SEED`).
+
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::quant::{calibrate_analytic, Calibrator, Executor, FastExecutor, QScheme};
+use tvm_fpga_flow::texpr::Precision;
+use tvm_fpga_flow::util::prop;
+use tvm_fpga_flow::util::scratch::Scratch;
+use tvm_fpga_flow::verify::differ::random_chain;
+use tvm_fpga_flow::verify::frames_for;
+
+/// Assert the fast path reproduces the baseline bitwise on `frames`, for
+/// one (precision, scheme, fuse) combination.
+#[allow(clippy::too_many_arguments)]
+fn assert_bit_identical(
+    exec: &Executor,
+    table: &tvm_fpga_flow::quant::CalibrationTable,
+    precision: Precision,
+    scheme: QScheme,
+    fuse: bool,
+    frames: &[Vec<f32>],
+    scratch: &mut Scratch,
+    ctx: &str,
+) {
+    let mut fast = match precision {
+        Precision::F32 => FastExecutor::reference(exec, fuse, scratch),
+        _ => FastExecutor::quantized(exec, table, precision, scheme, fuse, scratch),
+    };
+    for (fi, frame) in frames.iter().enumerate() {
+        let want = if precision == Precision::F32 {
+            exec.forward(frame, |_, _| {})
+        } else {
+            exec.forward_quantized(frame, table, precision, scheme)
+        };
+        let got = fast.forward(frame);
+        assert_eq!(want.len(), got.len(), "{ctx} frame {fi}: logit count");
+        for (i, (a, b)) in want.iter().zip(got).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{ctx} [{} {} fuse={fuse}] frame {fi} logit {i}: \
+                 baseline {a:?} ({:#010x}) vs fast {b:?} ({:#010x})",
+                precision.name(),
+                scheme.name(),
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+    }
+    fast.release(scratch);
+}
+
+/// LeNet-5, exhaustively: 3 precisions × both schemes × fused/unfused,
+/// all bit-identical to the allocating baseline.
+#[test]
+fn lenet_fast_path_is_bit_identical_everywhere() {
+    let g = models::lenet5();
+    let exec = Executor::new(&g);
+    let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+    let frames = frames_for(&g, 2, 0xFA57);
+    let mut scratch = Scratch::new();
+    for precision in [Precision::F32, Precision::F16, Precision::Int8] {
+        for scheme in [QScheme::PerTensor, QScheme::PerChannel] {
+            for fuse in [false, true] {
+                assert_bit_identical(
+                    &exec,
+                    &table,
+                    precision,
+                    scheme,
+                    fuse,
+                    &frames,
+                    &mut scratch,
+                    "lenet5",
+                );
+            }
+        }
+    }
+}
+
+/// Seeded-random layer chains (the differ's generator: convs, depthwise,
+/// BN, relu, pools, dense): each case draws one random
+/// (precision, scheme, fuse) combination. Failures replay with the
+/// printed `FLOW_TEST_SEED`.
+#[test]
+fn random_chain_fast_path_is_bit_identical() {
+    prop::check("fastpath-equivalence", |rng, case| {
+        let chain_seed = rng.next_u64();
+        let g = random_chain(chain_seed);
+        let exec = Executor::new(&g);
+        let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+        let frames = frames_for(&g, 1, rng.next_u64());
+        let precision = match rng.below(3) {
+            0 => Precision::F32,
+            1 => Precision::F16,
+            _ => Precision::Int8,
+        };
+        let scheme =
+            if rng.below(2) == 0 { QScheme::PerTensor } else { QScheme::PerChannel };
+        let fuse = rng.below(2) == 0;
+        let mut scratch = Scratch::new();
+        assert_bit_identical(
+            &exec,
+            &table,
+            precision,
+            scheme,
+            fuse,
+            &frames,
+            &mut scratch,
+            &format!("case {case} chain:{chain_seed:#x}"),
+        );
+    });
+}
+
+/// The observed (calibration) path: fusion is disabled under an observer,
+/// and every per-node activation must match the baseline observer's
+/// bitwise — this is what makes `calibrate_in` produce byte-identical
+/// calibration tables.
+#[test]
+fn observed_activations_match_baseline_observer() {
+    let g = models::lenet5();
+    let exec = Executor::new(&g);
+    let frames = frames_for(&g, 2, 0x0B5E);
+    let mut scratch = Scratch::new();
+    let mut fast = FastExecutor::reference(&exec, true, &mut scratch);
+    for frame in &frames {
+        let mut want: Vec<Vec<f32>> = vec![Vec::new(); g.nodes.len()];
+        exec.forward(frame, |id, a| want[id] = a.to_vec());
+        let mut got: Vec<Vec<f32>> = vec![Vec::new(); g.nodes.len()];
+        fast.forward_observed(frame, |id, a| got[id] = a.to_vec());
+        for (id, (w, g_)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.len(), g_.len(), "node {id} activation length");
+            for (i, (a, b)) in w.iter().zip(g_).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "node {id} element {i}: baseline {a:?} vs fast-observed {b:?}"
+                );
+            }
+        }
+    }
+    fast.release(&mut scratch);
+}
+
+/// Fused and unfused fast paths agree bitwise with each other (fusion
+/// applies the same per-element chain order, just without materializing
+/// intermediates).
+#[test]
+fn fusion_is_value_transparent() {
+    // LeNet has conv→relu chains; a chain seed with conv→bn→relu
+    // exercises the two-step fused epilogue.
+    for g in [models::lenet5(), random_chain(3), random_chain(11)] {
+        let exec = Executor::new(&g);
+        let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+        let frames = frames_for(&g, 1, 0xF0);
+        let mut scratch = Scratch::new();
+        for precision in [Precision::F32, Precision::Int8] {
+            let build = |fuse: bool, scratch: &mut Scratch| match precision {
+                Precision::F32 => FastExecutor::reference(&exec, fuse, scratch),
+                _ => FastExecutor::quantized(
+                    &exec,
+                    &table,
+                    precision,
+                    QScheme::PerChannel,
+                    fuse,
+                    scratch,
+                ),
+            };
+            let mut fused = build(true, &mut scratch);
+            let mut unfused = build(false, &mut scratch);
+            for frame in &frames {
+                let a = fused.forward(frame).to_vec();
+                let b = unfused.forward(frame);
+                assert_eq!(a.as_slice(), b, "{} {}", g.name, precision.name());
+            }
+            fused.release(&mut scratch);
+            unfused.release(&mut scratch);
+        }
+    }
+}
