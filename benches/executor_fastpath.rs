@@ -25,7 +25,8 @@ use tvm_fpga_flow::quant::{
     calibrate_analytic, Calibrator, Executor, FastExecutor, QScheme, FUSE_BREAK_EVEN_ELEMS,
 };
 use tvm_fpga_flow::texpr::Precision;
-use tvm_fpga_flow::util::bench::{bench, BenchStats, Table};
+use tvm_fpga_flow::util::bench::{bench, BenchStats, BenchWriter, RunMeta, Table};
+use tvm_fpga_flow::util::json::Json;
 use tvm_fpga_flow::util::scratch::Scratch;
 use tvm_fpga_flow::verify::differ::random_chain;
 
@@ -131,45 +132,49 @@ fn fusion_sweep() -> Vec<(u64, usize, f64, f64)> {
     out
 }
 
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
 fn write_json(rows: &[Row], sweep: &[(u64, usize, f64, f64)], heavy: bool) {
-    let mut j = String::from("{\n");
-    j.push_str("  \"generated_by\": \"cargo bench --bench executor_fastpath\",\n");
-    j.push_str(&format!("  \"fuse_break_even_elems\": {FUSE_BREAK_EVEN_ELEMS},\n"));
-    j.push_str(&format!("  \"heavy_nets_included\": {heavy},\n"));
-    j.push_str("  \"executors\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        j.push_str(&format!(
-            "    {{\"net\": \"{}\", \"precision\": \"{}\", \"baseline_fps\": {:.2}, \
-             \"fast_fps\": {:.2}, \"speedup\": {:.2}}}{}\n",
-            json_escape(&r.net),
-            r.precision,
-            r.baseline_fps,
-            r.fast_fps,
-            r.speedup(),
-            if i + 1 < rows.len() { "," } else { "" }
-        ));
-    }
-    j.push_str("  ],\n  \"fusion_sweep\": [\n");
-    for (i, (seed, elems, unfused, fused)) in sweep.iter().enumerate() {
-        j.push_str(&format!(
-            "    {{\"chain_seed\": {seed}, \"max_elems\": {elems}, \"unfused_fps\": {unfused:.2}, \
-             \"fused_fps\": {fused:.2}, \"fused_over_unfused\": {:.3}}}{}\n",
-            fused / unfused,
-            if i + 1 < sweep.len() { "," } else { "" }
-        ));
-    }
-    j.push_str("  ]\n}\n");
-    let path = std::env::var("FLOW_BENCH_OUT")
-        .unwrap_or_else(|_| "target/BENCH_executor.json".to_string());
-    if let Some(dir) = std::path::Path::new(&path).parent() {
-        let _ = std::fs::create_dir_all(dir);
-    }
-    std::fs::write(&path, &j).expect("write bench json");
-    println!("\nwrote {path}");
+    let mut w = BenchWriter::new(RunMeta::new("executor"));
+    w.insert("fuse_break_even_elems", Json::Num(FUSE_BREAK_EVEN_ELEMS as f64));
+    w.insert("heavy_nets_included", Json::Bool(heavy));
+    w.insert(
+        "executors",
+        Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    obj(vec![
+                        ("net", Json::Str(r.net.clone())),
+                        ("precision", Json::Str(r.precision.to_string())),
+                        ("baseline_fps", Json::Num(r.baseline_fps)),
+                        ("fast_fps", Json::Num(r.fast_fps)),
+                        ("speedup", Json::Num(r.speedup())),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    w.insert(
+        "fusion_sweep",
+        Json::Arr(
+            sweep
+                .iter()
+                .map(|&(seed, elems, unfused, fused)| {
+                    obj(vec![
+                        ("chain_seed", Json::Num(seed as f64)),
+                        ("max_elems", Json::Num(elems as f64)),
+                        ("unfused_fps", Json::Num(unfused)),
+                        ("fused_fps", Json::Num(fused)),
+                        ("fused_over_unfused", Json::Num(fused / unfused)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    let path = w.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
 }
 
 fn main() {

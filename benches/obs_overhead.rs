@@ -1,0 +1,121 @@
+//! Disabled-tracer overhead bench: proves the observability layer is
+//! effectively free when tracing is off (the CI bar is ≤1% of a LeNet-5
+//! int8 fast-path frame).
+//!
+//! A/A timing of the whole executor with and without instrumentation is
+//! dominated by run-to-run noise at these scales, so the bound is built
+//! deterministically instead: measure the cost of one disabled span guard
+//! (one relaxed atomic load, no allocation), multiply by a conservative
+//! estimate of guard sites hit per frame, and divide by the measured
+//! frame time. Results land in `target/BENCH_obs_overhead.json`
+//! (`FLOW_BENCH_OUT` overrides) via the unified [`BenchWriter`].
+//!
+//! ```sh
+//! cargo bench --bench obs_overhead
+//! ```
+
+use std::time::Duration;
+
+use tvm_fpga_flow::data;
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::obs;
+use tvm_fpga_flow::quant::{calibrate_analytic, Calibrator, Executor, FastExecutor, QScheme};
+use tvm_fpga_flow::texpr::Precision;
+use tvm_fpga_flow::util::bench::{bench, BenchWriter, RunMeta};
+use tvm_fpga_flow::util::json::Json;
+use tvm_fpga_flow::util::scratch::Scratch;
+
+/// The guard-site batch measured per bench iteration. Timer resolution is
+/// far coarser than one disabled guard, so each iteration runs a fixed
+/// block of them and the per-guard cost is the quotient.
+const GUARDS_PER_ITER: u64 = 10_000;
+
+fn main() {
+    obs::disable();
+
+    // Cost of one disabled span guard (constructed and dropped).
+    let guard = bench(
+        "disabled_span_guard_x10k",
+        Duration::from_millis(50),
+        Duration::from_millis(300),
+        100_000,
+        || {
+            for _ in 0..GUARDS_PER_ITER {
+                let _s = obs::span("bench", "probe");
+            }
+        },
+    );
+    println!("{}", guard.report());
+    let guard_ns = guard.median.as_nanos() as f64 / GUARDS_PER_ITER as f64;
+
+    // Cost of one bare enabled() check, the gate used by counter sites.
+    let check = bench(
+        "disabled_enabled_check_x10k",
+        Duration::from_millis(50),
+        Duration::from_millis(300),
+        100_000,
+        || {
+            let mut hits = 0u64;
+            for _ in 0..GUARDS_PER_ITER {
+                hits += obs::enabled() as u64;
+            }
+            hits
+        },
+    );
+    println!("{}", check.report());
+    let check_ns = check.median.as_nanos() as f64 / GUARDS_PER_ITER as f64;
+
+    // The protected workload: one LeNet-5 int8 fast-path frame.
+    let g = models::lenet5();
+    let exec = Executor::new(&g);
+    let table = calibrate_analytic(&g, Calibrator::Percentile(99.9));
+    let batch = data::for_network(&g.name, 16, 42).expect("lenet5 ships a frame generator");
+    let mut scratch = Scratch::new();
+    let mut fast =
+        FastExecutor::quantized(&exec, &table, Precision::Int8, QScheme::PerChannel, true, &mut scratch);
+    let mut i = 0usize;
+    let frame = bench(
+        "lenet5/int8/fast_frame",
+        Duration::from_millis(50),
+        Duration::from_millis(400),
+        100_000,
+        || {
+            i += 1;
+            std::hint::black_box(fast.forward_traced(batch.frame(i % 16)));
+        },
+    );
+    println!("{}", frame.report());
+    fast.release(&mut scratch);
+    let frame_ns = frame.median.as_nanos() as f64;
+
+    // Guard sites a traced frame would hit if every per-node span existed
+    // on the disabled path: one frame span + one per node, doubled for
+    // headroom (counter gates, nested helpers).
+    let sites = (2 * (g.nodes.len() + 1)) as f64;
+    let overhead_ns = sites * guard_ns;
+    let overhead_pct = 100.0 * overhead_ns / frame_ns;
+    println!(
+        "\ndisabled span guard: {guard_ns:.2} ns, enabled() check: {check_ns:.2} ns, \
+         frame: {:.2} µs",
+        frame_ns / 1_000.0
+    );
+    println!(
+        "estimated disabled-mode overhead: {sites:.0} sites x {guard_ns:.2} ns = \
+         {overhead_ns:.0} ns = {overhead_pct:.3}% of a frame (bar: 1%)"
+    );
+
+    let mut w = BenchWriter::new(RunMeta::new("obs_overhead").precision("int8"));
+    w.stats(&[guard.clone(), check.clone(), frame.clone()]);
+    w.insert("disabled_span_guard_ns", Json::Num(guard_ns));
+    w.insert("disabled_enabled_check_ns", Json::Num(check_ns));
+    w.insert("frame_ns", Json::Num(frame_ns));
+    w.insert("guard_sites_per_frame", Json::Num(sites));
+    w.insert("overhead_pct", Json::Num(overhead_pct));
+    let path = w.write().expect("write bench json");
+    println!("wrote {}", path.display());
+
+    assert!(
+        overhead_pct <= 1.0,
+        "disabled-mode observability overhead {overhead_pct:.3}% exceeds the 1% bar"
+    );
+}

@@ -1,0 +1,152 @@
+"""The observability-export validator must accept what the Rust emitters
+produce and reject the failure shapes CI exists to catch.  The fixtures
+here mirror `obs::Trace::to_chrome_json` and
+`obs::Registry::render_prometheus` byte-for-byte in structure; if either
+Rust emitter changes shape, update the schema AND these fixtures
+together."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import validate_obs
+
+
+def _trace(events):
+    return {
+        "displayTimeUnit": "ms",
+        "traceEvents": [
+            {"args": {"name": "fpga-flow"}, "name": "process_name",
+             "ph": "M", "pid": 1, "tid": 0},
+            *events,
+        ],
+    }
+
+
+def _span(span_id, cat="compile", name="lower", parent=None, **args):
+    a = {"span_id": span_id, **args}
+    if parent is not None:
+        a["parent_id"] = parent
+    return {"args": a, "cat": cat, "dur": 10, "name": name, "ph": "X",
+            "pid": 1, "tid": 1, "ts": 0}
+
+
+def _write_trace(tmp_path, doc):
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_valid_trace_passes(tmp_path):
+    doc = _trace([
+        _span(1, "compile", "lower"),
+        _span(2, "pass", "fuse_conv_relu", parent=1, matched=3),
+        _span(3, "serve", "request", ok=True),
+    ])
+    errs, summary = validate_obs.validate_trace(
+        _write_trace(tmp_path, doc), ["compile", "pass", "serve"], ["lower", "request"])
+    assert errs == []
+    assert "3 spans" in summary
+
+
+def test_unknown_category_and_dangling_parent_fail(tmp_path):
+    doc = _trace([_span(1, "nonsense"), _span(2, parent=99)])
+    errs, _ = validate_obs.validate_trace(_write_trace(tmp_path, doc), [], [])
+    assert any("oneOf" in e for e in errs)
+    assert any("parent_id 99" in e for e in errs)
+
+
+def test_missing_expected_stage_fails(tmp_path):
+    doc = _trace([_span(1, "compile", "lower")])
+    errs, _ = validate_obs.validate_trace(
+        _write_trace(tmp_path, doc), ["compile"], ["synthesize"])
+    assert any("'synthesize' absent" in e for e in errs)
+
+
+def test_missing_metadata_event_fails(tmp_path):
+    doc = {"displayTimeUnit": "ms", "traceEvents": [_span(1)]}
+    errs, _ = validate_obs.validate_trace(_write_trace(tmp_path, doc), [], [])
+    assert any("metadata" in e for e in errs)
+
+
+PROM_FAMILIES = {
+    "flow_analyses_total": ("counter", "flow_analyses_total 6"),
+    "flow_exec_buffers": ("gauge", "flow_exec_buffers 12"),
+    "flow_exec_scratch_checkouts": ("gauge", "flow_exec_scratch_checkouts 24"),
+    "flow_exec_scratch_hits": ("gauge", "flow_exec_scratch_hits 12"),
+    "flow_lower_total": ("counter", "flow_lower_total 1"),
+    "flow_passes_applied_total": ("counter", "flow_passes_applied_total 9"),
+    "flow_serve_batch_size": ("histogram", "\n".join([
+        'flow_serve_batch_size_bucket{le="1"} 2',
+        'flow_serve_batch_size_bucket{le="2"} 5',
+        'flow_serve_batch_size_bucket{le="+Inf"} 5',
+        "flow_serve_batch_size_sum 8",
+        "flow_serve_batch_size_count 5",
+    ])),
+    "flow_serve_batches_total": ("counter", "flow_serve_batches_total 5"),
+    "flow_serve_completed_total": ("counter", "flow_serve_completed_total 100"),
+    "flow_serve_latency_p99_us": ("gauge", "flow_serve_latency_p99_us 1234.5"),
+    "flow_serve_submitted_total": ("counter", "flow_serve_submitted_total 100"),
+}
+
+
+def _prom_text(overrides=None, drop=()):
+    lines = []
+    for name, (kind, body) in sorted(PROM_FAMILIES.items()):
+        if name in drop:
+            continue
+        lines.append(f"# HELP {name} help text for {name}")
+        lines.append(f"# TYPE {name} {kind}")
+        lines.append((overrides or {}).get(name, body))
+    return "\n".join(lines) + "\n"
+
+
+def _write_prom(tmp_path, text):
+    p = tmp_path / "metrics.prom"
+    p.write_text(text)
+    return str(p)
+
+
+def test_valid_metrics_pass(tmp_path):
+    errs, summary = validate_obs.validate_metrics(_write_prom(tmp_path, _prom_text()))
+    assert errs == []
+    assert "1 histograms" in summary
+
+
+def test_missing_required_family_fails(tmp_path):
+    errs, _ = validate_obs.validate_metrics(
+        _write_prom(tmp_path, _prom_text(drop={"flow_lower_total"})))
+    assert any("flow_lower_total" in e for e in errs)
+
+
+def test_non_monotone_histogram_fails(tmp_path):
+    bad = "\n".join([
+        'flow_serve_batch_size_bucket{le="1"} 5',
+        'flow_serve_batch_size_bucket{le="2"} 2',
+        'flow_serve_batch_size_bucket{le="+Inf"} 2',
+        "flow_serve_batch_size_sum 8",
+        "flow_serve_batch_size_count 5",
+    ])
+    errs, _ = validate_obs.validate_metrics(
+        _write_prom(tmp_path, _prom_text({"flow_serve_batch_size": bad})))
+    assert any("cumulative count decreases" in e for e in errs)
+    assert any("+Inf bucket" in e for e in errs)
+
+
+def test_inf_bucket_must_equal_count(tmp_path):
+    bad = "\n".join([
+        'flow_serve_batch_size_bucket{le="1"} 2',
+        'flow_serve_batch_size_bucket{le="+Inf"} 4',
+        "flow_serve_batch_size_sum 8",
+        "flow_serve_batch_size_count 5",
+    ])
+    errs, _ = validate_obs.validate_metrics(
+        _write_prom(tmp_path, _prom_text({"flow_serve_batch_size": bad})))
+    assert any("+Inf bucket 4.0 != _count 5.0" in e for e in errs)
+
+
+def test_garbage_line_fails(tmp_path):
+    errs, _ = validate_obs.validate_metrics(
+        _write_prom(tmp_path, _prom_text() + "this is not prometheus\n"))
+    assert any("unparseable" in e for e in errs)

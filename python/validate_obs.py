@@ -1,0 +1,316 @@
+#!/usr/bin/env python3
+"""Validate fpga-flow observability exports against the committed schemas.
+
+Two subcommands, one per export format:
+
+    python3 python/validate_obs.py trace   target/trace-lenet5.json
+    python3 python/validate_obs.py metrics target/metrics-lenet5.prom
+
+``trace`` validates a Chrome trace-event file (written by ``fpga-flow
+profile`` or ``--trace-out`` on any subcommand) against
+``schemas/trace.schema.json`` and then performs structural checks the
+schema cannot express: the first event is the process_name metadata
+event, span ids are unique, and every parent_id refers to a span that
+exists.  Optional ``--expect-cats`` / ``--expect-names`` assert that
+specific categories or span names appear at least once (CI uses this to
+pin the four compile stages and the serve request lifecycle).
+
+``metrics`` parses Prometheus text exposition format into the canonical
+object described by ``schemas/metrics.schema.json`` (one entry per
+metric family), validates it, checks every family listed in the
+schema's ``x-required-families`` extension is present, and enforces the
+histogram rules (le labels, cumulative monotone buckets, terminal
++Inf == _count, _sum/_count present).
+
+Only the standard library is used: the JSON-Schema subset interpreter
+below covers exactly the keywords the two committed schemas need
+($ref into #/definitions, oneOf, type, const, enum, required,
+properties, additionalProperties:false, items, minItems, minimum,
+minLength, pattern).
+"""
+
+import argparse
+import json
+import math
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SCHEMA_DIR = REPO_ROOT / "schemas"
+
+# ---------------------------------------------------------------------------
+# Minimal JSON-Schema (draft-07 subset) interpreter
+# ---------------------------------------------------------------------------
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "number": (int, float),
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def _resolve_ref(root, ref):
+    if not ref.startswith("#/"):
+        raise ValueError(f"unsupported $ref: {ref}")
+    node = root
+    for part in ref[2:].split("/"):
+        node = node[part]
+    return node
+
+
+def _type_ok(value, name):
+    py = _TYPES[name]
+    if name == "number":
+        return isinstance(value, py) and not isinstance(value, bool)
+    if name == "boolean":
+        return isinstance(value, bool)
+    return isinstance(value, py)
+
+
+def schema_errors(value, schema, root, path="$"):
+    """All violations of `schema` by `value`, as human-readable strings."""
+    errs = []
+    if "$ref" in schema:
+        return schema_errors(value, _resolve_ref(root, schema["$ref"]), root, path)
+
+    if "oneOf" in schema:
+        branches = [schema_errors(value, s, root, path) for s in schema["oneOf"]]
+        matches = sum(1 for b in branches if not b)
+        if matches != 1:
+            detail = "; ".join(b[0] for b in branches if b)[:400]
+            errs.append(f"{path}: matched {matches} of {len(branches)} oneOf branches ({detail})")
+        return errs
+
+    if "const" in schema and value != schema["const"]:
+        errs.append(f"{path}: expected {schema['const']!r}, got {value!r}")
+    if "enum" in schema and value not in schema["enum"]:
+        errs.append(f"{path}: {value!r} not in {schema['enum']}")
+    if "type" in schema and not _type_ok(value, schema["type"]):
+        errs.append(f"{path}: expected {schema['type']}, got {type(value).__name__}")
+        return errs  # child keywords assume the type held
+
+    if isinstance(value, dict):
+        for key in schema.get("required", []):
+            if key not in value:
+                errs.append(f"{path}: missing required key {key!r}")
+        props = schema.get("properties", {})
+        for key, sub in props.items():
+            if key in value:
+                errs.extend(schema_errors(value[key], sub, root, f"{path}.{key}"))
+        if schema.get("additionalProperties") is False:
+            for key in value:
+                if key not in props:
+                    errs.append(f"{path}: unexpected key {key!r}")
+
+    if isinstance(value, list):
+        if "minItems" in schema and len(value) < schema["minItems"]:
+            errs.append(f"{path}: {len(value)} items < minItems {schema['minItems']}")
+        if "items" in schema:
+            for i, item in enumerate(value):
+                errs.extend(schema_errors(item, schema["items"], root, f"{path}[{i}]"))
+
+    if isinstance(value, (int, float)) and not isinstance(value, bool):
+        if "minimum" in schema and value < schema["minimum"]:
+            errs.append(f"{path}: {value} < minimum {schema['minimum']}")
+
+    if isinstance(value, str):
+        if "minLength" in schema and len(value) < schema["minLength"]:
+            errs.append(f"{path}: length {len(value)} < minLength {schema['minLength']}")
+        if "pattern" in schema and not re.search(schema["pattern"], value):
+            errs.append(f"{path}: {value!r} does not match /{schema['pattern']}/")
+
+    return errs
+
+
+def load_schema(name):
+    with open(SCHEMA_DIR / name, encoding="utf-8") as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+def validate_trace(path, expect_cats, expect_names):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    schema = load_schema("trace.schema.json")
+    errs = schema_errors(doc, schema, schema)
+
+    events = doc.get("traceEvents", [])
+    spans = [e for e in events if isinstance(e, dict) and e.get("ph") == "X"]
+    metas = [e for e in events if isinstance(e, dict) and e.get("ph") == "M"]
+
+    if not events or events[0].get("ph") != "M":
+        errs.append("traceEvents[0]: must be the process_name metadata event")
+    if len(metas) != 1:
+        errs.append(f"expected exactly 1 metadata event, found {len(metas)}")
+    if not spans:
+        errs.append("trace contains no complete (ph 'X') span events")
+
+    ids = [e.get("args", {}).get("span_id") for e in spans]
+    if len(ids) != len(set(ids)):
+        errs.append("span_id values are not unique")
+    known = set(ids)
+    for e in spans:
+        parent = e.get("args", {}).get("parent_id")
+        if parent is not None and parent not in known:
+            errs.append(f"span {e.get('name')!r}: parent_id {parent} refers to no recorded span")
+
+    cats = {e.get("cat") for e in spans}
+    names = {e.get("name") for e in spans}
+    for cat in expect_cats:
+        if cat not in cats:
+            errs.append(f"expected category {cat!r} absent (have: {sorted(c for c in cats if c)})")
+    for name in expect_names:
+        if name not in names:
+            errs.append(f"expected span name {name!r} absent")
+
+    return errs, f"{len(spans)} spans, {len(cats)} categories"
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>[^}]*)\})?'
+    r'\s+(?P<value>[^\s]+)$'
+)
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_prometheus(text):
+    """Prometheus text → the canonical {families: [...]} object, plus
+    parse errors."""
+    families, errs = [], []
+    current = None
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line[len("# HELP "):].split(" ", 1)
+            current = {"name": parts[0], "help": parts[1] if len(parts) > 1 else "",
+                       "type": "untyped", "samples": []}
+            families.append(current)
+        elif line.startswith("# TYPE "):
+            parts = line[len("# TYPE "):].split(" ", 1)
+            if current is None or current["name"] != parts[0]:
+                errs.append(f"line {lineno}: TYPE for {parts[0]!r} without preceding HELP")
+            else:
+                current["type"] = parts[1].strip() if len(parts) > 1 else "untyped"
+        elif line.startswith("#"):
+            continue
+        else:
+            m = _SAMPLE_RE.match(line)
+            if not m:
+                errs.append(f"line {lineno}: unparseable sample line {line!r}")
+                continue
+            try:
+                value = float(m.group("value"))
+            except ValueError:
+                errs.append(f"line {lineno}: non-numeric value {m.group('value')!r}")
+                continue
+            labels = dict(_LABEL_RE.findall(m.group("labels") or ""))
+            if current is None or not m.group("name").startswith(current["name"]):
+                errs.append(f"line {lineno}: sample {m.group('name')!r} outside its family block")
+                continue
+            current["samples"].append(
+                {"name": m.group("name"), "labels": labels, "value": value})
+    return {"families": families}, errs
+
+
+def check_histogram(fam):
+    errs = []
+    name = fam["name"]
+    buckets = [s for s in fam["samples"] if s["name"] == f"{name}_bucket"]
+    sums = [s for s in fam["samples"] if s["name"] == f"{name}_sum"]
+    counts = [s for s in fam["samples"] if s["name"] == f"{name}_count"]
+    if not buckets:
+        errs.append(f"histogram {name}: no _bucket samples")
+    if len(sums) != 1 or len(counts) != 1:
+        errs.append(f"histogram {name}: expected exactly one _sum and one _count")
+        return errs
+    prev = -math.inf
+    prev_count = -1.0
+    for s in buckets:
+        le = s["labels"].get("le")
+        if le is None:
+            errs.append(f"histogram {name}: bucket without le label")
+            continue
+        bound = math.inf if le == "+Inf" else float(le)
+        if bound <= prev:
+            errs.append(f"histogram {name}: le bounds not strictly increasing at {le!r}")
+        if s["value"] < prev_count:
+            errs.append(f"histogram {name}: cumulative count decreases at le={le!r}")
+        prev, prev_count = bound, s["value"]
+    if not buckets or buckets[-1]["labels"].get("le") != "+Inf":
+        errs.append(f"histogram {name}: last bucket must be le=\"+Inf\"")
+    elif buckets[-1]["value"] != counts[0]["value"]:
+        errs.append(
+            f"histogram {name}: +Inf bucket {buckets[-1]['value']} != _count {counts[0]['value']}")
+    return errs
+
+
+def validate_metrics(path):
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    doc, errs = parse_prometheus(text)
+    schema = load_schema("metrics.schema.json")
+    errs.extend(schema_errors(doc, schema, schema))
+
+    have = {fam["name"] for fam in doc["families"]}
+    for req in schema.get("x-required-families", []):
+        if req not in have:
+            errs.append(f"required metric family {req!r} absent")
+    for fam in doc["families"]:
+        if fam["type"] == "histogram":
+            errs.extend(check_histogram(fam))
+        elif fam["type"] == "counter":
+            for s in fam["samples"]:
+                if s["value"] < 0 or not math.isfinite(s["value"]):
+                    errs.append(f"counter {fam['name']}: invalid value {s['value']}")
+
+    n_hist = sum(1 for fam in doc["families"] if fam["type"] == "histogram")
+    return errs, f"{len(doc['families'])} families ({n_hist} histograms)"
+
+
+# ---------------------------------------------------------------------------
+# cli
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    t = sub.add_parser("trace", help="validate a Chrome trace-event export")
+    t.add_argument("path")
+    t.add_argument("--expect-cats", default="",
+                   help="comma-separated categories that must appear")
+    t.add_argument("--expect-names", default="",
+                   help="comma-separated span names that must appear")
+    m = sub.add_parser("metrics", help="validate a Prometheus text export")
+    m.add_argument("path")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "trace":
+        cats = [c for c in args.expect_cats.split(",") if c]
+        names = [n for n in args.expect_names.split(",") if n]
+        errs, summary = validate_trace(args.path, cats, names)
+    else:
+        errs, summary = validate_metrics(args.path)
+
+    if errs:
+        for e in errs:
+            print(f"FAIL {args.path}: {e}", file=sys.stderr)
+        return 1
+    print(f"OK {args.path}: {summary}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -457,19 +457,37 @@ pub fn analyze(
 ) -> AnalysisReport {
     let view = View::new(graph, program);
     let mut diagnostics = Vec::new();
-    diagnostics.extend(deadlock::check(&view));
-    diagnostics.extend(overflow::check(&view));
-    diagnostics.extend(crate::flow::legality::check_program(
-        program,
-        device,
-        legality_clock_mhz,
-    ));
-    diagnostics.extend(structure::check(&view));
-    diagnostics.extend(structure::check_budget(program, device));
+    // Each rule family gets a child span (under the session's `analyze`
+    // stage span) whose `findings` arg counts what that family alone
+    // contributed.
+    let mut family = |name: &str, found: &mut dyn FnMut() -> Vec<Diagnostic>| {
+        let mut span = crate::obs::span("analysis", name);
+        let v = found();
+        span.set_arg("findings", v.len());
+        v
+    };
+    diagnostics.extend(family("deadlock", &mut || deadlock::check(&view)));
+    diagnostics.extend(family("overflow", &mut || overflow::check(&view)));
+    diagnostics.extend(family("legality", &mut || {
+        crate::flow::legality::check_program(program, device, legality_clock_mhz)
+    }));
+    diagnostics.extend(family("structure", &mut || structure::check(&view)));
+    diagnostics.extend(family("budget", &mut || structure::check_budget(program, device)));
     if let Some(trace) = trace {
-        diagnostics.extend(consistency::check(trace));
+        diagnostics.extend(family("consistency", &mut || consistency::check(trace)));
     }
-    AnalysisReport { diagnostics }
+    let report = AnalysisReport { diagnostics };
+    if crate::obs::enabled() {
+        let m = crate::obs::global_metrics();
+        m.counter("flow_analyses_total", "analyzer runs").inc();
+        m.counter("flow_diagnostics_error_total", "error diagnostics emitted")
+            .add(report.count(Severity::Error) as u64);
+        m.counter("flow_diagnostics_warning_total", "warning diagnostics emitted")
+            .add(report.count(Severity::Warning) as u64);
+        m.counter("flow_diagnostics_note_total", "note diagnostics emitted")
+            .add(report.count(Severity::Note) as u64);
+    }
+    report
 }
 
 #[cfg(test)]

@@ -104,6 +104,18 @@ impl<T> BatchQueue<T> {
                     }
                 }
                 let k = inner.queue.len().min(self.max_batch);
+                if crate::obs::enabled() {
+                    let reason = if k == self.max_batch {
+                        "flow_serve_flush_full_total"
+                    } else if inner.closed {
+                        "flow_serve_flush_close_total"
+                    } else {
+                        "flow_serve_flush_deadline_total"
+                    };
+                    crate::obs::global_metrics()
+                        .counter(reason, "batch flushes by trigger (size/deadline/close)")
+                        .inc();
+                }
                 return Some(inner.queue.drain(..k).map(|(item, _)| item).collect());
             }
             if inner.closed {

@@ -231,8 +231,11 @@ impl Engine for SimEngine {
             }
         }
         let k = frames.len();
+        let mut span = crate::obs::span("engine", &self.name);
+        span.set_arg("frames", k);
         if k > 0 {
             let dispatches = k.div_ceil(self.native_batch) as u32;
+            span.set_arg("dispatches", dispatches as u64);
             let busy = self.dispatch_overhead * dispatches + self.frame_time * k as u32;
             if busy > Duration::ZERO {
                 std::thread::sleep(busy);

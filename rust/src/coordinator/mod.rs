@@ -133,6 +133,9 @@ impl Default for ServerConfig {
 pub(crate) struct Request {
     pub(crate) frame: Vec<f32>,
     pub(crate) submitted: Instant,
+    /// When the dispatcher popped this request out of the queue — splits
+    /// the lifecycle span into `queued` and `execute` at completion.
+    pub(crate) dispatched: Option<Instant>,
     pub(crate) resp: Sender<crate::Result<u32>>,
 }
 
@@ -227,12 +230,24 @@ impl InferenceServer {
         use std::sync::atomic::Ordering;
         let (tx, rx) = channel();
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
-        let req = Request { frame, submitted: Instant::now(), resp: tx };
+        let req = Request { frame, submitted: Instant::now(), dispatched: None, resp: tx };
         match self.queue.push(req) {
-            Ok(()) => Ok(rx),
+            Ok(()) => {
+                if crate::obs::enabled() {
+                    crate::obs::global_metrics()
+                        .counter("flow_serve_submitted_total", "requests accepted into the queue")
+                        .inc();
+                }
+                Ok(rx)
+            }
             Err(PushError::Full(_)) => {
                 self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                if crate::obs::enabled() {
+                    crate::obs::global_metrics()
+                        .counter("flow_serve_rejected_total", "requests shed by backpressure")
+                        .inc();
+                }
                 Err(ServerError::Overloaded { capacity: self.queue.capacity() }.into())
             }
             Err(PushError::Closed(_)) => {
@@ -285,11 +300,12 @@ impl Drop for InferenceServer {
 /// Exits (dropping the replica channels) once the queue is closed *and*
 /// drained.
 fn dispatcher_loop(mut set: ReplicaSet, queue: Arc<BatchQueue<Request>>, shared: Arc<Shared>) {
-    while let Some(batch) = queue.pop_batch() {
+    while let Some(mut batch) = queue.pop_batch() {
         let now = Instant::now();
         {
             let mut ql = shared.queue_latency.lock().unwrap();
-            for r in &batch {
+            for r in &mut batch {
+                r.dispatched = Some(now);
                 ql.record(now.saturating_duration_since(r.submitted).as_micros() as u64);
             }
         }

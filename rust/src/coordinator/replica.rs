@@ -141,6 +141,22 @@ fn execute_batch(idx: usize, engine: &dyn Engine, shared: &Shared, batch: &[Requ
     let t0 = Instant::now();
     let result = engine.classify_batch(&frames);
     let busy_us = t0.elapsed().as_micros() as u64;
+    if crate::obs::enabled() {
+        crate::obs::span_at(
+            "serve",
+            "batch",
+            None,
+            t0,
+            Instant::now(),
+            vec![
+                ("frames", crate::obs::ArgValue::Num(batch.len() as f64)),
+                ("replica", crate::obs::ArgValue::Num(idx as f64)),
+            ],
+        );
+        crate::obs::global_metrics()
+            .counter("flow_serve_batches_total", "batches executed across all replicas")
+            .inc();
+    }
 
     let k = batch.len();
     shared.batches.fetch_add(1, Ordering::Relaxed);
@@ -178,9 +194,30 @@ fn execute_batch(idx: usize, engine: &dyn Engine, shared: &Shared, batch: &[Requ
 /// counts every delivered response, errors included: it is the "nothing
 /// was dropped" counter, not the success counter.
 pub(crate) fn finish(shared: &Shared, req: &Request, result: crate::Result<u32>) {
-    let us = req.submitted.elapsed().as_micros() as u64;
+    let done = Instant::now();
+    let us = done.saturating_duration_since(req.submitted).as_micros() as u64;
     shared.latency.lock().unwrap().record(us);
     shared.completed.fetch_add(1, Ordering::Relaxed);
+    if crate::obs::enabled() {
+        // The full lifecycle span tree, reconstructed post-hoc:
+        // `request` (submit → response) with `queued` (submit → dispatch)
+        // and `execute` (dispatch → response) children.
+        let id = crate::obs::span_at(
+            "serve",
+            "request",
+            None,
+            req.submitted,
+            done,
+            vec![("ok", crate::obs::ArgValue::Bool(result.is_ok()))],
+        );
+        if let Some(d) = req.dispatched {
+            crate::obs::span_at("serve", "queued", id, req.submitted, d, vec![]);
+            crate::obs::span_at("serve", "execute", id, d, done, vec![]);
+        }
+        crate::obs::global_metrics()
+            .counter("flow_serve_completed_total", "responses delivered (successes and errors)")
+            .inc();
+    }
     let _ = req.resp.send(result);
 }
 

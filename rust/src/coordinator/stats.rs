@@ -54,6 +54,54 @@ impl StatsSnapshot {
             frames as f64 / self.batches as f64
         }
     }
+
+    /// Re-register this snapshot as first-class metrics: gauges for the
+    /// counters and latency percentiles, the batch-size histogram as a
+    /// real [`crate::obs::Histogram`] (one bucket per size). Gauges are
+    /// last-write-wins, but the histogram import is cumulative — call
+    /// once per run (the `profile`/`serve` exports do, at shutdown).
+    pub fn export_metrics(&self, reg: &crate::obs::Registry) {
+        reg.set_gauge("flow_serve_submitted", "requests accepted into the queue", self.submitted as f64);
+        reg.set_gauge("flow_serve_completed", "responses delivered", self.completed as f64);
+        reg.set_gauge("flow_serve_rejected", "requests shed by backpressure", self.rejected as f64);
+        reg.set_gauge("flow_serve_batches", "batches executed", self.batches as f64);
+        reg.set_gauge("flow_serve_batched_frames", "frames inside multi-frame batches", self.batched_frames as f64);
+        reg.set_gauge("flow_serve_mean_batch_size", "mean frames per executed batch", self.mean_batch_size());
+        if let Some(p) = self.p50_us {
+            reg.set_gauge("flow_serve_latency_p50_us", "submit-to-response p50", p as f64);
+        }
+        if let Some(p) = self.p99_us {
+            reg.set_gauge("flow_serve_latency_p99_us", "submit-to-response p99", p as f64);
+        }
+        if let Some(m) = self.mean_us {
+            reg.set_gauge("flow_serve_latency_mean_us", "submit-to-response mean", m);
+        }
+        if let Some(p) = self.queue_p50_us {
+            reg.set_gauge("flow_serve_queue_latency_p50_us", "submit-to-dispatch p50", p as f64);
+        }
+        if let Some(p) = self.queue_p99_us {
+            reg.set_gauge("flow_serve_queue_latency_p99_us", "submit-to-dispatch p99", p as f64);
+        }
+        if !self.batch_hist.is_empty() {
+            let bounds: Vec<f64> = (1..=self.batch_hist.len()).map(|i| i as f64).collect();
+            let h = reg.histogram("flow_serve_batch_size", "frames per executed batch", &bounds);
+            for (i, &n) in self.batch_hist.iter().enumerate() {
+                h.observe_n((i + 1) as f64, n);
+            }
+        }
+        for (i, r) in self.replicas.iter().enumerate() {
+            reg.set_gauge(
+                &format!("flow_serve_replica_{i}_frames"),
+                &format!("frames executed by replica {}", r.name),
+                r.frames as f64,
+            );
+            reg.set_gauge(
+                &format!("flow_serve_replica_{i}_occupancy"),
+                &format!("busy fraction of replica {}", r.name),
+                r.occupancy,
+            );
+        }
+    }
 }
 
 /// Per-replica serving statistics.

@@ -282,6 +282,40 @@ fn point_of(
     accuracy_delta_pp: f64,
     plan: &FactorPlan,
 ) -> DsePoint {
+    // Candidates evaluate on pool workers, so each span is a root on its
+    // worker's Perfetto track. Cache attribution is the compiler-wide
+    // hit-counter delta around this evaluation: exact under the sweeps'
+    // coordinate-descent structure (candidates running concurrently each
+    // synthesize a distinct plan, so a hit observed here is this
+    // candidate's own).
+    let mut span = crate::obs::span("dse", "candidate");
+    let cache_before =
+        if crate::obs::enabled() { Some(compiler.cache_stats()) } else { None };
+    let p = point_of_inner(compiler, graph, mode, cfg, accuracy_delta_pp, plan);
+    if let Some(before) = cache_before {
+        let after = compiler.cache_stats();
+        span.set_arg("synth_cache_hit", after.hits > before.hits);
+        span.set_arg("mode", mode.name());
+        span.set_arg("precision", cfg.precision.name());
+        span.set_arg("fps", p.fps);
+        span.set_arg("accepted", p.rejected.is_none());
+        let m = crate::obs::global_metrics();
+        m.counter("flow_dse_candidates_total", "DSE candidate evaluations").inc();
+        if p.rejected.is_some() {
+            m.counter("flow_dse_candidates_rejected_total", "DSE candidates rejected").inc();
+        }
+    }
+    p
+}
+
+fn point_of_inner(
+    compiler: &Compiler,
+    graph: &Graph,
+    mode: Mode,
+    cfg: &OptConfig,
+    accuracy_delta_pp: f64,
+    plan: &FactorPlan,
+) -> DsePoint {
     match eval_point(compiler, graph, mode, cfg, accuracy_delta_pp, plan) {
         Ok(p) => p,
         Err(e) => DsePoint {

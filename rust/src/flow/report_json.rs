@@ -125,6 +125,18 @@ impl Accelerator {
         );
         Json::Obj(root)
     }
+
+    /// [`Accelerator::to_json`] plus an `observability` section: the
+    /// global metrics snapshot and (when a trace is supplied) a
+    /// per-category span summary. Kept separate from `to_json` so the
+    /// golden reports stay byte-identical whether or not a run traced.
+    pub fn to_json_with_observability(&self, trace: Option<&crate::obs::Trace>) -> Json {
+        let mut j = self.to_json();
+        if let Json::Obj(root) = &mut j {
+            root.insert("observability".into(), crate::obs::observability_json(trace));
+        }
+        j
+    }
 }
 
 fn pareto_point_json(p: &ParetoPoint) -> Json {

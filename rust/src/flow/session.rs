@@ -40,6 +40,7 @@ use crate::aoc::{self, FmaxModel, SynthesisReport};
 use crate::codegen::KernelProgram;
 use crate::device::Target;
 use crate::graph::Graph;
+use crate::obs;
 use crate::quant::{self, QuantConfig, QuantReport};
 use crate::sim::folded::LayerWork;
 use crate::sim::{folded, pipelined, HostModel, PerformanceReport};
@@ -502,6 +503,13 @@ impl CompileSession {
     pub fn lower(&mut self) -> crate::Result<&LoweredProgram> {
         if self.lowered.is_none() {
             let src = self.graph.as_ref().ok_or(CompileError::MissingGraph)?;
+            let mut stage_span = obs::span("compile", "lower");
+            stage_span.set_arg("network", src.name.as_str());
+            if obs::enabled() {
+                obs::global_metrics()
+                    .counter("flow_lower_total", "CompileSession lower-stage executions")
+                    .inc();
+            }
             src.validate().map_err(CompileError::InvalidGraph)?;
             self.cfg.validate()?;
             // Quantization front-end (when requested): BN-fold, calibrate,
@@ -541,6 +549,8 @@ impl CompileSession {
                     }
                 }
             };
+            stage_span.set_arg("mode", mode.name());
+            stage_span.set_arg("precision", cfg.precision.name());
             let built = match prebuilt {
                 Some(built) => built,
                 None => patterns::build_with_passes(graph, mode, &cfg, &plan),
@@ -699,7 +709,18 @@ impl LoweredProgram {
 
     /// Stage 2: run (or recall) the AOC model for this program.
     pub fn synthesize(&self) -> crate::Result<SynthesizedDesign> {
+        let mut stage_span = obs::span("compile", "synthesize");
+        stage_span.set_arg("network", self.network.as_str());
         let (synthesis, cache_hit) = self.compiler.synthesize_memoized(&self.program)?;
+        stage_span.set_arg("cache_hit", cache_hit);
+        if obs::enabled() {
+            let m = obs::global_metrics();
+            if cache_hit {
+                m.counter("flow_synth_cache_hits_total", "synthesis-memo hits").inc();
+            } else {
+                m.counter("flow_synth_cache_misses_total", "synthesis-memo misses").inc();
+            }
+        }
         Ok(SynthesizedDesign { lowered: self.clone(), synthesis, cache_hit })
     }
 
@@ -709,14 +730,18 @@ impl LoweredProgram {
     /// [`CompileError::Analysis`]). Independent of synthesis; the
     /// pass-trace consistency lints run against this lowering's trace.
     pub fn analyze(&self) -> crate::analysis::AnalysisReport {
+        let mut stage_span = obs::span("compile", "analyze");
+        stage_span.set_arg("network", self.network.as_str());
         let device = &self.compiler.target.device;
-        crate::analysis::analyze(
+        let report = crate::analysis::analyze(
             &self.graph,
             &self.program,
             device,
             device.legality_clock_mhz,
             Some(&self.trace),
-        )
+        );
+        stage_span.set_arg("diagnostics", report.diagnostics.len());
+        report
     }
 
     /// Differentially verify this program against the graph-level oracle
@@ -725,6 +750,9 @@ impl LoweredProgram {
     /// the documented tolerance for f32/fp16 (`docs/VERIFICATION.md`).
     /// Independent of synthesis — callable straight after `lower`.
     pub fn verify(&self, frames: usize, seed: u64) -> crate::verify::VerifyReport {
+        let mut stage_span = obs::span("compile", "verify");
+        stage_span.set_arg("network", self.network.as_str());
+        stage_span.set_arg("frames", frames);
         let opts = crate::verify::VerifyOptions {
             scheme: self.quant.as_ref().map(|q| q.scheme).unwrap_or_default(),
             ..Default::default()
@@ -776,6 +804,7 @@ impl SynthesizedDesign {
 
     /// Stage 3: simulate performance at the synthesized clock.
     pub fn simulate(&self) -> crate::Result<Accelerator> {
+        let _stage_span = obs::span("compile", "simulate");
         let l = &self.lowered;
         let performance = self.performance();
         Ok(Accelerator {

@@ -72,6 +72,10 @@
 //! * [`data`] — synthetic dataset generation (deterministic).
 //! * [`metrics`] — FPS/GFLOPS accounting, paper tables, serving latency
 //!   stats and the batch-size histogram (§V-C).
+//! * [`obs`] — flow-wide observability: hierarchical span tracer + typed
+//!   metrics registry threaded through compile stages, passes, analysis,
+//!   host execution, DSE and serving; exports Chrome trace-event JSON
+//!   (Perfetto) and Prometheus text (`fpga-flow profile`, `--trace-out`).
 //!
 //! ## Quickstart
 //!
@@ -147,6 +151,7 @@ pub mod dse;
 pub mod flow;
 pub mod graph;
 pub mod metrics;
+pub mod obs;
 pub mod pass;
 pub mod quant;
 pub mod runtime;

@@ -28,6 +28,10 @@
 //! fpga-flow hybrid   --net mobilenet_v1      # mixed pipelined/folded (§V-F)
 //! fpga-flow multi    --net resnet34 --devices 2  # multi-FPGA (§VII)
 //! fpga-flow passes   --net resnet34          # graph-level passes (bn-fold, DCE)
+//! fpga-flow profile  --net lenet5 [--requests 100] [--trace-out p.json]
+//!                    [--metrics-out p.prom] [--json]
+//!                    # trace the whole flow: compile stages, passes,
+//!                    # per-layer execution, serve lifecycle
 //! fpga-flow validate                          # artifact cross-checks
 //! ```
 //!
@@ -35,7 +39,9 @@
 //! the target supplies the device envelope, the §IV-J legality clock and
 //! the f_max base the AOC model degrades from. `--precision` routes the
 //! compilation through the `quant` subsystem (calibration, Q/DQ rewrite,
-//! accuracy accounting).
+//! accuracy accounting). `--trace-out <path>` on any subcommand records
+//! the run with the `obs` tracer and writes a Chrome trace-event JSON
+//! (load it at <https://ui.perfetto.dev>); see docs/OBSERVABILITY.md.
 
 use tvm_fpga_flow::coordinator::{EngineSpec, InferenceServer, ServerConfig, ServerError, SimEngine};
 use tvm_fpga_flow::device::Target;
@@ -52,6 +58,16 @@ use tvm_fpga_flow::util::cli::Args;
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    // `--trace-out` on any subcommand records the whole run with the obs
+    // tracer; `profile` always traces and manages its own exports.
+    let trace_out = if cmd == "profile" {
+        None
+    } else {
+        args.opt("trace-out").map(std::path::PathBuf::from)
+    };
+    if trace_out.is_some() {
+        tvm_fpga_flow::obs::enable();
+    }
     let result = match cmd {
         "compile" => cmd_compile(&args),
         "explain" => cmd_explain(&args),
@@ -68,16 +84,38 @@ fn main() {
         "hybrid" => cmd_hybrid(&args),
         "multi" => cmd_multi(&args),
         "passes" => cmd_passes(&args),
+        "profile" => cmd_profile(&args),
         "validate" => cmd_validate(),
         _ => {
             print_help();
             Ok(())
         }
     };
+    if let Some(path) = &trace_out {
+        // Written even when the command failed — a failing run's trace is
+        // the one worth looking at. Status goes to stderr so `--json`
+        // stdout stays parseable.
+        tvm_fpga_flow::obs::disable();
+        let trace = tvm_fpga_flow::obs::take();
+        match write_trace(path, &trace) {
+            Ok(()) => eprintln!("trace: {} span(s) written to {}", trace.len(), path.display()),
+            Err(e) => eprintln!("trace: could not write {}: {e}", path.display()),
+        }
+    }
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// Write a collected trace as Chrome trace-event JSON.
+fn write_trace(path: &std::path::Path, trace: &tvm_fpga_flow::obs::Trace) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, trace.to_chrome_json().to_string())
 }
 
 fn print_help() {
@@ -127,8 +165,16 @@ fn print_help() {
          hybrid    --net <n>                       mixed pipelined/folded (§V-F)\n\
          multi     --net <n> --devices 2           multi-FPGA partition (§VII)\n\
          passes    --net <n>                       graph passes (bn-fold, DCE)\n\
+         profile   --net <n> [--requests 100] [--frames 8]\n\
+                   [--trace-out <p>] [--metrics-out <p>] [--json]\n\
+                   run the whole flow with the tracer on (compile stages,\n\
+                   passes, analysis rules, per-layer execution, a serve\n\
+                   run) and export a Perfetto-loadable Chrome trace plus\n\
+                   Prometheus metrics text (docs/OBSERVABILITY.md)\n\
          validate  artifact cross-checks           (needs artifacts)\n\
          \n\
+         every subcommand also accepts --trace-out <path> to record the\n\
+         run as a Chrome trace\n\
          targets: {}\n\
          docs: docs/CLI.md has one worked example per subcommand",
         Target::names().join(" ")
@@ -254,7 +300,14 @@ fn cmd_compile(args: &Args) -> tvm_fpga_flow::Result<()> {
     }
     let acc = compile_arg(&compiler, &g, args)?;
     if args.has_flag("json") {
-        println!("{}", acc.to_json().to_string());
+        // Under --trace-out the report gains its observability section
+        // (metrics snapshot; the span tree goes to the trace file).
+        let j = if tvm_fpga_flow::obs::enabled() {
+            acc.to_json_with_observability(None)
+        } else {
+            acc.to_json()
+        };
+        println!("{}", j.to_string());
         return Ok(());
     }
     let (logic, bram, dsp, fmax) = acc.synthesis.table2_row();
@@ -815,6 +868,139 @@ fn cmd_passes(args: &Args) -> tvm_fpga_flow::Result<()> {
         "compiled FPS: {:.2} (original graph) vs {:.2} (after passes)",
         before.performance.fps, after.performance.fps
     );
+    Ok(())
+}
+
+/// `fpga-flow profile`: one traced pass over the whole flow. Runs the
+/// staged compile (lower → analyze → verify → synthesize → simulate), a
+/// per-layer-traced host-execution loop on both executor paths, and a
+/// serve run through the simulated engine — all with the `obs` tracer on —
+/// then exports the Chrome trace-event JSON (Perfetto-loadable) and the
+/// Prometheus metrics text. With `--json`, prints the accelerator report
+/// with its `observability` section (metrics snapshot + span summary).
+fn cmd_profile(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::flow::multi::ReplicaPlan;
+    use tvm_fpga_flow::obs;
+    use tvm_fpga_flow::quant::{Executor, FastExecutor};
+
+    let g = net_arg(args)?;
+    let compiler = compiler_arg(args)?;
+    let requests: usize = args.opt_parse("requests").unwrap_or(100).max(1);
+    let frames: usize = args.opt_parse("frames").unwrap_or(8).max(1);
+    let max_batch: usize = args.opt_parse("max-batch").unwrap_or(8).max(1);
+    let time_scale: f64 = args.opt_parse("time-scale").unwrap_or(1.0);
+
+    obs::enable();
+    let metrics = obs::global_metrics();
+
+    // Compile stages — each becomes a `compile` span with pass and
+    // analysis-rule children.
+    let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
+    let cfg = if level == OptLevel::Base { OptConfig::base() } else { OptConfig::optimized() };
+    let mut session = compiler.graph(&g).mode(mode_arg(args)).opts(cfg);
+    if let Some(p) = precision_arg(args)? {
+        if p != Precision::F32 {
+            session = session.with_quantization(quant_cfg_args(args, p)?);
+        }
+    }
+    let analysis = session.analyze()?;
+    let verify_rep = session.verify(2)?;
+    let acc = session.run()?;
+
+    // Host execution: one frame through the reference executor and
+    // `frames` through the arena fast path, each layer a child span.
+    let data = tvm_fpga_flow::data::for_network(&g.name, frames.min(16), 7)
+        .ok_or_else(|| anyhow::anyhow!("no data generator for {}", g.name))?;
+    let exec = Executor::new(&g);
+    std::hint::black_box(exec.forward_traced(data.frame(0)));
+    let mut scratch = tvm_fpga_flow::util::scratch::Scratch::new();
+    let mut fast = FastExecutor::reference(&exec, true, &mut scratch);
+    for i in 0..frames {
+        std::hint::black_box(fast.forward_traced(data.frame(i % data.frames())));
+    }
+    let exec_stats = fast.stats();
+    exec_stats.export_metrics(metrics);
+    fast.release(&mut scratch);
+
+    // Serve run: every request's enqueue → batch → dispatch → complete
+    // lifecycle lands in the trace; the snapshot re-registers the serving
+    // stats as first-class metrics.
+    let plan = ReplicaPlan::build_with(&g, &[compiler.target.name.as_str()], None)?;
+    let server = InferenceServer::start(ServerConfig {
+        network: g.name.clone(),
+        workers: 1,
+        max_batch,
+        max_wait: std::time::Duration::from_micros(500),
+        queue_capacity: requests.max(64),
+        replicas: SimEngine::from_plan(&plan, &g, max_batch)?
+            .into_iter()
+            .map(|e| EngineSpec::Sim(e.with_time_scale(time_scale)))
+            .collect(),
+        ..Default::default()
+    })?;
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        pending.push(server.infer_async(data.frame(i % data.frames()).to_vec())?);
+    }
+    for rx in pending {
+        rx.recv().map_err(|_| anyhow::anyhow!("response dropped"))??;
+    }
+    let serve_stats = server.shutdown();
+    serve_stats.export_metrics(metrics);
+
+    // Export: Chrome trace + Prometheus text.
+    obs::disable();
+    let trace = obs::take();
+    let trace_path = std::path::PathBuf::from(
+        args.opt_or("trace-out", &format!("target/trace-{}.json", g.name)),
+    );
+    write_trace(&trace_path, &trace)?;
+    let prom_path = std::path::PathBuf::from(
+        args.opt_or("metrics-out", &format!("target/metrics-{}.prom", g.name)),
+    );
+    if let Some(dir) = prom_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&prom_path, metrics.render_prometheus())?;
+
+    if args.has_flag("json") {
+        println!("{}", acc.to_json_with_observability(Some(&trace)).to_string());
+        return Ok(());
+    }
+    println!("profile — {} on {} ({} mode, {})", g.name, compiler.target.name, acc.mode.name(), acc.precision);
+    println!(
+        "compile : {} passes applied, {} skipped; {} diagnostics; verify {}",
+        acc.pass_trace.applied(),
+        acc.pass_trace.skipped(),
+        analysis.diagnostics.len(),
+        if verify_rep.passed { "ok" } else { "FAILED" }
+    );
+    println!(
+        "exec    : {frames} fast-path frame(s), scratch hit rate {:.0}% ({} buffers, {} B)",
+        exec_stats.scratch.hit_rate() * 100.0,
+        exec_stats.buffers,
+        exec_stats.buffer_bytes
+    );
+    println!(
+        "serve   : {requests} request(s) → {} batch(es), p50 {}µs  p99 {}µs",
+        serve_stats.batches,
+        serve_stats.p50_us.unwrap_or(0),
+        serve_stats.p99_us.unwrap_or(0)
+    );
+    println!(
+        "spans   : {} total ({} compile, {} pass, {} analysis, {} exec, {} verify, {} serve)",
+        trace.len(),
+        trace.in_cat("compile").len(),
+        trace.in_cat("pass").len(),
+        trace.in_cat("analysis").len(),
+        trace.in_cat("exec").len(),
+        trace.in_cat("verify").len(),
+        trace.in_cat("serve").len()
+    );
+    println!("trace   : {}", trace_path.display());
+    println!("metrics : {}", prom_path.display());
     Ok(())
 }
 

@@ -1,0 +1,378 @@
+//! Typed metrics registry: counters, gauges and histograms with a
+//! Prometheus text exporter and a JSON snapshot for `report_json`.
+//!
+//! Handles are `Arc`-shared and lock-free to update (atomics), so pool
+//! workers and replica threads increment concurrently without contending
+//! on the registry lock — the registry is only locked to register or
+//! export. Names follow Prometheus conventions
+//! (`flow_passes_applied_total`, `serve_queue_latency_us`); the catalog
+//! lives in docs/OBSERVABILITY.md.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins float gauge (stored as `f64` bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram. `bounds` are inclusive upper bounds; one
+/// implicit `+Inf` overflow bucket catches everything beyond the last
+/// bound, so no observation is ever dropped.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` buckets; the last is the overflow bucket.
+    buckets: Vec<AtomicU64>,
+    /// Sum of observed values, as `f64` bits (CAS loop — observations
+    /// race but never lose updates).
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        let mut b = bounds.to_vec();
+        b.sort_by(f64::total_cmp);
+        b.dedup();
+        let buckets = (0..=b.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds: b, buckets, sum_bits: AtomicU64::new(0f64.to_bits()), count: AtomicU64::new(0) }
+    }
+
+    pub fn observe(&self, v: f64) {
+        self.observe_n(v, 1);
+    }
+
+    /// Record `n` observations of the same value (bulk import of an
+    /// already-aggregated histogram, e.g. [`crate::metrics::BatchHistogram`]).
+    pub fn observe_n(&self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(n, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::Relaxed);
+        let add = v * n as f64;
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + add).to_bits();
+            match self.sum_bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket (non-cumulative) counts; the final entry is the `+Inf`
+    /// overflow bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Handle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Handle {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Handle::Counter(_) => "counter",
+            Handle::Gauge(_) => "gauge",
+            Handle::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    help: String,
+    handle: Handle,
+}
+
+/// A named collection of metrics. [`crate::obs::global_metrics`] is the
+/// process-wide instance; tests build private ones.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, help: &str, make: impl FnOnce() -> Handle) -> Handle {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry { help: help.to_string(), handle: make() });
+        e.handle.clone()
+    }
+
+    /// Get-or-register a counter. Panics if `name` is already registered
+    /// as a different metric type (a programming error, not a data error).
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        match self.register(name, help, || Handle::Counter(Arc::new(Counter::default()))) {
+            Handle::Counter(c) => c,
+            other => panic!("metric {name} is a {}, not a counter", other.type_name()),
+        }
+    }
+
+    /// Get-or-register a gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        match self.register(name, help, || Handle::Gauge(Arc::new(Gauge::default()))) {
+            Handle::Gauge(g) => g,
+            other => panic!("metric {name} is a {}, not a gauge", other.type_name()),
+        }
+    }
+
+    /// Get-or-register a histogram (bounds are fixed by the first
+    /// registration).
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Arc<Histogram> {
+        match self.register(name, help, || Handle::Histogram(Arc::new(Histogram::new(bounds)))) {
+            Handle::Histogram(h) => h,
+            other => panic!("metric {name} is a {}, not a histogram", other.type_name()),
+        }
+    }
+
+    /// Register-and-set in one call (export paths that write snapshots).
+    pub fn set_gauge(&self, name: &str, help: &str, v: f64) {
+        self.gauge(name, help).set(v);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// Drop every registered metric (test isolation; existing handles
+    /// keep working but are no longer exported).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+
+    /// Flat name → value view of counters and gauges (histograms expand
+    /// to `_count` and `_sum`). Tests diff two snapshots to assert exact
+    /// deltas without assuming a pristine registry.
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        let m = self.inner.lock().unwrap();
+        let mut out = BTreeMap::new();
+        for (name, e) in m.iter() {
+            match &e.handle {
+                Handle::Counter(c) => {
+                    out.insert(name.clone(), c.get() as f64);
+                }
+                Handle::Gauge(g) => {
+                    out.insert(name.clone(), g.get());
+                }
+                Handle::Histogram(h) => {
+                    out.insert(format!("{name}_count"), h.count() as f64);
+                    out.insert(format!("{name}_sum"), h.sum());
+                }
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition format (`# HELP` / `# TYPE` / samples;
+    /// histograms render cumulative `_bucket{le=...}` series).
+    pub fn render_prometheus(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, e) in m.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", e.help.replace('\n', " "));
+            let _ = writeln!(out, "# TYPE {name} {}", e.handle.type_name());
+            match &e.handle {
+                Handle::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Handle::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", fmt_f64(g.get()));
+                }
+                Handle::Histogram(h) => {
+                    let mut cum = 0u64;
+                    let counts = h.bucket_counts();
+                    for (i, b) in h.bounds().iter().enumerate() {
+                        cum += counts[i];
+                        let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", fmt_f64(*b));
+                    }
+                    cum += counts.last().copied().unwrap_or(0);
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+                    let _ = writeln!(out, "{name}_sum {}", fmt_f64(h.sum()));
+                    let _ = writeln!(out, "{name}_count {}", h.count());
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot (the `observability.metrics` section of
+    /// `report_json`).
+    pub fn to_json(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        let mut root = BTreeMap::new();
+        for (name, e) in m.iter() {
+            let mut o = BTreeMap::new();
+            o.insert("type".into(), Json::Str(e.handle.type_name().into()));
+            o.insert("help".into(), Json::Str(e.help.clone()));
+            match &e.handle {
+                Handle::Counter(c) => {
+                    o.insert("value".into(), Json::Num(c.get() as f64));
+                }
+                Handle::Gauge(g) => {
+                    o.insert("value".into(), Json::Num(g.get()));
+                }
+                Handle::Histogram(h) => {
+                    o.insert("bounds".into(), Json::Arr(h.bounds().iter().map(|b| Json::Num(*b)).collect()));
+                    o.insert(
+                        "buckets".into(),
+                        Json::Arr(h.bucket_counts().iter().map(|c| Json::Num(*c as f64)).collect()),
+                    );
+                    o.insert("sum".into(), Json::Num(h.sum()));
+                    o.insert("count".into(), Json::Num(h.count() as f64));
+                }
+            }
+            root.insert(name.clone(), Json::Obj(o));
+        }
+        Json::Obj(root)
+    }
+}
+
+/// Shortest float form that still round-trips integers without a dot
+/// (Prometheus accepts both; integers keep the text diff-friendly).
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("flow_tests_total", "test counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Re-registration returns the same underlying handle.
+        assert_eq!(r.counter("flow_tests_total", "ignored").get(), 5);
+        r.set_gauge("flow_gauge", "g", 2.5);
+        assert_eq!(r.gauge("flow_gauge", "g").get(), 2.5);
+        let snap = r.snapshot();
+        assert_eq!(snap["flow_tests_total"], 5.0);
+        assert_eq!(snap["flow_gauge"], 2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let h = Histogram::new(&[1.0, 5.0, 10.0]);
+        h.observe(0.5); // bucket le=1
+        h.observe(1.0); // le=1 (inclusive upper bound)
+        h.observe(3.0); // le=5
+        h.observe(100.0); // overflow (+Inf)
+        assert_eq!(h.bucket_counts(), vec![2, 1, 0, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 104.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_bulk_observe() {
+        let h = Histogram::new(&[2.0, 4.0]);
+        h.observe_n(1.0, 3);
+        h.observe_n(9.0, 2);
+        h.observe_n(1.0, 0); // no-op
+        assert_eq!(h.bucket_counts(), vec![3, 0, 2]);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 21.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_text_format() {
+        let r = Registry::new();
+        r.counter("a_total", "a counter").add(3);
+        r.set_gauge("b_gauge", "a gauge", 1.5);
+        let h = r.histogram("c_us", "a histogram", &[1.0, 2.0]);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE a_total counter\na_total 3\n"), "{text}");
+        assert!(text.contains("# TYPE b_gauge gauge\nb_gauge 1.5\n"), "{text}");
+        assert!(text.contains("c_us_bucket{le=\"1\"} 1\n"), "{text}");
+        assert!(text.contains("c_us_bucket{le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("c_us_sum 5.5\n"), "{text}");
+        assert!(text.contains("c_us_count 2\n"), "{text}");
+    }
+
+    #[test]
+    fn json_snapshot_shape() {
+        let r = Registry::new();
+        r.counter("x_total", "x").inc();
+        r.histogram("h_us", "h", &[1.0]).observe(3.0);
+        let j = crate::util::json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("x_total").unwrap().get("value").unwrap().as_u64(), Some(1));
+        let h = j.get("h_us").unwrap();
+        assert_eq!(h.get("type").unwrap().as_str(), Some("histogram"));
+        assert_eq!(h.get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(h.get("buckets").unwrap().idx(1).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn clear_empties_the_registry() {
+        let r = Registry::new();
+        r.counter("x_total", "x").inc();
+        assert!(!r.is_empty());
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.render_prometheus(), "");
+    }
+}

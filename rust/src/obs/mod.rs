@@ -1,0 +1,552 @@
+//! Flow-wide observability: a hierarchical span tracer plus a typed
+//! metrics registry, near-zero-overhead when disabled.
+//!
+//! Every layer of the flow reports into this one substrate:
+//!
+//! * compile stages ([`crate::flow::CompileSession`] lower / analyze /
+//!   synthesize / verify) open parent spans; each pass run by the
+//!   [`crate::pass::PassManager`] and each analysis family run by
+//!   [`crate::analysis::analyze`] opens a child span;
+//! * host execution emits per-layer spans
+//!   ([`crate::quant::exec::FastExecutor::forward_traced`],
+//!   [`crate::quant::exec::Executor::forward_traced`], the verify
+//!   interpreter's per-kernel dispatch) and scratch hit/miss counters;
+//! * the DSE emits one span per candidate with synthesis-cache hit
+//!   attribution;
+//! * the serving coordinator emits a request-lifecycle span tree
+//!   (`request` → `queued`/`execute`) plus batch and engine spans, and
+//!   re-registers its [`crate::metrics::LatencyStats`] /
+//!   [`crate::metrics::BatchHistogram`] snapshots as first-class metrics
+//!   ([`crate::coordinator::StatsSnapshot::export_metrics`]).
+//!
+//! Two export formats (docs/OBSERVABILITY.md):
+//!
+//! * **Chrome trace-event JSON** ([`Trace::to_chrome_json`]) — open the
+//!   file in Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`;
+//! * **Prometheus text** ([`metrics::Registry::render_prometheus`]).
+//!
+//! ## Enable/disable contract
+//!
+//! The tracer is a process-global switch ([`enable`]/[`disable`]), off by
+//! default. Disabled, every instrumentation site reduces to one relaxed
+//! atomic load (most sites hoist even that out of their inner loops) and
+//! performs **zero heap allocations** — `rust/tests/alloc_regression.rs`
+//! pins this, and `benches/obs_overhead.rs` asserts the disabled-mode
+//! cost is ≤ 1% of a FastExecutor frame. Span guards created while the
+//! tracer was enabled still record at drop even if it is disabled in
+//! between, so the span tree never loses an `end`.
+//!
+//! Parent/child nesting uses a thread-local span stack: a span opened
+//! while another is live on the same thread becomes its child. Spans on
+//! other threads (pool workers, replica workers) start new roots under
+//! their own `tid`, which is exactly how Perfetto renders tracks.
+
+pub mod metrics;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A span argument value (rendered into the Chrome event's `args`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> ArgValue {
+        ArgValue::Num(v)
+    }
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> ArgValue {
+        ArgValue::Num(v as f64)
+    }
+}
+
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> ArgValue {
+        ArgValue::Num(v as f64)
+    }
+}
+
+impl From<bool> for ArgValue {
+    fn from(v: bool) -> ArgValue {
+        ArgValue::Bool(v)
+    }
+}
+
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> ArgValue {
+        ArgValue::Str(v.to_string())
+    }
+}
+
+impl From<String> for ArgValue {
+    fn from(v: String) -> ArgValue {
+        ArgValue::Str(v)
+    }
+}
+
+impl ArgValue {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgValue::Num(n) => Json::Num(*n),
+            ArgValue::Str(s) => Json::Str(s.clone()),
+            ArgValue::Bool(b) => Json::Bool(*b),
+        }
+    }
+}
+
+/// One completed span.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Unique id within the trace (allocation order, not start order).
+    pub id: u64,
+    /// Enclosing span on the same thread at open time, if any.
+    pub parent: Option<u64>,
+    /// Category (Chrome `cat`): `compile`, `pass`, `analysis`, `exec`,
+    /// `verify`, `dse`, `serve`, `engine`.
+    pub cat: &'static str,
+    pub name: String,
+    /// Microseconds since the tracer's epoch ([`enable`] time).
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Stable per-thread id (dense, allocation order).
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+impl SpanEvent {
+    /// The value of a numeric arg, if present.
+    pub fn num_arg(&self, key: &str) -> Option<f64> {
+        self.args.iter().find(|(k, _)| *k == key).and_then(|(_, v)| match v {
+            ArgValue::Num(n) => Some(*n),
+            _ => None,
+        })
+    }
+
+    /// The value of a bool arg, if present.
+    pub fn bool_arg(&self, key: &str) -> Option<bool> {
+        self.args.iter().find(|(k, _)| *k == key).and_then(|(_, v)| match v {
+            ArgValue::Bool(b) => Some(*b),
+            _ => None,
+        })
+    }
+}
+
+/// A finished trace: the drained span list plus tree/query helpers and
+/// the Chrome trace-event exporter.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<SpanEvent>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Spans with no parent (per-thread roots).
+    pub fn roots(&self) -> Vec<&SpanEvent> {
+        self.events.iter().filter(|e| e.parent.is_none()).collect()
+    }
+
+    /// Direct children of span `id`, in event order.
+    pub fn children(&self, id: u64) -> Vec<&SpanEvent> {
+        self.events.iter().filter(|e| e.parent == Some(id)).collect()
+    }
+
+    /// All spans in a category.
+    pub fn in_cat(&self, cat: &str) -> Vec<&SpanEvent> {
+        self.events.iter().filter(|e| e.cat == cat).collect()
+    }
+
+    /// First span with this exact name.
+    pub fn find(&self, name: &str) -> Option<&SpanEvent> {
+        self.events.iter().find(|e| e.name == name)
+    }
+
+    /// Count of spans with this exact name.
+    pub fn count(&self, name: &str) -> usize {
+        self.events.iter().filter(|e| e.name == name).count()
+    }
+
+    /// Chrome trace-event JSON (the "JSON Array Format" with a
+    /// `traceEvents` wrapper), loadable in Perfetto. Every span is a
+    /// complete (`ph: "X"`) event; ids and parents ride in `args` so the
+    /// span tree survives the format round-trip.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::with_capacity(self.events.len() + 1);
+        // Process-name metadata event: Perfetto shows it as the track
+        // group title.
+        let mut meta = BTreeMap::new();
+        meta.insert("name".into(), Json::Str("process_name".into()));
+        meta.insert("ph".into(), Json::Str("M".into()));
+        meta.insert("pid".into(), Json::Num(1.0));
+        meta.insert("tid".into(), Json::Num(0.0));
+        let mut margs = BTreeMap::new();
+        margs.insert("name".into(), Json::Str("fpga-flow".into()));
+        meta.insert("args".into(), Json::Obj(margs));
+        events.push(Json::Obj(meta));
+        for e in &self.events {
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(e.name.clone()));
+            m.insert("cat".into(), Json::Str(e.cat.into()));
+            m.insert("ph".into(), Json::Str("X".into()));
+            m.insert("ts".into(), Json::Num(e.start_us as f64));
+            m.insert("dur".into(), Json::Num(e.dur_us as f64));
+            m.insert("pid".into(), Json::Num(1.0));
+            m.insert("tid".into(), Json::Num(e.tid as f64));
+            let mut args = BTreeMap::new();
+            args.insert("span_id".into(), Json::Num(e.id as f64));
+            if let Some(p) = e.parent {
+                args.insert("parent_id".into(), Json::Num(p as f64));
+            }
+            for (k, v) in &e.args {
+                args.insert((*k).into(), v.to_json());
+            }
+            m.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(m));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("traceEvents".into(), Json::Arr(events));
+        root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+        Json::Obj(root)
+    }
+
+    /// Per-category span counts and summed self time — the `profile`
+    /// command's summary table and the report's `observability.trace`
+    /// section.
+    pub fn summary_json(&self) -> Json {
+        let mut cats: BTreeMap<&str, (u64, u64)> = BTreeMap::new();
+        for e in &self.events {
+            let c = cats.entry(e.cat).or_insert((0, 0));
+            c.0 += 1;
+            c.1 += e.dur_us;
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("spans".into(), Json::Num(self.events.len() as f64));
+        let mut by_cat = BTreeMap::new();
+        for (cat, (n, us)) in cats {
+            let mut c = BTreeMap::new();
+            c.insert("spans".into(), Json::Num(n as f64));
+            c.insert("total_us".into(), Json::Num(us as f64));
+            by_cat.insert(cat.to_string(), Json::Obj(c));
+        }
+        obj.insert("by_category".into(), Json::Obj(by_cat));
+        Json::Obj(obj)
+    }
+}
+
+struct TracerState {
+    epoch: Instant,
+    events: Vec<SpanEvent>,
+    next_id: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn state() -> &'static Mutex<Option<TracerState>> {
+    static STATE: OnceLock<Mutex<Option<TracerState>>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(None))
+}
+
+thread_local! {
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Is the global tracer recording? One relaxed atomic load — the only
+/// cost every instrumentation site pays when tracing is off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start recording. Resets the epoch and drops any spans left from a
+/// previous session that was never drained.
+pub fn enable() {
+    let mut st = state().lock().unwrap();
+    *st = Some(TracerState { epoch: Instant::now(), events: Vec::new(), next_id: 1 });
+    drop(st);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording (buffered spans survive until [`take`]).
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Stop recording and drain the buffered spans into a [`Trace`].
+pub fn take() -> Trace {
+    disable();
+    let mut st = state().lock().unwrap();
+    match st.take() {
+        Some(s) => Trace { events: s.events },
+        None => Trace::default(),
+    }
+}
+
+fn this_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Open a span; it records when the returned guard drops. When the
+/// tracer is disabled this is a no-op that borrows `name` without
+/// allocating.
+#[inline]
+pub fn span(cat: &'static str, name: &str) -> Span {
+    if !enabled() {
+        return Span { inner: None };
+    }
+    let (id, epoch) = {
+        let mut st = state().lock().unwrap();
+        match st.as_mut() {
+            Some(s) => {
+                let id = s.next_id;
+                s.next_id += 1;
+                (id, s.epoch)
+            }
+            None => return Span { inner: None },
+        }
+    };
+    let parent = SPAN_STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let parent = s.last().copied();
+        s.push(id);
+        parent
+    });
+    Span {
+        inner: Some(ActiveSpan {
+            id,
+            parent,
+            cat,
+            name: name.to_string(),
+            epoch,
+            start: Instant::now(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+/// Record a span with explicit endpoints (post-hoc lifecycle spans, e.g.
+/// a serve request's queued/execute phases reconstructed at completion).
+/// Returns the span id so callers can parent further spans under it.
+pub fn span_at(
+    cat: &'static str,
+    name: &str,
+    parent: Option<u64>,
+    start: Instant,
+    end: Instant,
+    args: Vec<(&'static str, ArgValue)>,
+) -> Option<u64> {
+    if !enabled() {
+        return None;
+    }
+    let mut st = state().lock().unwrap();
+    let s = st.as_mut()?;
+    let id = s.next_id;
+    s.next_id += 1;
+    let start_us = start.saturating_duration_since(s.epoch).as_micros() as u64;
+    let end_us = end.saturating_duration_since(s.epoch).as_micros() as u64;
+    s.events.push(SpanEvent {
+        id,
+        parent,
+        cat,
+        name: name.to_string(),
+        start_us,
+        dur_us: end_us.saturating_sub(start_us),
+        tid: this_tid(),
+        args,
+    });
+    Some(id)
+}
+
+struct ActiveSpan {
+    id: u64,
+    parent: Option<u64>,
+    cat: &'static str,
+    name: String,
+    epoch: Instant,
+    start: Instant,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+/// RAII span guard: opened by [`span`], records its event on drop.
+pub struct Span {
+    inner: Option<ActiveSpan>,
+}
+
+impl Span {
+    /// Attach an argument (builder style; no-op when the tracer was
+    /// disabled at open time).
+    pub fn arg(mut self, key: &'static str, value: impl Into<ArgValue>) -> Span {
+        self.set_arg(key, value);
+        self
+    }
+
+    /// Attach an argument whose value is only known mid-span (e.g. a
+    /// synthesis cache hit discovered after the lookup).
+    pub fn set_arg(&mut self, key: &'static str, value: impl Into<ArgValue>) {
+        if let Some(a) = self.inner.as_mut() {
+            a.args.push((key, value.into()));
+        }
+    }
+
+    /// The span's id while live (None when the tracer was disabled).
+    pub fn id(&self) -> Option<u64> {
+        self.inner.as_ref().map(|a| a.id)
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(a) = self.inner.take() else { return };
+        let dur_us = a.start.elapsed().as_micros() as u64;
+        let start_us = a.start.saturating_duration_since(a.epoch).as_micros() as u64;
+        SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.last() == Some(&a.id) {
+                s.pop();
+            } else {
+                // Out-of-order drop (guard moved across scopes): remove
+                // wherever it sits so the stack cannot grow unbounded.
+                s.retain(|&id| id != a.id);
+            }
+        });
+        let mut st = state().lock().unwrap();
+        if let Some(s) = st.as_mut() {
+            s.events.push(SpanEvent {
+                id: a.id,
+                parent: a.parent,
+                cat: a.cat,
+                name: a.name,
+                start_us,
+                dur_us,
+                tid: this_tid(),
+                args: a.args,
+            });
+        }
+    }
+}
+
+/// The process-global metrics registry every instrumentation site
+/// reports into (sites gate on [`enabled`], so a disabled run leaves it
+/// empty).
+pub fn global_metrics() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+/// The report's `observability` section: the metrics snapshot plus a
+/// trace summary ([`crate::flow::Accelerator::to_json_with_observability`]).
+pub fn observability_json(trace: Option<&Trace>) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("metrics".into(), global_metrics().to_json());
+    if let Some(t) = trace {
+        obj.insert("trace".into(), t.summary_json());
+    }
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, parent: Option<u64>, name: &str, cat: &'static str) -> SpanEvent {
+        SpanEvent {
+            id,
+            parent,
+            cat,
+            name: name.into(),
+            start_us: id * 10,
+            dur_us: 5,
+            tid: 1,
+            args: vec![("n", ArgValue::Num(id as f64))],
+        }
+    }
+
+    #[test]
+    fn trace_tree_queries() {
+        let t = Trace {
+            events: vec![
+                ev(1, None, "lower", "compile"),
+                ev(2, Some(1), "pass.unroll", "pass"),
+                ev(3, Some(1), "pass.fuse", "pass"),
+                ev(4, None, "synthesize", "compile"),
+            ],
+        };
+        assert_eq!(t.roots().len(), 2);
+        assert_eq!(t.children(1).len(), 2);
+        assert_eq!(t.in_cat("pass").len(), 2);
+        assert_eq!(t.find("synthesize").unwrap().id, 4);
+        assert_eq!(t.count("pass.unroll"), 1);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = Trace { events: vec![ev(1, None, "lower", "compile"), ev(2, Some(1), "p", "pass")] };
+        let j = crate::util::json::parse(&t.to_chrome_json().to_string()).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // Metadata event + 2 spans.
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        let e = &events[1];
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("name").unwrap().as_str(), Some("lower"));
+        assert_eq!(e.get("cat").unwrap().as_str(), Some("compile"));
+        assert_eq!(e.get("ts").unwrap().as_u64(), Some(10));
+        assert_eq!(e.get("dur").unwrap().as_u64(), Some(5));
+        let args = &events[2].get("args").unwrap();
+        assert_eq!(args.get("parent_id").unwrap().as_u64(), Some(1));
+        assert_eq!(args.get("span_id").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn summary_groups_by_category() {
+        let t = Trace {
+            events: vec![ev(1, None, "a", "compile"), ev(2, None, "b", "pass"), ev(3, None, "c", "pass")],
+        };
+        let j = t.summary_json();
+        assert_eq!(j.get("spans").unwrap().as_u64(), Some(3));
+        let pass = j.get("by_category").unwrap().get("pass").unwrap();
+        assert_eq!(pass.get("spans").unwrap().as_u64(), Some(2));
+        assert_eq!(pass.get("total_us").unwrap().as_u64(), Some(10));
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // The global tracer defaults to off; guards must be no-ops with
+        // no id and no recorded event.
+        assert!(!enabled());
+        let mut s = span("compile", "nothing");
+        assert_eq!(s.id(), None);
+        s.set_arg("k", 1u64);
+        drop(s);
+        assert_eq!(span_at("compile", "n", None, Instant::now(), Instant::now(), vec![]), None);
+    }
+
+    #[test]
+    fn span_event_arg_accessors() {
+        let mut e = ev(1, None, "x", "exec");
+        e.args.push(("hit", ArgValue::Bool(true)));
+        assert_eq!(e.num_arg("n"), Some(1.0));
+        assert_eq!(e.bool_arg("hit"), Some(true));
+        assert_eq!(e.num_arg("missing"), None);
+    }
+}

@@ -370,6 +370,8 @@ impl PassManager {
     pub fn run_graph_passes(&mut self, pipeline: &Pipeline, graph: &Graph) -> Graph {
         let mut g = graph.clone();
         for pass in &pipeline.graph_passes {
+            let mut span = crate::obs::span("pass", pass.name());
+            span.set_arg("level", "graph");
             let mut rec = PassRecord {
                 name: pass.name().to_string(),
                 abbrev: pass.abbrev(),
@@ -389,6 +391,7 @@ impl PassManager {
                     g = next;
                 }
             }
+            Self::observe(&mut span, &rec);
             self.trace.records.push(rec);
         }
         g
@@ -402,6 +405,8 @@ impl PassManager {
         prog: &mut KernelProgram,
     ) {
         for pass in &pipeline.schedule_passes {
+            let mut span = crate::obs::span("pass", pass.name());
+            span.set_arg("level", "schedule");
             let mut rec = PassRecord {
                 name: pass.name().to_string(),
                 abbrev: pass.abbrev(),
@@ -419,7 +424,28 @@ impl PassManager {
                     rec.diff = diff;
                 }
             }
+            Self::observe(&mut span, &rec);
             self.trace.records.push(rec);
+        }
+    }
+
+    /// Stamp a finished pass record onto its span and bump the pass
+    /// counters. Every call site already opened the span, so the
+    /// disabled-mode cost is the guard's single flag check.
+    fn observe(span: &mut crate::obs::Span, rec: &PassRecord) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        span.set_arg("matched", rec.matched);
+        let m = crate::obs::global_metrics();
+        match &rec.skipped {
+            Some(reason) => {
+                span.set_arg("skipped", reason.as_str());
+                m.counter("flow_passes_skipped_total", "passes skipped by precondition").inc();
+            }
+            None => {
+                m.counter("flow_passes_applied_total", "passes executed by the PassManager").inc();
+            }
         }
     }
 

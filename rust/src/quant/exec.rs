@@ -29,10 +29,12 @@
 //! state (`rust/tests/alloc_regression.rs`). See docs/ARCHITECTURE.md
 //! ("Host-executor fast path").
 
+use std::time::Instant;
+
 use crate::graph::{Activation, Graph, NodeId, Op, Shape};
 use crate::texpr::Precision;
 use crate::util::rng::Rng;
-use crate::util::scratch::Scratch;
+use crate::util::scratch::{Scratch, ScratchStats};
 
 use super::calibrate::CalibrationTable;
 use super::scheme::{f16_round, QParams, QScheme, Range};
@@ -133,6 +135,34 @@ impl<'g> Executor<'g> {
     /// node's activation (logits).
     pub fn forward(&self, frame: &[f32], mut observe: impl FnMut(NodeId, &[f32])) -> Vec<f32> {
         self.run(frame, None, &mut observe)
+    }
+
+    /// [`Executor::forward`] with a per-layer span tree under an `exec`
+    /// `frame` span when the tracer is enabled (plain `forward` when not —
+    /// the disabled cost is one atomic load). Layer durations are the
+    /// wall-clock between consecutive observer callbacks, so the trace
+    /// costs no extra traversal.
+    pub fn forward_traced(&self, frame: &[f32]) -> Vec<f32> {
+        if !crate::obs::enabled() {
+            return self.forward(frame, |_, _| {});
+        }
+        let mut frame_span = crate::obs::span("exec", "frame");
+        frame_span.set_arg("network", self.graph.name.as_str());
+        let parent = frame_span.id();
+        let g = self.graph;
+        let mut prev = Instant::now();
+        self.forward(frame, |nid, act| {
+            let now = Instant::now();
+            crate::obs::span_at(
+                "exec",
+                &g.nodes[nid].name,
+                parent,
+                prev,
+                now,
+                vec![("elems", crate::obs::ArgValue::Num(act.len() as f64))],
+            );
+            prev = now;
+        })
     }
 
     /// Quantized forward pass: compute ops execute on the reduced-precision
@@ -832,6 +862,49 @@ enum Prep {
     Grid(QParams),
 }
 
+/// Arena-interaction stats of one [`FastExecutor`]: how its construction
+/// hit the [`Scratch`] pool plus what it holds checked out. Surfaced by
+/// [`FastExecutor::stats`], `fpga-flow profile` and the report's
+/// `observability.metrics` section.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    /// Scratch-pool counters attributable to this executor's
+    /// construction (delta over the build's checkouts).
+    pub scratch: ScratchStats,
+    /// Arena-owned buffers currently held (per-node activations plus the
+    /// shared quantization scratch).
+    pub buffers: u64,
+    /// Total bytes of those held buffers.
+    pub buffer_bytes: u64,
+}
+
+impl ExecStats {
+    /// Register these stats as gauges (prefix `flow_exec_scratch_*`) on a
+    /// metrics registry.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry) {
+        reg.set_gauge("flow_exec_scratch_checkouts", "executor scratch checkouts at build", self.scratch.checkouts as f64);
+        reg.set_gauge("flow_exec_scratch_hits", "executor scratch pool hits at build", self.scratch.hits as f64);
+        reg.set_gauge("flow_exec_scratch_misses", "executor scratch pool misses at build", self.scratch.misses as f64);
+        reg.set_gauge("flow_exec_scratch_bytes_allocated", "bytes freshly allocated for the executor's buffers", self.scratch.bytes_allocated as f64);
+        reg.set_gauge("flow_exec_buffers", "arena buffers held by the executor", self.buffers as f64);
+        reg.set_gauge("flow_exec_buffer_bytes", "bytes of arena buffers held by the executor", self.buffer_bytes as f64);
+    }
+
+    /// The `executor` object of `report_json.observability`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("scratch_checkouts".into(), Json::Num(self.scratch.checkouts as f64));
+        m.insert("scratch_hits".into(), Json::Num(self.scratch.hits as f64));
+        m.insert("scratch_misses".into(), Json::Num(self.scratch.misses as f64));
+        m.insert("scratch_hit_rate".into(), Json::Num(self.scratch.hit_rate()));
+        m.insert("scratch_bytes_allocated".into(), Json::Num(self.scratch.bytes_allocated as f64));
+        m.insert("buffers".into(), Json::Num(self.buffers as f64));
+        m.insert("buffer_bytes".into(), Json::Num(self.buffer_bytes as f64));
+        Json::Obj(m)
+    }
+}
+
 /// Zero-allocation forward executor over [`Scratch`]-owned buffers.
 ///
 /// Wraps an [`Executor`] (same graph, same synthetic parameters) and
@@ -862,6 +935,8 @@ pub struct FastExecutor<'g> {
     qx: Vec<i32>,
     /// Shared fp16 input-rounding scratch.
     rx: Vec<f32>,
+    /// Scratch-pool delta of this executor's construction.
+    build_stats: ScratchStats,
 }
 
 impl<'g> FastExecutor<'g> {
@@ -960,7 +1035,9 @@ impl<'g> FastExecutor<'g> {
         }
 
         let max_elems = g.nodes.iter().map(|n| n.shape.elems()).max().unwrap_or(0);
-        let acts = g.nodes.iter().map(|n| scratch.take_f32(n.shape.elems())).collect();
+        let before = scratch.stats();
+        let acts: Vec<Vec<f32>> =
+            g.nodes.iter().map(|n| scratch.take_f32(n.shape.elems())).collect();
         let qx = match quant {
             Some(p) if p != Precision::F16 => scratch.take_i32(max_elems),
             _ => Vec::new(),
@@ -969,7 +1046,31 @@ impl<'g> FastExecutor<'g> {
             Some(Precision::F16) => scratch.take_f32(max_elems),
             _ => Vec::new(),
         };
-        FastExecutor { exec, prep, chains, target, fused_member, acts, qx, rx }
+        let after = scratch.stats();
+        let build_stats = ScratchStats {
+            checkouts: after.checkouts - before.checkouts,
+            hits: after.hits - before.hits,
+            misses: after.misses - before.misses,
+            returns: after.returns - before.returns,
+            bytes_allocated: after.bytes_allocated - before.bytes_allocated,
+        };
+        FastExecutor { exec, prep, chains, target, fused_member, acts, qx, rx, build_stats }
+    }
+
+    /// Arena-interaction stats: the scratch hit/miss/bytes delta of this
+    /// executor's construction plus what it currently holds checked out.
+    pub fn stats(&self) -> ExecStats {
+        let buffers = self.acts.len() as u64
+            + u64::from(!self.qx.is_empty())
+            + u64::from(!self.rx.is_empty());
+        let buffer_bytes = self
+            .acts
+            .iter()
+            .map(|b| (b.len() * std::mem::size_of::<f32>()) as u64)
+            .sum::<u64>()
+            + (self.qx.len() * std::mem::size_of::<i32>()) as u64
+            + (self.rx.len() * std::mem::size_of::<f32>()) as u64;
+        ExecStats { scratch: self.build_stats, buffers, buffer_bytes }
     }
 
     /// Return every arena-owned buffer to `scratch` so the next executor
@@ -989,6 +1090,39 @@ impl<'g> FastExecutor<'g> {
     /// Run one frame (fused, allocation-free) and return the logits.
     pub fn forward(&mut self, frame: &[f32]) -> &[f32] {
         self.run(frame, None);
+        &self.acts[self.exec.graph.output]
+    }
+
+    /// [`FastExecutor::forward`] with a per-layer span tree under an
+    /// `exec` `frame` span when the tracer is enabled; identical to plain
+    /// [`FastExecutor::forward`] when disabled (one atomic load, zero
+    /// allocations — `rust/tests/alloc_regression.rs` pins this). Tracing
+    /// runs the observer path, so epilogue fusion is off for the frame
+    /// (every layer must be individually timed anyway).
+    pub fn forward_traced(&mut self, frame: &[f32]) -> &[f32] {
+        if !crate::obs::enabled() {
+            return self.forward(frame);
+        }
+        let mut frame_span = crate::obs::span("exec", "frame");
+        frame_span.set_arg("network", self.exec.graph.name.as_str());
+        let parent = frame_span.id();
+        let g = self.exec.graph;
+        let mut prev = Instant::now();
+        self.run(
+            frame,
+            Some(&mut |nid: NodeId, act: &[f32]| {
+                let now = Instant::now();
+                crate::obs::span_at(
+                    "exec",
+                    &g.nodes[nid].name,
+                    parent,
+                    prev,
+                    now,
+                    vec![("elems", crate::obs::ArgValue::Num(act.len() as f64))],
+                );
+                prev = now;
+            }),
+        );
         &self.acts[self.exec.graph.output]
     }
 

@@ -1,8 +1,17 @@
 //! Micro-bench harness (criterion is unavailable offline): warmup, timed
 //! iterations, median/mean/min/max/stddev, criterion-like one-line output.
 //! All `benches/*.rs` targets (harness = false) use this.
+//!
+//! [`BenchWriter`] is the one emitter for every `BENCH_*.json` artifact:
+//! it stamps shared run metadata ([`RunMeta`]: git rev, target device,
+//! precision) so CI dashboards can join results across bench targets
+//! without per-bench serialization code.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -95,6 +104,134 @@ fn stats_from(name: &str, samples: &mut [Duration]) -> BenchStats {
     }
 }
 
+/// Shared run metadata stamped into every `BENCH_*.json` artifact.
+#[derive(Debug, Clone)]
+pub struct RunMeta {
+    /// Bench target name (drives the default output filename
+    /// `target/BENCH_<bench>.json`).
+    pub bench: String,
+    /// Commit of the benched tree: `git rev-parse --short HEAD`, falling
+    /// back to `$GITHUB_SHA`, then `"unknown"`.
+    pub git_rev: String,
+    /// Device target the bench compiled for (empty when N/A).
+    pub target: String,
+    /// Datapath precision (empty when the bench sweeps several).
+    pub precision: String,
+}
+
+impl RunMeta {
+    pub fn new(bench: &str) -> RunMeta {
+        RunMeta {
+            bench: bench.to_string(),
+            git_rev: detect_git_rev(),
+            target: String::new(),
+            precision: String::new(),
+        }
+    }
+
+    pub fn target(mut self, t: &str) -> RunMeta {
+        self.target = t.to_string();
+        self
+    }
+
+    pub fn precision(mut self, p: &str) -> RunMeta {
+        self.precision = p.to_string();
+        self
+    }
+}
+
+fn detect_git_rev() -> String {
+    if let Ok(out) = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+    {
+        if out.status.success() {
+            let rev = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !rev.is_empty() {
+                return rev;
+            }
+        }
+    }
+    std::env::var("GITHUB_SHA").ok().filter(|s| !s.is_empty()).unwrap_or_else(|| "unknown".into())
+}
+
+/// Unified `BENCH_*.json` emitter. Every bench builds one of these,
+/// inserts its sections, and writes — the metadata block is identical
+/// across artifacts by construction.
+pub struct BenchWriter {
+    meta: RunMeta,
+    sections: BTreeMap<String, Json>,
+}
+
+impl BenchWriter {
+    pub fn new(meta: RunMeta) -> BenchWriter {
+        BenchWriter { meta, sections: BTreeMap::new() }
+    }
+
+    /// Add a bench-specific section (overwrites an existing key).
+    pub fn insert(&mut self, key: &str, value: Json) {
+        self.sections.insert(key.to_string(), value);
+    }
+
+    /// Add the standard `benchmarks` array from measured stats.
+    pub fn stats(&mut self, rows: &[BenchStats]) {
+        let arr = rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("name".into(), Json::Str(r.name.clone()));
+                m.insert("iters".into(), Json::Num(r.iters as f64));
+                m.insert("mean_ns".into(), Json::Num(r.mean.as_nanos() as f64));
+                m.insert("median_ns".into(), Json::Num(r.median.as_nanos() as f64));
+                m.insert("min_ns".into(), Json::Num(r.min.as_nanos() as f64));
+                m.insert("max_ns".into(), Json::Num(r.max.as_nanos() as f64));
+                m.insert("stddev_ns".into(), Json::Num(r.stddev.as_nanos() as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        self.insert("benchmarks", Json::Arr(arr));
+    }
+
+    /// The artifact as JSON (metadata block + every section).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        let mut meta = BTreeMap::new();
+        meta.insert("bench".into(), Json::Str(self.meta.bench.clone()));
+        meta.insert("git_rev".into(), Json::Str(self.meta.git_rev.clone()));
+        if !self.meta.target.is_empty() {
+            meta.insert("target".into(), Json::Str(self.meta.target.clone()));
+        }
+        if !self.meta.precision.is_empty() {
+            meta.insert("precision".into(), Json::Str(self.meta.precision.clone()));
+        }
+        root.insert("meta".into(), Json::Obj(meta));
+        for (k, v) in &self.sections {
+            root.insert(k.clone(), v.clone());
+        }
+        Json::Obj(root)
+    }
+
+    /// Resolved output path: `$FLOW_BENCH_OUT` when set, else
+    /// `target/BENCH_<bench>.json`.
+    pub fn out_path(&self) -> PathBuf {
+        match std::env::var("FLOW_BENCH_OUT") {
+            Ok(p) if !p.is_empty() => PathBuf::from(p),
+            _ => PathBuf::from("target").join(format!("BENCH_{}.json", self.meta.bench)),
+        }
+    }
+
+    /// Write the artifact, creating the parent directory if needed.
+    /// Returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = self.out_path();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+}
+
 /// Pretty table printer shared by the table-reproduction benches.
 pub struct Table {
     pub title: String,
@@ -174,6 +311,24 @@ mod tests {
         assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
         assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_writer_stamps_shared_metadata() {
+        let meta = RunMeta::new("unit").target("stratix10sx").precision("int8");
+        let mut w = BenchWriter::new(meta);
+        w.stats(&[bench("noop", Duration::ZERO, Duration::from_millis(1), 20, || 1)]);
+        w.insert("custom", Json::Num(7.0));
+        let j = crate::util::json::parse(&w.to_json().to_string()).unwrap();
+        let m = j.get("meta").unwrap();
+        assert_eq!(m.get("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(m.get("target").unwrap().as_str(), Some("stratix10sx"));
+        assert_eq!(m.get("precision").unwrap().as_str(), Some("int8"));
+        assert!(!m.get("git_rev").unwrap().as_str().unwrap().is_empty());
+        let rows = j.get("benchmarks").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("noop"));
+        assert!(rows[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(j.get("custom").unwrap().as_f64(), Some(7.0));
     }
 
     #[test]

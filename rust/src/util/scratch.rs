@@ -39,6 +39,19 @@ pub struct ScratchStats {
     pub misses: u64,
     /// Buffers returned to the pool.
     pub returns: u64,
+    /// Bytes heap-allocated by pool misses (cumulative).
+    pub bytes_allocated: u64,
+}
+
+impl ScratchStats {
+    /// Pool hit rate in [0, 1]; 0 when nothing was checked out.
+    pub fn hit_rate(&self) -> f64 {
+        if self.checkouts == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.checkouts as f64
+        }
+    }
 }
 
 /// A reusable arena of `f32`/`i32` buffers pooled by exact length.
@@ -63,6 +76,7 @@ impl Scratch {
             return buf;
         }
         self.stats.misses += 1;
+        self.stats.bytes_allocated += (len * std::mem::size_of::<f32>()) as u64;
         vec![0.0; len]
     }
 
@@ -81,6 +95,7 @@ impl Scratch {
             return buf;
         }
         self.stats.misses += 1;
+        self.stats.bytes_allocated += (len * std::mem::size_of::<i32>()) as u64;
         vec![0; len]
     }
 
@@ -178,5 +193,18 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.misses, 1, "only the first checkout allocates");
         assert_eq!(st.hits, 2);
+    }
+
+    #[test]
+    fn bytes_allocated_counts_only_misses() {
+        let mut s = Scratch::new();
+        let a = s.take_f32(16); // miss: 64 bytes
+        s.put_f32(a);
+        let _b = s.take_f32(16); // hit: no new bytes
+        let _c = s.take_i32(8); // miss: 32 bytes
+        let st = s.stats();
+        assert_eq!(st.bytes_allocated, 64 + 32);
+        assert!((st.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(ScratchStats::default().hit_rate(), 0.0);
     }
 }

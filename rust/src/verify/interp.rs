@@ -359,8 +359,31 @@ impl<'a> Interpreter<'a> {
         }
         st.values[g.input].copy_from_slice(frame);
         st.produced[g.input] = true;
-        for (di, &(_, nid)) in self.dispatch.iter().enumerate() {
-            self.fire_into(nid, &self.intrinsics[di], st)?;
+        // Hoisted out of the dispatch loop: the disabled-mode cost of
+        // tracing is one atomic load per frame, not per dispatch
+        // (`rust/tests/alloc_regression.rs` keeps this path at zero
+        // allocations).
+        if crate::obs::enabled() {
+            let mut frame_span = crate::obs::span("verify", "interp_frame");
+            frame_span.set_arg("network", g.name.as_str());
+            frame_span.set_arg("dispatches", self.dispatch.len());
+            let parent = frame_span.id();
+            for (di, &(k, nid)) in self.dispatch.iter().enumerate() {
+                let start = std::time::Instant::now();
+                self.fire_into(nid, &self.intrinsics[di], st)?;
+                crate::obs::span_at(
+                    "verify",
+                    &g.nodes[nid].name,
+                    parent,
+                    start,
+                    std::time::Instant::now(),
+                    vec![("kernel", crate::obs::ArgValue::Num(k as f64))],
+                );
+            }
+        } else {
+            for (di, &(_, nid)) in self.dispatch.iter().enumerate() {
+                self.fire_into(nid, &self.intrinsics[di], st)?;
+            }
         }
         // The graph output may itself be a layout node over the last
         // kernel's result.

@@ -179,6 +179,50 @@ fn interpreter_frames_do_not_allocate() {
     assert_eq!(n, 0, "interpreter fast path allocated {n} times across 8 frames");
 }
 
+/// A disabled tracer must be pure overhead-free: constructing and
+/// dropping span guards in steady state performs zero heap allocations.
+/// This is the property that lets instrumentation live on hot paths
+/// (per-frame, per-layer) without a feature gate.
+#[test]
+fn disabled_span_guards_do_not_allocate() {
+    tvm_fpga_flow::obs::disable();
+    // Warm-up: the first guard may touch lazily-initialized TLS.
+    for _ in 0..4 {
+        let _s = tvm_fpga_flow::obs::span("alloc", "probe");
+    }
+    let n = allocations_in(|| {
+        for _ in 0..10_000 {
+            let _s = tvm_fpga_flow::obs::span("alloc", "probe");
+        }
+        std::hint::black_box(tvm_fpga_flow::obs::enabled());
+    });
+    assert_eq!(n, 0, "disabled span guards allocated {n} times across 10k guards");
+}
+
+/// The traced-entry frame loop with tracing disabled is as allocation-free
+/// as the plain one: `forward_traced` must fall through to `forward`
+/// without touching the heap.
+#[test]
+fn disabled_traced_frames_do_not_allocate() {
+    tvm_fpga_flow::obs::disable();
+    let g = models::lenet5();
+    let exec = Executor::new(&g);
+    let data = tvm_fpga_flow::data::mnist_like(4, 32, 5);
+    let mut scratch = Scratch::new();
+    let mut fast = FastExecutor::reference(&exec, true, &mut scratch);
+    for i in 0..2 {
+        std::hint::black_box(fast.forward_traced(data.frame(i)));
+    }
+    let n = allocations_in(|| {
+        for i in 0..8 {
+            let logits = fast.forward_traced(data.frame(i % 4));
+            std::hint::black_box(tvm_fpga_flow::quant::argmax(logits));
+        }
+    });
+    fast.release(&mut scratch);
+    assert_eq!(n, 0, "disabled traced fast path allocated {n} times across 8 frames");
+}
+
 /// Releasing one executor and building the next with the same shapes is
 /// served from the pool — the cross-component reuse the arena promises
 /// (calibrate → measure, scenario → scenario).

@@ -1,0 +1,395 @@
+//! Observability integration tests: span-tree shape across the compile
+//! stages, metric values against known event counts, the serve request
+//! lifecycle, and the metrics edge cases (empty percentiles, histogram
+//! overflow, concurrent counters, disabled no-op paths).
+//!
+//! The tracer is process-global, so every test touching it serializes on
+//! [`lock`] and starts by draining whatever a previous test left behind.
+//! Metric assertions always diff two [`Registry::snapshot`]s — the global
+//! registry is cumulative across tests in this binary.
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use tvm_fpga_flow::coordinator::{EngineSpec, InferenceServer, ServerConfig, SimEngine};
+use tvm_fpga_flow::flow::multi::ReplicaPlan;
+use tvm_fpga_flow::flow::{Compiler, Mode};
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::metrics::LatencyStats;
+use tvm_fpga_flow::obs::{self, Registry};
+use tvm_fpga_flow::quant::{Executor, FastExecutor};
+use tvm_fpga_flow::util::pool::Pool;
+use tvm_fpga_flow::util::scratch::Scratch;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests that touch the global tracer/registry (and recover
+/// from a panicked holder — the poison is harmless here).
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn delta(
+    before: &std::collections::BTreeMap<String, f64>,
+    after: &std::collections::BTreeMap<String, f64>,
+    name: &str,
+) -> f64 {
+    after.get(name).copied().unwrap_or(0.0) - before.get(name).copied().unwrap_or(0.0)
+}
+
+#[test]
+fn compile_span_tree_shape() {
+    let _l = lock();
+    let _ = obs::take();
+    obs::enable();
+
+    let compiler = Compiler::default();
+    let g = models::lenet5();
+    let mut session = compiler.graph(&g).mode(Mode::Pipelined);
+    let (n_records, n_skipped) = {
+        let lowered = session.lower().unwrap();
+        (lowered.trace.records.len(), lowered.trace.skipped())
+    };
+    session.analyze().unwrap();
+    let vrep = session.verify(1).unwrap();
+    assert!(vrep.passed, "{}", vrep.summary());
+    session.synthesize().unwrap();
+    let _acc = session.simulate().unwrap();
+
+    let trace = obs::take();
+    // All compile stages present, as `compile`-category spans.
+    for stage in ["lower", "analyze", "synthesize", "verify", "simulate"] {
+        let span = trace.find(stage).unwrap_or_else(|| panic!("missing stage span {stage}"));
+        assert_eq!(span.cat, "compile", "{stage} has wrong category");
+    }
+
+    // Every pass the PassManager ran is a `pass` child of the lower span,
+    // and skipped passes carry their blocking reason as an arg.
+    let lower = trace.find("lower").unwrap();
+    let pass_children: Vec<_> =
+        trace.children(lower.id).into_iter().filter(|e| e.cat == "pass").collect();
+    assert_eq!(pass_children.len(), n_records, "one pass span per PassTrace record");
+    let skipped_spans =
+        pass_children.iter().filter(|e| e.args.iter().any(|(k, _)| *k == "skipped")).count();
+    assert_eq!(skipped_spans, n_skipped);
+
+    // Each analysis rule family is an `analysis` child of the analyze span
+    // with a findings count.
+    let analyze = trace.find("analyze").unwrap();
+    let fams: Vec<_> =
+        trace.children(analyze.id).into_iter().filter(|e| e.cat == "analysis").collect();
+    for family in ["deadlock", "overflow", "legality", "structure", "budget", "consistency"] {
+        let f = fams
+            .iter()
+            .find(|e| e.name == family)
+            .unwrap_or_else(|| panic!("missing analysis family {family}"));
+        assert!(f.num_arg("findings").is_some());
+    }
+
+    // The verify stage traced the kernel interpreter: per-frame spans
+    // under the stage, per-dispatch kernel spans under each frame.
+    let verify = trace.find("verify").unwrap();
+    let frames: Vec<_> =
+        trace.children(verify.id).into_iter().filter(|e| e.name == "interp_frame").collect();
+    assert!(!frames.is_empty(), "verify stage recorded no interp_frame spans");
+    let dispatches: Vec<_> = trace.children(frames[0].id);
+    assert!(!dispatches.is_empty(), "interp_frame recorded no dispatch spans");
+    assert!(dispatches.iter().all(|d| d.cat == "verify"));
+}
+
+#[test]
+fn compile_metrics_count_events() {
+    let _l = lock();
+    let _ = obs::take();
+    obs::enable();
+    let before = obs::global_metrics().snapshot();
+
+    let compiler = Compiler::default();
+    let g = models::lenet5();
+    let mut s1 = compiler.graph(&g).mode(Mode::Pipelined);
+    let (applied, skipped) = {
+        let l = s1.lower().unwrap();
+        (l.trace.applied(), l.trace.skipped())
+    };
+    s1.synthesize().unwrap();
+    // Identical program on the same compiler: memoized synthesis.
+    let mut s2 = compiler.graph(&g).mode(Mode::Pipelined);
+    s2.lower().unwrap();
+    s2.synthesize().unwrap();
+
+    let after = obs::global_metrics().snapshot();
+    let _ = obs::take();
+    assert_eq!(delta(&before, &after, "flow_lower_total"), 2.0);
+    assert_eq!(delta(&before, &after, "flow_synth_cache_misses_total"), 1.0);
+    assert_eq!(delta(&before, &after, "flow_synth_cache_hits_total"), 1.0);
+    assert_eq!(delta(&before, &after, "flow_passes_applied_total"), 2.0 * applied as f64);
+    assert_eq!(delta(&before, &after, "flow_passes_skipped_total"), 2.0 * skipped as f64);
+}
+
+#[test]
+fn executor_per_layer_spans_and_stats() {
+    let _l = lock();
+    let _ = obs::take();
+
+    let g = models::lenet5();
+    let exec = Executor::new(&g);
+    let data = tvm_fpga_flow::data::for_network("lenet5", 2, 3).unwrap();
+
+    // Disabled: the traced entry points fall through to the plain paths.
+    let plain = exec.forward(data.frame(0), |_, _| {});
+    assert_eq!(exec.forward_traced(data.frame(0)), plain);
+
+    obs::enable();
+    let traced = exec.forward_traced(data.frame(0));
+    assert_eq!(traced, plain, "tracing must not change results");
+
+    let mut scratch = Scratch::new();
+    let mut fast = FastExecutor::reference(&exec, true, &mut scratch);
+    let fast_out = fast.forward_traced(data.frame(0)).to_vec();
+    let trace = obs::take();
+    assert_eq!(fast_out.len(), plain.len());
+    for (a, b) in fast_out.iter().zip(plain.iter()) {
+        assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{a} vs {b}");
+    }
+
+    // Two frame spans (reference + fast path), each with one child per
+    // executed layer, named after the graph node.
+    assert_eq!(trace.count("frame"), 2);
+    for frame in trace.events.iter().filter(|e| e.name == "frame") {
+        assert_eq!(frame.cat, "exec");
+        let layers = trace.children(frame.id);
+        assert!(!layers.is_empty(), "frame span has no per-layer children");
+        for l in &layers {
+            assert!(
+                g.nodes.iter().any(|n| n.name == l.name),
+                "span {} is not a node of {}",
+                l.name,
+                g.name
+            );
+            assert!(l.num_arg("elems").unwrap_or(0.0) > 0.0);
+        }
+    }
+
+    // ExecStats: arena attribution from build time plus buffer accounting.
+    let stats = fast.stats();
+    assert!(stats.buffers > 0);
+    assert!(stats.buffer_bytes > 0);
+    assert_eq!(stats.scratch.checkouts, stats.scratch.hits + stats.scratch.misses);
+    let j = stats.to_json();
+    assert_eq!(j.get("buffers").and_then(|v| v.as_f64()), Some(stats.buffers as f64));
+    assert_eq!(
+        j.get("scratch_checkouts").and_then(|v| v.as_f64()),
+        Some(stats.scratch.checkouts as f64)
+    );
+    fast.release(&mut scratch);
+}
+
+#[test]
+fn serve_lifecycle_spans_and_metrics() {
+    let _l = lock();
+    let _ = obs::take();
+    obs::enable();
+    let before = obs::global_metrics().snapshot();
+
+    let g = models::lenet5();
+    let requests = 12usize;
+    let plan = ReplicaPlan::build_with(&g, &["stratix10sx"], None).unwrap();
+    let server = InferenceServer::start(ServerConfig {
+        network: g.name.clone(),
+        workers: 1,
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_capacity: 64,
+        replicas: SimEngine::from_plan(&plan, &g, 4)
+            .unwrap()
+            .into_iter()
+            .map(EngineSpec::Sim)
+            .collect(),
+        ..Default::default()
+    })
+    .unwrap();
+    let data = tvm_fpga_flow::data::for_network("lenet5", 4, 1).unwrap();
+    let pending: Vec<_> = (0..requests)
+        .map(|i| server.infer_async(data.frame(i % 4).to_vec()).unwrap())
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let stats = server.shutdown();
+    stats.export_metrics(obs::global_metrics());
+    let after = obs::global_metrics().snapshot();
+    let trace = obs::take();
+
+    // One `request` span per request, each with queued + execute children.
+    assert_eq!(trace.count("request"), requests);
+    for r in trace.events.iter().filter(|e| e.name == "request") {
+        assert_eq!(r.cat, "serve");
+        assert_eq!(r.bool_arg("ok"), Some(true));
+        let kids = trace.children(r.id);
+        assert!(kids.iter().any(|k| k.name == "queued"), "request lacks queued child");
+        assert!(kids.iter().any(|k| k.name == "execute"), "request lacks execute child");
+    }
+    // Batch spans match the executed-batch count; the engine traced too.
+    assert_eq!(trace.count("batch"), stats.batches as usize);
+    assert!(!trace.in_cat("engine").is_empty());
+
+    // Lifecycle counters agree with the server's own accounting.
+    assert_eq!(delta(&before, &after, "flow_serve_submitted_total"), requests as f64);
+    assert_eq!(delta(&before, &after, "flow_serve_completed_total"), requests as f64);
+    assert_eq!(delta(&before, &after, "flow_serve_batches_total"), stats.batches as f64);
+    let flushes = delta(&before, &after, "flow_serve_flush_full_total")
+        + delta(&before, &after, "flow_serve_flush_deadline_total")
+        + delta(&before, &after, "flow_serve_flush_close_total");
+    assert_eq!(flushes, stats.batches as f64);
+
+    // Snapshot re-registration: gauges mirror the snapshot, the batch
+    // histogram imported every executed batch.
+    assert_eq!(delta(&before, &after, "flow_serve_submitted"), stats.submitted as f64);
+    assert_eq!(delta(&before, &after, "flow_serve_batch_size_count"), stats.batches as f64);
+}
+
+#[test]
+fn dse_candidate_spans_attribute_cache_hits() {
+    let _l = lock();
+    let _ = obs::take();
+    obs::enable();
+    let before = obs::global_metrics().snapshot();
+
+    let compiler = Compiler::default();
+    let g = models::lenet5();
+    let result = tvm_fpga_flow::dse::explore_pipelined(&compiler, &g);
+    let after = obs::global_metrics().snapshot();
+    let trace = obs::take();
+
+    let candidates = trace.in_cat("dse");
+    assert_eq!(candidates.len(), result.evaluated);
+    assert_eq!(delta(&before, &after, "flow_dse_candidates_total"), result.evaluated as f64);
+    let cache_hit_spans =
+        candidates.iter().filter(|c| c.bool_arg("synth_cache_hit") == Some(true)).count();
+    // Candidates running concurrently each synthesize a distinct plan, so
+    // a hit observed by a candidate's before/after delta is its own; the
+    // span attribution can never exceed the sweep's memo-hit total.
+    assert!(
+        cache_hit_spans as u64 <= result.synth_cache.hits,
+        "{cache_hit_spans} hit-attributed spans vs {} memo hits",
+        result.synth_cache.hits
+    );
+    for c in &candidates {
+        assert!(c.num_arg("fps").is_some(), "candidate span lacks fps arg");
+        assert!(c.bool_arg("accepted").is_some(), "candidate span lacks accepted arg");
+    }
+}
+
+// --- metrics edge cases -------------------------------------------------
+
+#[test]
+fn latency_percentiles_empty_and_single_sample() {
+    let empty = LatencyStats::default();
+    assert_eq!(empty.percentile(50.0), None);
+    assert_eq!(empty.percentile(99.0), None);
+    assert_eq!(empty.mean(), None);
+
+    let mut one = LatencyStats::default();
+    one.record(42);
+    assert_eq!(one.percentile(0.0), Some(42));
+    assert_eq!(one.percentile(50.0), Some(42));
+    assert_eq!(one.percentile(99.0), Some(42));
+    assert_eq!(one.percentile(100.0), Some(42));
+    assert_eq!(one.mean(), Some(42.0));
+}
+
+#[test]
+fn histogram_overflow_bucket_catches_everything() {
+    let reg = Registry::new();
+    let h = reg.histogram("t_obs_edge_us", "edge-case histogram", &[1.0, 10.0]);
+    h.observe(0.5);
+    h.observe(10.0); // inclusive upper bound: still the le=10 bucket
+    h.observe(1e12); // far past the last bound → +Inf bucket
+    assert_eq!(h.bucket_counts(), vec![1, 1, 1]);
+    assert_eq!(h.count(), 3);
+    let text = reg.render_prometheus();
+    assert!(text.contains("t_obs_edge_us_bucket{le=\"+Inf\"} 3"), "{text}");
+}
+
+#[test]
+fn concurrent_counter_increments_from_pool_workers() {
+    let reg = std::sync::Arc::new(Registry::new());
+    let c = reg.counter("t_obs_pool_total", "incremented from pool workers");
+    let pool = Pool::new(4, "obs-test");
+    let per_job = 1_000u64;
+    let jobs = 16;
+    let handles: Vec<_> = (0..jobs)
+        .map(|_| {
+            let c = std::sync::Arc::clone(&c);
+            pool.submit_with_result(move || {
+                for _ in 0..per_job {
+                    c.inc();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.recv().unwrap();
+    }
+    assert_eq!(c.get(), jobs as u64 * per_job, "lost increments under contention");
+    assert_eq!(reg.snapshot()["t_obs_pool_total"], (jobs as u64 * per_job) as f64);
+}
+
+#[test]
+fn disabled_tracer_is_a_no_op_everywhere() {
+    let _l = lock();
+    let _ = obs::take(); // ensure disabled and drained
+    assert!(!obs::enabled());
+
+    let mut s = obs::span("exec", "nothing");
+    assert_eq!(s.id(), None);
+    s.set_arg("k", 1u64);
+    drop(s);
+    assert_eq!(
+        obs::span_at(
+            "serve",
+            "nothing",
+            None,
+            std::time::Instant::now(),
+            std::time::Instant::now(),
+            vec![],
+        ),
+        None
+    );
+
+    // A full compile with the tracer off records no spans and moves no
+    // gated counters.
+    let before = obs::global_metrics().snapshot();
+    let compiler = Compiler::default();
+    let mut session = compiler.graph(&models::lenet5()).mode(Mode::Pipelined);
+    session.lower().unwrap();
+    session.synthesize().unwrap();
+    let after = obs::global_metrics().snapshot();
+    assert_eq!(delta(&before, &after, "flow_lower_total"), 0.0);
+    assert_eq!(delta(&before, &after, "flow_passes_applied_total"), 0.0);
+    assert_eq!(delta(&before, &after, "flow_synth_cache_misses_total"), 0.0);
+    assert!(obs::take().is_empty());
+}
+
+#[test]
+fn observability_json_sections() {
+    let _l = lock();
+    let _ = obs::take();
+    obs::enable();
+    {
+        let _s = obs::span("compile", "unit");
+    }
+    let trace = obs::take();
+
+    let with = obs::observability_json(Some(&trace));
+    let j = tvm_fpga_flow::util::json::parse(&with.to_string()).unwrap();
+    assert!(j.get("metrics").is_some());
+    assert_eq!(
+        j.get("trace").unwrap().get("spans").and_then(|v| v.as_f64()),
+        Some(trace.len() as f64)
+    );
+    let without = obs::observability_json(None);
+    let j = tvm_fpga_flow::util::json::parse(&without.to_string()).unwrap();
+    assert!(j.get("metrics").is_some());
+    assert!(j.get("trace").is_none());
+}
