@@ -1,5 +1,7 @@
 //! §IV-J factor-selection sweep (the paper's future-work DSE): evaluate
 //! tile candidates under the three legality rules and time the explorer.
+//! Everything measured is recorded to `target/BENCH_dse.json`
+//! (`FLOW_BENCH_OUT` overrides) via the unified [`BenchWriter`].
 //!
 //! ```sh
 //! cargo bench --bench dse_sweep
@@ -8,9 +10,16 @@
 use tvm_fpga_flow::dse;
 use tvm_fpga_flow::flow::{Compiler, Mode, OptLevel};
 use tvm_fpga_flow::graph::models;
-use tvm_fpga_flow::util::bench::{bench, Table};
+use tvm_fpga_flow::util::bench::{bench, BenchWriter, RunMeta, Table};
+use tvm_fpga_flow::util::json::Json;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
 
 fn main() {
+    let mut w = BenchWriter::new(RunMeta::new("dse").target("stratix10sx"));
+    let mut rows_json = Vec::new();
     let mut t = Table::new(
         "DSE outcomes per network",
         &["network", "points", "rejected", "cache hit%", "default FPS", "best FPS", "gain"],
@@ -28,10 +37,20 @@ fn main() {
             Mode::Pipelined => dse::explore_pipelined(&sweep, &g),
         };
         let best = r.best.as_ref().map(|b| b.fps).unwrap_or(0.0);
+        let rejected = r.log.iter().filter(|p| p.rejected.is_some()).count();
+        rows_json.push(obj(vec![
+            ("network", Json::Str(name.to_string())),
+            ("points", Json::Num(r.evaluated as f64)),
+            ("rejected", Json::Num(rejected as f64)),
+            ("cache_hit_rate", Json::Num(r.synth_cache_hit_rate())),
+            ("default_fps", Json::Num(default_fps)),
+            ("best_fps", Json::Num(best)),
+            ("gain", Json::Num(best / default_fps)),
+        ]));
         t.row(&[
             name.into(),
             r.evaluated.to_string(),
-            r.log.iter().filter(|p| p.rejected.is_some()).count().to_string(),
+            rejected.to_string(),
             format!("{:.0}", r.synth_cache_hit_rate() * 100.0),
             format!("{default_fps:.2}"),
             format!("{best:.2}"),
@@ -64,4 +83,43 @@ fn main() {
         warm.synth_cache.misses
     );
     println!("(each point replaces a 3–12 h Quartus run in the paper's manual sweep)");
+
+    // The pipeline-partition cut search reuses the same synthesis memo:
+    // time it and record what the cost model chose.
+    let link = tvm_fpga_flow::flow::multi::Link::default();
+    let resnet = models::resnet34();
+    let part = dse::explore_partitions(&resnet, &["stratix10sx", "stratix10sx"], &link)
+        .expect("partition search runs");
+    let best = part.best.as_ref().expect("a 2-stage resnet34 partition exists");
+    println!(
+        "partition search: resnet34 on 2x stratix10sx → cuts {:?}, {:.2} FPS, {} evaluated",
+        best.cuts, best.fps, part.evaluated
+    );
+    let part_stats = bench(
+        "dse/explore_partitions/resnet34(2dev,cold)",
+        std::time::Duration::from_millis(100),
+        std::time::Duration::from_secs(2),
+        1_000,
+        || dse::explore_partitions(&resnet, &["stratix10sx", "stratix10sx"], &link).unwrap(),
+    );
+    println!("{}", part_stats.report());
+
+    w.insert("sweeps", Json::Arr(rows_json));
+    w.insert(
+        "warm_cache_hit_rate",
+        Json::Num(warm.synth_cache_hit_rate()),
+    );
+    w.insert(
+        "partition_search",
+        obj(vec![
+            ("network", Json::Str("resnet34".to_string())),
+            ("devices", Json::Num(2.0)),
+            ("cuts", Json::Arr(best.cuts.iter().map(|&c| Json::Num(c as f64)).collect())),
+            ("fps", Json::Num(best.fps)),
+            ("evaluated", Json::Num(part.evaluated as f64)),
+        ]),
+    );
+    w.stats(&[stats, part_stats]);
+    let path = w.write().expect("write bench json");
+    println!("wrote {}", path.display());
 }

@@ -8,14 +8,21 @@
 //!
 //! Acceptance: with `max_batch = 8` the batcher must reach ≥ 4× the
 //! frames/sec of the `max_batch = 1` server (the §IV-F amortization,
-//! measured at the serving layer).
+//! measured at the serving layer). Everything measured is recorded to
+//! `target/BENCH_serve.json` (`FLOW_BENCH_OUT` overrides) via the
+//! unified [`BenchWriter`].
 
 use std::time::{Duration, Instant};
 
 use tvm_fpga_flow::coordinator::{EngineSpec, InferenceServer, ServerConfig, SimEngine};
 use tvm_fpga_flow::flow::multi::ReplicaPlan;
 use tvm_fpga_flow::graph::models;
-use tvm_fpga_flow::util::bench::Table;
+use tvm_fpga_flow::util::bench::{BenchWriter, RunMeta, Table};
+use tvm_fpga_flow::util::json::Json;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
 
 const FRAME_ELEMS: usize = 16;
 const CLASSES: usize = 10;
@@ -61,10 +68,16 @@ fn main() {
         &["max_batch", "req/s", "batch histogram", "peak occupancy"],
     );
     let mut fps_by_batch = Vec::new();
+    let mut batching_rows = Vec::new();
     for max_batch in [1usize, 2, 4, 8] {
         let (fps, hist, occ) =
             run(vec![EngineSpec::Sim(accel.clone())], max_batch, requests);
         fps_by_batch.push((max_batch, fps));
+        batching_rows.push(obj(vec![
+            ("max_batch", Json::Num(max_batch as f64)),
+            ("req_per_s", Json::Num(fps)),
+            ("peak_occupancy", Json::Num(occ)),
+        ]));
         t.row(&[
             max_batch.to_string(),
             format!("{fps:.0}"),
@@ -92,6 +105,7 @@ fn main() {
         "replica scaling — lenet5, sim engines from the staged flow (256 requests)",
         &["replicas", "targets", "req/s", "peak occupancy"],
     );
+    let mut replica_rows = Vec::new();
     for targets in [
         vec!["stratix10sx"],
         vec!["stratix10sx", "arria10gx"],
@@ -105,6 +119,12 @@ fn main() {
             .collect();
         let n = specs.len();
         let (fps, _, occ) = run(specs, 8, requests);
+        replica_rows.push(obj(vec![
+            ("replicas", Json::Num(n as f64)),
+            ("targets", Json::Str(targets.join(","))),
+            ("req_per_s", Json::Num(fps)),
+            ("peak_occupancy", Json::Num(occ)),
+        ]));
         t.row(&[
             n.to_string(),
             targets.join(","),
@@ -118,4 +138,12 @@ fn main() {
          analog); replicas add §IV-G-style concurrency across whole \
          accelerators, weighted by each target's modeled throughput."
     );
+
+    let mut w = BenchWriter::new(RunMeta::new("serve"));
+    w.insert("requests", Json::Num(requests as f64));
+    w.insert("batch_1_vs_8_speedup", Json::Num(speedup));
+    w.insert("batching", Json::Arr(batching_rows));
+    w.insert("replica_scaling", Json::Arr(replica_rows));
+    let path = w.write().expect("write bench json");
+    println!("wrote {}", path.display());
 }

@@ -2,7 +2,9 @@
 //! optimized accelerators for the three evaluation networks, vs the paper
 //! — plus the int8 column the paper's §VII anticipates, asserting the
 //! modeled DSP/BRAM savings of the quantized datapath. Also times the
-//! synthesis path (graph → kernels → AOC model).
+//! synthesis path (graph → kernels → AOC model). Everything measured is
+//! recorded to `target/BENCH_table2.json` (`FLOW_BENCH_OUT` overrides)
+//! via the unified [`BenchWriter`].
 //!
 //! ```sh
 //! cargo bench --bench table2_resources
@@ -12,10 +14,18 @@ use tvm_fpga_flow::flow::{Compiler, ModeChoice, OptLevel};
 use tvm_fpga_flow::graph::models;
 use tvm_fpga_flow::metrics::{deviation_pct, paper};
 use tvm_fpga_flow::quant::QuantConfig;
-use tvm_fpga_flow::util::bench::{quick, Table};
+use tvm_fpga_flow::util::bench::{quick, BenchWriter, RunMeta, Table};
+use tvm_fpga_flow::util::json::Json;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
 
 fn main() {
     let flow = Compiler::default();
+    let mut w = BenchWriter::new(RunMeta::new("table2").target("stratix10sx"));
+    let mut rows_json = Vec::new();
+    let mut q_rows_json = Vec::new();
     let mut table = Table::new(
         "Table II — resource utilization and f_max (ours | paper)",
         &["network", "logic %", "BRAM %", "DSP %", "f_max MHz", "max dev"],
@@ -33,6 +43,18 @@ fn main() {
         ]
         .into_iter()
         .fold(0.0f64, f64::max);
+        rows_json.push(obj(vec![
+            ("network", Json::Str(name.to_string())),
+            ("logic_pct", Json::Num(l)),
+            ("bram_pct", Json::Num(b)),
+            ("dsp_pct", Json::Num(d)),
+            ("fmax_mhz", Json::Num(f)),
+            ("paper_logic_pct", Json::Num(pl)),
+            ("paper_bram_pct", Json::Num(pb)),
+            ("paper_dsp_pct", Json::Num(pd)),
+            ("paper_fmax_mhz", Json::Num(pf)),
+            ("max_deviation_pct", Json::Num(dev)),
+        ]));
         table.row(&[
             name.into(),
             format!("{l:.0} | {pl:.0}"),
@@ -79,6 +101,16 @@ fn main() {
         );
         let delta = int8_acc.quant.as_ref().map(|q| q.accuracy.delta_pp).unwrap_or(0.0);
         assert!(delta < 5.0, "{name}: accuracy delta {delta}pp out of band");
+        q_rows_json.push(obj(vec![
+            ("network", Json::Str(name.to_string())),
+            ("f32_dsp_pct", Json::Num(uf.dsp_frac * 100.0)),
+            ("int8_dsp_pct", Json::Num(ui.dsp_frac * 100.0)),
+            ("f32_bram_pct", Json::Num(uf.bram_frac * 100.0)),
+            ("int8_bram_pct", Json::Num(ui.bram_frac * 100.0)),
+            ("f32_fps", Json::Num(f32_acc.performance.fps)),
+            ("int8_fps", Json::Num(int8_acc.performance.fps)),
+            ("top1_delta_pp", Json::Num(delta)),
+        ]));
         qtable.row(&[
             name.into(),
             format!("{:.1} → {:.1}", uf.dsp_frac * 100.0, ui.dsp_frac * 100.0),
@@ -92,11 +124,19 @@ fn main() {
 
     // Criterion-style timing of the synthesis path itself (the paper's
     // equivalent step is 3–12 h of Quartus, §IV-J).
+    let mut timings = Vec::new();
     for name in ["lenet5", "mobilenet_v1", "resnet34"] {
         let g = models::by_name(name).unwrap();
         let stats = quick(&format!("synthesize/{name}"), || {
             flow.compile(&g, Compiler::paper_mode(name), OptLevel::Optimized).unwrap()
         });
         println!("{}", stats.report());
+        timings.push(stats);
     }
+
+    w.insert("table2", Json::Arr(rows_json));
+    w.insert("table2_int8", Json::Arr(q_rows_json));
+    w.stats(&timings);
+    let path = w.write().expect("write bench json");
+    println!("wrote {}", path.display());
 }

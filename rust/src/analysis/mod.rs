@@ -124,6 +124,16 @@ pub enum Lint {
     EpilogueDivergence,
     /// FLOW037: a kernel's absorbed-node record diverges from the graph.
     AbsorbedMismatch,
+    /// FLOW053: a pipeline stage's modeled utilization exceeds its
+    /// device's budget — the partition is not deployable as cut.
+    PipelineStageOverBudget,
+    /// FLOW054: consecutive pipeline stages disagree about the boundary
+    /// tensor (host channel element count mismatch).
+    PipelineBoundaryMismatch,
+    /// FLOW055: the pipeline's bottleneck stage is transfer-bound — the
+    /// host link, not any device, caps throughput, so adding devices
+    /// cannot help until the cut moves.
+    PipelineTransferBound,
     /// FLOW050: a pass recorded as skipped reports IR changes.
     TraceInconsistent,
     /// FLOW051: a pass's diff moved values onto a quantization grid but its
@@ -159,6 +169,9 @@ impl Lint {
             Lint::NodeLost => "FLOW035",
             Lint::EpilogueDivergence => "FLOW036",
             Lint::AbsorbedMismatch => "FLOW037",
+            Lint::PipelineStageOverBudget => "FLOW053",
+            Lint::PipelineBoundaryMismatch => "FLOW054",
+            Lint::PipelineTransferBound => "FLOW055",
             Lint::TraceInconsistent => "FLOW050",
             Lint::EquivalenceUnderstated => "FLOW051",
             Lint::PassNoEffect => "FLOW052",
@@ -190,6 +203,9 @@ impl Lint {
             Lint::NodeLost => "node-lost",
             Lint::EpilogueDivergence => "epilogue-divergence",
             Lint::AbsorbedMismatch => "absorbed-mismatch",
+            Lint::PipelineStageOverBudget => "pipeline-stage-over-budget",
+            Lint::PipelineBoundaryMismatch => "pipeline-boundary-mismatch",
+            Lint::PipelineTransferBound => "pipeline-transfer-bound",
             Lint::TraceInconsistent => "trace-inconsistent",
             Lint::EquivalenceUnderstated => "equivalence-understated",
             Lint::PassNoEffect => "pass-no-effect",
@@ -201,6 +217,7 @@ impl Lint {
             Lint::DeadKernel
             | Lint::AccumMargin
             | Lint::NearBudget
+            | Lint::PipelineTransferBound
             | Lint::EquivalenceUnderstated => Severity::Warning,
             Lint::PassNoEffect => Severity::Note,
             _ => Severity::Error,
@@ -235,6 +252,9 @@ impl Lint {
             Lint::TraceInconsistent,
             Lint::EquivalenceUnderstated,
             Lint::PassNoEffect,
+            Lint::PipelineStageOverBudget,
+            Lint::PipelineBoundaryMismatch,
+            Lint::PipelineTransferBound,
         ]
     }
 }
@@ -248,11 +268,22 @@ pub struct Span {
     pub channel: Option<String>,
     pub node: Option<String>,
     pub pass: Option<String>,
+    /// Pipeline stage index, for multi-device partition findings.
+    pub stage: Option<usize>,
 }
 
 impl Span {
     pub fn kernel(name: impl Into<String>) -> Span {
         Span { kernel: Some(name.into()), ..Span::default() }
+    }
+
+    pub fn stage(index: usize) -> Span {
+        Span { stage: Some(index), ..Span::default() }
+    }
+
+    pub fn with_stage(mut self, index: usize) -> Span {
+        self.stage = Some(index);
+        self
     }
 
     pub fn channel(name: impl Into<String>) -> Span {
@@ -376,6 +407,9 @@ impl AnalysisReport {
                         if let Some(p) = &d.span.pass {
                             m.insert("pass".into(), Json::Str(p.clone()));
                         }
+                        if let Some(s) = d.span.stage {
+                            m.insert("stage".into(), Json::Num(s as f64));
+                        }
                         Json::Obj(m)
                     })
                     .collect(),
@@ -490,6 +524,97 @@ pub fn analyze(
     report
 }
 
+/// Per-stage facts the pipeline analyzer consumes — a plain projection of
+/// [`crate::flow::multi::PipelinePlan`] so the analyzer stays decoupled
+/// from the flow types that produce it.
+#[derive(Debug, Clone)]
+pub struct PipelineStageFacts {
+    /// Stage network name (`"{parent}.s{i}"`).
+    pub name: String,
+    /// Device the stage was synthesized for.
+    pub device: String,
+    /// Modeled utilization of the stage's design on its device.
+    pub utilization: crate::device::Utilization,
+    /// Elements the stage's output tensor carries into the next host
+    /// channel.
+    pub out_elems: u64,
+    /// Elements the stage's `Input` node expects from the previous stage.
+    pub in_elems: u64,
+    /// True when the stage's host-link transfer exceeds its compute.
+    pub transfer_bound: bool,
+    /// Pipeline interval the stage occupies (`max(compute, transfer)`).
+    pub stage_s: f64,
+}
+
+/// Pipeline-partition analyses (FLOW053–FLOW055): per-stage resource
+/// budgets, inter-stage host-channel element consistency, and
+/// transfer-bound bottleneck attribution.
+///
+/// FLOW055 fires only for the *bottleneck* stage: a fast non-bottleneck
+/// stage whose tiny compute is nominally below its transfer time costs
+/// nothing (the transfer overlaps someone else's compute), but a
+/// transfer-bound bottleneck means the host link — not any device — caps
+/// throughput, so adding devices cannot help until the cut moves.
+pub fn analyze_pipeline(stages: &[PipelineStageFacts]) -> AnalysisReport {
+    let mut span = crate::obs::span("analysis", "pipeline");
+    span.set_arg("stages", stages.len());
+    let mut diagnostics = Vec::new();
+    for (i, s) in stages.iter().enumerate() {
+        for (dim, frac) in crate::aoc::resources::over_budget(&s.utilization) {
+            diagnostics.push(Diagnostic::new(
+                Lint::PipelineStageOverBudget,
+                Span::stage(i).with_node(s.name.clone()),
+                format!(
+                    "stage {i} ({}) modeled {dim} utilization {:.0}% exceeds the {} budget \
+                     by {:.0}% — move a cut or add a device",
+                    s.name,
+                    frac * 100.0,
+                    s.device,
+                    (frac - 1.0) * 100.0
+                ),
+            ));
+        }
+    }
+    for i in 1..stages.len() {
+        let (prev, cur) = (&stages[i - 1], &stages[i]);
+        if prev.out_elems != cur.in_elems {
+            diagnostics.push(Diagnostic::new(
+                Lint::PipelineBoundaryMismatch,
+                Span::stage(i).with_node(cur.name.clone()),
+                format!(
+                    "host channel between stage {} and stage {i} disagrees on the boundary \
+                     tensor: {} produces {} elements but {} expects {}",
+                    i - 1,
+                    prev.name,
+                    prev.out_elems,
+                    cur.name,
+                    cur.in_elems
+                ),
+            ));
+        }
+    }
+    if let Some((i, s)) = stages
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.stage_s.total_cmp(&b.1.stage_s))
+    {
+        if s.transfer_bound {
+            diagnostics.push(Diagnostic::new(
+                Lint::PipelineTransferBound,
+                Span::stage(i).with_node(s.name.clone()),
+                format!(
+                    "pipeline bottleneck stage {i} ({}) is transfer-bound: the host link, \
+                     not the device, caps throughput at {:.1} ms/frame",
+                    s.name,
+                    s.stage_s * 1e3
+                ),
+            ));
+        }
+    }
+    span.set_arg("findings", diagnostics.len());
+    AnalysisReport { diagnostics }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -551,5 +676,64 @@ mod tests {
         assert_eq!(item.get("code").unwrap().as_str(), Some("FLOW010"));
         assert_eq!(item.get("kernel").unwrap().as_str(), Some("fc"));
         assert_eq!(item.get("node").unwrap().as_str(), Some("fc1"));
+    }
+
+    #[test]
+    fn pipeline_analysis_flags_budget_boundary_and_bottleneck() {
+        use crate::device::Utilization;
+        let stage = |name: &str, bram: f64, out_e: u64, in_e: u64, tb: bool, s: f64| {
+            PipelineStageFacts {
+                name: name.into(),
+                device: "Stratix 10SX".into(),
+                utilization: Utilization { bram_frac: bram, ..Utilization::default() },
+                out_elems: out_e,
+                in_elems: in_e,
+                transfer_bound: tb,
+                stage_s: s,
+            }
+        };
+        // Clean 2-stage pipeline: no findings.
+        let ok = vec![
+            stage("net.s0", 0.5, 100, 10, false, 1e-3),
+            stage("net.s1", 0.4, 10, 100, false, 8e-4),
+        ];
+        assert!(analyze_pipeline(&ok).is_clean(true));
+
+        // Over-budget stage 1 names the resource + overshoot and carries
+        // the stage span.
+        let over = vec![
+            stage("net.s0", 0.5, 100, 10, false, 1e-3),
+            stage("net.s1", 1.25, 10, 100, false, 8e-4),
+        ];
+        let rep = analyze_pipeline(&over);
+        let d = rep.errors().next().expect("FLOW053 emitted");
+        assert_eq!(d.lint.code(), "FLOW053");
+        assert_eq!(d.span.stage, Some(1));
+        assert!(d.message.contains("BRAM"), "{}", d.message);
+        assert!(d.message.contains("25%"), "{}", d.message);
+
+        // Boundary element mismatch between stages is FLOW054.
+        let torn = vec![
+            stage("net.s0", 0.5, 100, 10, false, 1e-3),
+            stage("net.s1", 0.4, 10, 99, false, 8e-4),
+        ];
+        let rep = analyze_pipeline(&torn);
+        assert_eq!(rep.errors().next().unwrap().lint.code(), "FLOW054");
+
+        // Transfer-bound: only the bottleneck stage warns.
+        let tb_not_bottleneck = vec![
+            stage("net.s0", 0.5, 100, 10, false, 1e-3),
+            stage("net.s1", 0.4, 10, 100, true, 8e-4),
+        ];
+        assert!(analyze_pipeline(&tb_not_bottleneck).is_clean(true));
+        let tb_bottleneck = vec![
+            stage("net.s0", 0.5, 100, 10, false, 1e-3),
+            stage("net.s1", 0.4, 10, 100, true, 2e-3),
+        ];
+        let rep = analyze_pipeline(&tb_bottleneck);
+        assert!(!rep.is_clean(true));
+        assert!(rep.is_clean(false), "FLOW055 is a warning, not an error");
+        assert_eq!(rep.diagnostics[0].lint.code(), "FLOW055");
+        assert_eq!(rep.diagnostics[0].span.stage, Some(1));
     }
 }

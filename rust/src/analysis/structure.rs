@@ -155,18 +155,21 @@ pub(crate) fn check_budget(prog: &KernelProgram, dev: &FpgaDevice) -> Vec<Diagno
             Lint::OverBudget,
             Span::default(),
             format!(
-                "modeled {dim} utilization {:.0}% exceeds the device budget (§IV-J rule 3)",
-                frac * 100.0
+                "modeled {dim} utilization {:.0}% exceeds the device budget by {:.0}% \
+                 (§IV-J rule 3)",
+                frac * 100.0,
+                (frac - 1.0) * 100.0
             ),
         ));
     }
     if util.fits() && util.max_frac() > NEAR_BUDGET_FRAC {
+        let (dim, frac) = util.peak();
         out.push(Diagnostic::new(
             Lint::NearBudget,
             Span::default(),
             format!(
-                "modeled peak utilization {:.0}% is above the {:.0}% routing-risk threshold",
-                util.max_frac() * 100.0,
+                "modeled {dim} utilization {:.0}% is above the {:.0}% routing-risk threshold",
+                frac * 100.0,
                 NEAR_BUDGET_FRAC * 100.0
             ),
         ));

@@ -214,14 +214,16 @@ pub fn program_resources(prog: &KernelProgram, dev: &FpgaDevice) -> ProgramResou
     ProgramResources { per_kernel, total, utilization }
 }
 
-/// Resource dimensions over the device budget, as `(name, fraction)` — the
-/// analyzer's FLOW030 source (§IV-J rule 3). Empty iff `u.fits()`.
+/// Resource dimensions over the device budget, as `(FPGA resource name,
+/// fraction)` — the analyzer's FLOW030 source (§IV-J rule 3). Names use
+/// the device families' own vocabulary (ALM/FF/DSP/BRAM) so diagnostics
+/// say *which* budget was blown. Empty iff `u.fits()`.
 pub fn over_budget(u: &Utilization) -> Vec<(&'static str, f64)> {
     [
-        ("logic", u.logic_frac),
-        ("ff", u.ff_frac),
-        ("dsp", u.dsp_frac),
-        ("bram", u.bram_frac),
+        ("ALM", u.logic_frac),
+        ("FF", u.ff_frac),
+        ("DSP", u.dsp_frac),
+        ("BRAM", u.bram_frac),
     ]
     .into_iter()
     .filter(|&(_, f)| f > 1.0)

@@ -203,7 +203,9 @@ impl SimEngine {
 }
 
 /// Deterministic per-frame "prediction": FNV-1a over the f32 bit patterns.
-fn hash_predict(frame: &[f32], classes: usize) -> u32 {
+/// Shared with the pipeline server so a partitioned deployment answers
+/// exactly what a whole-network [`SimEngine`] would.
+pub(crate) fn hash_predict(frame: &[f32], classes: usize) -> u32 {
     let mut h = crate::util::FNV_OFFSET;
     for v in frame {
         h = crate::util::fnv64_with(h, &v.to_bits().to_le_bytes());

@@ -30,6 +30,11 @@
 //! exercised end-to-end (tests, benches, `fpga-flow serve`) even where
 //! artifacts or the PJRT bindings are absent.
 //!
+//! Data parallelism (replicas) is one multi-FPGA shape; the other is
+//! *pipeline* parallelism, where a [`crate::flow::multi::PipelinePlan`]
+//! splits one network across devices and [`PipelineServer`] runs one
+//! stage worker per device, chained by bounded channels.
+//!
 //! Backpressure is explicit: the queue is bounded and a full queue fails
 //! submissions with [`ServerError::Overloaded`] instead of buffering
 //! without limit. Every *accepted* request is answered — shutdown drains
@@ -38,11 +43,13 @@
 
 mod batcher;
 mod engine;
+mod pipeline;
 mod replica;
 mod stats;
 
 pub use batcher::{BatchQueue, PushError};
 pub use engine::{Engine, EngineSpec, PjrtEngine, SimEngine};
+pub use pipeline::{export_pipeline_metrics, PipelineConfig, PipelineServer, StageSpec};
 pub use stats::{ReplicaStats, StatsSnapshot};
 
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -1,0 +1,491 @@
+//! Pipeline-parallel serving: one worker thread per partition stage,
+//! connected by bounded channels.
+//!
+//! ```text
+//!  infer()/infer_async()      stage workers (one thread per device)
+//!  ─────────────▶ sync_channel ─▶ [s0] ─chan─▶ [s1] ─chan─▶ [s2] ─▶ respond
+//!       │          (queue_capacity)   bounded to channel_depth
+//!       ▼
+//!  Err(Overloaded) when full
+//! ```
+//!
+//! This is the runtime half of a [`PipelinePlan`]: each stage worker
+//! models one device holding a frame for its stage time
+//! (`max(compute, transfer)` under the latency-balancing cost model),
+//! then hands it to the next stage over a bounded channel. Frame *i + 1*
+//! occupies stage 0 while frame *i* occupies stage 1, so steady-state
+//! throughput is set by the slowest stage — exactly the quantity the cut
+//! search minimizes — and a slow stage backs its predecessors up through
+//! channel backpressure instead of deadlocking or buffering without
+//! limit.
+//!
+//! The frame payload itself crosses the stages untouched (the per-stage
+//! activations are modeled, not materialized), so the final stage's
+//! deterministic prediction is the same FNV hash a whole-network
+//! [`SimEngine`](super::SimEngine) would produce: a partitioned
+//! deployment is observationally identical to an unpartitioned one,
+//! frame for frame.
+//!
+//! Statistics reuse the serving [`Shared`] state with one "replica" per
+//! stage, so [`StatsSnapshot`] carries per-stage frames, busy time and
+//! occupancy, and [`StatsSnapshot::bottleneck`] attributes the pipeline
+//! bottleneck. The accepted-implies-answered discipline matches
+//! [`InferenceServer`](super::InferenceServer): shutdown drains in-flight
+//! frames stage by stage, so the final snapshot satisfies
+//! `completed == submitted`.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::flow::multi::PipelinePlan;
+use crate::obs;
+
+use super::engine::hash_predict;
+use super::stats::Shared;
+use super::{ServerError, StatsSnapshot};
+
+/// Timing model for one pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// Stage label, used as the replica name in [`StatsSnapshot`].
+    pub name: String,
+    /// Wall time the stage holds a frame: `max(compute, transfer)` when
+    /// derived from a plan, or an injected duration in chaos tests.
+    pub stage_time: Duration,
+    /// Modeled bytes entering this stage over the host link (0 for
+    /// stage 0, whose input arrives with the request).
+    pub transfer_bytes: u64,
+}
+
+/// Configuration for [`PipelineServer::start`].
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// One spec per stage, in pipeline order. Must be non-empty.
+    pub stages: Vec<StageSpec>,
+    /// Expected elements per submitted frame (stage 0's input).
+    pub frame_elems: usize,
+    /// Classes the final stage predicts over.
+    pub num_classes: usize,
+    /// Bound of each inter-stage channel — how far a fast stage may run
+    /// ahead of its successor before blocking.
+    pub channel_depth: usize,
+    /// Bound of the entry queue; a full queue rejects with
+    /// [`ServerError::Overloaded`].
+    pub queue_capacity: usize,
+    /// Divides every stage time (tests use large scales to serve modeled
+    /// millisecond stages in microseconds).
+    pub time_scale: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> PipelineConfig {
+        PipelineConfig {
+            stages: Vec::new(),
+            frame_elems: 16,
+            num_classes: 10,
+            channel_depth: 2,
+            queue_capacity: 64,
+            time_scale: 1.0,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Derive stage timing from a compiled [`PipelinePlan`]: one stage
+    /// per plan stage, named `"{stage}@{target}"`, holding frames for the
+    /// stage's modeled `max(compute, transfer)` time.
+    pub fn from_plan(plan: &PipelinePlan) -> PipelineConfig {
+        let stages = plan
+            .stages
+            .iter()
+            .map(|st| StageSpec {
+                name: format!("{}@{}", st.graph.name, st.target.name),
+                stage_time: Duration::from_secs_f64(st.cost.stage_s()),
+                transfer_bytes: st.cost.transfer_bytes,
+            })
+            .collect();
+        let first = &plan.stages[0].graph;
+        let last = &plan.stages[plan.stages.len() - 1].graph;
+        PipelineConfig {
+            stages,
+            frame_elems: first.nodes[first.input].shape.elems(),
+            num_classes: last.nodes[last.output].shape.elems(),
+            ..PipelineConfig::default()
+        }
+    }
+
+    /// Divide all stage times by `scale` (like
+    /// [`SimEngine::with_time_scale`](super::SimEngine::with_time_scale)).
+    pub fn with_time_scale(mut self, scale: f64) -> PipelineConfig {
+        self.time_scale = scale;
+        self
+    }
+}
+
+/// A frame in flight through the stage chain.
+struct PipeFrame {
+    frame: Vec<f32>,
+    submitted: Instant,
+    resp: std::sync::mpsc::Sender<crate::Result<u32>>,
+}
+
+/// A running stage pipeline. See the [module docs](self) for the thread
+/// and channel layout.
+pub struct PipelineServer {
+    /// Entry channel; `None` once shutdown has closed it.
+    input: Option<SyncSender<PipeFrame>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    capacity: usize,
+    frame_elems: usize,
+}
+
+impl PipelineServer {
+    /// Spawn one worker thread per stage, wired by bounded channels.
+    pub fn start(cfg: PipelineConfig) -> crate::Result<PipelineServer> {
+        anyhow::ensure!(!cfg.stages.is_empty(), "pipeline needs at least one stage");
+        anyhow::ensure!(cfg.num_classes > 0, "pipeline needs at least one output class");
+        anyhow::ensure!(cfg.time_scale > 0.0, "time_scale must be positive");
+        let capacity = cfg.queue_capacity.max(1);
+        let depth = cfg.channel_depth.max(1);
+        let shared =
+            Arc::new(Shared::new(cfg.stages.iter().map(|s| s.name.clone()).collect(), 1));
+
+        let n = cfg.stages.len();
+        let (entry_tx, entry_rx) = sync_channel::<PipeFrame>(capacity);
+        let mut rx = entry_rx;
+        let mut workers = Vec::with_capacity(n);
+        for (index, spec) in cfg.stages.into_iter().enumerate() {
+            let last = index + 1 == n;
+            let (next_tx, next_rx) = if last {
+                (None, None)
+            } else {
+                let (t, r) = sync_channel::<PipeFrame>(depth);
+                (Some(t), Some(r))
+            };
+            let stage_rx = rx;
+            let shared = Arc::clone(&shared);
+            let scale = cfg.time_scale;
+            let classes = cfg.num_classes;
+            workers.push(std::thread::spawn(move || {
+                stage_worker(index, spec, stage_rx, next_tx, shared, scale, classes);
+            }));
+            rx = match next_rx {
+                Some(r) => r,
+                None => break,
+            };
+        }
+
+        Ok(PipelineServer {
+            input: Some(entry_tx),
+            workers,
+            shared,
+            capacity,
+            frame_elems: cfg.frame_elems,
+        })
+    }
+
+    /// [`PipelineServer::start`] from a compiled plan, at real time.
+    pub fn from_plan(plan: &PipelinePlan) -> crate::Result<PipelineServer> {
+        PipelineServer::start(PipelineConfig::from_plan(plan))
+    }
+
+    /// Submit one frame and block for its prediction.
+    pub fn infer(&self, frame: Vec<f32>) -> crate::Result<u32> {
+        let rx = self.infer_async(frame)?;
+        rx.recv().unwrap_or_else(|_| Err(ServerError::Stopped.into()))
+    }
+
+    /// Submit one frame; the returned channel yields the prediction.
+    /// Fails fast with [`ServerError::Overloaded`] when the entry queue
+    /// is full and [`ServerError::BadFrame`] on a size mismatch.
+    pub fn infer_async(
+        &self,
+        frame: Vec<f32>,
+    ) -> crate::Result<Receiver<crate::Result<u32>>> {
+        let input = match &self.input {
+            Some(tx) => tx,
+            None => return Err(ServerError::Stopped.into()),
+        };
+        if frame.len() != self.frame_elems {
+            return Err(ServerError::BadFrame {
+                expected: self.frame_elems,
+                got: frame.len(),
+            }
+            .into());
+        }
+        let (resp, rx) = channel();
+        // Count before pushing so `completed` can never outrun `submitted`.
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        match input.try_send(PipeFrame { frame, submitted: Instant::now(), resp }) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => {
+                self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ServerError::Overloaded { capacity: self.capacity }.into())
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                Err(ServerError::Stopped.into())
+            }
+        }
+    }
+
+    /// Point-in-time statistics (per-stage entries under `replicas`).
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.snapshot()
+    }
+
+    /// Close the entry queue, drain every in-flight frame through the
+    /// remaining stages, join the workers and return the final snapshot
+    /// (`completed == submitted`).
+    pub fn shutdown(mut self) -> StatsSnapshot {
+        self.input.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.shared.snapshot()
+    }
+}
+
+impl Drop for PipelineServer {
+    fn drop(&mut self) {
+        // Close the entry channel; detached workers drain and exit in
+        // cascade as each upstream sender drops.
+        self.input.take();
+    }
+}
+
+fn stage_worker(
+    index: usize,
+    spec: StageSpec,
+    rx: Receiver<PipeFrame>,
+    next: Option<SyncSender<PipeFrame>>,
+    shared: Arc<Shared>,
+    scale: f64,
+    classes: usize,
+) {
+    let stage_time = Duration::from_secs_f64(spec.stage_time.as_secs_f64() / scale);
+    while let Ok(req) = rx.recv() {
+        let mut span = obs::span("pipeline", &spec.name);
+        span.set_arg("stage", index as u64);
+        let t0 = Instant::now();
+        if index == 0 {
+            let queued = req.submitted.elapsed().as_micros() as u64;
+            shared.queue_latency.lock().unwrap().record(queued);
+        }
+        if !stage_time.is_zero() {
+            std::thread::sleep(stage_time);
+        }
+        let rep = &shared.replicas[index];
+        rep.batches.fetch_add(1, Ordering::Relaxed);
+        rep.frames.fetch_add(1, Ordering::Relaxed);
+        rep.busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        match &next {
+            Some(tx) => {
+                // Blocks when the successor's channel is full: that is the
+                // backpressure that makes the slowest stage set throughput.
+                if tx.send(req).is_err() {
+                    break; // downstream worker gone; nothing left to feed
+                }
+            }
+            None => {
+                let pred = hash_predict(&req.frame, classes);
+                let total = req.submitted.elapsed().as_micros() as u64;
+                shared.latency.lock().unwrap().record(total);
+                shared.completed.fetch_add(1, Ordering::Relaxed);
+                if obs::enabled() {
+                    obs::global_metrics()
+                        .counter(
+                            "flow_pipeline_frames_total",
+                            "frames completing the stage pipeline",
+                        )
+                        .inc();
+                }
+                let _ = req.resp.send(Ok(pred));
+            }
+        }
+    }
+}
+
+/// Export pipeline-shaped metrics from a final snapshot: the standard
+/// `flow_serve_*` gauges plus per-stage occupancy and bottleneck
+/// attribution.
+pub fn export_pipeline_metrics(reg: &crate::obs::Registry, s: &StatsSnapshot) {
+    s.export_metrics(reg);
+    reg.set_gauge(
+        "flow_pipeline_stage_count",
+        "pipeline stages serving",
+        s.replicas.len() as f64,
+    );
+    if let Some(b) = s.bottleneck() {
+        reg.set_gauge(
+            "flow_pipeline_bottleneck_stage",
+            "index of the busiest pipeline stage",
+            b as f64,
+        );
+    }
+    for (i, r) in s.replicas.iter().enumerate() {
+        reg.set_gauge(
+            &format!("flow_pipeline_stage_{i}_occupancy"),
+            &format!("busy fraction of pipeline stage {}", r.name),
+            r.occupancy,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SimEngine;
+    use super::*;
+    use crate::flow::multi::Link;
+    use crate::graph::models::lenet5;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    fn spec(name: &str, stage_time: Duration) -> StageSpec {
+        StageSpec { name: name.to_string(), stage_time, transfer_bytes: 0 }
+    }
+
+    fn frame(elems: usize, salt: f32) -> Vec<f32> {
+        (0..elems).map(|i| i as f32 * 0.25 + salt).collect()
+    }
+
+    #[test]
+    fn pipeline_answers_match_whole_network_sim_engine() {
+        let cfg = PipelineConfig {
+            stages: vec![spec("s0", ms(0)), spec("s1", ms(0)), spec("s2", ms(0))],
+            frame_elems: 12,
+            num_classes: 7,
+            ..PipelineConfig::default()
+        };
+        let server = PipelineServer::start(cfg).unwrap();
+        let whole =
+            SimEngine::new("whole", 12, 7, 1, Duration::ZERO, Duration::ZERO);
+        for salt in 0..5 {
+            let f = frame(12, salt as f32);
+            let got = server.infer(f.clone()).unwrap();
+            let want =
+                crate::coordinator::Engine::classify_batch(&whole, &[f.as_slice()]).unwrap()[0];
+            assert_eq!(got, want, "partitioned prediction must match whole-network sim");
+        }
+        let s = server.shutdown();
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.completed, 5);
+        assert_eq!(s.replicas.len(), 3);
+        for r in &s.replicas {
+            assert_eq!(r.frames, 5, "every stage sees every frame");
+        }
+    }
+
+    #[test]
+    fn slow_stage_is_attributed_as_bottleneck() {
+        let cfg = PipelineConfig {
+            stages: vec![spec("fast0", ms(1)), spec("slow", ms(8)), spec("fast1", ms(1))],
+            frame_elems: 4,
+            num_classes: 10,
+            ..PipelineConfig::default()
+        };
+        let server = PipelineServer::start(cfg).unwrap();
+        let pending: Vec<_> =
+            (0..10).map(|i| server.infer_async(frame(4, i as f32)).unwrap()).collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let s = server.shutdown();
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.bottleneck(), Some(1), "busy time must point at the slow stage");
+        let slow = &s.replicas[1];
+        assert!(
+            slow.busy_us > s.replicas[0].busy_us && slow.busy_us > s.replicas[2].busy_us,
+            "slow stage accumulates the most busy time: {:?}",
+            s.replicas
+        );
+    }
+
+    #[test]
+    fn full_entry_queue_rejects_with_overloaded() {
+        let cfg = PipelineConfig {
+            stages: vec![spec("s0", ms(50))],
+            frame_elems: 4,
+            num_classes: 3,
+            channel_depth: 1,
+            queue_capacity: 1,
+            ..PipelineConfig::default()
+        };
+        let server = PipelineServer::start(cfg).unwrap();
+        let mut pending = Vec::new();
+        let mut overloaded = 0;
+        for i in 0..8 {
+            match server.infer_async(frame(4, i as f32)) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => {
+                    assert!(matches!(
+                        e.downcast_ref::<ServerError>(),
+                        Some(ServerError::Overloaded { capacity: 1 })
+                    ));
+                    overloaded += 1;
+                }
+            }
+        }
+        assert!(overloaded > 0, "a bounded queue must shed load");
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let s = server.shutdown();
+        assert_eq!(s.completed, s.submitted);
+        assert_eq!(s.rejected, overloaded);
+    }
+
+    #[test]
+    fn bad_frame_and_stopped_errors_surface() {
+        let cfg = PipelineConfig {
+            stages: vec![spec("s0", ms(0))],
+            frame_elems: 8,
+            num_classes: 4,
+            ..PipelineConfig::default()
+        };
+        let server = PipelineServer::start(cfg).unwrap();
+        let err = server.infer(frame(5, 0.0)).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServerError>(),
+            Some(ServerError::BadFrame { expected: 8, got: 5 })
+        ));
+        let s = server.shutdown();
+        assert_eq!(s.submitted, 0);
+    }
+
+    #[test]
+    fn config_from_plan_serves_partitioned_lenet() {
+        let g = lenet5();
+        let plan =
+            PipelinePlan::build(&g, &["stratix10sx", "stratix10sx"], &Link::default()).unwrap();
+        assert_eq!(plan.stages.len(), 2);
+        let cfg = PipelineConfig::from_plan(&plan).with_time_scale(1e4);
+        assert_eq!(cfg.frame_elems, g.nodes[g.input].shape.elems());
+        assert_eq!(cfg.num_classes, 10);
+        assert_eq!(cfg.stages[0].transfer_bytes, 0);
+        assert!(cfg.stages[1].transfer_bytes > 0, "stage 1 pays the boundary transfer");
+        let server = PipelineServer::start(cfg).unwrap();
+        for i in 0..4 {
+            server.infer(frame(g.nodes[g.input].shape.elems(), i as f32)).unwrap();
+        }
+        let s = server.shutdown();
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.replicas.len(), 2);
+        assert!(s.replicas[0].name.contains("stratix10sx"));
+        assert!(s.bottleneck().is_some());
+
+        let reg = crate::obs::Registry::default();
+        export_pipeline_metrics(&reg, &s);
+        let text = reg.render_prometheus();
+        assert!(text.contains("flow_pipeline_stage_count 2"));
+        assert!(text.contains("flow_pipeline_stage_0_occupancy"));
+        assert!(text.contains("flow_pipeline_bottleneck_stage"));
+    }
+}

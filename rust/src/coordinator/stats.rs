@@ -44,6 +44,19 @@ impl StatsSnapshot {
         BatchHistogram::from_counts(self.batch_hist.clone()).render()
     }
 
+    /// Index of the busiest replica (or pipeline stage) — the one with the
+    /// most accumulated busy time. `None` until some replica has done work.
+    /// Ties resolve to the earliest index so attribution is deterministic.
+    pub fn bottleneck(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if r.busy_us > 0 && best.is_none_or(|b| r.busy_us > self.replicas[b].busy_us) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
     /// Mean frames per executed batch (0.0 before any batch ran).
     pub fn mean_batch_size(&self) -> f64 {
         let frames: u64 =

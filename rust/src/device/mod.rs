@@ -138,6 +138,22 @@ impl Utilization {
             .max(self.dsp_frac)
             .max(self.ff_frac)
     }
+
+    /// The tightest resource as `(FPGA resource name, fraction)` — the
+    /// dimension [`Utilization::max_frac`] is reporting. Names follow the
+    /// device families' own vocabulary (ALM/FF/DSP/BRAM) so diagnostics
+    /// can tell the user *which* budget to partition around.
+    pub fn peak(&self) -> (&'static str, f64) {
+        [
+            ("ALM", self.logic_frac),
+            ("FF", self.ff_frac),
+            ("DSP", self.dsp_frac),
+            ("BRAM", self.bram_frac),
+        ]
+        .into_iter()
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap()
+    }
 }
 
 /// Calibrated throughput models for the comparison platforms of Table V.

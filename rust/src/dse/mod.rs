@@ -624,6 +624,225 @@ pub fn explore_precisions_measured(
     Ok(PrecisionFront { network: graph.name.clone(), mode, results, pareto, baseline_f32 })
 }
 
+/// One evaluated pipeline-partition candidate: a set of cut points, the
+/// per-stage costs under the latency-balancing model, and the resulting
+/// steady-state throughput (`1 / max_i stage_s`).
+#[derive(Debug, Clone)]
+pub struct PartitionPoint {
+    /// Cut points in parent node ids (`stages = cuts.len() + 1`).
+    pub cuts: Vec<usize>,
+    /// Per-stage modeled cost, in stage order (empty when rejected).
+    pub costs: Vec<crate::pass::StageCost>,
+    /// Steady-state pipeline FPS (0 when rejected).
+    pub fps: f64,
+    /// Index of the slowest stage.
+    pub bottleneck: usize,
+    /// None = legal and fits; Some(reason) = rejected.
+    pub rejected: Option<String>,
+}
+
+impl PartitionPoint {
+    /// Pipeline interval: the bottleneck stage's occupancy.
+    pub fn interval_s(&self) -> f64 {
+        self.costs.iter().map(|c| c.stage_s()).fold(0.0, f64::max)
+    }
+
+    /// Total bytes crossing host links per frame.
+    pub fn total_transfer_bytes(&self) -> u64 {
+        self.costs.iter().map(|c| c.transfer_bytes).sum()
+    }
+}
+
+/// Result of a partition search: the chosen cuts plus the full candidate
+/// log and the synthesis-memo statistics the sweep accumulated.
+#[derive(Debug, Clone)]
+pub struct PartitionResult {
+    pub best: Option<PartitionPoint>,
+    pub log: Vec<PartitionPoint>,
+    pub evaluated: usize,
+    pub synth_cache: CacheStats,
+}
+
+/// Search pipeline cut points for a K-device deployment (`K =
+/// targets.len()`, possibly heterogeneous): enumerate every choose(K-1)
+/// combination of the clean spatial-reduction cut candidates
+/// ([`crate::pass::candidate_cuts`]), synthesize each stage on its device
+/// through the staged session API (sharing one synthesis memo per distinct
+/// target, so revisited stage subgraphs are cache hits), and keep the
+/// combination minimizing the bottleneck stage time `max_i max(compute_i,
+/// transfer_i)` — ties broken toward fewer total transfer bytes. Stages
+/// whose modeled design does not fit their device are rejected candidates,
+/// not errors: a network too big for any single device is exactly the case
+/// partitioning exists for.
+pub fn explore_partitions(
+    graph: &Graph,
+    targets: &[&str],
+    link: &crate::flow::multi::Link,
+) -> crate::Result<PartitionResult> {
+    anyhow::ensure!(!targets.is_empty(), "partition search needs at least one target");
+    // One compiler (= one synthesis memo) per *distinct* target name;
+    // per-stage handles are clones sharing it.
+    let mut by_name: std::collections::BTreeMap<&str, Compiler> = std::collections::BTreeMap::new();
+    for name in targets {
+        if let std::collections::btree_map::Entry::Vacant(e) = by_name.entry(*name) {
+            e.insert(Compiler::for_target(name)?);
+        }
+    }
+    let compilers: Vec<Compiler> = targets.iter().map(|n| by_name[n].clone()).collect();
+    let r = explore_partitions_with(graph, &compilers, link);
+    Ok(r)
+}
+
+/// [`explore_partitions`] over pre-built per-stage compilers (stage i runs
+/// on `compilers[i]`'s target). Exposed so a caller materializing the
+/// winning plan can reuse the same synthesis memos.
+pub fn explore_partitions_with(
+    graph: &Graph,
+    compilers: &[Compiler],
+    link: &crate::flow::multi::Link,
+) -> PartitionResult {
+    let cache_before = partition_cache_stats(compilers);
+    let k = compilers.len();
+    let combos: Vec<Vec<usize>> = if k == 1 {
+        vec![Vec::new()]
+    } else {
+        combinations(&crate::pass::candidate_cuts(graph), k - 1)
+    };
+    let mut log = Vec::with_capacity(combos.len());
+    for cuts in combos {
+        let mut span = crate::obs::span("dse", "partition");
+        let p = partition_point(graph, compilers, link, cuts);
+        if crate::obs::enabled() {
+            span.set_arg("cuts", format!("{:?}", p.cuts));
+            span.set_arg("fps", p.fps);
+            span.set_arg("accepted", p.rejected.is_none());
+            let m = crate::obs::global_metrics();
+            m.counter("flow_dse_partitions_total", "partition candidate evaluations").inc();
+            if p.rejected.is_some() {
+                m.counter(
+                    "flow_dse_partitions_rejected_total",
+                    "partition candidates rejected",
+                )
+                .inc();
+            }
+        }
+        log.push(p);
+    }
+    let best = log
+        .iter()
+        .filter(|p| p.rejected.is_none())
+        .min_by(|a, b| {
+            a.interval_s()
+                .total_cmp(&b.interval_s())
+                .then(a.total_transfer_bytes().cmp(&b.total_transfer_bytes()))
+        })
+        .cloned();
+    let after = partition_cache_stats(compilers);
+    let evaluated = log.len();
+    PartitionResult {
+        best,
+        log,
+        evaluated,
+        synth_cache: CacheStats {
+            hits: after.hits - cache_before.hits,
+            misses: after.misses - cache_before.misses,
+        },
+    }
+}
+
+/// Summed memo counters over the *distinct* memos in `compilers` (clones
+/// share counters; double-counting would inflate the hit rate).
+fn partition_cache_stats(compilers: &[Compiler]) -> CacheStats {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut total = CacheStats::default();
+    for c in compilers {
+        if seen.insert(c.target.name.as_str()) {
+            let s = c.cache_stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+        }
+    }
+    total
+}
+
+/// Evaluate one cut combination into a [`PartitionPoint`], folding
+/// illegality, synthesis failure, and budget overflow into `rejected`.
+fn partition_point(
+    graph: &Graph,
+    compilers: &[Compiler],
+    link: &crate::flow::multi::Link,
+    cuts: Vec<usize>,
+) -> PartitionPoint {
+    let rejected = |cuts: Vec<usize>, why: String| PartitionPoint {
+        cuts,
+        costs: Vec::new(),
+        fps: 0.0,
+        bottleneck: 0,
+        rejected: Some(why),
+    };
+    let Some(stages) = crate::pass::split_stages(graph, &cuts) else {
+        return rejected(cuts, "cut is not a clean single-value frontier".into());
+    };
+    let mut costs = Vec::with_capacity(stages.len());
+    for (i, stage) in stages.iter().enumerate() {
+        let compiler = &compilers[i];
+        let mut session = compiler.graph(&stage.graph).mode(crate::flow::ModeChoice::Auto);
+        if let Err(e) = session.lower() {
+            return rejected(cuts, format!("stage {i} on {}: {e}", compiler.target.name));
+        }
+        let design = match session.synthesize() {
+            Ok(d) => d,
+            Err(e) => {
+                return rejected(cuts, format!("stage {i} on {}: {e}", compiler.target.name))
+            }
+        };
+        let util = design.synthesis.resources.utilization;
+        if !util.fits() {
+            let (dim, frac) = util.peak();
+            return rejected(
+                cuts,
+                format!(
+                    "stage {i} does not fit {}: {dim} at {:.0}%",
+                    compiler.target.name,
+                    frac * 100.0
+                ),
+            );
+        }
+        let compute_s = design.performance().frame_time_s;
+        let transfer_bytes = if i == 0 { 0 } else { stage.input_bytes() };
+        costs.push(if i == 0 {
+            crate::pass::StageCost { compute_s, transfer_s: 0.0, transfer_bytes: 0 }
+        } else {
+            crate::pass::StageCost::model(compute_s, transfer_bytes, link)
+        });
+    }
+    let (bottleneck, interval) = costs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (i, c.stage_s()))
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("at least one stage");
+    PartitionPoint { cuts, costs, fps: 1.0 / interval, bottleneck, rejected: None }
+}
+
+/// All choose(k) combinations of `items`, preserving order.
+fn combinations(items: &[usize], k: usize) -> Vec<Vec<usize>> {
+    if k == 0 {
+        return vec![Vec::new()];
+    }
+    if items.len() < k {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, &x) in items.iter().enumerate() {
+        for mut rest in combinations(&items[i + 1..], k - 1) {
+            rest.insert(0, x);
+            out.push(rest);
+        }
+    }
+    out
+}
+
 /// Metric-space equality (used to drop duplicate front entries that came
 /// from tile candidates clamping to the same design).
 fn points_equal(a: &ParetoPoint, b: &ParetoPoint) -> bool {
@@ -869,5 +1088,59 @@ mod tests {
         assert!(r.synth_cache.hits > 0, "{:?}", r.synth_cache);
         assert!(r.synth_cache_hit_rate() > 0.0);
         assert!(r.synth_cache.total() <= r.evaluated as u64);
+    }
+
+    #[test]
+    fn combinations_enumerate_in_order() {
+        assert_eq!(combinations(&[1, 2, 3], 0), vec![Vec::<usize>::new()]);
+        assert_eq!(combinations(&[1, 2, 3], 2), vec![vec![1, 2], vec![1, 3], vec![2, 3]]);
+        assert!(combinations(&[1, 2], 3).is_empty());
+    }
+
+    #[test]
+    fn partition_search_balances_resnet_across_two_devices() {
+        use crate::flow::multi::Link;
+        let g = models::resnet34();
+        let r = explore_partitions(&g, &["stratix10sx", "stratix10sx"], &Link::default())
+            .unwrap();
+        let best = r.best.as_ref().expect("a legal 2-stage partition exists");
+        assert_eq!(best.cuts.len(), 1);
+        assert_eq!(best.costs.len(), 2);
+        assert!(best.bottleneck < 2);
+        // The winner minimizes the bottleneck interval over the whole log.
+        for p in r.log.iter().filter(|p| p.rejected.is_none()) {
+            assert!(best.interval_s() <= p.interval_s() + 1e-12);
+        }
+        // Stage 1's inbound transfer crosses the host link.
+        assert!(best.costs[1].transfer_bytes > 0);
+        assert!(best.costs[0].transfer_bytes == 0);
+        // Pipelining beats the best single-device folded plan.
+        let single = Compiler::default()
+            .compile(&g, Mode::Folded, crate::flow::OptLevel::Optimized)
+            .unwrap()
+            .performance
+            .fps;
+        assert!(best.fps > single * 1.2, "pipeline {} vs single {single}", best.fps);
+        // The memo saw every stage synthesis of the sweep.
+        assert!(r.synth_cache.total() > 0);
+    }
+
+    #[test]
+    fn partition_search_degenerates_to_whole_graph_on_one_target() {
+        use crate::flow::multi::Link;
+        let g = models::lenet5();
+        let r = explore_partitions(&g, &["stratix10sx"], &Link::default()).unwrap();
+        let best = r.best.expect("whole-graph point accepted");
+        assert!(best.cuts.is_empty());
+        assert_eq!(best.costs.len(), 1);
+        assert_eq!(best.total_transfer_bytes(), 0);
+        assert_eq!(r.evaluated, 1);
+    }
+
+    #[test]
+    fn partition_search_rejects_unknown_target() {
+        use crate::flow::multi::Link;
+        let g = models::lenet5();
+        assert!(explore_partitions(&g, &["virtex7", "stratix10sx"], &Link::default()).is_err());
     }
 }

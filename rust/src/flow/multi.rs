@@ -9,12 +9,14 @@
 //! (smaller) kernel subset, so per-device utilization drops and f_max
 //! rises — the multi-FPGA win the paper anticipates.
 
+use crate::analysis::{AnalysisReport, PipelineStageFacts};
 use crate::device::Target;
 use crate::graph::Graph;
+use crate::pass::{split_stages, PartitionPass, PassManager, PassTrace, Pipeline, StageCost};
 use crate::sim::{folded, HostModel};
 
 use super::patterns::{self, FactorPlan, OptConfig};
-use super::{Accelerator, Compiler, Flow, ModeChoice};
+use super::{Accelerator, CacheStats, CompileError, Compiler, Flow, ModeChoice};
 
 /// Inter-FPGA link model (PCIe peer-to-peer / serial-lite style).
 #[derive(Debug, Clone, Copy)]
@@ -245,6 +247,243 @@ impl ReplicaPlan {
     }
 }
 
+/// One stage of a pipeline-parallel deployment: a contiguous subgraph
+/// compiled for its own device, plus the provenance and modeled cost the
+/// coordinator and verifier need.
+#[derive(Debug, Clone)]
+pub struct PipelineStage {
+    /// Stage index (0 = receives the network input from the host).
+    pub index: usize,
+    /// The device this stage synthesizes on.
+    pub target: Target,
+    /// The stage subgraph (named `"{parent}.s{index}"`; the parent graph
+    /// itself for the degenerate single-stage plan).
+    pub graph: Graph,
+    /// Parent node id for each stage node id (see
+    /// [`crate::pass::StageGraph`]).
+    pub parent_ids: Vec<usize>,
+    /// The compiled accelerator for this stage.
+    pub accelerator: Accelerator,
+    /// Modeled stage cost under the latency-balancing model.
+    pub cost: StageCost,
+}
+
+/// A pipeline-parallel multi-FPGA plan: the network split at `cuts` into
+/// one stage per device, connected by bounded host channels
+/// ([`crate::coordinator::PipelineServer`] runs it). Unlike
+/// [`Compiler::compile_multi`] (which folds one kernel program across
+/// identical devices) each stage here is an independently compiled — and
+/// possibly heterogeneous — [`Accelerator`], so per-stage mode, f_max and
+/// utilization are first-class, and unlike [`ReplicaPlan`] the devices
+/// cooperate on every frame instead of sharding traffic.
+///
+/// Steady-state throughput is set by the bottleneck stage:
+/// `fps = 1 / max_i max(compute_i, transfer_i)` — frame i+1 occupies
+/// stage 0 while frame i occupies stage 1, and the host-channel transfer
+/// into a stage overlaps the previous stage's next frame.
+#[derive(Debug, Clone)]
+pub struct PipelinePlan {
+    pub network: String,
+    /// Chosen cut points (parent node ids; empty for a single stage).
+    pub cuts: Vec<usize>,
+    pub stages: Vec<PipelineStage>,
+    /// Steady-state pipeline throughput.
+    pub fps: f64,
+    /// Index of the bottleneck stage.
+    pub bottleneck: usize,
+    pub link: Link,
+    /// Pass trace recording the partition decision (the
+    /// [`PartitionPass`] record; skipped for the degenerate plan).
+    pub trace: PassTrace,
+    /// Pipeline-level diagnostics (FLOW053–FLOW055); error-free by
+    /// construction — `build` fails on errors.
+    pub analysis: AnalysisReport,
+    /// Cut combinations the search evaluated (1 for a single stage).
+    pub evaluated: usize,
+    /// Synthesis-memo statistics across search + materialization.
+    pub synth_cache: CacheStats,
+}
+
+impl PipelinePlan {
+    /// Search cut points and compile one stage per target (`K =
+    /// targets.len()`). The degenerate `K = 1` plan compiles the parent
+    /// graph unchanged — byte-identical to the unpartitioned session
+    /// compile — and records the partition pass as skipped.
+    ///
+    /// ```
+    /// use tvm_fpga_flow::flow::multi::{Link, PipelinePlan};
+    /// use tvm_fpga_flow::graph::models;
+    ///
+    /// let plan = PipelinePlan::build(
+    ///     &models::lenet5(),
+    ///     &["stratix10sx", "arria10gx"],
+    ///     &Link::default(),
+    /// )
+    /// .unwrap();
+    /// assert_eq!(plan.stages.len(), 2);
+    /// assert!(plan.fps > 0.0);
+    /// ```
+    pub fn build(graph: &Graph, targets: &[&str], link: &Link) -> crate::Result<PipelinePlan> {
+        PipelinePlan::build_with(graph, targets, link, None)
+    }
+
+    /// [`PipelinePlan::build`] with an optional quantization recipe: the
+    /// cut search runs on the fp32 graph (stage balance is driven by MAC
+    /// distribution and boundary bytes, which precision scales nearly
+    /// uniformly — and the host channels carry dequantized fp32 either
+    /// way), then each winning stage is quantized and compiled at the
+    /// requested precision.
+    pub fn build_with(
+        graph: &Graph,
+        targets: &[&str],
+        link: &Link,
+        quant: Option<crate::quant::QuantConfig>,
+    ) -> crate::Result<PipelinePlan> {
+        anyhow::ensure!(!targets.is_empty(), "pipeline plan needs at least one target");
+        // One compiler (= one synthesis memo) per distinct target, shared
+        // between the search and the materialization below, so the winning
+        // stages re-synthesize as cache hits.
+        let mut by_name: std::collections::BTreeMap<&str, Compiler> = Default::default();
+        for name in targets {
+            if let std::collections::btree_map::Entry::Vacant(e) = by_name.entry(*name) {
+                e.insert(Compiler::for_target(name)?);
+            }
+        }
+        let compilers: Vec<Compiler> = targets.iter().map(|n| by_name[n].clone()).collect();
+
+        let (cuts, evaluated) = if targets.len() == 1 {
+            (Vec::new(), 1)
+        } else {
+            let r = crate::dse::explore_partitions_with(graph, &compilers, link);
+            let best = r.best.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no legal {}-stage partition of {} fits {:?} (evaluated {} cut sets)",
+                    targets.len(),
+                    graph.name,
+                    targets,
+                    r.evaluated
+                )
+            })?;
+            (best.cuts, r.evaluated)
+        };
+
+        // Record the partition decision in a first-class pass trace (the
+        // degenerate plan records it as skipped by precondition).
+        let mut pm = PassManager::new();
+        pm.run_graph_passes(&Pipeline::default().graph(PartitionPass { cuts: cuts.clone() }), graph);
+        let trace = pm.into_trace();
+
+        let stage_graphs = split_stages(graph, &cuts)
+            .ok_or_else(|| anyhow::anyhow!("chosen cuts {cuts:?} are not a clean partition"))?;
+        let mut stages = Vec::with_capacity(stage_graphs.len());
+        for (i, sg) in stage_graphs.into_iter().enumerate() {
+            let compiler = &compilers[i];
+            let accelerator = match &quant {
+                Some(q) if q.precision != crate::texpr::Precision::F32 => {
+                    let prep = crate::quant::prepare(&sg.graph, q)?;
+                    let mut acc = compiler
+                        .graph(&prep.graph)
+                        .mode(ModeChoice::Auto)
+                        .opts(OptConfig::optimized().with_precision(prep.report.precision))
+                        .lower()?
+                        .synthesize()?
+                        .simulate()?;
+                    acc.quant = Some(prep.report.clone());
+                    acc
+                }
+                _ => compiler
+                    .graph(&sg.graph)
+                    .mode(ModeChoice::Auto)
+                    .lower()?
+                    .synthesize()?
+                    .simulate()?,
+            };
+            let compute_s = accelerator.performance.frame_time_s;
+            let cost = if i == 0 {
+                StageCost { compute_s, transfer_s: 0.0, transfer_bytes: 0 }
+            } else {
+                StageCost::model(compute_s, sg.input_bytes(), link)
+            };
+            stages.push(PipelineStage {
+                index: i,
+                target: compiler.target.clone(),
+                graph: sg.graph,
+                parent_ids: sg.parent_ids,
+                accelerator,
+                cost,
+            });
+        }
+        let (bottleneck, interval) = stages
+            .iter()
+            .map(|s| s.cost.stage_s())
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("at least one stage");
+        let fps = 1.0 / interval;
+
+        let facts: Vec<PipelineStageFacts> = stages
+            .iter()
+            .map(|s| PipelineStageFacts {
+                name: s.graph.name.clone(),
+                device: s.target.name.clone(),
+                utilization: s.accelerator.synthesis.resources.utilization,
+                out_elems: s.graph.nodes[s.graph.output].shape.elems() as u64,
+                in_elems: s.graph.nodes[s.graph.input].shape.elems() as u64,
+                transfer_bound: s.cost.bound() == "transfer",
+                stage_s: s.cost.stage_s(),
+            })
+            .collect();
+        let analysis = crate::analysis::analyze_pipeline(&facts);
+        if analysis.count(crate::analysis::Severity::Error) > 0 {
+            return Err(CompileError::Analysis {
+                network: graph.name.clone(),
+                diagnostics: analysis.diagnostics,
+            }
+            .into());
+        }
+
+        let synth_cache = by_name.values().fold(CacheStats::default(), |acc, c| {
+            let s = c.cache_stats();
+            CacheStats { hits: acc.hits + s.hits, misses: acc.misses + s.misses }
+        });
+        if crate::obs::enabled() {
+            let m = crate::obs::global_metrics();
+            m.counter("flow_pipeline_plans_total", "pipeline plans built").inc();
+            m.counter("flow_pipeline_stages_total", "pipeline stages compiled")
+                .add(stages.len() as u64);
+            m.counter(
+                "flow_pipeline_transfer_bytes_total",
+                "per-frame host-link bytes summed over built pipeline plans",
+            )
+            .add(stages.iter().map(|s| s.cost.transfer_bytes).sum::<u64>());
+        }
+        Ok(PipelinePlan {
+            network: graph.name.clone(),
+            cuts,
+            stages,
+            fps,
+            bottleneck,
+            link: *link,
+            trace,
+            analysis,
+            evaluated,
+            synth_cache,
+        })
+    }
+
+    /// Per-stage occupancy: the fraction of the pipeline interval each
+    /// stage is busy (1.0 for the bottleneck).
+    pub fn occupancy(&self) -> Vec<f64> {
+        let interval = 1.0 / self.fps;
+        self.stages.iter().map(|s| s.cost.stage_s() / interval).collect()
+    }
+
+    /// Total host-link bytes per frame across all cuts.
+    pub fn transfer_bytes_per_frame(&self) -> u64 {
+        self.stages.iter().map(|s| s.cost.transfer_bytes).sum()
+    }
+}
+
 impl Flow {
     /// Deprecated shim over [`Compiler::compile_multi`].
     #[deprecated(since = "0.2.0", note = "use Compiler::compile_multi")]
@@ -329,6 +568,94 @@ mod tests {
             err.downcast_ref::<crate::flow::CompileError>().is_some(),
             "expected typed CompileError, got: {err}"
         );
+    }
+
+    #[test]
+    fn pipeline_plan_two_stages_beats_single_device() {
+        let g = models::resnet34();
+        let plan =
+            PipelinePlan::build(&g, &["stratix10sx", "stratix10sx"], &Link::default()).unwrap();
+        assert_eq!(plan.stages.len(), 2);
+        assert_eq!(plan.cuts.len(), 1);
+        assert!(plan.evaluated >= 2, "search must have compared cut sets");
+        let single = Compiler::default()
+            .compile(&g, Mode::Folded, OptLevel::Optimized)
+            .unwrap()
+            .performance
+            .fps;
+        assert!(plan.fps > single * 1.2, "pipeline {} vs single {single}", plan.fps);
+        // The partition decision is a first-class pass-trace record.
+        let rec = &plan.trace.records[0];
+        assert_eq!(rec.abbrev, "PT");
+        assert!(rec.skipped.is_none());
+        assert_eq!(rec.diff.channels_inserted, 1);
+        // The bottleneck stage is fully occupied; no stage exceeds 1.
+        let occ = plan.occupancy();
+        assert!((occ[plan.bottleneck] - 1.0).abs() < 1e-9, "{occ:?}");
+        assert!(occ.iter().all(|&o| o <= 1.0 + 1e-9), "{occ:?}");
+        // One host channel carries the boundary activation.
+        assert!(plan.transfer_bytes_per_frame() > 0);
+        assert_eq!(plan.stages[0].cost.transfer_bytes, 0);
+        // Pipeline-level analysis is clean on the paper network.
+        assert!(plan.analysis.is_clean(false));
+        // Materialization re-synthesizes the winning stages as memo hits.
+        assert!(plan.synth_cache.hits > 0, "{:?}", plan.synth_cache);
+        // Stage provenance covers every parent node exactly once (the
+        // boundary producer additionally seeds stage 1's Input).
+        let total: usize = plan.stages.iter().map(|s| s.graph.nodes.len()).sum();
+        assert_eq!(total, g.nodes.len() + plan.cuts.len());
+    }
+
+    #[test]
+    fn pipeline_plan_degenerate_single_stage_matches_session_compile() {
+        let g = models::lenet5();
+        let plan = PipelinePlan::build(&g, &["stratix10sx"], &Link::default()).unwrap();
+        assert_eq!(plan.stages.len(), 1);
+        assert!(plan.cuts.is_empty());
+        assert_eq!(plan.evaluated, 1);
+        // The partition pass records itself as skipped (nothing to cut).
+        assert!(plan.trace.records[0].skipped.is_some());
+        // Byte-identical to the unpartitioned staged compile: same program
+        // fingerprint, same modeled performance.
+        let direct = Compiler::for_target("stratix10sx")
+            .unwrap()
+            .graph(&g)
+            .mode(ModeChoice::Auto)
+            .lower()
+            .unwrap()
+            .synthesize()
+            .unwrap()
+            .simulate()
+            .unwrap();
+        let stage = &plan.stages[0].accelerator;
+        assert_eq!(
+            crate::flow::program_fingerprint(&stage.program),
+            crate::flow::program_fingerprint(&direct.program)
+        );
+        assert_eq!(stage.performance.fps, direct.performance.fps);
+        assert_eq!(plan.fps, direct.performance.fps);
+        assert_eq!(plan.bottleneck, 0);
+        assert_eq!(plan.transfer_bytes_per_frame(), 0);
+    }
+
+    #[test]
+    fn pipeline_plan_quantized_stages_carry_reports() {
+        let g = models::lenet5();
+        let quant = crate::quant::QuantConfig::for_precision(crate::texpr::Precision::Int8);
+        let plan = PipelinePlan::build_with(
+            &g,
+            &["stratix10sx", "arria10gx"],
+            &Link::default(),
+            Some(quant),
+        )
+        .unwrap();
+        assert_eq!(plan.stages.len(), 2);
+        for s in &plan.stages {
+            let q = s.accelerator.quant.as_ref().expect("stage carries its quant report");
+            assert_eq!(q.precision, crate::texpr::Precision::Int8);
+        }
+        // Heterogeneous targets survive into the plan.
+        assert_ne!(plan.stages[0].target.name, plan.stages[1].target.name);
     }
 
     #[test]

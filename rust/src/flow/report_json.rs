@@ -8,6 +8,7 @@ use crate::dse::{ParetoPoint, PrecisionFront};
 use crate::pass::PassTrace;
 use crate::util::json::Json;
 
+use super::multi::PipelinePlan;
 use super::Accelerator;
 
 fn num(v: f64) -> Json {
@@ -136,6 +137,118 @@ impl Accelerator {
             root.insert("observability".into(), crate::obs::observability_json(trace));
         }
         j
+    }
+}
+
+impl PipelinePlan {
+    /// Machine-readable pipeline report (`fpga-flow partition --json`):
+    /// the partition decision (cuts, per-stage cost-model terms, the
+    /// bottleneck stage), the pass trace that recorded it, pipeline-level
+    /// diagnostics, and each stage's full accelerator report.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("network".into(), s(self.network.clone()));
+        root.insert("kind".into(), s("pipeline"));
+        root.insert("stages".into(), num(self.stages.len() as f64));
+        root.insert(
+            "cuts".into(),
+            Json::Arr(self.cuts.iter().map(|&c| num(c as f64)).collect()),
+        );
+        root.insert("fps".into(), num(self.fps));
+        root.insert("bottleneck_stage".into(), num(self.bottleneck as f64));
+        let mut link = BTreeMap::new();
+        link.insert("bandwidth_bytes_per_s".into(), num(self.link.bandwidth_bytes_per_s));
+        link.insert("latency_s".into(), num(self.link.latency_s));
+        root.insert("link".into(), Json::Obj(link));
+        let mut search = BTreeMap::new();
+        search.insert("evaluated".into(), num(self.evaluated as f64));
+        let mut cache = BTreeMap::new();
+        cache.insert("hits".into(), num(self.synth_cache.hits as f64));
+        cache.insert("misses".into(), num(self.synth_cache.misses as f64));
+        search.insert("synth_cache".into(), Json::Obj(cache));
+        root.insert("search".into(), Json::Obj(search));
+        root.insert("pass_trace".into(), self.trace.to_json());
+        root.insert("diagnostics".into(), self.analysis.to_json());
+        let occ = self.occupancy();
+        root.insert(
+            "stage".into(),
+            Json::Arr(
+                self.stages
+                    .iter()
+                    .zip(&occ)
+                    .map(|(st, &o)| {
+                        let mut m = BTreeMap::new();
+                        m.insert("index".into(), num(st.index as f64));
+                        m.insert("target".into(), s(st.target.name.clone()));
+                        m.insert("compute_s".into(), num(st.cost.compute_s));
+                        m.insert("transfer_s".into(), num(st.cost.transfer_s));
+                        m.insert(
+                            "transfer_bytes".into(),
+                            num(st.cost.transfer_bytes as f64),
+                        );
+                        m.insert("stage_s".into(), num(st.cost.stage_s()));
+                        m.insert("bound".into(), s(st.cost.bound()));
+                        m.insert("occupancy".into(), num(o));
+                        m.insert("accelerator".into(), st.accelerator.to_json());
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+
+    /// Human-readable partition explanation (`fpga-flow explain` /
+    /// `fpga-flow partition`): the chosen cuts, each stage's cost-model
+    /// terms, which term binds it, and the bottleneck attribution.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "pipeline partition of {}: {} stage(s), cuts {:?}, {:.1} FPS steady-state\n",
+            self.network,
+            self.stages.len(),
+            self.cuts,
+            self.fps
+        ));
+        out.push_str(&format!(
+            "cost model: stage_s = max(compute, link latency + bytes/{:.1} GB/s); \
+             throughput = 1 / max stage_s ({} cut set(s) evaluated)\n",
+            self.link.bandwidth_bytes_per_s / 1e9,
+            self.evaluated
+        ));
+        out.push_str(&format!(
+            "{:>5}  {:<12} {:<10} {:>11} {:>12} {:>12} {:>10} {:<9} {}\n",
+            "stage", "target", "mode", "compute_ms", "transfer_ms", "transfer_kB", "occupancy",
+            "bound", "layers"
+        ));
+        let occ = self.occupancy();
+        for (st, &o) in self.stages.iter().zip(&occ) {
+            let mark = if st.index == self.bottleneck { "*" } else { " " };
+            out.push_str(&format!(
+                "{mark}{:>4}  {:<12} {:<10} {:>11.3} {:>12.3} {:>12.1} {:>10.2} {:<9} {}\n",
+                st.index,
+                st.target.name,
+                st.accelerator.mode.name(),
+                st.cost.compute_s * 1e3,
+                st.cost.transfer_s * 1e3,
+                st.cost.transfer_bytes as f64 / 1e3,
+                o,
+                st.cost.bound(),
+                st.graph.nodes.len()
+            ));
+        }
+        out.push_str(&format!(
+            "bottleneck: stage {} ({}-bound); moving a cut or a faster link {} raise FPS\n",
+            self.bottleneck,
+            self.stages[self.bottleneck].cost.bound(),
+            if self.stages[self.bottleneck].cost.bound() == "transfer" {
+                "would"
+            } else {
+                "would not"
+            }
+        ));
+        out.push_str(&self.trace.render());
+        out
     }
 }
 
@@ -289,6 +402,36 @@ mod tests {
         let delta = q.get("accuracy_delta_pp").unwrap().as_f64().unwrap();
         assert!((0.0..25.0).contains(&delta), "{delta}");
         assert!(q.get("quantize_nodes").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn pipeline_plan_json_and_render_carry_partition_decision() {
+        use crate::flow::multi::{Link, PipelinePlan};
+        let plan = PipelinePlan::build(
+            &models::lenet5(),
+            &["stratix10sx", "stratix10sx"],
+            &Link::default(),
+        )
+        .unwrap();
+        let parsed = json::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("kind").unwrap().as_str(), Some("pipeline"));
+        assert_eq!(parsed.get("network").unwrap().as_str(), Some("lenet5"));
+        assert_eq!(parsed.get("stages").unwrap().as_u64(), Some(2));
+        assert_eq!(parsed.get("cuts").unwrap().as_arr().unwrap().len(), 1);
+        assert!(parsed.get("bottleneck_stage").unwrap().as_u64().is_some());
+        assert!(parsed.get("search").unwrap().get("evaluated").unwrap().as_u64().unwrap() >= 1);
+        // Per-stage cost-model terms + the full nested accelerator report.
+        let st = parsed.get("stage").unwrap().idx(1).unwrap();
+        assert!(st.get("transfer_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert!(st.get("compute_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(st.get("bound").unwrap().as_str().is_some());
+        let acc = st.get("accelerator").unwrap();
+        assert!(acc.get("performance").unwrap().get("fps").unwrap().as_f64().unwrap() > 0.0);
+        // The partition decision is also in the human-readable rendering.
+        let text = plan.render();
+        assert!(text.contains("pipeline partition of lenet5"), "{text}");
+        assert!(text.contains("bottleneck: stage"), "{text}");
+        assert!(text.contains("partition-pipeline"), "{text}");
     }
 
     #[test]

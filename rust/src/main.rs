@@ -27,6 +27,11 @@
 //!                    [--time-scale 1]
 //! fpga-flow hybrid   --net mobilenet_v1      # mixed pipelined/folded (§V-F)
 //! fpga-flow multi    --net resnet34 --devices 2  # multi-FPGA (§VII)
+//! fpga-flow partition --net resnet34 --devices stratix10sx,arria10gx
+//!                    [--stages K] [--precision int8|fp16] [--json]
+//!                    # pipeline-parallel multi-FPGA: cut search +
+//!                    # latency-balancing cost model (cuts, per-stage
+//!                    # cost terms, bottleneck attribution)
 //! fpga-flow passes   --net resnet34          # graph-level passes (bn-fold, DCE)
 //! fpga-flow profile  --net lenet5 [--requests 100] [--trace-out p.json]
 //!                    [--metrics-out p.prom] [--json]
@@ -83,6 +88,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "hybrid" => cmd_hybrid(&args),
         "multi" => cmd_multi(&args),
+        "partition" => cmd_partition(&args),
         "passes" => cmd_passes(&args),
         "profile" => cmd_profile(&args),
         "validate" => cmd_validate(),
@@ -141,7 +147,8 @@ fn print_help() {
                    deadlock, accumulator overflow, resource budget and\n\
                    pass-trace consistency lints (stable FLOW0xx codes,\n\
                    docs/ANALYSIS.md); exits nonzero on errors (and on\n\
-                   warnings under --deny warnings)\n\
+                   warnings under --deny warnings); --devices t1,t2,...\n\
+                   checks a pipeline partition instead (FLOW053-055)\n\
          targets   list registered device targets (legality clock, roof, DSPs)\n\
          report    Tables II/III/IV, ours vs the paper\n\
          codegen   --net <n> [--target <t>] [--precision int8]  dump pseudo-OpenCL\n\
@@ -164,6 +171,14 @@ fn print_help() {
                    workers over artifacts/.\n\
          hybrid    --net <n>                       mixed pipelined/folded (§V-F)\n\
          multi     --net <n> --devices 2           multi-FPGA partition (§VII)\n\
+         partition --net <n> --devices t1,t2,... [--stages K]\n\
+                   [--precision int8|fp16] [--json]\n\
+                   pipeline-parallel multi-FPGA: search the legal cut\n\
+                   points for the stage assignment that minimizes the\n\
+                   bottleneck stage time max(compute, transfer) subject\n\
+                   to per-device budgets; prints chosen cuts, per-stage\n\
+                   cost terms and bottleneck attribution (--stages cycles\n\
+                   the device list to K stages)\n\
          passes    --net <n>                       graph passes (bn-fold, DCE)\n\
          profile   --net <n> [--requests 100] [--frames 8]\n\
                    [--trace-out <p>] [--metrics-out <p>] [--json]\n\
@@ -506,6 +521,42 @@ fn cmd_check(args: &Args) -> tvm_fpga_flow::Result<()> {
     use tvm_fpga_flow::flow::CompileError;
 
     let g = net_arg(args)?;
+    // Partitioned configs: `--devices t1,t2,...` runs the pipeline
+    // analyzer (FLOW053–055) over the planned stage assignment instead of
+    // lowering for a single device.
+    if args.opt("devices").is_some() {
+        use tvm_fpga_flow::flow::multi::{Link, PipelinePlan};
+        let targets = devices_arg(args)?;
+        let names: Vec<&str> = targets.iter().map(String::as_str).collect();
+        let quant = match precision_arg(args)? {
+            Some(p) if p != Precision::F32 => Some(quant_cfg_args(args, p)?),
+            _ => None,
+        };
+        let deny = matches!(args.opt("deny"), Some("warnings"));
+        let report = match PipelinePlan::build_with(&g, &names, &Link::default(), quant) {
+            Ok(plan) => plan.analysis,
+            Err(e) => match e.downcast::<CompileError>() {
+                Ok(CompileError::Analysis { diagnostics, .. }) => {
+                    AnalysisReport { diagnostics }
+                }
+                Ok(other) => return Err(other.into()),
+                Err(e) => return Err(e),
+            },
+        };
+        if args.has_flag("json") {
+            println!("{}", report.to_json().to_string());
+        } else {
+            println!("design-rule check — {} partitioned across {}", g.name, names.join(","));
+            print!("{}", report.render());
+        }
+        anyhow::ensure!(
+            report.is_clean(deny),
+            "design-rule check failed for partitioned {}{}",
+            g.name,
+            if deny { " (--deny warnings)" } else { "" }
+        );
+        return Ok(());
+    }
     let compiler = compiler_arg(args)?;
     let level = if args.has_flag("base") { OptLevel::Base } else { OptLevel::Optimized };
     let cfg = if level == OptLevel::Base { OptConfig::base() } else { OptConfig::optimized() };
@@ -844,6 +895,49 @@ fn cmd_multi(args: &Args) -> tvm_fpga_flow::Result<()> {
             sh.fmax_mhz,
             sh.logic_frac * 100.0
         );
+    }
+    Ok(())
+}
+
+/// Parse `--devices t1,t2,...` into target names, cycling the list to
+/// `--stages K` entries when asked (`--devices stratix10sx --stages 3`
+/// means three stages on identical boards).
+fn devices_arg(args: &Args) -> tvm_fpga_flow::Result<Vec<String>> {
+    let spec = args.opt_or("devices", "stratix10sx,stratix10sx");
+    let mut targets: Vec<String> =
+        spec.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+    anyhow::ensure!(!targets.is_empty(), "--devices needs at least one target name");
+    if let Some(k) = args.opt_parse::<usize>("stages") {
+        anyhow::ensure!(k >= 1, "--stages must be at least 1");
+        let seed = targets.clone();
+        while targets.len() < k {
+            targets.push(seed[targets.len() % seed.len()].clone());
+        }
+        targets.truncate(k);
+    }
+    Ok(targets)
+}
+
+/// `fpga-flow partition`: pipeline-parallel multi-FPGA deployment. Search
+/// the legal cut points of the network for the stage assignment that
+/// minimizes the bottleneck stage time `max(compute, transfer)` subject
+/// to every stage fitting its device's resource budget, then print the
+/// decision: chosen cuts, per-stage cost-model terms, occupancy and
+/// bottleneck attribution, plus the recorded partition pass trace.
+fn cmd_partition(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::flow::multi::{Link, PipelinePlan};
+    let g = net_arg(args)?;
+    let targets = devices_arg(args)?;
+    let names: Vec<&str> = targets.iter().map(String::as_str).collect();
+    let quant = match precision_arg(args)? {
+        Some(p) if p != Precision::F32 => Some(quant_cfg_args(args, p)?),
+        _ => None,
+    };
+    let plan = PipelinePlan::build_with(&g, &names, &Link::default(), quant)?;
+    if args.has_flag("json") {
+        println!("{}", plan.to_json().to_string());
+    } else {
+        print!("{}", plan.render());
     }
     Ok(())
 }

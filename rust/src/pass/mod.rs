@@ -25,9 +25,11 @@
 //! emits it as the `pass_trace` section and `fpga-flow explain` renders it.
 
 pub mod graph;
+pub mod partition;
 pub mod schedule;
 
 pub use self::graph::{EliminateDead, FoldBatchNorm, FusePad, InsertQdq};
+pub use self::partition::{candidate_cuts, split_stages, PartitionPass, StageCost, StageGraph};
 pub use self::schedule::{
     lower_to_kernels, AutorunKernels, CachedWrites, Channelize, ConcurrentQueues, FloatOpts,
     FuseEpilogues, ParameterizeKernels, QuantizeDatapath, SparsifyWeights, TileLoops, UnrollLoops,

@@ -1,0 +1,367 @@
+//! Pipeline-parallel multi-FPGA partitioning (ROADMAP item 2; the
+//! direction DNNVM pursues with subgraph partitioning + heuristic
+//! scheduling, and the standard path past single-chip resource walls in
+//! the FPGA CNN acceleration survey).
+//!
+//! The network is cut at K-1 topological points into K contiguous stage
+//! subgraphs, one per device, connected by host channels. Cut legality
+//! reuses the hybrid-deployment rule (§V-F): a cut is clean only when the
+//! frontier is exactly one value — every node after the cut that reads
+//! across it reads the boundary producer and nothing else — so residual
+//! shortcuts can never straddle two devices.
+//!
+//! The cost model ([`StageCost`]) is latency-balancing: a stage's time is
+//! `max(compute, transfer)` because the host channel transfer into stage i
+//! overlaps stage i-1's compute on the previous frame, and the objective
+//! is to minimize the bottleneck stage (steady-state pipeline throughput
+//! is `1 / max_i stage_s`), subject to each stage fitting its device's
+//! BRAM/DSP/ALM budget. The search over cut combinations lives in
+//! [`crate::dse::explore_partitions`]; the chosen plan is materialized by
+//! [`crate::flow::multi::PipelinePlan`].
+
+use crate::flow::hybrid;
+use crate::flow::multi::Link;
+use crate::graph::{Graph, GraphBuilder, Op};
+
+use super::{Equivalence, GraphPass, PassDiff};
+
+/// One stage subgraph plus the node-id provenance needed to reproduce the
+/// parent graph's semantics exactly.
+///
+/// Stage graphs are rebuilt with fresh names and renumbered node ids, but
+/// the reference executor seeds parameters from `(graph name, node id)` —
+/// so equivalence against the unpartitioned oracle requires mapping every
+/// stage node back to its parent node. `parent_ids[stage_id]` is that
+/// parent node id; a stage's fresh `Input` node maps to the boundary
+/// producer it receives its tensor from.
+#[derive(Debug, Clone)]
+pub struct StageGraph {
+    pub graph: Graph,
+    /// Parent node id for each stage node id (same length as
+    /// `graph.nodes`).
+    pub parent_ids: Vec<usize>,
+}
+
+impl StageGraph {
+    /// Bytes of the tensor this stage receives over the host link (fp32
+    /// boundary activations; the network input for stage 0).
+    pub fn input_bytes(&self) -> u64 {
+        self.graph.nodes[self.graph.input].shape.bytes() as u64
+    }
+}
+
+/// Candidate cut points: after each spatial-reduction node the feature
+/// map shrinks, so these are the natural (cheapest-transfer) boundaries —
+/// the hybrid-deployment candidate set. A residual network's strided
+/// convs sit *inside* shortcut blocks, though, so every post-reduction
+/// frontier there is crossed by the skip edge and never splits cleanly;
+/// the frontier *entering* each reduction — the end of a resolution
+/// stage — lies between blocks and does split, so it is offered too
+/// (transfer there costs the pre-reduction feature map). Candidates are
+/// not guaranteed legal: [`split_stages`] is the arbiter, and the search
+/// records illegal combinations as rejected.
+pub fn candidate_cuts(graph: &Graph) -> Vec<usize> {
+    let mut cuts: std::collections::BTreeSet<usize> =
+        hybrid::cut_points(graph).into_iter().collect();
+    for n in graph.topo() {
+        let shrinks = match n.op {
+            Op::MaxPool { stride, .. } | Op::AvgPool { stride, .. } => stride > 1,
+            Op::Conv2d { stride, .. } | Op::DepthwiseConv2d { stride, .. } => stride > 1,
+            _ => false,
+        };
+        if !shrinks {
+            continue;
+        }
+        for &p in &n.inputs {
+            // Skip the graph input (a compute-free front stage) and keep
+            // the cut in range.
+            if p != graph.input && p + 1 < graph.nodes.len() {
+                cuts.insert(p + 1);
+            }
+        }
+    }
+    cuts.into_iter().collect()
+}
+
+/// Split `graph` into `cuts.len() + 1` contiguous stages. `cuts` must be
+/// strictly increasing, each in `(0, len)`. Returns `None` when any cut
+/// is not a clean single-value frontier (e.g. inside a residual block).
+///
+/// With no cuts the single stage is the parent graph itself (same name,
+/// same ids) — the degenerate K=1 partition is byte-identical to the
+/// unpartitioned plan by construction.
+pub fn split_stages(graph: &Graph, cuts: &[usize]) -> Option<Vec<StageGraph>> {
+    if cuts.is_empty() {
+        return Some(vec![StageGraph {
+            graph: graph.clone(),
+            parent_ids: (0..graph.nodes.len()).collect(),
+        }]);
+    }
+    let len = graph.nodes.len();
+    for (i, &c) in cuts.iter().enumerate() {
+        if c == 0 || c >= len {
+            return None;
+        }
+        if i > 0 && c <= cuts[i - 1] {
+            return None;
+        }
+    }
+    // Every cut must be a clean frontier: a node may only read across the
+    // nearest cut below it, and only the boundary producer.
+    for n in graph.topo() {
+        for &i in &n.inputs {
+            for &c in cuts {
+                if n.id >= c && i < c && i != c - 1 {
+                    return None;
+                }
+            }
+        }
+    }
+    let k = cuts.len() + 1;
+    let mut stages = Vec::with_capacity(k);
+    for s in 0..k {
+        let lo = if s == 0 { 0 } else { cuts[s - 1] };
+        let hi = if s == k - 1 { len } else { cuts[s] };
+        stages.push(rebuild_stage(graph, s, lo, hi)?);
+    }
+    Some(stages)
+}
+
+/// Rebuild nodes `[lo, hi)` as a standalone stage graph named
+/// `"{parent}.s{index}"`. Stages after the first get a fresh `Input`
+/// node shaped like the boundary tensor, mapped back to parent node
+/// `lo - 1` (the producer whose activation crosses the link).
+fn rebuild_stage(graph: &Graph, index: usize, lo: usize, hi: usize) -> Option<StageGraph> {
+    let name = format!("{}.s{index}", graph.name);
+    let mut map: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+    let mut parent_ids: Vec<usize> = Vec::with_capacity(hi - lo + 1);
+    let mut b: Option<GraphBuilder> = None;
+    if lo > 0 {
+        let boundary = &graph.nodes[lo - 1];
+        let (builder, id) = GraphBuilder::new(name.clone(), boundary.shape.clone());
+        b = Some(builder);
+        map[lo - 1] = Some(id);
+        parent_ids.push(lo - 1);
+    }
+    let mut last = 0usize;
+    for node in &graph.nodes[lo..hi] {
+        match node.op {
+            Op::Input => {
+                let (builder, id) = GraphBuilder::new(name.clone(), node.shape.clone());
+                b = Some(builder);
+                map[node.id] = Some(id);
+                parent_ids.push(node.id);
+            }
+            _ => {
+                let builder = b.as_mut()?;
+                let inputs: Vec<usize> =
+                    node.inputs.iter().map(|&i| map[i]).collect::<Option<_>>()?;
+                let id = builder.add(node.name.clone(), node.op.clone(), &inputs);
+                map[node.id] = Some(id);
+                parent_ids.push(node.id);
+            }
+        }
+        last = map[node.id]?;
+    }
+    let g = b?.finish(last);
+    g.validate().ok()?;
+    debug_assert_eq!(g.nodes.len(), parent_ids.len());
+    Some(StageGraph { graph: g, parent_ids })
+}
+
+/// Modeled cost of one pipeline stage under the latency-balancing model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageCost {
+    /// Modeled compute time per frame on the stage's device.
+    pub compute_s: f64,
+    /// Host-link transfer time for the stage's input tensor.
+    pub transfer_s: f64,
+    /// Bytes entering the stage over the host link per frame.
+    pub transfer_bytes: u64,
+}
+
+impl StageCost {
+    /// Model a stage: transfer = link latency + bytes / bandwidth.
+    pub fn model(compute_s: f64, transfer_bytes: u64, link: &Link) -> StageCost {
+        let transfer_s = link.latency_s + transfer_bytes as f64 / link.bandwidth_bytes_per_s;
+        StageCost { compute_s, transfer_s, transfer_bytes }
+    }
+
+    /// Stage time under overlap: the transfer into stage i runs while
+    /// stage i-1 computes the previous frame, so the stage occupies
+    /// `max(compute, transfer)` of pipeline interval.
+    pub fn stage_s(&self) -> f64 {
+        self.compute_s.max(self.transfer_s)
+    }
+
+    /// Which term binds this stage.
+    pub fn bound(&self) -> &'static str {
+        if self.transfer_s > self.compute_s {
+            "transfer"
+        } else {
+            "compute"
+        }
+    }
+}
+
+/// Graph-level pass that records a chosen pipeline partition in the pass
+/// trace. The rewrite itself is the identity — stage subgraphs are
+/// materialized by [`split_stages`] on the flow side — but running it
+/// through the [`crate::pass::PassManager`] makes the partition decision
+/// a first-class, inspectable trace record (`fpga-flow explain`) with the
+/// same applicability/legality/equivalence contract as every other pass.
+///
+/// Applicability pattern: the graph must split cleanly at every chosen
+/// cut (single-value frontier). Equivalence obligation: bit-exact — a
+/// partition only relocates nodes across devices; chained stage execution
+/// must reproduce the unpartitioned values exactly at every precision.
+#[derive(Debug, Clone)]
+pub struct PartitionPass {
+    /// Chosen cut points (parent node ids; `stages = cuts.len() + 1`).
+    pub cuts: Vec<usize>,
+}
+
+impl GraphPass for PartitionPass {
+    fn name(&self) -> &'static str {
+        "partition-pipeline"
+    }
+
+    fn abbrev(&self) -> &'static str {
+        "PT"
+    }
+
+    fn description(&self) -> &'static str {
+        "split the network into per-device pipeline stages at clean spatial-reduction frontiers"
+    }
+
+    fn precondition(&self, graph: &Graph) -> Result<(), String> {
+        if self.cuts.is_empty() {
+            return Err("single device — degenerate partition, nothing to cut".into());
+        }
+        if split_stages(graph, &self.cuts).is_none() {
+            return Err(format!(
+                "cuts {:?} are not clean single-value frontiers (residual edge crosses a cut)",
+                self.cuts
+            ));
+        }
+        Ok(())
+    }
+
+    fn equivalence(&self) -> Equivalence {
+        Equivalence::BitExact
+    }
+
+    fn run(&self, graph: &Graph, diff: &mut PassDiff) -> (Graph, usize) {
+        // One fresh Input node and one host channel per cut.
+        diff.nodes_inserted += self.cuts.len();
+        diff.channels_inserted += self.cuts.len();
+        (graph.clone(), self.cuts.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::pass::{PassManager, Pipeline};
+
+    #[test]
+    fn degenerate_split_is_identity() {
+        let g = models::lenet5();
+        let stages = split_stages(&g, &[]).unwrap();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].graph.name, g.name);
+        assert_eq!(stages[0].graph.nodes.len(), g.nodes.len());
+        assert_eq!(stages[0].parent_ids, (0..g.nodes.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn two_way_split_preserves_macs_and_maps_parents() {
+        let g = models::lenet5();
+        let cuts = candidate_cuts(&g);
+        assert!(!cuts.is_empty());
+        let stages = split_stages(&g, &cuts[..1]).unwrap();
+        assert_eq!(stages.len(), 2);
+        let macs: u64 = stages.iter().map(|s| s.graph.total_macs()).sum();
+        assert_eq!(macs, g.total_macs());
+        // Stage 1's Input maps to the boundary producer.
+        assert_eq!(stages[1].parent_ids[0], cuts[0] - 1);
+        assert_eq!(stages[1].graph.nodes[0].shape, g.nodes[cuts[0] - 1].shape);
+        // Every mapped node keeps its parent op.
+        for s in &stages {
+            for n in s.graph.topo() {
+                if !matches!(n.op, Op::Input) {
+                    assert_eq!(
+                        std::mem::discriminant(&n.op),
+                        std::mem::discriminant(&g.nodes[s.parent_ids[n.id]].op)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn three_way_split_on_resnet_boundaries() {
+        let g = models::resnet34();
+        let cuts = candidate_cuts(&g);
+        // Keep only cuts that are individually clean, then pick two.
+        let clean: Vec<usize> =
+            cuts.into_iter().filter(|&c| split_stages(&g, &[c]).is_some()).collect();
+        assert!(clean.len() >= 2, "resnet34 needs ≥2 clean cuts, got {clean:?}");
+        let stages = split_stages(&g, &[clean[0], clean[1]]).unwrap();
+        assert_eq!(stages.len(), 3);
+        let macs: u64 = stages.iter().map(|s| s.graph.total_macs()).sum();
+        assert_eq!(macs, g.total_macs());
+    }
+
+    #[test]
+    fn residual_crossing_cut_rejected() {
+        let g = models::resnet34();
+        let mid = g.nodes.iter().find(|n| n.name == "s0b0.conv2").unwrap().id;
+        assert!(split_stages(&g, &[mid]).is_none());
+    }
+
+    #[test]
+    fn unsorted_and_out_of_range_cuts_rejected() {
+        let g = models::lenet5();
+        let cuts = candidate_cuts(&g);
+        assert!(split_stages(&g, &[0]).is_none());
+        assert!(split_stages(&g, &[g.nodes.len()]).is_none());
+        if cuts.len() >= 2 {
+            assert!(split_stages(&g, &[cuts[1], cuts[0]]).is_none());
+            assert!(split_stages(&g, &[cuts[0], cuts[0]]).is_none());
+        }
+    }
+
+    #[test]
+    fn stage_cost_overlap_model() {
+        let link = Link::default();
+        let c = StageCost::model(1e-3, 1_000_000, &link);
+        assert!(c.transfer_s > 0.0);
+        assert_eq!(c.stage_s(), c.compute_s.max(c.transfer_s));
+        let slow_link = Link { bandwidth_bytes_per_s: 1e3, latency_s: 0.0 };
+        let t = StageCost::model(1e-6, 1_000_000, &slow_link);
+        assert_eq!(t.bound(), "transfer");
+        assert_eq!(c.bound(), "compute");
+    }
+
+    #[test]
+    fn partition_pass_records_in_trace() {
+        let g = models::lenet5();
+        let cuts = candidate_cuts(&g);
+        let mut pm = PassManager::new();
+        let pipeline = Pipeline::default().graph(PartitionPass { cuts: cuts[..1].to_vec() });
+        let out = pm.run_graph_passes(&pipeline, &g);
+        assert_eq!(out.nodes.len(), g.nodes.len());
+        let rec = &pm.trace.records[0];
+        assert_eq!(rec.abbrev, "PT");
+        assert_eq!(rec.matched, 1);
+        assert!(rec.skipped.is_none());
+        assert_eq!(rec.diff.channels_inserted, 1);
+        // Degenerate and illegal partitions are recorded as skipped.
+        let mut pm2 = PassManager::new();
+        let p2 = Pipeline::default().graph(PartitionPass { cuts: vec![] });
+        pm2.run_graph_passes(&p2, &g);
+        assert!(pm2.trace.records[0].skipped.is_some());
+    }
+}

@@ -86,6 +86,41 @@ impl CalibrationTable {
     pub fn quantized_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.weights.keys().copied()
     }
+
+    /// Project this (whole-network) table onto a pipeline-stage subgraph:
+    /// stage node `i` inherits the ranges of parent node `parent_ids[i]`
+    /// ([`crate::pass::partition::StageGraph`]). A stage's fresh `Input`
+    /// maps to the boundary producer, so the consumer side of a host
+    /// channel re-quantizes the incoming activation with *exactly* the
+    /// range the unpartitioned datapath used — this is what makes chained
+    /// int8 stage execution bit-identical to the whole-graph oracle.
+    pub fn for_stage(&self, stage_network: &str, parent_ids: &[usize]) -> CalibrationTable {
+        let mut t = CalibrationTable {
+            network: stage_network.to_string(),
+            method: self.method,
+            frames: self.frames,
+            activations: BTreeMap::new(),
+            act_std: BTreeMap::new(),
+            weights: BTreeMap::new(),
+        };
+        for (stage_id, &parent_id) in parent_ids.iter().enumerate() {
+            if let Some(&r) = self.activations.get(&parent_id) {
+                t.activations.insert(stage_id, r);
+            }
+            if let Some(&s) = self.act_std.get(&parent_id) {
+                t.act_std.insert(stage_id, s);
+            }
+            if stage_id > 0 || parent_id == 0 {
+                // Weight ranges follow compute nodes; the fresh Input node
+                // (stage_id 0 mapped to a boundary producer) has none even
+                // when its parent producer does.
+                if let Some(w) = self.weights.get(&parent_id) {
+                    t.weights.insert(stage_id, w.clone());
+                }
+            }
+        }
+        t
+    }
 }
 
 /// Absolute-value histogram with growable range (rebins by pairwise merge

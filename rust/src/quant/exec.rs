@@ -59,11 +59,29 @@ impl<'g> Executor<'g> {
     /// parameterized node.
     pub fn new(graph: &'g Graph) -> Executor<'g> {
         let seed = crate::util::fnv64(graph.name.as_bytes());
+        Self::with_seed_map(graph, seed, |id| id as u64)
+    }
+
+    /// Build an executor for a pipeline-stage subgraph that reproduces the
+    /// *parent* graph's synthetic weights. Stage graphs are rebuilt with
+    /// fresh names and renumbered node ids, but weights are seeded by
+    /// `(network name, node id)` — so each stage node must draw from its
+    /// parent node's stream (`parent_ids` from
+    /// [`crate::pass::partition::StageGraph`]) or chained stage execution
+    /// would diverge from the unpartitioned oracle.
+    pub fn for_stage(graph: &'g Graph, parent_name: &str, parent_ids: &[usize]) -> Executor<'g> {
+        assert_eq!(parent_ids.len(), graph.nodes.len(), "parent id map must cover every node");
+        let seed = crate::util::fnv64(parent_name.as_bytes());
+        let ids = parent_ids.to_vec();
+        Self::with_seed_map(graph, seed, move |id| ids[id] as u64)
+    }
+
+    fn with_seed_map(graph: &'g Graph, seed: u64, seed_id: impl Fn(usize) -> u64) -> Executor<'g> {
         let params = graph
             .nodes
             .iter()
             .map(|n| {
-                let mut rng = Rng::new(seed ^ (n.id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let mut rng = Rng::new(seed ^ seed_id(n.id).wrapping_mul(0x9E3779B97F4A7C15));
                 match &n.op {
                     Op::Conv2d { out_channels, kernel, bias, .. } => {
                         let cin = graph.nodes[n.inputs[0]].shape.chw().map(|c| c.0).unwrap_or(1);

@@ -295,6 +295,158 @@ pub fn verify_program_in(
     }
 }
 
+/// Verify a pipeline partition against the unpartitioned oracle: split
+/// `graph` at `cuts`, execute the stage chain (each stage's output tensor
+/// is the next stage's input frame, exactly what the host channels carry),
+/// and diff the final logits against the whole-graph reference at
+/// `precision`.
+///
+/// Both sides share the oracle's parameters and calibration by
+/// construction: stage executors draw each node's synthetic weights from
+/// its *parent* node's seed stream ([`Executor::for_stage`]) and
+/// re-quantize boundary activations with the whole-network calibrated
+/// range ([`CalibrationTable::for_stage`]) — so a partition is a purely
+/// structural rewrite and the report demands the [`Equivalence::BitExact`]
+/// obligation (int8 bit-exact, f32 bit-exact, fp16 within its significand
+/// tolerance).
+///
+/// [`CalibrationTable::for_stage`]: crate::quant::calibrate::CalibrationTable::for_stage
+pub fn verify_partition(
+    graph: &Graph,
+    cuts: &[usize],
+    precision: Precision,
+    frames: &[Vec<f32>],
+    opts: &VerifyOptions,
+) -> VerifyReport {
+    let k = cuts.len() + 1;
+    let program = format!("{}_pipeline_k{k}", graph.name);
+    let equivalence = Equivalence::BitExact;
+    let tolerance = rel_tolerance(precision, equivalence);
+    let fail = |msg: String| VerifyReport {
+        program: program.clone(),
+        precision,
+        equivalence,
+        frames: frames.len(),
+        tolerance,
+        max_rel_err: f64::INFINITY,
+        bit_exact: false,
+        violations: Vec::new(),
+        failure: Some(msg),
+        first_mismatch: None,
+        passed: false,
+    };
+    let Some(stages) = crate::pass::partition::split_stages(graph, cuts) else {
+        return fail(format!("cuts {cuts:?} are not clean single-value frontiers"));
+    };
+
+    let exec = Executor::new(graph);
+    let table = calibrate_analytic(graph, opts.calibrator);
+    let stage_execs: Vec<Executor> = stages
+        .iter()
+        .map(|s| Executor::for_stage(&s.graph, &graph.name, &s.parent_ids))
+        .collect();
+    let stage_tables: Vec<_> =
+        stages.iter().map(|s| table.for_stage(&s.graph.name, &s.parent_ids)).collect();
+
+    let run_chain = |frame: &[f32], mut observe: &mut dyn FnMut(usize, NodeId, &[f32])| {
+        let mut tensor = frame.to_vec();
+        for (si, se) in stage_execs.iter().enumerate() {
+            let obs = &mut observe;
+            tensor = if precision == Precision::F32 {
+                se.forward(&tensor, |id, a| obs(si, id, a))
+            } else {
+                se.forward_quantized_observed(
+                    &tensor,
+                    &stage_tables[si],
+                    precision,
+                    opts.scheme,
+                    |id, a| obs(si, id, a),
+                )
+            };
+        }
+        tensor
+    };
+
+    let mut max_rel_err = 0f64;
+    let mut bit_exact = true;
+    let mut first_mismatch: Option<NodeMismatch> = None;
+    for (fi, frame) in frames.iter().enumerate() {
+        let want = if precision == Precision::F32 {
+            exec.forward(frame, |_, _| {})
+        } else {
+            exec.forward_quantized(frame, &table, precision, opts.scheme)
+        };
+        let got = run_chain(frame, &mut |_, _, _| {});
+        let rel = slice_rel_err(&want, &got);
+        if rel > 0.0 {
+            bit_exact = false;
+        }
+        if rel > max_rel_err {
+            max_rel_err = rel;
+        }
+        if rel > tolerance && first_mismatch.is_none() {
+            // Localize to the first parent node whose chained value
+            // diverges — stage Input re-materializations are skipped (they
+            // duplicate the boundary producer's parent id).
+            let mut oracle_nodes: Vec<Vec<f32>> = vec![Vec::new(); graph.nodes.len()];
+            if precision == Precision::F32 {
+                exec.forward(frame, |id, a| oracle_nodes[id] = a.to_vec());
+            } else {
+                exec.forward_quantized_observed(frame, &table, precision, opts.scheme, |id, a| {
+                    oracle_nodes[id] = a.to_vec()
+                });
+            }
+            let mut worst: Option<NodeMismatch> = None;
+            run_chain(frame, &mut |si, id, a| {
+                if worst.is_some() {
+                    return;
+                }
+                let pid = stages[si].parent_ids[id];
+                if si > 0 && id == 0 {
+                    return;
+                }
+                let want = &oracle_nodes[pid];
+                if want.is_empty() {
+                    return;
+                }
+                let nrel = slice_rel_err(want, a);
+                if nrel > tolerance {
+                    worst = Some(NodeMismatch {
+                        node: pid,
+                        name: graph.nodes[pid].name.clone(),
+                        frame: fi,
+                        rel_err: nrel,
+                    });
+                }
+            });
+            first_mismatch = worst.or_else(|| {
+                Some(NodeMismatch {
+                    node: graph.output,
+                    name: graph.nodes[graph.output].name.clone(),
+                    frame: fi,
+                    rel_err: rel,
+                })
+            });
+        }
+    }
+
+    let agreement_ok =
+        if precision == Precision::Int8 { bit_exact } else { max_rel_err <= tolerance };
+    VerifyReport {
+        program,
+        precision,
+        equivalence,
+        frames: frames.len(),
+        tolerance,
+        max_rel_err,
+        bit_exact,
+        violations: Vec::new(),
+        failure: None,
+        first_mismatch,
+        passed: agreement_ok,
+    }
+}
+
 /// Worst per-element error of `got` against `want`, relative to `want`'s
 /// own magnitude scale (length mismatch or a NaN on either side =
 /// infinite error). Exactly equal elements contribute 0 regardless of
@@ -396,6 +548,24 @@ mod tests {
         // FloatTolerant dominates the max-fold even when cost-only passes
         // rode along.
         assert_eq!(E::CostModelOnly.max(E::FloatTolerant), E::FloatTolerant);
+    }
+
+    #[test]
+    fn partition_chain_matches_whole_graph_at_every_precision() {
+        let g = models::lenet5();
+        let cuts = crate::pass::partition::candidate_cuts(&g);
+        assert!(!cuts.is_empty());
+        let frames = frames_for(&g, 3, 17);
+        for p in Precision::all() {
+            let rep = verify_partition(&g, &cuts[..1], p, &frames, &VerifyOptions::default());
+            assert!(rep.passed, "{p}: {}", rep.summary());
+            if p != Precision::F16 {
+                assert!(rep.bit_exact, "{p} chained stages must be bit-exact: {}", rep.summary());
+            }
+        }
+        // Illegal cuts are reported as a failure, not a panic.
+        let bad = verify_partition(&g, &[0], Precision::F32, &frames, &VerifyOptions::default());
+        assert!(!bad.passed && bad.failure.is_some());
     }
 
     #[test]

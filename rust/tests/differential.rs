@@ -277,3 +277,83 @@ fn heavy_networks_verify() {
         }
     }
 }
+
+/// Partitioned-vs-whole differential sweep (the `PartitionPass`
+/// equivalence obligation): LeNet-5 and random chains, split at every
+/// legal K∈{2,3} arrangement we can form from the candidate cuts, must
+/// reproduce the unpartitioned oracle at all three precisions — int8
+/// bit-exactly, since requantizing at a stage boundary replays the exact
+/// integer pipeline of the whole network (docs/PASSES.md).
+#[test]
+fn partitioned_chains_match_whole_network() {
+    use tvm_fpga_flow::graph::{models, Graph};
+    use tvm_fpga_flow::pass::{candidate_cuts, split_stages};
+    use tvm_fpga_flow::verify::{frames_for, verify_partition, VerifyOptions};
+
+    let mut graphs: Vec<Graph> = vec![models::lenet5()];
+    graphs.extend((0u64..10).map(differ::random_chain));
+    let opts = VerifyOptions::default();
+    let mut covered = 0usize;
+    for g in &graphs {
+        let legal: Vec<usize> = candidate_cuts(g)
+            .into_iter()
+            .filter(|&c| split_stages(g, &[c]).is_some())
+            .collect();
+        let mut cut_sets: Vec<Vec<usize>> = legal.iter().map(|&c| vec![c]).collect();
+        if legal.len() >= 2 {
+            // K=3: first and last legal frontier.
+            cut_sets.push(vec![legal[0], *legal.last().unwrap()]);
+        }
+        let frames = frames_for(g, 2, 0xC0FFEE);
+        for cuts in cut_sets {
+            for precision in [Precision::F32, Precision::F16, Precision::Int8] {
+                let r = verify_partition(g, &cuts, precision, &frames, &opts);
+                assert!(
+                    r.passed,
+                    "{} cut at {cuts:?} @ {}: {:?} (max rel err {:.3e})",
+                    g.name,
+                    precision.name(),
+                    r.failure,
+                    r.max_rel_err
+                );
+                if precision == Precision::Int8 {
+                    assert!(r.bit_exact, "{} cut at {cuts:?}: int8 must be bit-exact", g.name);
+                }
+                covered += 1;
+            }
+        }
+    }
+    // The generator is seeded, so the sweep size is deterministic; the
+    // floor catches a regression that silently empties the cut sets.
+    assert!(covered >= 15, "partition sweep degenerated: only {covered} verifications ran");
+}
+
+/// K=1 regression: a single-target "pipeline" must not perturb the plan —
+/// no cuts, no search, and an accelerator byte-identical to the plain
+/// staged compile of the whole network.
+#[test]
+fn degenerate_single_device_plan_is_byte_identical() {
+    use tvm_fpga_flow::flow::multi::{Link, PipelinePlan};
+    use tvm_fpga_flow::flow::{Compiler, ModeChoice};
+    use tvm_fpga_flow::graph::models;
+
+    let g = models::lenet5();
+    let plan = PipelinePlan::build(&g, &["stratix10sx"], &Link::default()).expect("K=1 plan");
+    assert!(plan.cuts.is_empty(), "degenerate plan must not cut: {:?}", plan.cuts);
+    assert_eq!(plan.stages.len(), 1);
+    assert_eq!(plan.bottleneck, 0);
+    assert_eq!(plan.evaluated, 1, "K=1 must skip the cut search");
+
+    let direct = Compiler::for_target("stratix10sx")
+        .expect("target registered")
+        .graph(&g)
+        .mode(ModeChoice::Auto)
+        .run()
+        .expect("whole-network compile");
+    assert_eq!(
+        plan.stages[0].accelerator.to_json().to_string(),
+        direct.to_json().to_string(),
+        "single-stage accelerator diverged from the unpartitioned compile"
+    );
+    assert_eq!(plan.fps, direct.performance.fps);
+}

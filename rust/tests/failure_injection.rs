@@ -92,3 +92,71 @@ fn unknown_network_and_batch_are_clean_errors() {
     assert!(rt.load("inception", Impl::Ref, 1).is_err());
     assert!(rt.load("lenet5", Impl::Ref, 7).is_err(), "no batch-7 executable exists");
 }
+
+/// Chaos scenario for the stage pipeline: one stage is injected with a
+/// 5x service time. The pipeline must (a) keep completing frames — no
+/// deadlock under sustained backpressure, (b) degrade throughput to the
+/// bottleneck's rate rather than the sum of stage times, and (c)
+/// attribute the slowdown to the slow stage in the stats snapshot.
+#[test]
+fn slow_stage_degrades_throughput_without_deadlock() {
+    use std::time::{Duration, Instant};
+    use tvm_fpga_flow::coordinator::{PipelineConfig, PipelineServer, StageSpec};
+
+    let slow = Duration::from_millis(10);
+    let cfg = PipelineConfig {
+        stages: vec![
+            StageSpec { name: "front".into(), stage_time: Duration::from_millis(2), transfer_bytes: 0 },
+            StageSpec { name: "chaos".into(), stage_time: slow, transfer_bytes: 64 },
+            StageSpec { name: "back".into(), stage_time: Duration::from_millis(2), transfer_bytes: 64 },
+        ],
+        frame_elems: 16,
+        num_classes: 10,
+        channel_depth: 2,
+        queue_capacity: 64,
+        time_scale: 1.0,
+    };
+    let server = PipelineServer::start(cfg).expect("pipeline starts");
+    let frame: Vec<f32> = (0..16).map(|i| i as f32).collect();
+    let n = 30usize;
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..n)
+        .map(|_| server.infer_async(frame.clone()).expect("queue holds the burst"))
+        .collect();
+    for rx in pending {
+        rx.recv().expect("worker alive").expect("no inference error");
+    }
+    let wall = t0.elapsed();
+    let stats = server.shutdown();
+
+    assert_eq!(stats.completed, n as u64, "every frame must drain despite the slow stage");
+    assert_eq!(stats.rejected, 0);
+    // Steady state is set by the bottleneck: the run must take at least
+    // n * slow (minus the pipeline fill) and nowhere near n * sum(stages)
+    // would be needed if stages serialized per frame — but it must also
+    // not collapse below the bottleneck rate (which would mean frames
+    // skipped a stage).
+    let floor = slow * (n as u32 - 2);
+    assert!(
+        wall >= floor,
+        "finished in {wall:?} — faster than the bottleneck allows ({floor:?}); \
+         frames must have bypassed the slow stage"
+    );
+    let ceiling = slow * (n as u32) + Duration::from_millis(200);
+    assert!(
+        wall <= ceiling,
+        "took {wall:?} (> {ceiling:?}): backpressure is serializing stages \
+         instead of overlapping them"
+    );
+    // Attribution: the chaos stage owns the busy time.
+    assert_eq!(
+        stats.bottleneck(),
+        Some(1),
+        "snapshot must attribute the bottleneck to the injected slow stage"
+    );
+    let busy: Vec<u64> = stats.replicas.iter().map(|r| r.busy_us).collect();
+    assert!(
+        busy[1] > 3 * busy[0] && busy[1] > 3 * busy[2],
+        "slow stage busy time must dominate: {busy:?}"
+    );
+}

@@ -81,3 +81,32 @@ fn reports_are_deterministic() {
         assert_eq!(qa, qb, "{net} int8 non-deterministic");
     }
 }
+
+/// Pipeline-partition golden: the 2-device ResNet-34 plan (cuts, stage
+/// cost-model terms, per-stage reports) is pinned byte-for-byte, so a
+/// cost-model or cut-search change must land as a reviewed golden diff.
+#[test]
+fn golden_partition_resnet34_two_devices() {
+    use tvm_fpga_flow::flow::multi::{Link, PipelinePlan};
+    let g = models::resnet34();
+    let got = match PipelinePlan::build(&g, &["stratix10sx", "stratix10sx"], &Link::default()) {
+        Ok(plan) => plan.to_json().to_string(),
+        Err(e) => format!("{{\"error\": \"{e}\"}}"),
+    };
+    let dir = goldens_dir();
+    let path = dir.join("resnet34_partition_2x_stratix10sx.json");
+    let bless = std::env::var("UPDATE_GOLDENS").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(&dir).expect("create goldens dir");
+        std::fs::write(&path, &got).expect("write golden");
+        eprintln!("blessed golden {} — commit it", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    assert_eq!(
+        got,
+        want,
+        "partition plan drifted from {} — if intentional, re-bless with UPDATE_GOLDENS=1",
+        path.display()
+    );
+}
