@@ -1,0 +1,185 @@
+//! SLO admission-control acceptance bench: replay a 10x-overload bursty
+//! trace against a 2-replica LeNet-5 `SimEngine` fleet and prove the
+//! serving properties the admission controller promises:
+//!
+//! - shed-before-queue: rejected requests record **zero** queue latency
+//!   (`queue_samples == completed` in the final snapshot),
+//! - the books balance (`completed == submitted` after shutdown),
+//! - class-0 (gold) p99 stays inside its SLO while class-2 (bulk)
+//!   absorbs ≥ 90% of the shedding.
+//!
+//! The fleet's real capacity is measured closed-loop first, so the
+//! 10x-overload trace is 10x *this machine's* capacity — the bench
+//! self-calibrates instead of trusting the modeled FPS against OS sleep
+//! granularity. Results go to `target/BENCH_serve.json` (`FLOW_BENCH_OUT`
+//! overrides) via the unified [`BenchWriter`].
+//!
+//! ```sh
+//! cargo bench --bench serve_slo
+//! ```
+
+use std::time::{Duration, Instant};
+
+use tvm_fpga_flow::coordinator::loadgen::{replay, LoadTrace};
+use tvm_fpga_flow::coordinator::{
+    EngineSpec, InferenceServer, ServerConfig, SimEngine, SloClass,
+};
+use tvm_fpga_flow::flow::multi::ReplicaPlan;
+use tvm_fpga_flow::graph::models;
+use tvm_fpga_flow::util::bench::{BenchWriter, RunMeta, Table};
+use tvm_fpga_flow::util::json::Json;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+const GOLD_SLO_US: u64 = 250_000;
+
+fn fleet(plan: &ReplicaPlan, net: &tvm_fpga_flow::graph::Graph) -> Vec<EngineSpec> {
+    // 4x slower than modeled: keeps per-batch sleeps well above OS timer
+    // granularity so the measured capacity is stable.
+    SimEngine::from_plan(plan, net, 8)
+        .expect("engines")
+        .into_iter()
+        .map(|e| EngineSpec::Sim(e.with_time_scale(0.25)))
+        .collect()
+}
+
+fn server(
+    plan: &ReplicaPlan,
+    net: &tvm_fpga_flow::graph::Graph,
+    queue_capacity: usize,
+) -> InferenceServer {
+    InferenceServer::start(ServerConfig {
+        replicas: fleet(plan, net),
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_capacity,
+        classes: vec![
+            SloClass::new("gold", Duration::from_micros(GOLD_SLO_US)),
+            SloClass::new("silver", Duration::from_millis(500)),
+            SloClass::best_effort("bulk"),
+        ],
+        ..Default::default()
+    })
+    .expect("server starts")
+}
+
+fn main() {
+    let net = models::lenet5();
+    let plan = ReplicaPlan::build_cycled(&net, &["stratix10sx"], 2, None).expect("plan compiles");
+    let frames: Vec<Vec<f32>> = {
+        let data = tvm_fpga_flow::data::for_network("lenet5", 16, 7).expect("lenet5 data");
+        (0..data.frames()).map(|i| data.frame(i).to_vec()).collect()
+    };
+
+    // Phase 1 — measure what the fleet actually sustains. The probe
+    // queue is deep enough that nothing sheds, so elapsed time is pure
+    // service time.
+    let probe = server(&plan, &net, 1024);
+    let warm = 256usize;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..warm)
+        .map(|i| probe.infer_class_async(frames[i % frames.len()].clone(), 2).expect("queue holds"))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let capacity_rps = warm as f64 / t0.elapsed().as_secs_f64();
+    probe.shutdown();
+    println!("measured fleet capacity: {capacity_rps:.0} req/s (2x lenet5@stratix10sx)");
+
+    // Phase 2 — a bursty trace offering ~10x that capacity. Gold+silver
+    // are 8% of traffic, inside the fleet's 10% serving budget, so the
+    // overload must be absorbed by bulk.
+    let requests = 2_000usize;
+    let burst = 200usize;
+    let period_us = ((burst as f64 / (10.0 * capacity_rps)) * 1e6).max(100.0) as u64;
+    let trace = LoadTrace::bursty(requests, burst, period_us, &[4, 4, 92], 7);
+    let overload = trace.offered_rps() / capacity_rps;
+    println!(
+        "trace: {requests} requests in bursts of {burst} every {period_us}us — \
+         {:.0} rps offered ({overload:.1}x capacity)",
+        trace.offered_rps()
+    );
+    assert!(overload >= 8.0, "trace must overload the fleet ~10x, got {overload:.1}x");
+
+    let srv = server(&plan, &net, 128);
+    let mut report = replay(&srv, &trace, &frames);
+    report.snapshot = srv.shutdown();
+
+    let mut t = Table::new(
+        "per-class outcome under the 10x-overload burst",
+        &["class", "deadline", "sent", "ok", "shed", "shed rate", "p99 us"],
+    );
+    let mut class_rows = Vec::new();
+    for (i, c) in report.classes.iter().enumerate() {
+        t.row(&[
+            format!("{i} {}", c.name),
+            c.deadline_us.map(|d| format!("{d}us")).unwrap_or_else(|| "-".into()),
+            c.sent.to_string(),
+            c.ok.to_string(),
+            c.shed_total().to_string(),
+            format!("{:.1}%", c.shed_rate() * 100.0),
+            c.p99_us.map(|p| p.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+        class_rows.push(obj(vec![
+            ("class", Json::Num(i as f64)),
+            ("name", Json::Str(c.name.clone())),
+            ("sent", Json::Num(c.sent as f64)),
+            ("ok", Json::Num(c.ok as f64)),
+            ("shed", Json::Num(c.shed_total() as f64)),
+            ("shed_rate", Json::Num(c.shed_rate())),
+            ("p99_us", c.p99_us.map(|p| Json::Num(p as f64)).unwrap_or(Json::Null)),
+        ]));
+    }
+    t.print();
+
+    let snap = &report.snapshot;
+    // Books balance: every accepted request was answered exactly once.
+    assert_eq!(snap.completed, snap.submitted, "completed != submitted after shutdown");
+    // Shed-before-queue: only dispatched requests record queue latency,
+    // so rejected traffic contributes zero queue samples.
+    assert_eq!(
+        snap.queue_samples, snap.completed,
+        "shed requests must never record queue latency"
+    );
+
+    let shed = report.total_shed();
+    assert!(shed > 0, "a 10x overload must shed");
+    let bulk_share = report.shed_share(2);
+    println!(
+        "shed: {shed} total, bulk absorbed {:.1}% (acceptance floor: 90%)",
+        bulk_share * 100.0
+    );
+    assert!(
+        bulk_share >= 0.9,
+        "bulk must absorb >= 90% of the shedding, got {:.1}%",
+        bulk_share * 100.0
+    );
+
+    let gold = &report.classes[0];
+    assert!(gold.ok > 0, "gold traffic must be served under overload");
+    let gold_p99 = gold.p99_us.expect("gold latency recorded");
+    println!("gold p99: {gold_p99}us (SLO {GOLD_SLO_US}us)");
+    assert!(
+        gold_p99 <= GOLD_SLO_US,
+        "gold p99 {gold_p99}us blew the {GOLD_SLO_US}us SLO under overload"
+    );
+
+    let mut w = BenchWriter::new(RunMeta::new("serve"));
+    w.insert("capacity_rps", Json::Num(capacity_rps));
+    w.insert("offered_rps", Json::Num(report.offered_rps));
+    w.insert("achieved_rps", Json::Num(report.achieved_rps));
+    w.insert("overload_factor", Json::Num(overload));
+    w.insert("total_shed", Json::Num(shed as f64));
+    w.insert("bulk_shed_share", Json::Num(bulk_share));
+    w.insert("gold_p99_us", Json::Num(gold_p99 as f64));
+    w.insert("gold_slo_us", Json::Num(GOLD_SLO_US as f64));
+    w.insert("classes", Json::Arr(class_rows));
+    w.insert("completed", Json::Num(snap.completed as f64));
+    w.insert("submitted", Json::Num(snap.submitted as f64));
+    w.insert("queue_samples", Json::Num(snap.queue_samples as f64));
+    let path = w.write().expect("write bench json");
+    println!("wrote {}", path.display());
+}

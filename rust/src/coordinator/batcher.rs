@@ -5,8 +5,16 @@
 //! The queue is *bounded*: a full queue rejects the push instead of
 //! buffering unboundedly, which is how the server surfaces
 //! [`super::ServerError::Overloaded`] backpressure to callers.
+//!
+//! The queue is also *priority-aware*: it holds one FIFO lane per SLO
+//! class (class 0 highest). `pop_batch` drains high-priority lanes first,
+//! and when the queue is full a higher-priority push can evict the
+//! youngest item of the lowest-priority class present
+//! ([`BatchQueue::push_class`] returns the victim so the server can
+//! answer it with `Overloaded`) — shed-lowest-first under pressure.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -19,12 +27,44 @@ pub enum PushError<T> {
     Closed(T),
 }
 
+/// What actually woke `pop_batch` into flushing a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The batch filled to `max_batch`.
+    Full,
+    /// The oldest queued item hit its `max_delay` deadline.
+    Deadline,
+    /// [`BatchQueue::close`] flushed a partial batch during drain.
+    Close,
+}
+
+/// Cumulative flush counts by [`FlushReason`], from
+/// [`BatchQueue::flush_counts`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FlushCounts {
+    pub full: u64,
+    pub deadline: u64,
+    pub close: u64,
+}
+
 struct Inner<T> {
-    queue: VecDeque<(T, Instant)>,
+    /// One FIFO lane per class; index = priority (0 drains first).
+    lanes: Vec<VecDeque<(T, Instant)>>,
+    /// Total queued items across all lanes.
+    len: usize,
     closed: bool,
 }
 
-/// A bounded, deadline-flushing batch queue.
+impl<T> Inner<T> {
+    /// Enqueue time of the oldest item across all lanes — the deadline
+    /// anchor. Priority changes who *drains* first, not whose latency
+    /// budget arms the flush timer.
+    fn oldest(&self) -> Option<Instant> {
+        self.lanes.iter().filter_map(|l| l.front().map(|&(_, t)| t)).min()
+    }
+}
+
+/// A bounded, deadline-flushing, priority-aware batch queue.
 ///
 /// `pop_batch` blocks until at least one item is queued, then keeps
 /// collecting until either `max_batch` items are available or the *oldest*
@@ -50,73 +90,164 @@ pub struct BatchQueue<T> {
     capacity: usize,
     max_batch: usize,
     max_delay: Duration,
+    flush_full: AtomicU64,
+    flush_deadline: AtomicU64,
+    flush_close: AtomicU64,
 }
 
 impl<T> BatchQueue<T> {
-    /// A queue holding at most `capacity` pending items, batching up to
-    /// `max_batch` of them, holding a partial batch at most `max_delay`.
+    /// A single-lane queue holding at most `capacity` pending items,
+    /// batching up to `max_batch` of them, holding a partial batch at most
+    /// `max_delay`.
     pub fn new(capacity: usize, max_batch: usize, max_delay: Duration) -> BatchQueue<T> {
+        BatchQueue::with_classes(capacity, max_batch, max_delay, 1)
+    }
+
+    /// A queue with one priority lane per class (class 0 drains first).
+    pub fn with_classes(
+        capacity: usize,
+        max_batch: usize,
+        max_delay: Duration,
+        num_classes: usize,
+    ) -> BatchQueue<T> {
+        let num_classes = num_classes.max(1);
         BatchQueue {
-            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner {
+                lanes: (0..num_classes).map(|_| VecDeque::new()).collect(),
+                len: 0,
+                closed: false,
+            }),
             nonempty: Condvar::new(),
             capacity: capacity.max(1),
             max_batch: max_batch.max(1),
             max_delay,
+            flush_full: AtomicU64::new(0),
+            flush_deadline: AtomicU64::new(0),
+            flush_close: AtomicU64::new(0),
         }
     }
 
-    /// Enqueue one item. Fails immediately (returning the item) when the
-    /// queue is full or closed — never blocks the submitting thread.
+    /// Enqueue one item into the highest-priority lane. Fails immediately
+    /// (returning the item) when the queue is full or closed — never
+    /// blocks the submitting thread.
     pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        match self.push_class(item, 0) {
+            Ok(victim) => {
+                // On the single-lane queues `new` builds there is no
+                // strictly-lower lane, so eviction can never occur here.
+                // Multi-lane queues must use `push_class`, which hands the
+                // victim back instead of dropping it.
+                debug_assert!(victim.is_none(), "plain push must not evict");
+                Ok(())
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Enqueue one item into the lane for `class` (clamped to the lane
+    /// count). When the queue is full, the youngest item of the
+    /// *lowest-priority* non-empty lane strictly below `class` is evicted
+    /// to make room and returned as `Ok(Some(victim))` — the caller owns
+    /// answering it (shed-lowest-first). With no lower-priority item to
+    /// shed, the push itself fails with [`PushError::Full`].
+    pub fn push_class(&self, item: T, class: usize) -> Result<Option<T>, PushError<T>> {
         let mut inner = self.inner.lock().unwrap();
         if inner.closed {
             return Err(PushError::Closed(item));
         }
-        if inner.queue.len() >= self.capacity {
-            return Err(PushError::Full(item));
+        let class = class.min(inner.lanes.len() - 1);
+        let mut victim = None;
+        if inner.len >= self.capacity {
+            // Evict from the back (youngest) of the lowest-priority
+            // non-empty lane below `class`; the oldest lower-priority
+            // items keep their place so their deadline anchor is honest.
+            match (class + 1..inner.lanes.len()).rev().find(|&i| !inner.lanes[i].is_empty()) {
+                Some(i) => {
+                    victim = inner.lanes[i].pop_back().map(|(v, _)| v);
+                    inner.len -= 1;
+                }
+                None => return Err(PushError::Full(item)),
+            }
         }
-        inner.queue.push_back((item, Instant::now()));
+        inner.lanes[class].push_back((item, Instant::now()));
+        inner.len += 1;
         drop(inner);
         self.nonempty.notify_one();
-        Ok(())
+        Ok(victim)
     }
 
     /// Block until a batch is ready; `None` once the queue is closed *and*
     /// drained. After `close()`, queued items keep coming out (possibly as
     /// partial batches, with no deadline wait) until the queue is empty —
-    /// shutdown never drops accepted work.
+    /// shutdown never drops accepted work. Batches drain lane 0 first,
+    /// then lane 1, … — within a batch, higher-priority items always
+    /// precede lower-priority ones.
     pub fn pop_batch(&self) -> Option<Vec<T>> {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            if let Some(&(_, enqueued)) = inner.queue.front() {
+            if let Some(enqueued) = inner.oldest() {
                 let deadline = enqueued + self.max_delay;
-                // Fill up to max_batch within the oldest item's deadline.
-                while inner.queue.len() < self.max_batch && !inner.closed {
+                // Fill up to max_batch within the oldest item's deadline,
+                // recording *why* the fill loop stopped: racing wakeups
+                // (a close() landing after the deadline already expired, a
+                // fill-to-max during the final timeout) must be attributed
+                // to the condition that actually released the batch, which
+                // is only knowable at the wake site.
+                let reason = loop {
+                    if inner.len >= self.max_batch {
+                        break FlushReason::Full;
+                    }
                     let now = Instant::now();
                     if now >= deadline {
-                        break;
+                        // Checked before `closed`: once the deadline has
+                        // expired the batch was already due — a close()
+                        // racing in afterwards didn't release it.
+                        break FlushReason::Deadline;
+                    }
+                    if inner.closed {
+                        break FlushReason::Close;
                     }
                     let (guard, timeout) =
                         self.nonempty.wait_timeout(inner, deadline - now).unwrap();
                     inner = guard;
                     if timeout.timed_out() {
-                        break;
+                        // A push can slip in between the timeout firing
+                        // and this thread reacquiring the lock; if it
+                        // filled the batch, the flush is a size flush.
+                        if inner.len >= self.max_batch {
+                            break FlushReason::Full;
+                        }
+                        break FlushReason::Deadline;
                     }
-                }
-                let k = inner.queue.len().min(self.max_batch);
+                };
+                match reason {
+                    FlushReason::Full => self.flush_full.fetch_add(1, Ordering::Relaxed),
+                    FlushReason::Deadline => self.flush_deadline.fetch_add(1, Ordering::Relaxed),
+                    FlushReason::Close => self.flush_close.fetch_add(1, Ordering::Relaxed),
+                };
                 if crate::obs::enabled() {
-                    let reason = if k == self.max_batch {
-                        "flow_serve_flush_full_total"
-                    } else if inner.closed {
-                        "flow_serve_flush_close_total"
-                    } else {
-                        "flow_serve_flush_deadline_total"
+                    let name = match reason {
+                        FlushReason::Full => "flow_serve_flush_full_total",
+                        FlushReason::Deadline => "flow_serve_flush_deadline_total",
+                        FlushReason::Close => "flow_serve_flush_close_total",
                     };
                     crate::obs::global_metrics()
-                        .counter(reason, "batch flushes by trigger (size/deadline/close)")
+                        .counter(name, "batch flushes by trigger (size/deadline/close)")
                         .inc();
                 }
-                return Some(inner.queue.drain(..k).map(|(item, _)| item).collect());
+                let k = inner.len.min(self.max_batch);
+                let mut out = Vec::with_capacity(k);
+                'fill: for lane in inner.lanes.iter_mut() {
+                    while out.len() < k {
+                        match lane.pop_front() {
+                            Some((item, _)) => out.push(item),
+                            None => continue 'fill,
+                        }
+                    }
+                    break;
+                }
+                inner.len -= k;
+                return Some(out);
             }
             if inner.closed {
                 return None;
@@ -134,7 +265,7 @@ impl<T> BatchQueue<T> {
 
     /// Items currently queued (racy by nature; metrics only).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        self.inner.lock().unwrap().len
     }
 
     pub fn is_empty(&self) -> bool {
@@ -144,6 +275,20 @@ impl<T> BatchQueue<T> {
     /// The bound enforced by [`BatchQueue::push`].
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Number of priority lanes.
+    pub fn num_classes(&self) -> usize {
+        self.inner.lock().unwrap().lanes.len()
+    }
+
+    /// Cumulative batch-flush counts by wake cause.
+    pub fn flush_counts(&self) -> FlushCounts {
+        FlushCounts {
+            full: self.flush_full.load(Ordering::Relaxed),
+            deadline: self.flush_deadline.load(Ordering::Relaxed),
+            close: self.flush_close.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -234,5 +379,102 @@ mod tests {
         h.join().unwrap();
         assert_eq!(batch, vec![0, 1, 2, 3]);
         assert!(t0.elapsed() < Duration::from_millis(140), "{:?}", t0.elapsed());
+    }
+
+    // ---- flush-reason attribution (the wake-cause bugfix) ----
+
+    #[test]
+    fn flush_counters_attribute_full_deadline_and_close() {
+        let q: BatchQueue<u32> = BatchQueue::new(64, 2, Duration::from_millis(10));
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        assert_eq!(q.pop_batch(), Some(vec![0, 1]));
+        assert_eq!(q.flush_counts(), FlushCounts { full: 1, deadline: 0, close: 0 });
+
+        q.push(2).unwrap();
+        assert_eq!(q.pop_batch(), Some(vec![2]));
+        assert_eq!(q.flush_counts(), FlushCounts { full: 1, deadline: 1, close: 0 });
+
+        q.push(3).unwrap();
+        q.close();
+        assert_eq!(q.pop_batch(), Some(vec![3]));
+        assert_eq!(q.flush_counts(), FlushCounts { full: 1, deadline: 1, close: 1 });
+    }
+
+    #[test]
+    fn close_after_deadline_expiry_counts_deadline_not_close() {
+        // With a zero max_delay the deadline has expired the moment the
+        // item lands; a close() racing in afterwards did not release the
+        // batch and must not claim the flush.
+        let q: BatchQueue<u32> = BatchQueue::new(8, 8, Duration::ZERO);
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.pop_batch(), Some(vec![1]));
+        let c = q.flush_counts();
+        assert_eq!((c.deadline, c.close), (1, 0), "{c:?}");
+    }
+
+    #[test]
+    fn fill_to_max_during_final_wait_counts_full_not_deadline() {
+        // An expired deadline with a full batch already queued is a size
+        // flush: the batch never waited on the timer.
+        let q: BatchQueue<u32> = BatchQueue::new(8, 2, Duration::ZERO);
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        assert_eq!(q.pop_batch(), Some(vec![0, 1]));
+        let c = q.flush_counts();
+        assert_eq!((c.full, c.deadline), (1, 0), "{c:?}");
+    }
+
+    // ---- priority lanes ----
+
+    #[test]
+    fn batches_drain_high_priority_lanes_first() {
+        let q: BatchQueue<u32> = BatchQueue::with_classes(64, 4, Duration::from_millis(5), 3);
+        q.push_class(20, 2).unwrap();
+        q.push_class(10, 1).unwrap();
+        q.push_class(0, 0).unwrap();
+        q.push_class(11, 1).unwrap();
+        // Lane order beats arrival order; FIFO within a lane.
+        assert_eq!(q.pop_batch(), Some(vec![0, 10, 11, 20]));
+    }
+
+    #[test]
+    fn full_queue_evicts_youngest_of_lowest_class() {
+        let q: BatchQueue<u32> = BatchQueue::with_classes(3, 8, Duration::from_millis(5), 3);
+        q.push_class(20, 2).unwrap();
+        q.push_class(21, 2).unwrap();
+        q.push_class(10, 1).unwrap();
+        // Full. A class-0 push evicts the *youngest* class-2 item.
+        assert_eq!(q.push_class(0, 0), Ok(Some(21)));
+        assert_eq!(q.len(), 3);
+        // Another class-0 push evicts the remaining class-2 item, then the
+        // next one evicts the class-1 item (lowest present below class 0).
+        assert_eq!(q.push_class(1, 0), Ok(Some(20)));
+        assert_eq!(q.push_class(2, 0), Ok(Some(10)));
+        // Queue is now all class 0: nothing lower to shed.
+        assert_eq!(q.push_class(3, 0), Err(PushError::Full(3)));
+        assert_eq!(q.pop_batch(), Some(vec![0, 1, 2]));
+    }
+
+    #[test]
+    fn equal_or_lower_class_cannot_evict() {
+        let q: BatchQueue<u32> = BatchQueue::with_classes(2, 8, Duration::from_secs(10), 3);
+        q.push_class(10, 1).unwrap();
+        q.push_class(11, 1).unwrap();
+        // Same class: no eviction (only strictly lower lanes are victims).
+        assert_eq!(q.push_class(12, 1), Err(PushError::Full(12)));
+        // Lower class: definitely not.
+        assert_eq!(q.push_class(20, 2), Err(PushError::Full(20)));
+        // Higher class: evicts.
+        assert_eq!(q.push_class(0, 0), Ok(Some(11)));
+    }
+
+    #[test]
+    fn out_of_range_class_clamps_to_lowest_lane() {
+        let q: BatchQueue<u32> = BatchQueue::with_classes(4, 8, Duration::from_millis(5), 2);
+        q.push_class(9, 99).unwrap();
+        q.push_class(0, 0).unwrap();
+        assert_eq!(q.pop_batch(), Some(vec![0, 9]));
     }
 }

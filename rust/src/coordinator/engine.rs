@@ -109,6 +109,23 @@ pub struct SimEngine {
     dispatch_overhead: Duration,
     /// Paid once per frame (the device share).
     frame_time: Duration,
+    /// Failure-injection hooks for chaos tests (off in normal engines).
+    chaos: Option<Chaos>,
+}
+
+/// Chaos knobs for failure-injection tests. Deliberately invisible to
+/// [`SimEngine::modeled_fps`]: the routing weight keeps advertising the
+/// healthy throughput, so the scheduler has to *discover* the degradation
+/// through backpressure rather than being told about it.
+#[derive(Debug, Clone)]
+struct Chaos {
+    /// Panic the worker thread once this many frames have executed
+    /// (`None` = never die).
+    kill_after_frames: Option<usize>,
+    /// Multiply the modeled execution time (1.0 = healthy).
+    slowdown: f64,
+    /// Frames executed so far (shared across engine clones).
+    served: std::sync::Arc<std::sync::atomic::AtomicUsize>,
 }
 
 impl SimEngine {
@@ -128,6 +145,7 @@ impl SimEngine {
             native_batch: native_batch.max(1),
             dispatch_overhead,
             frame_time,
+            chaos: None,
         }
     }
 
@@ -180,6 +198,23 @@ impl SimEngine {
             .collect())
     }
 
+    /// Failure injection: the worker thread running this engine panics
+    /// once `frames` frames have executed — a replica crash mid-run. The
+    /// routing weight is unaffected (the fleet finds out the hard way).
+    pub fn with_chaos_kill_after(mut self, frames: usize) -> SimEngine {
+        let c = self.chaos.get_or_insert_with(Chaos::default);
+        c.kill_after_frames = Some(frames);
+        self
+    }
+
+    /// Failure injection: execution silently runs `factor`× slower than
+    /// the model the routing weight advertises — a hidden straggler.
+    pub fn with_chaos_slowdown(mut self, factor: f64) -> SimEngine {
+        let c = self.chaos.get_or_insert_with(Chaos::default);
+        c.slowdown = if factor.is_finite() && factor > 0.0 { factor } else { 1.0 };
+        self
+    }
+
     /// Compress (scale > 1) or stretch modeled time, e.g. to keep demo
     /// runs of slow networks short. Predictions are unaffected.
     pub fn with_time_scale(mut self, scale: f64) -> SimEngine {
@@ -199,6 +234,16 @@ impl SimEngine {
         let n = self.native_batch as f64;
         let batch_s = self.dispatch_overhead.as_secs_f64() + n * self.frame_time.as_secs_f64();
         n / batch_s.max(1e-12)
+    }
+}
+
+impl Default for Chaos {
+    fn default() -> Chaos {
+        Chaos {
+            kill_after_frames: None,
+            slowdown: 1.0,
+            served: std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+        }
     }
 }
 
@@ -238,9 +283,26 @@ impl Engine for SimEngine {
         if k > 0 {
             let dispatches = k.div_ceil(self.native_batch) as u32;
             span.set_arg("dispatches", dispatches as u64);
-            let busy = self.dispatch_overhead * dispatches + self.frame_time * k as u32;
+            let mut busy = self.dispatch_overhead * dispatches + self.frame_time * k as u32;
+            if let Some(c) = &self.chaos {
+                if c.slowdown != 1.0 {
+                    busy = Duration::from_secs_f64(busy.as_secs_f64() * c.slowdown);
+                }
+            }
             if busy > Duration::ZERO {
                 std::thread::sleep(busy);
+            }
+        }
+        if let Some(c) = &self.chaos {
+            let before = c.served.fetch_add(k, std::sync::atomic::Ordering::Relaxed);
+            if let Some(limit) = c.kill_after_frames {
+                if before + k > limit {
+                    // Take the worker thread down mid-batch: in-flight
+                    // requests are dropped (their response senders die
+                    // with this stack), and the replica channel
+                    // disconnects so routing sweeps past the corpse.
+                    panic!("chaos: replica {} killed after {limit} frames", self.name);
+                }
             }
         }
         Ok(frames.iter().map(|f| hash_predict(f, self.num_classes)).collect())
@@ -370,6 +432,39 @@ mod tests {
         assert!(q[0].modeled_fps() >= f[0].modeled_fps() * 0.99);
         assert_eq!(q[0].frame_elems(), 32 * 32);
         assert_eq!(q[0].num_classes(), 10);
+    }
+
+    #[test]
+    fn chaos_kill_panics_after_threshold_and_hides_from_weight() {
+        let eng = SimEngine::new("t", 4, 10, 8, Duration::ZERO, Duration::ZERO)
+            .with_chaos_kill_after(2);
+        let healthy = SimEngine::new("t", 4, 10, 8, Duration::ZERO, Duration::ZERO);
+        // Chaos must not leak into the routing weight.
+        assert_eq!(eng.modeled_fps(), healthy.modeled_fps());
+        let f = [0.0f32; 4];
+        assert_eq!(eng.classify_batch(&[&f, &f]).unwrap().len(), 2);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = eng.classify_batch(&[&f]);
+        }));
+        assert!(boom.is_err(), "third frame must cross the kill threshold");
+    }
+
+    #[test]
+    fn chaos_slowdown_is_invisible_to_the_model() {
+        let eng = SimEngine::new(
+            "t",
+            4,
+            10,
+            8,
+            Duration::ZERO,
+            Duration::from_micros(200),
+        );
+        let slow = eng.clone().with_chaos_slowdown(20.0);
+        assert_eq!(slow.modeled_fps(), eng.modeled_fps());
+        let f = [0.0f32; 4];
+        let t0 = std::time::Instant::now();
+        slow.classify_batch(&[&f]).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(3), "{:?}", t0.elapsed());
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Trace-driven load generation: replay bursty/diurnal request traces
+//! against an [`InferenceServer`](super::InferenceServer) fleet and report
+//! per-class latency and shed rates.
+//!
+//! A [`LoadTrace`] is just a sorted list of [`TraceEvent`]s — "at `at_us`
+//! microseconds into the run, submit one request of class `class`". Traces
+//! come from the synthetic generators ([`LoadTrace::bursty`],
+//! [`LoadTrace::diurnal`]) or from JSON (`{"events":[{"at_us":..,
+//! "class":..}]}`), so a recorded production arrival process can be
+//! replayed bit-for-bit. [`replay`] paces submissions to the trace
+//! timestamps, classifies every outcome (answered, shed by admission
+//! control, shed by backpressure, errored, dropped by a dead replica) and
+//! merges the client-side view with the server's final
+//! [`StatsSnapshot`](super::StatsSnapshot) into a [`ReplayReport`].
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencyStats;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::{InferenceServer, ServerError, StatsSnapshot};
+
+/// One request arrival in a trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Offset from the start of the replay, in microseconds.
+    pub at_us: u64,
+    /// SLO class index of the request.
+    pub class: usize,
+}
+
+/// An arrival process: sorted request timestamps with class labels.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LoadTrace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl LoadTrace {
+    /// A bursty arrival process: `requests` arrivals in square-wave bursts
+    /// — `burst` near-back-to-back requests at the start of every
+    /// `period_us` window, idle in between. `mix` weights the class labels
+    /// (round-robin over the expanded weight table, so the ratios are
+    /// exact); `seed` jitters each arrival inside its burst
+    /// deterministically.
+    ///
+    /// ```
+    /// use tvm_fpga_flow::coordinator::loadgen::LoadTrace;
+    ///
+    /// let t = LoadTrace::bursty(100, 20, 10_000, &[1, 4], 42);
+    /// assert_eq!(t.events.len(), 100);
+    /// assert_eq!(t.class_counts(), vec![20, 80]);
+    /// assert!(t.duration_us() >= 4 * 10_000);
+    /// assert_eq!(t, LoadTrace::bursty(100, 20, 10_000, &[1, 4], 42)); // deterministic
+    /// ```
+    pub fn bursty(
+        requests: usize,
+        burst: usize,
+        period_us: u64,
+        mix: &[u32],
+        seed: u64,
+    ) -> LoadTrace {
+        let burst = burst.max(1);
+        let period_us = period_us.max(1);
+        let mut rng = Rng::new(seed ^ 0xb0b5_7bad);
+        // Arrivals land in the first quarter of their window.
+        let jitter = (period_us / 4).max(1);
+        let classes = expand_mix(mix);
+        let mut events = Vec::with_capacity(requests);
+        for i in 0..requests {
+            let window = (i / burst) as u64;
+            let at_us = window * period_us + rng.below(jitter);
+            events.push(TraceEvent { at_us, class: classes[i % classes.len()] });
+        }
+        events.sort_by_key(|e| e.at_us);
+        LoadTrace { events }
+    }
+
+    /// A diurnal arrival process: `requests` arrivals over `span_us`,
+    /// density following `1 − cos` over `cycles` cycles (peaks mid-cycle,
+    /// troughs at the boundaries — a day-scale load curve compressed into
+    /// the span).
+    pub fn diurnal(
+        requests: usize,
+        span_us: u64,
+        cycles: u32,
+        mix: &[u32],
+        seed: u64,
+    ) -> LoadTrace {
+        let mut rng = Rng::new(seed ^ 0xd1a1_ca11);
+        let cycles = cycles.max(1) as f64;
+        let classes = expand_mix(mix);
+        let mut events = Vec::with_capacity(requests);
+        for i in 0..requests {
+            // Rejection-sample the 1−cos density; ≤ 2 draws expected.
+            let at_us = loop {
+                let t = rng.f64();
+                let density = 0.5 * (1.0 - (t * cycles * std::f64::consts::TAU).cos());
+                if rng.f64() <= density {
+                    break (t * span_us as f64) as u64;
+                }
+            };
+            events.push(TraceEvent { at_us, class: classes[i % classes.len()] });
+        }
+        events.sort_by_key(|e| e.at_us);
+        LoadTrace { events }
+    }
+
+    /// Wall-clock length of the trace (time of the last arrival).
+    pub fn duration_us(&self) -> u64 {
+        self.events.last().map(|e| e.at_us).unwrap_or(0)
+    }
+
+    /// Mean offered load over the trace duration, requests per second.
+    pub fn offered_rps(&self) -> f64 {
+        let d = self.duration_us();
+        if d == 0 {
+            0.0
+        } else {
+            self.events.len() as f64 * 1e6 / d as f64
+        }
+    }
+
+    /// Per-class arrival counts (indexed by class, length = max class + 1).
+    pub fn class_counts(&self) -> Vec<u64> {
+        let n = self.events.iter().map(|e| e.class + 1).max().unwrap_or(0);
+        let mut counts = vec![0u64; n];
+        for e in &self.events {
+            counts[e.class] += 1;
+        }
+        counts
+    }
+
+    /// Compress (divisor > 1) or stretch every timestamp, e.g. to replay a
+    /// minutes-long recorded trace in test time.
+    pub fn scaled(mut self, divisor: f64) -> LoadTrace {
+        if divisor.is_finite() && divisor > 0.0 && divisor != 1.0 {
+            for e in &mut self.events {
+                e.at_us = (e.at_us as f64 / divisor) as u64;
+            }
+        }
+        self
+    }
+
+    /// Serialize as the JSON trace format (round-trips through
+    /// [`LoadTrace::parse`]).
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("at_us".to_string(), Json::Num(e.at_us as f64));
+                o.insert("class".to_string(), Json::Num(e.class as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("events".to_string(), Json::Arr(events));
+        Json::Obj(root)
+    }
+
+    /// Parse the JSON trace format: `{"events":[{"at_us":N,"class":N}]}`
+    /// (`class` defaults to 0). Events are sorted by timestamp.
+    pub fn parse(text: &str) -> crate::Result<LoadTrace> {
+        let root = json::parse(text).map_err(|e| anyhow::anyhow!("bad trace JSON: {e}"))?;
+        let events = root
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace JSON needs an \"events\" array"))?;
+        let mut out = Vec::with_capacity(events.len());
+        for (i, ev) in events.iter().enumerate() {
+            let at_us = ev
+                .get("at_us")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("trace event {i}: missing \"at_us\""))?;
+            let class = ev.get("class").and_then(Json::as_u64).unwrap_or(0) as usize;
+            out.push(TraceEvent { at_us, class });
+        }
+        out.sort_by_key(|e| e.at_us);
+        Ok(LoadTrace { events: out })
+    }
+}
+
+/// Expand a weight table into an exact-ratio class cycle, e.g. `[1, 3]` →
+/// `[0, 1, 1, 1]`. Zero/empty mixes fall back to a single class 0.
+fn expand_mix(mix: &[u32]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (class, &w) in mix.iter().enumerate() {
+        for _ in 0..w {
+            out.push(class);
+        }
+    }
+    if out.is_empty() {
+        out.push(0);
+    }
+    out
+}
+
+/// Client-side per-class outcome accounting for one replay.
+#[derive(Debug, Clone, Default)]
+pub struct ClassReport {
+    pub name: String,
+    /// Deadline budget of the class, if any.
+    pub deadline_us: Option<u64>,
+    /// Requests the trace offered for this class.
+    pub sent: u64,
+    /// Accepted into the queue (answers arrived or were awaited).
+    pub accepted: u64,
+    /// Answered with a prediction.
+    pub ok: u64,
+    /// Shed under queue pressure (refused or evicted), `Overloaded`.
+    pub shed_overload: u64,
+    /// Shed before queueing, `DeadlineUnmeetable`.
+    pub shed_deadline: u64,
+    /// Answered with some other server error.
+    pub errored: u64,
+    /// Accepted but never answered (replica died mid-batch).
+    pub dropped: u64,
+    /// Client-observed submit→response percentiles over answered requests.
+    pub p50_us: Option<u64>,
+    pub p99_us: Option<u64>,
+}
+
+impl ClassReport {
+    /// Requests shed for any reason.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_overload + self.shed_deadline
+    }
+
+    /// Shed fraction of everything sent (0.0 when nothing was sent).
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.shed_total() as f64 / self.sent as f64
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        match self.deadline_us {
+            Some(d) => o.insert("deadline_us".into(), Json::Num(d as f64)),
+            None => o.insert("deadline_us".into(), Json::Null),
+        };
+        o.insert("sent".into(), Json::Num(self.sent as f64));
+        o.insert("accepted".into(), Json::Num(self.accepted as f64));
+        o.insert("ok".into(), Json::Num(self.ok as f64));
+        o.insert("shed_overload".into(), Json::Num(self.shed_overload as f64));
+        o.insert("shed_deadline".into(), Json::Num(self.shed_deadline as f64));
+        o.insert("errored".into(), Json::Num(self.errored as f64));
+        o.insert("dropped".into(), Json::Num(self.dropped as f64));
+        o.insert("shed_rate".into(), Json::Num(self.shed_rate()));
+        match self.p50_us {
+            Some(p) => o.insert("p50_us".into(), Json::Num(p as f64)),
+            None => o.insert("p50_us".into(), Json::Null),
+        };
+        match self.p99_us {
+            Some(p) => o.insert("p99_us".into(), Json::Num(p as f64)),
+            None => o.insert("p99_us".into(), Json::Null),
+        };
+        Json::Obj(o)
+    }
+}
+
+/// Everything one [`replay`] produced: the client-side per-class view, the
+/// replay timing, and the server's final snapshot.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// One entry per class, priority order.
+    pub classes: Vec<ClassReport>,
+    /// Wall time of the whole replay (submit start → last answer).
+    pub wall_us: u64,
+    /// Mean load the trace offered.
+    pub offered_rps: f64,
+    /// Answered requests per second of replay wall time.
+    pub achieved_rps: f64,
+    /// The server's own final statistics.
+    pub snapshot: StatsSnapshot,
+}
+
+impl ReplayReport {
+    /// Requests shed for any reason, across classes.
+    pub fn total_shed(&self) -> u64 {
+        self.classes.iter().map(ClassReport::shed_total).sum()
+    }
+
+    /// Fraction of total shedding absorbed by class `i` (0.0 when nothing
+    /// was shed).
+    pub fn shed_share(&self, i: usize) -> f64 {
+        let total = self.total_shed();
+        if total == 0 {
+            0.0
+        } else {
+            self.classes.get(i).map(ClassReport::shed_total).unwrap_or(0) as f64 / total as f64
+        }
+    }
+
+    /// The per-class report as JSON (the `loadgen --json` payload and the
+    /// CI shape check).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "classes".into(),
+            Json::Arr(self.classes.iter().map(ClassReport::to_json).collect()),
+        );
+        o.insert("wall_us".into(), Json::Num(self.wall_us as f64));
+        o.insert("offered_rps".into(), Json::Num(self.offered_rps));
+        o.insert("achieved_rps".into(), Json::Num(self.achieved_rps));
+        o.insert("total_shed".into(), Json::Num(self.total_shed() as f64));
+        o.insert("submitted".into(), Json::Num(self.snapshot.submitted as f64));
+        o.insert("completed".into(), Json::Num(self.snapshot.completed as f64));
+        o.insert("queue_samples".into(), Json::Num(self.snapshot.queue_samples as f64));
+        Json::Obj(o)
+    }
+
+    /// Human-readable per-class table.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "replayed {:.0} rps offered -> {:.0} rps answered over {:.1} ms\n",
+            self.offered_rps,
+            self.achieved_rps,
+            self.wall_us as f64 / 1e3
+        );
+        for (i, c) in self.classes.iter().enumerate() {
+            let deadline = match c.deadline_us {
+                Some(d) => format!("{d}us"),
+                None => "best-effort".into(),
+            };
+            let p99 = match c.p99_us {
+                Some(p) => format!("{p}us"),
+                None => "-".into(),
+            };
+            s.push_str(&format!(
+                "  class {i} {:<12} [{deadline}] sent {:>6}  ok {:>6}  shed {:>5} ({:>5.1}%)  p99 {p99}\n",
+                c.name,
+                c.sent,
+                c.ok,
+                c.shed_total(),
+                c.shed_rate() * 100.0,
+            ));
+        }
+        s
+    }
+
+    /// Export the replay outcome as `flow_loadgen_*` gauges (per-class
+    /// shed/latency plus totals), alongside the snapshot's own
+    /// `flow_serve_*` metrics.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry) {
+        self.snapshot.export_metrics(reg);
+        reg.set_gauge("flow_loadgen_offered_rps", "mean offered load", self.offered_rps);
+        reg.set_gauge("flow_loadgen_achieved_rps", "answered requests per second", self.achieved_rps);
+        reg.set_gauge("flow_loadgen_total_shed", "requests shed across classes", self.total_shed() as f64);
+        for (i, c) in self.classes.iter().enumerate() {
+            reg.set_gauge(
+                &format!("flow_loadgen_class_{i}_sent"),
+                &format!("requests offered for class {}", c.name),
+                c.sent as f64,
+            );
+            reg.set_gauge(
+                &format!("flow_loadgen_class_{i}_shed"),
+                &format!("requests shed for class {}", c.name),
+                c.shed_total() as f64,
+            );
+            if let Some(p) = c.p99_us {
+                reg.set_gauge(
+                    &format!("flow_loadgen_class_{i}_p99_us"),
+                    &format!("client-observed p99 for class {}", c.name),
+                    p as f64,
+                );
+            }
+        }
+    }
+}
+
+/// Replay a trace against a running server: pace submissions to the trace
+/// timestamps (cycling through `frames` for payloads), then await every
+/// accepted response. The server is left running — callers own shutdown
+/// (and typically fold `server.shutdown()` into
+/// [`ReplayReport::snapshot`]).
+pub fn replay(server: &InferenceServer, trace: &LoadTrace, frames: &[Vec<f32>]) -> ReplayReport {
+    assert!(!frames.is_empty(), "replay needs at least one payload frame");
+    let n_classes = trace.events.iter().map(|e| e.class + 1).max().unwrap_or(1);
+    let mut classes: Vec<ClassReport> = (0..n_classes)
+        .map(|i| ClassReport { name: format!("class{i}"), ..ClassReport::default() })
+        .collect();
+    let mut pending: Vec<(usize, std::sync::mpsc::Receiver<crate::Result<u32>>)> = Vec::new();
+    let mut latencies: Vec<LatencyStats> = vec![LatencyStats::default(); n_classes];
+    let mut submit_times: Vec<Instant> = Vec::new();
+
+    let t0 = Instant::now();
+    for ev in &trace.events {
+        let due = t0 + Duration::from_micros(ev.at_us);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let c = &mut classes[ev.class];
+        c.sent += 1;
+        let frame = frames[(c.sent as usize + ev.class) % frames.len()].clone();
+        match server.infer_class_async(frame, ev.class) {
+            Ok(rx) => {
+                c.accepted += 1;
+                submit_times.push(Instant::now());
+                pending.push((ev.class, rx));
+            }
+            Err(e) => match e.downcast_ref::<ServerError>() {
+                Some(ServerError::DeadlineUnmeetable { .. }) => c.shed_deadline += 1,
+                Some(ServerError::Overloaded { .. }) => c.shed_overload += 1,
+                _ => c.errored += 1,
+            },
+        }
+    }
+
+    for ((class, rx), submitted) in pending.into_iter().zip(submit_times) {
+        match rx.recv() {
+            Ok(Ok(_)) => {
+                classes[class].ok += 1;
+                latencies[class].record(submitted.elapsed().as_micros() as u64);
+            }
+            Ok(Err(e)) => match e.downcast_ref::<ServerError>() {
+                // An accepted request answered Overloaded was evicted by a
+                // higher-priority arrival — it still sheds.
+                Some(ServerError::Overloaded { .. }) => classes[class].shed_overload += 1,
+                _ => classes[class].errored += 1,
+            },
+            // The response sender died with its replica worker.
+            Err(_) => classes[class].dropped += 1,
+        }
+    }
+    let wall_us = t0.elapsed().as_micros().max(1) as u64;
+
+    let snapshot = server.stats();
+    for (i, c) in classes.iter_mut().enumerate() {
+        c.p50_us = latencies[i].percentile(50.0);
+        c.p99_us = latencies[i].percentile(99.0);
+        if let Some(sc) = snapshot.classes.get(i) {
+            c.name = sc.name.clone();
+            c.deadline_us = sc.deadline_us;
+        }
+    }
+    let ok: u64 = classes.iter().map(|c| c.ok).sum();
+    ReplayReport {
+        classes,
+        wall_us,
+        offered_rps: trace.offered_rps(),
+        achieved_rps: ok as f64 * 1e6 / wall_us as f64,
+        snapshot,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bursty_trace_is_deterministic_and_mixed_exactly() {
+        let a = LoadTrace::bursty(120, 30, 5_000, &[20, 20, 80], 7);
+        let b = LoadTrace::bursty(120, 30, 5_000, &[20, 20, 80], 7);
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 120);
+        assert_eq!(a.class_counts(), vec![20, 20, 80]);
+        // Square wave: 4 windows of 30, all arrivals inside the first
+        // quarter of their 5 ms window.
+        for e in &a.events {
+            assert!(e.at_us % 5_000 < 1_250, "{e:?}");
+        }
+        assert!(a.offered_rps() > 0.0);
+        // A different seed moves the jitter but not the shape.
+        let c = LoadTrace::bursty(120, 30, 5_000, &[20, 20, 80], 8);
+        assert_ne!(a, c);
+        assert_eq!(c.class_counts(), vec![20, 20, 80]);
+    }
+
+    #[test]
+    fn diurnal_trace_peaks_mid_cycle() {
+        let t = LoadTrace::diurnal(2_000, 1_000_000, 2, &[1], 42);
+        assert_eq!(t.events.len(), 2_000);
+        // Two cycles over 1 s: peaks near 250 ms and 750 ms, troughs near
+        // 0/500 ms/1 s. Compare the density around a peak vs a trough.
+        let near = |center: u64, width: u64| {
+            t.events
+                .iter()
+                .filter(|e| e.at_us.abs_diff(center) < width)
+                .count()
+        };
+        let peak = near(250_000, 50_000);
+        let trough = near(500_000, 50_000);
+        assert!(peak > 3 * trough.max(1), "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn trace_json_round_trips() {
+        let t = LoadTrace::bursty(40, 10, 1_000, &[1, 3], 9);
+        let text = t.to_json().to_string();
+        let back = LoadTrace::parse(&text).unwrap();
+        assert_eq!(t, back);
+        // Class defaults to 0; garbage is a clean error.
+        let one = LoadTrace::parse(r#"{"events":[{"at_us":5}]}"#).unwrap();
+        assert_eq!(one.events, vec![TraceEvent { at_us: 5, class: 0 }]);
+        assert!(LoadTrace::parse("[]").is_err());
+        assert!(LoadTrace::parse(r#"{"events":[{"class":1}]}"#).is_err());
+        // Parsing sorts unsorted events.
+        let unsorted =
+            LoadTrace::parse(r#"{"events":[{"at_us":9},{"at_us":2}]}"#).unwrap();
+        assert_eq!(unsorted.events[0].at_us, 2);
+    }
+
+    #[test]
+    fn scaled_compresses_timestamps() {
+        let t = LoadTrace::bursty(20, 5, 100_000, &[1], 3);
+        let fast = t.clone().scaled(100.0);
+        assert_eq!(fast.events.len(), t.events.len());
+        assert!(fast.duration_us() <= t.duration_us() / 99);
+        // Degenerate divisors are identity.
+        assert_eq!(t.clone().scaled(0.0), t);
+    }
+
+    #[test]
+    fn expand_mix_is_exact_and_survives_zeros() {
+        assert_eq!(expand_mix(&[1, 3]), vec![0, 1, 1, 1]);
+        assert_eq!(expand_mix(&[0, 2]), vec![1, 1]);
+        assert_eq!(expand_mix(&[]), vec![0]);
+        assert_eq!(expand_mix(&[0, 0]), vec![0]);
+    }
+}

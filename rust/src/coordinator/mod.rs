@@ -1,13 +1,14 @@
 //! Inference coordinator: the paper's "host program" (§II-B) grown into a
-//! dynamic-batching replica scheduler.
+//! dynamic-batching replica scheduler with SLO-class admission control.
 //!
 //! ```text
-//!  infer()/infer_async()          dispatcher thread        replica workers
+//!  infer()/infer_class()           dispatcher thread        replica workers
 //!  ──────────────────▶ BatchQueue ───────────────▶ ReplicaSet ─▶ [r0: Engine]
-//!       │   bounded; coalesces to   pops batches;   weighted     [r1: Engine]
-//!       │   max_batch or max_wait   records queue    round-      [r2: Engine]
-//!       ▼                           latency          robin
-//!  Err(Overloaded) when full                      (weight ∝ modeled FPS)
+//!       │   priority lanes; coalesces  pops batches;  weighted    [r1: Engine]
+//!       │   to max_batch or max_wait   records queue   round-     [r2: Engine]
+//!       ▼                              latency         robin
+//!  Err(DeadlineUnmeetable) shed                     (weight ∝ modeled FPS,
+//!  Err(Overloaded) when full                         first `active` only)
 //! ```
 //!
 //! OpenCL-host concepts map directly onto the serving layer:
@@ -35,6 +36,16 @@
 //! splits one network across devices and [`PipelineServer`] runs one
 //! stage worker per device, chained by bounded channels.
 //!
+//! Requests carry an [`SloClass`] (index = priority, 0 highest). Admission
+//! control sheds *before* queueing: a request whose deadline the current
+//! queue-latency percentiles cannot meet is refused at submission with
+//! [`ServerError::DeadlineUnmeetable`] and never occupies a queue slot;
+//! under full-queue pressure a higher-priority push evicts the youngest
+//! lowest-priority queued request, which is answered
+//! [`ServerError::Overloaded`] (shed-lowest-first). A [`ScalePolicy`]
+//! (default [`HysteresisPolicy`]) can grow/shrink the *active* replica set
+//! from the same queue-latency signal.
+//!
 //! Backpressure is explicit: the queue is bounded and a full queue fails
 //! submissions with [`ServerError::Overloaded`] instead of buffering
 //! without limit. Every *accepted* request is answered — shutdown drains
@@ -43,15 +54,21 @@
 
 mod batcher;
 mod engine;
+pub mod loadgen;
 mod pipeline;
 mod replica;
+mod scale;
+pub mod slo;
 mod stats;
 
-pub use batcher::{BatchQueue, PushError};
+pub use batcher::{BatchQueue, FlushCounts, FlushReason, PushError};
 pub use engine::{Engine, EngineSpec, PjrtEngine, SimEngine};
 pub use pipeline::{export_pipeline_metrics, PipelineConfig, PipelineServer, StageSpec};
-pub use stats::{ReplicaStats, StatsSnapshot};
+pub use scale::{HysteresisPolicy, ScaleDecision, ScalePolicy};
+pub use slo::SloClass;
+pub use stats::{ClassStats, ReplicaStats, StatsSnapshot};
 
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -66,8 +83,12 @@ use stats::Shared;
 /// pattern as [`crate::flow::CompileError`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServerError {
-    /// The bounded request queue is full — shed load or retry later.
+    /// The bounded request queue is full (or this request was evicted by a
+    /// higher-priority one) — shed load or retry later.
     Overloaded { capacity: usize },
+    /// Shed before queueing: the class deadline is smaller than the
+    /// latency the current queue/execution signals predict.
+    DeadlineUnmeetable { deadline_us: u64, predicted_us: u64 },
     /// The server is shutting down (or its replicas are all gone).
     Stopped,
     /// The requested network is not in the artifacts manifest.
@@ -84,6 +105,10 @@ impl std::fmt::Display for ServerError {
             ServerError::Overloaded { capacity } => {
                 write!(f, "server overloaded: request queue at capacity ({capacity})")
             }
+            ServerError::DeadlineUnmeetable { deadline_us, predicted_us } => write!(
+                f,
+                "deadline unmeetable: budget {deadline_us}us < predicted {predicted_us}us"
+            ),
             ServerError::Stopped => write!(f, "server stopped"),
             ServerError::UnknownNetwork { network } => {
                 write!(f, "network {network} not in the artifacts manifest")
@@ -119,6 +144,13 @@ pub struct ServerConfig {
     /// Explicit replica fleet (possibly heterogeneous). Empty = build
     /// `workers` PJRT replicas from `network`/`impl_`/`artifacts_dir`.
     pub replicas: Vec<EngineSpec>,
+    /// SLO class table, highest priority first. Empty = a single
+    /// best-effort class (every request behaves as before classes
+    /// existed).
+    pub classes: Vec<SloClass>,
+    /// Autoscaling policy for the active replica count. `None` keeps the
+    /// whole fleet active.
+    pub autoscale: Option<HysteresisPolicy>,
 }
 
 impl Default for ServerConfig {
@@ -132,6 +164,8 @@ impl Default for ServerConfig {
             queue_capacity: 1024,
             artifacts_dir: Manifest::default_dir(),
             replicas: Vec::new(),
+            classes: Vec::new(),
+            autoscale: None,
         }
     }
 }
@@ -139,6 +173,8 @@ impl Default for ServerConfig {
 /// One inference request travelling queue → dispatcher → replica.
 pub(crate) struct Request {
     pub(crate) frame: Vec<f32>,
+    /// Index into the server's SLO class table (= priority).
+    pub(crate) class: usize,
     pub(crate) submitted: Instant,
     /// When the dispatcher popped this request out of the queue — splits
     /// the lifecycle span into `queued` and `execute` at completion.
@@ -179,6 +215,23 @@ impl InferenceServer {
     /// assert_eq!(stats.completed, stats.submitted);
     /// ```
     pub fn start(cfg: ServerConfig) -> crate::Result<InferenceServer> {
+        let policy = cfg.autoscale.clone().map(|p| Box::new(p) as Box<dyn ScalePolicy>);
+        InferenceServer::start_inner(cfg, policy)
+    }
+
+    /// Start with a custom [`ScalePolicy`] (overrides
+    /// [`ServerConfig::autoscale`]).
+    pub fn start_with_policy(
+        cfg: ServerConfig,
+        policy: Box<dyn ScalePolicy>,
+    ) -> crate::Result<InferenceServer> {
+        InferenceServer::start_inner(cfg, Some(policy))
+    }
+
+    fn start_inner(
+        cfg: ServerConfig,
+        policy: Option<Box<dyn ScalePolicy>>,
+    ) -> crate::Result<InferenceServer> {
         let specs: Vec<EngineSpec> = if cfg.replicas.is_empty() {
             // Legacy fleet: fail fast if artifacts are missing.
             let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -197,49 +250,114 @@ impl InferenceServer {
             cfg.replicas.clone()
         };
 
+        let classes =
+            if cfg.classes.is_empty() { SloClass::default_table() } else { cfg.classes.clone() };
         let names = specs.iter().enumerate().map(|(i, s)| format!("r{i}:{}", s.name())).collect();
-        let shared = Arc::new(Shared::new(names, cfg.max_batch.max(1)));
-        let queue = Arc::new(BatchQueue::new(
+        let shared = Arc::new(Shared::with_classes(names, cfg.max_batch.max(1), &classes));
+        let queue = Arc::new(BatchQueue::with_classes(
             cfg.queue_capacity,
             cfg.max_batch,
             cfg.max_wait,
+            classes.len(),
         ));
 
-        let (set, workers) = ReplicaSet::spawn(specs, &shared);
+        let (mut set, workers) = ReplicaSet::spawn(specs, &shared);
+        if let Some(p) = &policy {
+            set.set_active(p.initial(set.len()));
+        }
+        shared.active.store(set.active(), Ordering::Relaxed);
 
         let queue2 = Arc::clone(&queue);
         let shared2 = Arc::clone(&shared);
         let dispatcher = std::thread::Builder::new()
             .name("dispatcher".into())
-            .spawn(move || dispatcher_loop(set, queue2, shared2))
+            .spawn(move || dispatcher_loop(set, queue2, shared2, policy))
             .expect("spawn dispatcher");
 
         Ok(InferenceServer { queue, shared, dispatcher: Some(dispatcher), workers })
     }
 
-    /// Submit one frame; blocks until classified. Fails immediately with
-    /// [`ServerError::Overloaded`] when the queue is full.
+    /// Submit one frame at the highest priority; blocks until classified.
+    /// Fails immediately with [`ServerError::Overloaded`] when the queue
+    /// is full.
     pub fn infer(&self, frame: Vec<f32>) -> crate::Result<u32> {
-        let rx = self.submit(frame)?;
+        self.infer_class(frame, 0)
+    }
+
+    /// Submit asynchronously at the highest priority.
+    pub fn infer_async(&self, frame: Vec<f32>) -> crate::Result<Receiver<crate::Result<u32>>> {
+        self.submit(frame, 0)
+    }
+
+    /// Submit one frame under the given SLO class (index into
+    /// [`ServerConfig::classes`], clamped); blocks until classified.
+    pub fn infer_class(&self, frame: Vec<f32>, class: usize) -> crate::Result<u32> {
+        let rx = self.submit(frame, class)?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
-    /// Submit asynchronously; returns the response channel.
-    pub fn infer_async(&self, frame: Vec<f32>) -> crate::Result<Receiver<crate::Result<u32>>> {
-        self.submit(frame)
+    /// Submit asynchronously under the given SLO class; returns the
+    /// response channel.
+    pub fn infer_class_async(
+        &self,
+        frame: Vec<f32>,
+        class: usize,
+    ) -> crate::Result<Receiver<crate::Result<u32>>> {
+        self.submit(frame, class)
     }
 
     /// Count the submission *before* enqueueing: a replica could otherwise
     /// complete it (bumping `completed`) before `submitted` is
     /// incremented, letting an observer see `completed > submitted`.
     /// Rejected pushes roll the count back and count as `rejected`.
-    fn submit(&self, frame: Vec<f32>) -> crate::Result<Receiver<crate::Result<u32>>> {
-        use std::sync::atomic::Ordering;
+    ///
+    /// Admission control runs first, on atomics only: a deadline the
+    /// current signals cannot meet is refused *before* the request touches
+    /// the queue, so shed requests never record queue latency.
+    fn submit(&self, frame: Vec<f32>, class: usize) -> crate::Result<Receiver<crate::Result<u32>>> {
+        let class = class.min(self.shared.classes.len() - 1);
+        let cs = &self.shared.classes[class];
+        if let Some(deadline_us) = cs.deadline_us {
+            let predicted_us = self.shared.predicted_total_us();
+            if predicted_us > deadline_us {
+                cs.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                self.shared.deadline_rejected.fetch_add(1, Ordering::Relaxed);
+                if crate::obs::enabled() {
+                    crate::obs::global_metrics()
+                        .counter(
+                            "flow_serve_deadline_rejected_total",
+                            "requests shed before queueing (deadline unmeetable)",
+                        )
+                        .inc();
+                }
+                return Err(ServerError::DeadlineUnmeetable { deadline_us, predicted_us }.into());
+            }
+        }
         let (tx, rx) = channel();
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
-        let req = Request { frame, submitted: Instant::now(), dispatched: None, resp: tx };
-        match self.queue.push(req) {
-            Ok(()) => {
+        cs.submitted.fetch_add(1, Ordering::Relaxed);
+        let req = Request { frame, class, submitted: Instant::now(), dispatched: None, resp: tx };
+        match self.queue.push_class(req, class) {
+            Ok(victim) => {
+                if let Some(v) = victim {
+                    // A queued lower-priority request made way: it leaves
+                    // `submitted` (it will never complete) and is answered
+                    // Overloaded — shed-lowest-first under pressure.
+                    self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                    self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    let vcs = &self.shared.classes[v.class.min(self.shared.classes.len() - 1)];
+                    vcs.submitted.fetch_sub(1, Ordering::Relaxed);
+                    vcs.shed_overload.fetch_add(1, Ordering::Relaxed);
+                    let _ = v.resp.send(Err(ServerError::Overloaded {
+                        capacity: self.queue.capacity(),
+                    }
+                    .into()));
+                    if crate::obs::enabled() {
+                        crate::obs::global_metrics()
+                            .counter("flow_serve_rejected_total", "requests shed by backpressure")
+                            .inc();
+                    }
+                }
                 if crate::obs::enabled() {
                     crate::obs::global_metrics()
                         .counter("flow_serve_submitted_total", "requests accepted into the queue")
@@ -249,7 +367,9 @@ impl InferenceServer {
             }
             Err(PushError::Full(_)) => {
                 self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                cs.submitted.fetch_sub(1, Ordering::Relaxed);
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                cs.shed_overload.fetch_add(1, Ordering::Relaxed);
                 if crate::obs::enabled() {
                     crate::obs::global_metrics()
                         .counter("flow_serve_rejected_total", "requests shed by backpressure")
@@ -259,13 +379,14 @@ impl InferenceServer {
             }
             Err(PushError::Closed(_)) => {
                 self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                cs.submitted.fetch_sub(1, Ordering::Relaxed);
                 Err(ServerError::Stopped.into())
             }
         }
     }
 
     /// Live statistics (latency distributions, batch histogram,
-    /// per-replica occupancy).
+    /// per-replica occupancy, per-class SLO accounting).
     pub fn stats(&self) -> StatsSnapshot {
         self.shared.snapshot()
     }
@@ -273,6 +394,11 @@ impl InferenceServer {
     /// Frames currently queued (waiting for a batch slot).
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Cumulative batch-flush counts by wake cause (size/deadline/close).
+    pub fn flush_counts(&self) -> FlushCounts {
+        self.queue.flush_counts()
     }
 
     /// Stop accepting work, drain the queue, join every thread, then
@@ -283,6 +409,10 @@ impl InferenceServer {
     /// dispatcher exits and the final snapshot satisfies
     /// `completed == submitted` — even when a replica engine never came up
     /// (those requests complete with [`ServerError::Engine`]).
+    ///
+    /// The occupancy denominator freezes here: snapshots taken later (this
+    /// one, or re-reads of a stored handle) keep reporting the occupancy
+    /// at shutdown instead of decaying with wall-clock time.
     pub fn shutdown(mut self) -> StatsSnapshot {
         self.queue.close();
         if let Some(d) = self.dispatcher.take() {
@@ -291,6 +421,7 @@ impl InferenceServer {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        self.shared.freeze_uptime();
         self.shared.snapshot()
     }
 }
@@ -304,19 +435,53 @@ impl Drop for InferenceServer {
 }
 
 /// Pop batches, record queue latency at dispatch, shard across replicas.
-/// Exits (dropping the replica channels) once the queue is closed *and*
-/// drained.
-fn dispatcher_loop(mut set: ReplicaSet, queue: Arc<BatchQueue<Request>>, shared: Arc<Shared>) {
+/// Maintains the recent-window queue p99 the admission check reads, and
+/// drives the autoscaling policy every few batches. Exits (dropping the
+/// replica channels) once the queue is closed *and* drained.
+fn dispatcher_loop(
+    mut set: ReplicaSet,
+    queue: Arc<BatchQueue<Request>>,
+    shared: Arc<Shared>,
+    mut policy: Option<Box<dyn ScalePolicy>>,
+) {
+    let mut batches_seen: u64 = 0;
     while let Some(mut batch) = queue.pop_batch() {
         let now = Instant::now();
-        {
+        let recent = {
             let mut ql = shared.queue_latency.lock().unwrap();
             for r in &mut batch {
                 r.dispatched = Some(now);
                 ql.record(now.saturating_duration_since(r.submitted).as_micros() as u64);
             }
+            ql.recent_percentile(stats::RECENT_WINDOW, 99.0)
+        };
+        if let Some(p) = recent {
+            // max(1): zero is the "no signal yet" sentinel.
+            shared.queue_p99_recent_us.store(p.max(1), Ordering::Relaxed);
         }
         set.dispatch(batch, &shared);
+        batches_seen += 1;
+        if batches_seen % 8 == 0 {
+            if let Some(pol) = policy.as_mut() {
+                let before = set.active();
+                match pol.decide(before, &shared.snapshot()) {
+                    ScaleDecision::Up(n) => {
+                        set.set_active(before + n);
+                        if set.active() != before {
+                            shared.scale_ups.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    ScaleDecision::Down(n) => {
+                        set.set_active(before.saturating_sub(n));
+                        if set.active() != before {
+                            shared.scale_downs.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    ScaleDecision::Hold => {}
+                }
+                shared.active.store(set.active(), Ordering::Relaxed);
+            }
+        }
     }
 }
 
@@ -356,6 +521,10 @@ mod tests {
         assert!(stats.batch_hist.iter().skip(1).any(|&n| n > 0), "{stats:?}");
         assert_eq!(stats.replicas.len(), 2);
         assert_eq!(stats.replicas.iter().map(|r| r.frames).sum::<u64>(), 32);
+        // Default class table: everything lands in one best-effort class.
+        assert_eq!(stats.classes.len(), 1);
+        assert_eq!(stats.classes[0].completed, 32);
+        assert!(stats.classes[0].p99_us.is_some());
     }
 
     #[test]
@@ -405,6 +574,31 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.completed, stats.submitted);
         assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn class_stats_track_per_class_completions() {
+        let mut cfg = sim_cfg(4, Duration::from_millis(1));
+        cfg.classes = vec![
+            SloClass::new("gold", Duration::from_secs(60)),
+            SloClass::best_effort("bulk"),
+        ];
+        let server = InferenceServer::start(cfg).unwrap();
+        let data = crate::data::mnist_like(8, 4, 9);
+        for i in 0..8 {
+            let class = i % 2;
+            assert!(server.infer_class(data.frame(i).to_vec(), class).unwrap() < 10);
+        }
+        // Out-of-range class indices clamp to the lowest class.
+        assert!(server.infer_class(data.frame(0).to_vec(), 99).unwrap() < 10);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 9);
+        assert_eq!(stats.classes.len(), 2);
+        assert_eq!(stats.classes[0].completed, 4);
+        assert_eq!(stats.classes[1].completed, 5);
+        assert!(stats.classes[0].slo_met());
+        // Every dispatched request recorded queue latency, nothing else.
+        assert_eq!(stats.queue_samples, stats.completed);
     }
 
     // ---- legacy artifact-gated coverage (skips without `make artifacts`

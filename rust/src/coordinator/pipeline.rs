@@ -45,7 +45,7 @@ use crate::obs;
 
 use super::engine::hash_predict;
 use super::stats::Shared;
-use super::{ServerError, StatsSnapshot};
+use super::{ServerError, SloClass, StatsSnapshot};
 
 /// Timing model for one pipeline stage.
 #[derive(Debug, Clone)]
@@ -78,6 +78,9 @@ pub struct PipelineConfig {
     /// Divides every stage time (tests use large scales to serve modeled
     /// millisecond stages in microseconds).
     pub time_scale: f64,
+    /// SLO class table, highest priority first. Empty = one best-effort
+    /// class.
+    pub classes: Vec<SloClass>,
 }
 
 impl Default for PipelineConfig {
@@ -89,6 +92,7 @@ impl Default for PipelineConfig {
             channel_depth: 2,
             queue_capacity: 64,
             time_scale: 1.0,
+            classes: Vec::new(),
         }
     }
 }
@@ -128,7 +132,11 @@ impl PipelineConfig {
 /// A frame in flight through the stage chain.
 struct PipeFrame {
     frame: Vec<f32>,
+    /// Index into the server's SLO class table.
+    class: usize,
     submitted: Instant,
+    /// Stamped when stage 0 dequeues the frame (queue → execute split).
+    dispatched: Option<Instant>,
     resp: std::sync::mpsc::Sender<crate::Result<u32>>,
 }
 
@@ -151,8 +159,13 @@ impl PipelineServer {
         anyhow::ensure!(cfg.time_scale > 0.0, "time_scale must be positive");
         let capacity = cfg.queue_capacity.max(1);
         let depth = cfg.channel_depth.max(1);
-        let shared =
-            Arc::new(Shared::new(cfg.stages.iter().map(|s| s.name.clone()).collect(), 1));
+        let classes =
+            if cfg.classes.is_empty() { SloClass::default_table() } else { cfg.classes.clone() };
+        let shared = Arc::new(Shared::with_classes(
+            cfg.stages.iter().map(|s| s.name.clone()).collect(),
+            1,
+            &classes,
+        ));
 
         let n = cfg.stages.len();
         let (entry_tx, entry_rx) = sync_channel::<PipeFrame>(capacity);
@@ -193,18 +206,39 @@ impl PipelineServer {
         PipelineServer::start(PipelineConfig::from_plan(plan))
     }
 
-    /// Submit one frame and block for its prediction.
+    /// Submit one frame at the highest priority and block for its
+    /// prediction.
     pub fn infer(&self, frame: Vec<f32>) -> crate::Result<u32> {
-        let rx = self.infer_async(frame)?;
-        rx.recv().unwrap_or_else(|_| Err(ServerError::Stopped.into()))
+        self.infer_class(frame, 0)
     }
 
-    /// Submit one frame; the returned channel yields the prediction.
-    /// Fails fast with [`ServerError::Overloaded`] when the entry queue
-    /// is full and [`ServerError::BadFrame`] on a size mismatch.
+    /// Submit one frame asynchronously at the highest priority.
     pub fn infer_async(
         &self,
         frame: Vec<f32>,
+    ) -> crate::Result<Receiver<crate::Result<u32>>> {
+        self.infer_class_async(frame, 0)
+    }
+
+    /// Submit under the given SLO class (clamped) and block.
+    pub fn infer_class(&self, frame: Vec<f32>, class: usize) -> crate::Result<u32> {
+        let rx = self.infer_class_async(frame, class)?;
+        rx.recv().unwrap_or_else(|_| Err(ServerError::Stopped.into()))
+    }
+
+    /// Submit one frame under the given SLO class; the returned channel
+    /// yields the prediction. Sheds before queueing with
+    /// [`ServerError::DeadlineUnmeetable`] when the class deadline is
+    /// smaller than the predicted latency, fails fast with
+    /// [`ServerError::Overloaded`] when the entry queue is full, and with
+    /// [`ServerError::BadFrame`] on a size mismatch. (The entry channel
+    /// cannot reorder in-flight frames, so unlike
+    /// [`InferenceServer`](super::InferenceServer) a full pipeline sheds
+    /// the *arriving* request regardless of class.)
+    pub fn infer_class_async(
+        &self,
+        frame: Vec<f32>,
+        class: usize,
     ) -> crate::Result<Receiver<crate::Result<u32>>> {
         let input = match &self.input {
             Some(tx) => tx,
@@ -217,18 +251,34 @@ impl PipelineServer {
             }
             .into());
         }
+        let class = class.min(self.shared.classes.len() - 1);
+        let cs = &self.shared.classes[class];
+        if let Some(deadline_us) = cs.deadline_us {
+            let predicted_us = self.shared.predicted_total_us();
+            if predicted_us > deadline_us {
+                cs.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                self.shared.deadline_rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServerError::DeadlineUnmeetable { deadline_us, predicted_us }.into());
+            }
+        }
         let (resp, rx) = channel();
         // Count before pushing so `completed` can never outrun `submitted`.
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
-        match input.try_send(PipeFrame { frame, submitted: Instant::now(), resp }) {
+        cs.submitted.fetch_add(1, Ordering::Relaxed);
+        let f =
+            PipeFrame { frame, class, submitted: Instant::now(), dispatched: None, resp };
+        match input.try_send(f) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => {
                 self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                cs.submitted.fetch_sub(1, Ordering::Relaxed);
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                cs.shed_overload.fetch_add(1, Ordering::Relaxed);
                 Err(ServerError::Overloaded { capacity: self.capacity }.into())
             }
             Err(TrySendError::Disconnected(_)) => {
                 self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                cs.submitted.fetch_sub(1, Ordering::Relaxed);
                 Err(ServerError::Stopped.into())
             }
         }
@@ -242,11 +292,14 @@ impl PipelineServer {
     /// Close the entry queue, drain every in-flight frame through the
     /// remaining stages, join the workers and return the final snapshot
     /// (`completed == submitted`).
+    /// The occupancy denominator freezes here, like
+    /// [`InferenceServer::shutdown`](super::InferenceServer::shutdown).
     pub fn shutdown(mut self) -> StatsSnapshot {
         self.input.take();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        self.shared.freeze_uptime();
         self.shared.snapshot()
     }
 }
@@ -269,13 +322,21 @@ fn stage_worker(
     classes: usize,
 ) {
     let stage_time = Duration::from_secs_f64(spec.stage_time.as_secs_f64() / scale);
-    while let Ok(req) = rx.recv() {
+    while let Ok(mut req) = rx.recv() {
         let mut span = obs::span("pipeline", &spec.name);
         span.set_arg("stage", index as u64);
         let t0 = Instant::now();
         if index == 0 {
+            req.dispatched = Some(t0);
             let queued = req.submitted.elapsed().as_micros() as u64;
-            shared.queue_latency.lock().unwrap().record(queued);
+            let recent = {
+                let mut ql = shared.queue_latency.lock().unwrap();
+                ql.record(queued);
+                ql.recent_percentile(super::stats::RECENT_WINDOW, 99.0)
+            };
+            if let Some(p) = recent {
+                shared.queue_p99_recent_us.store(p.max(1), Ordering::Relaxed);
+            }
         }
         if !stage_time.is_zero() {
             std::thread::sleep(stage_time);
@@ -294,9 +355,20 @@ fn stage_worker(
             }
             None => {
                 let pred = hash_predict(&req.frame, classes);
-                let total = req.submitted.elapsed().as_micros() as u64;
+                let done = Instant::now();
+                let total = done.saturating_duration_since(req.submitted).as_micros() as u64;
                 shared.latency.lock().unwrap().record(total);
                 shared.completed.fetch_add(1, Ordering::Relaxed);
+                if let Some(cs) =
+                    shared.classes.get(req.class.min(shared.classes.len().saturating_sub(1)))
+                {
+                    cs.latency.lock().unwrap().record(total);
+                    cs.completed.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(d) = req.dispatched {
+                    shared
+                        .record_exec_ewma(done.saturating_duration_since(d).as_micros() as u64);
+                }
                 if obs::enabled() {
                     obs::global_metrics()
                         .counter(
@@ -458,6 +530,42 @@ mod tests {
         ));
         let s = server.shutdown();
         assert_eq!(s.submitted, 0);
+    }
+
+    #[test]
+    fn pipeline_tracks_per_class_stats_and_sheds_unmeetable_deadlines() {
+        let cfg = PipelineConfig {
+            stages: vec![spec("s0", ms(2))],
+            frame_elems: 4,
+            num_classes: 5,
+            classes: vec![
+                SloClass::new("tight", Duration::from_micros(1)),
+                SloClass::best_effort("bulk"),
+            ],
+            ..PipelineConfig::default()
+        };
+        let server = PipelineServer::start(cfg).unwrap();
+        // Prime the admission signals: bulk traffic records queue latency
+        // and execution time (a 2 ms stage dwarfs the 1 µs budget).
+        for i in 0..6 {
+            server.infer_class(frame(4, i as f32), 1).unwrap();
+        }
+        let err = server.infer_class(frame(4, 9.0), 0).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ServerError>(),
+                Some(ServerError::DeadlineUnmeetable { deadline_us: 1, .. })
+            ),
+            "{err}"
+        );
+        let s = server.shutdown();
+        assert_eq!(s.completed, 6);
+        assert_eq!(s.deadline_rejected, 1);
+        assert_eq!(s.classes[0].shed_deadline, 1);
+        assert_eq!(s.classes[0].completed, 0);
+        assert_eq!(s.classes[1].completed, 6);
+        // Shed-before-queue: the refused request recorded no queue latency.
+        assert_eq!(s.queue_samples, s.completed);
     }
 
     #[test]

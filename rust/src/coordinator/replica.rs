@@ -23,28 +23,36 @@ use super::{Request, ServerError};
 pub(crate) struct WeightedRouter {
     weights: Vec<f64>,
     current: Vec<f64>,
-    total: f64,
 }
 
 impl WeightedRouter {
     pub(crate) fn new(weights: Vec<f64>) -> WeightedRouter {
         let weights: Vec<f64> =
             weights.into_iter().map(|w| if w.is_finite() && w > 0.0 { w } else { 1e-9 }).collect();
-        let total = weights.iter().sum();
         let current = vec![0.0; weights.len()];
-        WeightedRouter { weights, current, total }
+        WeightedRouter { weights, current }
     }
 
-    /// Index of the next replica to receive work.
+    /// Index of the next replica to receive work (whole fleet active).
+    #[cfg(test)]
     pub(crate) fn pick(&mut self) -> usize {
+        self.pick_among(self.weights.len())
+    }
+
+    /// Weighted pick restricted to the first `n` replicas — the autoscaled
+    /// *active* prefix of the fleet. Inactive replicas accumulate no
+    /// credit, so re-activating one does not hand it a burst of back-pay.
+    pub(crate) fn pick_among(&mut self, n: usize) -> usize {
+        let n = n.clamp(1, self.weights.len());
+        let total: f64 = self.weights[..n].iter().sum();
         let mut best = 0;
-        for i in 0..self.weights.len() {
+        for i in 0..n {
             self.current[i] += self.weights[i];
             if self.current[i] > self.current[best] {
                 best = i;
             }
         }
-        self.current[best] -= self.total;
+        self.current[best] -= total;
         best
     }
 }
@@ -59,6 +67,9 @@ impl WeightedRouter {
 pub(crate) struct ReplicaSet {
     txs: Vec<SyncSender<Vec<Request>>>,
     router: WeightedRouter,
+    /// New batches route only to replicas `0..active` — the autoscaler's
+    /// knob. Deactivated replicas drain whatever they already hold.
+    active: usize,
 }
 
 impl ReplicaSet {
@@ -82,7 +93,24 @@ impl ReplicaSet {
             );
             txs.push(tx);
         }
-        (ReplicaSet { txs, router }, handles)
+        let active = txs.len();
+        (ReplicaSet { txs, router, active }, handles)
+    }
+
+    /// Spawned fleet size.
+    pub(crate) fn len(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Replicas currently receiving new batches.
+    pub(crate) fn active(&self) -> usize {
+        self.active
+    }
+
+    /// Set the active prefix, clamped to `[1, len]` — the fleet never
+    /// scales to zero (a server with no sink would deadlock its queue).
+    pub(crate) fn set_active(&mut self, n: usize) {
+        self.active = n.clamp(1, self.txs.len().max(1));
     }
 
     /// Route one batch. The weighted pick gets first refusal; a busy
@@ -93,8 +121,8 @@ impl ReplicaSet {
     /// skipped; if every replica is gone the batch is answered with
     /// [`ServerError::Stopped`] so no submission goes unanswered.
     pub(crate) fn dispatch(&mut self, mut batch: Vec<Request>, shared: &Shared) {
-        let first = self.router.pick();
-        let n = self.txs.len();
+        let n = self.active.clamp(1, self.txs.len());
+        let first = self.router.pick_among(n);
         for step in 0..n {
             match self.txs[(first + step) % n].try_send(batch) {
                 Ok(()) => return,
@@ -198,6 +226,14 @@ pub(crate) fn finish(shared: &Shared, req: &Request, result: crate::Result<u32>)
     let us = done.saturating_duration_since(req.submitted).as_micros() as u64;
     shared.latency.lock().unwrap().record(us);
     shared.completed.fetch_add(1, Ordering::Relaxed);
+    if let Some(cs) = shared.classes.get(req.class.min(shared.classes.len().saturating_sub(1))) {
+        cs.latency.lock().unwrap().record(us);
+        cs.completed.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Some(d) = req.dispatched {
+        // Feed the admission predictor with dispatch→response time.
+        shared.record_exec_ewma(done.saturating_duration_since(d).as_micros() as u64);
+    }
     if crate::obs::enabled() {
         // The full lifecycle span tree, reconstructed post-hoc:
         // `request` (submit → response) with `queued` (submit → dispatch)
@@ -242,6 +278,19 @@ mod tests {
         for i in 0..3 {
             assert_eq!(picks.iter().filter(|&&p| p == i).count(), 2, "{picks:?}");
         }
+    }
+
+    #[test]
+    fn wrr_pick_among_restricts_to_active_prefix() {
+        let mut r = WeightedRouter::new(vec![1.0, 1.0, 4.0]);
+        // Only the first two replicas are active: the heavy third one must
+        // never be picked, and the first two alternate.
+        let picks: Vec<usize> = (0..6).map(|_| r.pick_among(2)).collect();
+        assert!(picks.iter().all(|&p| p < 2), "{picks:?}");
+        assert_eq!(picks.iter().filter(|&&p| p == 0).count(), 3, "{picks:?}");
+        // Growing back to the full fleet re-admits the heavy replica.
+        let picks: Vec<usize> = (0..12).map(|_| r.pick_among(3)).collect();
+        assert!(picks.iter().filter(|&&p| p == 2).count() >= 6, "{picks:?}");
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Replica autoscaling: scale-up/down decisions driven by the
+//! queue-latency percentiles [`StatsSnapshot`] already reports.
+//!
+//! The whole replica fleet is spawned up front (worker threads are cheap;
+//! the modeled or real accelerators behind them are not re-synthesized by
+//! scaling), and the dispatcher routes only to the first `active`
+//! replicas. Scaling a replica "up" therefore means *activating* an
+//! already-spawned worker, and scaling "down" stops routing new batches
+//! to it — in-flight work drains normally, so no accepted request is ever
+//! dropped by a scale-down.
+//!
+//! Decisions are a policy: the dispatcher periodically feeds the current
+//! [`StatsSnapshot`] to a [`ScalePolicy`] and applies the returned
+//! [`ScaleDecision`]. [`HysteresisPolicy`] is the default implementation:
+//! separate up/down thresholds on the recent queue-latency p99 plus a
+//! cooldown, so a fleet near a single threshold does not flap.
+
+use super::StatsSnapshot;
+
+/// What the policy wants done with the active replica count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Keep the current active count.
+    Hold,
+    /// Activate up to `n` more replicas (clamped to the spawned fleet).
+    Up(usize),
+    /// Deactivate up to `n` replicas (clamped to a minimum of one).
+    Down(usize),
+}
+
+/// A scale-up/down policy. The dispatcher calls [`ScalePolicy::decide`]
+/// periodically (every few batches) with the live snapshot; implementors
+/// own any internal state (cooldowns, trend windows).
+pub trait ScalePolicy: Send {
+    /// How many replicas to activate at server start, given the spawned
+    /// fleet size. Defaults to the whole fleet.
+    fn initial(&self, spawned: usize) -> usize {
+        spawned
+    }
+
+    /// Decide from the current active count and a fresh snapshot.
+    fn decide(&mut self, active: usize, snap: &StatsSnapshot) -> ScaleDecision;
+}
+
+/// Default policy: hysteresis on the recent queue-latency p99.
+///
+/// Scales up one replica when the recent queue p99 exceeds
+/// `scale_up_queue_us`, down one when it falls below
+/// `scale_down_queue_us`, and holds for `cooldown` decisions after any
+/// change. The two thresholds plus the cooldown are the anti-flap
+/// hysteresis band; keep `scale_down_queue_us` well below
+/// `scale_up_queue_us`.
+///
+/// ```
+/// use tvm_fpga_flow::coordinator::{HysteresisPolicy, ScaleDecision, ScalePolicy, StatsSnapshot};
+///
+/// let mut p = HysteresisPolicy::new(1, 4, 10_000, 500);
+/// let hot = StatsSnapshot { queue_p99_recent_us: Some(25_000), ..Default::default() };
+/// assert_eq!(p.decide(1, &hot), ScaleDecision::Up(1));
+/// ```
+#[derive(Debug, Clone)]
+pub struct HysteresisPolicy {
+    /// Never deactivate below this many replicas.
+    pub min_replicas: usize,
+    /// Never activate more than this many replicas.
+    pub max_replicas: usize,
+    /// Recent queue p99 above this scales up.
+    pub scale_up_queue_us: u64,
+    /// Recent queue p99 below this scales down.
+    pub scale_down_queue_us: u64,
+    /// Decisions to hold after any scale change (anti-flap).
+    pub cooldown: u32,
+    cooldown_left: u32,
+}
+
+impl HysteresisPolicy {
+    /// A policy between `min`/`max` active replicas with the given
+    /// up/down thresholds (µs of recent queue p99) and a 4-decision
+    /// cooldown.
+    pub fn new(min: usize, max: usize, up_us: u64, down_us: u64) -> HysteresisPolicy {
+        HysteresisPolicy {
+            min_replicas: min.max(1),
+            max_replicas: max.max(min.max(1)),
+            scale_up_queue_us: up_us,
+            scale_down_queue_us: down_us.min(up_us),
+            cooldown: 4,
+            cooldown_left: 0,
+        }
+    }
+
+    /// Override the anti-flap cooldown (in decisions).
+    pub fn with_cooldown(mut self, decisions: u32) -> HysteresisPolicy {
+        self.cooldown = decisions;
+        self
+    }
+}
+
+impl ScalePolicy for HysteresisPolicy {
+    fn initial(&self, spawned: usize) -> usize {
+        self.min_replicas.clamp(1, spawned)
+    }
+
+    fn decide(&mut self, active: usize, snap: &StatsSnapshot) -> ScaleDecision {
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return ScaleDecision::Hold;
+        }
+        // Prefer the recent-window percentile: the run-cumulative p99
+        // never decays after a burst, which would pin the fleet at max.
+        let p99 = match snap.queue_p99_recent_us.or(snap.queue_p99_us) {
+            Some(p) => p,
+            None => return ScaleDecision::Hold,
+        };
+        if p99 > self.scale_up_queue_us && active < self.max_replicas {
+            self.cooldown_left = self.cooldown;
+            ScaleDecision::Up(1)
+        } else if p99 < self.scale_down_queue_us && active > self.min_replicas {
+            self.cooldown_left = self.cooldown;
+            ScaleDecision::Down(1)
+        } else {
+            ScaleDecision::Hold
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(p99_recent: Option<u64>) -> StatsSnapshot {
+        StatsSnapshot { queue_p99_recent_us: p99_recent, ..Default::default() }
+    }
+
+    #[test]
+    fn scales_up_on_hot_queue_and_respects_max() {
+        let mut p = HysteresisPolicy::new(1, 2, 10_000, 500).with_cooldown(0);
+        assert_eq!(p.decide(1, &snap(Some(50_000))), ScaleDecision::Up(1));
+        // At max, a hot queue holds instead of overshooting.
+        assert_eq!(p.decide(2, &snap(Some(50_000))), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn scales_down_on_cold_queue_and_respects_min() {
+        let mut p = HysteresisPolicy::new(1, 4, 10_000, 500).with_cooldown(0);
+        assert_eq!(p.decide(3, &snap(Some(100))), ScaleDecision::Down(1));
+        assert_eq!(p.decide(1, &snap(Some(100))), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn hysteresis_band_and_cooldown_prevent_flapping() {
+        let mut p = HysteresisPolicy::new(1, 4, 10_000, 500).with_cooldown(2);
+        // In the band between the thresholds: hold.
+        assert_eq!(p.decide(2, &snap(Some(5_000))), ScaleDecision::Hold);
+        // A change arms the cooldown; the next two decisions hold even
+        // though the signal is still hot.
+        assert_eq!(p.decide(2, &snap(Some(50_000))), ScaleDecision::Up(1));
+        assert_eq!(p.decide(3, &snap(Some(50_000))), ScaleDecision::Hold);
+        assert_eq!(p.decide(3, &snap(Some(50_000))), ScaleDecision::Hold);
+        assert_eq!(p.decide(3, &snap(Some(50_000))), ScaleDecision::Up(1));
+    }
+
+    #[test]
+    fn no_signal_holds() {
+        let mut p = HysteresisPolicy::new(1, 4, 10_000, 500).with_cooldown(0);
+        assert_eq!(p.decide(2, &snap(None)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn initial_active_is_min() {
+        let p = HysteresisPolicy::new(2, 8, 10_000, 500);
+        assert_eq!(p.initial(4), 2);
+        assert_eq!(p.initial(1), 1);
+    }
+}

@@ -1,0 +1,165 @@
+//! SLO priority classes for the serving coordinator.
+//!
+//! A [`SloClass`] is a named service tier with an optional total-latency
+//! deadline budget. A server carries an ordered class table
+//! ([`super::ServerConfig::classes`]); a request names its class by index
+//! and the *index is the priority* — class 0 is the most important tier,
+//! the last class the most sheddable. That convention drives two
+//! admission-control behaviours:
+//!
+//! * **shed-before-queue** — a request whose deadline cannot be met given
+//!   the current queue-latency percentiles is rejected at submission with
+//!   [`super::ServerError::DeadlineUnmeetable`], before it ever occupies a
+//!   queue slot (so rejected requests record zero queue latency);
+//! * **shed-lowest-first** — when the bounded queue is full, an arriving
+//!   higher-priority request evicts the most recently queued item of the
+//!   lowest-priority class present instead of being refused itself
+//!   (the evicted request is answered with
+//!   [`super::ServerError::Overloaded`]).
+
+use std::time::Duration;
+
+/// One service tier: a name plus an optional submit→response deadline.
+///
+/// ```
+/// use std::time::Duration;
+/// use tvm_fpga_flow::coordinator::SloClass;
+///
+/// let gold = SloClass::new("gold", Duration::from_millis(20));
+/// assert_eq!(gold.deadline_us(), Some(20_000));
+/// let bulk = SloClass::best_effort("bulk");
+/// assert_eq!(bulk.deadline_us(), None);
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SloClass {
+    /// Tier name (stats, reports, metric labels).
+    pub name: String,
+    /// Total submit→response budget; `None` = best-effort (never shed by
+    /// the deadline admission check, first to shed under overload if it
+    /// is the lowest class).
+    pub deadline: Option<Duration>,
+}
+
+impl SloClass {
+    /// A tier with a hard latency budget.
+    pub fn new(name: impl Into<String>, deadline: Duration) -> SloClass {
+        SloClass { name: name.into(), deadline: Some(deadline) }
+    }
+
+    /// A tier with no deadline: admitted whenever a queue slot exists.
+    pub fn best_effort(name: impl Into<String>) -> SloClass {
+        SloClass { name: name.into(), deadline: None }
+    }
+
+    /// The deadline budget in microseconds, if any.
+    pub fn deadline_us(&self) -> Option<u64> {
+        self.deadline.map(|d| d.as_micros() as u64)
+    }
+
+    /// The default single-tier table used when a config names no classes.
+    pub fn default_table() -> Vec<SloClass> {
+        vec![SloClass::best_effort("default")]
+    }
+}
+
+/// Parse a comma-separated class table, highest priority first. Each item
+/// is `[name=]budget` where `budget` is a duration (`2500us`, `20ms`,
+/// `1s`, or a bare microsecond count) or `best-effort`/`none`/`inf` for a
+/// deadline-free tier. Unnamed tiers get `class<i>` names.
+///
+/// ```
+/// use tvm_fpga_flow::coordinator::slo::parse_classes;
+///
+/// let t = parse_classes("gold=20ms,80ms,bulk=none").unwrap();
+/// assert_eq!(t.len(), 3);
+/// assert_eq!(t[0].name, "gold");
+/// assert_eq!(t[1].name, "class1");
+/// assert_eq!(t[1].deadline_us(), Some(80_000));
+/// assert_eq!(t[2].deadline_us(), None);
+/// ```
+pub fn parse_classes(spec: &str) -> crate::Result<Vec<SloClass>> {
+    let mut out = Vec::new();
+    for (i, raw) in spec.split(',').enumerate() {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            continue;
+        }
+        let (name, budget) = match raw.split_once('=') {
+            Some((n, b)) => (n.trim().to_string(), b.trim()),
+            None => (format!("class{i}"), raw),
+        };
+        let deadline = parse_budget(budget)
+            .map_err(|e| anyhow::anyhow!("class {i} ({name}): {e}"))?;
+        out.push(SloClass { name, deadline });
+    }
+    anyhow::ensure!(!out.is_empty(), "class table is empty: {spec:?}");
+    Ok(out)
+}
+
+/// Parse one deadline budget spelling (see [`parse_classes`]).
+fn parse_budget(s: &str) -> Result<Option<Duration>, String> {
+    let lower = s.to_ascii_lowercase();
+    if matches!(lower.as_str(), "best-effort" | "besteffort" | "none" | "inf" | "0") {
+        return Ok(None);
+    }
+    let (digits, mult_us) = if let Some(d) = lower.strip_suffix("us") {
+        (d, 1.0)
+    } else if let Some(d) = lower.strip_suffix("ms") {
+        (d, 1e3)
+    } else if let Some(d) = lower.strip_suffix('s') {
+        (d, 1e6)
+    } else {
+        (lower.as_str(), 1.0)
+    };
+    let n: f64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad deadline budget {s:?} (want e.g. 2500us, 20ms, 1s, none)"))?;
+    if !(n > 0.0) || !n.is_finite() {
+        return Err(format!("deadline budget must be positive: {s:?}"));
+    }
+    Ok(Some(Duration::from_micros((n * mult_us).round() as u64)))
+}
+
+/// Parse a comma-separated integer traffic mix (one weight per class),
+/// e.g. `20,20,60`. Weights are relative, not percentages.
+pub fn parse_mix(spec: &str) -> crate::Result<Vec<u32>> {
+    let mix: Vec<u32> = spec
+        .split(',')
+        .map(|s| s.trim().parse::<u32>())
+        .collect::<Result<_, _>>()
+        .map_err(|_| anyhow::anyhow!("bad class mix {spec:?} (want e.g. 20,20,60)"))?;
+    anyhow::ensure!(mix.iter().any(|&w| w > 0), "class mix is all zeros: {spec:?}");
+    Ok(mix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_units_names_and_best_effort() {
+        let t = parse_classes("interactive=2500us, 20ms ,bulk=best-effort").unwrap();
+        assert_eq!(t[0], SloClass::new("interactive", Duration::from_micros(2500)));
+        assert_eq!(t[1], SloClass::new("class1", Duration::from_millis(20)));
+        assert_eq!(t[2], SloClass::best_effort("bulk"));
+        // A bare number is microseconds; a bare `1s` is a second.
+        let t = parse_classes("1500,1s").unwrap();
+        assert_eq!(t[0].deadline_us(), Some(1500));
+        assert_eq!(t[1].deadline_us(), Some(1_000_000));
+    }
+
+    #[test]
+    fn rejects_garbage_and_empty() {
+        assert!(parse_classes("").is_err());
+        assert!(parse_classes("fast=quick").is_err());
+        assert!(parse_classes("-3ms").is_err());
+    }
+
+    #[test]
+    fn mix_parses_and_validates() {
+        assert_eq!(parse_mix("20,20,60").unwrap(), vec![20, 20, 60]);
+        assert!(parse_mix("0,0").is_err());
+        assert!(parse_mix("a,b").is_err());
+    }
+}

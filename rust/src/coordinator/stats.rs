@@ -1,15 +1,21 @@
 //! Serving statistics: counters, latency distributions, batch-size
-//! histogram and per-replica occupancy.
+//! histogram, per-replica occupancy and per-SLO-class accounting.
 //!
 //! Two latency distributions are kept. *Queue* latency (submit → dispatch)
 //! is the price of batching and backpressure; *total* latency (submit →
 //! response) adds execution. Comparing the two shows whether a latency
 //! problem is a scheduling problem or an engine problem.
+//!
+//! Admission control reads two extra low-cost signals maintained here:
+//! a recent-window queue-latency p99 and an EWMA of per-request execution
+//! time, published as atomics so the submit path never takes the latency
+//! locks.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::coordinator::SloClass;
 use crate::metrics::{BatchHistogram, LatencyStats};
 
 /// Point-in-time view of a running (or just-shut-down) server.
@@ -19,8 +25,12 @@ pub struct StatsSnapshot {
     pub submitted: u64,
     /// Responses delivered (successes *and* engine errors).
     pub completed: u64,
-    /// Requests refused with `ServerError::Overloaded` (not in `submitted`).
+    /// Requests shed with `ServerError::Overloaded` (not in `submitted`) —
+    /// refused pushes plus lower-priority evictions.
     pub rejected: u64,
+    /// Requests shed *before queueing* with `ServerError::DeadlineUnmeetable`
+    /// (not in `submitted`, disjoint from `rejected`).
+    pub deadline_rejected: u64,
     /// Batches executed across all replicas.
     pub batches: u64,
     /// Frames that ran inside multi-frame batches.
@@ -32,10 +42,25 @@ pub struct StatsSnapshot {
     /// Submit→dispatch (time spent queued, the batching delay).
     pub queue_p50_us: Option<u64>,
     pub queue_p99_us: Option<u64>,
+    /// Queue-latency p99 over the most recent dispatch window — the
+    /// admission-control and autoscaling signal (decays after a burst,
+    /// unlike the run-cumulative `queue_p99_us`).
+    pub queue_p99_recent_us: Option<u64>,
+    /// Queue-latency samples recorded. Only *dispatched* requests record
+    /// queue latency, so `queue_samples == completed` proves shed requests
+    /// never occupied the queue (shed-before-queue).
+    pub queue_samples: u64,
     /// `batch_hist[i]` = number of executed batches of size `i + 1`.
     pub batch_hist: Vec<u64>,
+    /// Replicas currently receiving new batches (≤ `replicas.len()`).
+    pub active_replicas: u64,
+    /// Autoscaler activations / deactivations applied this run.
+    pub scale_ups: u64,
+    pub scale_downs: u64,
     /// One entry per replica, in spec order.
     pub replicas: Vec<ReplicaStats>,
+    /// One entry per SLO class, priority order (index = priority).
+    pub classes: Vec<ClassStats>,
 }
 
 impl StatsSnapshot {
@@ -68,18 +93,32 @@ impl StatsSnapshot {
         }
     }
 
+    /// Total requests shed for any reason (overload + deadline).
+    pub fn total_shed(&self) -> u64 {
+        self.rejected + self.deadline_rejected
+    }
+
     /// Re-register this snapshot as first-class metrics: gauges for the
     /// counters and latency percentiles, the batch-size histogram as a
-    /// real [`crate::obs::Histogram`] (one bucket per size). Gauges are
-    /// last-write-wins, but the histogram import is cumulative — call
-    /// once per run (the `profile`/`serve` exports do, at shutdown).
+    /// real [`crate::obs::Histogram`] (one bucket per size). The export is
+    /// idempotent: gauges are last-write-wins and the histogram import
+    /// only adds the *delta* against what the registry already holds, so
+    /// periodic re-export during a run never double-counts.
     pub fn export_metrics(&self, reg: &crate::obs::Registry) {
         reg.set_gauge("flow_serve_submitted", "requests accepted into the queue", self.submitted as f64);
         reg.set_gauge("flow_serve_completed", "responses delivered", self.completed as f64);
         reg.set_gauge("flow_serve_rejected", "requests shed by backpressure", self.rejected as f64);
+        reg.set_gauge(
+            "flow_serve_deadline_rejected",
+            "requests shed before queueing (deadline unmeetable)",
+            self.deadline_rejected as f64,
+        );
         reg.set_gauge("flow_serve_batches", "batches executed", self.batches as f64);
         reg.set_gauge("flow_serve_batched_frames", "frames inside multi-frame batches", self.batched_frames as f64);
         reg.set_gauge("flow_serve_mean_batch_size", "mean frames per executed batch", self.mean_batch_size());
+        reg.set_gauge("flow_serve_active_replicas", "replicas receiving new batches", self.active_replicas as f64);
+        reg.set_gauge("flow_serve_scale_ups", "autoscaler activations", self.scale_ups as f64);
+        reg.set_gauge("flow_serve_scale_downs", "autoscaler deactivations", self.scale_downs as f64);
         if let Some(p) = self.p50_us {
             reg.set_gauge("flow_serve_latency_p50_us", "submit-to-response p50", p as f64);
         }
@@ -98,8 +137,15 @@ impl StatsSnapshot {
         if !self.batch_hist.is_empty() {
             let bounds: Vec<f64> = (1..=self.batch_hist.len()).map(|i| i as f64).collect();
             let h = reg.histogram("flow_serve_batch_size", "frames per executed batch", &bounds);
+            // Delta import: bucket for size i+1 is index i (bounds are
+            // 1..=len). Adding only what the registry has not yet seen
+            // keeps repeated exports from double-counting.
+            let have = h.bucket_counts();
             for (i, &n) in self.batch_hist.iter().enumerate() {
-                h.observe_n((i + 1) as f64, n);
+                let already = have.get(i).copied().unwrap_or(0);
+                if n > already {
+                    h.observe_n((i + 1) as f64, n - already);
+                }
             }
         }
         for (i, r) in self.replicas.iter().enumerate() {
@@ -113,6 +159,25 @@ impl StatsSnapshot {
                 &format!("busy fraction of replica {}", r.name),
                 r.occupancy,
             );
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            reg.set_gauge(
+                &format!("flow_serve_class_{i}_completed"),
+                &format!("responses delivered for class {}", c.name),
+                c.completed as f64,
+            );
+            reg.set_gauge(
+                &format!("flow_serve_class_{i}_shed"),
+                &format!("requests shed for class {}", c.name),
+                c.shed_total() as f64,
+            );
+            if let Some(p) = c.p99_us {
+                reg.set_gauge(
+                    &format!("flow_serve_class_{i}_latency_p99_us"),
+                    &format!("submit-to-response p99 for class {}", c.name),
+                    p as f64,
+                );
+            }
         }
     }
 }
@@ -131,6 +196,53 @@ pub struct ReplicaStats {
     pub occupancy: f64,
 }
 
+/// Per-SLO-class serving statistics (index in
+/// [`StatsSnapshot::classes`] = priority, 0 highest).
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    pub name: String,
+    /// Deadline budget, if the class has one.
+    pub deadline_us: Option<u64>,
+    /// Requests of this class accepted into the queue.
+    pub submitted: u64,
+    /// Responses delivered for this class.
+    pub completed: u64,
+    /// Shed under queue pressure (refused or evicted), answered
+    /// `Overloaded`.
+    pub shed_overload: u64,
+    /// Shed before queueing, answered `DeadlineUnmeetable`.
+    pub shed_deadline: u64,
+    /// Submit→response percentiles for this class alone.
+    pub p50_us: Option<u64>,
+    pub p99_us: Option<u64>,
+}
+
+impl ClassStats {
+    /// Requests of this class shed for any reason.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_overload + self.shed_deadline
+    }
+
+    /// Shed fraction of everything offered to this class (0.0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.submitted + self.shed_total();
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed_total() as f64 / offered as f64
+        }
+    }
+
+    /// Whether the completed-request p99 met the class deadline (vacuously
+    /// true for best-effort classes or before any completion).
+    pub fn slo_met(&self) -> bool {
+        match (self.deadline_us, self.p99_us) {
+            (Some(budget), Some(p99)) => p99 <= budget,
+            _ => true,
+        }
+    }
+}
+
 pub(crate) struct ReplicaShared {
     pub(crate) name: String,
     pub(crate) batches: AtomicU64,
@@ -138,30 +250,89 @@ pub(crate) struct ReplicaShared {
     pub(crate) busy_us: AtomicU64,
 }
 
+/// Per-class shared counters (see [`ClassStats`] for field meanings).
+pub(crate) struct ClassShared {
+    pub(crate) name: String,
+    pub(crate) deadline_us: Option<u64>,
+    pub(crate) submitted: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    pub(crate) shed_overload: AtomicU64,
+    pub(crate) shed_deadline: AtomicU64,
+    pub(crate) latency: Mutex<LatencyStats>,
+}
+
+impl ClassShared {
+    fn new(c: &SloClass) -> ClassShared {
+        ClassShared {
+            name: c.name.clone(),
+            deadline_us: c.deadline_us(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed_overload: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
+            latency: Mutex::new(LatencyStats::default()),
+        }
+    }
+}
+
+/// How many trailing queue-latency samples feed the recent-window p99.
+pub(crate) const RECENT_WINDOW: usize = 128;
+
 /// Shared server-wide counters, written by submitters, the dispatcher and
 /// every replica worker.
 pub(crate) struct Shared {
     pub(crate) started: Instant,
+    /// Uptime in µs frozen at shutdown; 0 while running. Post-drain
+    /// snapshots divide occupancy by the frozen value so it stops decaying
+    /// once the server is down.
+    pub(crate) uptime_frozen_us: AtomicU64,
     pub(crate) submitted: AtomicU64,
     pub(crate) completed: AtomicU64,
     pub(crate) rejected: AtomicU64,
+    pub(crate) deadline_rejected: AtomicU64,
     pub(crate) batches: AtomicU64,
     pub(crate) batched_frames: AtomicU64,
+    /// Admission signals: recent queue-latency p99 (dispatcher-maintained)
+    /// and an EWMA of per-request execution time (worker-maintained), both
+    /// µs. Zero means "no signal yet" — admission then admits.
+    pub(crate) queue_p99_recent_us: AtomicU64,
+    pub(crate) exec_ewma_us: AtomicU64,
+    /// Replicas currently receiving new batches + autoscaler change counts.
+    pub(crate) active: AtomicUsize,
+    pub(crate) scale_ups: AtomicU64,
+    pub(crate) scale_downs: AtomicU64,
     pub(crate) latency: Mutex<LatencyStats>,
     pub(crate) queue_latency: Mutex<LatencyStats>,
     pub(crate) batch_hist: Mutex<BatchHistogram>,
     pub(crate) replicas: Vec<ReplicaShared>,
+    pub(crate) classes: Vec<ClassShared>,
 }
 
 impl Shared {
     pub(crate) fn new(replica_names: Vec<String>, max_batch: usize) -> Shared {
+        Shared::with_classes(replica_names, max_batch, &SloClass::default_table())
+    }
+
+    pub(crate) fn with_classes(
+        replica_names: Vec<String>,
+        max_batch: usize,
+        classes: &[SloClass],
+    ) -> Shared {
+        let n_replicas = replica_names.len();
         Shared {
             started: Instant::now(),
+            uptime_frozen_us: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            deadline_rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_frames: AtomicU64::new(0),
+            queue_p99_recent_us: AtomicU64::new(0),
+            exec_ewma_us: AtomicU64::new(0),
+            active: AtomicUsize::new(n_replicas),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
             latency: Mutex::new(LatencyStats::default()),
             queue_latency: Mutex::new(LatencyStats::default()),
             batch_hist: Mutex::new(BatchHistogram::new(max_batch)),
@@ -174,17 +345,52 @@ impl Shared {
                     busy_us: AtomicU64::new(0),
                 })
                 .collect(),
+            classes: classes.iter().map(ClassShared::new).collect(),
         }
+    }
+
+    /// Freeze the occupancy denominator at the current uptime. First call
+    /// wins; snapshots taken any time later use the frozen value, so a
+    /// post-shutdown snapshot equals the at-shutdown one instead of
+    /// silently decaying toward zero as wall-clock time keeps passing.
+    pub(crate) fn freeze_uptime(&self) {
+        let now = self.started.elapsed().as_micros().max(1) as u64;
+        let _ = self.uptime_frozen_us.compare_exchange(0, now, Ordering::Relaxed, Ordering::Relaxed);
+    }
+
+    /// Record one request's execution time into the admission EWMA
+    /// (α = 1/8; racy read-modify-write is fine for a smoothing signal).
+    pub(crate) fn record_exec_ewma(&self, exec_us: u64) {
+        let prev = self.exec_ewma_us.load(Ordering::Relaxed);
+        let next = if prev == 0 { exec_us.max(1) } else { (prev * 7 + exec_us) / 8 };
+        self.exec_ewma_us.store(next.max(1), Ordering::Relaxed);
+    }
+
+    /// Total latency the admission check predicts for a request submitted
+    /// now: recent queue p99 plus twice the execution EWMA (a queued
+    /// request waits for the in-flight batch, then its own). Zero until
+    /// both signals exist — cold starts admit everything.
+    pub(crate) fn predicted_total_us(&self) -> u64 {
+        let q = self.queue_p99_recent_us.load(Ordering::Relaxed);
+        let e = self.exec_ewma_us.load(Ordering::Relaxed);
+        q + 2 * e
     }
 
     pub(crate) fn snapshot(&self) -> StatsSnapshot {
         let latency = self.latency.lock().unwrap();
         let queue = self.queue_latency.lock().unwrap();
-        let uptime_us = self.started.elapsed().as_micros().max(1) as u64;
+        let frozen = self.uptime_frozen_us.load(Ordering::Relaxed);
+        let uptime_us = if frozen > 0 {
+            frozen
+        } else {
+            self.started.elapsed().as_micros().max(1) as u64
+        };
+        let recent = self.queue_p99_recent_us.load(Ordering::Relaxed);
         StatsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_rejected: self.deadline_rejected.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_frames: self.batched_frames.load(Ordering::Relaxed),
             p50_us: latency.percentile(50.0),
@@ -192,7 +398,12 @@ impl Shared {
             mean_us: latency.mean(),
             queue_p50_us: queue.percentile(50.0),
             queue_p99_us: queue.percentile(99.0),
+            queue_p99_recent_us: if recent > 0 { Some(recent) } else { None },
+            queue_samples: queue.count() as u64,
             batch_hist: self.batch_hist.lock().unwrap().counts().to_vec(),
+            active_replicas: self.active.load(Ordering::Relaxed) as u64,
+            scale_ups: self.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.scale_downs.load(Ordering::Relaxed),
             replicas: self
                 .replicas
                 .iter()
@@ -207,6 +418,121 @@ impl Shared {
                     }
                 })
                 .collect(),
+            classes: self
+                .classes
+                .iter()
+                .map(|c| {
+                    let lat = c.latency.lock().unwrap();
+                    ClassStats {
+                        name: c.name.clone(),
+                        deadline_us: c.deadline_us,
+                        submitted: c.submitted.load(Ordering::Relaxed),
+                        completed: c.completed.load(Ordering::Relaxed),
+                        shed_overload: c.shed_overload.load(Ordering::Relaxed),
+                        shed_deadline: c.shed_deadline.load(Ordering::Relaxed),
+                        p50_us: lat.percentile(50.0),
+                        p99_us: lat.percentile(99.0),
+                    }
+                })
+                .collect(),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn occupancy_is_frozen_at_shutdown() {
+        let shared = Shared::new(vec!["r0".into()], 4);
+        shared.replicas[0].busy_us.store(10_000, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(20));
+        shared.freeze_uptime();
+        let at_shutdown = shared.snapshot();
+        assert!(at_shutdown.replicas[0].occupancy > 0.0);
+        // Regression: post-shutdown wall time must not dilute occupancy.
+        std::thread::sleep(Duration::from_millis(40));
+        let later = shared.snapshot();
+        assert_eq!(
+            later.replicas[0].occupancy, at_shutdown.replicas[0].occupancy,
+            "occupancy decayed after shutdown"
+        );
+        // First freeze wins: a second freeze is a no-op.
+        shared.freeze_uptime();
+        assert_eq!(shared.snapshot().replicas[0].occupancy, at_shutdown.replicas[0].occupancy);
+    }
+
+    #[test]
+    fn occupancy_decays_while_running() {
+        // Sanity check of the inverse: without a freeze, the denominator
+        // is live (this is the behaviour snapshots during a run rely on).
+        let shared = Shared::new(vec!["r0".into()], 4);
+        shared.replicas[0].busy_us.store(10_000, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(10));
+        let a = shared.snapshot().replicas[0].occupancy;
+        std::thread::sleep(Duration::from_millis(30));
+        let b = shared.snapshot().replicas[0].occupancy;
+        assert!(b < a, "live occupancy should decay while idle: {a} vs {b}");
+    }
+
+    #[test]
+    fn export_metrics_is_idempotent_for_the_batch_histogram() {
+        let snap = StatsSnapshot {
+            batches: 6,
+            batch_hist: vec![3, 0, 2, 1],
+            ..Default::default()
+        };
+        let reg = crate::obs::Registry::new();
+        snap.export_metrics(&reg);
+        let h = reg.histogram("flow_serve_batch_size", "", &[]);
+        assert_eq!(h.count(), 6);
+        // Regression: repeated export must not double-count.
+        snap.export_metrics(&reg);
+        snap.export_metrics(&reg);
+        assert_eq!(h.count(), 6, "repeated export double-counted the histogram");
+        // A *grown* histogram imports only the delta.
+        let grown = StatsSnapshot {
+            batches: 8,
+            batch_hist: vec![4, 0, 2, 2],
+            ..Default::default()
+        };
+        grown.export_metrics(&reg);
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.bucket_counts()[0], 4);
+        assert_eq!(h.bucket_counts()[3], 2);
+    }
+
+    #[test]
+    fn class_stats_helpers() {
+        let c = ClassStats {
+            deadline_us: Some(10_000),
+            submitted: 80,
+            completed: 80,
+            shed_overload: 15,
+            shed_deadline: 5,
+            p99_us: Some(9_000),
+            ..Default::default()
+        };
+        assert_eq!(c.shed_total(), 20);
+        assert!((c.shed_rate() - 0.2).abs() < 1e-9);
+        assert!(c.slo_met());
+        let missed = ClassStats { deadline_us: Some(1_000), p99_us: Some(2_000), ..Default::default() };
+        assert!(!missed.slo_met());
+        let best_effort = ClassStats { p99_us: Some(1_000_000), ..Default::default() };
+        assert!(best_effort.slo_met());
+    }
+
+    #[test]
+    fn predicted_total_combines_signals_and_cold_start_is_zero() {
+        let shared = Shared::new(vec![], 1);
+        assert_eq!(shared.predicted_total_us(), 0);
+        shared.queue_p99_recent_us.store(5_000, Ordering::Relaxed);
+        shared.record_exec_ewma(1_000);
+        assert_eq!(shared.predicted_total_us(), 5_000 + 2 * 1_000);
+        // EWMA smooths: a spike moves the estimate 1/8 of the way.
+        shared.record_exec_ewma(9_000);
+        assert_eq!(shared.exec_ewma_us.load(Ordering::Relaxed), 2_000);
     }
 }

@@ -241,6 +241,33 @@ impl ReplicaPlan {
         Ok(ReplicaPlan { network: graph.name.clone(), entries })
     }
 
+    /// [`ReplicaPlan::build_with`] for a fleet of `replicas` boards cycling
+    /// through `targets` (replica `i` runs `targets[i % len]`). Each
+    /// *distinct* target compiles exactly once — a 16-replica homogeneous
+    /// fleet costs one compile, not sixteen — and the compiled entry is
+    /// cloned into every replica slot that names it.
+    pub fn build_cycled(
+        graph: &Graph,
+        targets: &[&str],
+        replicas: usize,
+        quant: Option<crate::quant::QuantConfig>,
+    ) -> crate::Result<ReplicaPlan> {
+        anyhow::ensure!(!targets.is_empty(), "replica plan needs at least one target");
+        let replicas = replicas.max(1);
+        let mut distinct: Vec<&str> = Vec::new();
+        for t in targets {
+            if !distinct.contains(t) {
+                distinct.push(t);
+            }
+        }
+        let base = ReplicaPlan::build_with(graph, &distinct, quant)?;
+        let by_name: std::collections::BTreeMap<&str, ReplicaPlanEntry> =
+            distinct.into_iter().zip(base.entries).collect();
+        let entries =
+            (0..replicas).map(|i| by_name[targets[i % targets.len()]].clone()).collect();
+        Ok(ReplicaPlan { network: base.network, entries })
+    }
+
     /// Routing weights, in entry order.
     pub fn weights(&self) -> Vec<f64> {
         self.entries.iter().map(|e| e.weight).collect()
@@ -558,6 +585,23 @@ mod tests {
         assert!(w.iter().all(|&x| x > 0.0));
         // Different boards must not collapse to identical modeled FPS.
         assert!(w.iter().any(|&x| (x - w[0]).abs() > 1e-9), "{w:?}");
+    }
+
+    #[test]
+    fn replica_plan_cycles_targets_compiling_each_once() {
+        let g = models::lenet5();
+        let plan =
+            ReplicaPlan::build_cycled(&g, &["stratix10sx", "arria10gx"], 5, None).unwrap();
+        assert_eq!(plan.entries.len(), 5);
+        let names: Vec<&str> =
+            plan.entries.iter().map(|e| e.target.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["stratix10sx", "arria10gx", "stratix10sx", "arria10gx", "stratix10sx"]
+        );
+        // Cloned slots carry identical compiles (same modeled weight).
+        assert_eq!(plan.entries[0].weight, plan.entries[2].weight);
+        assert_eq!(plan.entries[1].weight, plan.entries[3].weight);
     }
 
     #[test]

@@ -24,7 +24,16 @@
 //!                    [--max-batch 8] [--max-delay-us 2000]
 //!                    [--queue-capacity 1024] [--engine sim|pjrt]
 //!                    [--targets stratix10sx,arria10gx] [--precision int8]
-//!                    [--time-scale 1]
+//!                    [--time-scale 1] [--classes gold=20ms,best-effort]
+//!                    [--autoscale min,max[,up_us,down_us]]
+//!                    [--trace trace.json]  # replay a recorded trace
+//! fpga-flow loadgen  --net lenet5 [--replicas 2] [--pattern bursty|diurnal]
+//!                    [--requests 512] [--burst 64] [--period-us 20000]
+//!                    [--classes gold=20ms,silver=100ms,bulk=best-effort]
+//!                    [--mix 1,3,6] [--trace in.json] [--save-trace out.json]
+//!                    [--out report.json] [--json]
+//!                    # replay a bursty/diurnal trace against a SimEngine
+//!                    # fleet; per-class latency + shed-rate report
 //! fpga-flow hybrid   --net mobilenet_v1      # mixed pipelined/folded (§V-F)
 //! fpga-flow multi    --net resnet34 --devices 2  # multi-FPGA (§VII)
 //! fpga-flow partition --net resnet34 --devices stratix10sx,arria10gx
@@ -48,7 +57,9 @@
 //! the run with the `obs` tracer and writes a Chrome trace-event JSON
 //! (load it at <https://ui.perfetto.dev>); see docs/OBSERVABILITY.md.
 
-use tvm_fpga_flow::coordinator::{EngineSpec, InferenceServer, ServerConfig, ServerError, SimEngine};
+use tvm_fpga_flow::coordinator::{
+    slo, EngineSpec, HysteresisPolicy, InferenceServer, ServerConfig, ServerError, SimEngine,
+};
 use tvm_fpga_flow::device::Target;
 use tvm_fpga_flow::dse;
 use tvm_fpga_flow::flow::{Compiler, Mode, ModeChoice, OptConfig, OptLevel};
@@ -86,6 +97,7 @@ fn main() {
         "quantize" => cmd_quantize(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "hybrid" => cmd_hybrid(&args),
         "multi" => cmd_multi(&args),
         "partition" => cmd_partition(&args),
@@ -164,11 +176,24 @@ fn print_help() {
          serve     --net <n> --requests 256 [--replicas 2] [--max-batch 8]\n\
                    [--max-delay-us 2000] [--queue-capacity 1024]\n\
                    [--engine sim|pjrt] [--targets t1,t2,...] [--precision int8]\n\
-                   [--time-scale 1]\n\
+                   [--time-scale 1] [--classes gold=20ms,best-effort]\n\
+                   [--autoscale min,max[,up_us,down_us]] [--trace t.json]\n\
                    sim (default): replicas are modeled accelerators compiled for\n\
                    --targets (cycled to --replicas), weighted by modeled FPS —\n\
                    works without artifacts. pjrt: --replicas identical runtime\n\
-                   workers over artifacts/.\n\
+                   workers over artifacts/. --classes adds SLO admission\n\
+                   control (deadline-unmeetable requests shed before\n\
+                   queueing); --trace replays a recorded trace instead of\n\
+                   the closed-loop driver.\n\
+         loadgen   --net <n> [--replicas 2] [--pattern bursty|diurnal]\n\
+                   [--requests 512] [--burst 64] [--period-us 20000]\n\
+                   [--span-us 1000000] [--cycles 2] [--seed 42] [--scale 1]\n\
+                   [--classes gold=20ms,silver=100ms,bulk=best-effort]\n\
+                   [--mix 1,3,6] [--trace in.json] [--save-trace out.json]\n\
+                   [--autoscale min,max] [--out report.json] [--json]\n\
+                   synthesize (or load) a request trace and replay it\n\
+                   against a SimEngine fleet at trace pacing; prints the\n\
+                   per-class latency/shed report (docs/CLI.md)\n\
          hybrid    --net <n>                       mixed pipelined/folded (§V-F)\n\
          multi     --net <n> --devices 2           multi-FPGA partition (§VII)\n\
          partition --net <n> --devices t1,t2,... [--stages K]\n\
@@ -1137,11 +1162,71 @@ fn cmd_validate() -> tvm_fpga_flow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
+/// Build the sim fleet both `serve` and `loadgen` use: compile the
+/// network once per distinct `--targets` entry, cycle the compiled
+/// entries to `replicas` slots, and print the plan.
+fn sim_fleet(
+    args: &Args,
+    replicas: usize,
+    max_batch: usize,
+    time_scale: f64,
+) -> tvm_fpga_flow::Result<Vec<EngineSpec>> {
     use tvm_fpga_flow::flow::multi::ReplicaPlan;
 
+    let g = net_arg(args)?;
+    let target_csv = args.opt_or("targets", "stratix10sx").to_string();
+    let targets: Vec<&str> = target_csv.split(',').filter(|s| !s.is_empty()).collect();
+    anyhow::ensure!(!targets.is_empty(), "--targets must name at least one target");
+    let qcfg = match precision_arg(args)? {
+        Some(p) if p != Precision::F32 => Some(quant_cfg_args(args, p)?),
+        _ => None,
+    };
+    let plan = ReplicaPlan::build_cycled(&g, &targets, replicas, qcfg)?;
+    println!("replica plan for {}:", g.name);
+    for e in &plan.entries {
+        println!(
+            "  {:<12} {} mode ({}), modeled {:.1} FPS (routing weight)",
+            e.target.name,
+            e.accelerator.mode.name(),
+            e.accelerator.precision,
+            e.weight
+        );
+    }
+    Ok(SimEngine::from_plan(&plan, &g, max_batch)?
+        .into_iter()
+        .map(|e| EngineSpec::Sim(e.with_time_scale(time_scale)))
+        .collect())
+}
+
+/// `--classes` → the SLO table (empty = the server's single best-effort
+/// default).
+fn classes_arg(args: &Args) -> tvm_fpga_flow::Result<Vec<tvm_fpga_flow::coordinator::SloClass>> {
+    match args.opt("classes") {
+        Some(spec) => slo::parse_classes(spec),
+        None => Ok(Vec::new()),
+    }
+}
+
+/// `--autoscale min,max[,up_us,down_us]` → a hysteresis policy.
+fn autoscale_arg(args: &Args) -> tvm_fpga_flow::Result<Option<HysteresisPolicy>> {
+    let Some(spec) = args.opt("autoscale") else { return Ok(None) };
+    let parts: Vec<&str> = spec.split(',').map(str::trim).collect();
+    anyhow::ensure!(
+        parts.len() == 2 || parts.len() == 4,
+        "--autoscale wants min,max or min,max,up_us,down_us (got {spec:?})"
+    );
+    let num = |s: &str| {
+        s.parse::<u64>().map_err(|_| anyhow::anyhow!("bad --autoscale component {s:?}"))
+    };
+    let (min, max) = (num(parts[0])? as usize, num(parts[1])? as usize);
+    let (up_us, down_us) =
+        if parts.len() == 4 { (num(parts[2])?, num(parts[3])?) } else { (5_000, 500) };
+    anyhow::ensure!(min >= 1 && max >= min, "--autoscale needs 1 <= min <= max");
+    Ok(Some(HysteresisPolicy::new(min, max, up_us, down_us)))
+}
+
+fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
     let name = args.opt_or("net", "lenet5").to_string();
-    let requests: usize = args.opt_parse("requests").unwrap_or(256);
     // `--workers` is the pre-replica name for the same knob.
     let replicas: usize = args
         .opt_parse("replicas")
@@ -1155,34 +1240,7 @@ fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
     let engine = args.opt_or("engine", "sim");
 
     let specs: Vec<EngineSpec> = match engine {
-        "sim" => {
-            // Compile the network for each requested target through the
-            // staged flow; replicas cycle through the target list.
-            let g = net_arg(args)?;
-            let target_csv = args.opt_or("targets", "stratix10sx").to_string();
-            let targets: Vec<&str> = target_csv.split(',').filter(|s| !s.is_empty()).collect();
-            anyhow::ensure!(!targets.is_empty(), "--targets must name at least one target");
-            let cycled: Vec<&str> = (0..replicas).map(|i| targets[i % targets.len()]).collect();
-            let qcfg = match precision_arg(args)? {
-                Some(p) if p != Precision::F32 => Some(quant_cfg_args(args, p)?),
-                _ => None,
-            };
-            let plan = ReplicaPlan::build_with(&g, &cycled, qcfg)?;
-            println!("replica plan for {name}:");
-            for e in &plan.entries {
-                println!(
-                    "  {:<12} {} mode ({}), modeled {:.1} FPS (routing weight)",
-                    e.target.name,
-                    e.accelerator.mode.name(),
-                    e.accelerator.precision,
-                    e.weight
-                );
-            }
-            SimEngine::from_plan(&plan, &g, max_batch)?
-                .into_iter()
-                .map(|e| EngineSpec::Sim(e.with_time_scale(time_scale)))
-                .collect()
-        }
+        "sim" => sim_fleet(args, replicas, max_batch, time_scale)?,
         // Empty spec list = the legacy homogeneous PJRT fleet.
         "pjrt" => {
             anyhow::ensure!(
@@ -1201,55 +1259,73 @@ fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
         max_wait: std::time::Duration::from_micros(max_delay_us),
         queue_capacity,
         replicas: specs,
+        classes: classes_arg(args)?,
+        autoscale: autoscale_arg(args)?,
         ..Default::default()
     })?;
 
+    let requests: usize = args.opt_parse("requests").unwrap_or(256);
     let data = tvm_fpga_flow::data::for_network(&name, requests.min(512), 1)
         .ok_or_else(|| anyhow::anyhow!("no data generator for {name}"))?;
     let t0 = std::time::Instant::now();
-    let mut pending = std::collections::VecDeque::new();
-    for i in 0..requests {
-        let frame = data.frame(i % data.frames()).to_vec();
-        let mut frame = Some(frame);
-        loop {
-            match server.infer_async(frame.take().expect("frame present")) {
-                Ok(rx) => {
-                    pending.push_back(rx);
-                    break;
+    if let Some(path) = args.opt("trace") {
+        // Replay a recorded trace (open-loop, trace-paced) instead of the
+        // closed-loop synthetic driver.
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace {path}: {e}"))?;
+        let trace = tvm_fpga_flow::coordinator::loadgen::LoadTrace::parse(&text)?
+            .scaled(args.opt_parse("scale").unwrap_or(1.0));
+        let frames: Vec<Vec<f32>> = (0..data.frames()).map(|i| data.frame(i).to_vec()).collect();
+        let report = tvm_fpga_flow::coordinator::loadgen::replay(&server, &trace, &frames);
+        print!("{}", report.render());
+    } else {
+        let mut pending = std::collections::VecDeque::new();
+        for i in 0..requests {
+            let frame = data.frame(i % data.frames()).to_vec();
+            let mut frame = Some(frame);
+            loop {
+                match server.infer_async(frame.take().expect("frame present")) {
+                    Ok(rx) => {
+                        pending.push_back(rx);
+                        break;
+                    }
+                    // Backpressure: drain one in-flight response, then retry.
+                    Err(e)
+                        if matches!(
+                            e.downcast_ref::<ServerError>(),
+                            Some(ServerError::Overloaded { .. })
+                        ) =>
+                    {
+                        let rx = pending.pop_front().ok_or(e)?;
+                        rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+                        frame = Some(data.frame(i % data.frames()).to_vec());
+                    }
+                    Err(e) => return Err(e),
                 }
-                // Backpressure: drain one in-flight response, then retry.
-                Err(e)
-                    if matches!(
-                        e.downcast_ref::<ServerError>(),
-                        Some(ServerError::Overloaded { .. })
-                    ) =>
-                {
-                    let rx = pending.pop_front().ok_or(e)?;
-                    rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
-                    frame = Some(data.frame(i % data.frames()).to_vec());
-                }
-                Err(e) => return Err(e),
             }
         }
-    }
-    for rx in pending {
-        rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+        for rx in pending {
+            rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+        }
     }
     let dt = t0.elapsed().as_secs_f64();
     let stats = server.shutdown();
 
     println!(
-        "{requests} requests, {} replica(s), max_batch {max_batch}: {:.1} req/s",
+        "{} requests completed, {} replica(s) ({} active), max_batch {max_batch}: {:.1} req/s",
+        stats.completed,
         stats.replicas.len(),
-        requests as f64 / dt
+        stats.active_replicas,
+        stats.completed as f64 / dt
     );
     println!(
-        "latency: p50 {}µs  p99 {}µs   queued: p50 {}µs  p99 {}µs   rejected: {}",
+        "latency: p50 {}µs  p99 {}µs   queued: p50 {}µs  p99 {}µs   shed: {} overload + {} deadline",
         stats.p50_us.unwrap_or(0),
         stats.p99_us.unwrap_or(0),
         stats.queue_p50_us.unwrap_or(0),
         stats.queue_p99_us.unwrap_or(0),
-        stats.rejected
+        stats.rejected,
+        stats.deadline_rejected
     );
     println!(
         "batches: {} (mean size {:.2})  histogram: {}",
@@ -1257,6 +1333,17 @@ fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
         stats.mean_batch_size(),
         stats.batch_hist_render()
     );
+    if stats.classes.len() > 1 {
+        for (i, c) in stats.classes.iter().enumerate() {
+            println!(
+                "  class {i} {:<12} completed {:>6}  shed {:>5}  p99 {}µs",
+                c.name,
+                c.completed,
+                c.shed_total(),
+                c.p99_us.unwrap_or(0)
+            );
+        }
+    }
     for r in &stats.replicas {
         println!(
             "  {:<24} {:>6} batches {:>7} frames  occupancy {:>5.1}%",
@@ -1265,6 +1352,108 @@ fn cmd_serve(args: &Args) -> tvm_fpga_flow::Result<()> {
             r.frames,
             r.occupancy * 100.0
         );
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> tvm_fpga_flow::Result<()> {
+    use tvm_fpga_flow::coordinator::loadgen::{self, LoadTrace};
+
+    let name = args.opt_or("net", "lenet5").to_string();
+    let replicas: usize = args.opt_parse("replicas").unwrap_or(2).max(1);
+    let max_batch: usize = args.opt_parse("max-batch").unwrap_or(8).max(1);
+    let max_delay_us: u64 = args.opt_parse("max-delay-us").unwrap_or(2000);
+    let queue_capacity: usize = args.opt_parse("queue-capacity").unwrap_or(64);
+    let time_scale: f64 = args.opt_parse("time-scale").unwrap_or(1.0);
+    let classes =
+        slo::parse_classes(args.opt_or("classes", "gold=20ms,silver=100ms,bulk=best-effort"))?;
+    let mix = slo::parse_mix(args.opt_or("mix", "1,3,6"))?;
+    anyhow::ensure!(
+        mix.len() <= classes.len(),
+        "--mix names {} classes but the table has {}",
+        mix.len(),
+        classes.len()
+    );
+    let seed: u64 = args.opt_parse("seed").unwrap_or(42);
+
+    let trace = match args.opt("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read trace {path}: {e}"))?;
+            LoadTrace::parse(&text)?
+        }
+        None => {
+            let requests: usize = args.opt_parse("requests").unwrap_or(512);
+            match args.opt_or("pattern", "bursty") {
+                "bursty" => LoadTrace::bursty(
+                    requests,
+                    args.opt_parse("burst").unwrap_or(64),
+                    args.opt_parse("period-us").unwrap_or(20_000),
+                    &mix,
+                    seed,
+                ),
+                "diurnal" => LoadTrace::diurnal(
+                    requests,
+                    args.opt_parse("span-us").unwrap_or(1_000_000),
+                    args.opt_parse("cycles").unwrap_or(2),
+                    &mix,
+                    seed,
+                ),
+                other => anyhow::bail!("unknown --pattern {other} (bursty|diurnal)"),
+            }
+        }
+    }
+    .scaled(args.opt_parse("scale").unwrap_or(1.0));
+    if let Some(path) = args.opt("save-trace") {
+        std::fs::write(path, trace.to_json().to_string())?;
+        eprintln!("trace: {} event(s) written to {path}", trace.events.len());
+    }
+
+    let specs = sim_fleet(args, replicas, max_batch, time_scale)?;
+    let server = InferenceServer::start(ServerConfig {
+        network: name.clone(),
+        workers: replicas,
+        max_batch,
+        max_wait: std::time::Duration::from_micros(max_delay_us),
+        queue_capacity,
+        replicas: specs,
+        classes,
+        autoscale: autoscale_arg(args)?,
+        ..Default::default()
+    })?;
+
+    let data = tvm_fpga_flow::data::for_network(&name, 64, 1)
+        .ok_or_else(|| anyhow::anyhow!("no data generator for {name}"))?;
+    let frames: Vec<Vec<f32>> = (0..data.frames()).map(|i| data.frame(i).to_vec()).collect();
+    println!(
+        "replaying {} event(s) ({:.0} rps offered) against {replicas} replica(s)...",
+        trace.events.len(),
+        trace.offered_rps()
+    );
+    let mut report = loadgen::replay(&server, &trace, &frames);
+    // Fold in the post-shutdown snapshot: the uptime denominator freezes
+    // and every in-flight response is accounted.
+    report.snapshot = server.shutdown();
+    if tvm_fpga_flow::obs::enabled() {
+        report.export_metrics(tvm_fpga_flow::obs::global_metrics());
+    }
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, report.to_json().to_string())?;
+        eprintln!("report: written to {path}");
+    }
+    if args.has_flag("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        print!("{}", report.render());
+        for r in &report.snapshot.replicas {
+            println!(
+                "  {:<24} {:>6} batches {:>7} frames  occupancy {:>5.1}%",
+                r.name,
+                r.batches,
+                r.frames,
+                r.occupancy * 100.0
+            );
+        }
     }
     Ok(())
 }

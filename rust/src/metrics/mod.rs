@@ -102,6 +102,20 @@ impl LatencyStats {
         }
         Some(self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64)
     }
+
+    /// Percentile over only the most recent `window` samples — a decaying
+    /// signal for admission control and autoscaling, where the
+    /// run-cumulative percentile would never recover after a burst.
+    pub fn recent_percentile(&self, window: usize, p: f64) -> Option<u64> {
+        if self.samples_us.is_empty() || window == 0 {
+            return None;
+        }
+        let tail = &self.samples_us[self.samples_us.len().saturating_sub(window)..];
+        let mut s = tail.to_vec();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        Some(s[idx.min(s.len() - 1)])
+    }
 }
 
 /// Batch-size histogram for the serving coordinator: how full the dynamic
@@ -216,5 +230,23 @@ mod tests {
         assert_eq!(l.percentile(0.0), Some(1));
         assert!((l.mean().unwrap() - 50.5).abs() < 1e-9);
         assert_eq!(LatencyStats::default().percentile(50.0), None);
+    }
+
+    #[test]
+    fn recent_percentile_sees_only_the_tail() {
+        let mut l = LatencyStats::default();
+        for _ in 0..100 {
+            l.record(1_000_000); // an old burst
+        }
+        for _ in 0..50 {
+            l.record(100); // recovered
+        }
+        // Cumulative p99 is still stuck at the burst; the recent window
+        // has decayed back down.
+        assert_eq!(l.percentile(99.0), Some(1_000_000));
+        assert_eq!(l.recent_percentile(50, 99.0), Some(100));
+        // A window larger than the history uses everything.
+        assert_eq!(l.recent_percentile(1_000, 50.0), Some(1_000_000));
+        assert_eq!(LatencyStats::default().recent_percentile(10, 99.0), None);
     }
 }

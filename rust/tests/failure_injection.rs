@@ -115,6 +115,7 @@ fn slow_stage_degrades_throughput_without_deadlock() {
         channel_depth: 2,
         queue_capacity: 64,
         time_scale: 1.0,
+        classes: Vec::new(),
     };
     let server = PipelineServer::start(cfg).expect("pipeline starts");
     let frame: Vec<f32> = (0..16).map(|i| i as f32).collect();
@@ -158,5 +159,167 @@ fn slow_stage_degrades_throughput_without_deadlock() {
     assert!(
         busy[1] > 3 * busy[0] && busy[1] > 3 * busy[2],
         "slow stage busy time must dominate: {busy:?}"
+    );
+}
+
+/// Chaos scenario for the replica fleet, under *replayed* load: one of
+/// two replicas panics mid-batch partway through the run. The fleet must
+/// (a) keep serving on the survivor, (b) lose only the requests that were
+/// physically in the dead replica's hands (its in-flight batch plus its
+/// one staged batch), and (c) keep every per-class count consistent —
+/// nothing silently vanishes.
+#[test]
+fn replica_kill_under_replayed_load_bounds_the_damage() {
+    use std::time::Duration;
+    use tvm_fpga_flow::coordinator::loadgen::{replay, LoadTrace};
+    use tvm_fpga_flow::coordinator::{
+        EngineSpec, InferenceServer, ServerConfig, SimEngine, SloClass,
+    };
+
+    const ELEMS: usize = 16;
+    const MAX_BATCH: usize = 8;
+    let engine = || {
+        SimEngine::new("sim", ELEMS, 10, MAX_BATCH, Duration::ZERO, Duration::from_micros(200))
+    };
+    let server = InferenceServer::start(ServerConfig {
+        replicas: vec![
+            EngineSpec::Sim(engine()),
+            EngineSpec::Sim(engine().with_chaos_kill_after(16)),
+        ],
+        max_batch: MAX_BATCH,
+        max_wait: Duration::from_micros(500),
+        queue_capacity: 256,
+        classes: vec![
+            SloClass::new("gold", Duration::from_millis(50)),
+            SloClass::new("silver", Duration::from_millis(200)),
+            SloClass::best_effort("bulk"),
+        ],
+        ..Default::default()
+    })
+    .unwrap();
+
+    // 200 arrivals over ~100 ms, 25% gold / 25% silver / 50% bulk — light
+    // enough that the healthy replica alone can absorb it.
+    let trace = LoadTrace::bursty(200, 20, 10_000, &[1, 1, 2], 7);
+    let frames: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; ELEMS]).collect();
+    let report = replay(&server, &trace, &frames);
+    let snap = server.shutdown();
+
+    // Client-side accounting closes per class: every request the trace
+    // offered is exactly one of answered / shed / errored / dropped.
+    // (`shed_overload` covers both submit-time refusals and
+    // post-acceptance evictions, so the identity is against `sent`.)
+    for c in &report.classes {
+        assert_eq!(c.sent, c.ok + c.errored + c.dropped + c.shed_total(), "{c:?}");
+    }
+    let accepted: u64 = report.classes.iter().map(|c| c.accepted).sum();
+    let dropped: u64 = report.classes.iter().map(|c| c.dropped).sum();
+    let ok: u64 = report.classes.iter().map(|c| c.ok).sum();
+    let errored: u64 = report.classes.iter().map(|c| c.errored).sum();
+    assert_eq!(errored, 0, "nothing in this scenario produces engine errors");
+
+    // The kill drops the batch mid-execution plus at most the one staged
+    // batch behind it — never more.
+    assert!(dropped >= 1, "the poisoned replica crossed 16 frames; its batch must drop");
+    assert!(
+        dropped <= 2 * MAX_BATCH as u64,
+        "a dead replica holds at most one executing + one staged batch, \
+         but {dropped} requests dropped"
+    );
+    // Everything else is answered: the survivor absorbed the rest.
+    assert_eq!(ok, accepted - dropped, "non-dropped requests must all answer");
+    assert_eq!(snap.completed, accepted - dropped);
+    assert!(
+        snap.replicas[0].frames > snap.replicas[1].frames,
+        "routing must flow around the corpse: {:?} vs {:?}",
+        snap.replicas[0].frames,
+        snap.replicas[1].frames
+    );
+    // Under this light load the gold SLO survives the crash.
+    if let Some(p99) = report.classes[0].p99_us {
+        assert!(p99 <= 50_000, "gold p99 {p99}us blew its 50ms budget despite spare capacity");
+    }
+}
+
+/// Chaos scenario: a hidden straggler. One replica silently runs 20x
+/// slower than the throughput model its routing weight advertises, while
+/// the trace offers more load than the degraded fleet can serve. The
+/// coordinator must keep the books balanced (no lost requests), shed the
+/// overload out of the *lowest* class, and keep answered gold traffic
+/// inside its SLO.
+#[test]
+fn slow_replica_sheds_low_class_first_and_keeps_gold_slo() {
+    use std::time::Duration;
+    use tvm_fpga_flow::coordinator::loadgen::{replay, LoadTrace};
+    use tvm_fpga_flow::coordinator::{
+        EngineSpec, InferenceServer, ServerConfig, SimEngine, SloClass,
+    };
+
+    const ELEMS: usize = 16;
+    let engine = || {
+        SimEngine::new("sim", ELEMS, 10, 8, Duration::ZERO, Duration::from_micros(500))
+    };
+    let server = InferenceServer::start(ServerConfig {
+        replicas: vec![
+            EngineSpec::Sim(engine()),
+            EngineSpec::Sim(engine().with_chaos_slowdown(20.0)),
+        ],
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_capacity: 32,
+        classes: vec![
+            SloClass::new("gold", Duration::from_millis(500)),
+            SloClass::new("silver", Duration::from_secs(1)),
+            SloClass::best_effort("bulk"),
+        ],
+        ..Default::default()
+    })
+    .unwrap();
+
+    // 300 arrivals in 50-request bursts every 5 ms — far past what the
+    // half-crippled fleet sustains, so the queue must overflow.
+    let trace = LoadTrace::bursty(300, 50, 5_000, &[1, 2, 7], 11);
+    let frames: Vec<Vec<f32>> = (0..8).map(|i| vec![0.5 + i as f32; ELEMS]).collect();
+    let report = replay(&server, &trace, &frames);
+    let snap = server.shutdown();
+
+    // Nothing vanishes: a straggler slows, it does not drop.
+    let dropped: u64 = report.classes.iter().map(|c| c.dropped).sum();
+    assert_eq!(dropped, 0, "a slow replica must not lose requests");
+    assert_eq!(snap.completed, snap.submitted, "books must balance at shutdown");
+
+    // The overload was real and the shedding landed on the bottom class.
+    let shed = report.total_shed();
+    assert!(shed > 0, "10x overload on a crippled fleet must shed something");
+    assert!(
+        report.shed_share(2) >= 0.5,
+        "bulk must absorb the bulk of the shedding: shares {:?}",
+        (0..3).map(|i| report.shed_share(i)).collect::<Vec<_>>()
+    );
+    assert!(
+        report.classes[0].shed_total() <= report.classes[2].shed_total(),
+        "gold must never shed more than bulk"
+    );
+
+    // Answered gold stays inside its budget even with the straggler in
+    // the rotation.
+    if let Some(p99) = report.classes[0].p99_us {
+        assert!(p99 <= 500_000, "gold p99 {p99}us blew its 500ms budget");
+    }
+
+    // The slowdown is invisible to the router's weight but visible in the
+    // fleet stats: the straggler soaks busy time while the healthy
+    // replica serves more frames via overflow routing.
+    assert!(
+        snap.replicas[0].frames > snap.replicas[1].frames,
+        "healthy replica must absorb overflow: {} vs {}",
+        snap.replicas[0].frames,
+        snap.replicas[1].frames
+    );
+    assert!(
+        snap.replicas[1].busy_us > snap.replicas[0].busy_us,
+        "straggler busy time must dominate: {} vs {}",
+        snap.replicas[1].busy_us,
+        snap.replicas[0].busy_us
     );
 }

@@ -1,0 +1,276 @@
+//! SLO admission-control and priority-queue tests: the concurrent
+//! property test for the priority [`BatchQueue`], typed deadline
+//! rejection, shed-lowest-first eviction, and queue-latency-driven
+//! autoscaling.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Duration;
+
+use tvm_fpga_flow::coordinator::{
+    BatchQueue, EngineSpec, HysteresisPolicy, InferenceServer, PushError, ServerConfig,
+    ServerError, SimEngine, SloClass,
+};
+use tvm_fpga_flow::util::prop;
+use tvm_fpga_flow::util::rng::Rng;
+
+const ELEMS: usize = 16;
+
+fn frame(tag: usize) -> Vec<f32> {
+    (0..ELEMS).map(|i| (tag * 31 + i) as f32).collect()
+}
+
+fn sim(frame_time_us: u64, native_batch: usize) -> SimEngine {
+    SimEngine::new(
+        "sim",
+        ELEMS,
+        10,
+        native_batch,
+        Duration::ZERO,
+        Duration::from_micros(frame_time_us),
+    )
+}
+
+/// N pushers x M poppers hammering one priority queue: no item is lost or
+/// duplicated (popped ∪ evicted == accepted, disjoint), batches never
+/// exceed `max_batch`, and within every batch class indices are
+/// non-decreasing — a lower-priority item is never flushed ahead of a
+/// higher-priority one sharing its batch.
+#[test]
+fn concurrent_pushers_and_poppers_conserve_items_and_order_batches() {
+    prop::check("priority queue conservation", |rng, _case| {
+        let capacity = 8 + rng.below(24) as usize;
+        let max_batch = 2 + rng.below(7) as usize;
+        let num_classes = 1 + rng.below(3) as usize;
+        let n_pushers = 2 + rng.below(3) as usize;
+        let n_poppers = 1 + rng.below(2) as usize;
+        let per_pusher = 32u64;
+
+        let queue: Arc<BatchQueue<(usize, u64)>> = Arc::new(BatchQueue::with_classes(
+            capacity,
+            max_batch,
+            Duration::from_micros(500),
+            num_classes,
+        ));
+        let start = Arc::new(Barrier::new(n_pushers + n_poppers));
+        let accepted = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let evicted = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let popped = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let batches = Arc::new(AtomicU64::new(0));
+
+        let mut handles = Vec::new();
+        for p in 0..n_pushers {
+            let queue = Arc::clone(&queue);
+            let start = Arc::clone(&start);
+            let accepted = Arc::clone(&accepted);
+            let evicted = Arc::clone(&evicted);
+            let seed = rng.below(u64::MAX);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(seed ^ p as u64);
+                start.wait();
+                for i in 0..per_pusher {
+                    let uid = p as u64 * 1_000_000 + i;
+                    let class = rng.below(num_classes as u64) as usize;
+                    match queue.push_class((class, uid), class) {
+                        Ok(victim) => {
+                            accepted.lock().unwrap().push(uid);
+                            if let Some((_, v_uid)) = victim {
+                                evicted.lock().unwrap().push(v_uid);
+                            }
+                        }
+                        Err(PushError::Full(_)) => {} // refused, never entered
+                        Err(PushError::Closed(_)) => panic!("queue closed while pushing"),
+                    }
+                }
+            }));
+        }
+        let mut popper_handles = Vec::new();
+        for _ in 0..n_poppers {
+            let queue = Arc::clone(&queue);
+            let start = Arc::clone(&start);
+            let popped = Arc::clone(&popped);
+            let batches = Arc::clone(&batches);
+            popper_handles.push(std::thread::spawn(move || {
+                start.wait();
+                while let Some(batch) = queue.pop_batch() {
+                    batches.fetch_add(1, Ordering::Relaxed);
+                    assert!(batch.len() <= max_batch, "batch of {} > {max_batch}", batch.len());
+                    assert!(!batch.is_empty());
+                    // Lanes drain highest-priority-first: class indices
+                    // are non-decreasing through any one batch.
+                    for w in batch.windows(2) {
+                        assert!(
+                            w[0].0 <= w[1].0,
+                            "class {} flushed after class {} in one batch",
+                            w[0].0,
+                            w[1].0
+                        );
+                    }
+                    popped.lock().unwrap().extend(batch.iter().map(|&(_, uid)| uid));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        queue.close();
+        for h in popper_handles {
+            h.join().unwrap();
+        }
+
+        let mut accepted = accepted.lock().unwrap().clone();
+        let mut seen: Vec<u64> = popped.lock().unwrap().clone();
+        let evicted = evicted.lock().unwrap().clone();
+        seen.extend(&evicted);
+        accepted.sort_unstable();
+        seen.sort_unstable();
+        // No duplicates anywhere (an item both popped and evicted would
+        // collide here), and the accounting closes exactly.
+        assert_eq!(seen, accepted, "popped ∪ evicted must equal the accepted pushes");
+        // Every flush is attributed to exactly one wake cause.
+        let fc = queue.flush_counts();
+        assert_eq!(fc.full + fc.deadline + fc.close, batches.load(Ordering::Relaxed));
+    });
+}
+
+/// A deadline the current latency signals cannot meet is refused with the
+/// typed error *before* touching the queue — shed requests record no
+/// queue latency.
+#[test]
+fn unmeetable_deadline_is_typed_and_sheds_before_queueing() {
+    let server = InferenceServer::start(ServerConfig {
+        replicas: vec![EngineSpec::Sim(sim(400, 4))],
+        max_batch: 4,
+        max_wait: Duration::from_micros(300),
+        classes: vec![
+            SloClass::new("tight", Duration::from_micros(1)),
+            SloClass::best_effort("bulk"),
+        ],
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Warm the admission signals through the best-effort lane: queue
+    // percentiles + execution EWMA are zero (cold start admits) until
+    // real batches flow.
+    for i in 0..6 {
+        server.infer_class(frame(i), 1).unwrap();
+    }
+
+    let err = server.infer_class(frame(99), 0).expect_err("1us budget must be refused");
+    match err.downcast_ref::<ServerError>() {
+        Some(ServerError::DeadlineUnmeetable { deadline_us, predicted_us }) => {
+            assert_eq!(*deadline_us, 1);
+            assert!(*predicted_us > 1, "prediction must come from live signals");
+        }
+        other => panic!("expected DeadlineUnmeetable, got {other:?}"),
+    }
+    assert!(format!("{err}").contains("deadline unmeetable"), "{err}");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.deadline_rejected, 1);
+    assert_eq!(stats.classes[0].shed_deadline, 1);
+    assert_eq!(stats.classes[0].completed, 0);
+    assert_eq!(stats.classes[1].completed, 6);
+    // Shed-before-queue, observable: only dispatched requests record
+    // queue latency, so the sample count equals completions exactly.
+    assert_eq!(stats.queue_samples, stats.completed);
+    assert_eq!(stats.completed, stats.submitted, "shed requests never count as submitted");
+}
+
+/// Under queue pressure the shedding lands on the lowest class: gold
+/// keeps being admitted (evicting queued bulk if it must) and every gold
+/// request is answered, while bulk absorbs all of the Overloaded errors.
+#[test]
+fn overload_sheds_lowest_class_first() {
+    let server = InferenceServer::start(ServerConfig {
+        replicas: vec![EngineSpec::Sim(sim(2_000, 4))],
+        max_batch: 4,
+        max_wait: Duration::from_micros(500),
+        queue_capacity: 8,
+        classes: vec![SloClass::best_effort("gold"), SloClass::best_effort("bulk")],
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Flood the bulk lane far past queue capacity; keep the accepted
+    // receivers (some will be evicted later by arriving gold).
+    let mut bulk_rx = Vec::new();
+    let mut bulk_refused = 0u64;
+    for i in 0..40 {
+        match server.infer_class_async(frame(i), 1) {
+            Ok(rx) => bulk_rx.push(rx),
+            Err(e) => {
+                assert!(
+                    matches!(e.downcast_ref::<ServerError>(), Some(ServerError::Overloaded { .. })),
+                    "bulk refusal must be typed Overloaded: {e}"
+                );
+                bulk_refused += 1;
+            }
+        }
+    }
+    assert!(bulk_refused > 0, "40 pushes into an 8-slot queue must refuse some");
+
+    // Gold arrives into the full queue: admitted (evicting bulk when no
+    // free slot remains) and always answered.
+    let gold_rx: Vec<_> =
+        (0..3).map(|i| server.infer_class_async(frame(100 + i), 0).expect("gold admitted")).collect();
+    for rx in gold_rx {
+        rx.recv().unwrap().expect("every gold request answers");
+    }
+    let mut bulk_evicted = 0u64;
+    for rx in bulk_rx {
+        match rx.recv().unwrap() {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(
+                    matches!(e.downcast_ref::<ServerError>(), Some(ServerError::Overloaded { .. })),
+                    "evicted bulk must see Overloaded: {e}"
+                );
+                bulk_evicted += 1;
+            }
+        }
+    }
+
+    let stats = server.shutdown();
+    assert_eq!(stats.classes[0].shed_overload, 0, "gold must not shed");
+    assert_eq!(stats.classes[0].completed, 3);
+    assert_eq!(stats.classes[1].shed_overload, bulk_refused + bulk_evicted);
+    assert_eq!(stats.rejected, bulk_refused + bulk_evicted);
+    assert_eq!(stats.completed, stats.submitted, "books balance after evictions");
+}
+
+/// A queue-latency burst drives the hysteresis autoscaler: a fleet that
+/// starts at `min_replicas` grows under load, and the growth is visible
+/// in the snapshot counters.
+#[test]
+fn autoscaler_grows_the_active_fleet_under_burst() {
+    let server = InferenceServer::start(ServerConfig {
+        replicas: (0..4).map(|_| EngineSpec::Sim(sim(300, 4))).collect(),
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_capacity: 2048,
+        autoscale: Some(HysteresisPolicy::new(1, 4, 1_000, 10)),
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(server.stats().active_replicas, 1, "policy starts the fleet at min");
+
+    let pending: Vec<_> = (0..200)
+        .map(|i| server.infer_async(frame(i)).expect("queue holds the burst"))
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 200);
+    assert!(stats.scale_ups >= 1, "a 200-request burst must trip the scale-up threshold");
+    assert!(
+        stats.active_replicas > 1,
+        "active fleet must have grown: {}",
+        stats.active_replicas
+    );
+    // More than one replica actually served frames after the scale-up.
+    let serving = stats.replicas.iter().filter(|r| r.frames > 0).count();
+    assert!(serving > 1, "scaled-up replicas must receive traffic");
+}
